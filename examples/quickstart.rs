@@ -1,0 +1,32 @@
+//! Quickstart: run one bulk-gather microbenchmark on the baseline and on
+//! DX100, and print the headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::workloads::micro::{self, IndexPattern};
+
+fn main() {
+    let cfg = SystemConfig::table3();
+    println!("system:\n{cfg}\n");
+
+    // C[i] = A[B[i]] over 64K random indices — the canonical bulk gather.
+    let w = micro::gather_full(1 << 16, IndexPattern::UniformRandom, 42);
+
+    let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w);
+    let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w);
+
+    println!("baseline : {:>10} cycles, BW {:>5.1}%, RBH {:>5.1}%, occupancy {:>5.1}",
+        base.cycles, base.bw_util * 100.0, base.row_hit_rate * 100.0, base.occupancy);
+    println!("DX100    : {:>10} cycles, BW {:>5.1}%, RBH {:>5.1}%, occupancy {:>5.1}",
+        dx.cycles, dx.bw_util * 100.0, dx.row_hit_rate * 100.0, dx.occupancy);
+    println!();
+    println!("speedup            : {:.2}x", dx.speedup_over(&base));
+    println!("instruction count  : {} -> {} ({:.1}x fewer)",
+        base.instrs, dx.instrs, base.instrs as f64 / dx.instrs as f64);
+    println!("coalescing factor  : {:.2} words per DRAM access",
+        dx.dx.first().map(|d| d.coalesce_factor()).unwrap_or(0.0));
+}

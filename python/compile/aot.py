@@ -1,0 +1,67 @@
+"""AOT compilation: lower every Layer-2 model function to HLO **text** in
+``artifacts/``.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the Rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuplify(fn):
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def build_all(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, specs) in sorted(model.export_table().items()):
+        lowered = jax.jit(_tuplify(fn)).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg_desc = ";".join(
+            f"{'x'.join(str(d) for d in s.shape) or 'scalar'}:{s.dtype}" for s in specs
+        )
+        manifest.append(f"{name} {arg_desc}")
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"tile={model.TILE} data_n={model.DATA_N} range_cap={model.RANGE_CAP}\n")
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    built = build_all(args.out_dir)
+    print(f"built {len(built)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

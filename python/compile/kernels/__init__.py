@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels: the tile-granularity data path of DX100's
+functional units (gather, vector ALU, RMW-combine), plus the pure-jnp
+reference oracles in `ref`.
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads. See DESIGN.md §Hardware-Adaptation for the TPU mapping.
+"""
+
+from . import alu, gather, ref, rmw  # noqa: F401

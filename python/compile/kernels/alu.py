@@ -1,0 +1,79 @@
+"""Pallas vector-ALU kernels (DX100 ALUV/ALUS, 16 lanes in hardware).
+
+One kernel per operation — DX100's OP field is an immediate, so each (op,
+dtype) pair lowers to its own executable, exactly like the AOT artifacts the
+Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+_OPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+    "shr": lambda a, b: a >> b,
+    "shl": lambda a, b: a << b,
+    "lt": lambda a, b: (a < b).astype(a.dtype),
+    "le": lambda a, b: (a <= b).astype(a.dtype),
+    "gt": lambda a, b: (a > b).astype(a.dtype),
+    "ge": lambda a, b: (a >= b).astype(a.dtype),
+    "eq": lambda a, b: (a == b).astype(a.dtype),
+}
+
+
+def _blocking(n):
+    if n % BLOCK == 0 and n >= BLOCK:
+        return (n // BLOCK,), BLOCK
+    return (1,), n
+
+
+def _aluv_call(op, a, b):
+    fn = _OPS[op]
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = fn(a_ref[...], b_ref[...])
+
+    n = a.shape[0]
+    grid, block = _blocking(n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def aluv(a, b, op: str):
+    """Tile-wise `a OP b` (DX100 ALUV)."""
+    return _aluv_call(op, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def alus(a, scalar, op: str):
+    """Tile-vs-scalar `a OP s` (DX100 ALUS); scalar is a 0-d array."""
+    b = jnp.broadcast_to(scalar.astype(a.dtype), a.shape)
+    return _aluv_call(op, a, b)
+
+
+@jax.jit
+def hash_index(keys, mask, shift):
+    """Fused Hash-Join address calc (C & mask) >> shift as two ALUS steps."""
+    masked = alus(keys, mask, op="and")
+    return alus(masked, shift, op="shr")

@@ -1,0 +1,77 @@
+"""Pallas tile-gather kernel: out[i] = data[idx[i]].
+
+The index tile is BlockSpec-tiled over the grid (the HBM->VMEM schedule);
+the data array is presented whole to each block — on a real TPU it would be
+resident in VMEM for the working sets DX100 targets (a 64 KB tile and the
+hot region of the indirect array), with the Row-Table analog being the block
+schedule itself. ``interpret=True`` everywhere: CPU PJRT cannot run Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements processed per grid step.
+BLOCK = 512
+
+
+def _gather_block(idx_ref, data_ref, o_ref):
+    """One block: vector gather from the (whole) data ref."""
+    idx = idx_ref[...]
+    o_ref[...] = data_ref[idx]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gather(data, idx):
+    """out[i] = data[idx[i]] as a Pallas kernel over BLOCK-element tiles."""
+    n = idx.shape[0]
+    if n % BLOCK == 0 and n >= BLOCK:
+        grid = (n // BLOCK,)
+        block = BLOCK
+    else:
+        grid = (1,)
+        block = n
+    return pl.pallas_call(
+        _gather_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(data.shape, lambda i: tuple(0 for _ in data.shape)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), data.dtype),
+        interpret=True,
+    )(idx, data)
+
+
+def _gather_cond_block(idx_ref, cond_ref, data_ref, o_ref):
+    idx = idx_ref[...]
+    cond = cond_ref[...]
+    g = data_ref[idx]
+    o_ref[...] = jnp.where(cond != 0, g, jnp.zeros((), g.dtype))
+
+
+@jax.jit
+def gather_cond(data, idx, cond):
+    """Conditioned gather (ILD with a TC tile): untaken lanes produce 0."""
+    n = idx.shape[0]
+    if n % BLOCK == 0 and n >= BLOCK:
+        grid = (n // BLOCK,)
+        block = BLOCK
+    else:
+        grid = (1,)
+        block = n
+    return pl.pallas_call(
+        _gather_cond_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(data.shape, lambda i: tuple(0 for _ in data.shape)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), data.dtype),
+        interpret=True,
+    )(idx, cond, data)

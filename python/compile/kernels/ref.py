@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracles for every Pallas kernel and L2 model op.
+
+These are the correctness anchors: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (and the Rust functional
+simulator, transitively through the e2e example) match these functions.
+"""
+
+import jax.numpy as jnp
+
+
+def gather(data, idx):
+    """out[i] = data[idx[i]]."""
+    return data[idx]
+
+
+def gather_cond(data, idx, cond):
+    """Conditioned gather: untaken lanes produce 0 (DX100 ILD semantics)."""
+    return jnp.where(cond != 0, data[idx], jnp.zeros((), data.dtype))
+
+
+def alu(a, b, op: str):
+    """Vector ALU reference. Comparison ops return 0/1 in a's dtype."""
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "shr":
+        return a >> b
+    if op == "shl":
+        return a << b
+    if op == "lt":
+        return (a < b).astype(a.dtype)
+    if op == "le":
+        return (a <= b).astype(a.dtype)
+    if op == "gt":
+        return (a > b).astype(a.dtype)
+    if op == "ge":
+        return (a >= b).astype(a.dtype)
+    if op == "eq":
+        return (a == b).astype(a.dtype)
+    raise ValueError(f"unknown op {op}")
+
+
+def rmw_combine(old, val, op: str):
+    """RMW combine step (the Word Modifier's arithmetic)."""
+    if op == "add":
+        return old + val
+    if op == "min":
+        return jnp.minimum(old, val)
+    if op == "max":
+        return jnp.maximum(old, val)
+    raise ValueError(f"IRMW op must be associative+commutative, got {op}")
+
+
+def scatter_add(data, idx, vals):
+    """data[idx[i]] += vals[i] with duplicate-index accumulation."""
+    return data.at[idx].add(vals)
+
+
+def scatter_set(data, idx, vals):
+    """data[idx[i]] = vals[i]; for duplicates the last write wins."""
+    return data.at[idx].set(vals)
+
+
+def range_fuse(lo, hi, cap):
+    """Flatten `for i: for j in lo[i]..hi[i]` into (outer, inner, count),
+    padded to `cap` (DX100 Range Fuser, Figure 5).
+
+    Vectorized: position k of the output belongs to outer iteration
+    `searchsorted(ends, k, 'right')`, with inner offset k - starts[i].
+    """
+    lens = jnp.maximum(hi - lo, 0)
+    ends = jnp.cumsum(lens)
+    total = ends[-1] if lens.size else jnp.uint32(0)
+    k = jnp.arange(cap, dtype=lens.dtype)
+    outer = jnp.searchsorted(ends, k, side="right").astype(lens.dtype)
+    outer_c = jnp.minimum(outer, lens.size - 1)
+    starts = ends - lens
+    inner = lo[outer_c] + (k - starts[outer_c])
+    valid = k < total
+    outer = jnp.where(valid, outer_c, 0)
+    inner = jnp.where(valid, inner, 0)
+    return outer, inner, total
+
+
+def spmv_tile(vals, col, row, x, y):
+    """One SpMV tile: y[row[k]] += vals[k] * x[col[k]] (CG inner loop)."""
+    return y.at[row].add(vals * x[col])
+
+
+def gather_axpy(data, idx, c, alpha):
+    """out[i] = alpha * data[idx[i]] + c[i] (fused gather + ALU)."""
+    return alpha * data[idx] + c
+
+
+def hash_index(keys, mask, shift):
+    """Hash-Join address calculation f(C[i]) = (C[i] & mask) >> shift."""
+    return (keys & mask) >> shift

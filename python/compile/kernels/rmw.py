@@ -1,0 +1,48 @@
+"""Pallas RMW-combine kernel: the Word Modifier's arithmetic step
+(DX100 IRMW). Only associative + commutative ops are legal because the
+Indirect unit reorders operations (paper §3.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+_RMW_OPS = {
+    "add": lambda a, b: a + b,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+ILLEGAL = ("sub", "shl", "shr", "lt", "gt")
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def rmw_combine(old, val, op: str):
+    """new[i] = old[i] OP val[i] for an associative+commutative OP."""
+    if op not in _RMW_OPS:
+        raise ValueError(f"IRMW op must be associative+commutative, got {op}")
+    fn = _RMW_OPS[op]
+
+    def kernel(old_ref, val_ref, o_ref):
+        o_ref[...] = fn(old_ref[...], val_ref[...])
+
+    n = old.shape[0]
+    if n % BLOCK == 0 and n >= BLOCK:
+        grid, block = (n // BLOCK,), BLOCK
+    else:
+        grid, block = (1,), n
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), old.dtype),
+        interpret=True,
+    )(old, val)

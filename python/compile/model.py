@@ -1,0 +1,151 @@
+"""Layer-2 JAX model: the tile-granularity dataflow of DX100's functional
+units, composed from the Layer-1 Pallas kernels.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text in `artifacts/`, and the Rust runtime executes them via PJRT. The
+shapes exported are fixed (AOT), matching the constants below.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import alu as k_alu
+from .kernels import gather as k_gather
+from .kernels import rmw as k_rmw
+
+# AOT export shapes (the Rust runtime mirrors these; see aot.py manifest).
+TILE = 4096
+DATA_N = 1 << 18  # 262,144 elements (1 MiB of f32)
+RANGE_CAP = 4 * TILE
+
+
+def gather_f32(data, idx):
+    """ILD: out[i] = data[idx[i]] (Pallas gather kernel)."""
+    return k_gather.gather(data, idx)
+
+
+def gather_cond_f32(data, idx, cond):
+    """Conditioned ILD."""
+    return k_gather.gather_cond(data, idx, cond)
+
+
+def scatter_add_f32(data, idx, vals):
+    """IRMW(add): data[idx[i]] += vals[i]; duplicate indices accumulate.
+
+    The scatter itself is an L2 XLA scatter (the reorder/coalesce step is
+    DX100 hardware, not data math); the combine arithmetic is the L1
+    rmw_combine kernel applied to the gathered old values — exercised here
+    so the kernel sits on the artifact's compute path.
+    """
+    old = k_gather.gather(data, idx)
+    new = k_rmw.rmw_combine(old, vals, op="add")
+    delta = new - old  # == vals, but keeps the kernel in the graph
+    return data.at[idx].add(delta)
+
+
+def scatter_set_f32(data, idx, vals):
+    """IST: data[idx[i]] = vals[i] (last write wins on duplicates)."""
+    return data.at[idx].set(vals)
+
+
+def range_fuse_u32(lo, hi):
+    """RNG: flatten ranges into (outer, inner, count) padded to RANGE_CAP."""
+    from .kernels import ref
+
+    return ref.range_fuse(lo, hi, RANGE_CAP)
+
+
+def alu_f32(a, b, op="add"):
+    """ALUV over f32 tiles."""
+    return k_alu.aluv(a, b, op=op)
+
+
+def hash_index_u32(keys, mask, shift):
+    """Hash-Join address calc as two chained ALUS kernels."""
+    return k_alu.hash_index(keys, mask, shift)
+
+
+def gather_axpy_f32(data, idx, c, alpha):
+    """Fused ILD + ALU: out = alpha * data[idx] + c."""
+    g = k_gather.gather(data, idx)
+    scaled = k_alu.alus(g, alpha, op="mul")
+    return k_alu.aluv(scaled, c, op="add")
+
+
+def spmv_tile_f32(vals, col, row, x, y):
+    """One CG/SpMV tile: y[row[k]] += vals[k] * x[col[k]].
+
+    The gather of x is the L1 Pallas kernel; the row accumulation is an XLA
+    scatter-add (DX100's IRMW path).
+    """
+    xg = k_gather.gather(x, col)
+    prod = k_alu.aluv(vals, xg, op="mul")
+    return y.at[row].add(prod)
+
+
+# ---------------------------------------------------------------------------
+# AOT export table: name -> (function, example argument shapes/dtypes).
+# ---------------------------------------------------------------------------
+
+
+def _s(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_table():
+    """Every artifact the Rust runtime can load."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    return {
+        "gather_f32": (
+            gather_f32,
+            (_s((DATA_N,), f32), _s((TILE,), i32)),
+        ),
+        "gather_cond_f32": (
+            gather_cond_f32,
+            (_s((DATA_N,), f32), _s((TILE,), i32), _s((TILE,), i32)),
+        ),
+        "scatter_add_f32": (
+            scatter_add_f32,
+            (_s((DATA_N,), f32), _s((TILE,), i32), _s((TILE,), f32)),
+        ),
+        "scatter_set_f32": (
+            scatter_set_f32,
+            (_s((DATA_N,), f32), _s((TILE,), i32), _s((TILE,), f32)),
+        ),
+        "range_fuse_u32": (
+            range_fuse_u32,
+            (_s((TILE,), u32), _s((TILE,), u32)),
+        ),
+        "alu_add_f32": (
+            lambda a, b: alu_f32(a, b, op="add"),
+            (_s((TILE,), f32), _s((TILE,), f32)),
+        ),
+        "alu_mul_f32": (
+            lambda a, b: alu_f32(a, b, op="mul"),
+            (_s((TILE,), f32), _s((TILE,), f32)),
+        ),
+        "alu_ge_f32": (
+            lambda a, b: alu_f32(a, b, op="ge"),
+            (_s((TILE,), f32), _s((TILE,), f32)),
+        ),
+        "hash_index_u32": (
+            hash_index_u32,
+            (_s((TILE,), u32), _s((), u32), _s((), u32)),
+        ),
+        "gather_axpy_f32": (
+            gather_axpy_f32,
+            (_s((DATA_N,), f32), _s((TILE,), i32), _s((TILE,), f32), _s((), f32)),
+        ),
+        "spmv_tile_f32": (
+            spmv_tile_f32,
+            (
+                _s((TILE,), f32),
+                _s((TILE,), i32),
+                _s((TILE,), i32),
+                _s((DATA_N,), f32),
+                _s((DATA_N,), f32),
+            ),
+        ),
+    }

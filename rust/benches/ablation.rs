@@ -1,0 +1,80 @@
+//! Ablation study over DX100's three mechanisms (DESIGN.md §4 design
+//! choices): the *reordering window* (Row-Table BCAM rows), the
+//! *coalescing* capacity (SRAM columns per row), the *fill rate* (address
+//! translation/insert throughput), and the controller's FR-FCFS visibility
+//! (request-buffer depth) for the baseline.
+use dx100::config::SystemConfig;
+use dx100::metrics::compare_one;
+use dx100::workloads::micro::{self, AllMissOrder};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    // Miss-dominated gather over 16 rows x all banks (the §6.1 All-Misses
+    // set in its worst ordering) — large enough that the reordering window
+    // actually binds.
+    let dram = SystemConfig::table3().dram;
+    let w = micro::gather_allmiss(
+        &dram,
+        16,
+        AllMissOrder {
+            rbh: 0.0,
+            chi: false,
+            bgi: false,
+        },
+    );
+    println!("== Ablation: which mechanism buys what (worst-order all-miss gather) ==");
+
+    println!("\nRow-Table rows per slice (reordering window):");
+    for rows in [4usize, 16, 64, 256] {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.rowtab_rows = rows;
+        let c = compare_one(&w, &cfg, false);
+        println!(
+            "  rows={rows:>4}: speedup {:.2}x, dx RBH {:.1}%, dx BW {:.1}%",
+            c.speedup(),
+            c.dx100.row_hit_rate * 100.0,
+            c.dx100.bw_util * 100.0
+        );
+    }
+
+    println!("\nRow-Table columns per row (coalescing capacity):");
+    for cols in [1usize, 2, 8, 16] {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.rowtab_cols = cols;
+        let c = compare_one(&w, &cfg, false);
+        let coalesce = c
+            .dx100
+            .dx
+            .first()
+            .map(|d| d.coalesce_factor())
+            .unwrap_or(0.0);
+        println!(
+            "  cols={cols:>3}: speedup {:.2}x, coalesce {:.2} words/access",
+            c.speedup(),
+            coalesce
+        );
+    }
+
+    println!("\nIndirect-unit fill rate (indices/cycle):");
+    for rate in [1usize, 2, 4, 16] {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.fill_rate = rate;
+        let c = compare_one(&w, &cfg, false);
+        println!("  fill={rate:>3}: speedup {:.2}x", c.speedup());
+    }
+
+    println!("\nBaseline FR-FCFS request buffer (controller visibility):");
+    for buf in [8usize, 32, 128] {
+        let mut cfg = SystemConfig::table3();
+        cfg.dram.request_buffer = buf;
+        let c = compare_one(&w, &cfg, false);
+        println!(
+            "  buffer={buf:>4}: baseline RBH {:.1}%, BW {:.1}% (DX100 speedup {:.2}x)",
+            c.baseline.row_hit_rate * 100.0,
+            c.baseline.bw_util * 100.0,
+            c.speedup()
+        );
+    }
+    println!("\nbench wall time {:.1}s", t0.elapsed().as_secs_f64());
+}

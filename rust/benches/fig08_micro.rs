@@ -1,0 +1,38 @@
+//! Figure 8a: All-Hits microbenchmarks.
+//! Paper: Gather-SPD 1.2x, Gather-Full 3.2x, RMW-Atomic 17.8x,
+//! RMW-NoAtom 3.7x, Scatter 6.6x.
+use dx100::config::SystemConfig;
+use dx100::metrics::compare_one;
+use dx100::workloads::micro::{self, IndexPattern};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let cfg = SystemConfig::table3();
+    let n = 1 << 16;
+    let cases = [
+        (micro::gather_spd(n, IndexPattern::Streaming, 1), 1.2),
+        (micro::gather_full(n, IndexPattern::Streaming, 2), 3.2),
+        (micro::rmw(n, true, IndexPattern::Streaming, 3), 17.8),
+        (micro::rmw(n, false, IndexPattern::Streaming, 3), 3.7),
+        (micro::scatter(n, IndexPattern::Streaming, 4), 6.6),
+    ];
+    println!("== Figure 8a: All-Hits microbenchmarks ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>9} {:>9} {:>10}",
+        "kernel", "base(cyc)", "dx(cyc)", "speedup", "paper", "instr red"
+    );
+    for (w, paper) in cases {
+        let c = compare_one(&w, &cfg, false);
+        println!(
+            "{:<12} {:>10} {:>10} {:>8.2}x {:>8.1}x {:>9.1}x",
+            c.workload,
+            c.baseline.cycles,
+            c.dx100.cycles,
+            c.speedup(),
+            paper,
+            c.instr_reduction()
+        );
+    }
+    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+}

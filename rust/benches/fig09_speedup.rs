@@ -1,0 +1,19 @@
+//! Figure 9: DX100 speedup over the 4-core baseline, 12 workloads.
+//! Paper: 2.6x geomean. Expected shape: every workload > 1x, RMW-heavy and
+//! bandwidth-bound kernels highest.
+use dx100::config::SystemConfig;
+use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use dx100::report;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let comps = run_suite(&SystemConfig::table3(), bench_scale(), false);
+    println!("== Figure 9: DX100 speedup over baseline ==");
+    print!("{}", report::speedup_table(&comps));
+    println!(
+        "paper: 2.6x geomean | measured: {:.2}x | bench wall time {:.1}s",
+        geomean_of(&comps, |c| c.speedup()),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,20 @@
+//! Figure 11: (a) core instruction reduction, (b) MPKI reduction.
+//! Paper: 3.6x geomean instruction reduction; BFS slightly increases due
+//! to synchronization spinning.
+use dx100::config::SystemConfig;
+use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use dx100::report;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let comps = run_suite(&SystemConfig::table3(), bench_scale(), false);
+    println!("== Figure 11: instruction / MPKI reduction ==");
+    print!("{}", report::instr_mpki_table(&comps));
+    println!(
+        "geomeans: instr {:.2}x (paper 3.6x) | MPKI {:.2}x",
+        geomean_of(&comps, |c| c.instr_reduction()),
+        geomean_of(&comps, |c| c.mpki_reduction()),
+    );
+    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+}

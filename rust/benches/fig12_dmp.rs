@@ -1,0 +1,40 @@
+//! Figure 12: DX100 vs the DMP indirect prefetcher.
+//! Paper: 2.0x speedup, 3.3x bandwidth utilization over DMP.
+use dx100::config::SystemConfig;
+use dx100::metrics::{bench_scale, run_suite};
+use dx100::util::geomean;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let comps = run_suite(&SystemConfig::table3(), bench_scale(), true);
+    println!("== Figure 12: DX100 vs DMP ==");
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>8} | {:>7} {:>7}",
+        "workload", "base", "dmp", "dx", "vs dmp", "dmpBW%", "dxBW%"
+    );
+    let mut sp = Vec::new();
+    let mut bw = Vec::new();
+    for c in &comps {
+        let d = c.dmp.as_ref().unwrap();
+        let s = d.cycles as f64 / c.dx100.cycles as f64;
+        sp.push(s);
+        bw.push(c.dx100.bw_util / d.bw_util.max(1e-9));
+        println!(
+            "{:<8} {:>9} {:>9} {:>9} {:>7.2}x | {:>6.1}% {:>6.1}%",
+            c.workload,
+            c.baseline.cycles,
+            d.cycles,
+            c.dx100.cycles,
+            s,
+            d.bw_util * 100.0,
+            c.dx100.bw_util * 100.0
+        );
+    }
+    println!(
+        "geomean speedup vs DMP: {:.2}x (paper 2.0x) | BW vs DMP: {:.2}x (paper 3.3x)",
+        geomean(&sp),
+        geomean(&bw)
+    );
+    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,24 @@
+//! Figure 14: scalability — 4 cores/2ch vs 8 cores/4ch with one or two
+//! DX100 instances. Paper: 2.6x (4c), 2.5x (8c, 1x), 2.7x (8c, 2x).
+use dx100::config::SystemConfig;
+use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("== Figure 14: core / DX100-instance scaling ==");
+    let configs = [
+        ("4 cores, 2ch, 1x DX100", SystemConfig::table3(), 1, 2.6),
+        ("8 cores, 4ch, 1x DX100", SystemConfig::table3_8core(), 1, 2.5),
+        ("8 cores, 4ch, 2x DX100", SystemConfig::table3_8core(), 2, 2.7),
+    ];
+    for (name, mut cfg, instances, paper) in configs {
+        cfg.dx100.instances = instances;
+        let comps = run_suite(&cfg, bench_scale(), false);
+        println!(
+            "{name}: geomean speedup {:.2}x (paper {paper}x)",
+            geomean_of(&comps, |c| c.speedup())
+        );
+    }
+    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,53 @@
+//! Table 2: the DX100 ISA — encoding round-trip and per-pattern listings
+//! for every Table 1 access shape, plus encode/decode throughput.
+use dx100::dx100::isa::*;
+use std::time::Instant;
+
+fn main() {
+    println!("== Table 2: DX100 instruction set ==");
+    let patterns: Vec<(&str, Vec<Instruction>)> = vec![
+        ("CG: LD A[B[j]], j=H[i]..H[i+1]", vec![
+            Instruction::sld(DType::U32, 0x1000_0000, 0, 0, 1, 2, NO_TILE),
+            Instruction::rng(2, 3, 0, 1, NO_TILE),
+            Instruction::ild(DType::F32, 0x2000_0000, 4, 3, NO_TILE),
+        ]),
+        ("PRH: ST A[B[f(C[i])]]", vec![
+            Instruction::sld(DType::U32, 0x3000_0000, 0, 0, 1, 2, NO_TILE),
+            Instruction::alus(DType::U32, Op::And, 1, 0, 3, NO_TILE),
+            Instruction::alus(DType::U32, Op::Shr, 2, 1, 4, NO_TILE),
+            Instruction::ild(DType::U32, 0x4000_0000, 3, 2, NO_TILE),
+            Instruction::ist(DType::U32, 0x5000_0000, 3, 4, NO_TILE),
+        ]),
+        ("PR: RMW A[B[j]] += C[i]", vec![
+            Instruction::irmw(DType::F32, 0x6000_0000, Op::Add, 0, 1, NO_TILE),
+        ]),
+        ("BFS: cond ST A[B[j]] if D[E[j]] < F", vec![
+            Instruction::ild(DType::U32, 0x7000_0000, 2, 0, NO_TILE),
+            Instruction::alus(DType::U32, Op::Lt, 3, 2, 5, NO_TILE),
+            Instruction::ist(DType::U32, 0x8000_0000, 0, 1, 3),
+        ]),
+    ];
+    for (name, insts) in &patterns {
+        println!("\n{name}");
+        for i in insts {
+            let enc = i.encode();
+            assert_eq!(Instruction::decode(enc).unwrap(), *i);
+            println!("  {i}");
+        }
+    }
+    // Encode/decode throughput (perf sanity of the 192b format).
+    let inst = Instruction::irmw(DType::F64, 0xdead_0000, Op::Max, 7, 8, 9);
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    const N: u64 = 5_000_000;
+    for _ in 0..N {
+        let e = inst.encode();
+        acc = acc.wrapping_add(e[0] ^ e[2]);
+        std::hint::black_box(Instruction::decode(std::hint::black_box(e)));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nencode+decode: {:.1} M ops/s (acc {acc})",
+        N as f64 / dt / 1e6
+    );
+}

@@ -1,0 +1,29 @@
+//! Table 4: DX100 area and power breakdown (28 nm synthesis results
+//! reproduced by the analytical model), plus the 14 nm projection and
+//! processor overhead.
+use dx100::config::SystemConfig;
+use dx100::dx100::area::AreaReport;
+
+fn main() {
+    let cfg = SystemConfig::table3();
+    let r = AreaReport::for_config(&cfg.dx100);
+    println!("== Table 4: DX100 area & power (28 nm) ==");
+    println!("{:<16} {:>10} {:>10}", "Module", "Area(mm2)", "Power(mW)");
+    for (name, c) in r.components() {
+        println!("{:<16} {:>10.3} {:>10.2}", name, c.area_mm2, c.power_mw);
+    }
+    let t = r.total();
+    println!("{:<16} {:>10.3} {:>10.2}   (paper: 4.061 / 777.17)", "Total", t.area_mm2, t.power_mw);
+    println!(
+        "14nm: {:.2} mm2 (paper ~1.5); overhead vs 4-core CPU: {:.1}% (paper 3.7%)",
+        r.total_area_14nm(),
+        r.processor_overhead(4) * 100.0
+    );
+    // Sensitivity: scratchpad dominates; smaller tiles shrink it.
+    for tile in [1024usize, 4096, 16384] {
+        let mut d = cfg.dx100.clone();
+        d.tile_elems = tile;
+        let rr = AreaReport::for_config(&d);
+        println!("  tile={:>6}: total {:.3} mm2", tile, rr.total().area_mm2);
+    }
+}

@@ -1,0 +1,316 @@
+//! Cache hierarchy: set-associative LRU caches, MSHRs, stride prefetchers.
+//!
+//! The hierarchy is looked up synchronously (tag checks are cheap); only
+//! DRAM is asynchronous. A demand access either hits at some level (known
+//! latency), merges into an outstanding miss (MSHR secondary miss), or
+//! allocates MSHRs down the hierarchy and produces a DRAM request. MSHR
+//! exhaustion at any level back-pressures the core — one of the paper's §2.2
+//! structural MLP limiters.
+
+pub mod mshr;
+pub mod prefetch;
+pub mod sram;
+
+pub use mshr::MshrFile;
+pub use prefetch::StridePrefetcher;
+pub use sram::{Cache, CacheStats};
+
+use crate::config::SystemConfig;
+use crate::sim::Cycle;
+use std::collections::HashSet;
+
+/// Where a synchronous lookup ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    /// Hit at L1/L2/LLC; total latency to data return.
+    Hit { level: u8, latency: Cycle },
+    /// Line already being fetched; the op merged into the existing miss.
+    MergedMiss { line: u64 },
+    /// New miss; caller must enqueue a DRAM request for `line` and call
+    /// [`Hierarchy::complete_fill`] when it returns. `lookup_latency` is the
+    /// tag-check path latency to add before the DRAM access starts.
+    Miss { line: u64, lookup_latency: Cycle },
+    /// An MSHR was exhausted; retry after any completion.
+    Blocked,
+}
+
+/// Three-level hierarchy: per-core L1D and L2, shared LLC.
+pub struct Hierarchy {
+    pub l1: Vec<Cache>,
+    pub l2: Vec<Cache>,
+    pub llc: Cache,
+    l1_mshr: Vec<MshrFile>,
+    l2_mshr: Vec<MshrFile>,
+    llc_mshr: MshrFile,
+    l1_lat: Cycle,
+    l2_lat: Cycle,
+    llc_lat: Cycle,
+    /// Dirty lines (tracked at LLC granularity for writeback traffic).
+    dirty: HashSet<u64>,
+    /// Dirty lines evicted from the LLC since the last drain; the system
+    /// turns these into DRAM write requests.
+    writebacks: Vec<u64>,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.core.num_cores;
+        Hierarchy {
+            l1: (0..n).map(|_| Cache::new(&cfg.l1d)).collect(),
+            l2: (0..n).map(|_| Cache::new(&cfg.l2)).collect(),
+            llc: Cache::new(&cfg.llc),
+            l1_mshr: (0..n).map(|_| MshrFile::new(cfg.l1d.mshrs)).collect(),
+            l2_mshr: (0..n).map(|_| MshrFile::new(cfg.l2.mshrs)).collect(),
+            llc_mshr: MshrFile::new(cfg.llc.mshrs),
+            l1_lat: cfg.l1d.latency,
+            l2_lat: cfg.l2.latency,
+            llc_lat: cfg.llc.latency,
+            dirty: HashSet::new(),
+            writebacks: Vec::new(),
+        }
+    }
+
+    /// Demand access by core `c` to byte address `addr` at time `t`.
+    /// `is_write` marks the line dirty (store / RMW) for writeback traffic.
+    pub fn access(&mut self, c: usize, addr: u64, t: Cycle, is_write: bool) -> Access {
+        let line = addr >> 6;
+        if is_write {
+            self.dirty.insert(line);
+        }
+        if self.l1[c].lookup(line, t) {
+            return Access::Hit {
+                level: 1,
+                latency: self.l1_lat,
+            };
+        }
+        if self.l2[c].lookup(line, t) {
+            self.l1[c].fill(line, t);
+            return Access::Hit {
+                level: 2,
+                latency: self.l1_lat + self.l2_lat,
+            };
+        }
+        if self.llc.lookup(line, t) {
+            self.l2[c].fill(line, t);
+            self.l1[c].fill(line, t);
+            return Access::Hit {
+                level: 3,
+                latency: self.l1_lat + self.l2_lat + self.llc_lat,
+            };
+        }
+        // Full miss path. Merge if the line is already in flight anywhere on
+        // this core's path or at the shared LLC.
+        if self.l1_mshr[c].contains(line)
+            || self.l2_mshr[c].contains(line)
+            || self.llc_mshr.contains(line)
+        {
+            // Secondary miss: track the merge at the innermost level that
+            // has an entry (allocation-free merge).
+            if self.l1_mshr[c].contains(line) {
+                self.l1_mshr[c].merge(line);
+            } else if self.l2_mshr[c].contains(line) {
+                self.l2_mshr[c].merge(line);
+            } else {
+                self.llc_mshr.merge(line);
+            }
+            return Access::MergedMiss { line };
+        }
+        if self.l1_mshr[c].full() || self.l2_mshr[c].full() || self.llc_mshr.full() {
+            return Access::Blocked;
+        }
+        self.l1_mshr[c].allocate(line);
+        self.l2_mshr[c].allocate(line);
+        self.llc_mshr.allocate(line);
+        Access::Miss {
+            line,
+            lookup_latency: self.l1_lat + self.l2_lat + self.llc_lat,
+        }
+    }
+
+    /// A DRAM fill for `line` on behalf of core `c` returned: install the
+    /// line at every level and release MSHRs. Returns the number of merged
+    /// (secondary) accesses that were waiting.
+    pub fn complete_fill(&mut self, c: usize, line: u64, t: Cycle) -> u64 {
+        let merged = self.l1_mshr[c].release(line)
+            + self.l2_mshr[c].release(line)
+            + self.llc_mshr.release(line);
+        if let Some(victim) = self.llc.fill(line, t) {
+            if self.dirty.remove(&victim) {
+                self.writebacks.push(victim);
+            }
+        }
+        self.l2[c].fill(line, t);
+        self.l1[c].fill(line, t);
+        merged
+    }
+
+    /// Drain dirty lines evicted from the LLC since the last call; the
+    /// caller converts them into DRAM writes.
+    pub fn take_writebacks(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.writebacks)
+    }
+
+    /// Prefetch fill into L2 + LLC only (does not disturb L1).
+    pub fn complete_prefetch_fill(&mut self, c: usize, line: u64, t: Cycle) {
+        self.llc_mshr.release(line);
+        self.l2_mshr[c].release(line);
+        self.llc.fill(line, t);
+        self.l2[c].fill_prefetch(line, t);
+    }
+
+    /// Try to reserve MSHR space for a prefetch (L2 + LLC path).
+    pub fn reserve_prefetch(&mut self, c: usize, line: u64) -> bool {
+        if self.l2_mshr[c].contains(line) || self.llc_mshr.contains(line) {
+            return false; // already in flight
+        }
+        if self.l2_mshr[c].full() || self.llc_mshr.full() {
+            return false;
+        }
+        self.l2_mshr[c].allocate(line);
+        self.llc_mshr.allocate(line);
+        true
+    }
+
+    /// Whether any cache holds the line (DX100 coherency-directory snoop).
+    pub fn snoop(&self, line: u64) -> bool {
+        self.llc.contains(line)
+            || self.l2.iter().any(|c| c.contains(line))
+            || self.l1.iter().any(|c| c.contains(line))
+    }
+
+    /// Invalidate a line everywhere (DX100 coherency agent, SPD tiles).
+    pub fn invalidate(&mut self, line: u64) {
+        self.llc.invalidate(line);
+        for c in &mut self.l2 {
+            c.invalidate(line);
+        }
+        for c in &mut self.l1 {
+            c.invalidate(line);
+        }
+    }
+
+    /// LLC-path access for DX100 streaming reads (Cache Interface): hits
+    /// serve from LLC; misses report `None` and the caller goes to DRAM.
+    pub fn llc_access(&mut self, addr: u64, t: Cycle) -> Option<Cycle> {
+        let line = addr >> 6;
+        if self.llc.lookup(line, t) {
+            Some(self.llc_lat)
+        } else {
+            None
+        }
+    }
+
+    /// Install a line in the LLC (DX100 streaming fill path).
+    pub fn llc_fill(&mut self, addr: u64, t: Cycle) {
+        self.llc.fill(addr >> 6, t);
+    }
+
+    /// Total demand misses that reached DRAM (for MPKI).
+    pub fn demand_misses(&self) -> u64 {
+        // L1 misses that also missed L2 and LLC == LLC misses on the demand
+        // path; report per-level for diagnostics but MPKI uses L1 here.
+        self.l1.iter().map(|c| c.stats.misses).sum()
+    }
+
+    pub fn llc_misses(&self) -> u64 {
+        self.llc.stats.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn hier() -> Hierarchy {
+        Hierarchy::new(&SystemConfig::table3())
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut h = hier();
+        match h.access(0, 0x1000, 0, false) {
+            Access::Miss { line, .. } => {
+                assert_eq!(line, 0x1000 >> 6);
+                h.complete_fill(0, line, 100);
+            }
+            other => panic!("expected miss, got {other:?}"),
+        }
+        match h.access(0, 0x1040, 10, false) {
+            // different line
+            Access::Miss { .. } => {}
+            other => panic!("expected miss, got {other:?}"),
+        }
+        match h.access(0, 0x1000, 200, false) {
+            Access::Hit { level: 1, .. } => {}
+            other => panic!("expected L1 hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn secondary_miss_merges() {
+        let mut h = hier();
+        let a = h.access(0, 0x2000, 0, false);
+        assert!(matches!(a, Access::Miss { .. }));
+        let b = h.access(0, 0x2008, 1, false); // same line
+        assert!(matches!(b, Access::MergedMiss { .. }));
+        let merged = h.complete_fill(0, 0x2000 >> 6, 50);
+        assert_eq!(merged, 1);
+    }
+
+    #[test]
+    fn mshr_exhaustion_blocks() {
+        let mut h = hier();
+        let mshrs = SystemConfig::table3().l1d.mshrs;
+        for i in 0..mshrs as u64 {
+            let a = h.access(0, i * 64 * 1024 * 1024, 0, false); // distinct lines/sets
+            assert!(matches!(a, Access::Miss { .. }), "i={i}: {a:?}");
+        }
+        let a = h.access(0, 0xdead0000, 1, false);
+        assert!(matches!(a, Access::Blocked));
+        // Releasing one line unblocks.
+        h.complete_fill(0, 0, 10);
+        let a = h.access(0, 0xdead0000, 11, false);
+        assert!(matches!(a, Access::Miss { .. }));
+    }
+
+    #[test]
+    fn per_core_l1_is_private_llc_is_shared() {
+        let mut h = hier();
+        if let Access::Miss { line, .. } = h.access(0, 0x3000, 0, false) {
+            h.complete_fill(0, line, 50);
+        }
+        // Core 1 misses its private L1/L2 but hits the shared LLC.
+        match h.access(1, 0x3000, 100, false) {
+            Access::Hit { level: 3, .. } => {}
+            other => panic!("expected LLC hit, got {other:?}"),
+        }
+        // And now core 1's L1 has it too.
+        match h.access(1, 0x3000, 200, false) {
+            Access::Hit { level: 1, .. } => {}
+            other => panic!("expected L1 hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snoop_and_invalidate() {
+        let mut h = hier();
+        if let Access::Miss { line, .. } = h.access(0, 0x4000, 0, false) {
+            h.complete_fill(0, line, 50);
+        }
+        assert!(h.snoop(0x4000 >> 6));
+        h.invalidate(0x4000 >> 6);
+        assert!(!h.snoop(0x4000 >> 6));
+        assert!(matches!(h.access(0, 0x4000, 100, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn llc_path_for_dx100_streams() {
+        let mut h = hier();
+        assert!(h.llc_access(0x5000, 0).is_none());
+        h.llc_fill(0x5000, 1);
+        assert!(h.llc_access(0x5000, 2).is_some());
+        // LLC fills are not visible in core L1s.
+        assert!(!h.l1[0].contains(0x5000 >> 6));
+    }
+}

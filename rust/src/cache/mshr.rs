@@ -1,0 +1,87 @@
+//! Miss-status holding registers: bounded outstanding-miss tracking with
+//! same-line merge counting.
+
+use std::collections::HashMap;
+
+/// A bounded file of outstanding misses keyed by line address.
+pub struct MshrFile {
+    cap: usize,
+    entries: HashMap<u64, u64>, // line -> merged secondary count
+}
+
+impl MshrFile {
+    pub fn new(cap: usize) -> Self {
+        MshrFile {
+            cap,
+            entries: HashMap::with_capacity(cap),
+        }
+    }
+
+    pub fn full(&self) -> bool {
+        self.entries.len() >= self.cap
+    }
+
+    pub fn contains(&self, line: u64) -> bool {
+        self.entries.contains_key(&line)
+    }
+
+    /// Allocate a primary-miss entry. Panics if full (callers check).
+    pub fn allocate(&mut self, line: u64) {
+        debug_assert!(!self.full());
+        let prev = self.entries.insert(line, 0);
+        debug_assert!(prev.is_none(), "duplicate MSHR allocation for {line}");
+    }
+
+    /// Record a secondary (merged) miss on an existing entry.
+    pub fn merge(&mut self, line: u64) {
+        *self
+            .entries
+            .get_mut(&line)
+            .expect("merge on missing MSHR entry") += 1;
+    }
+
+    /// Release an entry; returns the number of merged accesses (0 if the
+    /// entry did not exist, which is fine for shared-level releases).
+    pub fn release(&mut self, line: u64) -> u64 {
+        self.entries.remove(&line).unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_until_full() {
+        let mut m = MshrFile::new(2);
+        m.allocate(1);
+        assert!(!m.full());
+        m.allocate(2);
+        assert!(m.full());
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn merge_counts_secondaries() {
+        let mut m = MshrFile::new(4);
+        m.allocate(9);
+        m.merge(9);
+        m.merge(9);
+        assert_eq!(m.release(9), 2);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn release_missing_is_zero() {
+        let mut m = MshrFile::new(4);
+        assert_eq!(m.release(42), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Set-associative cache with true-LRU replacement over line addresses.
+
+use crate::config::CacheConfig;
+use crate::sim::Cycle;
+
+/// Per-cache hit/miss statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fills: u64,
+    pub prefetch_fills: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Line {
+    tag: u64,
+    last_used: Cycle,
+    valid: bool,
+}
+
+/// A set-associative cache indexed by 64B line address.
+pub struct Cache {
+    sets: Vec<Vec<Line>>,
+    set_mask: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        let lines = cfg.size / 64;
+        let num_sets = (lines / cfg.ways).max(1);
+        assert!(
+            num_sets.is_power_of_two(),
+            "cache geometry must give power-of-two sets (size {} ways {})",
+            cfg.size,
+            cfg.ways
+        );
+        Cache {
+            sets: vec![
+                vec![
+                    Line {
+                        tag: 0,
+                        last_used: 0,
+                        valid: false
+                    };
+                    cfg.ways
+                ];
+                num_sets
+            ],
+            set_mask: num_sets as u64 - 1,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    /// Tag check with LRU update; counts hit/miss.
+    pub fn lookup(&mut self, line: u64, t: Cycle) -> bool {
+        let set = self.set_of(line);
+        for l in &mut self.sets[set] {
+            if l.valid && l.tag == line {
+                l.last_used = t;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        self.stats.misses += 1;
+        false
+    }
+
+    /// Tag check without any state change or stats.
+    pub fn contains(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        self.sets[set].iter().any(|l| l.valid && l.tag == line)
+    }
+
+    /// Install a line, evicting LRU if needed. Returns the evicted line.
+    pub fn fill(&mut self, line: u64, t: Cycle) -> Option<u64> {
+        self.stats.fills += 1;
+        self.fill_inner(line, t)
+    }
+
+    /// Install a line from a prefetch (tracked separately).
+    pub fn fill_prefetch(&mut self, line: u64, t: Cycle) -> Option<u64> {
+        self.stats.prefetch_fills += 1;
+        self.fill_inner(line, t)
+    }
+
+    fn fill_inner(&mut self, line: u64, t: Cycle) -> Option<u64> {
+        let set = self.set_of(line);
+        // Already present: refresh.
+        if let Some(l) = self.sets[set].iter_mut().find(|l| l.valid && l.tag == line) {
+            l.last_used = t;
+            return None;
+        }
+        // Empty way?
+        if let Some(l) = self.sets[set].iter_mut().find(|l| !l.valid) {
+            *l = Line {
+                tag: line,
+                last_used: t,
+                valid: true,
+            };
+            return None;
+        }
+        // Evict LRU.
+        let victim = self.sets[set]
+            .iter_mut()
+            .min_by_key(|l| l.last_used)
+            .unwrap();
+        let evicted = victim.tag;
+        *victim = Line {
+            tag: line,
+            last_used: t,
+            valid: true,
+        };
+        self.stats.evictions += 1;
+        Some(evicted)
+    }
+
+    pub fn invalidate(&mut self, line: u64) {
+        let set = self.set_of(line);
+        for l in &mut self.sets[set] {
+            if l.valid && l.tag == line {
+                l.valid = false;
+                self.stats.invalidations += 1;
+            }
+        }
+    }
+
+    /// Fraction of lookups that hit.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+
+    fn small() -> Cache {
+        Cache::new(&CacheConfig {
+            size: 4 * 1024, // 64 lines
+            ways: 4,        // 16 sets
+            latency: 1,
+            mshrs: 4,
+            stride_prefetcher: false,
+            prefetch_degree: 0,
+        })
+    }
+
+    #[test]
+    fn fill_then_hit() {
+        let mut c = small();
+        assert!(!c.lookup(100, 0));
+        c.fill(100, 1);
+        assert!(c.lookup(100, 2));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = small();
+        // 4 ways in set 0: lines 0,16,32,48 (set = line & 15).
+        for (i, line) in [0u64, 16, 32, 48].iter().enumerate() {
+            c.fill(*line, i as u64);
+        }
+        // Touch 0 to make 16 the LRU.
+        assert!(c.lookup(0, 10));
+        let evicted = c.fill(64, 11); // set 0 again
+        assert_eq!(evicted, Some(16));
+        assert!(c.contains(0));
+        assert!(!c.contains(16));
+    }
+
+    #[test]
+    fn refill_same_line_does_not_evict() {
+        let mut c = small();
+        c.fill(5, 0);
+        assert_eq!(c.fill(5, 1), None);
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = small();
+        c.fill(7, 0);
+        c.invalidate(7);
+        assert!(!c.contains(7));
+        assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = small();
+        c.fill(1, 0);
+        c.lookup(1, 1);
+        c.lookup(2, 2);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

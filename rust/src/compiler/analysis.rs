@@ -1,0 +1,348 @@
+//! Detection and legality analyses (paper §4.2).
+//!
+//! Detection walks expression trees depth-first from loop induction
+//! variables along use-def chains, classifying every `Load` as streaming
+//! (affine in an induction variable) or indirect (its index itself loads
+//! memory or applies address calculation to a loaded value).
+//!
+//! Legality enforces the paper's two requirements: DX100 must have
+//! exclusive access to indirect regions (no store in the loop may alias an
+//! array that is loaded — the Gauss–Seidel preconditioner is the canonical
+//! rejection), and no loop-carried dependencies (bound arrays of range
+//! loops are read-only).
+
+use super::ir::{ArrId, Expr, Program, Stmt};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Classification of one load site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessClass {
+    /// Affine in an induction variable: `B[i]`, `H[i+1]`.
+    Streaming,
+    /// Index depends on loaded data: `A[B[i]]`, `A[f(C[i])]`, `A[B[C[i]]]`.
+    Indirect {
+        /// Levels of indirection (1 = `A[B[i]]`, 2 = `A[B[C[i]]]`).
+        depth: usize,
+        /// Address-calculation Bin nodes between load levels.
+        calc_ops: usize,
+    },
+}
+
+/// One detected load site.
+#[derive(Clone, Debug)]
+pub struct LoadSite {
+    pub arr: ArrId,
+    pub class: AccessClass,
+}
+
+/// Whole-program analysis result.
+#[derive(Clone, Debug, Default)]
+pub struct Analysis {
+    pub loads: Vec<LoadSite>,
+    pub stored_arrays: BTreeSet<ArrId>,
+    pub loaded_arrays: BTreeSet<ArrId>,
+    pub has_range_loop: bool,
+    pub has_condition: bool,
+    pub max_indirection: usize,
+}
+
+/// Why a program cannot be offloaded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LegalityError {
+    /// A loaded array is also stored in the loop (possible aliasing).
+    LoadStoreAlias(ArrId),
+    /// A range-loop bound array is written in the loop.
+    BoundArrayWritten(ArrId),
+    /// An RMW uses a non-associative/commutative op.
+    IllegalRmwOp,
+}
+
+impl fmt::Display for LegalityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LegalityError::LoadStoreAlias(a) => {
+                write!(f, "array {a} is both loaded and stored in the loop")
+            }
+            LegalityError::BoundArrayWritten(a) => {
+                write!(f, "range-bound array {a} is written in the loop")
+            }
+            LegalityError::IllegalRmwOp => write!(f, "RMW op is not associative+commutative"),
+        }
+    }
+}
+
+/// DFS over the index expression: (levels of indirection, calc ops).
+fn classify_index(idx: &Expr) -> (usize, usize) {
+    match idx {
+        Expr::Load(_, inner) => {
+            let (d, c) = classify_index(inner);
+            (d + 1, c)
+        }
+        Expr::Bin(_, a, b) => {
+            let (da, ca) = classify_index(a);
+            let (db, cb) = classify_index(b);
+            (da.max(db), ca + cb + 1)
+        }
+        _ => (0, 0),
+    }
+}
+
+fn walk_expr(e: &Expr, out: &mut Analysis) {
+    match e {
+        Expr::Load(arr, idx) => {
+            out.loaded_arrays.insert(*arr);
+            let (depth, calc) = classify_index(idx);
+            let class = if depth == 0 {
+                AccessClass::Streaming
+            } else {
+                AccessClass::Indirect {
+                    depth,
+                    calc_ops: calc,
+                }
+            };
+            out.max_indirection = out.max_indirection.max(depth);
+            out.loads.push(LoadSite { arr: *arr, class });
+            walk_expr(idx, out);
+        }
+        Expr::Bin(_, a, b) => {
+            walk_expr(a, out);
+            walk_expr(b, out);
+        }
+        _ => {}
+    }
+}
+
+fn walk_stmts(stmts: &[Stmt], bound_arrays: &mut BTreeSet<ArrId>, out: &mut Analysis) {
+    for s in stmts {
+        match s {
+            Stmt::RangeFor { lo, hi, body } => {
+                out.has_range_loop = true;
+                // Bound arrays: every array loaded by the bound exprs.
+                let mut sub = Analysis::default();
+                walk_expr(lo, &mut sub);
+                walk_expr(hi, &mut sub);
+                bound_arrays.extend(sub.loaded_arrays.iter());
+                walk_expr(lo, out);
+                walk_expr(hi, out);
+                walk_stmts(body, bound_arrays, out);
+            }
+            Stmt::If { cond, body } => {
+                out.has_condition = true;
+                walk_expr(cond, out);
+                walk_stmts(body, bound_arrays, out);
+            }
+            Stmt::Store { arr, idx, val } | Stmt::Rmw { arr, idx, val, .. } => {
+                out.stored_arrays.insert(*arr);
+                // The store/RMW itself is an access site: classify its index.
+                let (depth, _) = classify_index(idx);
+                out.max_indirection = out.max_indirection.max(depth);
+                walk_expr(idx, out);
+                walk_expr(val, out);
+            }
+            Stmt::Sink { val, .. } => walk_expr(val, out),
+        }
+    }
+}
+
+/// Run detection; returns the analysis regardless of legality.
+pub fn analyze(p: &Program) -> (Analysis, Result<(), LegalityError>) {
+    let mut a = Analysis::default();
+    let mut bound_arrays = BTreeSet::new();
+    walk_stmts(&p.body, &mut bound_arrays, &mut a);
+    // Legality.
+    let mut legal = Ok(());
+    for s in p.flat_stmts() {
+        if let Stmt::Rmw { op, .. } = s {
+            if !op.rmw_legal() {
+                legal = Err(LegalityError::IllegalRmwOp);
+            }
+        }
+    }
+    if legal.is_ok() {
+        for arr in &a.stored_arrays {
+            if bound_arrays.contains(arr) {
+                legal = Err(LegalityError::BoundArrayWritten(*arr));
+                break;
+            }
+            if a.loaded_arrays.contains(arr) {
+                // RMW target arrays are allowed (the value loaded is the
+                // RMW's own read-modify-write, handled by DX100 itself);
+                // any *other* load aliasing a stored array is illegal.
+                let other_load = a.loads.iter().any(|l| l.arr == *arr);
+                if other_load {
+                    legal = Err(LegalityError::LoadStoreAlias(*arr));
+                    break;
+                }
+            }
+        }
+    }
+    (a, legal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dx100::isa::{DType, Op};
+
+    /// `C[i] = A[B[i]]` — the canonical gather.
+    fn gather_prog() -> Program {
+        let mut p = Program::new("gather", 64);
+        let a = p.add_array("A", DType::F32, 1024);
+        let b = p.add_array("B", DType::U32, 64);
+        let c = p.add_array("C", DType::F32, 64);
+        p.body = vec![Stmt::Store {
+            arr: c,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        }];
+        p
+    }
+
+    #[test]
+    fn detects_single_indirection() {
+        let (a, legal) = analyze(&gather_prog());
+        assert!(legal.is_ok());
+        assert_eq!(a.max_indirection, 1);
+        let indirect: Vec<_> = a
+            .loads
+            .iter()
+            .filter(|l| matches!(l.class, AccessClass::Indirect { .. }))
+            .collect();
+        assert_eq!(indirect.len(), 1);
+        assert_eq!(indirect[0].arr, 0);
+    }
+
+    #[test]
+    fn detects_multi_level_and_calc() {
+        // A[(B[C[i]] & F) >> G]
+        let mut p = Program::new("multi", 16);
+        let a = p.add_array("A", DType::U32, 256);
+        let b = p.add_array("B", DType::U32, 256);
+        let c = p.add_array("C", DType::U32, 16);
+        p.body = vec![Stmt::Sink {
+            val: Expr::load(
+                a,
+                Expr::bin(
+                    Op::Shr,
+                    Expr::bin(
+                        Op::And,
+                        Expr::load(b, Expr::load(c, Expr::Iv(0))),
+                        Expr::Reg(0, DType::U32),
+                    ),
+                    Expr::Reg(1, DType::U32),
+                ),
+            ),
+            cost: 1,
+        }];
+        let (an, legal) = analyze(&p);
+        assert!(legal.is_ok());
+        assert_eq!(an.max_indirection, 2);
+        let top = an
+            .loads
+            .iter()
+            .find(|l| l.arr == a)
+            .expect("A load detected");
+        assert_eq!(
+            top.class,
+            AccessClass::Indirect {
+                depth: 2,
+                calc_ops: 2
+            }
+        );
+    }
+
+    #[test]
+    fn gauss_seidel_rejected() {
+        // x[C[i]] loaded while x[i] stored: the §4.2 rejection case.
+        let mut p = Program::new("gs", 64);
+        let x = p.add_array("x", DType::F32, 1024);
+        let c = p.add_array("C", DType::U32, 64);
+        p.body = vec![Stmt::Store {
+            arr: x,
+            idx: Expr::Iv(0),
+            val: Expr::load(x, Expr::load(c, Expr::Iv(0))),
+        }];
+        let (_, legal) = analyze(&p);
+        assert_eq!(legal, Err(LegalityError::LoadStoreAlias(x)));
+    }
+
+    #[test]
+    fn histogram_rmw_is_legal() {
+        // H[K[i]] += 1: H is stored via RMW but never independently loaded.
+        let mut p = Program::new("hist", 64);
+        let h = p.add_array("H", DType::U32, 256);
+        let k = p.add_array("K", DType::U32, 64);
+        p.body = vec![Stmt::Rmw {
+            arr: h,
+            idx: Expr::load(k, Expr::Iv(0)),
+            op: Op::Add,
+            val: Expr::cu32(1),
+        }];
+        let (a, legal) = analyze(&p);
+        assert!(legal.is_ok());
+        assert!(a.stored_arrays.contains(&h));
+    }
+
+    #[test]
+    fn illegal_rmw_op_rejected() {
+        let mut p = Program::new("bad", 4);
+        let h = p.add_array("H", DType::U32, 16);
+        p.body = vec![Stmt::Rmw {
+            arr: h,
+            idx: Expr::Iv(0),
+            op: Op::Shl,
+            val: Expr::cu32(1),
+        }];
+        let (_, legal) = analyze(&p);
+        assert_eq!(legal, Err(LegalityError::IllegalRmwOp));
+    }
+
+    #[test]
+    fn range_bound_array_write_rejected() {
+        let mut p = Program::new("rb", 8);
+        let h = p.add_array("H", DType::U32, 16);
+        let a = p.add_array("A", DType::F32, 64);
+        p.body = vec![Stmt::RangeFor {
+            lo: Expr::load(h, Expr::Iv(0)),
+            hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+            body: vec![Stmt::Store {
+                arr: h,
+                idx: Expr::Iv(1),
+                val: Expr::cu32(0),
+            }],
+        }];
+        let _ = a;
+        let (_, legal) = analyze(&p);
+        assert!(matches!(
+            legal,
+            Err(LegalityError::BoundArrayWritten(_)) | Err(LegalityError::LoadStoreAlias(_))
+        ));
+    }
+
+    #[test]
+    fn range_and_condition_flags() {
+        let mut p = Program::new("flags", 8);
+        let h = p.add_array("H", DType::U32, 16);
+        let d = p.add_array("D", DType::F32, 8);
+        p.body = vec![Stmt::If {
+            cond: Expr::bin(
+                Op::Ge,
+                Expr::load(d, Expr::Iv(0)),
+                Expr::Reg(0, DType::F32),
+            ),
+            body: vec![Stmt::RangeFor {
+                lo: Expr::load(h, Expr::Iv(0)),
+                hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+                body: vec![Stmt::Sink {
+                    val: Expr::Iv(1),
+                    cost: 1,
+                }],
+            }],
+        }];
+        let (a, legal) = analyze(&p);
+        assert!(legal.is_ok());
+        assert!(a.has_condition);
+        assert!(a.has_range_loop);
+    }
+}

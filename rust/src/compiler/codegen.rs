@@ -1,0 +1,1009 @@
+//! Tiling, hoisting, and DX100 code generation (paper §4.2, Figure 7).
+//!
+//! The outer loop is cut into **phases** (tiles): at most `tile_elems`
+//! outer iterations, and — when a range loop is present — cut early so the
+//! *fused* inner iteration count also fits one tile (the Range Fuser's
+//! capacity). Each phase is lowered to a packed DX100 instruction sequence:
+//!
+//! ```text
+//! SLD   index/bound/condition streams            (hoisted packed_load)
+//! ALUS/ALUV address calculation + conditions
+//! RNG   range fusion (direct or indirect bounds)
+//! ILD/IST/IRMW  the indirect accesses themselves
+//! SST   streaming stores of results
+//! ```
+//!
+//! The cores keep the residual per-element compute: three MMIO stores per
+//! DX100 instruction, a `wait` on the destination tile's ready bit, then
+//! scratchpad reads + arithmetic for every `Sink`. Instruction sequences
+//! are executed *functionally* during codegen (on [`Dx100Functional`]),
+//! which both produces the address traces the timing model replays and the
+//! final memory image that must match the sequential interpreter's.
+
+use super::analysis::{analyze, LegalityError};
+use super::interp::{interpret, InterpOutput};
+use super::ir::{ArrId, Expr, Program, Stmt, ARRAY_BASE, ARRAY_REGION};
+use crate::config::SystemConfig;
+use crate::core::ops::{Op as CoreOp, OpKind, OpStream};
+use crate::dx100::functional::{apply_op, Dx100Functional};
+use crate::dx100::isa::{DType, Instruction, Op, Opcode, NO_TILE};
+use crate::dx100::mem_image::MemImage;
+use crate::dx100::timing::{Dx100Program, TimedInstr};
+use crate::prefetch::{DmpConfig, DmpHints};
+
+/// Behavioural flags forwarded to the experiment driver.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadFlags {
+    pub atomic_rmw: bool,
+    pub single_core_baseline: bool,
+}
+
+/// The DX100 side of a compiled workload.
+pub struct Dx100Run {
+    /// One instruction program per DX100 instance.
+    pub programs: Vec<Dx100Program>,
+    /// Per-core op streams: MMIO dispatch, waits, residual compute.
+    pub core_streams: Vec<OpStream>,
+    /// Final memory image after functional DX100 execution.
+    pub mem: MemImage,
+    /// Number of phases (tiles) generated.
+    pub phases: usize,
+}
+
+/// Everything the coordinator needs to run one workload on all systems.
+pub struct CompiledWorkload {
+    pub name: &'static str,
+    pub flags: WorkloadFlags,
+    pub baseline: InterpOutput,
+    pub dx: Dx100Run,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Gran {
+    Outer,
+    Inner,
+}
+
+/// Value operand: a tile or a scalar (register-broadcast).
+#[derive(Clone, Copy, Debug)]
+enum Operand {
+    Tile(u8),
+    Scalar(u64, DType),
+}
+
+/// `idx` == `Iv(0) + k`?
+fn affine0(e: &Expr) -> Option<u64> {
+    match e {
+        Expr::Iv(0) => Some(0),
+        Expr::Bin(Op::Add, a, b) => match (a.as_ref(), b.as_ref()) {
+            (Expr::Iv(0), Expr::Const(k, _)) | (Expr::Const(k, _), Expr::Iv(0)) => Some(*k),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn expr_dtype(p: &Program, e: &Expr) -> DType {
+    match e {
+        Expr::Const(_, d) | Expr::Reg(_, d) => *d,
+        Expr::Iv(_) => DType::U32,
+        Expr::Load(arr, _) => p.arrays[*arr].dtype,
+        Expr::Bin(_, a, _) => expr_dtype(p, a),
+    }
+}
+
+/// Pure evaluator over the *initial* memory (for phase cutting).
+fn eval_pure(p: &Program, mem: &MemImage, e: &Expr, ivs: [u64; 2]) -> u64 {
+    match e {
+        Expr::Const(v, _) => *v,
+        Expr::Reg(r, _) => p.regs[*r as usize],
+        Expr::Iv(d) => ivs[*d as usize],
+        Expr::Load(arr, idx) => {
+            let iv = eval_pure(p, mem, idx, ivs);
+            let a = &p.arrays[*arr];
+            mem.read_word(a.addr(iv.min(a.len as u64 - 1)), a.dtype.size())
+        }
+        Expr::Bin(op, a, b) => {
+            let va = eval_pure(p, mem, a, ivs);
+            let vb = eval_pure(p, mem, b, ivs);
+            apply_op(expr_dtype(p, a), *op, va, vb)
+        }
+    }
+}
+
+/// Fused inner iterations of outer iteration `i` (condition applied).
+fn fused_count(p: &Program, mem: &MemImage, stmts: &[Stmt], i: u64) -> u64 {
+    let mut total = 0;
+    for s in stmts {
+        match s {
+            Stmt::If { cond, body } => {
+                if eval_pure(p, mem, cond, [i, 0]) != 0 {
+                    total += fused_count(p, mem, body, i);
+                }
+            }
+            Stmt::RangeFor { lo, hi, .. } => {
+                let l = eval_pure(p, mem, lo, [i, 0]);
+                let h = eval_pure(p, mem, hi, [i, 0]);
+                total += h.saturating_sub(l);
+            }
+            _ => {}
+        }
+    }
+    total
+}
+
+/// One emitted sink: core reads `elems` words from `tile` and computes.
+struct SinkRec {
+    elems: usize,
+    cost: u16,
+}
+
+struct RngCtx {
+    /// Tile of local outer indices (0..n) per fused element.
+    outer_local: u8,
+    /// Tile of absolute inner j values.
+    inner_j: u8,
+    /// Fused element count.
+    fused: usize,
+}
+
+struct PhaseEmitter<'a> {
+    p: &'a Program,
+    fx: &'a mut Dx100Functional,
+    mem: &'a mut MemImage,
+    out: Vec<TimedInstr>,
+    tile_next: u8,
+    tile_limit: u8,
+    reg_next: u8,
+    regs_used: u16,
+    s: u64,
+    n: usize,
+    iota_arr_base: u64,
+    cond: Option<u8>,
+    rng: Option<RngCtx>,
+    sinks: Vec<SinkRec>,
+    /// Common-subexpression cache: (expr, inner-gran?, cond) -> tile.
+    cse: Vec<(Expr, bool, Option<u8>, u8)>,
+}
+
+impl<'a> PhaseEmitter<'a> {
+    fn alloc_tile(&mut self) -> Result<u8, LegalityError> {
+        assert!(
+            self.tile_next < self.tile_limit,
+            "phase exceeded its tile budget ({} tiles)",
+            self.tile_limit
+        );
+        let t = self.tile_next;
+        self.tile_next += 1;
+        Ok(t)
+    }
+
+    fn alloc_reg(&mut self, v: u64) -> u8 {
+        let r = self.reg_next;
+        assert!((r as usize) < self.fx.rf.len(), "register file exhausted");
+        self.reg_next += 1;
+        self.regs_used += 1;
+        self.fx.rf[r as usize] = v;
+        r
+    }
+
+    fn emit(&mut self, inst: Instruction) {
+        let trace = self
+            .fx
+            .execute(&inst, self.mem)
+            .unwrap_or_else(|e| panic!("codegen functional error on {inst}: {e}"));
+        self.out.push(TimedInstr { inst, trace });
+    }
+
+    fn gran(&self) -> Gran {
+        if self.rng.is_some() {
+            Gran::Inner
+        } else {
+            Gran::Outer
+        }
+    }
+
+    /// Tile of absolute outer indices at the current granularity.
+    fn outer_index_tile(&mut self) -> Result<u8, LegalityError> {
+        let rng_local = self.rng.as_ref().map(|r| r.outer_local);
+        match rng_local {
+            Some(ol) => {
+                // absolute i = local + s, expanded per fused element.
+                let td = self.alloc_tile()?;
+                let rs = self.alloc_reg(self.s);
+                self.emit(Instruction::alus(DType::U64, Op::Add, td, ol, rs, NO_TILE));
+                Ok(td)
+            }
+            None => {
+                // SLD from the synthetic iota array.
+                let td = self.alloc_tile()?;
+                let r_start = self.alloc_reg(self.s);
+                let r_stride = self.alloc_reg(1);
+                let r_count = self.alloc_reg(self.n as u64);
+                self.emit(Instruction::sld(
+                    DType::U32,
+                    self.iota_arr_base,
+                    td,
+                    r_start,
+                    r_stride,
+                    r_count,
+                    NO_TILE,
+                ));
+                Ok(td)
+            }
+        }
+    }
+
+    /// Lower `e` to an operand (tile of per-element values, or a scalar).
+    /// Repeated subexpressions reuse their tile (CSE) — the paper's
+    /// compiler hoists each packed load once.
+    fn operand(&mut self, e: &Expr) -> Result<Operand, LegalityError> {
+        let inner = self.rng.is_some();
+        if matches!(e, Expr::Load(..) | Expr::Bin(..)) {
+            if let Some((_, _, _, t)) = self
+                .cse
+                .iter()
+                .find(|(ex, g, c, _)| ex == e && *g == inner && *c == self.cond)
+            {
+                return Ok(Operand::Tile(*t));
+            }
+        }
+        let r = self.operand_uncached(e)?;
+        if let Operand::Tile(t) = r {
+            if matches!(e, Expr::Load(..) | Expr::Bin(..)) {
+                self.cse.push((e.clone(), inner, self.cond, t));
+            }
+        }
+        Ok(r)
+    }
+
+    fn operand_uncached(&mut self, e: &Expr) -> Result<Operand, LegalityError> {
+        match e {
+            Expr::Const(v, d) => Ok(Operand::Scalar(*v, *d)),
+            Expr::Reg(r, d) => Ok(Operand::Scalar(self.p.regs[*r as usize], *d)),
+            Expr::Iv(0) => Ok(Operand::Tile(self.outer_index_tile()?)),
+            Expr::Iv(1) => {
+                let r = self.rng.as_ref().expect("Iv(1) outside range loop");
+                Ok(Operand::Tile(r.inner_j))
+            }
+            Expr::Iv(_) => unreachable!("loop depth > 1 unsupported"),
+            Expr::Load(arr, idx) => {
+                let a = &self.p.arrays[*arr];
+                let dtype = a.dtype;
+                let base = a.base;
+                // Streaming load: affine in Iv(0), outer granularity only.
+                if self.gran() == Gran::Outer {
+                    if let Some(k) = affine0(idx) {
+                        let td = self.alloc_tile()?;
+                        let r_start = self.alloc_reg(self.s + k);
+                        let r_stride = self.alloc_reg(1);
+                        let r_count = self.alloc_reg(self.n as u64);
+                        self.emit(Instruction::sld(
+                            dtype,
+                            base,
+                            td,
+                            r_start,
+                            r_stride,
+                            r_count,
+                            self.cond.unwrap_or(NO_TILE),
+                        ));
+                        return Ok(Operand::Tile(td));
+                    }
+                }
+                // Indirect: lower the index to a tile, then ILD.
+                let idx_t = match self.operand(idx)? {
+                    Operand::Tile(t) => t,
+                    Operand::Scalar(..) => {
+                        panic!("constant-indexed load should be a register value")
+                    }
+                };
+                let td = self.alloc_tile()?;
+                self.emit(Instruction::ild(
+                    dtype,
+                    base,
+                    td,
+                    idx_t,
+                    self.cond.unwrap_or(NO_TILE),
+                ));
+                Ok(Operand::Tile(td))
+            }
+            Expr::Bin(op, a, b) => {
+                let dtype = expr_dtype(self.p, a);
+                let oa = self.operand(a)?;
+                let ob = self.operand(b)?;
+                match (oa, ob) {
+                    (Operand::Tile(ta), Operand::Tile(tb)) => {
+                        let td = self.alloc_tile()?;
+                        self.emit(Instruction::aluv(
+                            dtype,
+                            *op,
+                            td,
+                            ta,
+                            tb,
+                            self.cond.unwrap_or(NO_TILE),
+                        ));
+                        Ok(Operand::Tile(td))
+                    }
+                    (Operand::Tile(ta), Operand::Scalar(v, _)) => {
+                        let td = self.alloc_tile()?;
+                        let rs = self.alloc_reg(v);
+                        self.emit(Instruction::alus(
+                            dtype,
+                            *op,
+                            td,
+                            ta,
+                            rs,
+                            self.cond.unwrap_or(NO_TILE),
+                        ));
+                        Ok(Operand::Tile(td))
+                    }
+                    (Operand::Scalar(v, _), Operand::Tile(tb)) => {
+                        // Commute when possible; otherwise materialize.
+                        let comm = matches!(
+                            op,
+                            Op::Add | Op::Mul | Op::Min | Op::Max | Op::And | Op::Or | Op::Xor | Op::Eq
+                        );
+                        assert!(comm, "non-commutative scalar-tile op unsupported");
+                        let td = self.alloc_tile()?;
+                        let rs = self.alloc_reg(v);
+                        self.emit(Instruction::alus(
+                            dtype,
+                            *op,
+                            td,
+                            tb,
+                            rs,
+                            self.cond.unwrap_or(NO_TILE),
+                        ));
+                        Ok(Operand::Tile(td))
+                    }
+                    (Operand::Scalar(va, da), Operand::Scalar(vb, _)) => {
+                        Ok(Operand::Scalar(apply_op(da, *op, va, vb), da))
+                    }
+                }
+            }
+        }
+    }
+
+    fn lower_stmts(&mut self, stmts: &[Stmt]) -> Result<(), LegalityError> {
+        for s in stmts {
+            match s {
+                Stmt::If { cond, body } => {
+                    let ct = match self.operand(cond)? {
+                        Operand::Tile(t) => t,
+                        Operand::Scalar(v, _) => {
+                            if v != 0 {
+                                self.lower_stmts(body)?;
+                            }
+                            continue;
+                        }
+                    };
+                    let saved = self.cond;
+                    let combined = match saved {
+                        None => ct,
+                        Some(prev) => {
+                            let td = self.alloc_tile()?;
+                            self.emit(Instruction::aluv(
+                                DType::U64,
+                                Op::And,
+                                td,
+                                prev,
+                                ct,
+                                NO_TILE,
+                            ));
+                            td
+                        }
+                    };
+                    self.cond = Some(combined);
+                    self.lower_stmts(body)?;
+                    self.cond = saved;
+                }
+                Stmt::RangeFor { lo, hi, body } => {
+                    assert!(self.rng.is_none(), "nested range loops unsupported");
+                    let lo_t = match self.operand(lo)? {
+                        Operand::Tile(t) => t,
+                        _ => panic!("range bounds must load arrays"),
+                    };
+                    let hi_t = match self.operand(hi)? {
+                        Operand::Tile(t) => t,
+                        _ => panic!("range bounds must load arrays"),
+                    };
+                    let td1 = self.alloc_tile()?;
+                    let td2 = self.alloc_tile()?;
+                    self.emit(Instruction::rng(
+                        td1,
+                        td2,
+                        lo_t,
+                        hi_t,
+                        self.cond.unwrap_or(NO_TILE),
+                    ));
+                    let fused = self.fx.spd.size_of(td1);
+                    self.rng = Some(RngCtx {
+                        outer_local: td1,
+                        inner_j: td2,
+                        fused,
+                    });
+                    // Conditions were folded into the fusion itself.
+                    let saved = self.cond.take();
+                    self.lower_stmts(body)?;
+                    self.cond = saved;
+                    self.rng = None;
+                }
+                Stmt::Store { arr, idx, val } => {
+                    let a = &self.p.arrays[*arr];
+                    let (dtype, base) = (a.dtype, a.base);
+                    if self.gran() == Gran::Outer {
+                        if let Some(k) = affine0(idx) {
+                            // Streaming store of a whole result tile.
+                            let vt = match self.operand(val)? {
+                                Operand::Tile(t) => t,
+                                Operand::Scalar(..) => {
+                                    panic!("constant streaming stores unsupported")
+                                }
+                            };
+                            let r_start = self.alloc_reg(self.s + k);
+                            let r_stride = self.alloc_reg(1);
+                            let r_count = self.alloc_reg(self.n as u64);
+                            self.emit(Instruction::sst(
+                                dtype,
+                                base,
+                                vt,
+                                r_start,
+                                r_stride,
+                                r_count,
+                                self.cond.unwrap_or(NO_TILE),
+                            ));
+                            continue;
+                        }
+                    }
+                    let it = match self.operand(idx)? {
+                        Operand::Tile(t) => t,
+                        _ => panic!("indirect store needs a tile index"),
+                    };
+                    match self.operand(val)? {
+                        Operand::Tile(vt) => self.emit(Instruction::ist(
+                            dtype,
+                            base,
+                            it,
+                            vt,
+                            self.cond.unwrap_or(NO_TILE),
+                        )),
+                        Operand::Scalar(v, _) => {
+                            let rs = self.alloc_reg(v);
+                            let mut inst =
+                                Instruction::ist(dtype, base, it, NO_TILE, self.cond.unwrap_or(NO_TILE));
+                            inst.rs1 = rs;
+                            self.emit(inst);
+                        }
+                    }
+                }
+                Stmt::Rmw { arr, idx, op, val } => {
+                    let a = &self.p.arrays[*arr];
+                    let (dtype, base) = (a.dtype, a.base);
+                    let it = match self.operand(idx)? {
+                        Operand::Tile(t) => t,
+                        _ => panic!("RMW needs a tile index"),
+                    };
+                    match self.operand(val)? {
+                        Operand::Tile(vt) => self.emit(Instruction::irmw(
+                            dtype,
+                            base,
+                            *op,
+                            it,
+                            vt,
+                            self.cond.unwrap_or(NO_TILE),
+                        )),
+                        Operand::Scalar(v, _) => {
+                            let rs = self.alloc_reg(v);
+                            let mut inst = Instruction::irmw(
+                                dtype,
+                                base,
+                                *op,
+                                it,
+                                NO_TILE,
+                                self.cond.unwrap_or(NO_TILE),
+                            );
+                            inst.rs1 = rs;
+                            self.emit(inst);
+                        }
+                    }
+                }
+                Stmt::Sink { val, cost } => {
+                    let elems = match self.gran() {
+                        Gran::Outer => self.n,
+                        Gran::Inner => self.rng.as_ref().unwrap().fused,
+                    };
+                    match self.operand(val)? {
+                        Operand::Tile(_) => self.sinks.push(SinkRec {
+                            elems,
+                            cost: *cost,
+                        }),
+                        Operand::Scalar(..) => self.sinks.push(SinkRec {
+                            elems,
+                            cost: *cost,
+                        }),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compile `p` for both the baseline and DX100 systems.
+pub fn compile(
+    p: &Program,
+    init: &MemImage,
+    cfg: &SystemConfig,
+) -> Result<CompiledWorkload, LegalityError> {
+    let (analysis, legal) = analyze(p);
+    legal?;
+    let baseline = interpret(p, init, Some(DmpConfig::default()));
+
+    // --- Phase cutting ---
+    let tile_elems = cfg.dx100.tile_elems;
+    let mut phases: Vec<(u64, usize)> = Vec::new();
+    if analysis.has_range_loop {
+        let mut start = 0u64;
+        let mut fused = 0u64;
+        let mut n = 0usize;
+        for i in 0..p.iters as u64 {
+            let f = fused_count(p, init, &p.body, i);
+            if n > 0 && (fused + f > tile_elems as u64 || n >= tile_elems) {
+                phases.push((start, n));
+                start = i;
+                n = 0;
+                fused = 0;
+            }
+            fused += f;
+            n += 1;
+        }
+        if n > 0 {
+            phases.push((start, n));
+        }
+    } else {
+        let mut i = 0;
+        while i < p.iters {
+            let n = tile_elems.min(p.iters - i);
+            phases.push((i as u64, n));
+            i += n;
+        }
+    }
+
+    // --- Per-phase lowering + functional execution ---
+    let instances = cfg.dx100.instances;
+    let cores = cfg.core.num_cores;
+    let mut fx = Dx100Functional::new(
+        cfg.dx100.tiles,
+        tile_elems,
+        cfg.dx100.registers.max(64),
+    );
+    let mut mem = init.clone();
+    // Synthetic iota array for Iv(0)-as-value (compiler-materialized).
+    let iota_base = ARRAY_BASE + p.arrays.len() as u64 * ARRAY_REGION;
+    let needs_iota = p.body.iter().any(stmt_uses_iv0_value);
+    if needs_iota {
+        for i in 0..p.iters as u64 {
+            mem.write_u32(iota_base + 4 * i, i as u32);
+        }
+    }
+    let mut programs: Vec<Dx100Program> = (0..instances).map(|_| Dx100Program::default()).collect();
+    let mut core_streams: Vec<OpStream> = (0..cores).map(|_| OpStream::new()).collect();
+    let half_tiles = (cfg.dx100.tiles / 2) as u8;
+    for (k, &(s, n)) in phases.iter().enumerate() {
+        let instance = k % instances;
+        let core = k % cores;
+        let mut em = PhaseEmitter {
+            p,
+            fx: &mut fx,
+            mem: &mut mem,
+            out: Vec::new(),
+            tile_next: (k % 2) as u8 * half_tiles,
+            tile_limit: ((k % 2) as u8 + 1) * half_tiles,
+            reg_next: 0,
+            regs_used: 0,
+            s,
+            n,
+            iota_arr_base: iota_base,
+            cond: None,
+            rng: None,
+            sinks: Vec::new(),
+            cse: Vec::new(),
+        };
+        em.lower_stmts(&p.body)?;
+        let instrs = std::mem::take(&mut em.out);
+        let sinks = std::mem::take(&mut em.sinks);
+        let regs_used = em.regs_used;
+        drop(em);
+        if instrs.is_empty() {
+            continue;
+        }
+        // Dispatch: 3 MMIO stores per instruction from the owning core.
+        let cs = &mut core_streams[core];
+        let seq_base = programs[instance].instrs.len() as u32;
+        for (j, _) in instrs.iter().enumerate() {
+            for part in 0..3u8 {
+                let extra = if j == 0 && part == 0 { regs_used + 2 } else { 0 };
+                cs.push(CoreOp {
+                    kind: OpKind::MmioStore {
+                        instance: instance as u16,
+                        seq: seq_base + j as u32,
+                    },
+                    dep: 0,
+                    instrs: 1 + extra,
+                });
+            }
+        }
+        // Phase-completion flag: set by DX100 when the phase's last
+        // instruction retires; cores with residual work wait on it.
+        let phase_flag = (cfg.dx100.tiles + k) as u32;
+        programs[instance].phase_marks.push((
+            seq_base + instrs.len() as u32 - 1,
+            k as u32,
+        ));
+        // Residual per-element compute: split across ALL cores (the packed
+        // scratchpad array is consumed in parallel, §6.1 Gather-SPD).
+        for sink in sinks {
+            let chunk = (sink.elems + cores - 1) / cores.max(1);
+            for (ci, start) in (0..sink.elems).step_by(chunk.max(1)).enumerate() {
+                let n = chunk.min(sink.elems - start);
+                let consumer = (core + ci) % cores;
+                let cs = &mut core_streams[consumer];
+                let wait_idx = cs.push(CoreOp {
+                    kind: OpKind::WaitFlag {
+                        instance: instance as u16,
+                        flag: phase_flag,
+                    },
+                    dep: 0,
+                    instrs: 2,
+                });
+                for _ in 0..n {
+                    let ld = cs.push_dep(
+                        CoreOp {
+                            kind: OpKind::SpdLoad,
+                            dep: 0,
+                            instrs: 1,
+                        },
+                        wait_idx,
+                    );
+                    cs.push_dep(
+                        CoreOp {
+                            kind: OpKind::Compute {
+                                cycles: sink.cost.max(1) as u32,
+                            },
+                            dep: 0,
+                            instrs: sink.cost.max(1),
+                        },
+                        ld,
+                    );
+                }
+            }
+        }
+        programs[instance].instrs.extend(instrs);
+    }
+
+    Ok(CompiledWorkload {
+        name: p.name,
+        flags: WorkloadFlags {
+            atomic_rmw: p.atomic_rmw,
+            single_core_baseline: p.single_core_baseline,
+        },
+        baseline,
+        dx: Dx100Run {
+            programs,
+            core_streams,
+            mem,
+            phases: phases.len(),
+        },
+    })
+}
+
+fn stmt_uses_iv0_value(s: &Stmt) -> bool {
+    fn expr_uses(e: &Expr) -> bool {
+        match e {
+            Expr::Iv(0) => true,
+            Expr::Load(_, idx) => {
+                // Iv(0) as a *direct affine index* is streaming, not a value.
+                if affine0(idx).is_some() {
+                    false
+                } else {
+                    expr_uses(idx)
+                }
+            }
+            Expr::Bin(Op::Add, a, b) => {
+                // Affine index handled by SLD; conservatively recurse.
+                expr_uses(a) || expr_uses(b)
+            }
+            Expr::Bin(_, a, b) => expr_uses(a) || expr_uses(b),
+            _ => false,
+        }
+    }
+    match s {
+        Stmt::RangeFor { lo, hi, body } => {
+            expr_uses(lo) || expr_uses(hi) || body.iter().any(stmt_uses_iv0_value)
+        }
+        Stmt::If { cond, body } => expr_uses(cond) || body.iter().any(stmt_uses_iv0_value),
+        Stmt::Store { idx, val, .. } | Stmt::Rmw { idx, val, .. } => {
+            (affine0(idx).is_none() && expr_uses(idx)) || expr_uses(val)
+        }
+        Stmt::Sink { val, .. } => expr_uses(val),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Compare two memory images over an array's region.
+    fn arrays_equal(p: &Program, a: &MemImage, b: &MemImage, arr: ArrId) -> bool {
+        let ar = &p.arrays[arr];
+        (0..ar.len as u64).all(|i| {
+            a.read_word(ar.addr(i), ar.dtype.size()) == b.read_word(ar.addr(i), ar.dtype.size())
+        })
+    }
+
+    fn small_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.tile_elems = 64; // small tiles exercise phase cutting
+        cfg
+    }
+
+    /// `C[i] = A[B[i]]` end-to-end equivalence.
+    #[test]
+    fn gather_codegen_matches_interp() {
+        let mut p = Program::new("gather", 300);
+        let a = p.add_array("A", DType::F32, 1024);
+        let b = p.add_array("B", DType::U32, 300);
+        let c = p.add_array("C", DType::F32, 300);
+        p.body = vec![Stmt::Store {
+            arr: c,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        }];
+        let mut mem = MemImage::new();
+        let mut rng = crate::util::Rng::new(1);
+        for i in 0..1024u64 {
+            mem.write_f32(p.arrays[a].addr(i), i as f32);
+        }
+        for i in 0..300u64 {
+            mem.write_u32(p.arrays[b].addr(i), rng.below(1024) as u32);
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, c));
+        assert!(cw.dx.phases >= 4, "expected multiple phases");
+        // The DX100 program must contain SLD + ILD + SST per phase.
+        let ops: Vec<Opcode> = cw.dx.programs[0]
+            .instrs
+            .iter()
+            .map(|t| t.inst.opcode)
+            .collect();
+        assert!(ops.contains(&Opcode::Sld));
+        assert!(ops.contains(&Opcode::Ild));
+        assert!(ops.contains(&Opcode::Sst));
+    }
+
+    /// Conditioned RMW: `if D[i] >= F: A[B[i]] += V[i]`.
+    #[test]
+    fn conditional_rmw_equivalence() {
+        let mut p = Program::new("crmw", 200);
+        let a = p.add_array("A", DType::F32, 256);
+        let b = p.add_array("B", DType::U32, 200);
+        let d = p.add_array("D", DType::F32, 200);
+        let v = p.add_array("V", DType::F32, 200);
+        p.set_reg(0, 0.5f32.to_bits() as u64);
+        p.body = vec![Stmt::If {
+            cond: Expr::bin(
+                Op::Ge,
+                Expr::load(d, Expr::Iv(0)),
+                Expr::Reg(0, DType::F32),
+            ),
+            body: vec![Stmt::Rmw {
+                arr: a,
+                idx: Expr::load(b, Expr::Iv(0)),
+                op: Op::Add,
+                val: Expr::load(v, Expr::Iv(0)),
+            }],
+        }];
+        let mut mem = MemImage::new();
+        let mut rng = crate::util::Rng::new(2);
+        for i in 0..200u64 {
+            mem.write_u32(p.arrays[b].addr(i), rng.below(256) as u32);
+            mem.write_f32(p.arrays[d].addr(i), rng.f32());
+            mem.write_f32(p.arrays[v].addr(i), 1.0);
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, a));
+    }
+
+    /// Direct range loop (CG-like): `for i: for j in H[i]..H[i+1]: s += V[j]*X[C[j]]`.
+    #[test]
+    fn range_loop_equivalence() {
+        let rows = 100usize;
+        let mut p = Program::new("spmv", rows);
+        let h = p.add_array("H", DType::U32, rows + 1);
+        let v = p.add_array("V", DType::F32, 1024);
+        let c = p.add_array("C", DType::U32, 1024);
+        let x = p.add_array("X", DType::F32, 256);
+        let y = p.add_array("Y", DType::F32, rows);
+        p.body = vec![Stmt::RangeFor {
+            lo: Expr::load(h, Expr::Iv(0)),
+            hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+            body: vec![Stmt::Rmw {
+                arr: y,
+                idx: Expr::Iv(0),
+                op: Op::Add,
+                val: Expr::bin(
+                    Op::Mul,
+                    Expr::load(v, Expr::Iv(1)),
+                    Expr::load(x, Expr::load(c, Expr::Iv(1))),
+                ),
+            }],
+        }];
+        let mut mem = MemImage::new();
+        let mut rng = crate::util::Rng::new(3);
+        let mut off = 0u32;
+        for i in 0..=rows as u64 {
+            mem.write_u32(p.arrays[h].addr(i), off);
+            if (i as usize) < rows {
+                off += rng.below(9) as u32; // 0..8 nnz per row
+            }
+        }
+        let nnz = off as u64;
+        assert!(nnz <= 1024);
+        for j in 0..nnz {
+            mem.write_f32(p.arrays[v].addr(j), rng.f32());
+            mem.write_u32(p.arrays[c].addr(j), rng.below(256) as u32);
+        }
+        for i in 0..256u64 {
+            mem.write_f32(p.arrays[x].addr(i), rng.f32());
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, y));
+        // RNG instruction must be present.
+        let has_rng = cw
+            .dx
+            .programs
+            .iter()
+            .flat_map(|pr| &pr.instrs)
+            .any(|t| t.inst.opcode == Opcode::Rng);
+        assert!(has_rng);
+    }
+
+    /// Hash-join-like address calc: `H[(K[i] & M) >> S] += 1`.
+    #[test]
+    fn address_calc_equivalence() {
+        let mut p = Program::new("hash", 128);
+        let h = p.add_array("H", DType::U32, 64);
+        let k = p.add_array("K", DType::U32, 128);
+        p.set_reg(0, 0x3F0);
+        p.set_reg(1, 4);
+        p.body = vec![Stmt::Rmw {
+            arr: h,
+            idx: Expr::bin(
+                Op::Shr,
+                Expr::bin(
+                    Op::And,
+                    Expr::load(k, Expr::Iv(0)),
+                    Expr::Reg(0, DType::U32),
+                ),
+                Expr::Reg(1, DType::U32),
+            ),
+            op: Op::Add,
+            val: Expr::cu32(1),
+        }];
+        let mut mem = MemImage::new();
+        let mut rng = crate::util::Rng::new(4);
+        for i in 0..128u64 {
+            mem.write_u32(p.arrays[k].addr(i), rng.next_u32());
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, h));
+        // ALU chain present.
+        let alus = cw.dx.programs[0]
+            .instrs
+            .iter()
+            .filter(|t| t.inst.opcode == Opcode::Alus)
+            .count();
+        assert!(alus >= 2, "expected And+Shr ALUS chain, got {alus}");
+    }
+
+    /// Multi-level indirection `A[B[C[i]]]` (PRO bucket chaining).
+    #[test]
+    fn multilevel_equivalence() {
+        let mut p = Program::new("multi", 150);
+        let a = p.add_array("A", DType::F32, 512);
+        let b = p.add_array("B", DType::U32, 512);
+        let c = p.add_array("C", DType::U32, 150);
+        let o = p.add_array("O", DType::F32, 150);
+        p.body = vec![Stmt::Store {
+            arr: o,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::load(c, Expr::Iv(0)))),
+        }];
+        let mut mem = MemImage::new();
+        let mut rng = crate::util::Rng::new(5);
+        for i in 0..512u64 {
+            mem.write_f32(p.arrays[a].addr(i), i as f32 * 0.25);
+            mem.write_u32(p.arrays[b].addr(i), rng.below(512) as u32);
+        }
+        for i in 0..150u64 {
+            mem.write_u32(p.arrays[c].addr(i), rng.below(512) as u32);
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, o));
+        // Two ILD levels expected.
+        let ilds = cw.dx.programs[0]
+            .instrs
+            .iter()
+            .filter(|t| t.inst.opcode == Opcode::Ild)
+            .count();
+        assert!(ilds >= 2);
+    }
+
+    #[test]
+    fn illegal_program_rejected() {
+        let mut p = Program::new("gs", 16);
+        let x = p.add_array("x", DType::F32, 64);
+        let c = p.add_array("C", DType::U32, 16);
+        p.body = vec![Stmt::Store {
+            arr: x,
+            idx: Expr::Iv(0),
+            val: Expr::load(x, Expr::load(c, Expr::Iv(0))),
+        }];
+        assert!(compile(&p, &MemImage::new(), &small_cfg()).is_err());
+    }
+
+    #[test]
+    fn core_streams_have_dispatch_and_wait() {
+        let mut p = Program::new("g", 64);
+        let a = p.add_array("A", DType::F32, 128);
+        let b = p.add_array("B", DType::U32, 64);
+        p.body = vec![Stmt::Sink {
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+            cost: 2,
+        }];
+        let mut mem = MemImage::new();
+        for i in 0..64u64 {
+            mem.write_u32(p.arrays[b].addr(i), (i % 128) as u32);
+        }
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        let all_ops: Vec<&CoreOp> = cw.dx.core_streams.iter().flat_map(|s| &s.ops).collect();
+        assert!(all_ops
+            .iter()
+            .any(|o| matches!(o.kind, OpKind::MmioStore { .. })));
+        assert!(all_ops
+            .iter()
+            .any(|o| matches!(o.kind, OpKind::WaitFlag { .. })));
+        let spd_loads = all_ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::SpdLoad))
+            .count();
+        assert_eq!(spd_loads, 64, "one SPD read per sunk element");
+    }
+
+    #[test]
+    fn multi_instance_split() {
+        let mut cfg = small_cfg();
+        cfg.dx100.instances = 2;
+        let mut p = Program::new("g2", 256);
+        let a = p.add_array("A", DType::F32, 512);
+        let b = p.add_array("B", DType::U32, 256);
+        let c = p.add_array("C", DType::F32, 256);
+        p.body = vec![Stmt::Store {
+            arr: c,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        }];
+        let mut mem = MemImage::new();
+        for i in 0..256u64 {
+            mem.write_u32(p.arrays[b].addr(i), ((i * 7) % 512) as u32);
+        }
+        for i in 0..512u64 {
+            mem.write_f32(p.arrays[a].addr(i), i as f32);
+        }
+        let cw = compile(&p, &mem, &cfg).unwrap();
+        assert_eq!(cw.dx.programs.len(), 2);
+        assert!(!cw.dx.programs[0].instrs.is_empty());
+        assert!(!cw.dx.programs[1].instrs.is_empty());
+        assert!(arrays_equal(&p, &cw.baseline.mem, &cw.dx.mem, c));
+    }
+}

@@ -1,0 +1,561 @@
+//! Sequential IR interpreter.
+//!
+//! Produces three things in one pass over the iteration space:
+//!
+//! 1. the **functional result** (final memory image) — the correctness
+//!    reference for the DX100-compiled version;
+//! 2. the **baseline op streams** (per core): every load/store/RMW with its
+//!    address, dependency edge (index load → indirect access), and dynamic
+//!    instruction weight, which the core timing model executes;
+//! 3. **DMP hints**: for every indirect site, the condition-ignored address
+//!    `depth` iterations ahead, attached to the index load op.
+
+use super::ir::{Expr, Program, Stmt};
+use crate::core::ops::{Op as CoreOp, OpKind, OpStream};
+use crate::dx100::functional::apply_op;
+use crate::dx100::isa::DType;
+use crate::dx100::mem_image::MemImage;
+use crate::prefetch::{DmpConfig, DmpHintBuilder, DmpHints};
+
+/// Loop-control instruction overhead per outer iteration (cmp/jmp/inc).
+const LOOP_OVERHEAD: u16 = 3;
+/// Loop-control overhead per inner (range) iteration.
+const INNER_OVERHEAD: u16 = 2;
+/// Instructions per load/store beyond explicit Bin nodes: the x86 address
+/// calculation (scale + base add) the paper's §2.2 counts against the core.
+const ADDR_CALC: u16 = 2;
+
+/// Interpreter output.
+pub struct InterpOutput {
+    pub mem: MemImage,
+    pub streams: Vec<OpStream>,
+    pub dmp_hints: Vec<DmpHints>,
+    pub total_iters: u64,
+    pub total_inner_iters: u64,
+}
+
+struct Ctx<'a> {
+    p: &'a Program,
+    mem: MemImage,
+}
+
+impl<'a> Ctx<'a> {
+    fn read_arr(&self, arr: usize, idx: u64) -> u64 {
+        let a = &self.p.arrays[arr];
+        debug_assert!(
+            (idx as usize) < a.len,
+            "{}[{idx}] out of bounds (len {})",
+            a.name,
+            a.len
+        );
+        self.mem.read_word(a.addr(idx), a.dtype.size())
+    }
+
+    fn write_arr(&mut self, arr: usize, idx: u64, v: u64) {
+        let a = &self.p.arrays[arr];
+        debug_assert!((idx as usize) < a.len, "{} store OOB", a.name);
+        self.mem.write_word(a.addr(idx), a.dtype.size(), v);
+    }
+
+    /// Pure evaluation (no trace) — used for DMP lookahead.
+    fn eval_pure(&self, e: &Expr, ivs: [u64; 2]) -> (u64, DType) {
+        match e {
+            Expr::Const(v, d) => (*v, *d),
+            Expr::Reg(r, d) => (self.p.regs[*r as usize], *d),
+            Expr::Iv(d) => (ivs[*d as usize], DType::U64),
+            Expr::Load(arr, idx) => {
+                let (iv, _) = self.eval_pure(idx, ivs);
+                let a = &self.p.arrays[*arr];
+                if (iv as usize) >= a.len {
+                    return (0, a.dtype); // lookahead may run off the end
+                }
+                (self.read_arr(*arr, iv), a.dtype)
+            }
+            Expr::Bin(op, a, b) => {
+                let (va, da) = self.eval_pure(a, ivs);
+                let (vb, _) = self.eval_pure(b, ivs);
+                (apply_op(da, *op, va, vb), da)
+            }
+        }
+    }
+}
+
+/// Trace-emitting evaluation result.
+struct EvalOut {
+    value: u64,
+    dtype: DType,
+    /// Op index (absolute, in the current core stream) producing the value.
+    dep: Option<usize>,
+    /// Arithmetic instructions not yet attached to an op.
+    pending: u16,
+}
+
+struct Emitter<'a> {
+    s: &'a mut OpStream,
+    /// Extra instructions to fold into the next emitted op (loop control).
+    carry: u16,
+}
+
+impl<'a> Emitter<'a> {
+    fn push(&mut self, mut op: CoreOp, dep: Option<usize>) -> usize {
+        op.instrs += self.carry;
+        self.carry = 0;
+        match dep {
+            Some(d) => self.s.push_dep(op, d),
+            None => self.s.push(op),
+        }
+    }
+}
+
+fn emit_expr(ctx: &mut Ctx, em: &mut Emitter, e: &Expr, ivs: [u64; 2]) -> EvalOut {
+    match e {
+        Expr::Const(v, d) => EvalOut {
+            value: *v,
+            dtype: *d,
+            dep: None,
+            pending: 0,
+        },
+        Expr::Reg(r, d) => EvalOut {
+            value: ctx.p.regs[*r as usize],
+            dtype: *d,
+            dep: None,
+            pending: 0,
+        },
+        Expr::Iv(d) => EvalOut {
+            value: ivs[*d as usize],
+            dtype: DType::U64,
+            dep: None,
+            pending: 0,
+        },
+        Expr::Load(arr, idx) => {
+            let i = emit_expr(ctx, em, idx, ivs);
+            let a = &ctx.p.arrays[*arr];
+            let addr = a.addr(i.value);
+            let op_idx = em.push(
+                CoreOp {
+                    kind: OpKind::Load {
+                        addr,
+                        stream: *arr as u32 + 1,
+                    },
+                    dep: 0,
+                    instrs: 1 + ADDR_CALC + i.pending,
+                },
+                i.dep,
+            );
+            EvalOut {
+                value: ctx.read_arr(*arr, i.value),
+                dtype: a.dtype,
+                dep: Some(op_idx),
+                pending: 0,
+            }
+        }
+        Expr::Bin(op, a, b) => {
+            let ea = emit_expr(ctx, em, a, ivs);
+            let eb = emit_expr(ctx, em, b, ivs);
+            let dep = match (ea.dep, eb.dep) {
+                (Some(x), Some(y)) => Some(x.max(y)),
+                (x, y) => x.or(y),
+            };
+            EvalOut {
+                value: apply_op(ea.dtype, *op, ea.value, eb.value),
+                dtype: ea.dtype,
+                dep,
+                pending: ea.pending + eb.pending + 1,
+            }
+        }
+    }
+}
+
+/// Pre-scan: collect indirect load sites (for DMP hints), in emission order.
+fn collect_indirect_sites(stmts: &[Stmt], out: &mut Vec<Expr>) {
+    fn walk_expr(e: &Expr, out: &mut Vec<Expr>) {
+        if let Expr::Load(_, idx) = e {
+            if idx.load_count() > 0 {
+                out.push(e.clone());
+            }
+            walk_expr(idx, out);
+        } else if let Expr::Bin(_, a, b) = e {
+            walk_expr(a, out);
+            walk_expr(b, out);
+        }
+    }
+    for s in stmts {
+        match s {
+            Stmt::RangeFor { lo, hi, body } => {
+                walk_expr(lo, out);
+                walk_expr(hi, out);
+                collect_indirect_sites(body, out);
+            }
+            Stmt::If { cond, body } => {
+                walk_expr(cond, out);
+                collect_indirect_sites(body, out);
+            }
+            Stmt::Store { arr, idx, val } | Stmt::Rmw { arr, idx, val, .. } => {
+                // The store/RMW target itself is an indirect site when its
+                // index loads memory (DMP prefetches `A[K[i+d]]` for RMW
+                // targets just like for loads).
+                if idx.load_count() > 0 {
+                    out.push(Expr::Load(*arr, Box::new(idx.clone())));
+                }
+                walk_expr(idx, out);
+                walk_expr(val, out);
+            }
+            Stmt::Sink { val, .. } => walk_expr(val, out),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_stmts(
+    ctx: &mut Ctx,
+    em: &mut Emitter,
+    stmts: &[Stmt],
+    ivs: [u64; 2],
+    inner_iters: &mut u64,
+) {
+    for s in stmts {
+        match s {
+            Stmt::If { cond, body } => {
+                let c = emit_expr(ctx, em, cond, ivs);
+                // The comparison itself.
+                em.push(
+                    CoreOp {
+                        kind: OpKind::Compute { cycles: 1 },
+                        dep: 0,
+                        instrs: 1 + c.pending,
+                    },
+                    c.dep,
+                );
+                if c.value != 0 {
+                    run_stmts(ctx, em, body, ivs, inner_iters);
+                }
+            }
+            Stmt::RangeFor { lo, hi, body } => {
+                let l = emit_expr(ctx, em, lo, ivs);
+                let h = emit_expr(ctx, em, hi, ivs);
+                if l.pending + h.pending > 0 {
+                    em.carry += l.pending + h.pending;
+                }
+                let mut j = l.value;
+                while j < h.value {
+                    em.carry += INNER_OVERHEAD;
+                    *inner_iters += 1;
+                    run_stmts(ctx, em, body, [ivs[0], j], inner_iters);
+                    j += 1;
+                }
+            }
+            Stmt::Store { arr, idx, val } => {
+                let i = emit_expr(ctx, em, idx, ivs);
+                let v = emit_expr(ctx, em, val, ivs);
+                let a = &ctx.p.arrays[*arr];
+                let addr = a.addr(i.value);
+                let dep = match (i.dep, v.dep) {
+                    (Some(x), Some(y)) => Some(x.max(y)),
+                    (x, y) => x.or(y),
+                };
+                em.push(
+                    CoreOp {
+                        kind: OpKind::Store {
+                            addr,
+                            stream: *arr as u32 + 1,
+                        },
+                        dep: 0,
+                        instrs: 1 + ADDR_CALC + i.pending + v.pending,
+                    },
+                    dep,
+                );
+                ctx.write_arr(*arr, i.value, v.value);
+            }
+            Stmt::Rmw { arr, idx, op, val } => {
+                let i = emit_expr(ctx, em, idx, ivs);
+                let v = emit_expr(ctx, em, val, ivs);
+                let a = &ctx.p.arrays[*arr];
+                let addr = a.addr(i.value);
+                let dep = match (i.dep, v.dep) {
+                    (Some(x), Some(y)) => Some(x.max(y)),
+                    (x, y) => x.or(y),
+                };
+                em.push(
+                    CoreOp {
+                        kind: OpKind::Rmw {
+                            addr,
+                            atomic: ctx.p.atomic_rmw,
+                        },
+                        dep: 0,
+                        instrs: 2 + ADDR_CALC + i.pending + v.pending,
+                    },
+                    dep,
+                );
+                let old = ctx.read_arr(*arr, i.value);
+                let new = apply_op(a.dtype, *op, old, v.value);
+                ctx.write_arr(*arr, i.value, new);
+            }
+            Stmt::Sink { val, cost } => {
+                let v = emit_expr(ctx, em, val, ivs);
+                em.push(
+                    CoreOp {
+                        kind: OpKind::Compute {
+                            cycles: (*cost).max(1) as u32,
+                        },
+                        dep: 0,
+                        instrs: (*cost).max(1) + v.pending,
+                    },
+                    v.dep,
+                );
+            }
+        }
+    }
+}
+
+/// Collect DMP hints for iteration `i` of core `c`: for every indirect
+/// site, the address `depth` outer iterations ahead (condition-ignored).
+fn dmp_observe(
+    ctx: &Ctx,
+    sites: &[Expr],
+    builder: &mut DmpHintBuilder,
+    core: usize,
+    iter: u64,
+    end: u64,
+    op_base: usize,
+) {
+    let depth = builder.depth() as u64;
+    for (sid, site) in sites.iter().enumerate() {
+        let future = iter + depth;
+        let target = if future < end {
+            if let Expr::Load(arr, idx) = site {
+                let (iv, _) = ctx.eval_pure(idx, [future, {
+                    // Inner range sites: approximate with j = outer lookahead
+                    // (the first inner iteration); see prefetch module docs.
+                    future
+                }]);
+                let a = &ctx.p.arrays[*arr];
+                if (iv as usize) < a.len {
+                    Some(a.addr(iv))
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        builder.observe(core, sid as u32, op_base, target);
+    }
+}
+
+/// Interpret `p` starting from `init`; see module docs for outputs.
+pub fn interpret(p: &Program, init: &MemImage, dmp: Option<DmpConfig>) -> InterpOutput {
+    let cores = if p.single_core_baseline {
+        1
+    } else {
+        p.parallel_cores
+    };
+    let mut ctx = Ctx {
+        p,
+        mem: init.clone(),
+    };
+    let mut sites = Vec::new();
+    collect_indirect_sites(&p.body, &mut sites);
+    let mut builder = dmp.map(|cfg| DmpHintBuilder::new(cores, cfg));
+    let mut streams: Vec<OpStream> = (0..cores).map(|_| OpStream::new()).collect();
+    let mut inner_iters = 0u64;
+    let per_core = (p.iters + cores - 1) / cores;
+    for c in 0..cores {
+        let start = c * per_core;
+        let end = ((c + 1) * per_core).min(p.iters);
+        for i in start..end {
+            let em = &mut Emitter {
+                s: &mut streams[c],
+                carry: LOOP_OVERHEAD,
+            };
+            let op_base = em.s.len();
+            if let Some(b) = builder.as_mut() {
+                dmp_observe(&ctx, &sites, b, c, i as u64, end as u64, op_base);
+            }
+            run_stmts(&mut ctx, em, &p.body, [i as u64, 0], &mut inner_iters);
+        }
+    }
+    InterpOutput {
+        mem: ctx.mem,
+        streams,
+        dmp_hints: builder.map(|b| b.into_hints()).unwrap_or_default(),
+        total_iters: p.iters as u64,
+        total_inner_iters: inner_iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dx100::isa::Op;
+
+    /// Build `C[i] = A[B[i]]` with known data.
+    fn gather_setup() -> (Program, MemImage) {
+        let mut p = Program::new("gather", 32);
+        let a = p.add_array("A", DType::F32, 256);
+        let b = p.add_array("B", DType::U32, 32);
+        let c = p.add_array("C", DType::F32, 32);
+        p.body = vec![Stmt::Store {
+            arr: c,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        }];
+        let mut mem = MemImage::new();
+        for i in 0..256u64 {
+            mem.write_f32(p.arrays[a].addr(i), i as f32 * 2.0);
+        }
+        for i in 0..32u64 {
+            mem.write_u32(p.arrays[b].addr(i), ((i * 37) % 256) as u32);
+        }
+        (p, mem)
+    }
+
+    #[test]
+    fn functional_result_matches_scalar() {
+        let (p, mem) = gather_setup();
+        let out = interpret(&p, &mem, None);
+        for i in 0..32u64 {
+            let bi = ((i * 37) % 256) as f32;
+            let got = f32::from_bits(out.mem.read_u32(p.arrays[2].addr(i)));
+            assert_eq!(got, bi * 2.0, "C[{i}]");
+        }
+    }
+
+    #[test]
+    fn trace_has_dependency_chain() {
+        let (mut p, mem) = gather_setup();
+        p.parallel_cores = 1;
+        let out = interpret(&p, &mem, None);
+        let ops = &out.streams[0].ops;
+        // Per iteration: Load B (no dep), Load A (dep on B load), Store C.
+        let loads: Vec<_> = ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Load { .. }))
+            .collect();
+        assert_eq!(loads.len(), 64); // 32 B-loads + 32 A-loads
+        let a_loads: Vec<_> = ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Load { stream: 1, .. }))
+            .collect();
+        assert_eq!(a_loads.len(), 32);
+        assert!(a_loads.iter().all(|o| o.dep == 1), "A load depends on B load");
+    }
+
+    #[test]
+    fn multicore_chunks_cover_all_iterations() {
+        let (p, mem) = gather_setup();
+        let out = interpret(&p, &mem, None);
+        assert_eq!(out.streams.len(), 4);
+        let total_stores: usize = out
+            .streams
+            .iter()
+            .map(|s| {
+                s.ops
+                    .iter()
+                    .filter(|o| matches!(o.kind, OpKind::Store { .. }))
+                    .count()
+            })
+            .sum();
+        assert_eq!(total_stores, 32);
+    }
+
+    #[test]
+    fn rmw_accumulates() {
+        // H[K[i]] += 1 histogram with repeated keys.
+        let mut p = Program::new("hist", 64);
+        let h = p.add_array("H", DType::U32, 8);
+        let k = p.add_array("K", DType::U32, 64);
+        p.body = vec![Stmt::Rmw {
+            arr: h,
+            idx: Expr::load(k, Expr::Iv(0)),
+            op: Op::Add,
+            val: Expr::cu32(1),
+        }];
+        let mut mem = MemImage::new();
+        for i in 0..64u64 {
+            mem.write_u32(p.arrays[k].addr(i), (i % 8) as u32);
+        }
+        let out = interpret(&p, &mem, None);
+        for bucket in 0..8u64 {
+            assert_eq!(out.mem.read_u32(p.arrays[h].addr(bucket)), 8);
+        }
+    }
+
+    #[test]
+    fn range_loop_and_condition() {
+        // for i: if D[i] >= 1: for j in H[i]..H[i+1]: S += V[j]
+        let mut p = Program::new("rng", 4);
+        let d = p.add_array("D", DType::U32, 4);
+        let h = p.add_array("H", DType::U32, 5);
+        let v = p.add_array("V", DType::U32, 12);
+        let s = p.add_array("S", DType::U32, 1);
+        p.body = vec![Stmt::If {
+            cond: Expr::bin(Op::Ge, Expr::load(d, Expr::Iv(0)), Expr::cu32(1)),
+            body: vec![Stmt::RangeFor {
+                lo: Expr::load(h, Expr::Iv(0)),
+                hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+                body: vec![Stmt::Rmw {
+                    arr: s,
+                    idx: Expr::cu32(0),
+                    op: Op::Add,
+                    val: Expr::load(v, Expr::Iv(1)),
+                }],
+            }],
+        }];
+        let mut mem = MemImage::new();
+        // D = [1,0,1,1]; H = [0,3,6,9,12]; V[j] = j.
+        for (i, dv) in [1u32, 0, 1, 1].iter().enumerate() {
+            mem.write_u32(p.arrays[d].addr(i as u64), *dv);
+        }
+        for i in 0..5u64 {
+            mem.write_u32(p.arrays[h].addr(i), (i * 3) as u32);
+        }
+        for j in 0..12u64 {
+            mem.write_u32(p.arrays[v].addr(j), j as u32);
+        }
+        let out = interpret(&p, &mem, None);
+        // Taken rows: 0 (j=0..3), 2 (6..9), 3 (9..12): sum = 3+21+30 = 54.
+        assert_eq!(out.mem.read_u32(p.arrays[s].addr(0)), 0 + 1 + 2 + 6 + 7 + 8 + 9 + 10 + 11);
+        assert_eq!(out.total_inner_iters, 9);
+    }
+
+    #[test]
+    fn dmp_hints_point_ahead() {
+        let (mut p, mem) = gather_setup();
+        p.parallel_cores = 1;
+        let out = interpret(
+            &p,
+            &mem,
+            Some(DmpConfig {
+                depth: 4,
+                train_iters: 0,
+            }),
+        );
+        let hints = &out.dmp_hints[0];
+        assert!(!hints.is_empty());
+        // Hint at iteration 0 must equal A's address at iteration 4.
+        let b4 = ((4u64 * 37) % 256) as u64;
+        let expect = p.arrays[0].addr(b4);
+        let first_hint = hints.iter().map(|(k, v)| (*k, *v)).min().unwrap();
+        assert_eq!(first_hint.1, expect);
+    }
+
+    #[test]
+    fn atomic_flag_propagates() {
+        let mut p = Program::new("a", 4);
+        let h = p.add_array("H", DType::U32, 4);
+        p.atomic_rmw = true;
+        p.body = vec![Stmt::Rmw {
+            arr: h,
+            idx: Expr::Iv(0),
+            op: Op::Add,
+            val: Expr::cu32(1),
+        }];
+        let out = interpret(&p, &MemImage::new(), None);
+        let any_atomic = out.streams.iter().flat_map(|s| &s.ops).any(|o| {
+            matches!(o.kind, OpKind::Rmw { atomic: true, .. })
+        });
+        assert!(any_atomic);
+    }
+}

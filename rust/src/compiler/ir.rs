@@ -1,0 +1,233 @@
+//! Loop-level mini-IR covering every access pattern in the paper's Table 1:
+//! single and range loops (direct and indirect bounds), conditions,
+//! multi-level indirection, address calculation, and LD/ST/RMW accesses.
+
+use crate::dx100::isa::{DType, Op};
+
+/// Array identifier (index into `Program::arrays`).
+pub type ArrId = usize;
+
+/// Expressions. Values are raw 64-bit words interpreted under a `DType`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Typed constant (raw bits).
+    Const(u64, DType),
+    /// Scalar register (runtime constant), e.g. loop-invariant threshold.
+    Reg(u8, DType),
+    /// Induction variable at loop depth (0 = outer, 1 = inner range loop).
+    Iv(u8),
+    /// `A[idx]`.
+    Load(ArrId, Box<Expr>),
+    /// Binary operation (ALU ops from the DX100 ISA).
+    Bin(Op, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn load(arr: ArrId, idx: Expr) -> Expr {
+        Expr::Load(arr, Box::new(idx))
+    }
+    pub fn bin(op: Op, a: Expr, b: Expr) -> Expr {
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    }
+    pub fn cu32(v: u32) -> Expr {
+        Expr::Const(v as u64, DType::U32)
+    }
+
+    /// Number of `Load` nodes in the tree.
+    pub fn load_count(&self) -> usize {
+        match self {
+            Expr::Load(_, idx) => 1 + idx.load_count(),
+            Expr::Bin(_, a, b) => a.load_count() + b.load_count(),
+            _ => 0,
+        }
+    }
+
+    /// Number of `Bin` nodes (address-calc / compute instructions).
+    pub fn bin_count(&self) -> usize {
+        match self {
+            Expr::Load(_, idx) => idx.bin_count(),
+            Expr::Bin(_, a, b) => 1 + a.bin_count() + b.bin_count(),
+            _ => 0,
+        }
+    }
+
+    /// Whether the tree references induction depth `d`.
+    pub fn uses_iv(&self, d: u8) -> bool {
+        match self {
+            Expr::Iv(x) => *x == d,
+            Expr::Load(_, idx) => idx.uses_iv(d),
+            Expr::Bin(_, a, b) => a.uses_iv(d) || b.uses_iv(d),
+            _ => false,
+        }
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// Inner range loop `for j in lo..hi` (j = Iv(1)). Bounds may load
+    /// arrays (direct range `H[i]..H[i+1]` or indirect `H[K[i]]..`).
+    RangeFor {
+        lo: Expr,
+        hi: Expr,
+        body: Vec<Stmt>,
+    },
+    /// Conditional execution of `body`.
+    If { cond: Expr, body: Vec<Stmt> },
+    /// `A[idx] = val`.
+    Store { arr: ArrId, idx: Expr, val: Expr },
+    /// `A[idx] op= val` (op must be associative+commutative).
+    Rmw {
+        arr: ArrId,
+        idx: Expr,
+        op: Op,
+        val: Expr,
+    },
+    /// Consume a value on the core (`compute(v)`): `cost` models the
+    /// per-element arithmetic the core keeps.
+    Sink { val: Expr, cost: u16 },
+}
+
+/// A named array bound to a physical region.
+#[derive(Clone, Debug)]
+pub struct Array {
+    pub name: &'static str,
+    pub dtype: DType,
+    pub len: usize,
+    /// Physical base address (assigned by `Program::add_array`).
+    pub base: u64,
+}
+
+impl Array {
+    pub fn addr(&self, idx: u64) -> u64 {
+        self.base + idx * self.dtype.size()
+    }
+}
+
+/// Physical placement: arrays live in disjoint huge-page-aligned regions.
+pub const ARRAY_REGION: u64 = 1 << 26; // 64 MiB
+pub const ARRAY_BASE: u64 = 1 << 26;
+
+/// A complete kernel: arrays + registers + a single outer loop over
+/// `iters` iterations whose body is `body` (Iv(0) = outer index).
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: &'static str,
+    pub arrays: Vec<Array>,
+    pub regs: Vec<u64>,
+    pub iters: usize,
+    pub body: Vec<Stmt>,
+    /// RMWs need atomics on the multicore baseline.
+    pub atomic_rmw: bool,
+    /// Scatter kernels cannot be parallelized on the baseline (WAW); run
+    /// the baseline on one core (§6.1 Scatter).
+    pub single_core_baseline: bool,
+    /// Per-element core compute cost applied in the DX100 version too.
+    pub parallel_cores: usize,
+}
+
+impl Program {
+    pub fn new(name: &'static str, iters: usize) -> Self {
+        Program {
+            name,
+            arrays: Vec::new(),
+            regs: vec![0; 32],
+            iters,
+            body: Vec::new(),
+            atomic_rmw: true,
+            single_core_baseline: false,
+            parallel_cores: 4,
+        }
+    }
+
+    /// Declare an array; returns its id. Bases are assigned sequentially in
+    /// disjoint 64 MiB regions (huge-page mapping assumption, §3.6).
+    pub fn add_array(&mut self, name: &'static str, dtype: DType, len: usize) -> ArrId {
+        assert!(
+            (len as u64) * dtype.size() <= ARRAY_REGION,
+            "array {name} exceeds its region"
+        );
+        let base = ARRAY_BASE + self.arrays.len() as u64 * ARRAY_REGION;
+        self.arrays.push(Array {
+            name,
+            dtype,
+            len,
+            base,
+        });
+        self.arrays.len() - 1
+    }
+
+    pub fn set_reg(&mut self, r: u8, v: u64) {
+        self.regs[r as usize] = v;
+    }
+
+    /// All statements, flattened (for analyses).
+    pub fn flat_stmts(&self) -> Vec<&Stmt> {
+        fn walk<'a>(stmts: &'a [Stmt], out: &mut Vec<&'a Stmt>) {
+            for s in stmts {
+                out.push(s);
+                match s {
+                    Stmt::RangeFor { body, .. } | Stmt::If { body, .. } => walk(body, out),
+                    _ => {}
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.body, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_counters() {
+        // A[B[i]] + C[i] * 2
+        let e = Expr::bin(
+            Op::Add,
+            Expr::load(0, Expr::load(1, Expr::Iv(0))),
+            Expr::bin(Op::Mul, Expr::load(2, Expr::Iv(0)), Expr::cu32(2)),
+        );
+        assert_eq!(e.load_count(), 3);
+        assert_eq!(e.bin_count(), 2);
+        assert!(e.uses_iv(0));
+        assert!(!e.uses_iv(1));
+    }
+
+    #[test]
+    fn array_layout_disjoint() {
+        let mut p = Program::new("t", 10);
+        let a = p.add_array("a", DType::F32, 1000);
+        let b = p.add_array("b", DType::U32, 1000);
+        assert_ne!(p.arrays[a].base, p.arrays[b].base);
+        assert_eq!(p.arrays[b].base - p.arrays[a].base, ARRAY_REGION);
+        assert_eq!(p.arrays[a].addr(3), p.arrays[a].base + 12);
+    }
+
+    #[test]
+    fn flat_stmts_walks_nesting() {
+        let mut p = Program::new("t", 1);
+        let a = p.add_array("a", DType::U32, 8);
+        p.body = vec![Stmt::If {
+            cond: Expr::cu32(1),
+            body: vec![Stmt::RangeFor {
+                lo: Expr::cu32(0),
+                hi: Expr::cu32(2),
+                body: vec![Stmt::Sink {
+                    val: Expr::load(a, Expr::Iv(1)),
+                    cost: 1,
+                }],
+            }],
+        }];
+        assert_eq!(p.flat_stmts().len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_array_rejected() {
+        let mut p = Program::new("t", 1);
+        p.add_array("big", DType::F64, (ARRAY_REGION as usize / 8) + 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! The MLIR-analog compiler (paper §4).
+//!
+//! Workloads are written once in a loop-level mini-IR ([`ir`]). The
+//! pipeline mirrors the paper's Polygeist/MLIR flow:
+//!
+//! 1. **Detection** ([`analysis`]): a DFS over use-def chains (here,
+//!    expression trees) classifies loads as streaming vs indirect and finds
+//!    the Table-1 pattern shape.
+//! 2. **Legality** ([`analysis`]): alias analysis — no array that is loaded
+//!    indirectly may be stored within the loop (the Gauss–Seidel case), and
+//!    range-loop bound arrays must be read-only.
+//! 3. **Tiling + hoisting + codegen** ([`codegen`]): outer iterations are
+//!    tiled (range loops cut so fused inner iterations fit one tile);
+//!    indirect accesses are hoisted into packed DX100 instruction sequences
+//!    (SLD/ALU/RNG/ILD/IST/IRMW), with the residual per-element compute
+//!    left on the cores (scratchpad reads + waits).
+//!
+//! Two executors provide the correctness invariant: the sequential IR
+//! interpreter ([`interp`]) and the DX100 functional simulator running the
+//! generated program must produce identical memory states.
+
+pub mod analysis;
+pub mod codegen;
+pub mod interp;
+pub mod ir;
+
+pub use analysis::{analyze, AccessClass, Analysis, LegalityError};
+pub use codegen::{compile, CompiledWorkload, Dx100Run, WorkloadFlags};
+pub use interp::{interpret, InterpOutput};
+pub use ir::{Array, Expr, Program, Stmt};

@@ -1,0 +1,388 @@
+//! System configuration mirroring the paper's Table 3 plus DX100 parameters.
+//!
+//! All timing is expressed in **CPU cycles at 3.2 GHz**. The DRAM command
+//! clock for DDR4-3200 is 1.6 GHz, i.e. one DRAM cycle = 2 CPU cycles; DDR4
+//! timing constants below are already converted.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Core microarchitectural limits (Table 3, "Core" row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreConfig {
+    /// Number of cores sharing the LLC (and one or more DX100 instances).
+    pub num_cores: usize,
+    /// Issue width (instructions per cycle).
+    pub issue_width: u32,
+    /// Reorder-buffer capacity in instructions.
+    pub rob: u32,
+    /// Load-queue capacity.
+    pub lq: u32,
+    /// Store-queue capacity.
+    pub sq: u32,
+}
+
+/// One cache level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes.
+    pub size: usize,
+    /// Associativity.
+    pub ways: usize,
+    /// Access latency in CPU cycles (lookup + data).
+    pub latency: u64,
+    /// Miss-status holding registers (outstanding misses).
+    pub mshrs: usize,
+    /// Enable the per-stream stride prefetcher at this level.
+    pub stride_prefetcher: bool,
+    /// Prefetch degree (lines ahead) when the prefetcher is enabled.
+    pub prefetch_degree: usize,
+}
+
+/// DDR4 timing and geometry (Table 3, "Memory" row). All timing fields are
+/// CPU cycles @3.2 GHz (= 2x DRAM command-clock cycles @1.6 GHz).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramConfig {
+    pub channels: usize,
+    pub ranks: usize,
+    pub bankgroups: usize,
+    /// Banks per bank group.
+    pub banks_per_group: usize,
+    /// Row (page) size in bytes. 8 KiB for DDR4 x8 DIMM.
+    pub row_bytes: usize,
+    /// Cache-line / burst size in bytes.
+    pub line_bytes: usize,
+    /// Request buffer entries per channel (FR-FCFS visibility window).
+    pub request_buffer: usize,
+    /// Row-precharge time tRP.
+    pub t_rp: u64,
+    /// RAS-to-CAS delay tRCD.
+    pub t_rcd: u64,
+    /// Minimum row-open time tRAS.
+    pub t_ras: u64,
+    /// Read-to-precharge tRTP.
+    pub t_rtp: u64,
+    /// CAS-to-CAS, same bank group tCCD_L.
+    pub t_ccd_l: u64,
+    /// CAS-to-CAS, different bank group tCCD_S.
+    pub t_ccd_s: u64,
+    /// Read CAS latency CL.
+    pub cl: u64,
+    /// Write CAS latency CWL.
+    pub cwl: u64,
+    /// Burst duration tBURST (BL8 = 4 DRAM clocks).
+    pub t_burst: u64,
+    /// Write recovery tWR.
+    pub t_wr: u64,
+    /// ACT-to-ACT same bank tRC.
+    pub t_rc: u64,
+    /// Extra round-trip (NoC + controller) latency added to every DRAM
+    /// access as seen by the requester, in CPU cycles.
+    pub backend_latency: u64,
+}
+
+impl DramConfig {
+    /// Peak bandwidth in bytes per CPU cycle (all channels).
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        // One 64B burst per t_burst CPU cycles per channel.
+        self.channels as f64 * self.line_bytes as f64 / self.t_burst as f64
+    }
+
+    /// Peak bandwidth in GB/s (3.2G CPU cycles per second).
+    pub fn peak_gbps(&self) -> f64 {
+        self.peak_bytes_per_cycle() * 3.2
+    }
+
+    /// Total number of banks across all channels/ranks/groups.
+    pub fn total_banks(&self) -> usize {
+        self.channels * self.ranks * self.bankgroups * self.banks_per_group
+    }
+
+    /// Cache lines (columns) per row.
+    pub fn lines_per_row(&self) -> usize {
+        self.row_bytes / self.line_bytes
+    }
+}
+
+/// DX100 accelerator parameters (Table 3, "DX100" row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dx100Config {
+    /// Number of DX100 instances on the SoC.
+    pub instances: usize,
+    /// Elements per scratchpad tile.
+    pub tile_elems: usize,
+    /// Number of scratchpad tiles.
+    pub tiles: usize,
+    /// Row Table: rows tracked per slice (BCAM entries).
+    pub rowtab_rows: usize,
+    /// Row Table: column entries per row (SRAM cell).
+    pub rowtab_cols: usize,
+    /// Scalar registers.
+    pub registers: usize,
+    /// Stream-unit request table entries (outstanding streaming accesses).
+    pub request_table: usize,
+    /// ALU lanes (elements per cycle).
+    pub alu_lanes: usize,
+    /// TLB entries for huge-page PTEs.
+    pub tlb_entries: usize,
+    /// Indices translated + inserted into the Row/Word tables per cycle.
+    pub fill_rate: usize,
+    /// Words written back to the scratchpad per cycle on response.
+    pub writeback_rate: usize,
+    /// Latency (CPU cycles) for a core's memory-mapped store to reach DX100.
+    pub mmio_store_latency: u64,
+    /// Latency for the core to read scratchpad data (cacheable, prefetched).
+    pub spd_read_latency: u64,
+}
+
+impl Dx100Config {
+    /// Scratchpad bytes (tiles x elems x 4B words).
+    pub fn scratchpad_bytes(&self) -> usize {
+        self.tiles * self.tile_elems * 4
+    }
+}
+
+/// Complete system configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub core: CoreConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    pub dram: DramConfig,
+    pub dx100: Dx100Config,
+    /// CPU frequency in GHz (informational; time base is CPU cycles).
+    pub freq_ghz: f64,
+}
+
+impl SystemConfig {
+    /// The paper's Table 3 configuration: 4 Skylake-like cores, DDR4-3200
+    /// 2ch, 10 MB LLC baseline / 8 MB + DX100, 2 MB scratchpad with 16K
+    /// tiles.
+    pub fn table3() -> Self {
+        SystemConfig {
+            core: CoreConfig {
+                num_cores: 4,
+                issue_width: 8,
+                rob: 224,
+                lq: 72,
+                sq: 56,
+            },
+            l1d: CacheConfig {
+                size: 32 * 1024,
+                ways: 8,
+                latency: 4,
+                mshrs: 16,
+                stride_prefetcher: true,
+                prefetch_degree: 4,
+            },
+            l2: CacheConfig {
+                size: 256 * 1024,
+                ways: 4,
+                latency: 12,
+                mshrs: 32,
+                stride_prefetcher: true,
+                prefetch_degree: 8,
+            },
+            llc: CacheConfig {
+                // Baseline gets 10MB/20-way; DX100 systems use 8MB/16-way
+                // (see `for_dx100`). The 2MB delta pays for the scratchpad.
+                size: 10 * 1024 * 1024,
+                ways: 20,
+                latency: 42,
+                mshrs: 256,
+                stride_prefetcher: false,
+                prefetch_degree: 0,
+            },
+            dram: DramConfig {
+                channels: 2,
+                ranks: 1,
+                bankgroups: 4,
+                banks_per_group: 4,
+                row_bytes: 8 * 1024,
+                line_bytes: 64,
+                request_buffer: 32,
+                // DDR4-3200: tCK=0.625ns, CPU cycle=0.3125ns => ns * 3.2.
+                t_rp: 40,    // 12.5 ns
+                t_rcd: 40,   // 12.5 ns
+                t_ras: 104,  // 32.5 ns
+                t_rtp: 24,   // 7.5 ns
+                t_ccd_l: 16, // 5.0 ns
+                t_ccd_s: 8,  // 2.5 ns
+                cl: 44,      // ~13.75 ns
+                cwl: 32,     // ~10 ns
+                t_burst: 8,  // 4 DRAM clocks (BL8) = 2.5 ns
+                t_wr: 48,    // 15 ns
+                t_rc: 144,   // tRAS + tRP
+                backend_latency: 60,
+            },
+            dx100: Dx100Config {
+                instances: 1,
+                tile_elems: 16 * 1024,
+                tiles: 32,
+                rowtab_rows: 64,
+                rowtab_cols: 8,
+                registers: 32,
+                request_table: 128,
+                alu_lanes: 16,
+                tlb_entries: 256,
+                fill_rate: 4,
+                writeback_rate: 16,
+                mmio_store_latency: 40,
+                spd_read_latency: 20,
+            },
+            freq_ghz: 3.2,
+        }
+    }
+
+    /// Variant used when a DX100 instance is present: LLC shrinks from 10 MB
+    /// to 8 MB (16-way) to pay for the 2 MB scratchpad, as in the paper.
+    pub fn for_dx100(mut self) -> Self {
+        self.llc.size = 8 * 1024 * 1024;
+        self.llc.ways = 16;
+        self
+    }
+
+    /// The §6.6 scaled system: 8 cores, 4 channels, doubled LLC.
+    pub fn table3_8core() -> Self {
+        let mut cfg = Self::table3();
+        cfg.core.num_cores = 8;
+        cfg.dram.channels = 4;
+        cfg.llc.size = 20 * 1024 * 1024;
+        cfg.llc.ways = 20;
+        cfg
+    }
+
+    /// Apply `key=value` overrides (used by the CLI and sweep harnesses).
+    ///
+    /// Recognized keys: `cores`, `channels`, `tile`, `tiles`, `instances`,
+    /// `llc_kb`, `rob`, `lq`, `sq`, `request_buffer`, `fill_rate`,
+    /// `rowtab_rows`, `rowtab_cols`.
+    pub fn with_overrides(mut self, overrides: &BTreeMap<String, String>) -> Result<Self, String> {
+        for (k, v) in overrides {
+            let n: u64 = v
+                .parse()
+                .map_err(|_| format!("override {k}={v}: not an integer"))?;
+            match k.as_str() {
+                "cores" => self.core.num_cores = n as usize,
+                "channels" => self.dram.channels = n as usize,
+                "tile" => self.dx100.tile_elems = n as usize,
+                "tiles" => self.dx100.tiles = n as usize,
+                "instances" => self.dx100.instances = n as usize,
+                "llc_kb" => self.llc.size = n as usize * 1024,
+                "rob" => self.core.rob = n as u32,
+                "lq" => self.core.lq = n as u32,
+                "sq" => self.core.sq = n as u32,
+                "request_buffer" => self.dram.request_buffer = n as usize,
+                "fill_rate" => self.dx100.fill_rate = n as usize,
+                "rowtab_rows" => self.dx100.rowtab_rows = n as usize,
+                "rowtab_cols" => self.dx100.rowtab_cols = n as usize,
+                _ => return Err(format!("unknown config override: {k}")),
+            }
+        }
+        Ok(self)
+    }
+}
+
+impl fmt::Display for SystemConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{} cores, {}-wide, ROB {}, LQ {}, SQ {}",
+            self.core.num_cores, self.core.issue_width, self.core.rob, self.core.lq, self.core.sq
+        )?;
+        writeln!(
+            f,
+            "L1D {}KB/{}w  L2 {}KB/{}w  LLC {}MB/{}w",
+            self.l1d.size / 1024,
+            self.l1d.ways,
+            self.l2.size / 1024,
+            self.l2.ways,
+            self.llc.size / (1024 * 1024),
+            self.llc.ways
+        )?;
+        writeln!(
+            f,
+            "DDR4-3200 x{}ch, {:.1} GB/s peak, request buffer {}/ch",
+            self.dram.channels,
+            self.dram.peak_gbps(),
+            self.dram.request_buffer
+        )?;
+        write!(
+            f,
+            "DX100 x{}: tile {}K x{} tiles ({} MB SPD), RowTable {}x{}",
+            self.dx100.instances,
+            self.dx100.tile_elems / 1024,
+            self.dx100.tiles,
+            self.dx100.scratchpad_bytes() / (1024 * 1024),
+            self.dx100.rowtab_rows,
+            self.dx100.rowtab_cols
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_matches_paper() {
+        let c = SystemConfig::table3();
+        assert_eq!(c.core.num_cores, 4);
+        assert_eq!(c.core.rob, 224);
+        assert_eq!(c.core.lq, 72);
+        assert_eq!(c.core.sq, 56);
+        assert_eq!(c.dram.channels, 2);
+        assert_eq!(c.dram.request_buffer, 32);
+        assert_eq!(c.dx100.tile_elems, 16 * 1024);
+        assert_eq!(c.dx100.tiles, 32);
+        assert_eq!(c.dx100.scratchpad_bytes(), 2 * 1024 * 1024);
+        assert_eq!(c.dx100.alu_lanes, 16);
+        assert_eq!(c.dx100.request_table, 128);
+        assert_eq!(c.dx100.tlb_entries, 256);
+    }
+
+    #[test]
+    fn peak_bandwidth_is_51_2_gbps() {
+        let c = SystemConfig::table3();
+        assert!((c.dram.peak_gbps() - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ddr4_timing_ratios() {
+        let d = SystemConfig::table3().dram;
+        // tCCD_L is twice tCCD_S (the bank-group penalty the paper leans on).
+        assert_eq!(d.t_ccd_l, 2 * d.t_ccd_s);
+        assert_eq!(d.t_rc, d.t_ras + d.t_rp);
+        assert_eq!(d.lines_per_row(), 128);
+        assert_eq!(d.total_banks(), 32);
+    }
+
+    #[test]
+    fn dx100_variant_shrinks_llc() {
+        let c = SystemConfig::table3().for_dx100();
+        assert_eq!(c.llc.size, 8 * 1024 * 1024);
+        assert_eq!(c.llc.ways, 16);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut ov = BTreeMap::new();
+        ov.insert("cores".to_string(), "8".to_string());
+        ov.insert("tile".to_string(), "1024".to_string());
+        let c = SystemConfig::table3().with_overrides(&ov).unwrap();
+        assert_eq!(c.core.num_cores, 8);
+        assert_eq!(c.dx100.tile_elems, 1024);
+        let mut bad = BTreeMap::new();
+        bad.insert("nope".to_string(), "1".to_string());
+        assert!(SystemConfig::table3().with_overrides(&bad).is_err());
+    }
+
+    #[test]
+    fn scaled_8core_config() {
+        let c = SystemConfig::table3_8core();
+        assert_eq!(c.core.num_cores, 8);
+        assert_eq!(c.dram.channels, 4);
+        assert!((c.dram.peak_gbps() - 102.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Experiment coordinator: assembles a full system (cores + caches + DRAM
+//! (+ DX100 instances / DMP)) and drives a compiled workload through it.
+//!
+//! Three system kinds reproduce the paper's comparison points:
+//!
+//! * [`SystemKind::Baseline`] — the Table 3 multicore with stride
+//!   prefetchers and a 10 MB LLC.
+//! * [`SystemKind::Dmp`] — baseline + the DMP-like indirect prefetcher.
+//! * [`SystemKind::Dx100`] — 8 MB LLC + one or more DX100 instances; cores
+//!   execute the compiled residual streams, the accelerator executes the
+//!   packed instruction programs.
+
+pub mod system;
+
+pub use system::{Experiment, RunStats, SystemKind};

@@ -1,0 +1,526 @@
+//! Full-system event loop.
+
+use crate::cache::{Hierarchy, StridePrefetcher};
+use crate::compiler::{compile, CompiledWorkload};
+use crate::config::SystemConfig;
+use crate::core::{CoreEnv, CoreModel, LineWaiters, MmioDelivery};
+use crate::dx100::timing::{Dx100Env, Dx100Stats, Dx100Timing};
+use crate::dx100::NO_TILE;
+use crate::mem::{dram::Completion, MemController, ReqSource};
+use crate::prefetch::DmpHints;
+use crate::sim::{Cycle, Event, EventQueue};
+use crate::workloads::WorkloadSpec;
+use std::collections::HashMap;
+
+/// Which system to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Baseline,
+    Dmp,
+    Dx100,
+}
+
+/// Results of one simulation run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub kind: SystemKind,
+    pub workload: &'static str,
+    /// End-to-end cycles.
+    pub cycles: Cycle,
+    /// Total dynamic instructions retired by the cores.
+    pub instrs: u64,
+    /// Core spin-wait instructions (included in `instrs`).
+    pub spin_instrs: u64,
+    /// DRAM bandwidth utilization (0..1).
+    pub bw_util: f64,
+    /// DRAM row-buffer hit rate (0..1).
+    pub row_hit_rate: f64,
+    /// Mean request-buffer occupancy (requests).
+    pub occupancy: f64,
+    /// LLC misses per kilo-instruction.
+    pub mpki: f64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub dram_bytes: u64,
+    /// Per-instance DX100 stats (DX100 runs only).
+    pub dx: Vec<Dx100Stats>,
+    /// Events processed (simulator-performance diagnostics).
+    pub events: u64,
+}
+
+impl RunStats {
+    /// Geometric-mean-friendly speedup of `self` relative to `other`.
+    pub fn speedup_over(&self, other: &RunStats) -> f64 {
+        other.cycles as f64 / self.cycles as f64
+    }
+}
+
+/// An experiment: one system kind + configuration.
+#[derive(Clone)]
+pub struct Experiment {
+    pub kind: SystemKind,
+    pub cfg: SystemConfig,
+}
+
+impl Experiment {
+    pub fn new(kind: SystemKind, cfg: SystemConfig) -> Self {
+        let cfg = match kind {
+            SystemKind::Dx100 => cfg.for_dx100(),
+            _ => cfg,
+        };
+        Experiment { kind, cfg }
+    }
+
+    /// Compile and run a workload end to end.
+    pub fn run(&self, w: &WorkloadSpec) -> RunStats {
+        let cw = compile(&w.program, &w.mem, &self.cfg)
+            .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
+        self.run_compiled(&cw, w.warm_caches)
+    }
+
+    /// Run a pre-compiled workload (benches reuse compilation).
+    pub fn run_compiled(&self, cw: &CompiledWorkload, warm: bool) -> RunStats {
+        let mut sys = System::build(self.kind, &self.cfg, cw, warm);
+        sys.run();
+        sys.stats(self.kind, cw.name)
+    }
+}
+
+struct System<'a> {
+    cfg: &'a SystemConfig,
+    cores: Vec<CoreModel>,
+    streams: Vec<&'a [crate::core::Op]>,
+    hier: Hierarchy,
+    mem: MemController,
+    queue: EventQueue,
+    waiters: LineWaiters,
+    prefetchers: Vec<StridePrefetcher>,
+    dmp_hints: Option<&'a [DmpHints]>,
+    dx: Vec<Dx100Timing>,
+    dx_programs: Vec<&'a crate::dx100::timing::Dx100Program>,
+    ready: Vec<Vec<bool>>,
+    routing: HashMap<u64, Completion>,
+    mmio_buf: Vec<MmioDelivery>,
+    events: u64,
+    end_time: Cycle,
+}
+
+impl<'a> System<'a> {
+    fn build(kind: SystemKind, cfg: &'a SystemConfig, cw: &'a CompiledWorkload, warm: bool) -> Self {
+        let streams: Vec<&'a [crate::core::Op]> = match kind {
+            SystemKind::Baseline | SystemKind::Dmp => cw
+                .baseline
+                .streams
+                .iter()
+                .map(|s| s.ops.as_slice())
+                .collect(),
+            SystemKind::Dx100 => cw
+                .dx
+                .core_streams
+                .iter()
+                .map(|s| s.ops.as_slice())
+                .collect(),
+        };
+        let ncores = streams.len().max(1);
+        let mut core_cfg = cfg.core.clone();
+        core_cfg.num_cores = core_cfg.num_cores.max(ncores);
+        let mut hier_cfg = cfg.clone();
+        hier_cfg.core.num_cores = core_cfg.num_cores;
+        let mut hier = Hierarchy::new(&hier_cfg);
+        let mem = MemController::new(cfg.dram.clone());
+        let cores: Vec<CoreModel> = (0..ncores)
+            .map(|i| CoreModel::new(i, cfg.core.clone()))
+            .collect();
+        let prefetchers = (0..ncores)
+            .map(|_| StridePrefetcher::new(cfg.l2.prefetch_degree))
+            .collect();
+        // Warm caches: pre-install every array line at every level
+        // (the §6.1 All-Hits scenario).
+        if warm {
+            let mut lines = std::collections::BTreeSet::new();
+            for tp in cw.baseline.streams.iter() {
+                for op in &tp.ops {
+                    if let crate::core::OpKind::Load { addr, .. }
+                    | crate::core::OpKind::Store { addr, .. }
+                    | crate::core::OpKind::Rmw { addr, .. } = op.kind
+                    {
+                        lines.insert(addr >> 6);
+                    }
+                }
+            }
+            for line in lines {
+                hier.llc.fill(line, 0);
+                for c in 0..ncores {
+                    hier.l2[c].fill(line, 0);
+                    hier.l1[c].fill(line, 0);
+                }
+            }
+        }
+        let (dx, dx_programs, ready) = if kind == SystemKind::Dx100 {
+            let mut dx = Vec::new();
+            let mut progs = Vec::new();
+            let mut ready = Vec::new();
+            for (i, prog) in cw.dx.programs.iter().enumerate() {
+                dx.push(Dx100Timing::new(
+                    i,
+                    cfg.dx100.clone(),
+                    prog.clone(),
+                    &mem,
+                    cw.dx.programs.len(),
+                ));
+                progs.push(prog);
+                ready.push(vec![false; cfg.dx100.tiles + cw.dx.phases]);
+            }
+            (dx, progs, ready)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        let dmp_hints = if kind == SystemKind::Dmp {
+            Some(cw.baseline.dmp_hints.as_slice())
+        } else {
+            None
+        };
+        System {
+            cfg,
+            cores,
+            streams,
+            hier,
+            mem,
+            queue: EventQueue::new(),
+            waiters: LineWaiters::new(),
+            prefetchers,
+            dmp_hints,
+            dx,
+            dx_programs,
+            ready,
+            routing: HashMap::new(),
+            mmio_buf: Vec::new(),
+            events: 0,
+            end_time: 0,
+        }
+    }
+
+    fn wake_core(&mut self, c: usize, t: Cycle) {
+        let hints = self.dmp_hints.and_then(|h| h.get(c));
+        let mut env = CoreEnv {
+            hier: &mut self.hier,
+            mem: &mut self.mem,
+            queue: &mut self.queue,
+            waiters: &mut self.waiters,
+            prefetcher: &mut self.prefetchers[c],
+            flags: &self.ready,
+            mmio_out: &mut self.mmio_buf,
+            spd_latency: self.cfg.dx100.spd_read_latency,
+            mmio_latency: self.cfg.dx100.mmio_store_latency,
+            dmp_hints: hints,
+        };
+        self.cores[c].wake(t, self.streams[c], &mut env);
+        // Route MMIO deliveries: encode (instance, seq) into a Timer event.
+        let deliveries = std::mem::take(&mut self.mmio_buf);
+        for d in deliveries {
+            let payload = ((d.instance as u64) << 32) | d.seq as u64;
+            self.queue.push(d.time, Event::Timer(payload));
+        }
+    }
+
+    fn wake_dx(&mut self, i: usize, t: Cycle) {
+        let mut env = Dx100Env {
+            hier: &mut self.hier,
+            mem: &mut self.mem,
+            queue: &mut self.queue,
+            ready: &mut self.ready[i],
+        };
+        let flags_changed = self.dx[i].wake(t, &mut env);
+        if flags_changed {
+            for c in 0..self.cores.len() {
+                if !self.cores[c].done {
+                    self.queue.push(t, Event::CoreWake(c));
+                }
+            }
+        }
+    }
+
+    fn drain_writebacks(&mut self, t: Cycle) {
+        for line in self.hier.take_writebacks() {
+            let addr = line << 6;
+            self.mem
+                .enqueue(t, addr, true, ReqSource::Prefetch { core: usize::MAX });
+            let ch = self.mem.channel_of(addr);
+            if self.mem.sched_request(ch, t) {
+                self.queue.push(t, Event::ChannelSched(ch));
+            }
+        }
+    }
+
+    fn run(&mut self) {
+        for c in 0..self.cores.len() {
+            self.queue.push(0, Event::CoreWake(c));
+        }
+        for i in 0..self.dx.len() {
+            self.queue.push(0, Event::Dx100Wake(i));
+        }
+        let mut t: Cycle = 0;
+        let guard_limit: u64 = 2_000_000_000;
+        while let Some(ev) = self.queue.pop() {
+            self.events += 1;
+            assert!(self.events < guard_limit, "simulation livelock at t={t}");
+            t = ev.time;
+            match ev.event {
+                Event::CoreWake(c) => {
+                    if !self.cores[c].done {
+                        self.wake_core(c, t);
+                    }
+                }
+                Event::ChannelSched(ch) => {
+                    let (comps, wake) = self.mem.schedule(ch, t);
+                    for comp in comps {
+                        self.routing.insert(comp.id, comp);
+                        self.queue.push(comp.time, Event::DramDone(comp.id));
+                    }
+                    if let Some(w) = wake {
+                        self.queue.push(w, Event::ChannelSched(ch));
+                    }
+                }
+                Event::DramDone(id) => {
+                    let comp = self.routing.remove(&id).expect("unknown completion");
+                    match comp.source {
+                        ReqSource::Core { core, .. } => {
+                            let line = comp.addr >> 6;
+                            self.hier.complete_fill(core, line, t);
+                            self.drain_writebacks(t);
+                            if let Some(ws) = self.waiters.remove(&line) {
+                                for (c, sidx) in ws {
+                                    let ready = self.cores[c].complete_mem(sidx, t);
+                                    self.queue.push(ready, Event::CoreWake(c));
+                                }
+                            }
+                            // Unblock MSHR-stalled cores.
+                            for c in 0..self.cores.len() {
+                                if self.cores[c].blocked {
+                                    self.queue.push(t, Event::CoreWake(c));
+                                }
+                            }
+                        }
+                        ReqSource::Prefetch { core } => {
+                            if !comp.is_write && core != usize::MAX {
+                                let line = comp.addr >> 6;
+                                self.hier.complete_prefetch_fill(core, line, t);
+                                self.drain_writebacks(t);
+                                // Demand accesses may have merged into this
+                                // in-flight prefetch: complete them too.
+                                if let Some(ws) = self.waiters.remove(&line) {
+                                    for (c, sidx) in ws {
+                                        let ready = self.cores[c].complete_mem(sidx, t);
+                                        self.queue.push(ready, Event::CoreWake(c));
+                                    }
+                                }
+                                for c in 0..self.cores.len() {
+                                    if self.cores[c].blocked {
+                                        self.queue.push(t, Event::CoreWake(c));
+                                    }
+                                }
+                            }
+                        }
+                        ReqSource::Dx100 { instance, token } => {
+                            self.dx[instance].on_dram_done(
+                                token,
+                                t,
+                                &mut self.mem,
+                                &mut self.queue,
+                            );
+                        }
+                    }
+                }
+                Event::Dx100Wake(i) => {
+                    self.wake_dx(i, t);
+                }
+                Event::Timer(payload) => {
+                    let instance = (payload >> 32) as usize;
+                    let seq = (payload & 0xFFFF_FFFF) as u32;
+                    if self.dx[instance].deliver_part(seq) {
+                        // Fully delivered: clear ready bits of its tiles so
+                        // waiting cores observe the in-progress state.
+                        let inst = &self.dx_programs[instance].instrs[seq as usize].inst;
+                        for tile in inst.dest_tiles() {
+                            self.ready[instance][tile as usize] = false;
+                        }
+                        if inst.dest_tiles().is_empty() && inst.ts1 != NO_TILE {
+                            self.ready[instance][inst.ts1 as usize] = false;
+                        }
+                    }
+                    self.queue.push(t, Event::Dx100Wake(instance));
+                }
+            }
+            self.end_time = self.end_time.max(t);
+            // Early exit: everything done and quiet.
+            if self.queue.is_empty() {
+                break;
+            }
+        }
+        if !self.cores.iter().all(|c| c.done) {
+            for c in &self.cores {
+                eprintln!(
+                    "core {}: done={} rob={} inflight={:?} blocked={}",
+                    c.id,
+                    c.done,
+                    c.rob_len(),
+                    c.inflight(),
+                    c.blocked
+                );
+            }
+            eprintln!("waiters: {} lines", self.waiters.len());
+            eprintln!("mem pending: {}", self.mem.has_pending());
+            panic!("cores not drained at t={}", self.end_time);
+        }
+    }
+
+    fn stats(&self, kind: SystemKind, workload: &'static str) -> RunStats {
+        let cycles = self
+            .cores
+            .iter()
+            .map(|c| c.stats.finish_time)
+            .chain(self.dx.iter().map(|d| d.stats.finish_time))
+            .max()
+            .unwrap_or(self.end_time)
+            .max(1);
+        let instrs: u64 = self.cores.iter().map(|c| c.stats.retired_instrs).sum();
+        let spin: u64 = self.cores.iter().map(|c| c.stats.spin_instrs).sum();
+        // Core-side MPKI: misses from the private L2s (the shared LLC also
+        // serves DX100's Cache-Interface lookups, which are not core misses).
+        let l2_misses: u64 = self.hier.l2.iter().map(|c| c.stats.misses).sum();
+        RunStats {
+            kind,
+            workload,
+            cycles,
+            instrs,
+            spin_instrs: spin,
+            bw_util: self.mem.stats.bw_utilization(cycles, &self.cfg.dram),
+            row_hit_rate: self.mem.stats.row_hit_rate(),
+            occupancy: self.mem.mean_occupancy(cycles),
+            mpki: l2_misses as f64 / (instrs.max(1) as f64 / 1000.0),
+            dram_reads: self.mem.stats.reads,
+            dram_writes: self.mem.stats.writes,
+            dram_bytes: self.mem.stats.bytes,
+            dx: self.dx.iter().map(|d| d.stats.clone()).collect(),
+            events: self.events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{micro, Scale};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::table3()
+    }
+
+    #[test]
+    fn baseline_runs_gather() {
+        let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 1);
+        let stats = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        assert!(stats.cycles > 0);
+        assert!(stats.instrs > 0);
+        assert!(stats.dram_reads > 0, "random gather must reach DRAM");
+    }
+
+    #[test]
+    fn dx100_beats_baseline_on_random_gather() {
+        let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 2);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let speedup = dx.speedup_over(&base);
+        assert!(
+            speedup > 1.2,
+            "DX100 should beat baseline: {} vs {} ({speedup:.2}x)",
+            dx.cycles,
+            base.cycles
+        );
+        assert!(
+            dx.instrs < base.instrs,
+            "DX100 must reduce instructions: {} vs {}",
+            dx.instrs,
+            base.instrs
+        );
+    }
+
+    #[test]
+    fn dx100_improves_row_hits_and_occupancy() {
+        let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 3);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        assert!(
+            dx.row_hit_rate > base.row_hit_rate,
+            "RBH: dx {} vs base {}",
+            dx.row_hit_rate,
+            base.row_hit_rate
+        );
+        assert!(
+            dx.occupancy > base.occupancy,
+            "occupancy: dx {} vs base {}",
+            dx.occupancy,
+            base.occupancy
+        );
+    }
+
+    #[test]
+    fn atomics_hurt_baseline_but_not_dx100() {
+        let wa = micro::rmw(8192, true, micro::IndexPattern::UniformRandom, 4);
+        let wn = micro::rmw(8192, false, micro::IndexPattern::UniformRandom, 4);
+        let ba = Experiment::new(SystemKind::Baseline, cfg()).run(&wa);
+        let bn = Experiment::new(SystemKind::Baseline, cfg()).run(&wn);
+        assert!(
+            ba.cycles as f64 > 1.5 * bn.cycles as f64,
+            "atomic {} vs plain {}",
+            ba.cycles,
+            bn.cycles
+        );
+        let dxa = Experiment::new(SystemKind::Dx100, cfg()).run(&wa);
+        let dxn = Experiment::new(SystemKind::Dx100, cfg()).run(&wn);
+        // DX100 is insensitive to the atomicity flag (exclusive access).
+        let ratio = dxa.cycles as f64 / dxn.cycles as f64;
+        assert!((0.8..1.25).contains(&ratio), "dx ratio {ratio}");
+    }
+
+    #[test]
+    fn dmp_between_baseline_and_dx100() {
+        let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 5);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        let dmp = Experiment::new(SystemKind::Dmp, cfg()).run(&w);
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        assert!(
+            dmp.cycles < base.cycles,
+            "DMP should improve on baseline: {} vs {}",
+            dmp.cycles,
+            base.cycles
+        );
+        assert!(
+            dx.cycles < dmp.cycles,
+            "DX100 should beat DMP: {} vs {}",
+            dx.cycles,
+            dmp.cycles
+        );
+    }
+
+    #[test]
+    fn warm_gather_spd_modest_speedup() {
+        // §6.1 All-Hits: speedup comes from instruction reduction only.
+        let w = micro::gather_spd(8192, micro::IndexPattern::Streaming, 6);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let sp = dx.speedup_over(&base);
+        assert!(sp > 0.7 && sp < 3.0, "Gather-SPD speedup {sp}");
+        let instr_red = base.instrs as f64 / dx.instrs as f64;
+        assert!(instr_red > 1.5, "instr reduction {instr_red}");
+    }
+
+    #[test]
+    fn full_workload_cg_runs_on_all_systems() {
+        let w = crate::workloads::nas::cg(Scale::test());
+        for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
+            let stats = Experiment::new(kind, cfg()).run(&w);
+            assert!(stats.cycles > 0, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-constrained out-of-order core model.
+//!
+//! This is the gem5-O3 stand-in. It executes an abstract per-core **op
+//! stream** (produced by the mini-compiler from the workload IR) under the
+//! structural limits the paper identifies as the baseline's MLP bottleneck
+//! (§2.2): issue width, ROB capacity, LQ/SQ occupancy, cache MSHRs, the
+//! dependency chain from index loads to indirect accesses, and fence
+//! serialization for atomic RMW.
+
+pub mod model;
+pub mod ops;
+
+pub use model::{CoreEnv, CoreModel, CoreStats, LineWaiters, MmioDelivery, PendingMem};
+pub use ops::{Op, OpKind, OpStream};

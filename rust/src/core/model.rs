@@ -1,0 +1,802 @@
+//! The core timing model: an instruction window with issue-width, ROB,
+//! LQ/SQ, MSHR, dependency and fence constraints driving the cache
+//! hierarchy and DRAM.
+//!
+//! The model is event-driven: `wake` is called whenever something this core
+//! cares about might have changed (an op completed, a timer expired). Each
+//! wake retires finished ops in order, refills the ROB from the op stream,
+//! and issues ready ops — scanning at most `IQ_SCAN` waiting entries, the
+//! analog of the Table 3 50-entry issue queue.
+
+use super::ops::{Op, OpKind};
+use crate::cache::{Access, Hierarchy, StridePrefetcher};
+use crate::config::CoreConfig;
+use crate::mem::{MemController, ReqSource};
+use crate::sim::{Cycle, Event, EventQueue};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+/// Issue-queue scan bound per wake (Table 3: IQ = 50).
+const IQ_SCAN: usize = 50;
+/// Extra latency applied to an atomic RMW after its data arrives
+/// (cacheline locking / fence drain, per [4] Free Atomics discussion).
+const ATOMIC_LOCK_PENALTY: Cycle = 24;
+/// Plain (non-atomic) RMW modify latency after data arrives.
+const RMW_MODIFY_LATENCY: Cycle = 2;
+
+/// Per-core execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    pub retired_instrs: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub rmws: u64,
+    pub spin_instrs: u64,
+    pub finish_time: Cycle,
+}
+
+/// Map from in-flight line address to the (core, stream index) ops waiting
+/// on it — primary misses and MSHR-merged secondaries alike.
+pub type LineWaiters = HashMap<u64, Vec<(usize, usize)>>;
+
+/// A DX100 instruction delivery produced by a completed MMIO store triple.
+#[derive(Clone, Copy, Debug)]
+pub struct MmioDelivery {
+    pub instance: u16,
+    pub seq: u32,
+    pub time: Cycle,
+}
+
+/// Book-keeping the system keeps for an outstanding core DRAM request.
+#[derive(Clone, Copy, Debug)]
+pub struct PendingMem {
+    pub core: usize,
+    pub stream_idx: usize,
+}
+
+/// Mutable environment handed to the core on each wake.
+pub struct CoreEnv<'a> {
+    pub hier: &'a mut Hierarchy,
+    pub mem: &'a mut MemController,
+    pub queue: &'a mut EventQueue,
+    pub waiters: &'a mut LineWaiters,
+    pub prefetcher: &'a mut StridePrefetcher,
+    /// Ready-bit board of each DX100 instance: `flags[instance][flag]`.
+    pub flags: &'a [Vec<bool>],
+    /// Completed MMIO instruction deliveries (collected by the system).
+    pub mmio_out: &'a mut Vec<MmioDelivery>,
+    /// Effective scratchpad read latency (cacheable + stride-prefetched).
+    pub spd_latency: Cycle,
+    /// Uncacheable MMIO store latency.
+    pub mmio_latency: Cycle,
+    /// DMP indirect-prefetcher hints for this core (op idx -> prefetch
+    /// address); `None` when the system has no indirect prefetcher.
+    pub dmp_hints: Option<&'a crate::prefetch::DmpHints>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EState {
+    Waiting,
+    Issued,
+    Done,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RobEntry {
+    stream_idx: usize,
+    op: Op,
+    state: EState,
+}
+
+/// One modeled core.
+pub struct CoreModel {
+    pub id: usize,
+    cfg: CoreConfig,
+    next_op: usize,
+    rob: VecDeque<RobEntry>,
+    rob_instrs: u32,
+    loads_inflight: u32,
+    stores_inflight: u32,
+    fence_active: bool,
+    issue_time: Cycle,
+    slots_left: u32,
+    pending_done: BinaryHeap<Reverse<(Cycle, usize)>>,
+    pub stats: CoreStats,
+    pub done: bool,
+    /// Set when an access bounced off a full MSHR; the system re-wakes
+    /// blocked cores on every completion.
+    pub blocked: bool,
+    spin_interval: Cycle,
+    spin_instrs_per_poll: u16,
+    /// Earliest pending self-scheduled `CoreWake` (dedup guard).
+    next_wake_at: Cycle,
+}
+
+impl CoreModel {
+    pub fn new(id: usize, cfg: CoreConfig) -> Self {
+        CoreModel {
+            id,
+            cfg,
+            next_op: 0,
+            rob: VecDeque::new(),
+            rob_instrs: 0,
+            loads_inflight: 0,
+            stores_inflight: 0,
+            fence_active: false,
+            issue_time: 0,
+            slots_left: 0,
+            pending_done: BinaryHeap::new(),
+            stats: CoreStats::default(),
+            done: false,
+            blocked: false,
+            spin_interval: 60,
+            spin_instrs_per_poll: 4,
+            next_wake_at: Cycle::MAX,
+        }
+    }
+
+    /// Dedup guard for self-scheduled wakes.
+    fn request_wake(&mut self, t: Cycle) -> bool {
+        if t < self.next_wake_at {
+            self.next_wake_at = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Allocate issue bandwidth for `instrs` instructions at or after `t`;
+    /// returns the cycle the op issues.
+    fn alloc_issue(&mut self, t: Cycle, instrs: u16) -> Cycle {
+        if self.issue_time < t {
+            self.issue_time = t;
+            self.slots_left = self.cfg.issue_width;
+        }
+        let at = self.issue_time;
+        let mut need = instrs as u32;
+        while need >= self.slots_left {
+            need -= self.slots_left;
+            self.issue_time += 1;
+            self.slots_left = self.cfg.issue_width;
+        }
+        self.slots_left -= need;
+        at
+    }
+
+    /// Mark a memory op complete (called on DRAM return / merged-line fill).
+    /// Returns the time the op's result is architecturally ready (RMW adds
+    /// modify / lock latency); the caller schedules a `CoreWake` then.
+    pub fn complete_mem(&mut self, stream_idx: usize, t: Cycle) -> Cycle {
+        let penalty = self
+            .rob_entry(stream_idx)
+            .map(|e| match e.op.kind {
+                OpKind::Rmw { atomic: true, .. } => ATOMIC_LOCK_PENALTY + RMW_MODIFY_LATENCY,
+                OpKind::Rmw { atomic: false, .. } => RMW_MODIFY_LATENCY,
+                _ => 0,
+            })
+            .unwrap_or(0);
+        let done_at = t + penalty;
+        self.pending_done.push(Reverse((done_at, stream_idx)));
+        done_at
+    }
+
+    fn rob_entry(&self, stream_idx: usize) -> Option<&RobEntry> {
+        let front = self.rob.front()?.stream_idx;
+        if stream_idx < front {
+            return None;
+        }
+        self.rob.get(stream_idx - front)
+    }
+
+    fn dep_satisfied(&self, e: &RobEntry) -> bool {
+        if e.op.dep == 0 {
+            return true;
+        }
+        let target = e.stream_idx as u64 - e.op.dep as u64;
+        let front = match self.rob.front() {
+            Some(f) => f.stream_idx as u64,
+            None => return true,
+        };
+        if target < front {
+            return true; // already retired
+        }
+        matches!(
+            self.rob[(target - front) as usize].state,
+            EState::Done
+        )
+    }
+
+    /// Main state machine. Call on every `CoreWake(self.id)` event.
+    pub fn wake(&mut self, t: Cycle, ops: &[Op], env: &mut CoreEnv) {
+        self.blocked = false;
+        if self.next_wake_at <= t {
+            self.next_wake_at = Cycle::MAX;
+        }
+        // 1. Apply matured completions.
+        while let Some(&Reverse((when, idx))) = self.pending_done.peek() {
+            if when > t {
+                break;
+            }
+            self.pending_done.pop();
+            if let Some(front) = self.rob.front().map(|f| f.stream_idx) {
+                if idx >= front {
+                    let e = &mut self.rob[idx - front];
+                    debug_assert_ne!(e.state, EState::Waiting, "completing unissued op");
+                    e.state = EState::Done;
+                }
+            }
+        }
+        // 2. In-order retire.
+        while let Some(front) = self.rob.front() {
+            if front.state != EState::Done {
+                break;
+            }
+            let e = self.rob.pop_front().unwrap();
+            self.rob_instrs -= e.op.instrs as u32;
+            self.stats.retired_instrs += e.op.instrs as u64;
+            if e.op.is_load() {
+                self.loads_inflight -= 1;
+            }
+            if e.op.is_store() {
+                self.stores_inflight -= 1;
+            }
+            if matches!(e.op.kind, OpKind::Rmw { atomic: true, .. }) {
+                self.fence_active = false;
+            }
+        }
+        // 3. Refill ROB.
+        while self.next_op < ops.len() {
+            let op = ops[self.next_op];
+            if self.rob_instrs + op.instrs as u32 > self.cfg.rob && !self.rob.is_empty() {
+                break;
+            }
+            self.rob.push_back(RobEntry {
+                stream_idx: self.next_op,
+                op,
+                state: EState::Waiting,
+            });
+            self.rob_instrs += op.instrs as u32;
+            self.next_op += 1;
+        }
+        // 4. Issue ready ops (bounded scan).
+        let mut scanned = 0usize;
+        for i in 0..self.rob.len() {
+            if scanned >= IQ_SCAN {
+                break;
+            }
+            if self.rob[i].state != EState::Waiting {
+                continue;
+            }
+            scanned += 1;
+            let e = self.rob[i];
+            if !self.dep_satisfied(&e) {
+                continue;
+            }
+            // Structural constraints.
+            if e.op.is_mem() && self.fence_active {
+                continue;
+            }
+            if e.op.is_load() && self.loads_inflight >= self.cfg.lq {
+                continue;
+            }
+            if e.op.is_store() && self.stores_inflight >= self.cfg.sq {
+                continue;
+            }
+            if let OpKind::Rmw { atomic: true, .. } = e.op.kind {
+                // Fence semantics: issue only from the ROB head (all older
+                // ops retired); `fence_active` then blocks younger memory
+                // ops until the atomic completes. Younger loads that issued
+                // before the atomic reached the head are allowed to drain
+                // (they would be replayed in real hardware).
+                if i != 0 {
+                    continue;
+                }
+            }
+            match self.try_issue(i, t, env) {
+                IssueResult::Issued => {}
+                IssueResult::Stalled => {}
+                IssueResult::Blocked => {
+                    self.blocked = true;
+                }
+            }
+        }
+        // 5. Done check.
+        if self.next_op >= ops.len() && self.rob.is_empty() && !self.done {
+            self.done = true;
+            self.stats.finish_time = t;
+        }
+        // 6. Next self-wake for known-future completions.
+        if let Some(&Reverse((when, _))) = self.pending_done.peek() {
+            let when = when.max(t);
+            if self.request_wake(when) {
+                env.queue.push(when, Event::CoreWake(self.id));
+            }
+        }
+    }
+
+    fn try_issue(&mut self, i: usize, t: Cycle, env: &mut CoreEnv) -> IssueResult {
+        let e = self.rob[i];
+        let idx = e.stream_idx;
+        match e.op.kind {
+            OpKind::Compute { cycles } => {
+                let at = self.alloc_issue(t, e.op.instrs);
+                self.rob[i].state = EState::Issued;
+                self.pending_done.push(Reverse((at + cycles as Cycle, idx)));
+                IssueResult::Issued
+            }
+            OpKind::SpdLoad => {
+                let at = self.alloc_issue(t, e.op.instrs);
+                self.rob[i].state = EState::Issued;
+                self.loads_inflight += 1;
+                self.stats.loads += 1;
+                self.pending_done.push(Reverse((at + env.spd_latency, idx)));
+                IssueResult::Issued
+            }
+            OpKind::MmioStore { instance, seq } => {
+                let at = self.alloc_issue(t, e.op.instrs);
+                self.rob[i].state = EState::Issued;
+                self.stores_inflight += 1;
+                self.stats.stores += 1;
+                let done = at + env.mmio_latency;
+                env.mmio_out.push(MmioDelivery {
+                    instance,
+                    seq,
+                    time: done,
+                });
+                self.pending_done.push(Reverse((done, idx)));
+                IssueResult::Issued
+            }
+            OpKind::WaitFlag { instance, flag } => {
+                if env.flags[instance as usize][flag as usize] {
+                    let at = self.alloc_issue(t, e.op.instrs);
+                    self.rob[i].state = EState::Issued;
+                    self.pending_done.push(Reverse((at + 1, idx)));
+                    IssueResult::Issued
+                } else {
+                    // Spin: burn poll instructions and retry later.
+                    self.stats.spin_instrs += self.spin_instrs_per_poll as u64;
+                    let when = t + self.spin_interval;
+                    if self.request_wake(when) {
+                        env.queue.push(when, Event::CoreWake(self.id));
+                    }
+                    IssueResult::Stalled
+                }
+            }
+            OpKind::Load { addr, stream } | OpKind::Store { addr, stream } => {
+                let is_store = matches!(e.op.kind, OpKind::Store { .. });
+                self.issue_mem(i, t, addr, stream, is_store, false, env)
+            }
+            OpKind::Rmw { addr, atomic } => self.issue_mem(i, t, addr, 0, true, atomic, env),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn issue_mem(
+        &mut self,
+        i: usize,
+        t: Cycle,
+        addr: u64,
+        stream: u32,
+        is_write: bool,
+        is_rmw_like: bool,
+        env: &mut CoreEnv,
+    ) -> IssueResult {
+        let e = self.rob[i];
+        let idx = e.stream_idx;
+        let access = env.hier.access(self.id, addr, t, is_write);
+        match access {
+            Access::Blocked => IssueResult::Blocked,
+            Access::Hit { latency, .. } => {
+                let at = self.alloc_issue(t, e.op.instrs);
+                self.mark_issued_mem(i, is_write, is_rmw_like);
+                let extra = if is_rmw_like {
+                    if matches!(e.op.kind, OpKind::Rmw { atomic: true, .. }) {
+                        ATOMIC_LOCK_PENALTY + RMW_MODIFY_LATENCY
+                    } else {
+                        RMW_MODIFY_LATENCY
+                    }
+                } else {
+                    0
+                };
+                self.pending_done.push(Reverse((at + latency + extra, idx)));
+                self.observe_prefetch(addr, stream, t, env);
+                self.fire_dmp_hint(idx, t, env);
+                IssueResult::Issued
+            }
+            Access::MergedMiss { line } => {
+                let _ = self.alloc_issue(t, e.op.instrs);
+                self.mark_issued_mem(i, is_write, is_rmw_like);
+                env.waiters.entry(line).or_default().push((self.id, idx));
+                self.observe_prefetch(addr, stream, t, env);
+                self.fire_dmp_hint(idx, t, env);
+                IssueResult::Issued
+            }
+            Access::Miss {
+                line,
+                lookup_latency,
+            } => {
+                let at = self.alloc_issue(t, e.op.instrs);
+                self.mark_issued_mem(i, is_write, is_rmw_like);
+                let start = at + lookup_latency;
+                env.mem.enqueue(
+                    start,
+                    addr,
+                    false, // fills are reads; dirty writeback handled on eviction
+                    ReqSource::Core {
+                        core: self.id,
+                        op: idx as u64,
+                    },
+                );
+                let ch = env.mem.channel_of(addr);
+                if env.mem.sched_request(ch, start) {
+                    env.queue.push(start, Event::ChannelSched(ch));
+                }
+                env.waiters.entry(line).or_default().push((self.id, idx));
+                self.observe_prefetch(addr, stream, t, env);
+                self.fire_dmp_hint(idx, t, env);
+                IssueResult::Issued
+            }
+        }
+    }
+
+    /// Fire the DMP indirect prefetch attached to op `idx`, if any: the
+    /// predicted `A[B[i+d]]` line goes through the L2/LLC prefetch path.
+    fn fire_dmp_hint(&mut self, idx: usize, t: Cycle, env: &mut CoreEnv) {
+        let Some(hints) = env.dmp_hints else { return };
+        let Some(&addr) = hints.get(&idx) else { return };
+        let line = addr >> 6;
+        if env.hier.llc.contains(line) || env.hier.l2[self.id].contains(line) {
+            return;
+        }
+        if !env.hier.reserve_prefetch(self.id, line) {
+            return;
+        }
+        env.mem
+            .enqueue(t, addr, false, ReqSource::Prefetch { core: self.id });
+        let ch = env.mem.channel_of(addr);
+        if env.mem.sched_request(ch, t) {
+            env.queue.push(t, Event::ChannelSched(ch));
+        }
+    }
+
+    fn mark_issued_mem(&mut self, i: usize, is_write: bool, is_rmw_like: bool) {
+        self.rob[i].state = EState::Issued;
+        let op = self.rob[i].op;
+        if op.is_load() {
+            self.loads_inflight += 1;
+            self.stats.loads += 1;
+        }
+        if op.is_store() {
+            self.stores_inflight += 1;
+            if !is_rmw_like {
+                self.stats.stores += 1;
+            }
+        }
+        if is_rmw_like && is_write {
+            self.stats.rmws += 1;
+        }
+        if let OpKind::Rmw { atomic: true, .. } = op.kind {
+            self.fence_active = true;
+        }
+    }
+
+    fn observe_prefetch(&mut self, addr: u64, stream: u32, t: Cycle, env: &mut CoreEnv) {
+        if stream == 0 {
+            return;
+        }
+        let key = ((self.id as u64) << 32) | stream as u64;
+        let lines = env.prefetcher.observe(key, addr >> 6);
+        for line in lines {
+            let pf_addr = line << 6;
+            if env.hier.llc.contains(line) || env.hier.l2[self.id].contains(line) {
+                continue;
+            }
+            if !env.hier.reserve_prefetch(self.id, line) {
+                continue;
+            }
+            env.mem.enqueue(
+                t,
+                pf_addr,
+                false,
+                ReqSource::Prefetch { core: self.id },
+            );
+            let ch = env.mem.channel_of(pf_addr);
+            if env.mem.sched_request(ch, t) {
+                env.queue.push(t, Event::ChannelSched(ch));
+            }
+        }
+    }
+
+    /// Outstanding memory ops (diagnostics).
+    pub fn inflight(&self) -> (u32, u32) {
+        (self.loads_inflight, self.stores_inflight)
+    }
+
+    pub fn rob_len(&self) -> usize {
+        self.rob.len()
+    }
+}
+
+enum IssueResult {
+    Issued,
+    Stalled,
+    Blocked,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::core::ops::OpStream;
+
+    /// Minimal single-core harness driving one CoreModel to completion.
+    struct Harness {
+        core: CoreModel,
+        hier: Hierarchy,
+        mem: MemController,
+        queue: EventQueue,
+        waiters: LineWaiters,
+        prefetcher: StridePrefetcher,
+        flags: Vec<Vec<bool>>,
+        mmio: Vec<MmioDelivery>,
+        ops: Vec<Op>,
+        pendings: Vec<(u64, u64, Cycle, ReqSource)>,
+    }
+
+    impl Harness {
+        fn new(ops: OpStream) -> Self {
+            let cfg = SystemConfig::table3();
+            Harness {
+                core: CoreModel::new(0, cfg.core.clone()),
+                hier: Hierarchy::new(&cfg),
+                mem: MemController::new(cfg.dram.clone()),
+                queue: EventQueue::new(),
+                waiters: LineWaiters::new(),
+                prefetcher: StridePrefetcher::new(cfg.l1d.prefetch_degree),
+                flags: vec![vec![false; 64]],
+                mmio: Vec::new(),
+                ops: ops.ops,
+                pendings: Vec::new(),
+            }
+        }
+
+        fn run(&mut self) -> Cycle {
+            self.queue.push(0, Event::CoreWake(0));
+            let mut t = 0;
+            let mut guard = 0u64;
+            while let Some(ev) = self.queue.pop() {
+                guard += 1;
+                assert!(guard < 10_000_000, "harness livelock");
+                t = ev.time;
+                match ev.event {
+                    Event::CoreWake(_) => {
+                        let mut env = CoreEnv {
+                            hier: &mut self.hier,
+                            mem: &mut self.mem,
+                            queue: &mut self.queue,
+                            waiters: &mut self.waiters,
+                            prefetcher: &mut self.prefetcher,
+                            flags: &self.flags,
+                            mmio_out: &mut self.mmio,
+                            spd_latency: 8,
+                            mmio_latency: 40,
+                            dmp_hints: None,
+                        };
+                        self.core.wake(t, &self.ops, &mut env);
+                        if self.core.done {
+                            break;
+                        }
+                    }
+                    Event::ChannelSched(ch) => {
+                        let (comps, wake) = self.mem.schedule(ch, t);
+                        for c in comps {
+                            self.queue.push(c.time, Event::DramDone(c.id));
+                            // Stash line completion via waiters on DramDone.
+                            // Encode addr in a map: we reuse the completion
+                            // records directly here.
+                            self.pendings.push((c.id, c.addr, c.time, c.source));
+                        }
+                        if let Some(w) = wake {
+                            self.queue.push(w, Event::ChannelSched(ch));
+                        }
+                    }
+                    Event::DramDone(id) => {
+                        let pos = self
+                            .pendings
+                            .iter()
+                            .position(|p| p.0 == id)
+                            .expect("unknown completion");
+                        let (_, addr, _, source) = self.pendings.swap_remove(pos);
+                        let line = addr >> 6;
+                        match source {
+                            ReqSource::Core { core, .. } => {
+                                self.hier.complete_fill(core, line, t);
+                                if let Some(ws) = self.waiters.remove(&line) {
+                                    for (c, sidx) in ws {
+                                        assert_eq!(c, 0);
+                                        let ready = self.core.complete_mem(sidx, t);
+                                        self.queue.push(ready, Event::CoreWake(0));
+                                    }
+                                }
+                            }
+                            ReqSource::Prefetch { core } => {
+                                self.hier.complete_prefetch_fill(core, line, t);
+                            }
+                            _ => unreachable!(),
+                        }
+                        if self.core.blocked {
+                            self.queue.push(t, Event::CoreWake(0));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            t
+        }
+    }
+
+    // Work around not declaring the field above.
+    impl Harness {
+        fn with_pendings(ops: OpStream) -> Self {
+            Self::new(ops)
+        }
+    }
+
+    fn stream_of(ops: Vec<Op>) -> OpStream {
+        OpStream { ops }
+    }
+
+    #[test]
+    fn compute_only_bounded_by_issue_width() {
+        // 1000 compute ops of 8 instrs each on an 8-wide core: ~1000 cycles.
+        let ops = (0..1000).map(|_| Op::compute(1, 8)).collect();
+        let mut h = Harness::with_pendings(stream_of(ops));
+        let t = h.run();
+        assert!(h.core.done);
+        assert_eq!(h.core.stats.retired_instrs, 8000);
+        assert!((900..2200).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn dependent_loads_serialize() {
+        // Chain of 64 dependent cache-missing loads: each waits for the
+        // previous, so total time ~ 64 * memory latency.
+        let mut s = OpStream::new();
+        let mut prev: Option<usize> = None;
+        for i in 0..64u64 {
+            let op = Op::load(i * 1024 * 1024, 0, 1);
+            let idx = match prev {
+                Some(p) => s.push_dep(op, p),
+                None => s.push(op),
+            };
+            prev = Some(idx);
+        }
+        let mut h = Harness::with_pendings(s);
+        let t = h.run();
+        assert!(h.core.done);
+        // Single miss ~ 58 (lookup) + ~170 (DRAM) cycles; chain of 64 must
+        // exceed 64 * 150.
+        assert!(t > 64 * 150, "t={t}");
+    }
+
+    #[test]
+    fn independent_loads_overlap() {
+        // 64 independent missing loads spread across banks: MLP-limited,
+        // far faster than the same loads chained by dependencies.
+        let ops = (0..64u64).map(|i| Op::load(i * 64, 0, 1)).collect();
+        let mut h = Harness::with_pendings(stream_of(ops));
+        let t_indep = h.run();
+
+        let mut s = OpStream::new();
+        let mut prev: Option<usize> = None;
+        for i in 0..64u64 {
+            let op = Op::load(i * 64, 0, 1);
+            let idx = match prev {
+                Some(p) => s.push_dep(op, p),
+                None => s.push(op),
+            };
+            prev = Some(idx);
+        }
+        let mut h2 = Harness::with_pendings(s);
+        let t_dep = h2.run();
+        assert!(
+            t_dep as f64 > 3.0 * t_indep as f64,
+            "dep {t_dep} vs indep {t_indep}"
+        );
+    }
+
+    #[test]
+    fn atomic_rmw_serializes() {
+        let atomics: Vec<Op> = (0..200).map(|i| Op::rmw(i * 64, true, 3)).collect();
+        let plain: Vec<Op> = (0..200).map(|i| Op::rmw(i * 64, false, 3)).collect();
+        let mut ha = Harness::with_pendings(stream_of(atomics));
+        let ta = ha.run();
+        let mut hp = Harness::with_pendings(stream_of(plain));
+        let tp = hp.run();
+        assert!(
+            ta as f64 > 2.5 * tp as f64,
+            "atomic {ta} vs plain {tp} (expected >=2.5x)"
+        );
+    }
+
+    #[test]
+    fn wait_flag_spins_until_set() {
+        let mut s = OpStream::new();
+        s.push(Op {
+            kind: OpKind::WaitFlag {
+                instance: 0,
+                flag: 3,
+            },
+            dep: 0,
+            instrs: 2,
+        });
+        let mut h = Harness::with_pendings(s);
+        // Set the flag after construction so the first poll spins.
+        h.flags[0][3] = false;
+        h.queue.push(0, Event::CoreWake(0));
+        // Manually run a few steps, then set the flag.
+        let mut t = 0;
+        let mut set_done = false;
+        let mut guard = 0;
+        while let Some(ev) = h.queue.pop() {
+            guard += 1;
+            assert!(guard < 100_000);
+            t = ev.time;
+            if t > 500 && !set_done {
+                h.flags[0][3] = true;
+                set_done = true;
+            }
+            if let Event::CoreWake(_) = ev.event {
+                let mut env = CoreEnv {
+                    hier: &mut h.hier,
+                    mem: &mut h.mem,
+                    queue: &mut h.queue,
+                    waiters: &mut h.waiters,
+                    prefetcher: &mut h.prefetcher,
+                    flags: &h.flags,
+                    mmio_out: &mut h.mmio,
+                    spd_latency: 8,
+                    mmio_latency: 40,
+                    dmp_hints: None,
+                };
+                h.core.wake(t, &h.ops, &mut env);
+                if h.core.done {
+                    break;
+                }
+            }
+        }
+        assert!(h.core.done);
+        assert!(h.core.stats.spin_instrs > 0, "should have spun");
+        assert!(t > 500);
+    }
+
+    #[test]
+    fn mmio_store_delivers_instruction() {
+        let mut s = OpStream::new();
+        for k in 0..3 {
+            s.push(Op {
+                kind: OpKind::MmioStore {
+                    instance: 0,
+                    seq: k / 3,
+                },
+                dep: 0,
+                instrs: 1,
+            });
+        }
+        let mut h = Harness::with_pendings(s);
+        h.run();
+        assert_eq!(h.mmio.len(), 3);
+        assert!(h.mmio.iter().all(|d| d.instance == 0 && d.seq == 0));
+        assert!(h.mmio[0].time >= 40);
+    }
+
+    #[test]
+    fn streaming_loads_trigger_prefetcher() {
+        // Sequential loads over one array with a stream tag: after warmup
+        // the prefetcher should have issued work.
+        let ops = (0..512u64).map(|i| Op::load(i * 64, 7, 1)).collect();
+        let mut h = Harness::with_pendings(stream_of(ops));
+        h.run();
+        assert!(h.prefetcher.issued > 100, "issued={}", h.prefetcher.issued);
+    }
+}

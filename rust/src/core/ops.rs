@@ -1,0 +1,184 @@
+//! Abstract operations executed by the core model.
+//!
+//! Each [`Op`] models one *macro* operation (a load, a store, an RMW, a
+//! block of arithmetic, a DX100 MMIO store, a scratchpad read, or a
+//! synchronization wait) and carries the number of dynamic instructions it
+//! accounts for — address calculation included — so the model reproduces
+//! both timing and the paper's Figure 11a instruction counts.
+
+/// The kind of one abstract core operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OpKind {
+    /// Demand load from `addr`; `stream` tags the access stream for the
+    /// stride prefetcher (stand-in for the load PC).
+    Load { addr: u64, stream: u32 },
+    /// Store to `addr` (write-allocate).
+    Store { addr: u64, stream: u32 },
+    /// Read-modify-write on `addr`. When `atomic`, the op has fence
+    /// semantics: it issues only at ROB head and blocks younger memory ops
+    /// until done, plus a cacheline-lock penalty.
+    Rmw { addr: u64, atomic: bool },
+    /// Arithmetic block taking `cycles` of latency (dependent work).
+    Compute { cycles: u32 },
+    /// Streaming read of DX100 scratchpad data (cacheable, prefetched;
+    /// fixed effective latency, no DRAM traffic).
+    SpdLoad,
+    /// Memory-mapped store carrying 1/3 of a DX100 instruction; on
+    /// completion of the third store, instruction `seq` is delivered to
+    /// DX100 instance `instance`.
+    MmioStore { instance: u16, seq: u32 },
+    /// Spin-wait until DX100 `instance` sets ready flag `flag` (tile ready
+    /// bit). Models the library's `wait` API.
+    WaitFlag { instance: u16, flag: u32 },
+}
+
+/// One abstract operation plus its dependency and instruction weight.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    /// Data dependency: this op may issue only after the op `dep` positions
+    /// *earlier in the same core's stream* has completed. 0 = none.
+    pub dep: u32,
+    /// Dynamic instructions this op accounts for (>=1 except pure markers).
+    pub instrs: u16,
+}
+
+impl Op {
+    pub fn load(addr: u64, stream: u32, instrs: u16) -> Self {
+        Op {
+            kind: OpKind::Load { addr, stream },
+            dep: 0,
+            instrs,
+        }
+    }
+
+    pub fn store(addr: u64, stream: u32, instrs: u16) -> Self {
+        Op {
+            kind: OpKind::Store { addr, stream },
+            dep: 0,
+            instrs,
+        }
+    }
+
+    pub fn rmw(addr: u64, atomic: bool, instrs: u16) -> Self {
+        Op {
+            kind: OpKind::Rmw { addr, atomic },
+            dep: 0,
+            instrs,
+        }
+    }
+
+    pub fn compute(cycles: u32, instrs: u16) -> Self {
+        Op {
+            kind: OpKind::Compute { cycles },
+            dep: 0,
+            instrs,
+        }
+    }
+
+    pub fn with_dep(mut self, dep: u32) -> Self {
+        self.dep = dep;
+        self
+    }
+
+    pub fn is_load(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Load { .. } | OpKind::Rmw { .. } | OpKind::SpdLoad
+        )
+    }
+
+    pub fn is_store(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Store { .. } | OpKind::Rmw { .. } | OpKind::MmioStore { .. }
+        )
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Load { .. } | OpKind::Store { .. } | OpKind::Rmw { .. }
+        )
+    }
+}
+
+/// A complete per-core operation stream.
+#[derive(Clone, Debug, Default)]
+pub struct OpStream {
+    pub ops: Vec<Op>,
+}
+
+impl OpStream {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: Op) -> usize {
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    /// Push an op depending on the op at absolute index `on` (must be
+    /// earlier). Convenience over relative encoding.
+    pub fn push_dep(&mut self, mut op: Op, on: usize) -> usize {
+        let here = self.ops.len();
+        assert!(on < here, "dependency must be earlier in the stream");
+        op.dep = (here - on) as u32;
+        self.push(op)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total dynamic instruction count of the stream.
+    pub fn total_instrs(&self) -> u64 {
+        self.ops.iter().map(|o| o.instrs as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dep_encoding_is_relative() {
+        let mut s = OpStream::new();
+        let a = s.push(Op::load(0x100, 1, 2));
+        let b = s.push_dep(Op::load(0x200, 2, 3), a);
+        assert_eq!(s.ops[b].dep, 1);
+        let _c = s.push(Op::compute(1, 1));
+        let d = s.push_dep(Op::compute(5, 2), a);
+        assert_eq!(s.ops[d].dep, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_dep_rejected() {
+        let mut s = OpStream::new();
+        s.push_dep(Op::compute(1, 1), 0); // depends on itself
+    }
+
+    #[test]
+    fn instr_accounting() {
+        let mut s = OpStream::new();
+        s.push(Op::load(0, 0, 2));
+        s.push(Op::compute(1, 3));
+        s.push(Op::store(64, 0, 1));
+        assert_eq!(s.total_instrs(), 6);
+    }
+
+    #[test]
+    fn kind_classification() {
+        assert!(Op::load(0, 0, 1).is_load());
+        assert!(Op::rmw(0, true, 1).is_load());
+        assert!(Op::rmw(0, true, 1).is_store());
+        assert!(Op::store(0, 0, 1).is_store());
+        assert!(!Op::compute(1, 1).is_mem());
+    }
+}

@@ -1,0 +1,173 @@
+//! Area and power model (paper §6.5, Table 4).
+//!
+//! A first-order analytical model calibrated to the paper's 28 nm synthesis
+//! results, with the Stillmaker–Baas scaling equations [118] used to project
+//! to 14 nm. Components scale with their dominant structure: the Scratchpad
+//! with SRAM bits, the Indirect unit with Row-Table BCAM+SRAM bits, the ALU
+//! with lane count, etc.
+
+use crate::config::Dx100Config;
+
+/// Area (mm²) and power (mW) of one component at 28 nm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComponentCost {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+}
+
+/// Full per-component breakdown (Table 4 rows).
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    pub range_fuser: ComponentCost,
+    pub alu: ComponentCost,
+    pub stream: ComponentCost,
+    pub indirect: ComponentCost,
+    pub controller: ComponentCost,
+    pub interface: ComponentCost,
+    pub coherency: ComponentCost,
+    pub regfile: ComponentCost,
+    pub scratchpad: ComponentCost,
+}
+
+/// Paper's Table 4 reference design parameters.
+const REF_SPD_BYTES: f64 = 2.0 * 1024.0 * 1024.0;
+const REF_ALU_LANES: f64 = 16.0;
+const REF_ROWTAB_ENTRIES: f64 = 32.0 * 64.0 * 8.0; // 32 slices x 64 rows x 8 cols
+const REF_REQTAB: f64 = 128.0;
+const REF_REGS: f64 = 32.0;
+
+/// Area scaling factor 28 nm -> 14 nm (Stillmaker & Baas, eq. for area):
+/// roughly (14/28)^2 with layout inefficiency; the paper lands DX100 at
+/// ~1.5 mm² in 14 nm from 4.061 mm² at 28 nm => factor ~0.37.
+pub const SCALE_28_TO_14_AREA: f64 = 0.37;
+
+impl AreaReport {
+    /// Build the breakdown for a given configuration by scaling the paper's
+    /// synthesized reference numbers with the dominant structure size.
+    pub fn for_config(cfg: &Dx100Config) -> Self {
+        let spd_scale = cfg.scratchpad_bytes() as f64 / REF_SPD_BYTES;
+        let alu_scale = cfg.alu_lanes as f64 / REF_ALU_LANES;
+        let banks = 32.0; // slices track system banks; Table 3 system
+        let rowtab_scale =
+            (banks * cfg.rowtab_rows as f64 * cfg.rowtab_cols as f64) / REF_ROWTAB_ENTRIES;
+        let reqtab_scale = cfg.request_table as f64 / REF_REQTAB;
+        let reg_scale = cfg.registers as f64 / REF_REGS;
+        AreaReport {
+            range_fuser: ComponentCost {
+                area_mm2: 0.001,
+                power_mw: 0.26,
+            },
+            alu: ComponentCost {
+                area_mm2: 0.095 * alu_scale,
+                power_mw: 74.83 * alu_scale,
+            },
+            stream: ComponentCost {
+                area_mm2: 0.012 * reqtab_scale,
+                power_mw: 6.03 * reqtab_scale,
+            },
+            indirect: ComponentCost {
+                area_mm2: 0.323 * rowtab_scale,
+                power_mw: 83.70 * rowtab_scale,
+            },
+            controller: ComponentCost {
+                area_mm2: 0.002,
+                power_mw: 0.43,
+            },
+            interface: ComponentCost {
+                area_mm2: 0.045,
+                power_mw: 30.0,
+            },
+            coherency: ComponentCost {
+                area_mm2: 0.010,
+                power_mw: 3.12,
+            },
+            regfile: ComponentCost {
+                area_mm2: 0.005 * reg_scale,
+                power_mw: 1.56 * reg_scale,
+            },
+            scratchpad: ComponentCost {
+                area_mm2: 3.566 * spd_scale,
+                power_mw: 577.03 * spd_scale,
+            },
+        }
+    }
+
+    pub fn components(&self) -> Vec<(&'static str, ComponentCost)> {
+        vec![
+            ("Range Fuser", self.range_fuser),
+            ("ALU", self.alu),
+            ("Stream Access", self.stream),
+            ("Indirect Access", self.indirect),
+            ("Controller", self.controller),
+            ("Interface", self.interface),
+            ("Coherency Agent", self.coherency),
+            ("Register File", self.regfile),
+            ("Scratchpad", self.scratchpad),
+        ]
+    }
+
+    /// Total at 28 nm.
+    pub fn total(&self) -> ComponentCost {
+        let mut area = 0.0;
+        let mut power = 0.0;
+        for (_, c) in self.components() {
+            area += c.area_mm2;
+            power += c.power_mw;
+        }
+        ComponentCost {
+            area_mm2: area,
+            power_mw: power,
+        }
+    }
+
+    /// Total area projected to 14 nm.
+    pub fn total_area_14nm(&self) -> f64 {
+        self.total().area_mm2 * SCALE_28_TO_14_AREA
+    }
+
+    /// Processor overhead: DX100 (14 nm) shared across `cores` Skylake-like
+    /// cores of ~10.1 mm² each (die-shot estimate [125]).
+    pub fn processor_overhead(&self, cores: usize) -> f64 {
+        const SKYLAKE_CORE_MM2_14NM: f64 = 10.1;
+        self.total_area_14nm() / (cores as f64 * SKYLAKE_CORE_MM2_14NM)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn table4_reference_totals() {
+        let r = AreaReport::for_config(&SystemConfig::table3().dx100);
+        let t = r.total();
+        assert!((t.area_mm2 - 4.061).abs() < 0.01, "area {}", t.area_mm2);
+        assert!((t.power_mw - 777.17).abs() < 1.0, "power {}", t.power_mw);
+    }
+
+    #[test]
+    fn scratchpad_dominates() {
+        let r = AreaReport::for_config(&SystemConfig::table3().dx100);
+        let t = r.total();
+        assert!(r.scratchpad.area_mm2 / t.area_mm2 > 0.8);
+    }
+
+    #[test]
+    fn overhead_close_to_paper() {
+        let r = AreaReport::for_config(&SystemConfig::table3().dx100);
+        // Paper: ~1.5 mm² at 14 nm, 3.7% of a 4-core processor.
+        let a14 = r.total_area_14nm();
+        assert!((1.3..1.7).contains(&a14), "14nm area {a14}");
+        let ovh = r.processor_overhead(4);
+        assert!((0.030..0.045).contains(&ovh), "overhead {ovh}");
+    }
+
+    #[test]
+    fn smaller_tile_shrinks_scratchpad() {
+        let mut cfg = SystemConfig::table3().dx100;
+        cfg.tile_elems = 1024; // 32 tiles x 1K x 4B = 128 KB
+        let r = AreaReport::for_config(&cfg);
+        assert!(r.scratchpad.area_mm2 < 0.3);
+    }
+}

@@ -1,0 +1,685 @@
+//! DX100 functional simulator.
+//!
+//! Executes instruction streams with real data semantics over a
+//! [`MemImage`], mirroring the paper's functional simulator used to verify
+//! API correctness before timing simulation (§5). Each executed instruction
+//! additionally returns an [`InstrTrace`] — the address/work trace the
+//! cycle-level timing model consumes, so functional and timing simulation
+//! always agree on what was accessed.
+
+use super::isa::{DType, Instruction, Op, Opcode, NO_TILE};
+use super::mem_image::MemImage;
+use super::scratchpad::Scratchpad;
+use std::fmt;
+
+/// Execution errors (programming-model violations).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    BadTile(u8),
+    BadRegister(u8),
+    IllegalRmwOp(Op),
+    RangeOverflow { produced: usize, capacity: usize },
+    EmptySource(u8),
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::BadTile(t) => write!(f, "invalid tile id {t}"),
+            ExecError::BadRegister(r) => write!(f, "invalid register id {r}"),
+            ExecError::IllegalRmwOp(op) => {
+                write!(f, "IRMW op {op:?} is not associative+commutative")
+            }
+            ExecError::RangeOverflow { produced, capacity } => {
+                write!(f, "range fuser produced {produced} > tile capacity {capacity}")
+            }
+            ExecError::EmptySource(t) => write!(f, "source tile {t} is empty"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Per-instruction work/address trace for the timing model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InstrTrace {
+    /// SLD/SST: cache-line addresses touched, in stream order.
+    Stream {
+        lines: Vec<u64>,
+        is_store: bool,
+        elems: usize,
+    },
+    /// ILD/IST/IRMW: word addresses in tile-iteration order (condition
+    /// already applied — exactly the accesses the hardware performs).
+    Indirect {
+        words: Vec<u64>,
+        is_store: bool,
+        is_rmw: bool,
+        elems: usize,
+    },
+    /// ALUV/ALUS.
+    Alu { elems: usize },
+    /// RNG.
+    Range { in_elems: usize, out_elems: usize },
+}
+
+impl InstrTrace {
+    /// Number of elements of work (for throughput modeling).
+    pub fn elems(&self) -> usize {
+        match self {
+            InstrTrace::Stream { elems, .. } => *elems,
+            InstrTrace::Indirect { elems, .. } => *elems,
+            InstrTrace::Alu { elems } => *elems,
+            InstrTrace::Range { out_elems, .. } => *out_elems,
+        }
+    }
+}
+
+/// Interpret raw bits `a`, `b` under `dtype`, apply `op`, return raw bits.
+/// Comparison ops return 0/1 (as an integer of the same width class).
+pub fn apply_op(dtype: DType, op: Op, a: u64, b: u64) -> u64 {
+    use DType::*;
+    use Op::*;
+    macro_rules! arith {
+        ($ty:ty, $from:expr, $to:expr) => {{
+            let x: $ty = $from(a);
+            let y: $ty = $from(b);
+            match op {
+                Add => $to(x + y),
+                Sub => $to(x - y),
+                Mul => $to(x * y),
+                Min => $to(if x < y { x } else { y }),
+                Max => $to(if x > y { x } else { y }),
+                Lt => (x < y) as u64,
+                Le => (x <= y) as u64,
+                Gt => (x > y) as u64,
+                Ge => (x >= y) as u64,
+                Eq => (x == y) as u64,
+                // Bitwise ops operate on raw bits regardless of dtype.
+                And => a & b,
+                Or => a | b,
+                Xor => a ^ b,
+                Shr => a >> (b & 63),
+                Shl => a << (b & 63),
+            }
+        }};
+    }
+    match dtype {
+        U32 => {
+            let x = a as u32;
+            let y = b as u32;
+            (match op {
+                Add => x.wrapping_add(y) as u64,
+                Sub => x.wrapping_sub(y) as u64,
+                Mul => x.wrapping_mul(y) as u64,
+                Min => x.min(y) as u64,
+                Max => x.max(y) as u64,
+                And => (x & y) as u64,
+                Or => (x | y) as u64,
+                Xor => (x ^ y) as u64,
+                Shr => (x >> (y & 31)) as u64,
+                Shl => (x << (y & 31)) as u64,
+                Lt => (x < y) as u64,
+                Le => (x <= y) as u64,
+                Gt => (x > y) as u64,
+                Ge => (x >= y) as u64,
+                Eq => (x == y) as u64,
+            })
+        }
+        I32 => {
+            let x = a as u32 as i32;
+            let y = b as u32 as i32;
+            (match op {
+                Add => x.wrapping_add(y) as u32 as u64,
+                Sub => x.wrapping_sub(y) as u32 as u64,
+                Mul => x.wrapping_mul(y) as u32 as u64,
+                Min => x.min(y) as u32 as u64,
+                Max => x.max(y) as u32 as u64,
+                And => (x & y) as u32 as u64,
+                Or => (x | y) as u32 as u64,
+                Xor => (x ^ y) as u32 as u64,
+                Shr => (x >> (y & 31)) as u32 as u64,
+                Shl => (x << (y & 31)) as u32 as u64,
+                Lt => (x < y) as u64,
+                Le => (x <= y) as u64,
+                Gt => (x > y) as u64,
+                Ge => (x >= y) as u64,
+                Eq => (x == y) as u64,
+            })
+        }
+        U64 => {
+            let x = a;
+            let y = b;
+            match op {
+                Add => x.wrapping_add(y),
+                Sub => x.wrapping_sub(y),
+                Mul => x.wrapping_mul(y),
+                Min => x.min(y),
+                Max => x.max(y),
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                Shr => x >> (y & 63),
+                Shl => x << (y & 63),
+                Lt => (x < y) as u64,
+                Le => (x <= y) as u64,
+                Gt => (x > y) as u64,
+                Ge => (x >= y) as u64,
+                Eq => (x == y) as u64,
+            }
+        }
+        I64 => {
+            let x = a as i64;
+            let y = b as i64;
+            match op {
+                Add => x.wrapping_add(y) as u64,
+                Sub => x.wrapping_sub(y) as u64,
+                Mul => x.wrapping_mul(y) as u64,
+                Min => x.min(y) as u64,
+                Max => x.max(y) as u64,
+                And => (x & y) as u64,
+                Or => (x | y) as u64,
+                Xor => (x ^ y) as u64,
+                Shr => (x >> (y & 63)) as u64,
+                Shl => ((x as u64) << (y as u64 & 63)),
+                Lt => (x < y) as u64,
+                Le => (x <= y) as u64,
+                Gt => (x > y) as u64,
+                Ge => (x >= y) as u64,
+                Eq => (x == y) as u64,
+            }
+        }
+        F32 => arith!(
+            f32,
+            |r: u64| f32::from_bits(r as u32),
+            |v: f32| v.to_bits() as u64
+        ),
+        F64 => arith!(f64, |r: u64| f64::from_bits(r), |v: f64| v.to_bits()),
+    }
+}
+
+/// The functional accelerator state: scratchpad + register file.
+pub struct Dx100Functional {
+    pub spd: Scratchpad,
+    pub rf: Vec<u64>,
+}
+
+impl Dx100Functional {
+    pub fn new(tiles: usize, tile_elems: usize, registers: usize) -> Self {
+        Dx100Functional {
+            spd: Scratchpad::new(tiles, tile_elems),
+            rf: vec![0; registers],
+        }
+    }
+
+    fn check_tile(&self, id: u8) -> Result<(), ExecError> {
+        if id == NO_TILE || (id as usize) < self.spd.num_tiles() {
+            Ok(())
+        } else {
+            Err(ExecError::BadTile(id))
+        }
+    }
+
+    fn reg(&self, id: u8) -> Result<u64, ExecError> {
+        self.rf
+            .get(id as usize)
+            .copied()
+            .ok_or(ExecError::BadRegister(id))
+    }
+
+    fn cond(&self, tc: u8, i: usize) -> bool {
+        if tc == NO_TILE {
+            return true;
+        }
+        let t = self.spd.tile(tc);
+        i < t.size && t.data[i] != 0
+    }
+
+    /// Execute one instruction; returns its work/address trace.
+    pub fn execute(
+        &mut self,
+        inst: &Instruction,
+        mem: &mut MemImage,
+    ) -> Result<InstrTrace, ExecError> {
+        for t in inst
+            .source_tiles()
+            .into_iter()
+            .chain(inst.dest_tiles().into_iter())
+        {
+            self.check_tile(t)?;
+        }
+        let esize = inst.dtype.size();
+        match inst.opcode {
+            Opcode::Sld => {
+                let start = self.reg(inst.rs1)?;
+                let stride = self.reg(inst.rs2)?;
+                let count = self.reg(inst.rs3)? as usize;
+                let mut lines = Vec::new();
+                let mut last_line = u64::MAX;
+                let mut out = Vec::with_capacity(count);
+                for i in 0..count {
+                    let addr = inst.base + (start + i as u64 * stride) * esize;
+                    if self.cond(inst.tc, i) {
+                        out.push(mem.read_word(addr, esize));
+                        let line = addr >> 6;
+                        if line != last_line {
+                            lines.push(addr & !63);
+                            last_line = line;
+                        }
+                    } else {
+                        out.push(0);
+                    }
+                }
+                self.spd.write_tile(inst.td, &out);
+                Ok(InstrTrace::Stream {
+                    lines,
+                    is_store: false,
+                    elems: count,
+                })
+            }
+            Opcode::Sst => {
+                let start = self.reg(inst.rs1)?;
+                let stride = self.reg(inst.rs2)?;
+                let count = self.reg(inst.rs3)? as usize;
+                let data = self.spd.read_tile(inst.ts1);
+                let mut lines = Vec::new();
+                let mut last_line = u64::MAX;
+                for i in 0..count.min(data.len()) {
+                    if !self.cond(inst.tc, i) {
+                        continue;
+                    }
+                    let addr = inst.base + (start + i as u64 * stride) * esize;
+                    mem.write_word(addr, esize, data[i]);
+                    let line = addr >> 6;
+                    if line != last_line {
+                        lines.push(addr & !63);
+                        last_line = line;
+                    }
+                }
+                Ok(InstrTrace::Stream {
+                    lines,
+                    is_store: true,
+                    elems: count.min(data.len()),
+                })
+            }
+            Opcode::Ild => {
+                let idxs = self.spd.read_tile(inst.ts1);
+                if idxs.is_empty() {
+                    return Err(ExecError::EmptySource(inst.ts1));
+                }
+                let mut words = Vec::with_capacity(idxs.len());
+                let mut out = Vec::with_capacity(idxs.len());
+                for (i, &idx) in idxs.iter().enumerate() {
+                    if self.cond(inst.tc, i) {
+                        let addr = inst.base + idx * esize;
+                        out.push(mem.read_word(addr, esize));
+                        words.push(addr);
+                    } else {
+                        out.push(0);
+                    }
+                }
+                self.spd.write_tile(inst.td, &out);
+                Ok(InstrTrace::Indirect {
+                    words,
+                    is_store: false,
+                    is_rmw: false,
+                    elems: idxs.len(),
+                })
+            }
+            Opcode::Ist => {
+                let idxs = self.spd.read_tile(inst.ts1);
+                let vals = self.value_operand(inst, idxs.len())?;
+                let mut words = Vec::new();
+                for i in 0..idxs.len().min(vals.len()) {
+                    if !self.cond(inst.tc, i) {
+                        continue;
+                    }
+                    let addr = inst.base + idxs[i] * esize;
+                    mem.write_word(addr, esize, vals[i]);
+                    words.push(addr);
+                }
+                Ok(InstrTrace::Indirect {
+                    words,
+                    is_store: true,
+                    is_rmw: false,
+                    elems: idxs.len(),
+                })
+            }
+            Opcode::Irmw => {
+                if !inst.op.rmw_legal() {
+                    return Err(ExecError::IllegalRmwOp(inst.op));
+                }
+                let idxs = self.spd.read_tile(inst.ts1);
+                let vals = self.value_operand(inst, idxs.len())?;
+                let mut words = Vec::new();
+                for i in 0..idxs.len().min(vals.len()) {
+                    if !self.cond(inst.tc, i) {
+                        continue;
+                    }
+                    let addr = inst.base + idxs[i] * esize;
+                    let old = mem.read_word(addr, esize);
+                    let new = apply_op(inst.dtype, inst.op, old, vals[i]);
+                    mem.write_word(addr, esize, new);
+                    words.push(addr);
+                }
+                Ok(InstrTrace::Indirect {
+                    words,
+                    is_store: true,
+                    is_rmw: true,
+                    elems: idxs.len(),
+                })
+            }
+            Opcode::Aluv => {
+                let a = self.spd.read_tile(inst.ts1);
+                let b = self.spd.read_tile(inst.ts2);
+                let n = a.len().min(b.len());
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    out.push(if self.cond(inst.tc, i) {
+                        apply_op(inst.dtype, inst.op, a[i], b[i])
+                    } else {
+                        0
+                    });
+                }
+                self.spd.write_tile(inst.td, &out);
+                Ok(InstrTrace::Alu { elems: n })
+            }
+            Opcode::Alus => {
+                let a = self.spd.read_tile(inst.ts1);
+                let s = self.reg(inst.rs1)?;
+                let mut out = Vec::with_capacity(a.len());
+                for (i, &x) in a.iter().enumerate() {
+                    out.push(if self.cond(inst.tc, i) {
+                        apply_op(inst.dtype, inst.op, x, s)
+                    } else {
+                        0
+                    });
+                }
+                let n = a.len();
+                self.spd.write_tile(inst.td, &out);
+                Ok(InstrTrace::Alu { elems: n })
+            }
+            Opcode::Rng => {
+                let lo = self.spd.read_tile(inst.ts1);
+                let hi = self.spd.read_tile(inst.ts2);
+                let n = lo.len().min(hi.len());
+                let cap = self.spd.tile_elems;
+                let mut outer = Vec::new();
+                let mut inner = Vec::new();
+                for i in 0..n {
+                    if !self.cond(inst.tc, i) {
+                        continue;
+                    }
+                    let mut j = lo[i];
+                    while j < hi[i] {
+                        outer.push(i as u64);
+                        inner.push(j);
+                        j += 1;
+                        if outer.len() > cap {
+                            return Err(ExecError::RangeOverflow {
+                                produced: outer.len(),
+                                capacity: cap,
+                            });
+                        }
+                    }
+                }
+                let out_elems = outer.len();
+                self.spd.write_tile(inst.td, &outer);
+                self.spd.write_tile(inst.td2, &inner);
+                Ok(InstrTrace::Range {
+                    in_elems: n,
+                    out_elems,
+                })
+            }
+        }
+    }
+
+    /// Value operand for IST/IRMW: tile `ts2`, or a broadcast of scalar
+    /// register `rs1` when `ts2 == NO_TILE` (constant stores/updates).
+    fn value_operand(&self, inst: &Instruction, n: usize) -> Result<Vec<u64>, ExecError> {
+        if inst.ts2 == NO_TILE {
+            Ok(vec![self.reg(inst.rs1)?; n])
+        } else {
+            Ok(self.spd.read_tile(inst.ts2))
+        }
+    }
+
+    /// Execute a sequence; returns traces in order.
+    pub fn run(
+        &mut self,
+        insts: &[Instruction],
+        mem: &mut MemImage,
+    ) -> Result<Vec<InstrTrace>, ExecError> {
+        insts.iter().map(|i| self.execute(i, mem)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx() -> (Dx100Functional, MemImage) {
+        (Dx100Functional::new(16, 64, 16), MemImage::new())
+    }
+
+    #[test]
+    fn gather_matches_scalar_loop() {
+        let (mut f, mut mem) = fx();
+        // A[0..32] = i*10 at base 0x10000; B = permutation indices.
+        let a_base = 0x10000u64;
+        for i in 0..32u64 {
+            mem.write_u32(a_base + 4 * i, (i * 10) as u32);
+        }
+        let idxs: Vec<u64> = vec![5, 3, 3, 31, 0, 7];
+        f.spd.write_tile(0, &idxs);
+        let tr = f
+            .execute(&Instruction::ild(DType::U32, a_base, 1, 0, NO_TILE), &mut mem)
+            .unwrap();
+        assert_eq!(f.spd.read_tile(1), vec![50, 30, 30, 310, 0, 70]);
+        match tr {
+            InstrTrace::Indirect { words, elems, .. } => {
+                assert_eq!(elems, 6);
+                assert_eq!(words[0], a_base + 20);
+            }
+            _ => panic!("wrong trace"),
+        }
+    }
+
+    #[test]
+    fn scatter_and_rmw_f32() {
+        let (mut f, mut mem) = fx();
+        let base = 0x20000u64;
+        f.spd.write_tile(0, &[1, 2, 1]); // indices (note duplicate 1)
+        f.spd
+            .write_tile(1, &[2.0f32.to_bits() as u64, 3.0f32.to_bits() as u64, 4.0f32.to_bits() as u64]);
+        // IRMW add: mem[1] += 2; mem[2] += 3; mem[1] += 4 => mem[1] = 6.
+        f.execute(
+            &Instruction::irmw(DType::F32, base, Op::Add, 0, 1, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        assert_eq!(mem.read_f32(base + 4), 6.0);
+        assert_eq!(mem.read_f32(base + 8), 3.0);
+        // IST overwrites.
+        f.execute(&Instruction::ist(DType::F32, base, 0, 1, NO_TILE), &mut mem)
+            .unwrap();
+        assert_eq!(mem.read_f32(base + 4), 4.0); // last write wins
+    }
+
+    #[test]
+    fn conditional_store_skips() {
+        let (mut f, mut mem) = fx();
+        let base = 0x30000u64;
+        f.spd.write_tile(0, &[0, 1, 2]);
+        f.spd.write_tile(1, &[10, 20, 30]);
+        f.spd.write_tile(2, &[1, 0, 1]); // condition
+        f.execute(&Instruction::ist(DType::U32, base, 0, 1, 2), &mut mem)
+            .unwrap();
+        assert_eq!(mem.read_u32(base), 10);
+        assert_eq!(mem.read_u32(base + 4), 0); // skipped
+        assert_eq!(mem.read_u32(base + 8), 30);
+    }
+
+    #[test]
+    fn stream_load_store_roundtrip() {
+        let (mut f, mut mem) = fx();
+        let src = 0x40000u64;
+        let dst = 0x50000u64;
+        for i in 0..16u64 {
+            mem.write_u32(src + 4 * i, (i * i) as u32);
+        }
+        f.rf[1] = 0; // start
+        f.rf[2] = 1; // stride
+        f.rf[3] = 16; // count
+        f.execute(
+            &Instruction::sld(DType::U32, src, 0, 1, 2, 3, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        f.execute(
+            &Instruction::sst(DType::U32, dst, 0, 1, 2, 3, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        for i in 0..16u64 {
+            assert_eq!(mem.read_u32(dst + 4 * i), (i * i) as u32);
+        }
+    }
+
+    #[test]
+    fn alu_chain_hash_join_address_calc() {
+        // f(C[i]) = (C[i] & F) >> G with F = 0xF0, G = 4 (Table 1 PRH).
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[0x12u64, 0x34, 0xFF]);
+        f.rf[0] = 0xF0;
+        f.rf[1] = 4;
+        f.execute(
+            &Instruction::alus(DType::U32, Op::And, 1, 0, 0, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        f.execute(
+            &Instruction::alus(DType::U32, Op::Shr, 2, 1, 1, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        assert_eq!(f.spd.read_tile(2), vec![0x1, 0x3, 0xF]);
+    }
+
+    #[test]
+    fn aluv_compare_produces_condition_tile() {
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[1, 5, 3]);
+        f.spd.write_tile(1, &[2, 2, 3]);
+        f.execute(
+            &Instruction::aluv(DType::U32, Op::Lt, 2, 0, 1, NO_TILE),
+            &mut mem,
+        )
+        .unwrap();
+        assert_eq!(f.spd.read_tile(2), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn range_fuser_flattens() {
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[0, 3, 5]); // lo
+        f.spd.write_tile(1, &[2, 3, 8]); // hi (middle range empty)
+        f.execute(&Instruction::rng(2, 3, 0, 1, NO_TILE), &mut mem)
+            .unwrap();
+        assert_eq!(f.spd.read_tile(2), vec![0, 0, 2, 2, 2]);
+        assert_eq!(f.spd.read_tile(3), vec![0, 1, 5, 6, 7]);
+    }
+
+    #[test]
+    fn range_fuser_conditioned() {
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[0, 10]);
+        f.spd.write_tile(1, &[2, 12]);
+        f.spd.write_tile(4, &[0, 1]); // skip first
+        f.execute(&Instruction::rng(2, 3, 0, 1, 4), &mut mem).unwrap();
+        assert_eq!(f.spd.read_tile(2), vec![1, 1]);
+        assert_eq!(f.spd.read_tile(3), vec![10, 11]);
+    }
+
+    #[test]
+    fn range_overflow_detected() {
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[0]);
+        f.spd.write_tile(1, &[1000]); // 1000 > tile capacity 64
+        let err = f
+            .execute(&Instruction::rng(2, 3, 0, 1, NO_TILE), &mut mem)
+            .unwrap_err();
+        assert!(matches!(err, ExecError::RangeOverflow { .. }));
+    }
+
+    #[test]
+    fn multi_level_indirection() {
+        // A[B[C[i]]]: ILD over C produces B-indices, second ILD gathers A.
+        let (mut f, mut mem) = fx();
+        let b_base = 0x1000u64;
+        let a_base = 0x2000u64;
+        for i in 0..8u64 {
+            mem.write_u32(b_base + 4 * i, (7 - i) as u32); // B[i] = 7-i
+            mem.write_u32(a_base + 4 * i, (100 + i) as u32); // A[i] = 100+i
+        }
+        f.spd.write_tile(0, &[0, 3, 5]); // C values
+        f.execute(&Instruction::ild(DType::U32, b_base, 1, 0, NO_TILE), &mut mem)
+            .unwrap();
+        f.execute(&Instruction::ild(DType::U32, a_base, 2, 1, NO_TILE), &mut mem)
+            .unwrap();
+        // A[B[0]]=A[7]=107, A[B[3]]=A[4]=104, A[B[5]]=A[2]=102.
+        assert_eq!(f.spd.read_tile(2), vec![107, 104, 102]);
+    }
+
+    #[test]
+    fn f64_ops() {
+        let (mut f, _mem) = fx();
+        let a = 2.5f64.to_bits();
+        let b = 4.0f64.to_bits();
+        assert_eq!(apply_op(DType::F64, Op::Add, a, b), 6.5f64.to_bits());
+        assert_eq!(apply_op(DType::F64, Op::Max, a, b), 4.0f64.to_bits());
+        assert_eq!(apply_op(DType::F64, Op::Lt, a, b), 1);
+        drop(f);
+    }
+
+    #[test]
+    fn i32_negative_arith() {
+        let a = (-5i32) as u32 as u64;
+        let b = 3u64;
+        assert_eq!(apply_op(DType::I32, Op::Add, a, b) as u32 as i32, -2);
+        assert_eq!(apply_op(DType::I32, Op::Lt, a, b), 1);
+        assert_eq!(apply_op(DType::I32, Op::Max, a, b) as u32 as i32, 3);
+    }
+
+    #[test]
+    fn rmw_illegal_op_rejected_at_decode_level() {
+        let (mut f, mut mem) = fx();
+        f.spd.write_tile(0, &[0]);
+        f.spd.write_tile(1, &[1]);
+        // Construct an illegal IRMW by hand (bypassing the constructor).
+        let mut inst = Instruction::irmw(DType::U32, 0, Op::Add, 0, 1, NO_TILE);
+        inst.op = Op::Sub;
+        assert_eq!(
+            f.execute(&inst, &mut mem).unwrap_err(),
+            ExecError::IllegalRmwOp(Op::Sub)
+        );
+    }
+
+    #[test]
+    fn sld_trace_lines_are_deduped() {
+        let (mut f, mut mem) = fx();
+        f.rf[1] = 0;
+        f.rf[2] = 1;
+        f.rf[3] = 32; // 32 u32 = 128B = 2 lines
+        let tr = f
+            .execute(
+                &Instruction::sld(DType::U32, 0x7000, 0, 1, 2, 3, NO_TILE),
+                &mut mem,
+            )
+            .unwrap();
+        match tr {
+            InstrTrace::Stream { lines, .. } => assert_eq!(lines.len(), 2),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,554 @@
+//! The DX100 instruction set (paper Table 2).
+//!
+//! Eight instructions — ILD / IST / IRMW (indirect access), SLD / SST
+//! (stream access), ALUV / ALUS (vector/scalar ALU), RNG (range fuser) —
+//! each encoded in 192 bits and transmitted to the accelerator by three
+//! 64-bit memory-mapped stores.
+
+use std::fmt;
+
+/// Sentinel tile id meaning "no tile" (e.g. unconditioned TC).
+pub const NO_TILE: u8 = 0xFF;
+
+/// Instruction opcodes (Table 2, "Opcode" column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Indirect load: `TD[i] = MEM[BASE + TS1[i]*esize]`.
+    Ild = 0,
+    /// Indirect store: `MEM[BASE + TS1[i]*esize] = TS2[i]`.
+    Ist = 1,
+    /// Indirect read-modify-write: `MEM[BASE + TS1[i]*esize] OP= TS2[i]`.
+    Irmw = 2,
+    /// Streaming load: `TD[i] = MEM[BASE + (RS1 + i*RS2)*esize]`, i < RS3.
+    Sld = 3,
+    /// Streaming store: `MEM[BASE + (RS1 + i*RS2)*esize] = TS1[i]`.
+    Sst = 4,
+    /// Vector ALU: `TD[i] = TS1[i] OP TS2[i]`.
+    Aluv = 5,
+    /// Scalar ALU: `TD[i] = TS1[i] OP REG[RS1]`.
+    Alus = 6,
+    /// Range fuser: flatten `for i { for j in TS1[i]..TS2[i] }` into
+    /// output tiles TD (outer iteration) and TD2 (inner iteration).
+    Rng = 7,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => Opcode::Ild,
+            1 => Opcode::Ist,
+            2 => Opcode::Irmw,
+            3 => Opcode::Sld,
+            4 => Opcode::Sst,
+            5 => Opcode::Aluv,
+            6 => Opcode::Alus,
+            7 => Opcode::Rng,
+            _ => return None,
+        })
+    }
+
+    /// Which functional unit executes this opcode.
+    pub fn unit(&self) -> Unit {
+        match self {
+            Opcode::Ild | Opcode::Ist | Opcode::Irmw => Unit::Indirect,
+            Opcode::Sld | Opcode::Sst => Unit::Stream,
+            Opcode::Aluv | Opcode::Alus => Unit::Alu,
+            Opcode::Rng => Unit::RangeFuser,
+        }
+    }
+}
+
+/// DX100 functional units (§3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Unit {
+    Stream,
+    Indirect,
+    Alu,
+    RangeFuser,
+}
+
+/// Element data types (Table 2 DTYPE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum DType {
+    U32 = 0,
+    I32 = 1,
+    F32 = 2,
+    U64 = 3,
+    I64 = 4,
+    F64 = 5,
+}
+
+impl DType {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => DType::U32,
+            1 => DType::I32,
+            2 => DType::F32,
+            3 => DType::U64,
+            4 => DType::I64,
+            5 => DType::F64,
+            _ => return None,
+        })
+    }
+
+    /// Element size in bytes.
+    pub fn size(&self) -> u64 {
+        match self {
+            DType::U32 | DType::I32 | DType::F32 => 4,
+            DType::U64 | DType::I64 | DType::F64 => 8,
+        }
+    }
+}
+
+/// ALU / RMW operations (Table 2 OP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    Add = 0,
+    Sub = 1,
+    Mul = 2,
+    Min = 3,
+    Max = 4,
+    And = 5,
+    Or = 6,
+    Xor = 7,
+    Shr = 8,
+    Shl = 9,
+    Lt = 10,
+    Le = 11,
+    Gt = 12,
+    Ge = 13,
+    Eq = 14,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        use Op::*;
+        Some(match v {
+            0 => Add,
+            1 => Sub,
+            2 => Mul,
+            3 => Min,
+            4 => Max,
+            5 => And,
+            6 => Or,
+            7 => Xor,
+            8 => Shr,
+            9 => Shl,
+            10 => Lt,
+            11 => Le,
+            12 => Gt,
+            13 => Ge,
+            14 => Eq,
+            _ => return None,
+        })
+    }
+
+    /// Whether the op is associative and commutative — the only ops IRMW
+    /// accepts, since the Indirect unit reorders operations (§3.1).
+    pub fn rmw_legal(&self) -> bool {
+        matches!(self, Op::Add | Op::Min | Op::Max | Op::And | Op::Or | Op::Xor)
+    }
+
+    /// Whether the result is a boolean (0/1) condition value.
+    pub fn is_compare(&self) -> bool {
+        matches!(self, Op::Lt | Op::Le | Op::Gt | Op::Ge | Op::Eq)
+    }
+}
+
+/// A decoded DX100 instruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Instruction {
+    pub opcode: Opcode,
+    pub dtype: DType,
+    pub op: Op,
+    /// Base physical address for memory-touching instructions.
+    pub base: u64,
+    /// Destination tile (TD; RNG outer-iteration output TD1).
+    pub td: u8,
+    /// Second destination tile (RNG inner-iteration output TD2).
+    pub td2: u8,
+    /// Source tile 1 (indices / stream store data / ALU operand / RNG lo).
+    pub ts1: u8,
+    /// Source tile 2 (store data / RMW values / ALU operand / RNG hi).
+    pub ts2: u8,
+    /// Condition tile (`NO_TILE` = unconditioned).
+    pub tc: u8,
+    /// Scalar registers (stream start / stride / count, ALUS operand).
+    pub rs1: u8,
+    pub rs2: u8,
+    pub rs3: u8,
+}
+
+impl Instruction {
+    fn blank(opcode: Opcode, dtype: DType) -> Self {
+        Instruction {
+            opcode,
+            dtype,
+            op: Op::Add,
+            base: 0,
+            td: NO_TILE,
+            td2: NO_TILE,
+            ts1: NO_TILE,
+            ts2: NO_TILE,
+            tc: NO_TILE,
+            rs1: 0,
+            rs2: 0,
+            rs3: 0,
+        }
+    }
+
+    /// `TD[i] = MEM[base + TS1[i]*esize]` (conditioned on `tc`).
+    pub fn ild(dtype: DType, base: u64, td: u8, ts1: u8, tc: u8) -> Self {
+        Instruction {
+            base,
+            td,
+            ts1,
+            tc,
+            ..Self::blank(Opcode::Ild, dtype)
+        }
+    }
+
+    /// `MEM[base + TS1[i]*esize] = TS2[i]` (conditioned on `tc`).
+    pub fn ist(dtype: DType, base: u64, ts1: u8, ts2: u8, tc: u8) -> Self {
+        Instruction {
+            base,
+            ts1,
+            ts2,
+            tc,
+            ..Self::blank(Opcode::Ist, dtype)
+        }
+    }
+
+    /// `MEM[base + TS1[i]*esize] op= TS2[i]` (conditioned on `tc`).
+    pub fn irmw(dtype: DType, base: u64, op: Op, ts1: u8, ts2: u8, tc: u8) -> Self {
+        assert!(op.rmw_legal(), "IRMW requires an associative+commutative op");
+        Instruction {
+            base,
+            op,
+            ts1,
+            ts2,
+            tc,
+            ..Self::blank(Opcode::Irmw, dtype)
+        }
+    }
+
+    /// `TD[i] = MEM[base + (REG[rs1] + i*REG[rs2])*esize]` for i < REG[rs3].
+    pub fn sld(dtype: DType, base: u64, td: u8, rs1: u8, rs2: u8, rs3: u8, tc: u8) -> Self {
+        Instruction {
+            base,
+            td,
+            rs1,
+            rs2,
+            rs3,
+            tc,
+            ..Self::blank(Opcode::Sld, dtype)
+        }
+    }
+
+    /// `MEM[base + (REG[rs1] + i*REG[rs2])*esize] = TS1[i]` for i < REG[rs3].
+    pub fn sst(dtype: DType, base: u64, ts1: u8, rs1: u8, rs2: u8, rs3: u8, tc: u8) -> Self {
+        Instruction {
+            base,
+            ts1,
+            rs1,
+            rs2,
+            rs3,
+            tc,
+            ..Self::blank(Opcode::Sst, dtype)
+        }
+    }
+
+    /// `TD[i] = TS1[i] op TS2[i]`.
+    pub fn aluv(dtype: DType, op: Op, td: u8, ts1: u8, ts2: u8, tc: u8) -> Self {
+        Instruction {
+            op,
+            td,
+            ts1,
+            ts2,
+            tc,
+            ..Self::blank(Opcode::Aluv, dtype)
+        }
+    }
+
+    /// `TD[i] = TS1[i] op REG[rs1]`.
+    pub fn alus(dtype: DType, op: Op, td: u8, ts1: u8, rs1: u8, tc: u8) -> Self {
+        Instruction {
+            op,
+            td,
+            ts1,
+            rs1,
+            tc,
+            ..Self::blank(Opcode::Alus, dtype)
+        }
+    }
+
+    /// Range fuser: outputs TD1 (outer i) and TD2 (inner j) from boundary
+    /// tiles TS1 (lo) and TS2 (hi).
+    pub fn rng(td1: u8, td2: u8, ts1: u8, ts2: u8, tc: u8) -> Self {
+        Instruction {
+            td: td1,
+            td2,
+            ts1,
+            ts2,
+            tc,
+            ..Self::blank(Opcode::Rng, DType::U32)
+        }
+    }
+
+    /// Encode into the three 64-bit words transmitted by MMIO stores.
+    pub fn encode(&self) -> [u64; 3] {
+        let w0 = (self.opcode as u64)
+            | ((self.dtype as u64) << 8)
+            | ((self.op as u64) << 16)
+            | ((self.td as u64) << 24)
+            | ((self.td2 as u64) << 32)
+            | ((self.ts1 as u64) << 40)
+            | ((self.ts2 as u64) << 48)
+            | ((self.tc as u64) << 56);
+        let w1 = (self.rs1 as u64) | ((self.rs2 as u64) << 8) | ((self.rs3 as u64) << 16);
+        let w2 = self.base;
+        [w0, w1, w2]
+    }
+
+    /// Decode from the three 64-bit instruction words.
+    pub fn decode(words: [u64; 3]) -> Option<Self> {
+        let [w0, w1, w2] = words;
+        Some(Instruction {
+            opcode: Opcode::from_u8((w0 & 0xFF) as u8)?,
+            dtype: DType::from_u8(((w0 >> 8) & 0xFF) as u8)?,
+            op: Op::from_u8(((w0 >> 16) & 0xFF) as u8)?,
+            td: ((w0 >> 24) & 0xFF) as u8,
+            td2: ((w0 >> 32) & 0xFF) as u8,
+            ts1: ((w0 >> 40) & 0xFF) as u8,
+            ts2: ((w0 >> 48) & 0xFF) as u8,
+            tc: ((w0 >> 56) & 0xFF) as u8,
+            rs1: (w1 & 0xFF) as u8,
+            rs2: ((w1 >> 8) & 0xFF) as u8,
+            rs3: ((w1 >> 16) & 0xFF) as u8,
+            base: w2,
+        })
+    }
+
+    /// Source tiles read by this instruction.
+    pub fn source_tiles(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        for t in [self.ts1, self.ts2, self.tc] {
+            if t != NO_TILE {
+                v.push(t);
+            }
+        }
+        // SST's data comes from ts1; ALU sources likewise — already covered.
+        v
+    }
+
+    /// Destination tiles written by this instruction.
+    pub fn dest_tiles(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        if self.td != NO_TILE {
+            v.push(self.td);
+        }
+        if self.td2 != NO_TILE {
+            v.push(self.td2);
+        }
+        v
+    }
+
+    /// Whether this instruction touches main memory.
+    pub fn touches_memory(&self) -> bool {
+        matches!(
+            self.opcode,
+            Opcode::Ild | Opcode::Ist | Opcode::Irmw | Opcode::Sld | Opcode::Sst
+        )
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let t = |x: u8| {
+            if x == NO_TILE {
+                "-".to_string()
+            } else {
+                format!("T{x}")
+            }
+        };
+        match self.opcode {
+            Opcode::Ild => write!(
+                f,
+                "ILD.{:?} {} = [{:#x} + {}] ?{}",
+                self.dtype,
+                t(self.td),
+                self.base,
+                t(self.ts1),
+                t(self.tc)
+            ),
+            Opcode::Ist => write!(
+                f,
+                "IST.{:?} [{:#x} + {}] = {} ?{}",
+                self.dtype,
+                self.base,
+                t(self.ts1),
+                t(self.ts2),
+                t(self.tc)
+            ),
+            Opcode::Irmw => write!(
+                f,
+                "IRMW.{:?}.{:?} [{:#x} + {}] op= {} ?{}",
+                self.dtype,
+                self.op,
+                self.base,
+                t(self.ts1),
+                t(self.ts2),
+                t(self.tc)
+            ),
+            Opcode::Sld => write!(
+                f,
+                "SLD.{:?} {} = [{:#x} + (r{} + i*r{})], n=r{} ?{}",
+                self.dtype,
+                t(self.td),
+                self.base,
+                self.rs1,
+                self.rs2,
+                self.rs3,
+                t(self.tc)
+            ),
+            Opcode::Sst => write!(
+                f,
+                "SST.{:?} [{:#x} + (r{} + i*r{})] = {}, n=r{} ?{}",
+                self.dtype,
+                self.base,
+                self.rs1,
+                self.rs2,
+                t(self.ts1),
+                self.rs3,
+                t(self.tc)
+            ),
+            Opcode::Aluv => write!(
+                f,
+                "ALUV.{:?}.{:?} {} = {} op {} ?{}",
+                self.dtype,
+                self.op,
+                t(self.td),
+                t(self.ts1),
+                t(self.ts2),
+                t(self.tc)
+            ),
+            Opcode::Alus => write!(
+                f,
+                "ALUS.{:?}.{:?} {} = {} op r{} ?{}",
+                self.dtype,
+                self.op,
+                t(self.td),
+                t(self.ts1),
+                self.rs1,
+                t(self.tc)
+            ),
+            Opcode::Rng => write!(
+                f,
+                "RNG {}/{} = fuse({}, {}) ?{}",
+                t(self.td),
+                t(self.td2),
+                t(self.ts1),
+                t(self.ts2),
+                t(self.tc)
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_all_opcodes() {
+        let insts = vec![
+            Instruction::ild(DType::F32, 0x4000_0000, 2, 1, NO_TILE),
+            Instruction::ist(DType::U64, 0x1234_5678, 3, 4, 5),
+            Instruction::irmw(DType::F64, 0xdead_b000, Op::Add, 6, 7, NO_TILE),
+            Instruction::sld(DType::U32, 0x10_0000, 0, 1, 2, 3, NO_TILE),
+            Instruction::sst(DType::I32, 0x20_0000, 9, 4, 5, 6, 7),
+            Instruction::aluv(DType::I64, Op::Mul, 10, 11, 12, NO_TILE),
+            Instruction::alus(DType::U32, Op::Shr, 13, 14, 8, NO_TILE),
+            Instruction::rng(20, 21, 22, 23, 24),
+        ];
+        for inst in insts {
+            let enc = inst.encode();
+            let dec = Instruction::decode(enc).unwrap();
+            assert_eq!(inst, dec, "roundtrip failed for {inst}");
+        }
+    }
+
+    #[test]
+    fn instruction_is_192_bits() {
+        // Three 64-bit words — exactly what three MMIO stores carry.
+        let enc = Instruction::ild(DType::F32, 0, 0, 1, NO_TILE).encode();
+        assert_eq!(enc.len() * 64, 192);
+    }
+
+    #[test]
+    #[should_panic]
+    fn irmw_rejects_non_commutative_op() {
+        Instruction::irmw(DType::F32, 0, Op::Sub, 0, 1, NO_TILE);
+    }
+
+    #[test]
+    fn rmw_legal_ops_match_paper() {
+        // Paper: "only a subset of associative and commutative operations,
+        // such as ADD, MAX, and MIN".
+        assert!(Op::Add.rmw_legal());
+        assert!(Op::Min.rmw_legal());
+        assert!(Op::Max.rmw_legal());
+        assert!(!Op::Sub.rmw_legal());
+        assert!(!Op::Shl.rmw_legal());
+        assert!(!Op::Lt.rmw_legal());
+    }
+
+    #[test]
+    fn units_match_paper_architecture() {
+        assert_eq!(Opcode::Ild.unit(), Unit::Indirect);
+        assert_eq!(Opcode::Irmw.unit(), Unit::Indirect);
+        assert_eq!(Opcode::Sld.unit(), Unit::Stream);
+        assert_eq!(Opcode::Aluv.unit(), Unit::Alu);
+        assert_eq!(Opcode::Rng.unit(), Unit::RangeFuser);
+    }
+
+    #[test]
+    fn source_dest_tiles() {
+        let i = Instruction::aluv(DType::U32, Op::Add, 1, 2, 3, 4);
+        assert_eq!(i.source_tiles(), vec![2, 3, 4]);
+        assert_eq!(i.dest_tiles(), vec![1]);
+        let r = Instruction::rng(5, 6, 7, 8, NO_TILE);
+        assert_eq!(r.dest_tiles(), vec![5, 6]);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::U32.size(), 4);
+        assert_eq!(DType::F64.size(), 8);
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        assert!(Instruction::decode([0xFF, 0, 0]).is_none());
+    }
+
+    #[test]
+    fn table1_patterns_expressible() {
+        // NAS CG: LD A[B[j]], range loop j = H[i]..H[i+1] — needs SLD of H,
+        // RNG, ILD. Hash-Join: ST A[B[f(C[i])]] with f = (C & F) >> G —
+        // needs SLD, ALUS (And), ALUS (Shr), ILD of B, IST. All encodable:
+        let seq = vec![
+            Instruction::sld(DType::U32, 0x1000, 0, 0, 1, 2, NO_TILE),
+            Instruction::alus(DType::U32, Op::And, 1, 0, 3, NO_TILE),
+            Instruction::alus(DType::U32, Op::Shr, 2, 1, 4, NO_TILE),
+            Instruction::ild(DType::U32, 0x2000, 3, 2, NO_TILE),
+            Instruction::ist(DType::U32, 0x3000, 3, 4, NO_TILE),
+        ];
+        for i in seq {
+            assert_eq!(Instruction::decode(i.encode()).unwrap(), i);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Sparse physical-memory image for functional simulation.
+//!
+//! Workload arrays live at disjoint, huge-page-aligned physical regions
+//! (mirroring the paper's huge-page mapping assumption, §3.6). Storage is
+//! paged so multi-GB address spaces cost only what is touched.
+
+use std::collections::HashMap;
+
+const PAGE_BITS: u32 = 16; // 64 KiB pages
+const PAGE_SIZE: usize = 1 << PAGE_BITS;
+
+/// A sparse byte-addressable memory image.
+#[derive(Default, Clone)]
+pub struct MemImage {
+    pages: HashMap<u64, Box<[u8]>>,
+}
+
+impl MemImage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn page_mut(&mut self, addr: u64) -> (&mut [u8], usize) {
+        let page = addr >> PAGE_BITS;
+        let off = (addr as usize) & (PAGE_SIZE - 1);
+        let p = self
+            .pages
+            .entry(page)
+            .or_insert_with(|| vec![0u8; PAGE_SIZE].into_boxed_slice());
+        (&mut p[..], off)
+    }
+
+    fn page(&self, addr: u64) -> Option<(&[u8], usize)> {
+        let page = addr >> PAGE_BITS;
+        let off = (addr as usize) & (PAGE_SIZE - 1);
+        self.pages.get(&page).map(|p| (&p[..], off))
+    }
+
+    /// Read `n <= 8` bytes as a little-endian word (unmapped reads are 0).
+    /// Accesses must not straddle a page (arrays are aligned, so they never
+    /// do for 4/8-byte elements).
+    pub fn read_word(&self, addr: u64, n: u64) -> u64 {
+        debug_assert!(n <= 8);
+        match self.page(addr) {
+            None => 0,
+            Some((p, off)) => {
+                let mut buf = [0u8; 8];
+                buf[..n as usize].copy_from_slice(&p[off..off + n as usize]);
+                u64::from_le_bytes(buf)
+            }
+        }
+    }
+
+    /// Write `n <= 8` bytes of a little-endian word.
+    pub fn write_word(&mut self, addr: u64, n: u64, value: u64) {
+        debug_assert!(n <= 8);
+        let (p, off) = self.page_mut(addr);
+        p[off..off + n as usize].copy_from_slice(&value.to_le_bytes()[..n as usize]);
+    }
+
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        self.read_word(addr, 4) as u32
+    }
+
+    pub fn write_u32(&mut self, addr: u64, v: u32) {
+        self.write_word(addr, 4, v as u64);
+    }
+
+    pub fn read_f32(&self, addr: u64) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    pub fn write_f32(&mut self, addr: u64, v: f32) {
+        self.write_u32(addr, v.to_bits());
+    }
+
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        self.read_word(addr, 8)
+    }
+
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        self.write_word(addr, 8, v);
+    }
+
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+
+    pub fn write_f64(&mut self, addr: u64, v: f64) {
+        self.write_u64(addr, v.to_bits());
+    }
+
+    /// Bulk-store a u32 slice starting at `addr`.
+    pub fn store_u32_slice(&mut self, addr: u64, xs: &[u32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_u32(addr + 4 * i as u64, *x);
+        }
+    }
+
+    /// Bulk-store an f32 slice starting at `addr`.
+    pub fn store_f32_slice(&mut self, addr: u64, xs: &[f32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_f32(addr + 4 * i as u64, *x);
+        }
+    }
+
+    /// Bulk-load `n` f32 values from `addr`.
+    pub fn load_f32_slice(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read_f32(addr + 4 * i as u64)).collect()
+    }
+
+    /// Bulk-load `n` u32 values from `addr`.
+    pub fn load_u32_slice(&self, addr: u64, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.read_u32(addr + 4 * i as u64)).collect()
+    }
+
+    /// Number of touched pages (for memory diagnostics).
+    pub fn touched_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut m = MemImage::new();
+        m.write_u32(0x1000, 0xdeadbeef);
+        assert_eq!(m.read_u32(0x1000), 0xdeadbeef);
+        m.write_u64(0x2000, u64::MAX - 5);
+        assert_eq!(m.read_u64(0x2000), u64::MAX - 5);
+        m.write_f32(0x3000, -1.5);
+        assert_eq!(m.read_f32(0x3000), -1.5);
+    }
+
+    #[test]
+    fn unmapped_reads_zero() {
+        let m = MemImage::new();
+        assert_eq!(m.read_u64(0x9999_9999), 0);
+        assert_eq!(m.read_f32(0), 0.0);
+    }
+
+    #[test]
+    fn sparse_pages() {
+        let mut m = MemImage::new();
+        m.write_u32(0, 1);
+        m.write_u32(1 << 30, 2); // 1 GiB away
+        assert_eq!(m.touched_pages(), 2);
+        assert_eq!(m.read_u32(0), 1);
+        assert_eq!(m.read_u32(1 << 30), 2);
+    }
+
+    #[test]
+    fn slices_roundtrip() {
+        let mut m = MemImage::new();
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        m.store_f32_slice(0x8000, &xs);
+        assert_eq!(m.load_f32_slice(0x8000, 100), xs);
+        let ys: Vec<u32> = (0..50).map(|i| i * 7).collect();
+        m.store_u32_slice(0x10000, &ys);
+        assert_eq!(m.load_u32_slice(0x10000, 50), ys);
+    }
+}

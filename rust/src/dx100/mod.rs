@@ -1,0 +1,33 @@
+//! The DX100 accelerator: ISA, functional model, and cycle-level timing
+//! model (paper §3).
+//!
+//! * [`isa`] — the eight-instruction ISA of Table 2 with its 192-bit
+//!   (3 × 64-bit MMIO store) encoding.
+//! * [`scratchpad`] — tile storage with per-tile size/ready state.
+//! * [`mem_image`] — sparse physical-memory image used by the functional
+//!   simulator.
+//! * [`functional`] — the functional simulator (paper §5 "A functional
+//!   simulator for DX100 APIs was developed to ensure correctness"): executes
+//!   instruction streams over real data and emits per-instruction address
+//!   traces consumed by the timing model.
+//! * [`row_table`] — Row Table (BCAM + SRAM slices) and Word Table
+//!   (linked-list) structures of §3.2, used by both the timing model and
+//!   standalone analysis.
+//! * [`timing`] — the cycle-level accelerator model: controller/scoreboard,
+//!   stream + indirect + ALU + range-fuser units, interface with coherency
+//!   snooping, reordering/coalescing/interleaving over DRAM.
+//! * [`area`] — the Table 4 area/power model.
+
+pub mod area;
+pub mod functional;
+pub mod isa;
+pub mod mem_image;
+pub mod row_table;
+pub mod scratchpad;
+pub mod timing;
+
+pub use functional::{Dx100Functional, ExecError, InstrTrace};
+pub use isa::{DType, Instruction, Op, Opcode, NO_TILE};
+pub use mem_image::MemImage;
+pub use scratchpad::Scratchpad;
+pub use timing::{Dx100Env, Dx100Program, Dx100Stats, Dx100Timing, TimedInstr};

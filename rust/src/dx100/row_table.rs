@@ -1,0 +1,363 @@
+//! Row Table and Word Table of the Indirect Access unit (paper §3.2,
+//! Figure 4).
+//!
+//! The Row Table has one **slice** per DRAM bank. Each slice holds up to
+//! `rows` BCAM entries (row addresses) with up to `cols` SRAM column entries
+//! per row. Each column entry heads a linked list in the **Word Table**
+//! recording which tile iterations target words in that column — the
+//! coalescing structure: one DRAM access serves every word in the list.
+//!
+//! Draining a slice walks the current row's columns consecutively (row-hit
+//! streaks) while the request generator rotates across slices of different
+//! channels and bank groups (interleaving).
+
+/// One word recorded in the Word Table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WordRef {
+    /// Tile iteration number (element index).
+    pub iter: u32,
+    /// Word offset within the DRAM column (cache line).
+    pub offset: u8,
+}
+
+/// A column (cache line) entry: SRAM cell row of Figure 4 (b).
+#[derive(Clone, Debug)]
+pub struct ColEntry {
+    pub col: u32,
+    /// Cache-hit bit from the coherency snoop at fill time.
+    pub hit: bool,
+    pub sent: bool,
+    /// Word Table linked list, stored directly (the hardware keeps
+    /// `Tail i` + per-entry `Previous i`; a Vec is the same list).
+    pub words: Vec<WordRef>,
+}
+
+/// A row entry: BCAM cell of Figure 4 (b).
+#[derive(Clone, Debug)]
+pub struct RowEntry {
+    pub row: u32,
+    pub cols: Vec<ColEntry>,
+    pub sent_cols: usize,
+}
+
+impl RowEntry {
+    fn fully_sent(&self) -> bool {
+        self.sent_cols == self.cols.len()
+    }
+}
+
+/// One Row Table slice (per DRAM bank).
+#[derive(Clone, Debug, Default)]
+pub struct Slice {
+    pub rows: Vec<RowEntry>,
+}
+
+/// Why an insert could not proceed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertError {
+    /// No free BCAM row entry in the slice.
+    SliceFull,
+    /// Row found but its SRAM column entries are exhausted.
+    RowFull,
+}
+
+/// A drained request: one DRAM column (cache line) access.
+#[derive(Clone, Debug)]
+pub struct DrainedAccess {
+    pub bank: usize,
+    pub row: u32,
+    pub col: u32,
+    pub hit: bool,
+    pub words: Vec<WordRef>,
+}
+
+/// Aggregate Row/Word-Table statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RowTableStats {
+    pub inserted_words: u64,
+    pub coalesced_words: u64,
+    pub accesses: u64,
+    pub slice_full_events: u64,
+}
+
+/// The Row Table: `banks` slices, each `rows x cols` with word lists.
+#[derive(Clone, Debug)]
+pub struct RowTable {
+    slices: Vec<Slice>,
+    rows_per_slice: usize,
+    cols_per_row: usize,
+    /// Words resident (inserted, not yet drained) — capacity diagnostics.
+    pub resident_words: usize,
+    pub stats: RowTableStats,
+}
+
+impl RowTable {
+    pub fn new(banks: usize, rows_per_slice: usize, cols_per_row: usize) -> Self {
+        RowTable {
+            slices: vec![Slice::default(); banks],
+            rows_per_slice,
+            cols_per_row,
+            resident_words: 0,
+            stats: RowTableStats::default(),
+        }
+    }
+
+    pub fn num_slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Insert one word (operation stage 1 — Fill). `bank` selects the
+    /// slice; (`row`, `col`) are DRAM coordinates; `offset` is the word
+    /// offset within the column; `iter` is the tile iteration; `hit` the
+    /// snooped cache-hit bit (queried only on first touch of a column).
+    pub fn insert(
+        &mut self,
+        bank: usize,
+        row: u32,
+        col: u32,
+        offset: u8,
+        iter: u32,
+        mut hit: impl FnMut() -> bool,
+    ) -> Result<(), InsertError> {
+        let (rows_cap, cols_cap) = (self.rows_per_slice, self.cols_per_row);
+        let slice = &mut self.slices[bank];
+        let word = WordRef { iter, offset };
+        // BCAM lookup: the freshest valid + unsent entry with this row
+        // address (new entries are appended, so search newest-first).
+        let mut placed = false;
+        if let Some(re) = slice
+            .rows
+            .iter_mut()
+            .rev()
+            .find(|r| r.row == row && !r.fully_sent())
+        {
+            // SRAM lookup: valid + unsent column entry.
+            if let Some(ce) = re.cols.iter_mut().find(|c| c.col == col && !c.sent) {
+                ce.words.push(word); // coalesced into the linked list
+                self.stats.coalesced_words += 1;
+                placed = true;
+            } else if re.cols.len() < cols_cap {
+                re.cols.push(ColEntry {
+                    col,
+                    hit: hit(),
+                    sent: false,
+                    words: vec![word],
+                });
+                placed = true;
+            }
+            // else: SRAM cols exhausted — allocate a fresh BCAM entry for
+            // the same row below ("If no such entry exists in the BCAM or
+            // SRAM cells, the Row Table allocates a new entry").
+        }
+        if !placed {
+            if slice.rows.len() >= rows_cap {
+                self.stats.slice_full_events += 1;
+                return Err(InsertError::SliceFull);
+            }
+            slice.rows.push(RowEntry {
+                row,
+                cols: vec![ColEntry {
+                    col,
+                    hit: hit(),
+                    sent: false,
+                    words: vec![word],
+                }],
+                sent_cols: 0,
+            });
+        }
+        self.stats.inserted_words += 1;
+        self.resident_words += 1;
+        Ok(())
+    }
+
+    /// Whether slice `bank` has any unsent column.
+    pub fn has_sendable(&self, bank: usize) -> bool {
+        self.slices[bank]
+            .rows
+            .iter()
+            .any(|r| r.sent_cols < r.cols.len())
+    }
+
+    /// Drain the next access from slice `bank` (operation stage 2 —
+    /// Request): continues the slice's current (oldest unsent) row so
+    /// consecutive drains from one slice are row-buffer hits.
+    pub fn drain(&mut self, bank: usize) -> Option<DrainedAccess> {
+        let slice = &mut self.slices[bank];
+        let ri = slice.rows.iter().position(|r| r.sent_cols < r.cols.len())?;
+        let re = &mut slice.rows[ri];
+        let ci = re.cols.iter().position(|c| !c.sent).unwrap();
+        re.cols[ci].sent = true;
+        re.sent_cols += 1;
+        let ce = &re.cols[ci];
+        let acc = DrainedAccess {
+            bank,
+            row: re.row,
+            col: ce.col,
+            hit: ce.hit,
+            words: ce.words.clone(),
+        };
+        self.resident_words -= acc.words.len();
+        self.stats.accesses += 1;
+        // Free fully-sent rows (BCAM entry reclaim).
+        if slice.rows[ri].fully_sent() {
+            slice.rows.remove(ri);
+        }
+        Some(acc)
+    }
+
+    /// Total unsent columns across all slices.
+    pub fn pending_accesses(&self) -> usize {
+        self.slices
+            .iter()
+            .map(|s| {
+                s.rows
+                    .iter()
+                    .map(|r| r.cols.len() - r.sent_cols)
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Whether the table is completely empty.
+    pub fn is_empty(&self) -> bool {
+        self.slices.iter().all(|s| s.rows.is_empty())
+    }
+
+    /// Coalescing factor so far: words inserted per access generated.
+    pub fn coalesce_factor(&self) -> f64 {
+        if self.stats.accesses == 0 {
+            return 0.0;
+        }
+        self.stats.inserted_words as f64 / self.stats.accesses as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> RowTable {
+        RowTable::new(4, 4, 2)
+    }
+
+    #[test]
+    fn insert_and_drain_roundtrip() {
+        let mut t = table();
+        t.insert(0, 10, 3, 1, 0, || false).unwrap();
+        t.insert(0, 10, 3, 2, 1, || panic!("hit queried twice")).unwrap();
+        let acc = t.drain(0).unwrap();
+        assert_eq!(acc.row, 10);
+        assert_eq!(acc.col, 3);
+        assert_eq!(
+            acc.words,
+            vec![WordRef { iter: 0, offset: 1 }, WordRef { iter: 1, offset: 2 }]
+        );
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn coalescing_counts() {
+        let mut t = table();
+        for i in 0..5 {
+            t.insert(1, 7, 0, i as u8, i, || false).unwrap();
+        }
+        assert_eq!(t.stats.coalesced_words, 4);
+        let acc = t.drain(1).unwrap();
+        assert_eq!(acc.words.len(), 5);
+        assert!((t.coalesce_factor() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_capacity_enforced() {
+        let mut t = table(); // 4 rows per slice
+        for r in 0..4 {
+            t.insert(0, r, 0, 0, r, || false).unwrap();
+        }
+        assert_eq!(t.insert(0, 99, 0, 0, 9, || false), Err(InsertError::SliceFull));
+        assert_eq!(t.stats.slice_full_events, 1);
+        // Draining a full row frees its BCAM entry.
+        t.drain(0).unwrap();
+        assert!(t.insert(0, 99, 0, 0, 9, || false).is_ok());
+    }
+
+    #[test]
+    fn row_col_overflow_allocates_new_bcam_entry() {
+        // 2 cols per SRAM row: a third distinct column for the same DRAM
+        // row allocates a fresh BCAM entry ("allocates a new entry", §3.2).
+        let mut t = table();
+        t.insert(0, 5, 0, 0, 0, || false).unwrap();
+        t.insert(0, 5, 1, 0, 1, || false).unwrap();
+        t.insert(0, 5, 2, 0, 2, || false).unwrap();
+        assert_eq!(t.pending_accesses(), 3);
+        // Coalescing still finds the freshest entry for the new column.
+        t.insert(0, 5, 2, 1, 3, || panic!("re-snooped")).unwrap();
+        assert_eq!(t.stats.coalesced_words, 1);
+        // Capacity is ultimately bounded by BCAM rows: fill the slice
+        // (2 entries for row 5 so far; 4-entry BCAM).
+        t.insert(0, 6, 0, 0, 4, || false).unwrap();
+        t.insert(0, 7, 0, 0, 5, || false).unwrap();
+        assert_eq!(
+            t.insert(0, 8, 0, 0, 6, || false),
+            Err(InsertError::SliceFull)
+        );
+    }
+
+    #[test]
+    fn drain_keeps_row_streak() {
+        // Two rows in one slice: all columns of the first row drain before
+        // the second row starts (row-buffer-hit streak).
+        let mut t = table();
+        t.insert(2, 1, 0, 0, 0, || false).unwrap();
+        t.insert(2, 1, 1, 0, 1, || false).unwrap();
+        t.insert(2, 9, 0, 0, 2, || false).unwrap();
+        let a = t.drain(2).unwrap();
+        let b = t.drain(2).unwrap();
+        let c = t.drain(2).unwrap();
+        assert_eq!((a.row, b.row, c.row), (1, 1, 9));
+        assert!(t.drain(2).is_none());
+    }
+
+    #[test]
+    fn sent_column_not_recoalesced() {
+        let mut t = table();
+        t.insert(0, 1, 0, 0, 0, || false).unwrap();
+        let _ = t.drain(0).unwrap();
+        // Same column again after send: becomes a fresh entry/access.
+        t.insert(0, 1, 0, 1, 1, || false).unwrap();
+        let acc = t.drain(0).unwrap();
+        assert_eq!(acc.words.len(), 1);
+        assert_eq!(t.stats.accesses, 2);
+    }
+
+    #[test]
+    fn pending_accounting() {
+        let mut t = table();
+        t.insert(0, 1, 0, 0, 0, || false).unwrap();
+        t.insert(1, 2, 0, 0, 1, || false).unwrap();
+        t.insert(1, 2, 1, 0, 2, || false).unwrap();
+        assert_eq!(t.pending_accesses(), 3);
+        assert!(t.has_sendable(0));
+        assert!(t.has_sendable(1));
+        assert!(!t.has_sendable(2));
+        t.drain(0);
+        assert_eq!(t.pending_accesses(), 2);
+    }
+
+    #[test]
+    fn hit_bit_queried_once_per_column() {
+        let mut t = table();
+        let mut queries = 0;
+        t.insert(0, 1, 0, 0, 0, || {
+            queries += 1;
+            true
+        })
+        .unwrap();
+        t.insert(0, 1, 0, 1, 1, || {
+            queries += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(queries, 1);
+        assert!(t.drain(0).unwrap().hit);
+    }
+}

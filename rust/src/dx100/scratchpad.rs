@@ -1,0 +1,135 @@
+//! DX100 scratchpad: tile storage with per-tile size and ready state
+//! (paper §3.5).
+//!
+//! Elements are stored as raw 64-bit words; the instruction's DTYPE governs
+//! interpretation. Each tile tracks a `size` (valid element count) and a
+//! `ready` bit used for core↔DX100 synchronization. The per-element finish
+//! bits of the paper are modeled in the timing layer as per-tile
+//! "elements available" counters.
+
+/// One scratchpad tile.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    pub data: Vec<u64>,
+    pub size: usize,
+    pub ready: bool,
+}
+
+/// The scratchpad: `tiles` tiles of `tile_elems` elements each.
+#[derive(Clone, Debug)]
+pub struct Scratchpad {
+    tiles: Vec<Tile>,
+    pub tile_elems: usize,
+}
+
+impl Scratchpad {
+    pub fn new(tiles: usize, tile_elems: usize) -> Self {
+        Scratchpad {
+            tiles: (0..tiles)
+                .map(|_| Tile {
+                    data: vec![0; tile_elems],
+                    size: 0,
+                    ready: true,
+                })
+                .collect(),
+            tile_elems,
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn tile(&self, id: u8) -> &Tile {
+        &self.tiles[id as usize]
+    }
+
+    pub fn tile_mut(&mut self, id: u8) -> &mut Tile {
+        &mut self.tiles[id as usize]
+    }
+
+    /// Read element `i` of tile `id` (raw bits).
+    pub fn get(&self, id: u8, i: usize) -> u64 {
+        self.tiles[id as usize].data[i]
+    }
+
+    /// Write element `i` of tile `id` (raw bits); extends `size` as needed.
+    pub fn set(&mut self, id: u8, i: usize, v: u64) {
+        let t = &mut self.tiles[id as usize];
+        t.data[i] = v;
+        if i >= t.size {
+            t.size = i + 1;
+        }
+    }
+
+    /// Overwrite a tile's contents from a slice of raw words.
+    pub fn write_tile(&mut self, id: u8, values: &[u64]) {
+        assert!(values.len() <= self.tile_elems, "tile overflow");
+        let t = &mut self.tiles[id as usize];
+        t.data[..values.len()].copy_from_slice(values);
+        t.size = values.len();
+        t.ready = true;
+    }
+
+    /// Snapshot a tile's valid elements.
+    pub fn read_tile(&self, id: u8) -> Vec<u64> {
+        let t = &self.tiles[id as usize];
+        t.data[..t.size].to_vec()
+    }
+
+    /// Set a tile's logical size (e.g. before an instruction fills it).
+    pub fn set_size(&mut self, id: u8, size: usize) {
+        assert!(size <= self.tile_elems, "tile overflow");
+        self.tiles[id as usize].size = size;
+    }
+
+    pub fn size_of(&self, id: u8) -> usize {
+        self.tiles[id as usize].size
+    }
+
+    pub fn set_ready(&mut self, id: u8, ready: bool) {
+        self.tiles[id as usize].ready = ready;
+    }
+
+    pub fn is_ready(&self, id: u8) -> bool {
+        self.tiles[id as usize].ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_tile() {
+        let mut s = Scratchpad::new(4, 16);
+        s.write_tile(2, &[1, 2, 3]);
+        assert_eq!(s.read_tile(2), vec![1, 2, 3]);
+        assert_eq!(s.size_of(2), 3);
+        assert!(s.is_ready(2));
+    }
+
+    #[test]
+    fn set_extends_size() {
+        let mut s = Scratchpad::new(1, 8);
+        s.set(0, 5, 42);
+        assert_eq!(s.size_of(0), 6);
+        assert_eq!(s.get(0, 5), 42);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut s = Scratchpad::new(1, 4);
+        s.write_tile(0, &[0; 5]);
+    }
+
+    #[test]
+    fn ready_bit_toggles() {
+        let mut s = Scratchpad::new(2, 4);
+        s.set_ready(1, false);
+        assert!(!s.is_ready(1));
+        s.set_ready(1, true);
+        assert!(s.is_ready(1));
+    }
+}

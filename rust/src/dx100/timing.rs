@@ -1,0 +1,1085 @@
+//! Cycle-level DX100 timing model (paper §3).
+//!
+//! The model executes a [`Dx100Program`] — instructions plus the address
+//! traces produced by the functional simulator — against the shared cache
+//! hierarchy and DRAM controller:
+//!
+//! * **Controller / scoreboard** (§3.5): instructions are delivered by MMIO
+//!   store triples, dispatched in order, and stall on destination-tile
+//!   (WAW/WAR) conflicts. RAW overlap is *allowed*: consumers stream from a
+//!   producer's tile as elements become available (the paper's per-element
+//!   finish bits), which hides the Indirect unit's fill latency behind the
+//!   Stream unit's index load.
+//! * **Stream unit** (§3.3): issues one line per cycle through the LLC
+//!   (Cache Interface), bounded by the 128-entry Request Table.
+//! * **Indirect unit** (§3.2): *fills* the Row/Word Tables at
+//!   `fill_rate` indices per cycle (address decode + coherency snoop for the
+//!   H bit), and *drains* requests whenever a channel's request buffer has
+//!   space — walking one Row-Table slice row at a time (row-hit streaks)
+//!   while rotating slices across bank groups (interleaving). Responses
+//!   write back words at `writeback_rate`; stores/RMWs send the modified
+//!   line back as a DRAM write.
+//! * **ALU / Range Fuser** (§3.4): rate-limited element processing.
+
+use super::functional::InstrTrace;
+use super::isa::{Instruction, Opcode, Unit};
+use super::row_table::RowTable;
+use crate::cache::Hierarchy;
+use crate::config::Dx100Config;
+use crate::mem::{DramCoord, MemController, ReqSource};
+use crate::sim::{Cycle, Event, EventQueue};
+use std::collections::{HashMap, VecDeque};
+
+/// Wake granularity for rate-based progress (cycles).
+const CHUNK: Cycle = 128;
+/// Range-fuser output rate (elements/cycle).
+const RNG_RATE: u64 = 2;
+/// Extra start latency per memory instruction when multiple DX100
+/// instances coordinate via region-based coherence (§6.6).
+const REGION_COHERENCE_LATENCY: Cycle = 100;
+
+/// An instruction plus its functional address trace.
+#[derive(Clone, Debug)]
+pub struct TimedInstr {
+    pub inst: Instruction,
+    pub trace: InstrTrace,
+}
+
+/// A compiled DX100 program for one instance.
+#[derive(Clone, Debug, Default)]
+pub struct Dx100Program {
+    pub instrs: Vec<TimedInstr>,
+    /// (seq of a phase's last instruction, global phase id): retiring that
+    /// instruction sets ready flag `tiles + phase` — the synchronization
+    /// point cores wait on before consuming the phase's scratchpad output.
+    pub phase_marks: Vec<(u32, u32)>,
+}
+
+/// Accelerator-side statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Dx100Stats {
+    pub instructions: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub llc_path_accesses: u64,
+    pub inserted_words: u64,
+    pub indirect_accesses: u64,
+    pub finish_time: Cycle,
+    pub slice_full_stalls: u64,
+}
+
+impl Dx100Stats {
+    /// Words served per DRAM access (the §6.4 coalescing factor).
+    pub fn coalesce_factor(&self) -> f64 {
+        if self.indirect_accesses == 0 {
+            0.0
+        } else {
+            self.inserted_words as f64 / self.indirect_accesses as f64
+        }
+    }
+}
+
+/// Environment handed to the instance on each wake.
+pub struct Dx100Env<'a> {
+    pub hier: &'a mut Hierarchy,
+    pub mem: &'a mut MemController,
+    pub queue: &'a mut EventQueue,
+    /// Per-tile ready flags for this instance (shared with polling cores).
+    pub ready: &'a mut [bool],
+}
+
+/// Rate-limited progress cursor.
+#[derive(Clone, Copy, Debug)]
+struct RateCursor {
+    last: Cycle,
+    rate: u64,
+}
+
+impl RateCursor {
+    fn new(rate: u64) -> Self {
+        RateCursor { last: 0, rate }
+    }
+    /// Work budget accumulated since the previous call. Capped so a unit
+    /// that sat idle (e.g. filling paused during a drain phase) does not
+    /// accrue unbounded credit.
+    fn budget(&mut self, t: Cycle) -> u64 {
+        let dt = t.saturating_sub(self.last).min(4 * CHUNK);
+        self.last = t;
+        dt * self.rate
+    }
+}
+
+#[derive(Debug)]
+enum ActiveState {
+    Stream {
+        lines: Vec<u64>,
+        pos: usize,
+        done: usize,
+        outstanding: usize,
+        is_store: bool,
+        elems: usize,
+        cursor: RateCursor,
+    },
+    Indirect {
+        words: Vec<u64>,
+        fill_pos: usize,
+        rt: RowTable,
+        inflight: usize,
+        words_done: usize,
+        is_store: bool,
+        is_rmw: bool,
+        elems: usize,
+        cursor: RateCursor,
+        /// Words that bounced off a full Row-Table slice, awaiting a
+        /// partial drain of that slice.
+        retry: std::collections::VecDeque<u64>,
+        /// Per-slice drain permission while the fill is still in progress:
+        /// a slice becomes drainable when it reaches capacity ("...or the
+        /// Row Table reaches capacity", §3.2 stage 2) and reverts once it
+        /// empties; after the whole tile is inserted, every slice drains.
+        drainable: Vec<bool>,
+    },
+    Alu {
+        pos: usize,
+        elems: usize,
+        cursor: RateCursor,
+    },
+    Range {
+        produced: usize,
+        out_elems: usize,
+        cursor: RateCursor,
+    },
+}
+
+#[derive(Debug)]
+struct ActiveInstr {
+    seq: u32,
+    state: ActiveState,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Outstanding {
+    seq: u32,
+    words: u32,
+    is_store: bool,
+    is_rmw: bool,
+    addr: u64,
+}
+
+/// One DX100 instance's cycle-level model.
+pub struct Dx100Timing {
+    pub id: usize,
+    cfg: Dx100Config,
+    program: Vec<TimedInstr>,
+    phase_marks: HashMap<u32, u32>,
+    /// Seq numbers fully delivered (3 MMIO stores each).
+    mmio_parts: HashMap<u32, u8>,
+    delivered_through: u32,
+    next_dispatch: u32,
+    /// Dispatched instructions waiting for their unit.
+    unit_queues: HashMap<Unit, VecDeque<u32>>,
+    active: HashMap<Unit, ActiveInstr>,
+    /// In-flight (dispatched, unretired) instruction seqs.
+    in_flight: Vec<u32>,
+    /// Elements available per tile (producer progress; finish-bit model).
+    tile_avail: Vec<usize>,
+    outstanding: HashMap<u64, Outstanding>,
+    next_token: u64,
+    /// Per-channel rotation order over this system's Row-Table slices and
+    /// the rotor position (bank-group-alternating order).
+    slice_order: Vec<Vec<usize>>,
+    rotor: Vec<usize>,
+    /// Slice -> DRAM coordinates template.
+    slice_coord: Vec<(u32, u32, u32, u32)>, // (channel, rank, bg, bank)
+    retired: u64,
+    /// Earliest pending `Dx100Wake` event (dedup guard).
+    next_wake_at: Cycle,
+    pub stats: Dx100Stats,
+    pub done: bool,
+    instances_total: usize,
+    line_bits: u32,
+}
+
+impl Dx100Timing {
+    pub fn new(
+        id: usize,
+        cfg: Dx100Config,
+        program: Dx100Program,
+        mem: &MemController,
+        instances_total: usize,
+    ) -> Self {
+        let channels = mem.cfg.channels;
+        let ranks = mem.cfg.ranks;
+        let groups = mem.cfg.bankgroups;
+        let banks = mem.cfg.banks_per_group;
+        let mut slice_order = vec![Vec::new(); channels];
+        let mut slice_coord = Vec::new();
+        // Flat bank index layout must match DramCoord::flat_bank /
+        // MemController::bank_index: ((ch*ranks + rank)*groups + bg)*banks + bank.
+        for ch in 0..channels {
+            for rank in 0..ranks {
+                for bg in 0..groups {
+                    for b in 0..banks {
+                        slice_coord.push((ch as u32, rank as u32, bg as u32, b as u32));
+                    }
+                }
+            }
+        }
+        // Per-channel drain order: alternate bank groups between consecutive
+        // requests (bank-major outer, bank-group inner).
+        for ch in 0..channels {
+            for rank in 0..ranks {
+                for b in 0..banks {
+                    for bg in 0..groups {
+                        let flat = ((ch * ranks + rank) * groups + bg) * banks + b;
+                        slice_order[ch].push(flat);
+                    }
+                }
+            }
+        }
+        let tiles = cfg.tiles;
+        let phase_marks: HashMap<u32, u32> = program.phase_marks.iter().copied().collect();
+        Dx100Timing {
+            id,
+            cfg,
+            program: program.instrs,
+            phase_marks,
+            mmio_parts: HashMap::new(),
+            delivered_through: 0,
+            next_dispatch: 0,
+            unit_queues: HashMap::new(),
+            active: HashMap::new(),
+            in_flight: Vec::new(),
+            tile_avail: vec![0; tiles],
+            outstanding: HashMap::new(),
+            next_token: 0,
+            slice_order,
+            rotor: vec![0; channels],
+            slice_coord,
+            retired: 0,
+            next_wake_at: Cycle::MAX,
+            stats: Dx100Stats::default(),
+            done: false,
+            instances_total,
+            line_bits: 6,
+        }
+    }
+
+    pub fn program_len(&self) -> usize {
+        self.program.len()
+    }
+
+    /// One third of instruction `seq` arrived (an MMIO store completed).
+    /// Returns true when the instruction became fully delivered.
+    pub fn deliver_part(&mut self, seq: u32) -> bool {
+        let parts = self.mmio_parts.entry(seq).or_insert(0);
+        *parts += 1;
+        if *parts >= 3 {
+            self.mmio_parts.remove(&seq);
+            self.delivered_through = self.delivered_through.max(seq + 1);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn tiles_in_use(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        for &seq in &self.in_flight {
+            let inst = &self.program[seq as usize].inst;
+            v.extend(inst.source_tiles());
+            v.extend(inst.dest_tiles());
+        }
+        v
+    }
+
+    /// In-order dispatch of fully delivered instructions, subject to the
+    /// scoreboard's destination-tile conflict rule.
+    fn dispatch(&mut self, env: &mut Dx100Env) {
+        while self.next_dispatch < self.delivered_through
+            && (self.next_dispatch as usize) < self.program.len()
+        {
+            let seq = self.next_dispatch;
+            // All parts of every instruction up to `delivered_through` have
+            // arrived; still make sure this one's parts are not pending.
+            if self.mmio_parts.contains_key(&seq) {
+                break;
+            }
+            let inst = self.program[seq as usize].inst;
+            let busy = self.tiles_in_use();
+            if inst.dest_tiles().iter().any(|t| busy.contains(t)) {
+                break; // WAW/WAR hazard: stall dispatch (no renaming, §3.5)
+            }
+            // Clear ready bits + availability of destination tiles.
+            for t in inst.dest_tiles() {
+                env.ready[t as usize] = false;
+                self.tile_avail[t as usize] = 0;
+            }
+            self.in_flight.push(seq);
+            self.unit_queues
+                .entry(inst.opcode.unit())
+                .or_default()
+                .push_back(seq);
+            self.next_dispatch += 1;
+        }
+    }
+
+    /// Elements of source tile `tile` currently consumable.
+    fn avail(&self, tile: u8) -> usize {
+        if tile == super::isa::NO_TILE {
+            usize::MAX
+        } else if self
+            .in_flight
+            .iter()
+            .any(|&s| self.program[s as usize].inst.dest_tiles().contains(&tile))
+        {
+            self.tile_avail[tile as usize]
+        } else {
+            usize::MAX // not being produced: fully available
+        }
+    }
+
+    fn start_ready_instrs(&mut self, t: Cycle) {
+        for unit in [Unit::Stream, Unit::Indirect, Unit::Alu, Unit::RangeFuser] {
+            if self.active.contains_key(&unit) {
+                continue;
+            }
+            let Some(&seq) = self.unit_queues.get(&unit).and_then(|q| q.front()) else {
+                continue;
+            };
+            let ti = &self.program[seq as usize];
+            // Range fuser consumes whole boundary tiles: require sources.
+            if ti.inst.opcode == Opcode::Rng {
+                let need = match &ti.trace {
+                    InstrTrace::Range { in_elems, .. } => *in_elems,
+                    _ => 0,
+                };
+                if self.avail(ti.inst.ts1) < need || self.avail(ti.inst.ts2) < need {
+                    continue;
+                }
+            }
+            self.unit_queues.get_mut(&unit).unwrap().pop_front();
+            let state = match &ti.trace {
+                InstrTrace::Stream {
+                    lines, is_store, elems,
+                } => ActiveState::Stream {
+                    lines: lines.clone(),
+                    pos: 0,
+                    done: 0,
+                    outstanding: 0,
+                    is_store: *is_store,
+                    elems: *elems,
+                    cursor: RateCursor { last: t, rate: 1 },
+                },
+                InstrTrace::Indirect {
+                    words,
+                    is_store,
+                    is_rmw,
+                    elems,
+                } => {
+                    let banks = self.slice_coord.len();
+                    ActiveState::Indirect {
+                        words: words.clone(),
+                        fill_pos: 0,
+                        rt: RowTable::new(banks, self.cfg.rowtab_rows, self.cfg.rowtab_cols),
+                        inflight: 0,
+                        words_done: 0,
+                        is_store: *is_store,
+                        is_rmw: *is_rmw,
+                        elems: *elems,
+                        cursor: RateCursor {
+                            last: t + if self.instances_total > 1 {
+                                REGION_COHERENCE_LATENCY
+                            } else {
+                                0
+                            },
+                            rate: self.cfg.fill_rate as u64,
+                        },
+                        retry: std::collections::VecDeque::new(),
+                        drainable: vec![false; banks],
+                    }
+                }
+                InstrTrace::Alu { elems } => ActiveState::Alu {
+                    pos: 0,
+                    elems: *elems,
+                    cursor: RateCursor {
+                        last: t,
+                        rate: self.cfg.alu_lanes as u64,
+                    },
+                },
+                InstrTrace::Range { out_elems, .. } => ActiveState::Range {
+                    produced: 0,
+                    out_elems: *out_elems,
+                    cursor: RateCursor {
+                        last: t,
+                        rate: RNG_RATE,
+                    },
+                },
+            };
+            self.active.insert(unit, ActiveInstr { seq, state });
+        }
+    }
+
+    /// Main state machine; call on every `Dx100Wake(self.id)`.
+    /// Returns `true` if any tile-ready flag changed (cores should re-poll).
+    pub fn wake(&mut self, t: Cycle, env: &mut Dx100Env) -> bool {
+        if self.next_wake_at <= t {
+            self.next_wake_at = Cycle::MAX;
+        }
+        self.dispatch(env);
+        self.start_ready_instrs(t);
+        let mut flags_changed = false;
+        let mut retired_units = Vec::new();
+        let units: Vec<Unit> = self.active.keys().copied().collect();
+        for unit in units {
+            let mut a = self.active.remove(&unit).unwrap();
+            let finished = self.progress(&mut a, t, env);
+            if finished {
+                self.retire(a.seq, t, env);
+                flags_changed = true;
+                retired_units.push(unit);
+            } else {
+                self.active.insert(unit, a);
+            }
+        }
+        if !retired_units.is_empty() {
+            // Units freed: try to start queued work immediately.
+            self.dispatch(env);
+            self.start_ready_instrs(t);
+        }
+        // Completion check.
+        if !self.done
+            && self.retired as usize == self.program.len()
+            && self.next_dispatch as usize == self.program.len()
+        {
+            self.done = true;
+            self.stats.finish_time = t;
+            flags_changed = true;
+        }
+        // Self-timer while rate-based work remains.
+        if self.has_rate_work() && self.request_wake(t + CHUNK) {
+            env.queue.push(t + CHUNK, Event::Dx100Wake(self.id));
+        }
+        flags_changed
+    }
+
+    fn has_rate_work(&self) -> bool {
+        self.active.values().any(|a| match &a.state {
+            ActiveState::Stream { pos, lines, .. } => *pos < lines.len(),
+            ActiveState::Indirect {
+                fill_pos,
+                words,
+                rt,
+                retry,
+                ..
+            } => *fill_pos < words.len() || !retry.is_empty() || !rt.is_empty(),
+            ActiveState::Alu { pos, elems, .. } => pos < elems,
+            ActiveState::Range {
+                produced,
+                out_elems,
+                ..
+            } => produced < out_elems,
+        }) || (!self.unit_queues.values().all(|q| q.is_empty()))
+    }
+
+    /// Advance one active instruction; returns true when it completed.
+    fn progress(&mut self, a: &mut ActiveInstr, t: Cycle, env: &mut Dx100Env) -> bool {
+        let inst = self.program[a.seq as usize].inst;
+        match &mut a.state {
+            ActiveState::Alu { pos, elems, cursor } => {
+                let budget = cursor.budget(t) as usize;
+                let avail = self.avail_many(&[inst.ts1, inst.ts2, inst.tc]);
+                let n = budget.min(avail.saturating_sub(*pos)).min(*elems - *pos);
+                *pos += n;
+                if inst.td != super::isa::NO_TILE {
+                    self.tile_avail[inst.td as usize] = *pos;
+                }
+                *pos >= *elems
+            }
+            ActiveState::Range {
+                produced,
+                out_elems,
+                cursor,
+            } => {
+                let budget = cursor.budget(t) as usize;
+                let n = budget.min(*out_elems - *produced);
+                *produced += n;
+                for d in inst.dest_tiles() {
+                    self.tile_avail[d as usize] = *produced;
+                }
+                *produced >= *out_elems
+            }
+            ActiveState::Stream {
+                lines,
+                pos,
+                done,
+                outstanding,
+                is_store,
+                elems,
+                cursor,
+            } => {
+                let mut budget = cursor.budget(t) as usize;
+                // For SST, data availability gates issue.
+                let src_avail = if *is_store {
+                    self.avail_one(inst.ts1)
+                } else {
+                    usize::MAX
+                };
+                while budget > 0
+                    && *pos < lines.len()
+                    && *outstanding < self.cfg.request_table
+                {
+                    if *is_store {
+                        // Can't store lines whose elements aren't ready yet.
+                        let elems_needed = ((*pos + 1) * *elems) / lines.len().max(1);
+                        if src_avail < elems_needed {
+                            break;
+                        }
+                    }
+                    let addr = lines[*pos];
+                    *pos += 1;
+                    budget -= 1;
+                    if !*is_store {
+                        if env.hier.llc_access(addr, t).is_some() {
+                            self.stats.llc_path_accesses += 1;
+                            *done += 1;
+                            continue;
+                        }
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.outstanding.insert(
+                        token,
+                        Outstanding {
+                            seq: a.seq,
+                            words: 0,
+                            is_store: *is_store,
+                            is_rmw: false,
+                            addr,
+                        },
+                    );
+                    env.mem.enqueue(
+                        t,
+                        addr,
+                        *is_store,
+                        ReqSource::Dx100 {
+                            instance: self.id,
+                            token,
+                        },
+                    );
+                    if *is_store {
+                        self.stats.dram_writes += 1;
+                    } else {
+                        self.stats.dram_reads += 1;
+                    }
+                    let ch = env.mem.channel_of(addr);
+                    if env.mem.sched_request(ch, t) {
+                        env.queue.push(t, Event::ChannelSched(ch));
+                    }
+                    *outstanding += 1;
+                }
+                // Progress for consumers (SLD produces the dest tile).
+                if !*is_store && inst.td != super::isa::NO_TILE && !lines.is_empty() {
+                    self.tile_avail[inst.td as usize] = (*done * *elems) / lines.len();
+                }
+                *done >= lines.len()
+            }
+            ActiveState::Indirect {
+                words,
+                fill_pos,
+                rt,
+                inflight,
+                words_done,
+                is_store,
+                is_rmw,
+                elems,
+                cursor,
+                retry,
+                drainable,
+            } => {
+                // --- Fill stage (stage 1) ---
+                // Insert words at fill_rate/cycle: retried words first, then
+                // the next tile elements (gated by producer availability for
+                // pipelined SLD->ILD). A word that hits a full slice marks
+                // that slice drainable and goes to the retry queue; filling
+                // of other slices continues, preserving the big reordering
+                // window everywhere else.
+                let mut budget = cursor.budget(t) as usize;
+                let src_avail = self.avail_one(inst.ts1);
+                let allowed = if src_avail == usize::MAX || *elems == 0 {
+                    words.len()
+                } else {
+                    (words.len() * src_avail) / *elems
+                };
+                while budget > 0 {
+                    let (addr, from_retry) = if let Some(&a) = retry.front() {
+                        (a, true)
+                    } else if *fill_pos < allowed.min(words.len()) {
+                        (words[*fill_pos], false)
+                    } else {
+                        break;
+                    };
+                    budget -= 1;
+                    let coord = env.mem.map.decode(addr);
+                    let bank = coord.flat_bank(&env.mem.map);
+                    let offset = ((addr >> 2) & ((1 << (self.line_bits - 2)) - 1)) as u8;
+                    let line = addr >> self.line_bits;
+                    let hier = &env.hier;
+                    match rt.insert(bank, coord.row, coord.col, offset, *fill_pos as u32, || {
+                        hier.snoop(line)
+                    }) {
+                        Ok(()) => {
+                            if from_retry {
+                                retry.pop_front();
+                            } else {
+                                *fill_pos += 1;
+                            }
+                            self.stats.inserted_words += 1;
+                        }
+                        Err(_) => {
+                            self.stats.slice_full_stalls += 1;
+                            drainable[bank] = true;
+                            if from_retry {
+                                break; // wait for that slice to drain
+                            }
+                            retry.push_back(addr);
+                            *fill_pos += 1;
+                        }
+                    }
+                }
+                let fill_complete = *fill_pos >= words.len() && retry.is_empty();
+                // --- Drain stage (stage 2: request generation) ---
+                for ch in 0..env.mem.cfg.channels {
+                    'chan: while env.mem.space_in(ch) > 0 {
+                        // Rotate slices of this channel (bank-group
+                        // alternating) to find a sendable access.
+                        let order = &self.slice_order[ch];
+                        let mut found = None;
+                        for k in 0..order.len() {
+                            let slice = order[(self.rotor[ch] + k) % order.len()];
+                            if !(fill_complete || drainable[slice]) {
+                                continue;
+                            }
+                            if rt.has_sendable(slice) {
+                                self.rotor[ch] = (self.rotor[ch] + k + 1) % order.len();
+                                found = Some(slice);
+                                break;
+                            } else if drainable[slice] {
+                                drainable[slice] = false; // emptied
+                            }
+                        }
+                        let Some(slice) = found else { break 'chan };
+                        let acc = rt.drain(slice).unwrap();
+                        self.stats.indirect_accesses += 1;
+                        let (c, r, g, b) = self.slice_coord[slice];
+                        let coord = DramCoord {
+                            channel: c,
+                            rank: r,
+                            bankgroup: g,
+                            bank: b,
+                            row: acc.row,
+                            col: acc.col,
+                        };
+                        let addr = env.mem.map.encode(coord);
+                        let nwords = acc.words.len() as u32;
+                        if acc.hit {
+                            // Cache Interface path: serve from LLC.
+                            self.stats.llc_path_accesses += 1;
+                            env.hier.llc_fill(addr, t);
+                            *words_done += nwords as usize;
+                            continue;
+                        }
+                        let token = self.next_token;
+                        self.next_token += 1;
+                        self.outstanding.insert(
+                            token,
+                            Outstanding {
+                                seq: a.seq,
+                                words: nwords,
+                                is_store: *is_store,
+                                is_rmw: *is_rmw,
+                                addr,
+                            },
+                        );
+                        env.mem.enqueue(
+                            t,
+                            addr,
+                            false, // read first; ST/RMW write back on response
+                            ReqSource::Dx100 {
+                                instance: self.id,
+                                token,
+                            },
+                        );
+                        self.stats.dram_reads += 1;
+                        if env.mem.sched_request(ch, t) {
+                            env.queue.push(t, Event::ChannelSched(ch));
+                        }
+                        *inflight += 1;
+                    }
+                }
+                // Dest-tile availability for pipelined consumers.
+                if !*is_store && inst.td != super::isa::NO_TILE && !words.is_empty() {
+                    self.tile_avail[inst.td as usize] = (*words_done * *elems) / words.len();
+                }
+                fill_complete && rt.is_empty() && *inflight == 0 && *words_done >= words.len()
+            }
+        }
+    }
+
+    fn avail_one(&self, tile: u8) -> usize {
+        self.avail(tile)
+    }
+
+    fn avail_many(&self, tiles: &[u8]) -> usize {
+        tiles.iter().map(|&t| self.avail(t)).min().unwrap_or(usize::MAX)
+    }
+
+    /// A DRAM completion for one of this instance's requests.
+    pub fn on_dram_done(
+        &mut self,
+        token: u64,
+        t: Cycle,
+        mem: &mut MemController,
+        queue: &mut EventQueue,
+    ) {
+        let Some(o) = self.outstanding.remove(&token) else {
+            return;
+        };
+        // Find the owning active instruction (it may be on any unit).
+        for a in self.active.values_mut() {
+            if a.seq != o.seq {
+                continue;
+            }
+            match &mut a.state {
+                ActiveState::Stream {
+                    done, outstanding, ..
+                } => {
+                    *done += 1;
+                    *outstanding -= 1;
+                }
+                ActiveState::Indirect {
+                    inflight,
+                    words_done,
+                    ..
+                } => {
+                    if (!o.is_store && !o.is_rmw) || o.is_write_followup() {
+                        *words_done += o.words as usize;
+                        *inflight -= 1;
+                    } else {
+                        // Read half of a store/RMW line: issue the write-back
+                        // (Word Modifier result, §3.2 stage 3).
+                        let wtoken = self.next_token;
+                        self.next_token += 1;
+                        self.outstanding.insert(
+                            wtoken,
+                            Outstanding {
+                                seq: o.seq,
+                                words: o.words,
+                                is_store: o.is_store,
+                                is_rmw: o.is_rmw,
+                                addr: u64::MAX, // marks the write half
+                            },
+                        );
+                        mem.enqueue(
+                            t,
+                            o.addr,
+                            true,
+                            ReqSource::Dx100 {
+                                instance: self.id,
+                                token: wtoken,
+                            },
+                        );
+                        self.stats.dram_writes += 1;
+                        let ch = mem.channel_of(o.addr);
+                        if mem.sched_request(ch, t) {
+                            queue.push(t, Event::ChannelSched(ch));
+                        }
+                    }
+                }
+                _ => {}
+            }
+            break;
+        }
+        if self.request_wake(t) {
+            queue.push(t, Event::Dx100Wake(self.id));
+        }
+    }
+
+    /// Dedup guard for `Dx100Wake` events.
+    fn request_wake(&mut self, t: Cycle) -> bool {
+        if t < self.next_wake_at {
+            self.next_wake_at = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn retire(&mut self, seq: u32, _t: Cycle, env: &mut Dx100Env) {
+        let inst = self.program[seq as usize].inst;
+        for d in inst.dest_tiles() {
+            self.tile_avail[d as usize] = usize::MAX / 2;
+            env.ready[d as usize] = true;
+        }
+        // Stores/RMWs have no dest tile; their completion is signaled via
+        // the source index tile's ready bit (wait-for-writes semantics).
+        if inst.dest_tiles().is_empty() && inst.ts1 != super::isa::NO_TILE {
+            env.ready[inst.ts1 as usize] = true;
+        }
+        // Phase-completion flag (monotonic; cores wait on these).
+        if let Some(&ph) = self.phase_marks.get(&seq) {
+            let flag = self.cfg.tiles + ph as usize;
+            if flag < env.ready.len() {
+                env.ready[flag] = true;
+            }
+        }
+        self.in_flight.retain(|&s| s != seq);
+        self.retired += 1;
+        self.stats.instructions += 1;
+    }
+}
+
+impl Outstanding {
+    /// The write half of a store/RMW uses addr == u64::MAX as a marker.
+    fn is_write_followup(&self) -> bool {
+        self.addr == u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::dx100::isa::{DType, NO_TILE};
+
+    /// Drive a single instance + DRAM to completion; returns finish time.
+    fn run_program(program: Dx100Program) -> (Cycle, Dx100Stats, crate::mem::DramStats) {
+        let cfg = SystemConfig::table3().for_dx100();
+        let mut mem = MemController::new(cfg.dram.clone());
+        let mut hier = Hierarchy::new(&cfg);
+        let mut queue = EventQueue::new();
+        let mut ready = vec![false; cfg.dx100.tiles];
+        let mut dx = Dx100Timing::new(0, cfg.dx100.clone(), program, &mem, 1);
+        // Deliver all instructions at t=0 (3 parts each).
+        for seq in 0..dx.program_len() as u32 {
+            for _ in 0..3 {
+                dx.deliver_part(seq);
+            }
+        }
+        queue.push(0, Event::Dx100Wake(0));
+        let mut t = 0;
+        let mut guard = 0u64;
+        while let Some(ev) = queue.pop() {
+            guard += 1;
+            assert!(guard < 50_000_000, "livelock");
+            t = ev.time;
+            match ev.event {
+                Event::Dx100Wake(_) => {
+                    let mut env = Dx100Env {
+                        hier: &mut hier,
+                        mem: &mut mem,
+                        queue: &mut queue,
+                        ready: &mut ready,
+                    };
+                    dx.wake(t, &mut env);
+                    if dx.done && !mem.has_pending() {
+                        break;
+                    }
+                }
+                Event::ChannelSched(ch) => {
+                    let (comps, wake) = mem.schedule(ch, t);
+                    for c in comps {
+                        queue.push(c.time, Event::DramDone(c.id));
+                        // Store routing info directly on the queue via a map
+                        // in this small harness:
+                        COMPLETIONS.with(|m| m.borrow_mut().insert(c.id, c));
+                    }
+                    if let Some(w) = wake {
+                        queue.push(w, Event::ChannelSched(ch));
+                    }
+                }
+                Event::DramDone(id) => {
+                    let c = COMPLETIONS.with(|m| m.borrow_mut().remove(&id)).unwrap();
+                    if let ReqSource::Dx100 { token, .. } = c.source {
+                        dx.on_dram_done(token, t, &mut mem, &mut queue);
+                    }
+                }
+                _ => {}
+            }
+        }
+        (t, dx.stats.clone(), mem.stats.clone())
+    }
+
+    thread_local! {
+        static COMPLETIONS: std::cell::RefCell<HashMap<u64, crate::mem::dram::Completion>> =
+            std::cell::RefCell::new(HashMap::new());
+    }
+
+    fn indirect_program(words: Vec<u64>) -> Dx100Program {
+        let elems = words.len();
+        Dx100Program {
+            phase_marks: vec![],
+            instrs: vec![TimedInstr {
+                inst: Instruction::ild(DType::U32, 0, 1, 0, NO_TILE),
+                trace: InstrTrace::Indirect {
+                    words,
+                    is_store: false,
+                    is_rmw: false,
+                    elems,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn random_gather_achieves_high_row_hit_rate() {
+        // 16K random words within a 16-row working set per bank: after
+        // reordering, row-buffer hit rate must be high (paper: 82-85% BW,
+        // ~87%+ RBH) even though the index order is random.
+        let mut rng = crate::util::Rng::new(42);
+        let region = 16u64 * 1024 * 1024; // 16 MiB = 64 rows' worth
+        let words: Vec<u64> = (0..16384).map(|_| rng.below(region / 4) * 4).collect();
+        let (t, stats, dram) = run_program(indirect_program(words));
+        assert!(t > 0);
+        let rbh = dram.row_hit_rate();
+        assert!(rbh > 0.7, "row hit rate {rbh} too low after reordering");
+        assert!(stats.indirect_accesses > 0);
+    }
+
+    #[test]
+    fn duplicate_words_coalesce() {
+        // 4K words all within 64 distinct lines: accesses ≈ 64, not 4096.
+        let mut rng = crate::util::Rng::new(7);
+        let words: Vec<u64> = (0..4096)
+            .map(|_| (rng.below(64) * 64) + (rng.below(16) * 4))
+            .collect();
+        let (_, stats, _) = run_program(indirect_program(words));
+        assert!(
+            stats.indirect_accesses <= 80,
+            "expected coalescing, got {} accesses",
+            stats.indirect_accesses
+        );
+        assert!(stats.coalesce_factor() > 40.0);
+    }
+
+    #[test]
+    fn bandwidth_utilization_is_high_for_bulk_gather() {
+        let mut rng = crate::util::Rng::new(11);
+        // Unique lines spread over 16 rows x all banks (paper §6.1 pattern).
+        let mut words: Vec<u64> = (0..16384u64).map(|i| i * 64).collect();
+        rng.shuffle(&mut words);
+        let (t, _, dram) = run_program(indirect_program(words));
+        let cfg = SystemConfig::table3().dram;
+        let util = dram.bw_utilization(t, &cfg);
+        assert!(util > 0.6, "DX100 bulk gather util {util} too low");
+    }
+
+    #[test]
+    fn store_rmw_generates_write_traffic() {
+        let words: Vec<u64> = (0..1024u64).map(|i| i * 64).collect();
+        let elems = words.len();
+        let program = Dx100Program {
+            phase_marks: vec![],
+            instrs: vec![TimedInstr {
+                inst: Instruction::irmw(DType::U32, 0, crate::dx100::isa::Op::Add, 0, 1, NO_TILE),
+                trace: InstrTrace::Indirect {
+                    words,
+                    is_store: false,
+                    is_rmw: true,
+                    elems,
+                },
+            }],
+        };
+        let (_, stats, dram) = run_program(program);
+        assert_eq!(stats.dram_writes as usize, 1024);
+        assert_eq!(dram.writes as usize, 1024);
+        assert_eq!(dram.reads as usize, 1024);
+    }
+
+    #[test]
+    fn stream_load_runs_and_fills_llc() {
+        let lines: Vec<u64> = (0..512u64).map(|i| 0x100000 + i * 64).collect();
+        let program = Dx100Program {
+            phase_marks: vec![],
+            instrs: vec![TimedInstr {
+                inst: Instruction::sld(DType::U32, 0x100000, 0, 0, 1, 2, NO_TILE),
+                trace: InstrTrace::Stream {
+                    lines,
+                    is_store: false,
+                    elems: 8192,
+                },
+            }],
+        };
+        let (t, stats, dram) = run_program(program);
+        assert_eq!(stats.dram_reads, 512);
+        assert_eq!(dram.reads, 512);
+        // Streaming at ~1 line / t_burst: should finish quickly.
+        assert!(t < 40_000, "stream took {t}");
+    }
+
+    #[test]
+    fn pipelined_sld_ild_overlaps() {
+        // SLD produces the index tile; ILD consumes it as elements arrive
+        // (per-element finish bits). With a coalescing-friendly word set the
+        // ILD is fill-dominated, so overlap with the SLD must show up.
+        let lines: Vec<u64> = (0..256u64).map(|i| 0x200000 + i * 64).collect();
+        let mut rng = crate::util::Rng::new(3);
+        let words: Vec<u64> = (0..4096).map(|_| (rng.below(128) * 64) | (rng.below(16) * 4)).collect();
+        let mk = |insts: Vec<TimedInstr>| Dx100Program { instrs: insts, phase_marks: vec![] };
+        let sld = TimedInstr {
+            inst: Instruction::sld(DType::U32, 0x200000, 0, 0, 1, 2, NO_TILE),
+            trace: InstrTrace::Stream {
+                lines: lines.clone(),
+                is_store: false,
+                elems: 4096,
+            },
+        };
+        let ild = TimedInstr {
+            inst: Instruction::ild(DType::U32, 0, 1, 0, NO_TILE),
+            trace: InstrTrace::Indirect {
+                words: words.clone(),
+                is_store: false,
+                is_rmw: false,
+                elems: 4096,
+            },
+        };
+        let (t_both, _, _) = run_program(mk(vec![sld.clone(), ild.clone()]));
+        let (t_sld, _, _) = run_program(mk(vec![sld]));
+        let (t_ild, _, _) = run_program(mk(vec![ild]));
+        assert!(
+            (t_both as f64) < 0.95 * (t_sld + t_ild) as f64,
+            "no overlap: both={t_both} sld={t_sld} ild={t_ild}"
+        );
+    }
+
+    #[test]
+    fn alu_throughput_matches_lanes() {
+        let program = Dx100Program {
+            phase_marks: vec![],
+            instrs: vec![TimedInstr {
+                inst: Instruction::aluv(DType::U32, crate::dx100::isa::Op::Add, 2, 0, 1, NO_TILE),
+                trace: InstrTrace::Alu { elems: 16384 },
+            }],
+        };
+        let (t, _, _) = run_program(program);
+        // 16384 elems / 16 lanes = 1024 cycles (+ wake granularity).
+        assert!((1024..1024 + 3 * CHUNK).contains(&t), "alu took {t}");
+    }
+
+    #[test]
+    fn waw_hazard_stalls_dispatch() {
+        // Two ALU instructions writing the same tile: the second must wait.
+        let mk_alu = || TimedInstr {
+            inst: Instruction::aluv(DType::U32, crate::dx100::isa::Op::Add, 2, 0, 1, NO_TILE),
+            trace: InstrTrace::Alu { elems: 4096 },
+        };
+        let program = Dx100Program {
+            instrs: vec![mk_alu(), mk_alu()],
+            phase_marks: vec![],
+        };
+        let (t, stats, _) = run_program(program);
+        assert_eq!(stats.instructions, 2);
+        // Strictly serialized: >= 2 * 4096/16 cycles.
+        assert!(t >= 2 * 256, "WAW not serialized: {t}");
+    }
+}

@@ -1,0 +1,273 @@
+//! DX100 command-line driver.
+//!
+//! ```text
+//! dx100 run --workload CG --scale 4          # one workload, 3 systems
+//! dx100 suite --scale 4                      # all 12 workloads (Fig 9-11)
+//! dx100 micro                                # §6.1 microbenchmarks (Fig 8a)
+//! dx100 allmiss                              # Fig 8b/c sweep
+//! dx100 tilesweep                            # Fig 13
+//! dx100 scaling                              # Fig 14
+//! dx100 area                                 # Table 4
+//! dx100 isa                                  # Table 2 listing
+//! dx100 runtime                              # PJRT artifact smoke test
+//! ```
+//!
+//! Config overrides: `--set key=value` (see `SystemConfig::with_overrides`).
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::dx100::area::AreaReport;
+use dx100::metrics::Comparison;
+use dx100::report;
+use dx100::workloads::{self, micro, Scale};
+use std::collections::BTreeMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut kv = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--set" if i + 1 < args.len() => {
+                if let Some((k, v)) = args[i + 1].split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                }
+                i += 2;
+            }
+            flag if flag.starts_with("--") && i + 1 < args.len() => {
+                kv.insert(
+                    flag.trim_start_matches("--").to_string(),
+                    args[i + 1].clone(),
+                );
+                i += 2;
+            }
+            p => {
+                pos.push(p.to_string());
+                i += 1;
+            }
+        }
+    }
+    (pos, kv)
+}
+
+fn scale_of(kv: &BTreeMap<String, String>) -> Scale {
+    Scale(
+        kv.get("scale")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(Scale::default_bench().0),
+    )
+}
+
+fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
+    let overrides: BTreeMap<String, String> = kv
+        .iter()
+        .filter(|(k, _)| !["scale", "workload", "system"].contains(&k.as_str()))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    SystemConfig::table3()
+        .with_overrides(&overrides)
+        .unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+}
+
+fn compare(w: &workloads::WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comparison {
+    let baseline = Experiment::new(SystemKind::Baseline, cfg.clone()).run(w);
+    let dmp = with_dmp.then(|| Experiment::new(SystemKind::Dmp, cfg.clone()).run(w));
+    let dx100 = Experiment::new(SystemKind::Dx100, cfg.clone()).run(w);
+    Comparison {
+        workload: w.program.name,
+        baseline,
+        dmp,
+        dx100,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, kv) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let cfg = cfg_of(&kv);
+    match cmd {
+        "run" => {
+            let name = kv
+                .get("workload")
+                .map(String::as_str)
+                .unwrap_or("Gather-Full");
+            let scale = scale_of(&kv);
+            let w = workloads::all(scale)
+                .into_iter()
+                .find(|w| w.program.name.eq_ignore_ascii_case(name))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown workload {name}; options: {:?}", workloads::names());
+                    std::process::exit(2);
+                });
+            let c = compare(&w, &cfg, true);
+            println!("{}", report::speedup_table(std::slice::from_ref(&c)));
+            println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
+            println!("{}", report::instr_mpki_table(std::slice::from_ref(&c)));
+        }
+        "suite" => {
+            let scale = scale_of(&kv);
+            let mut comps = Vec::new();
+            for w in workloads::all(scale) {
+                eprintln!("running {} ...", w.program.name);
+                comps.push(compare(&w, &cfg, true));
+            }
+            println!("== Figure 9: speedup ==\n{}", report::speedup_table(&comps));
+            println!(
+                "== Figure 10: bandwidth / RBH / occupancy ==\n{}",
+                report::bandwidth_table(&comps)
+            );
+            println!(
+                "== Figure 11: instructions / MPKI ==\n{}",
+                report::instr_mpki_table(&comps)
+            );
+            let vs_dmp: Vec<f64> = comps.iter().filter_map(|c| c.speedup_vs_dmp()).collect();
+            println!(
+                "== Figure 12a: speedup vs DMP geomean: {:.2}x ==",
+                dx100::util::geomean(&vs_dmp)
+            );
+        }
+        "micro" => {
+            let n = 1 << 16;
+            let pats = [
+                micro::gather_spd(n, micro::IndexPattern::Streaming, 1),
+                micro::gather_full(n, micro::IndexPattern::Streaming, 2),
+                micro::rmw(n, true, micro::IndexPattern::Streaming, 3),
+                micro::rmw(n, false, micro::IndexPattern::Streaming, 3),
+                micro::scatter(n, micro::IndexPattern::Streaming, 4),
+            ];
+            println!("== Figure 8a: All-Hits microbenchmarks ==");
+            for w in &pats {
+                let c = compare(w, &cfg, false);
+                println!(
+                    "{:<12} base={:>9}cyc dx={:>9}cyc speedup={:.2}x instr_red={:.1}x",
+                    c.workload,
+                    c.baseline.cycles,
+                    c.dx100.cycles,
+                    c.speedup(),
+                    c.instr_reduction()
+                );
+            }
+        }
+        "allmiss" => {
+            println!("== Figure 8b/c: All-Misses sweep (RBH/CHI/BGI) ==");
+            let orders = [
+                (0.0, false, false),
+                (0.5, false, false),
+                (1.0, false, false),
+                (1.0, true, false),
+                (1.0, true, true),
+            ];
+            for (rbh, chi, bgi) in orders {
+                let w =
+                    micro::gather_allmiss(&cfg.dram, 16, micro::AllMissOrder { rbh, chi, bgi });
+                let c = compare(&w, &cfg, false);
+                println!(
+                    "rbh={rbh:.1} chi={chi} bgi={bgi}: speedup={:.2}x baseBW={:.0}% dxBW={:.0}%",
+                    c.speedup(),
+                    c.baseline.bw_util * 100.0,
+                    c.dx100.bw_util * 100.0
+                );
+            }
+        }
+        "tilesweep" => {
+            println!("== Figure 13: tile-size sensitivity ==");
+            let scale = scale_of(&kv);
+            for tile in [1024usize, 4096, 16384, 32768] {
+                let mut c2 = cfg.clone();
+                c2.dx100.tile_elems = tile;
+                let mut speedups = Vec::new();
+                for w in workloads::all(scale) {
+                    let c = compare(&w, &c2, false);
+                    speedups.push(c.speedup());
+                }
+                println!(
+                    "tile={:>6}: geomean speedup {:.2}x",
+                    tile,
+                    dx100::util::geomean(&speedups)
+                );
+            }
+        }
+        "scaling" => {
+            println!("== Figure 14: core/instance scaling ==");
+            let scale = scale_of(&kv);
+            let configs = [
+                ("4c/2ch/1xDX100", SystemConfig::table3(), 1),
+                ("8c/4ch/1xDX100", SystemConfig::table3_8core(), 1),
+                ("8c/4ch/2xDX100", SystemConfig::table3_8core(), 2),
+            ];
+            for (name, mut c2, inst) in configs {
+                c2.dx100.instances = inst;
+                let mut speedups = Vec::new();
+                for w in workloads::all(scale) {
+                    let c = compare(&w, &c2, false);
+                    speedups.push(c.speedup());
+                }
+                println!(
+                    "{name}: geomean speedup {:.2}x",
+                    dx100::util::geomean(&speedups)
+                );
+            }
+        }
+        "area" => {
+            let r = AreaReport::for_config(&cfg.dx100);
+            println!("== Table 4: DX100 area & power (28 nm) ==");
+            println!("{:<16} {:>10} {:>10}", "Module", "Area(mm2)", "Power(mW)");
+            for (name, c) in r.components() {
+                println!("{:<16} {:>10.3} {:>10.2}", name, c.area_mm2, c.power_mw);
+            }
+            let t = r.total();
+            println!("{:<16} {:>10.3} {:>10.2}", "Total", t.area_mm2, t.power_mw);
+            println!(
+                "14nm area: {:.2} mm2; processor overhead (4 cores): {:.1}%",
+                r.total_area_14nm(),
+                r.processor_overhead(4) * 100.0
+            );
+        }
+        "isa" => {
+            use dx100::dx100::isa::*;
+            println!("== Table 2: DX100 ISA ==");
+            let examples = vec![
+                Instruction::ild(DType::F32, 0x4000_0000, 1, 0, NO_TILE),
+                Instruction::ist(DType::F32, 0x4000_0000, 0, 1, 2),
+                Instruction::irmw(DType::F32, 0x4000_0000, Op::Add, 0, 1, NO_TILE),
+                Instruction::sld(DType::U32, 0x8000_0000, 0, 0, 1, 2, NO_TILE),
+                Instruction::sst(DType::U32, 0x8000_0000, 0, 0, 1, 2, NO_TILE),
+                Instruction::aluv(DType::F32, Op::Mul, 2, 0, 1, NO_TILE),
+                Instruction::alus(DType::U32, Op::Shr, 1, 0, 3, NO_TILE),
+                Instruction::rng(2, 3, 0, 1, NO_TILE),
+            ];
+            for i in examples {
+                let enc = i.encode();
+                println!(
+                    "{i}\n    encoding: {:#018x} {:#018x} {:#018x}",
+                    enc[0], enc[1], enc[2]
+                );
+            }
+        }
+        "runtime" => match dx100::runtime::TileRuntime::load_default() {
+            Ok(rt) => {
+                println!("PJRT platform: {}", rt.platform());
+                println!("artifacts: {:?}", rt.names());
+                let data: Vec<f32> = (0..rt.shapes.data_n).map(|i| i as f32).collect();
+                let idx: Vec<i32> = (0..rt.shapes.tile as i32).rev().collect();
+                let out = rt.gather_f32(&data, &idx).expect("gather");
+                assert_eq!(out[0], (rt.shapes.tile - 1) as f32);
+                println!("gather_f32 OK ({} elements)", out.len());
+            }
+            Err(e) => {
+                eprintln!("runtime error: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        _ => {
+            println!(
+                "usage: dx100 <run|suite|micro|allmiss|tilesweep|scaling|area|isa|runtime> \
+                 [--workload NAME] [--scale N] [--set key=value]"
+            );
+        }
+    }
+}

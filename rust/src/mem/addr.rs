@@ -1,0 +1,179 @@
+//! Physical-address → DRAM-coordinate mapping.
+//!
+//! The default interleaving is `Ro:Co:Ba:Bg:Ch` (row bits highest, then
+//! column, bank, bank group, channel lowest — all above the 64B line
+//! offset). Consecutive cache lines therefore rotate across channels first,
+//! then bank groups, then banks, maximizing channel and bank-group
+//! parallelism for streams, while each DRAM row still holds 128 consecutive
+//! same-bank columns — the organization §2.1 of the paper assumes.
+
+use crate::config::DramConfig;
+use crate::util::log2_exact;
+
+/// Decoded DRAM coordinates for one cache line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DramCoord {
+    pub channel: u32,
+    pub rank: u32,
+    pub bankgroup: u32,
+    pub bank: u32,
+    pub row: u32,
+    /// Column in units of cache lines within the row.
+    pub col: u32,
+}
+
+impl DramCoord {
+    /// Flat bank index across the whole system (used to index bank state and
+    /// Row Table slices).
+    pub fn flat_bank(&self, map: &AddrMap) -> usize {
+        (((self.channel as usize * map.ranks + self.rank as usize) * map.bankgroups
+            + self.bankgroup as usize)
+            * map.banks_per_group)
+            + self.bank as usize
+    }
+}
+
+/// Bit-slicing address map.
+#[derive(Clone, Debug)]
+pub struct AddrMap {
+    pub line_bits: u32,
+    pub ch_bits: u32,
+    pub bg_bits: u32,
+    pub ba_bits: u32,
+    pub ra_bits: u32,
+    pub co_bits: u32,
+    pub ranks: usize,
+    pub bankgroups: usize,
+    pub banks_per_group: usize,
+}
+
+impl AddrMap {
+    pub fn new(cfg: &DramConfig) -> Self {
+        AddrMap {
+            line_bits: log2_exact(cfg.line_bytes as u64),
+            ch_bits: log2_exact(cfg.channels as u64).max(0),
+            bg_bits: log2_exact(cfg.bankgroups as u64),
+            ba_bits: log2_exact(cfg.banks_per_group as u64),
+            ra_bits: log2_exact(cfg.ranks as u64),
+            co_bits: log2_exact((cfg.row_bytes / cfg.line_bytes) as u64),
+            ranks: cfg.ranks,
+            bankgroups: cfg.bankgroups,
+            banks_per_group: cfg.banks_per_group,
+        }
+    }
+
+    /// Decode a byte address into DRAM coordinates.
+    ///
+    /// Layout (LSB→MSB above the line offset): channel, bankgroup, bank,
+    /// rank, column, row.
+    pub fn decode(&self, addr: u64) -> DramCoord {
+        let mut a = addr >> self.line_bits;
+        let take = |a: &mut u64, bits: u32| -> u32 {
+            let v = (*a & ((1u64 << bits) - 1)) as u32;
+            *a >>= bits;
+            v
+        };
+        let channel = take(&mut a, self.ch_bits);
+        let bankgroup = take(&mut a, self.bg_bits);
+        let bank = take(&mut a, self.ba_bits);
+        let rank = take(&mut a, self.ra_bits);
+        let col = take(&mut a, self.co_bits);
+        let row = a as u32;
+        DramCoord {
+            channel,
+            rank,
+            bankgroup,
+            bank,
+            row,
+            col,
+        }
+    }
+
+    /// Re-encode coordinates into a byte address (inverse of [`decode`]).
+    pub fn encode(&self, c: DramCoord) -> u64 {
+        let mut a: u64 = c.row as u64;
+        a = (a << self.co_bits) | c.col as u64;
+        a = (a << self.ra_bits) | c.rank as u64;
+        a = (a << self.ba_bits) | c.bank as u64;
+        a = (a << self.bg_bits) | c.bankgroup as u64;
+        a = (a << self.ch_bits) | c.channel as u64;
+        a << self.line_bits
+    }
+
+    /// Total number of flat banks.
+    pub fn total_banks(&self, channels: usize) -> usize {
+        channels * self.ranks * self.bankgroups * self.banks_per_group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn map() -> AddrMap {
+        AddrMap::new(&SystemConfig::table3().dram)
+    }
+
+    #[test]
+    fn roundtrip_many_addresses() {
+        let m = map();
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..10_000 {
+            let addr = (rng.next_u64() % (1 << 34)) & !63; // line-aligned
+            let c = m.decode(addr);
+            assert_eq!(m.encode(c), addr);
+        }
+    }
+
+    #[test]
+    fn consecutive_lines_interleave_channels_then_bankgroups() {
+        let m = map();
+        let c0 = m.decode(0);
+        let c1 = m.decode(64);
+        let c2 = m.decode(128);
+        let c4 = m.decode(4 * 64);
+        assert_eq!(c0.channel, 0);
+        assert_eq!(c1.channel, 1); // channel bit is lowest
+        assert_eq!(c2.channel, 0);
+        assert_eq!(c2.bankgroup, 1); // then bank group
+        assert_eq!(c4.bankgroup, 2);
+        assert_eq!(c0.row, c4.row);
+    }
+
+    #[test]
+    fn row_spans_expected_bytes() {
+        let m = map();
+        // With ch(1)+bg(2)+ba(2)+co(7) bits above the 6 line bits, the row
+        // changes every 2^(6+1+2+2+7) = 256 KiB.
+        let c_a = m.decode(0);
+        let c_b = m.decode((256 * 1024) - 64);
+        let c_c = m.decode(256 * 1024);
+        assert_eq!(c_a.row, c_b.row);
+        assert_eq!(c_c.row, c_a.row + 1);
+    }
+
+    #[test]
+    fn flat_bank_is_dense_and_unique() {
+        let m = map();
+        let mut seen = std::collections::HashSet::new();
+        for line in 0..64u64 {
+            let c = m.decode(line * 64);
+            seen.insert(c.flat_bank(&m));
+        }
+        // 2ch x 4bg x 4ba = 32 distinct banks touched by 64 consecutive lines
+        assert_eq!(seen.len(), 32);
+        assert!(seen.iter().all(|&b| b < 32));
+    }
+
+    #[test]
+    fn same_bank_same_row_differs_only_in_col() {
+        let m = map();
+        let a = m.decode(0);
+        // Next column of the same bank: stride = ch*bg*ba lines = 32 lines.
+        let b = m.decode(32 * 64);
+        assert_eq!(a.flat_bank(&m), b.flat_bank(&m));
+        assert_eq!(a.row, b.row);
+        assert_eq!(b.col, a.col + 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! DRAM subsystem: DDR4 address mapping, bank timing state, and an FR-FCFS
+//! memory controller with a bounded request buffer per channel.
+//!
+//! This is the Ramulator2 stand-in. It is transaction-level: instead of
+//! stepping every DRAM clock, the controller computes the full PRE/ACT/CAS
+//! command timeline of a request analytically from per-bank and per-channel
+//! resource-availability times when the request is *committed*, and wakes
+//! itself at the next interesting instant. Bank-level parallelism is modeled
+//! by allowing one committed-but-unfinished request per bank.
+
+pub mod addr;
+pub mod dram;
+
+pub use addr::{AddrMap, DramCoord};
+pub use dram::{DramStats, MemController, MemRequest, ReqSource};

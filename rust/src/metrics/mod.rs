@@ -1,0 +1,144 @@
+//! Derived metrics over [`crate::coordinator::RunStats`]: speedups,
+//! geometric means, and paper-style comparison rows.
+
+use crate::config::SystemConfig;
+use crate::coordinator::{Experiment, RunStats, SystemKind};
+use crate::util::geomean;
+use crate::workloads::{self, Scale, WorkloadSpec};
+
+/// One workload's baseline/DMP/DX100 comparison.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub workload: &'static str,
+    pub baseline: RunStats,
+    pub dmp: Option<RunStats>,
+    pub dx100: RunStats,
+}
+
+impl Comparison {
+    /// Figure 9: DX100 speedup over the baseline.
+    pub fn speedup(&self) -> f64 {
+        self.dx100.speedup_over(&self.baseline)
+    }
+
+    /// Figure 12a: DX100 speedup over DMP.
+    pub fn speedup_vs_dmp(&self) -> Option<f64> {
+        self.dmp.as_ref().map(|d| self.dx100.speedup_over(d))
+    }
+
+    /// Figure 10a: bandwidth-utilization improvement.
+    pub fn bw_improvement(&self) -> f64 {
+        self.dx100.bw_util / self.baseline.bw_util.max(1e-9)
+    }
+
+    /// Figure 10b: row-buffer-hit-rate improvement.
+    pub fn rbh_improvement(&self) -> f64 {
+        self.dx100.row_hit_rate / self.baseline.row_hit_rate.max(1e-9)
+    }
+
+    /// Figure 10c: request-buffer-occupancy improvement.
+    pub fn occupancy_improvement(&self) -> f64 {
+        self.dx100.occupancy / self.baseline.occupancy.max(1e-9)
+    }
+
+    /// Figure 11a: instruction reduction (baseline / DX100).
+    pub fn instr_reduction(&self) -> f64 {
+        self.baseline.instrs as f64 / self.dx100.instrs.max(1) as f64
+    }
+
+    /// Figure 11b: MPKI reduction (baseline / DX100). The DX100 MPKI is
+    /// floored at 0.01 — fully-offloaded kernels leave the cores with
+    /// (nearly) zero misses.
+    pub fn mpki_reduction(&self) -> f64 {
+        self.baseline.mpki / self.dx100.mpki.max(0.01)
+    }
+}
+
+/// Geometric mean of a metric over comparisons.
+pub fn geomean_of(comps: &[Comparison], f: impl Fn(&Comparison) -> f64) -> f64 {
+    geomean(&comps.iter().map(f).collect::<Vec<_>>())
+}
+
+/// Run baseline (+DMP) + DX100 for one workload.
+pub fn compare_one(w: &WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comparison {
+    let baseline = Experiment::new(SystemKind::Baseline, cfg.clone()).run(w);
+    let dmp = with_dmp.then(|| Experiment::new(SystemKind::Dmp, cfg.clone()).run(w));
+    let dx100 = Experiment::new(SystemKind::Dx100, cfg.clone()).run(w);
+    Comparison {
+        workload: w.program.name,
+        baseline,
+        dmp,
+        dx100,
+    }
+}
+
+/// Run the full 12-workload suite (Figures 9-12).
+pub fn run_suite(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> Vec<Comparison> {
+    workloads::all(scale)
+        .iter()
+        .map(|w| compare_one(w, cfg, with_dmp))
+        .collect()
+}
+
+/// Bench scale from `DX100_SCALE` (default 2 — a few seconds per figure).
+pub fn bench_scale() -> Scale {
+    Scale(
+        std::env::var("DX100_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SystemKind;
+    use crate::sim::Cycle;
+
+    fn fake(kind: SystemKind, cycles: Cycle, instrs: u64, bw: f64) -> RunStats {
+        RunStats {
+            kind,
+            workload: "t",
+            cycles,
+            instrs,
+            spin_instrs: 0,
+            bw_util: bw,
+            row_hit_rate: 0.5,
+            occupancy: 4.0,
+            mpki: 10.0,
+            dram_reads: 0,
+            dram_writes: 0,
+            dram_bytes: 0,
+            dx: vec![],
+            events: 0,
+        }
+    }
+
+    #[test]
+    fn comparison_math() {
+        let c = Comparison {
+            workload: "t",
+            baseline: fake(SystemKind::Baseline, 1000, 4000, 0.2),
+            dmp: Some(fake(SystemKind::Dmp, 600, 4000, 0.3)),
+            dx100: fake(SystemKind::Dx100, 400, 1000, 0.8),
+        };
+        assert!((c.speedup() - 2.5).abs() < 1e-9);
+        assert!((c.speedup_vs_dmp().unwrap() - 1.5).abs() < 1e-9);
+        assert!((c.bw_improvement() - 4.0).abs() < 1e-9);
+        assert!((c.instr_reduction() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_over_comparisons() {
+        let mk = |cy| Comparison {
+            workload: "t",
+            baseline: fake(SystemKind::Baseline, 1000, 1, 0.1),
+            dmp: None,
+            dx100: fake(SystemKind::Dx100, cy, 1, 0.1),
+        };
+        let comps = vec![mk(1000), mk(250)];
+        let g = geomean_of(&comps, |c| c.speedup());
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+}

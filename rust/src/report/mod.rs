@@ -1,0 +1,79 @@
+//! Paper-style text rendering of experiment results (the benches print
+//! these tables; see EXPERIMENTS.md for the recorded outputs).
+
+use crate::metrics::Comparison;
+use crate::util::geomean;
+
+/// Render a Figure-9-style speedup table.
+pub fn speedup_table(comps: &[Comparison]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>9}\n",
+        "workload", "base(cyc)", "dx(cyc)", "speedup"
+    ));
+    for c in comps {
+        out.push_str(&format!(
+            "{:<8} {:>10} {:>10} {:>8.2}x\n",
+            c.workload, c.baseline.cycles, c.dx100.cycles, c.speedup()
+        ));
+    }
+    let g = geomean(&comps.iter().map(|c| c.speedup()).collect::<Vec<_>>());
+    out.push_str(&format!("{:<8} {:>30.2}x (geomean)\n", "ALL", g));
+    out
+}
+
+/// Render a Figure-10-style bandwidth/RBH/occupancy table.
+pub fn bandwidth_table(comps: &[Comparison]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>8} {:>8} | {:>6} {:>6} | {:>6} {:>6}\n",
+        "workload", "baseBW%", "dxBW%", "bRBH%", "dxRBH%", "bOcc", "dxOcc"
+    ));
+    for c in comps {
+        out.push_str(&format!(
+            "{:<8} {:>7.1}% {:>7.1}% | {:>5.1}% {:>5.1}% | {:>6.1} {:>6.1}\n",
+            c.workload,
+            c.baseline.bw_util * 100.0,
+            c.dx100.bw_util * 100.0,
+            c.baseline.row_hit_rate * 100.0,
+            c.dx100.row_hit_rate * 100.0,
+            c.baseline.occupancy,
+            c.dx100.occupancy,
+        ));
+    }
+    out
+}
+
+/// Render a Figure-11-style instruction/MPKI table.
+pub fn instr_mpki_table(comps: &[Comparison]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>12} {:>12} {:>8} | {:>8} {:>8} {:>8}\n",
+        "workload", "baseInstr", "dxInstr", "reduct", "baseMPKI", "dxMPKI", "reduct"
+    ));
+    for c in comps {
+        out.push_str(&format!(
+            "{:<8} {:>12} {:>12} {:>7.2}x | {:>8.2} {:>8.2} {:>7.2}x\n",
+            c.workload,
+            c.baseline.instrs,
+            c.dx100.instrs,
+            c.instr_reduction(),
+            c.baseline.mpki,
+            c.dx100.mpki,
+            c.mpki_reduction(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tables_render() {
+        // Smoke-tested indirectly by the benches; keep a trivial assertion
+        // that the helpers exist and format sanely with empty input.
+        assert!(super::speedup_table(&[]).contains("workload"));
+        assert!(super::bandwidth_table(&[]).contains("dxBW%"));
+        assert!(super::instr_mpki_table(&[]).contains("baseMPKI"));
+    }
+}

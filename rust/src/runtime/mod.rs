@@ -1,0 +1,205 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas tile kernels from
+//! `artifacts/*.hlo.txt` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the three layers meet at run time: Python lowered
+//! the Layer-2 model (which calls the Layer-1 Pallas kernels) to HLO
+//! **text** once (`make artifacts`), and this module compiles + executes
+//! those artifacts from Rust. Python never runs on the simulation path.
+//!
+//! HLO text is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Shapes baked into the AOT artifacts (mirrors python/compile/model.py).
+#[derive(Clone, Copy, Debug)]
+pub struct TileShapes {
+    pub tile: usize,
+    pub data_n: usize,
+    pub range_cap: usize,
+}
+
+/// Runtime holding compiled executables for every artifact.
+pub struct TileRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub shapes: TileShapes,
+}
+
+impl TileRuntime {
+    /// Load every artifact in `dir` (compiling each HLO once).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("missing manifest in {dir:?}; run `make artifacts`"))?;
+        let header = manifest.lines().next().unwrap_or_default();
+        let mut tile = 4096;
+        let mut data_n = 1 << 18;
+        let mut range_cap = 4 * 4096;
+        for kv in header.split_whitespace() {
+            let mut it = kv.split('=');
+            match (it.next(), it.next()) {
+                (Some("tile"), Some(v)) => tile = v.parse()?,
+                (Some("data_n"), Some(v)) => data_n = v.parse()?,
+                (Some("range_cap"), Some(v)) => range_cap = v.parse()?,
+                _ => {}
+            }
+        }
+        let mut exes = HashMap::new();
+        for line in manifest.lines().skip(1) {
+            let Some(name) = line.split_whitespace().next() else {
+                continue;
+            };
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(TileRuntime {
+            client,
+            exes,
+            shapes: TileShapes {
+                tile,
+                data_n,
+                range_cap,
+            },
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// current working directory (or its parents).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&find_artifacts()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute artifact `name` with the given literals; returns the tuple
+    /// elements of the result.
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        Ok(tuple)
+    }
+
+    /// `out[i] = data[idx[i]]` via the Pallas gather artifact.
+    pub fn gather_f32(&self, data: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+        self.check_shapes(data.len(), idx.len())?;
+        let out = self.execute(
+            "gather_f32",
+            &[xla::Literal::vec1(data), xla::Literal::vec1(idx)],
+        )?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+    }
+
+    /// `data[idx[i]] += vals[i]` (duplicates accumulate).
+    pub fn scatter_add_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+        self.check_shapes(data.len(), idx.len())?;
+        let out = self.execute(
+            "scatter_add_f32",
+            &[
+                xla::Literal::vec1(data),
+                xla::Literal::vec1(idx),
+                xla::Literal::vec1(vals),
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+    }
+
+    /// `data[idx[i]] = vals[i]` (last write wins).
+    pub fn scatter_set_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+        self.check_shapes(data.len(), idx.len())?;
+        let out = self.execute(
+            "scatter_set_f32",
+            &[
+                xla::Literal::vec1(data),
+                xla::Literal::vec1(idx),
+                xla::Literal::vec1(vals),
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+    }
+
+    /// One SpMV tile: `y[row[k]] += vals[k] * x[col[k]]`.
+    pub fn spmv_tile_f32(
+        &self,
+        vals: &[f32],
+        col: &[i32],
+        row: &[i32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<Vec<f32>> {
+        let out = self.execute(
+            "spmv_tile_f32",
+            &[
+                xla::Literal::vec1(vals),
+                xla::Literal::vec1(col),
+                xla::Literal::vec1(row),
+                xla::Literal::vec1(x),
+                xla::Literal::vec1(y),
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+    }
+
+    fn check_shapes(&self, data: usize, idx: usize) -> Result<()> {
+        if data != self.shapes.data_n || idx != self.shapes.tile {
+            Err(anyhow!(
+                "shape mismatch: data {data} (want {}), idx {idx} (want {})",
+                self.shapes.data_n,
+                self.shapes.tile
+            ))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Walk up from the current directory to find `artifacts/manifest.txt`.
+pub fn find_artifacts() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            return Err(anyhow!(
+                "artifacts/manifest.txt not found; run `make artifacts` first"
+            ));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Binary-heap event queue with FIFO tie-breaking at equal timestamps.
+
+use super::{Cycle, Event};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a point in simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct Scheduled {
+    pub time: Cycle,
+    /// Monotonic sequence number; breaks ties FIFO.
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse order: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of scheduled events.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `time`.
+    pub fn push(&mut self, time: Cycle, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    /// Time of the next event without removing it.
+    pub fn peek_time(&self) -> Option<Cycle> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(100, Event::Timer(0));
+        q.push(50, Event::Timer(1));
+        assert_eq!(q.peek_time(), Some(50));
+        assert_eq!(q.pop().unwrap().time, 50);
+        assert_eq!(q.peek_time(), Some(100));
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1, Event::Timer(0));
+        q.push(2, Event::Timer(1));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        q.pop();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn large_interleaved_order() {
+        let mut q = EventQueue::new();
+        // Push in a scrambled order; pop must be sorted.
+        for i in (0..1000u64).rev() {
+            q.push(i * 3 % 997, Event::Timer(i));
+        }
+        let mut last = 0;
+        while let Some(s) = q.pop() {
+            assert!(s.time >= last);
+            last = s.time;
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Lightweight statistics primitives used across the simulator.
+
+use super::Cycle;
+
+/// A simple named counter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counter(pub u64);
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+    pub fn get(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Running mean / min / max of a scalar series.
+#[derive(Clone, Debug)]
+pub struct RunningStat {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for RunningStat {
+    fn default() -> Self {
+        RunningStat {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl RunningStat {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Time-weighted average of a piecewise-constant signal (e.g. request-buffer
+/// occupancy). Call [`TimeWeighted::set`] at every change.
+#[derive(Clone, Debug, Default)]
+pub struct TimeWeighted {
+    value: f64,
+    last_change: Cycle,
+    weighted_sum: f64,
+    start: Cycle,
+}
+
+impl TimeWeighted {
+    pub fn new(start: Cycle, value: f64) -> Self {
+        TimeWeighted {
+            value,
+            last_change: start,
+            weighted_sum: 0.0,
+            start,
+        }
+    }
+
+    /// Record a change of the underlying signal at time `t`. Updates that
+    /// arrive (slightly) out of order are clamped to the last change point;
+    /// this happens when producers enqueue future-dated work.
+    pub fn set(&mut self, t: Cycle, value: f64) {
+        let t = t.max(self.last_change);
+        self.weighted_sum += self.value * (t - self.last_change) as f64;
+        self.value = value;
+        self.last_change = t;
+    }
+
+    /// Current value of the signal.
+    pub fn current(&self) -> f64 {
+        self.value
+    }
+
+    /// Time-weighted mean over `[start, end]`.
+    pub fn mean(&self, end: Cycle) -> f64 {
+        let total = (end.saturating_sub(self.start)) as f64;
+        if total == 0.0 {
+            return self.value;
+        }
+        let tail = self.value * (end.saturating_sub(self.last_change)) as f64;
+        (self.weighted_sum + tail) / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn running_stat_mean_min_max() {
+        let mut s = RunningStat::default();
+        for x in [2.0, 4.0, 6.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 6.0);
+        assert_eq!(RunningStat::default().mean(), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_mean() {
+        let mut tw = TimeWeighted::new(0, 0.0);
+        tw.set(10, 4.0); // 0 for [0,10)
+        tw.set(30, 2.0); // 4 for [10,30)
+        // 2 for [30,50]
+        let m = tw.mean(50);
+        // (0*10 + 4*20 + 2*20) / 50 = 120/50 = 2.4
+        assert!((m - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_weighted_no_elapsed_time() {
+        let tw = TimeWeighted::new(5, 3.0);
+        assert_eq!(tw.mean(5), 3.0);
+        assert_eq!(tw.current(), 3.0);
+    }
+}

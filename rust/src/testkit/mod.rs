@@ -1,0 +1,98 @@
+//! Minimal property-testing kit (no external crates are available offline):
+//! a deterministic case runner over seeded generators with failure-seed
+//! reporting. Used by `rust/tests/prop_*.rs` for coordinator invariants.
+
+use crate::util::Rng;
+
+/// Run `n` property cases. Each case gets a fresh deterministic [`Rng`];
+/// on panic the failing seed is reported so the case can be replayed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, n: u64, f: F) {
+    for case in 0..n {
+        let seed = 0x9E3779B9_7F4A7C15u64 ^ (case.wrapping_mul(0xBF58476D1CE4E5B9));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generator helpers over [`Rng`].
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Vector of `n` values in `[0, bound)`.
+    pub fn indices(rng: &mut Rng, n: usize, bound: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.below(bound as u64) as u32).collect()
+    }
+
+    /// Vector of `n` f32 in [0, 1).
+    pub fn f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32()).collect()
+    }
+
+    /// Monotone offsets array with spans in `[0, max_span]`.
+    pub fn offsets(rng: &mut Rng, n: usize, max_span: u64) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        out.push(0);
+        for _ in 0..n {
+            acc += rng.below(max_span + 1) as u32;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// A size in [1, max], biased toward small and boundary values.
+    pub fn size(rng: &mut Rng, max: usize) -> usize {
+        match rng.below(4) {
+            0 => 1 + rng.below_usize(4.min(max)),
+            1 => max,
+            _ => 1 + rng.below_usize(max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = std::sync::atomic::AtomicU64::new(0);
+        let c = &mut count;
+        // Interior mutability via atomic since F is Fn.
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("counts", 10, |_rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+        let _ = c;
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Rng::new(1);
+        let idx = gen::indices(&mut rng, 100, 50);
+        assert!(idx.iter().all(|&i| i < 50));
+        let off = gen::offsets(&mut rng, 10, 5);
+        assert_eq!(off.len(), 11);
+        assert!(off.windows(2).all(|w| w[0] <= w[1]));
+        for _ in 0..100 {
+            let s = gen::size(&mut rng, 64);
+            assert!((1..=64).contains(&s));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", 5, |rng| {
+            assert!(rng.below(10) < 100); // always true
+            panic!("boom");
+        });
+    }
+}

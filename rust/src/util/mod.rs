@@ -1,0 +1,78 @@
+//! Small shared utilities: deterministic PRNG, math helpers, formatting.
+
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Geometric mean of a slice of positive values. Returns 0.0 on empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Integer log2 of a power of two; panics otherwise.
+pub fn log2_exact(x: u64) -> u32 {
+    assert!(x.is_power_of_two(), "{x} is not a power of two");
+    x.trailing_zeros()
+}
+
+/// Ceiling division for unsigned integers.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// Human-friendly SI formatting of a count (e.g. 16384 -> "16.4K").
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn log2_exact_ok() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(64), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_exact_rejects_non_pow2() {
+        log2_exact(12);
+    }
+
+    #[test]
+    fn div_ceil_ok() {
+        assert_eq!(div_ceil(10, 4), 3);
+        assert_eq!(div_ceil(8, 4), 2);
+        assert_eq!(div_ceil(1, 4), 1);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(si(512.0), "512");
+        assert_eq!(si(16384.0), "16.4K");
+        assert_eq!(si(2.0e6), "2.00M");
+        assert_eq!(si(5.12e10), "51.20G");
+    }
+}

@@ -1,0 +1,260 @@
+//! GAP benchmark suite: BFS, PageRank, Betweenness Centrality over a
+//! uniform random graph (§5: 2²⁰–2²² nodes, average degree 15; scaled).
+//!
+//! Table 1 shapes:
+//! * BFS: `ST parent[N[j]] = i  if (depth[N[j]] < F)`, `j = H[K[i]]..H[K[i]+1]`
+//!   (bottom-up step over the frontier node list K).
+//! * PR:  `RMW rank[N[j]] += contrib[i]`, `j = H[i]..H[i+1]`.
+//! * BC:  `RMW delta[N[j]] += sigma[i]  if (depth[N[j]] == F)`,
+//!   `j = H[K[i]]..H[K[i]+1]`.
+
+use super::{Scale, WorkloadSpec};
+use crate::compiler::ir::{ArrId, Expr, Program, Stmt};
+use crate::dx100::isa::{DType, Op};
+use crate::dx100::mem_image::MemImage;
+use crate::util::Rng;
+
+/// Uniform random graph in CSR: returns (offsets, neighbors).
+fn uniform_graph(nodes: usize, avg_degree: usize, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut offsets = Vec::with_capacity(nodes + 1);
+    let mut neighbors = Vec::new();
+    offsets.push(0u32);
+    for _ in 0..nodes {
+        let deg = rng.range(1, (2 * avg_degree) as u64) as usize;
+        for _ in 0..deg {
+            neighbors.push(rng.below(nodes as u64) as u32);
+        }
+        offsets.push(neighbors.len() as u32);
+    }
+    (offsets, neighbors)
+}
+
+struct GraphArrays {
+    h: ArrId,
+    n: ArrId,
+    offsets: Vec<u32>,
+    neighbors: Vec<u32>,
+}
+
+fn add_graph(p: &mut Program, nodes: usize, seed: u64) -> GraphArrays {
+    let (offsets, neighbors) = uniform_graph(nodes, 15, seed);
+    let h = p.add_array("H", DType::U32, offsets.len());
+    let n = p.add_array("N", DType::U32, neighbors.len().max(1));
+    GraphArrays {
+        h,
+        n,
+        offsets,
+        neighbors,
+    }
+}
+
+fn store_graph(p: &Program, g: &GraphArrays, mem: &mut MemImage) {
+    mem.store_u32_slice(p.arrays[g.h].base, &g.offsets);
+    mem.store_u32_slice(p.arrays[g.n].base, &g.neighbors);
+}
+
+/// Bottom-up BFS step over a frontier.
+pub fn bfs(scale: Scale) -> WorkloadSpec {
+    let nodes = scale.target(1 << 19).min(1 << 20);
+    let frontier = scale.apply(4096);
+    let mut p = Program::new("BFS", frontier);
+    let g = add_graph(&mut p, nodes, 0xBF5);
+    let k = p.add_array("K", DType::U32, frontier); // frontier node list
+    let depth = p.add_array("DEPTH", DType::U32, nodes); // visited levels
+    let parent = p.add_array("PARENT", DType::U32, nodes);
+    p.set_reg(0, 1); // F: unvisited threshold
+    p.atomic_rmw = false; // BFS uses benign-race stores
+    p.body = vec![Stmt::RangeFor {
+        lo: Expr::load(g.h, Expr::load(k, Expr::Iv(0))),
+        hi: Expr::load(
+            g.h,
+            Expr::bin(Op::Add, Expr::load(k, Expr::Iv(0)), Expr::cu32(1)),
+        ),
+        body: vec![Stmt::If {
+            cond: Expr::bin(
+                Op::Lt,
+                Expr::load(depth, Expr::load(g.n, Expr::Iv(1))),
+                Expr::Reg(0, DType::U32),
+            ),
+            body: vec![Stmt::Store {
+                arr: parent,
+                idx: Expr::load(g.n, Expr::Iv(1)),
+                val: Expr::Iv(0),
+            }],
+        }],
+    },
+    // Residual frontier bookkeeping on the cores.
+    Stmt::Sink {
+        val: Expr::load(k, Expr::Iv(0)),
+        cost: 1,
+    }];
+    let mut mem = MemImage::new();
+    store_graph(&p, &g, &mut mem);
+    let mut rng = Rng::new(0xBF6);
+    let mut ids: Vec<u32> = (0..nodes as u32).collect();
+    rng.shuffle(&mut ids);
+    mem.store_u32_slice(p.arrays[k].base, &ids[..frontier]);
+    for i in 0..nodes as u64 {
+        // ~40% already visited.
+        let d = if rng.chance(0.4) { 1 } else { 0 };
+        mem.write_u32(p.arrays[depth].addr(i), d);
+    }
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "GAP",
+    }
+}
+
+/// One PageRank push iteration.
+pub fn pr(scale: Scale) -> WorkloadSpec {
+    let nodes = scale.target(1 << 19).min(1 << 20);
+    // One PR sweep over a window of nodes (full sweeps are run in chunks).
+    let mut p = Program::new("PR", scale.apply(4096));
+    let g = add_graph(&mut p, nodes, 0x9A);
+    let rank = p.add_array("RANK", DType::F32, nodes);
+    let contrib = p.add_array("CONTRIB", DType::F32, nodes);
+    p.atomic_rmw = true; // concurrent rank updates need atomics
+    p.body = vec![Stmt::RangeFor {
+        lo: Expr::load(g.h, Expr::Iv(0)),
+        hi: Expr::load(g.h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+        body: vec![Stmt::Rmw {
+            arr: rank,
+            idx: Expr::load(g.n, Expr::Iv(1)),
+            op: Op::Add,
+            val: Expr::load(contrib, Expr::Iv(0)),
+        }],
+    },
+    // Residual: next-iteration contribution compute on the cores.
+    Stmt::Sink {
+        val: Expr::load(contrib, Expr::Iv(0)),
+        cost: 2,
+    }];
+    let mut mem = MemImage::new();
+    store_graph(&p, &g, &mut mem);
+    let mut rng = Rng::new(0x9B);
+    for i in 0..nodes as u64 {
+        mem.write_f32(p.arrays[contrib].addr(i), rng.f32() / 15.0);
+    }
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "GAP",
+    }
+}
+
+/// Betweenness-centrality dependency accumulation over a frontier.
+pub fn bc(scale: Scale) -> WorkloadSpec {
+    let nodes = scale.target(1 << 19).min(1 << 20);
+    let frontier = scale.apply(4096);
+    let mut p = Program::new("BC", frontier);
+    let g = add_graph(&mut p, nodes, 0xBC0);
+    let k = p.add_array("K", DType::U32, frontier);
+    let depth = p.add_array("DEPTH", DType::U32, nodes);
+    let delta = p.add_array("DELTA", DType::F32, nodes);
+    let sigma = p.add_array("SIGMA", DType::F32, nodes);
+    p.set_reg(0, 2); // F: next-level depth
+    p.atomic_rmw = true;
+    p.body = vec![Stmt::RangeFor {
+        lo: Expr::load(g.h, Expr::load(k, Expr::Iv(0))),
+        hi: Expr::load(
+            g.h,
+            Expr::bin(Op::Add, Expr::load(k, Expr::Iv(0)), Expr::cu32(1)),
+        ),
+        body: vec![Stmt::If {
+            cond: Expr::bin(
+                Op::Eq,
+                Expr::load(depth, Expr::load(g.n, Expr::Iv(1))),
+                Expr::Reg(0, DType::U32),
+            ),
+            body: vec![Stmt::Rmw {
+                arr: delta,
+                idx: Expr::load(g.n, Expr::Iv(1)),
+                op: Op::Add,
+                val: Expr::load(sigma, Expr::load(k, Expr::Iv(0))),
+            }],
+        }],
+    },
+    // Residual per-frontier-node accumulation on the cores.
+    Stmt::Sink {
+        val: Expr::load(sigma, Expr::load(k, Expr::Iv(0))),
+        cost: 1,
+    }];
+    let mut mem = MemImage::new();
+    store_graph(&p, &g, &mut mem);
+    let mut rng = Rng::new(0xBC1);
+    let mut ids: Vec<u32> = (0..nodes as u32).collect();
+    rng.shuffle(&mut ids);
+    mem.store_u32_slice(p.arrays[k].base, &ids[..frontier]);
+    for i in 0..nodes as u64 {
+        mem.write_u32(p.arrays[depth].addr(i), rng.below(4) as u32);
+        mem.write_f32(p.arrays[sigma].addr(i), rng.f32());
+    }
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "GAP",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn graph_csr_is_consistent() {
+        let (off, nbr) = uniform_graph(100, 15, 1);
+        assert_eq!(off.len(), 101);
+        assert_eq!(*off.last().unwrap() as usize, nbr.len());
+        assert!(nbr.iter().all(|&n| (n as usize) < 100));
+        let avg = nbr.len() as f64 / 100.0;
+        assert!((8.0..22.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn bfs_equivalence() {
+        let w = bfs(Scale::test());
+        let cw = compile(&w.program, &w.mem, &SystemConfig::table3()).unwrap();
+        let parent = w.program.arrays.iter().position(|a| a.name == "PARENT").unwrap();
+        let a = &w.program.arrays[parent];
+        for i in 0..a.len as u64 {
+            assert_eq!(
+                cw.baseline.mem.read_u32(a.addr(i)),
+                cw.dx.mem.read_u32(a.addr(i)),
+                "PARENT[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn pr_equivalence() {
+        let w = pr(Scale::test());
+        let cw = compile(&w.program, &w.mem, &SystemConfig::table3()).unwrap();
+        let rank = w.program.arrays.iter().position(|a| a.name == "RANK").unwrap();
+        let a = &w.program.arrays[rank];
+        for i in 0..a.len as u64 {
+            let b = f32::from_bits(cw.baseline.mem.read_u32(a.addr(i)));
+            let d = f32::from_bits(cw.dx.mem.read_u32(a.addr(i)));
+            assert!((b - d).abs() < 1e-4, "RANK[{i}] {b} vs {d}");
+        }
+    }
+
+    #[test]
+    fn bc_equivalence() {
+        let w = bc(Scale::test());
+        let cw = compile(&w.program, &w.mem, &SystemConfig::table3()).unwrap();
+        let delta = w.program.arrays.iter().position(|a| a.name == "DELTA").unwrap();
+        let a = &w.program.arrays[delta];
+        for i in 0..a.len as u64 {
+            let b = f32::from_bits(cw.baseline.mem.read_u32(a.addr(i)));
+            let d = f32::from_bits(cw.dx.mem.read_u32(a.addr(i)));
+            assert!((b - d).abs() < 1e-4, "DELTA[{i}]");
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! §6.1 microbenchmarks: Gather / Scatter / RMW under the All-Hits
+//! scenario, and the All-Misses row-buffer / interleaving sweep of
+//! Figure 8 (b,c).
+
+use super::{Scale, WorkloadSpec};
+use crate::compiler::ir::{Expr, Program, Stmt};
+use crate::config::DramConfig;
+use crate::dx100::isa::{DType, Op};
+use crate::dx100::mem_image::MemImage;
+use crate::mem::{AddrMap, DramCoord};
+use crate::util::Rng;
+
+/// Index distribution for the gather microbenchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexPattern {
+    /// `B[i] = i mod data_len` (the §6.1 All-Hits streaming distribution).
+    Streaming,
+    /// Uniform random indices.
+    UniformRandom,
+}
+
+fn fill_indices(
+    p: &Program,
+    mem: &mut MemImage,
+    arr: usize,
+    n: usize,
+    data_len: usize,
+    pattern: IndexPattern,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n as u64 {
+        let v = match pattern {
+            IndexPattern::Streaming => (i % data_len as u64) as u32,
+            IndexPattern::UniformRandom => rng.below(data_len as u64) as u32,
+        };
+        mem.write_u32(p.arrays[arr].addr(i), v);
+    }
+}
+
+/// Gather-SPD: only the gather `p = A[B[i]]` is offloaded; the core
+/// consumes every packed element from the scratchpad (§6.1).
+pub fn gather_spd(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
+    let data_len = 4096;
+    let mut p = Program::new("Gather-SPD", n);
+    let a = p.add_array("A", DType::F32, data_len);
+    let b = p.add_array("B", DType::U32, n);
+    p.body = vec![Stmt::Sink {
+        val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        cost: 1,
+    }];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(seed);
+    for i in 0..data_len as u64 {
+        mem.write_f32(p.arrays[a].addr(i), rng.f32());
+    }
+    fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 1);
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: pattern == IndexPattern::Streaming,
+        suite: "micro",
+    }
+}
+
+/// Gather-Full: the whole kernel `C[i] = A[B[i]]` is offloaded (§6.1).
+pub fn gather_full(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
+    let data_len = 4096;
+    let mut p = Program::new("Gather-Full", n);
+    let a = p.add_array("A", DType::F32, data_len);
+    let b = p.add_array("B", DType::U32, n);
+    let c = p.add_array("C", DType::F32, n);
+    p.body = vec![Stmt::Store {
+        arr: c,
+        idx: Expr::Iv(0),
+        val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+    }];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(seed);
+    for i in 0..data_len as u64 {
+        mem.write_f32(p.arrays[a].addr(i), rng.f32());
+    }
+    fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 2);
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: pattern == IndexPattern::Streaming,
+        suite: "micro",
+    }
+}
+
+/// RMW microbenchmark `A[B[i]] += C[i]`; `atomic` selects the §6.1
+/// RMW-Atomic vs RMW-NoAtom baselines.
+pub fn rmw(n: usize, atomic: bool, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
+    let data_len = 4096;
+    let name = if atomic { "RMW-Atomic" } else { "RMW-NoAtom" };
+    let mut p = Program::new(name, n);
+    let a = p.add_array("A", DType::F32, data_len);
+    let b = p.add_array("B", DType::U32, n);
+    let c = p.add_array("C", DType::F32, n);
+    p.atomic_rmw = atomic;
+    p.body = vec![Stmt::Rmw {
+        arr: a,
+        idx: Expr::load(b, Expr::Iv(0)),
+        op: Op::Add,
+        val: Expr::load(c, Expr::Iv(0)),
+    }];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(seed);
+    for i in 0..data_len as u64 {
+        mem.write_f32(p.arrays[a].addr(i), 0.0);
+    }
+    for i in 0..n as u64 {
+        mem.write_f32(p.arrays[c].addr(i), rng.f32());
+    }
+    fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 3);
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: pattern == IndexPattern::Streaming,
+        suite: "micro",
+    }
+}
+
+/// Scatter `A[B[i]] = C[i]` — single-core baseline (WAW hazards, §6.1).
+pub fn scatter(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
+    let data_len = 4096;
+    let mut p = Program::new("Scatter", n);
+    let a = p.add_array("A", DType::F32, data_len);
+    let b = p.add_array("B", DType::U32, n);
+    let c = p.add_array("C", DType::F32, n);
+    p.single_core_baseline = true;
+    p.body = vec![Stmt::Store {
+        arr: a,
+        idx: Expr::load(b, Expr::Iv(0)),
+        val: Expr::load(c, Expr::Iv(0)),
+    }];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(seed);
+    for i in 0..n as u64 {
+        mem.write_f32(p.arrays[c].addr(i), rng.f32());
+    }
+    fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 4);
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: pattern == IndexPattern::Streaming,
+        suite: "micro",
+    }
+}
+
+/// All-Misses index ordering knobs for Figure 8 (b,c).
+#[derive(Clone, Copy, Debug)]
+pub struct AllMissOrder {
+    /// Target fraction of consecutive same-bank accesses hitting the row.
+    pub rbh: f64,
+    /// Interleave consecutive accesses across channels.
+    pub chi: bool,
+    /// Interleave consecutive accesses across bank groups.
+    pub bgi: bool,
+}
+
+/// Build the §6.1 All-Misses index set: one word in each of `rows_per_bank`
+/// rows × all banks × all columns, ordered to produce the requested
+/// row-buffer-hit / channel / bank-group interleaving pattern.
+pub fn allmiss_indices(dram: &DramConfig, rows_per_bank: u32, order: AllMissOrder) -> Vec<u32> {
+    let map = AddrMap::new(dram);
+    let cols = dram.lines_per_row() as u32;
+    // Streams: one per (channel, bg, bank) — each yields its rows' columns.
+    // Ordering: within a stream, `rbh` controls whether we finish a row
+    // before moving on (hit) or rotate rows every access (miss).
+    struct Stream {
+        ch: u32,
+        bg: u32,
+        ba: u32,
+        next: u32, // linear position in row-major (hit) order
+    }
+    let mut streams = Vec::new();
+    for ch in 0..dram.channels as u32 {
+        for bg in 0..dram.bankgroups as u32 {
+            for ba in 0..dram.banks_per_group as u32 {
+                streams.push(Stream {
+                    ch,
+                    bg,
+                    ba,
+                    next: 0,
+                });
+            }
+        }
+    }
+    let per_stream = rows_per_bank * cols;
+    let total = streams.len() as u32 * per_stream;
+    let mut out = Vec::with_capacity(total as usize);
+    // Stream visit order implements CHI/BGI: rotate across channels and/or
+    // bank groups between consecutive accesses, or stay within one.
+    let mut order_idx: Vec<usize> = (0..streams.len()).collect();
+    order_idx.sort_by_key(|&i| {
+        let s = &streams[i];
+        match (order.chi, order.bgi) {
+            (true, true) => (s.ba, s.bg, s.ch, 0),     // rotate ch fastest
+            (true, false) => (s.bg, s.ba, s.ch, 0),    // same bg together
+            (false, true) => (s.ch, s.ba, s.bg, 0),    // same ch together
+            (false, false) => (s.ch, s.bg, s.ba, 0),   // fully serialized
+        }
+    });
+    // Burst length per stream visit: with interleaving we take 1 access per
+    // stream per rotation; without, runs of 64 same-stream accesses defeat
+    // the controller's ~32-entry window while a 16K DX100 tile still spans
+    // every channel/bank (the paper orders *consecutive pairs*, not blocks).
+    let interleaved = order.chi || order.bgi;
+    let burst = if interleaved { 1 } else { 64.min(per_stream) };
+    let mut remaining: u32 = total;
+    let mut cursor = 0usize;
+    while remaining > 0 {
+        let si = order_idx[cursor % order_idx.len()];
+        cursor += 1;
+        for _ in 0..burst {
+            let s = &mut streams[si];
+            if s.next >= per_stream {
+                break;
+            }
+            // Position -> (row, col): `rbh` fraction of accesses continue
+            // the current row; the rest jump to the next row (miss).
+            let pos = s.next;
+            s.next += 1;
+            let (row, col) = if order.rbh >= 0.999 {
+                (pos / cols, pos % cols)
+            } else if order.rbh <= 0.001 {
+                // Column-major: every access switches rows.
+                (pos % rows_per_bank, pos / rows_per_bank)
+            } else {
+                // Alternate runs: run length r gives RBH (r-1)/r.
+                let run = (1.0 / (1.0 - order.rbh)).round().max(2.0) as u32;
+                let chunk = pos / (run * rows_per_bank);
+                let within = pos % (run * rows_per_bank);
+                let row = within % rows_per_bank;
+                let col = chunk * run + within / rows_per_bank % run;
+                (row, col.min(cols - 1))
+            };
+            let coord = DramCoord {
+                channel: s.ch,
+                rank: 0,
+                bankgroup: s.bg,
+                bank: s.ba,
+                row,
+                col,
+            };
+            let addr = map.encode(coord);
+            out.push((addr / 4) as u32); // element index of a 4B word
+            remaining -= 1;
+        }
+    }
+    out
+}
+
+/// All-Misses Gather-Full: `C[i] = A[B[i]]` with the controlled ordering.
+pub fn gather_allmiss(dram: &DramConfig, rows_per_bank: u32, order: AllMissOrder) -> WorkloadSpec {
+    let idxs = allmiss_indices(dram, rows_per_bank, order);
+    let n = idxs.len();
+    let data_len = idxs.iter().map(|&i| i as usize + 1).max().unwrap_or(1);
+    let mut p = Program::new("Gather-AllMiss", n);
+    let a = p.add_array("A", DType::F32, data_len);
+    let b = p.add_array("B", DType::U32, n);
+    let c = p.add_array("C", DType::F32, n);
+    p.body = vec![Stmt::Store {
+        arr: c,
+        idx: Expr::Iv(0),
+        val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+    }];
+    let mut mem = MemImage::new();
+    mem.store_u32_slice(p.arrays[b].base, &idxs);
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "micro",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn allmiss_covers_unique_words() {
+        let dram = SystemConfig::table3().dram;
+        let idx = allmiss_indices(
+            &dram,
+            2,
+            AllMissOrder {
+                rbh: 1.0,
+                chi: true,
+                bgi: true,
+            },
+        );
+        // 2 rows x 32 banks x 128 cols = 8192 unique lines.
+        assert_eq!(idx.len(), 8192);
+        let set: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        assert_eq!(set.len(), idx.len(), "indices must be unique");
+    }
+
+    #[test]
+    fn best_order_interleaves_channels() {
+        let dram = SystemConfig::table3().dram;
+        let map = AddrMap::new(&dram);
+        let idx = allmiss_indices(
+            &dram,
+            1,
+            AllMissOrder {
+                rbh: 1.0,
+                chi: true,
+                bgi: true,
+            },
+        );
+        // Consecutive accesses alternate channels.
+        let chans: Vec<u32> = idx[..8]
+            .iter()
+            .map(|&i| map.decode(i as u64 * 4).channel)
+            .collect();
+        let switches = chans.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(switches >= 6, "channels {chans:?}");
+    }
+
+    #[test]
+    fn worst_order_has_long_same_channel_runs() {
+        let dram = SystemConfig::table3().dram;
+        let map = AddrMap::new(&dram);
+        let idx = allmiss_indices(
+            &dram,
+            1,
+            AllMissOrder {
+                rbh: 0.0,
+                chi: false,
+                bgi: false,
+            },
+        );
+        // Consecutive accesses stay in one channel for runs of 64 (beyond
+        // the 32-entry controller window), but the whole set still covers
+        // both channels.
+        let chans: Vec<u32> = idx[..64]
+            .iter()
+            .map(|&i| map.decode(i as u64 * 4).channel)
+            .collect();
+        assert!(chans.iter().all(|&c| c == chans[0]), "{chans:?}");
+        let all: std::collections::HashSet<u32> = idx
+            .iter()
+            .map(|&i| map.decode(i as u64 * 4).channel)
+            .collect();
+        assert_eq!(all.len(), 2);
+    }
+
+    #[test]
+    fn rbh_zero_rotates_rows() {
+        let dram = SystemConfig::table3().dram;
+        let map = AddrMap::new(&dram);
+        let idx = allmiss_indices(
+            &dram,
+            4,
+            AllMissOrder {
+                rbh: 0.0,
+                chi: false,
+                bgi: false,
+            },
+        );
+        // Within one bank's stream, consecutive accesses hit distinct rows.
+        let rows: Vec<u32> = idx[..4].iter().map(|&i| map.decode(i as u64 * 4).row).collect();
+        let distinct: std::collections::HashSet<u32> = rows.iter().copied().collect();
+        assert_eq!(distinct.len(), 4, "{rows:?}");
+    }
+
+    #[test]
+    fn micro_kernels_compile() {
+        use crate::compiler::compile;
+        let cfg = SystemConfig::table3();
+        for w in [
+            gather_spd(512, IndexPattern::Streaming, 1),
+            gather_full(512, IndexPattern::UniformRandom, 2),
+            rmw(512, true, IndexPattern::UniformRandom, 3),
+            rmw(512, false, IndexPattern::UniformRandom, 4),
+            scatter(512, IndexPattern::UniformRandom, 5),
+        ] {
+            let cw = compile(&w.program, &w.mem, &cfg).unwrap();
+            assert!(!cw.dx.programs[0].instrs.is_empty(), "{}", w.program.name);
+        }
+    }
+
+    #[test]
+    fn scatter_flags_single_core() {
+        let w = scatter(64, IndexPattern::UniformRandom, 6);
+        assert!(w.program.single_core_baseline);
+    }
+}

@@ -1,0 +1,119 @@
+//! The paper's benchmarks, expressed in the compiler IR (§5, Table 1).
+//!
+//! Five suites, twelve workloads, plus the §6.1 microbenchmarks:
+//!
+//! | Suite     | Kernels              | Pattern (Table 1) |
+//! |-----------|----------------------|-------------------|
+//! | NAS       | CG, IS               | range-loop gather; histogram RMW |
+//! | GAP       | BFS, PR, BC          | conditional ST/RMW over (in)direct ranges |
+//! | UME       | GZ, GZP, GZI, GZPI   | conditional RMW / 2-level LD over ranges |
+//! | Spatter   | XRAGE                | bulk scatter from an xRAGE-like trace |
+//! | Hash-Join | PRH, PRO             | hashed scatter/RMW; bucket chaining |
+//!
+//! Dataset sizes are scaled down from the paper (DESIGN.md substitution
+//! table) while preserving the index distributions that drive row-buffer
+//! locality, coalescing, and MLP behaviour.
+
+pub mod gap;
+pub mod hashjoin;
+pub mod micro;
+pub mod nas;
+pub mod spatter;
+pub mod ume;
+
+use crate::compiler::ir::Program;
+use crate::dx100::mem_image::MemImage;
+
+/// A ready-to-compile workload: IR program + initial memory + metadata.
+pub struct WorkloadSpec {
+    pub program: Program,
+    pub mem: MemImage,
+    /// Pre-fill caches before timing (the §6.1 All-Hits scenario).
+    pub warm_caches: bool,
+    pub suite: &'static str,
+}
+
+/// Size scaling for the default datasets: `1` = the repo defaults
+/// (seconds-per-simulation), smaller values shrink further for tests.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub usize);
+
+impl Scale {
+    pub fn full() -> Self {
+        Scale(16)
+    }
+    /// Default bench scale.
+    pub fn default_bench() -> Self {
+        Scale(4)
+    }
+    /// Tiny scale for unit/integration tests.
+    pub fn test() -> Self {
+        Scale(1)
+    }
+    pub fn apply(&self, base: usize) -> usize {
+        base * self.0
+    }
+    /// Size for indirect *target* arrays: these must exceed the LLC to
+    /// reproduce the paper's miss-dominated behaviour, but are capped so
+    /// they fit one 64 MiB array region at any scale.
+    pub fn target(&self, base: usize) -> usize {
+        base * self.0.min(4)
+    }
+}
+
+/// The 12 main evaluation workloads in paper order.
+pub fn all(scale: Scale) -> Vec<WorkloadSpec> {
+    vec![
+        nas::cg(scale),
+        nas::is(scale),
+        gap::bfs(scale),
+        gap::pr(scale),
+        gap::bc(scale),
+        ume::gz(scale),
+        ume::gzp(scale),
+        ume::gzi(scale),
+        ume::gzpi(scale),
+        spatter::xrage(scale),
+        hashjoin::prh(scale),
+        hashjoin::pro(scale),
+    ]
+}
+
+/// Workload names in paper order (for reports).
+pub fn names() -> Vec<&'static str> {
+    vec![
+        "CG", "IS", "BFS", "PR", "BC", "GZ", "GZP", "GZI", "GZPI", "XRAGE", "PRH", "PRO",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::analyze;
+
+    #[test]
+    fn all_workloads_build_and_are_legal() {
+        for w in all(Scale::test()) {
+            let (a, legal) = analyze(&w.program);
+            assert!(
+                legal.is_ok(),
+                "{} illegal: {:?}",
+                w.program.name,
+                legal.err()
+            );
+            assert!(
+                a.max_indirection >= 1,
+                "{} has no indirection",
+                w.program.name
+            );
+        }
+    }
+
+    #[test]
+    fn twelve_workloads_in_paper_order() {
+        let ws = all(Scale::test());
+        assert_eq!(ws.len(), 12);
+        let got: Vec<&str> = ws.iter().map(|w| w.program.name).collect();
+        assert_eq!(got, names());
+    }
+}

@@ -1,0 +1,132 @@
+//! NAS parallel benchmarks: Conjugate Gradient (CG) and Integer Sort (IS).
+//!
+//! * **CG** (§5: 150K×150K sparse matrix): the SpMV inner loop
+//!   `for i: for j in H[i]..H[i+1]: y_i += V[j] * x[C[j]]` — a direct range
+//!   loop with an indirect gather of the dense vector. Scaled: `rows`
+//!   uniform-sparse rows over an `xlen` vector.
+//! * **IS** (§5: 2²⁵ keys, buckets disabled): key counting
+//!   `A[K[i]] += 1` — an unconditioned histogram RMW over random keys.
+
+use super::{Scale, WorkloadSpec};
+use crate::compiler::ir::{Expr, Program, Stmt};
+use crate::dx100::isa::{DType, Op};
+use crate::dx100::mem_image::MemImage;
+use crate::util::Rng;
+
+/// NAS CG SpMV kernel.
+pub fn cg(scale: Scale) -> WorkloadSpec {
+    let rows = scale.apply(4096);
+    let xlen = scale.target(1 << 20); // 4-16 MiB vector: gathers miss the LLC
+    let avg_nnz = 8usize;
+    let mut p = Program::new("CG", rows);
+    let nnz_cap = rows * avg_nnz * 2;
+    let h = p.add_array("H", DType::U32, rows + 1);
+    let v = p.add_array("V", DType::F32, nnz_cap);
+    let c = p.add_array("C", DType::U32, nnz_cap);
+    let x = p.add_array("X", DType::F32, xlen);
+    p.atomic_rmw = false; // per-row accumulation is core-private
+    p.body = vec![Stmt::RangeFor {
+        lo: Expr::load(h, Expr::Iv(0)),
+        hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+        body: vec![Stmt::Sink {
+            // y_i += V[j] * x[C[j]] : FMA on the core.
+            val: Expr::bin(
+                Op::Mul,
+                Expr::load(v, Expr::Iv(1)),
+                Expr::load(x, Expr::load(c, Expr::Iv(1))),
+            ),
+            cost: 2,
+        }],
+    }];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(0xC6);
+    let mut off = 0u32;
+    for i in 0..=rows as u64 {
+        mem.write_u32(p.arrays[h].addr(i), off);
+        if (i as usize) < rows {
+            off += rng.range(4, (2 * avg_nnz) as u64 - 3) as u32;
+        }
+    }
+    assert!((off as usize) < nnz_cap);
+    for j in 0..off as u64 {
+        mem.write_f32(p.arrays[v].addr(j), rng.f32());
+        // Column indices: random over the vector (low locality).
+        mem.write_u32(p.arrays[c].addr(j), rng.below(xlen as u64) as u32);
+    }
+    for i in 0..xlen as u64 {
+        mem.write_f32(p.arrays[x].addr(i), rng.f32());
+    }
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "NAS",
+    }
+}
+
+/// NAS IS key counting (bucketless, as footnoted in §5).
+pub fn is(scale: Scale) -> WorkloadSpec {
+    let keys = scale.apply(65536);
+    let key_space = scale.target(1 << 21); // 8-32 MiB key array (2^25 in the paper)
+    let mut p = Program::new("IS", keys);
+    let a = p.add_array("A", DType::U32, key_space);
+    let k = p.add_array("K", DType::U32, keys);
+    p.body = vec![
+        Stmt::Rmw {
+            arr: a,
+            idx: Expr::load(k, Expr::Iv(0)),
+            op: Op::Add,
+            val: Expr::cu32(1),
+        },
+        // Residual core work: key bookkeeping kept on the cores.
+        Stmt::Sink {
+            val: Expr::load(k, Expr::Iv(0)),
+            cost: 1,
+        },
+    ];
+    let mut mem = MemImage::new();
+    let mut rng = Rng::new(0x15);
+    for i in 0..keys as u64 {
+        mem.write_u32(p.arrays[k].addr(i), rng.below(key_space as u64) as u32);
+    }
+    WorkloadSpec {
+        program: p,
+        mem,
+        warm_caches: false,
+        suite: "NAS",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{analyze, compile};
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn cg_compiles_and_matches() {
+        let w = cg(Scale::test());
+        let cw = compile(&w.program, &w.mem, &SystemConfig::table3()).unwrap();
+        assert!(cw.dx.phases >= 1);
+        // CG has a range loop and one indirect gather.
+        let (a, _) = analyze(&w.program);
+        assert!(a.has_range_loop);
+    }
+
+    #[test]
+    fn is_histogram_counts_keys() {
+        let w = is(Scale::test());
+        let cw = compile(&w.program, &w.mem, &SystemConfig::table3()).unwrap();
+        // Total counts must equal the number of keys.
+        let a = &w.program.arrays[0];
+        let total: u64 = (0..a.len as u64)
+            .map(|i| cw.baseline.mem.read_u32(a.addr(i)) as u64)
+            .sum();
+        assert_eq!(total, w.program.iters as u64);
+        // And DX100 agrees.
+        let total_dx: u64 = (0..a.len as u64)
+            .map(|i| cw.dx.mem.read_u32(a.addr(i)) as u64)
+            .sum();
+        assert_eq!(total_dx, total);
+    }
+}

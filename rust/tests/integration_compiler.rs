@@ -1,0 +1,110 @@
+//! Integration tests across the compiler pipeline: all 12 workloads
+//! compile, produce equivalent functional results on both executors, and
+//! emit structurally sensible DX100 programs.
+
+use dx100::compiler::{analyze, compile, AccessClass};
+use dx100::config::SystemConfig;
+use dx100::dx100::isa::Opcode;
+use dx100::workloads::{self, Scale};
+
+#[test]
+fn every_workload_functionally_equivalent() {
+    let cfg = SystemConfig::table3();
+    for w in workloads::all(Scale::test()) {
+        let cw = compile(&w.program, &w.mem, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", w.program.name));
+        for arr in &w.program.arrays {
+            for i in 0..arr.len as u64 {
+                let b = cw.baseline.mem.read_word(arr.addr(i), arr.dtype.size());
+                let d = cw.dx.mem.read_word(arr.addr(i), arr.dtype.size());
+                if arr.dtype == dx100::dx100::isa::DType::F32 {
+                    let (bf, df) = (f32::from_bits(b as u32), f32::from_bits(d as u32));
+                    assert!(
+                        (bf - df).abs() <= 1e-3 * bf.abs().max(1.0),
+                        "{} {}[{i}]: {bf} vs {df}",
+                        w.program.name,
+                        arr.name
+                    );
+                } else {
+                    assert_eq!(b, d, "{} {}[{i}]", w.program.name, arr.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn workload_isa_structure_matches_table1() {
+    let cfg = SystemConfig::table3();
+    let expect_rng = ["CG", "BFS", "PR", "BC", "GZI", "GZPI"];
+    let expect_rmw = ["IS", "PR", "BC", "GZ", "GZP", "PRH"];
+    for w in workloads::all(Scale::test()) {
+        let cw = compile(&w.program, &w.mem, &cfg).unwrap();
+        let ops: Vec<Opcode> = cw
+            .dx
+            .programs
+            .iter()
+            .flat_map(|p| p.instrs.iter().map(|t| t.inst.opcode))
+            .collect();
+        let name = w.program.name;
+        if expect_rng.contains(&name) {
+            assert!(ops.contains(&Opcode::Rng), "{name} should use RNG");
+        }
+        if expect_rmw.contains(&name) {
+            assert!(ops.contains(&Opcode::Irmw), "{name} should use IRMW");
+        }
+        assert!(
+            ops.iter().any(|o| matches!(
+                o,
+                Opcode::Ild | Opcode::Ist | Opcode::Irmw
+            )),
+            "{name} must perform indirect accesses"
+        );
+    }
+}
+
+#[test]
+fn detection_classifies_workload_sites() {
+    for w in workloads::all(Scale::test()) {
+        let (a, legal) = analyze(&w.program);
+        assert!(legal.is_ok(), "{}", w.program.name);
+        let n_indirect = a
+            .loads
+            .iter()
+            .filter(|l| matches!(l.class, AccessClass::Indirect { .. }))
+            .count();
+        // Every workload either has an indirect load site or an indirect
+        // store/RMW (captured by max_indirection).
+        assert!(
+            n_indirect > 0 || a.max_indirection >= 1,
+            "{} has no indirect site",
+            w.program.name
+        );
+    }
+}
+
+#[test]
+fn phase_count_scales_with_tile_size() {
+    let w = workloads::nas::is(Scale::test());
+    let mut small = SystemConfig::table3();
+    small.dx100.tile_elems = 1024;
+    let mut large = SystemConfig::table3();
+    large.dx100.tile_elems = 16384;
+    let cs = compile(&w.program, &w.mem, &small).unwrap();
+    let cl = compile(&w.program, &w.mem, &large).unwrap();
+    assert!(
+        cs.dx.phases > cl.dx.phases,
+        "1K tiles {} phases vs 16K tiles {}",
+        cs.dx.phases,
+        cl.dx.phases
+    );
+}
+
+#[test]
+fn dmp_hints_generated_for_indirect_workloads() {
+    let w = workloads::nas::is(Scale::test());
+    let cfg = SystemConfig::table3();
+    let cw = compile(&w.program, &w.mem, &cfg).unwrap();
+    let total: usize = cw.baseline.dmp_hints.iter().map(|h| h.len()).sum();
+    assert!(total > 0, "IS should produce DMP hints");
+}

@@ -1,0 +1,209 @@
+//! Integration tests: full workloads through all three systems, checking
+//! the paper's qualitative results hold at test scale.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::metrics::compare_one;
+use dx100::util::geomean;
+use dx100::workloads::{self, micro, Scale};
+
+fn cfg() -> SystemConfig {
+    SystemConfig::table3()
+}
+
+#[test]
+fn all_twelve_workloads_complete_on_all_systems() {
+    for w in workloads::all(Scale::test()) {
+        for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
+            let stats = Experiment::new(kind, cfg()).run(&w);
+            assert!(
+                stats.cycles > 0 && stats.instrs > 0,
+                "{} on {kind:?}",
+                w.program.name
+            );
+        }
+    }
+}
+
+#[test]
+fn suite_geomean_speedup_in_paper_ballpark() {
+    // Paper: 2.6x. At reduced scale we accept a broad band but require a
+    // clear win.
+    let mut speedups = Vec::new();
+    for w in workloads::all(Scale::test()) {
+        let c = compare_one(&w, &cfg(), false);
+        speedups.push(c.speedup());
+    }
+    let g = geomean(&speedups);
+    assert!(g > 1.3, "geomean speedup too low: {g:.2} ({speedups:?})");
+}
+
+#[test]
+fn bandwidth_and_rbh_improve_on_bandwidth_bound_workloads() {
+    let w = workloads::nas::is(Scale::test());
+    let c = compare_one(&w, &cfg(), false);
+    assert!(
+        c.bw_improvement() > 1.2,
+        "IS bandwidth improvement {:.2}",
+        c.bw_improvement()
+    );
+    assert!(
+        c.rbh_improvement() > 1.1,
+        "IS RBH improvement {:.2}",
+        c.rbh_improvement()
+    );
+}
+
+#[test]
+fn instruction_reduction_holds() {
+    let w = workloads::ume::gz(Scale::test());
+    let c = compare_one(&w, &cfg(), false);
+    assert!(
+        c.instr_reduction() > 1.5,
+        "GZ instruction reduction {:.2}",
+        c.instr_reduction()
+    );
+}
+
+#[test]
+fn dx100_beats_dmp_on_random_gather() {
+    let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 99);
+    let c = compare_one(&w, &cfg(), true);
+    let vs_dmp = c.speedup_vs_dmp().unwrap();
+    assert!(vs_dmp > 1.1, "DX100 vs DMP: {vs_dmp:.2}");
+}
+
+#[test]
+fn allmiss_dx100_bandwidth_insensitive_to_order() {
+    // Figure 8b/c headline: DX100 BW is flat across index orderings while
+    // the baseline degrades.
+    let d = cfg().dram;
+    let worst = micro::gather_allmiss(
+        &d,
+        8,
+        micro::AllMissOrder {
+            rbh: 0.0,
+            chi: false,
+            bgi: false,
+        },
+    );
+    let best = micro::gather_allmiss(
+        &d,
+        8,
+        micro::AllMissOrder {
+            rbh: 1.0,
+            chi: true,
+            bgi: true,
+        },
+    );
+    let cw = compare_one(&worst, &cfg(), false);
+    let cb = compare_one(&best, &cfg(), false);
+    // Baseline degrades substantially from best to worst ordering.
+    assert!(
+        cb.baseline.bw_util > 1.5 * cw.baseline.bw_util,
+        "baseline BW: best {:.2} vs worst {:.2}",
+        cb.baseline.bw_util,
+        cw.baseline.bw_util
+    );
+    // DX100 stays within a narrow band.
+    let ratio = cb.dx100.bw_util / cw.dx100.bw_util.max(1e-9);
+    assert!(
+        (0.8..1.3).contains(&ratio),
+        "DX100 BW should be order-insensitive: best {:.2} worst {:.2}",
+        cb.dx100.bw_util,
+        cw.dx100.bw_util
+    );
+    // And the worst-case speedup exceeds the best-case one.
+    assert!(
+        cw.speedup() > cb.speedup(),
+        "worst-order speedup {:.2} should exceed best-order {:.2}",
+        cw.speedup(),
+        cb.speedup()
+    );
+}
+
+#[test]
+fn tile_size_monotonicity() {
+    // Figure 13 shape: larger tiles help (1K -> 16K).
+    let w = workloads::nas::is(Scale::test());
+    let mut speedups = Vec::new();
+    for tile in [1024usize, 16384] {
+        let mut c = cfg();
+        c.dx100.tile_elems = tile;
+        let comp = compare_one(&w, &c, false);
+        speedups.push(comp.speedup());
+    }
+    assert!(
+        speedups[1] > speedups[0] * 0.95,
+        "16K tile should not lose to 1K: {speedups:?}"
+    );
+}
+
+#[test]
+fn scaling_8core_holds_speedup() {
+    // Figure 14 shape: the DX100 advantage survives 8 cores / 4 channels.
+    let w = workloads::nas::is(Scale::test());
+    let c4 = compare_one(&w, &SystemConfig::table3(), false);
+    let c8 = compare_one(&w, &SystemConfig::table3_8core(), false);
+    assert!(c8.speedup() > 1.2, "8-core speedup {:.2}", c8.speedup());
+    assert!(
+        c8.speedup() > 0.5 * c4.speedup(),
+        "scaling collapse: 4c {:.2} vs 8c {:.2}",
+        c4.speedup(),
+        c8.speedup()
+    );
+}
+
+#[test]
+fn two_instances_run_and_complete() {
+    let mut c = SystemConfig::table3_8core();
+    c.dx100.instances = 2;
+    let w = workloads::nas::is(Scale::test());
+    let stats = Experiment::new(SystemKind::Dx100, c).run(&w);
+    assert_eq!(stats.dx.len(), 2);
+    assert!(stats.dx.iter().all(|d| d.instructions > 0));
+}
+
+#[test]
+fn scatter_speedup_exceeds_gather_full() {
+    // §6.1: scatter (single-core baseline) gains more than Gather-Full.
+    let n = 1 << 14;
+    let g = compare_one(
+        &micro::gather_full(n, micro::IndexPattern::Streaming, 7),
+        &cfg(),
+        false,
+    );
+    let s = compare_one(
+        &micro::scatter(n, micro::IndexPattern::Streaming, 8),
+        &cfg(),
+        false,
+    );
+    assert!(
+        s.speedup() > g.speedup(),
+        "scatter {:.2} should exceed gather-full {:.2}",
+        s.speedup(),
+        g.speedup()
+    );
+}
+
+#[test]
+fn rmw_atomic_speedup_hierarchy() {
+    // §6.1: DX100 gains on RMW-Atomic >> RMW-NoAtom.
+    let n = 1 << 14;
+    let a = compare_one(
+        &micro::rmw(n, true, micro::IndexPattern::Streaming, 9),
+        &cfg(),
+        false,
+    );
+    let p = compare_one(
+        &micro::rmw(n, false, micro::IndexPattern::Streaming, 9),
+        &cfg(),
+        false,
+    );
+    assert!(
+        a.speedup() > 2.0 * p.speedup(),
+        "atomic {:.2} vs plain {:.2}",
+        a.speedup(),
+        p.speedup()
+    );
+}

@@ -1,0 +1,240 @@
+//! Property tests over coordinator / compiler / accelerator invariants,
+//! using the in-crate testkit (offline stand-in for proptest).
+
+use dx100::compiler::ir::{Expr, Program, Stmt};
+use dx100::compiler::{compile, interpret};
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::dx100::isa::{DType, Instruction, Op, Opcode};
+use dx100::dx100::mem_image::MemImage;
+use dx100::testkit::{check, gen};
+use dx100::util::Rng;
+
+fn small_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::table3();
+    cfg.dx100.tile_elems = 128;
+    cfg
+}
+
+/// Random gather program: C[i] = A[B[i]] with random sizes/indices.
+fn random_gather(rng: &mut Rng) -> (Program, MemImage) {
+    let n = gen::size(rng, 600);
+    let dlen = 64 + gen::size(rng, 960);
+    let mut p = Program::new("prop-gather", n);
+    let a = p.add_array("A", DType::F32, dlen);
+    let b = p.add_array("B", DType::U32, n);
+    let c = p.add_array("C", DType::F32, n);
+    p.body = vec![Stmt::Store {
+        arr: c,
+        idx: Expr::Iv(0),
+        val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+    }];
+    let mut mem = MemImage::new();
+    for (i, v) in gen::f32s(rng, dlen).iter().enumerate() {
+        mem.write_f32(p.arrays[a].addr(i as u64), *v);
+    }
+    for (i, v) in gen::indices(rng, n, dlen).iter().enumerate() {
+        mem.write_u32(p.arrays[b].addr(i as u64), *v);
+    }
+    (p, mem)
+}
+
+/// Random conditional RMW program.
+fn random_rmw(rng: &mut Rng) -> (Program, MemImage) {
+    let n = gen::size(rng, 500);
+    let dlen = 32 + gen::size(rng, 480);
+    let mut p = Program::new("prop-rmw", n);
+    let a = p.add_array("A", DType::F32, dlen);
+    let b = p.add_array("B", DType::U32, n);
+    let d = p.add_array("D", DType::U32, n);
+    let v = p.add_array("V", DType::F32, n);
+    p.set_reg(0, 1);
+    let op = *rng.pick(&[Op::Add, Op::Min, Op::Max]);
+    p.body = vec![Stmt::If {
+        cond: Expr::bin(
+            Op::Ge,
+            Expr::load(d, Expr::Iv(0)),
+            Expr::Reg(0, DType::U32),
+        ),
+        body: vec![Stmt::Rmw {
+            arr: a,
+            idx: Expr::load(b, Expr::Iv(0)),
+            op,
+            val: Expr::load(v, Expr::Iv(0)),
+        }],
+    }];
+    let mut mem = MemImage::new();
+    for (i, x) in gen::f32s(rng, dlen).iter().enumerate() {
+        mem.write_f32(p.arrays[a].addr(i as u64), *x);
+    }
+    for (i, x) in gen::indices(rng, n, dlen).iter().enumerate() {
+        mem.write_u32(p.arrays[b].addr(i as u64), *x);
+    }
+    for i in 0..n as u64 {
+        mem.write_u32(p.arrays[d].addr(i), rng.below(2) as u32);
+        mem.write_f32(p.arrays[v].addr(i), rng.f32());
+    }
+    (p, mem)
+}
+
+/// Random range-loop program (CG-shaped).
+fn random_range(rng: &mut Rng) -> (Program, MemImage) {
+    let rows = gen::size(rng, 200);
+    let offs = gen::offsets(rng, rows, 6);
+    let nnz = *offs.last().unwrap() as usize;
+    let xlen = 32 + gen::size(rng, 224);
+    let mut p = Program::new("prop-range", rows);
+    let h = p.add_array("H", DType::U32, rows + 1);
+    let vv = p.add_array("V", DType::F32, nnz.max(1));
+    let c = p.add_array("C", DType::U32, nnz.max(1));
+    let x = p.add_array("X", DType::F32, xlen);
+    let y = p.add_array("Y", DType::F32, rows);
+    p.atomic_rmw = false;
+    p.body = vec![Stmt::RangeFor {
+        lo: Expr::load(h, Expr::Iv(0)),
+        hi: Expr::load(h, Expr::bin(Op::Add, Expr::Iv(0), Expr::cu32(1))),
+        body: vec![Stmt::Rmw {
+            arr: y,
+            idx: Expr::Iv(0),
+            op: Op::Add,
+            val: Expr::bin(
+                Op::Mul,
+                Expr::load(vv, Expr::Iv(1)),
+                Expr::load(x, Expr::load(c, Expr::Iv(1))),
+            ),
+        }],
+    }];
+    let mut mem = MemImage::new();
+    mem.store_u32_slice(p.arrays[h].base, &offs);
+    for j in 0..nnz as u64 {
+        mem.write_f32(p.arrays[vv].addr(j), rng.f32());
+        mem.write_u32(p.arrays[c].addr(j), rng.below(xlen as u64) as u32);
+    }
+    for i in 0..xlen as u64 {
+        mem.write_f32(p.arrays[x].addr(i), rng.f32());
+    }
+    (p, mem)
+}
+
+fn assert_equiv(p: &Program, base: &MemImage, dx: &MemImage) {
+    for arr in &p.arrays {
+        for i in 0..arr.len as u64 {
+            let b = base.read_word(arr.addr(i), arr.dtype.size());
+            let d = dx.read_word(arr.addr(i), arr.dtype.size());
+            if arr.dtype == DType::F32 {
+                let (bf, df) = (f32::from_bits(b as u32), f32::from_bits(d as u32));
+                assert!(
+                    (bf - df).abs() <= 1e-3 * bf.abs().max(1.0),
+                    "{}[{i}]: {bf} vs {df}",
+                    arr.name
+                );
+            } else {
+                assert_eq!(b, d, "{}[{i}]", arr.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gather_codegen_equivalent_to_interp() {
+    check("gather equivalence", 25, |rng| {
+        let (p, mem) = random_gather(rng);
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert_equiv(&p, &cw.baseline.mem, &cw.dx.mem);
+    });
+}
+
+#[test]
+fn prop_rmw_codegen_equivalent_to_interp() {
+    check("rmw equivalence", 25, |rng| {
+        let (p, mem) = random_rmw(rng);
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert_equiv(&p, &cw.baseline.mem, &cw.dx.mem);
+    });
+}
+
+#[test]
+fn prop_range_codegen_equivalent_to_interp() {
+    check("range equivalence", 15, |rng| {
+        let (p, mem) = random_range(rng);
+        let cw = compile(&p, &mem, &small_cfg()).unwrap();
+        assert_equiv(&p, &cw.baseline.mem, &cw.dx.mem);
+    });
+}
+
+#[test]
+fn prop_interp_deterministic() {
+    check("interp determinism", 10, |rng| {
+        let (p, mem) = random_gather(rng);
+        let a = interpret(&p, &mem, None);
+        let b = interpret(&p, &mem, None);
+        for arr in &p.arrays {
+            for i in 0..arr.len as u64 {
+                assert_eq!(
+                    a.mem.read_u32(arr.addr(i)),
+                    b.mem.read_u32(arr.addr(i))
+                );
+            }
+        }
+        assert_eq!(a.streams.len(), b.streams.len());
+        for (x, y) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(x.ops, y.ops);
+        }
+    });
+}
+
+#[test]
+fn prop_isa_roundtrip_random() {
+    check("isa roundtrip", 200, |rng| {
+        let opcode = Opcode::from_u8(rng.below(8) as u8).unwrap();
+        let dtype = dx100::dx100::isa::DType::from_u8(rng.below(6) as u8).unwrap();
+        let op = loop {
+            let o = Op::from_u8(rng.below(15) as u8).unwrap();
+            if opcode != Opcode::Irmw || o.rmw_legal() {
+                break o;
+            }
+        };
+        let inst = Instruction {
+            opcode,
+            dtype,
+            op,
+            base: rng.next_u64() & ((1 << 48) - 1),
+            td: rng.below(33) as u8,
+            td2: rng.below(33) as u8,
+            ts1: rng.below(33) as u8,
+            ts2: rng.below(33) as u8,
+            tc: rng.below(33) as u8,
+            rs1: rng.below(32) as u8,
+            rs2: rng.below(32) as u8,
+            rs3: rng.below(32) as u8,
+        };
+        assert_eq!(Instruction::decode(inst.encode()).unwrap(), inst);
+    });
+}
+
+#[test]
+fn prop_simulation_timing_sane() {
+    // Timing invariants: DX100 never loses to baseline by more than the
+    // dispatch overhead bound on random bandwidth-bound gathers, and all
+    // systems produce nonzero finite results.
+    check("timing sanity", 6, |rng| {
+        let n = 2048 + gen::size(rng, 4096);
+        let w = dx100::workloads::micro::gather_full(
+            n,
+            dx100::workloads::micro::IndexPattern::UniformRandom,
+            rng.next_u64(),
+        );
+        let cfg = SystemConfig::table3();
+        let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w);
+        let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w);
+        assert!(base.cycles > 0 && dx.cycles > 0);
+        assert!(base.bw_util <= 1.0 && dx.bw_util <= 1.0, "util must be <= peak");
+        assert!(dx.row_hit_rate <= 1.0 && base.row_hit_rate <= 1.0);
+        assert!(
+            dx.cycles < 4 * base.cycles,
+            "DX100 pathologically slow: {} vs {}",
+            dx.cycles,
+            base.cycles
+        );
+    });
+}
