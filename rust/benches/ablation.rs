@@ -4,12 +4,15 @@
 //! translation/insert throughput), and the controller's FR-FCFS visibility
 //! (request-buffer depth) for the baseline.
 use dx100::config::SystemConfig;
+use dx100::engine::harness::Harness;
 use dx100::metrics::compare_one;
 use dx100::workloads::micro::{self, AllMissOrder};
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
+    let mut h = Harness::new(
+        "ablation",
+        "Ablation: which mechanism buys what (worst-order all-miss gather)",
+    );
     // Miss-dominated gather over 16 rows x all banks (the §6.1 All-Misses
     // set in its worst ordering) — large enough that the reordering window
     // actually binds.
@@ -23,22 +26,23 @@ fn main() {
             bgi: false,
         },
     );
-    println!("== Ablation: which mechanism buys what (worst-order all-miss gather) ==");
 
-    println!("\nRow-Table rows per slice (reordering window):");
+    h.line("\nRow-Table rows per slice (reordering window):");
     for rows in [4usize, 16, 64, 256] {
         let mut cfg = SystemConfig::table3();
         cfg.dx100.rowtab_rows = rows;
         let c = compare_one(&w, &cfg, false);
-        println!(
+        h.line(&format!(
             "  rows={rows:>4}: speedup {:.2}x, dx RBH {:.1}%, dx BW {:.1}%",
             c.speedup(),
             c.dx100.row_hit_rate * 100.0,
             c.dx100.bw_util * 100.0
-        );
+        ));
+        h.comparisons_tagged(std::slice::from_ref(&c), &format!("@rows{rows}"));
+        h.metric(&format!("rows{rows}_speedup"), c.speedup());
     }
 
-    println!("\nRow-Table columns per row (coalescing capacity):");
+    h.line("\nRow-Table columns per row (coalescing capacity):");
     for cols in [1usize, 2, 8, 16] {
         let mut cfg = SystemConfig::table3();
         cfg.dx100.rowtab_cols = cols;
@@ -49,32 +53,38 @@ fn main() {
             .first()
             .map(|d| d.coalesce_factor())
             .unwrap_or(0.0);
-        println!(
-            "  cols={cols:>3}: speedup {:.2}x, coalesce {:.2} words/access",
-            c.speedup(),
-            coalesce
-        );
+        h.line(&format!(
+            "  cols={cols:>3}: speedup {:.2}x, coalesce {coalesce:.2} words/access",
+            c.speedup()
+        ));
+        h.comparisons_tagged(std::slice::from_ref(&c), &format!("@cols{cols}"));
+        h.metric(&format!("cols{cols}_speedup"), c.speedup());
+        h.metric(&format!("cols{cols}_coalesce"), coalesce);
     }
 
-    println!("\nIndirect-unit fill rate (indices/cycle):");
+    h.line("\nIndirect-unit fill rate (indices/cycle):");
     for rate in [1usize, 2, 4, 16] {
         let mut cfg = SystemConfig::table3();
         cfg.dx100.fill_rate = rate;
         let c = compare_one(&w, &cfg, false);
-        println!("  fill={rate:>3}: speedup {:.2}x", c.speedup());
+        h.line(&format!("  fill={rate:>3}: speedup {:.2}x", c.speedup()));
+        h.comparisons_tagged(std::slice::from_ref(&c), &format!("@fill{rate}"));
+        h.metric(&format!("fill{rate}_speedup"), c.speedup());
     }
 
-    println!("\nBaseline FR-FCFS request buffer (controller visibility):");
+    h.line("\nBaseline FR-FCFS request buffer (controller visibility):");
     for buf in [8usize, 32, 128] {
         let mut cfg = SystemConfig::table3();
         cfg.dram.request_buffer = buf;
         let c = compare_one(&w, &cfg, false);
-        println!(
+        h.line(&format!(
             "  buffer={buf:>4}: baseline RBH {:.1}%, BW {:.1}% (DX100 speedup {:.2}x)",
             c.baseline.row_hit_rate * 100.0,
             c.baseline.bw_util * 100.0,
             c.speedup()
-        );
+        ));
+        h.comparisons_tagged(std::slice::from_ref(&c), &format!("@buf{buf}"));
+        h.metric(&format!("buf{buf}_speedup"), c.speedup());
     }
-    println!("\nbench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.finish();
 }

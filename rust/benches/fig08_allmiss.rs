@@ -3,29 +3,28 @@
 //! Paper: DX100 82-85% BW regardless of order; baseline 65% best-case down
 //! to ~26%; max speedup 9.9x at the worst ordering.
 use dx100::config::SystemConfig;
+use dx100::engine::harness::Harness;
 use dx100::metrics::compare_one;
 use dx100::workloads::micro::{self, AllMissOrder};
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
+    let mut h = Harness::new("fig08_allmiss", "Figure 8b/c: All-Misses sweep");
     let cfg = SystemConfig::table3();
     let orders = [
-        ("RBH0 CHI0 BGI0 (worst)", 0.0, false, false),
-        ("RBH50 CHI0 BGI0", 0.5, false, false),
-        ("RBH100 CHI0 BGI0", 1.0, false, false),
-        ("RBH100 CHI1 BGI0", 1.0, true, false),
-        ("RBH100 CHI1 BGI1 (best)", 1.0, true, true),
+        ("RBH0 CHI0 BGI0 (worst)", "worst", 0.0, false, false),
+        ("RBH50 CHI0 BGI0", "rbh50", 0.5, false, false),
+        ("RBH100 CHI0 BGI0", "rbh100", 1.0, false, false),
+        ("RBH100 CHI1 BGI0", "rbh100chi", 1.0, true, false),
+        ("RBH100 CHI1 BGI1 (best)", "best", 1.0, true, true),
     ];
-    println!("== Figure 8b/c: All-Misses sweep ==");
-    println!(
+    h.line(&format!(
         "{:<26} {:>9} {:>8} {:>8} {:>8} {:>8}",
         "index order", "speedup", "baseBW%", "dxBW%", "baseRBH%", "dxRBH%"
-    );
-    for (name, rbh, chi, bgi) in orders {
+    ));
+    for (name, tag, rbh, chi, bgi) in orders {
         let w = micro::gather_allmiss(&cfg.dram, 16, AllMissOrder { rbh, chi, bgi });
         let c = compare_one(&w, &cfg, false);
-        println!(
+        h.line(&format!(
             "{:<26} {:>8.2}x {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
             name,
             c.speedup(),
@@ -33,7 +32,11 @@ fn main() {
             c.dx100.bw_util * 100.0,
             c.baseline.row_hit_rate * 100.0,
             c.dx100.row_hit_rate * 100.0
-        );
+        ));
+        h.comparisons_tagged(std::slice::from_ref(&c), &format!("@{tag}"));
+        h.metric(&format!("{tag}_speedup"), c.speedup());
+        h.metric(&format!("{tag}_dx_bw"), c.dx100.bw_util);
     }
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.paper("DX100 82-85% BW at any order; baseline 65% -> ~26%; max speedup 9.9x");
+    h.finish();
 }

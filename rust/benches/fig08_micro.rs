@@ -2,12 +2,12 @@
 //! Paper: Gather-SPD 1.2x, Gather-Full 3.2x, RMW-Atomic 17.8x,
 //! RMW-NoAtom 3.7x, Scatter 6.6x.
 use dx100::config::SystemConfig;
+use dx100::engine::harness::Harness;
 use dx100::metrics::compare_one;
 use dx100::workloads::micro::{self, IndexPattern};
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
+    let mut h = Harness::new("fig08_micro", "Figure 8a: All-Hits microbenchmarks");
     let cfg = SystemConfig::table3();
     let n = 1 << 16;
     let cases = [
@@ -17,14 +17,13 @@ fn main() {
         (micro::rmw(n, false, IndexPattern::Streaming, 3), 3.7),
         (micro::scatter(n, IndexPattern::Streaming, 4), 6.6),
     ];
-    println!("== Figure 8a: All-Hits microbenchmarks ==");
-    println!(
+    h.line(&format!(
         "{:<12} {:>10} {:>10} {:>9} {:>9} {:>10}",
         "kernel", "base(cyc)", "dx(cyc)", "speedup", "paper", "instr red"
-    );
-    for (w, paper) in cases {
-        let c = compare_one(&w, &cfg, false);
-        println!(
+    ));
+    for (w, paper) in &cases {
+        let c = compare_one(w, &cfg, false);
+        h.line(&format!(
             "{:<12} {:>10} {:>10} {:>8.2}x {:>8.1}x {:>9.1}x",
             c.workload,
             c.baseline.cycles,
@@ -32,7 +31,10 @@ fn main() {
             c.speedup(),
             paper,
             c.instr_reduction()
-        );
+        ));
+        h.comparisons(std::slice::from_ref(&c));
+        h.metric(&format!("{}_speedup", c.workload), c.speedup());
     }
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.paper("Gather-SPD 1.2x, Gather-Full 3.2x, RMW-Atomic 17.8x, RMW-NoAtom 3.7x, Scatter 6.6x");
+    h.finish();
 }

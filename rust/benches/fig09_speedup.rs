@@ -2,18 +2,17 @@
 //! Paper: 2.6x geomean. Expected shape: every workload > 1x, RMW-heavy and
 //! bandwidth-bound kernels highest.
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use dx100::engine::harness::Harness;
+use dx100::metrics::{geomean_of, run_suite};
 use dx100::report;
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
-    let comps = run_suite(&SystemConfig::table3(), bench_scale(), false);
-    println!("== Figure 9: DX100 speedup over baseline ==");
-    print!("{}", report::speedup_table(&comps));
-    println!(
-        "paper: 2.6x geomean | measured: {:.2}x | bench wall time {:.1}s",
-        geomean_of(&comps, |c| c.speedup()),
-        t0.elapsed().as_secs_f64()
-    );
+    let mut h = Harness::new("fig09", "Figure 9: DX100 speedup over baseline");
+    let comps = run_suite(&SystemConfig::table3(), h.scale(), false);
+    h.table(&report::speedup_table(&comps));
+    h.comparisons(&comps);
+    let g = geomean_of(&comps, |c| c.speedup());
+    h.metric("geomean_speedup", g);
+    h.paper(&format!("2.6x geomean | measured: {g:.2}x"));
+    h.finish();
 }

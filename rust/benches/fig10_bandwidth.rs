@@ -2,20 +2,23 @@
 //! (c) request-buffer occupancy — baseline vs DX100.
 //! Paper: 3.9x BW, 2.7x RBH, 12.1x occupancy on average.
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use dx100::engine::harness::Harness;
+use dx100::metrics::{geomean_of, run_suite};
 use dx100::report;
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
-    let comps = run_suite(&SystemConfig::table3(), bench_scale(), false);
-    println!("== Figure 10: bandwidth / RBH / occupancy ==");
-    print!("{}", report::bandwidth_table(&comps));
-    println!(
-        "geomeans: BW {:.2}x (paper 3.9x) | RBH {:.2}x (paper 2.7x) | occupancy {:.2}x (paper 12.1x)",
-        geomean_of(&comps, |c| c.bw_improvement()),
-        geomean_of(&comps, |c| c.rbh_improvement()),
-        geomean_of(&comps, |c| c.occupancy_improvement()),
-    );
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    let mut h = Harness::new("fig10", "Figure 10: bandwidth / RBH / occupancy");
+    let comps = run_suite(&SystemConfig::table3(), h.scale(), false);
+    h.table(&report::bandwidth_table(&comps));
+    h.comparisons(&comps);
+    let bw = geomean_of(&comps, |c| c.bw_improvement());
+    let rbh = geomean_of(&comps, |c| c.rbh_improvement());
+    let occ = geomean_of(&comps, |c| c.occupancy_improvement());
+    h.metric("geomean_bw_improvement", bw);
+    h.metric("geomean_rbh_improvement", rbh);
+    h.metric("geomean_occupancy_improvement", occ);
+    h.paper(&format!(
+        "BW 3.9x, RBH 2.7x, occupancy 12.1x | measured: BW {bw:.2}x | RBH {rbh:.2}x | occ {occ:.2}x"
+    ));
+    h.finish();
 }

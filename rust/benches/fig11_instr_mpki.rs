@@ -2,19 +2,21 @@
 //! Paper: 3.6x geomean instruction reduction; BFS slightly increases due
 //! to synchronization spinning.
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, geomean_of, run_suite};
+use dx100::engine::harness::Harness;
+use dx100::metrics::{geomean_of, run_suite};
 use dx100::report;
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
-    let comps = run_suite(&SystemConfig::table3(), bench_scale(), false);
-    println!("== Figure 11: instruction / MPKI reduction ==");
-    print!("{}", report::instr_mpki_table(&comps));
-    println!(
-        "geomeans: instr {:.2}x (paper 3.6x) | MPKI {:.2}x",
-        geomean_of(&comps, |c| c.instr_reduction()),
-        geomean_of(&comps, |c| c.mpki_reduction()),
-    );
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    let mut h = Harness::new("fig11", "Figure 11: instruction / MPKI reduction");
+    let comps = run_suite(&SystemConfig::table3(), h.scale(), false);
+    h.table(&report::instr_mpki_table(&comps));
+    h.comparisons(&comps);
+    let instr = geomean_of(&comps, |c| c.instr_reduction());
+    let mpki = geomean_of(&comps, |c| c.mpki_reduction());
+    h.metric("geomean_instr_reduction", instr);
+    h.metric("geomean_mpki_reduction", mpki);
+    h.paper(&format!(
+        "instr 3.6x | measured: instr {instr:.2}x | MPKI {mpki:.2}x"
+    ));
+    h.finish();
 }

@@ -1,18 +1,17 @@
 //! Figure 12: DX100 vs the DMP indirect prefetcher.
 //! Paper: 2.0x speedup, 3.3x bandwidth utilization over DMP.
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, run_suite};
+use dx100::engine::harness::Harness;
+use dx100::metrics::run_suite;
 use dx100::util::geomean;
-use std::time::Instant;
 
 fn main() {
-    let t0 = Instant::now();
-    let comps = run_suite(&SystemConfig::table3(), bench_scale(), true);
-    println!("== Figure 12: DX100 vs DMP ==");
-    println!(
+    let mut h = Harness::new("fig12", "Figure 12: DX100 vs DMP");
+    let comps = run_suite(&SystemConfig::table3(), h.scale(), true);
+    h.line(&format!(
         "{:<8} {:>9} {:>9} {:>9} {:>8} | {:>7} {:>7}",
         "workload", "base", "dmp", "dx", "vs dmp", "dmpBW%", "dxBW%"
-    );
+    ));
     let mut sp = Vec::new();
     let mut bw = Vec::new();
     for c in &comps {
@@ -20,7 +19,7 @@ fn main() {
         let s = d.cycles as f64 / c.dx100.cycles as f64;
         sp.push(s);
         bw.push(c.dx100.bw_util / d.bw_util.max(1e-9));
-        println!(
+        h.line(&format!(
             "{:<8} {:>9} {:>9} {:>9} {:>7.2}x | {:>6.1}% {:>6.1}%",
             c.workload,
             c.baseline.cycles,
@@ -29,12 +28,14 @@ fn main() {
             s,
             d.bw_util * 100.0,
             c.dx100.bw_util * 100.0
-        );
+        ));
     }
-    println!(
-        "geomean speedup vs DMP: {:.2}x (paper 2.0x) | BW vs DMP: {:.2}x (paper 3.3x)",
-        geomean(&sp),
-        geomean(&bw)
-    );
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.comparisons(&comps);
+    let (gs, gb) = (geomean(&sp), geomean(&bw));
+    h.metric("geomean_speedup_vs_dmp", gs);
+    h.metric("geomean_bw_vs_dmp", gb);
+    h.paper(&format!(
+        "2.0x speedup, 3.3x BW vs DMP | measured: {gs:.2}x speedup | {gb:.2}x BW"
+    ));
+    h.finish();
 }

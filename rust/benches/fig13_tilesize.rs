@@ -1,29 +1,31 @@
 //! Figure 13: performance sensitivity to the tile size (1K -> 32K).
 //! Paper: speedup grows 1.7x -> 2.9x; coalescing improves 1.4x; +25% BW.
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, geomean_of, run_suite};
-use std::time::Instant;
+use dx100::engine::harness::Harness;
+use dx100::metrics::{geomean_of, run_suite};
 
 fn main() {
-    let t0 = Instant::now();
-    println!("== Figure 13: tile-size sensitivity ==");
+    let mut h = Harness::new("fig13", "Figure 13: tile-size sensitivity");
     for tile in [1024usize, 4096, 16384, 32768] {
         let mut cfg = SystemConfig::table3();
         cfg.dx100.tile_elems = tile;
-        let comps = run_suite(&cfg, bench_scale(), false);
+        let comps = run_suite(&cfg, h.scale(), false);
         let coalesce: f64 = comps
             .iter()
             .flat_map(|c| c.dx100.dx.iter())
             .map(|d| d.coalesce_factor())
             .sum::<f64>()
             / comps.len() as f64;
-        println!(
-            "tile={:>6}: geomean speedup {:.2}x | mean coalesce factor {:.2} | dx BW {:.1}%",
-            tile,
-            geomean_of(&comps, |c| c.speedup()),
-            coalesce,
-            100.0 * comps.iter().map(|c| c.dx100.bw_util).sum::<f64>() / comps.len() as f64,
-        );
+        let speedup = geomean_of(&comps, |c| c.speedup());
+        let bw = 100.0 * comps.iter().map(|c| c.dx100.bw_util).sum::<f64>() / comps.len() as f64;
+        h.line(&format!(
+            "tile={tile:>6}: geomean speedup {speedup:.2}x | mean coalesce factor {coalesce:.2} | dx BW {bw:.1}%"
+        ));
+        h.comparisons_tagged(&comps, &format!("@tile{tile}"));
+        h.metric(&format!("tile{tile}_geomean_speedup"), speedup);
+        h.metric(&format!("tile{tile}_mean_coalesce"), coalesce);
+        h.metric(&format!("tile{tile}_dx_bw_pct"), bw);
     }
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.paper("speedup grows 1.7x -> 2.9x from 1K to 32K tiles");
+    h.finish();
 }

@@ -1,24 +1,24 @@
 //! Figure 14: scalability — 4 cores/2ch vs 8 cores/4ch with one or two
 //! DX100 instances. Paper: 2.6x (4c), 2.5x (8c, 1x), 2.7x (8c, 2x).
 use dx100::config::SystemConfig;
-use dx100::metrics::{bench_scale, geomean_of, run_suite};
-use std::time::Instant;
+use dx100::engine::harness::Harness;
+use dx100::metrics::{geomean_of, run_suite};
 
 fn main() {
-    let t0 = Instant::now();
-    println!("== Figure 14: core / DX100-instance scaling ==");
+    let mut h = Harness::new("fig14", "Figure 14: core / DX100-instance scaling");
     let configs = [
-        ("4 cores, 2ch, 1x DX100", SystemConfig::table3(), 1, 2.6),
-        ("8 cores, 4ch, 1x DX100", SystemConfig::table3_8core(), 1, 2.5),
-        ("8 cores, 4ch, 2x DX100", SystemConfig::table3_8core(), 2, 2.7),
+        ("4c2ch1x", "4 cores, 2ch, 1x DX100", SystemConfig::table3(), 1, 2.6),
+        ("8c4ch1x", "8 cores, 4ch, 1x DX100", SystemConfig::table3_8core(), 1, 2.5),
+        ("8c4ch2x", "8 cores, 4ch, 2x DX100", SystemConfig::table3_8core(), 2, 2.7),
     ];
-    for (name, mut cfg, instances, paper) in configs {
+    for (tag, name, mut cfg, instances, paper) in configs {
         cfg.dx100.instances = instances;
-        let comps = run_suite(&cfg, bench_scale(), false);
-        println!(
-            "{name}: geomean speedup {:.2}x (paper {paper}x)",
-            geomean_of(&comps, |c| c.speedup())
-        );
+        let comps = run_suite(&cfg, h.scale(), false);
+        let g = geomean_of(&comps, |c| c.speedup());
+        h.line(&format!("{name}: geomean speedup {g:.2}x (paper {paper}x)"));
+        h.comparisons_tagged(&comps, &format!("@{tag}"));
+        h.metric(&format!("{tag}_geomean_speedup"), g);
     }
-    println!("bench wall time {:.1}s", t0.elapsed().as_secs_f64());
+    h.paper("2.6x (4c), 2.5x (8c, 1x DX100), 2.7x (8c, 2x DX100)");
+    h.finish();
 }

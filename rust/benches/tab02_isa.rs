@@ -1,10 +1,11 @@
 //! Table 2: the DX100 ISA — encoding round-trip and per-pattern listings
 //! for every Table 1 access shape, plus encode/decode throughput.
 use dx100::dx100::isa::*;
+use dx100::engine::harness::Harness;
 use std::time::Instant;
 
 fn main() {
-    println!("== Table 2: DX100 instruction set ==");
+    let mut h = Harness::new("tab02", "Table 2: DX100 instruction set");
     let patterns: Vec<(&str, Vec<Instruction>)> = vec![
         ("CG: LD A[B[j]], j=H[i]..H[i+1]", vec![
             Instruction::sld(DType::U32, 0x1000_0000, 0, 0, 1, 2, NO_TILE),
@@ -27,14 +28,17 @@ fn main() {
             Instruction::ist(DType::U32, 0x8000_0000, 0, 1, 3),
         ]),
     ];
+    let mut listed = 0u64;
     for (name, insts) in &patterns {
-        println!("\n{name}");
+        h.line(&format!("\n{name}"));
         for i in insts {
             let enc = i.encode();
             assert_eq!(Instruction::decode(enc).unwrap(), *i);
-            println!("  {i}");
+            h.line(&format!("  {i}"));
+            listed += 1;
         }
     }
+    h.metric("instructions_listed", listed as f64);
     // Encode/decode throughput (perf sanity of the 192b format).
     let inst = Instruction::irmw(DType::F64, 0xdead_0000, Op::Max, 7, 8, 9);
     let t0 = Instant::now();
@@ -46,8 +50,8 @@ fn main() {
         std::hint::black_box(Instruction::decode(std::hint::black_box(e)));
     }
     let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "\nencode+decode: {:.1} M ops/s (acc {acc})",
-        N as f64 / dt / 1e6
-    );
+    let mops = N as f64 / dt / 1e6;
+    h.line(&format!("\nencode+decode: {mops:.1} M ops/s (acc {acc})"));
+    h.metric("encode_decode_mops", mops);
+    h.finish();
 }

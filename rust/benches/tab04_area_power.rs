@@ -3,27 +3,49 @@
 //! processor overhead.
 use dx100::config::SystemConfig;
 use dx100::dx100::area::AreaReport;
+use dx100::engine::harness::Harness;
 
 fn main() {
+    let mut h = Harness::new("tab04", "Table 4: DX100 area & power (28 nm)");
     let cfg = SystemConfig::table3();
     let r = AreaReport::for_config(&cfg.dx100);
-    println!("== Table 4: DX100 area & power (28 nm) ==");
-    println!("{:<16} {:>10} {:>10}", "Module", "Area(mm2)", "Power(mW)");
+    h.line(&format!(
+        "{:<16} {:>10} {:>10}",
+        "Module", "Area(mm2)", "Power(mW)"
+    ));
     for (name, c) in r.components() {
-        println!("{:<16} {:>10.3} {:>10.2}", name, c.area_mm2, c.power_mw);
+        h.line(&format!(
+            "{:<16} {:>10.3} {:>10.2}",
+            name, c.area_mm2, c.power_mw
+        ));
+        h.metric(&format!("{name}_area_mm2"), c.area_mm2);
+        h.metric(&format!("{name}_power_mw"), c.power_mw);
     }
     let t = r.total();
-    println!("{:<16} {:>10.3} {:>10.2}   (paper: 4.061 / 777.17)", "Total", t.area_mm2, t.power_mw);
-    println!(
+    h.line(&format!(
+        "{:<16} {:>10.3} {:>10.2}   (paper: 4.061 / 777.17)",
+        "Total", t.area_mm2, t.power_mw
+    ));
+    h.metric("total_area_mm2", t.area_mm2);
+    h.metric("total_power_mw", t.power_mw);
+    h.metric("total_area_14nm_mm2", r.total_area_14nm());
+    h.metric("processor_overhead_4core", r.processor_overhead(4));
+    h.line(&format!(
         "14nm: {:.2} mm2 (paper ~1.5); overhead vs 4-core CPU: {:.1}% (paper 3.7%)",
         r.total_area_14nm(),
         r.processor_overhead(4) * 100.0
-    );
+    ));
     // Sensitivity: scratchpad dominates; smaller tiles shrink it.
     for tile in [1024usize, 4096, 16384] {
         let mut d = cfg.dx100.clone();
         d.tile_elems = tile;
         let rr = AreaReport::for_config(&d);
-        println!("  tile={:>6}: total {:.3} mm2", tile, rr.total().area_mm2);
+        h.line(&format!(
+            "  tile={tile:>6}: total {:.3} mm2",
+            rr.total().area_mm2
+        ));
+        h.metric(&format!("tile{tile}_total_area_mm2"), rr.total().area_mm2);
     }
+    h.paper("total 4.061 mm2 / 777.17 mW at 28 nm; ~1.5 mm2 at 14 nm; 3.7% of 4 cores");
+    h.finish();
 }

@@ -30,6 +30,7 @@ use crate::dx100::isa::{DType, Instruction, Op, Opcode, NO_TILE};
 use crate::dx100::mem_image::MemImage;
 use crate::dx100::timing::{Dx100Program, TimedInstr};
 use crate::prefetch::{DmpConfig, DmpHints};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Behavioural flags forwarded to the experiment driver.
 #[derive(Clone, Copy, Debug)]
@@ -529,12 +530,23 @@ impl<'a> PhaseEmitter<'a> {
     }
 }
 
+/// Process-wide count of [`compile`] invocations. Compilation dominates
+/// suite setup cost, so the engine deduplicates it; its compile-once tests
+/// assert against this hook.
+static COMPILE_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`compile`] has run in this process.
+pub fn compile_invocations() -> u64 {
+    COMPILE_INVOCATIONS.load(Ordering::Relaxed)
+}
+
 /// Compile `p` for both the baseline and DX100 systems.
 pub fn compile(
     p: &Program,
     init: &MemImage,
     cfg: &SystemConfig,
 ) -> Result<CompiledWorkload, LegalityError> {
+    COMPILE_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
     let (analysis, legal) = analyze(p);
     legal?;
     let baseline = interpret(p, init, Some(DmpConfig::default()));

@@ -9,7 +9,15 @@
 //! * [`SystemKind::Dx100`] — 8 MB LLC + one or more DX100 instances; cores
 //!   execute the compiled residual streams, the accelerator executes the
 //!   packed instruction programs.
+//!
+//! Per-kind behaviour (stream selection, accelerator construction, config
+//! adjustment) is factored into [`variant::SystemVariant`]; the event loop
+//! in [`system`] is kind-agnostic. Multi-run experiments should go through
+//! [`crate::engine`], which compiles each workload once and fans the run
+//! matrix out across worker threads.
 
 pub mod system;
+pub mod variant;
 
 pub use system::{Experiment, RunStats, SystemKind};
+pub use variant::{BaselineVariant, DmpVariant, Dx100Variant, DxSetup, SystemVariant};

@@ -1,5 +1,10 @@
 //! Full-system event loop.
+//!
+//! The per-kind branches (stream selection, accelerator construction,
+//! config adjustment) live on [`SystemVariant`](super::variant::SystemVariant);
+//! this module only assembles the shared machinery and drives events.
 
+use super::variant::{DxSetup, SystemVariant};
 use crate::cache::{Hierarchy, StridePrefetcher};
 use crate::compiler::{compile, CompiledWorkload};
 use crate::config::SystemConfig;
@@ -64,23 +69,27 @@ pub struct Experiment {
 
 impl Experiment {
     pub fn new(kind: SystemKind, cfg: SystemConfig) -> Self {
-        let cfg = match kind {
-            SystemKind::Dx100 => cfg.for_dx100(),
-            _ => cfg,
-        };
-        Experiment { kind, cfg }
+        Experiment {
+            kind,
+            cfg: kind.variant().adjust(cfg),
+        }
     }
 
     /// Compile and run a workload end to end.
+    ///
+    /// Compiles per call; to share one [`CompiledWorkload`] across several
+    /// systems (and across worker threads), go through
+    /// [`crate::engine`] or call [`Experiment::run_compiled`] directly.
     pub fn run(&self, w: &WorkloadSpec) -> RunStats {
         let cw = compile(&w.program, &w.mem, &self.cfg)
             .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
         self.run_compiled(&cw, w.warm_caches)
     }
 
-    /// Run a pre-compiled workload (benches reuse compilation).
+    /// Run a pre-compiled workload (the engine and benches share one
+    /// compilation across all systems).
     pub fn run_compiled(&self, cw: &CompiledWorkload, warm: bool) -> RunStats {
-        let mut sys = System::build(self.kind, &self.cfg, cw, warm);
+        let mut sys = System::build(self.kind.variant(), &self.cfg, cw, warm);
         sys.run();
         sys.stats(self.kind, cw.name)
     }
@@ -106,21 +115,13 @@ struct System<'a> {
 }
 
 impl<'a> System<'a> {
-    fn build(kind: SystemKind, cfg: &'a SystemConfig, cw: &'a CompiledWorkload, warm: bool) -> Self {
-        let streams: Vec<&'a [crate::core::Op]> = match kind {
-            SystemKind::Baseline | SystemKind::Dmp => cw
-                .baseline
-                .streams
-                .iter()
-                .map(|s| s.ops.as_slice())
-                .collect(),
-            SystemKind::Dx100 => cw
-                .dx
-                .core_streams
-                .iter()
-                .map(|s| s.ops.as_slice())
-                .collect(),
-        };
+    fn build(
+        variant: &dyn SystemVariant,
+        cfg: &'a SystemConfig,
+        cw: &'a CompiledWorkload,
+        warm: bool,
+    ) -> Self {
+        let streams: Vec<&'a [crate::core::Op]> = variant.streams(cw);
         let ncores = streams.len().max(1);
         let mut core_cfg = cfg.core.clone();
         core_cfg.num_cores = core_cfg.num_cores.max(ncores);
@@ -156,30 +157,12 @@ impl<'a> System<'a> {
                 }
             }
         }
-        let (dx, dx_programs, ready) = if kind == SystemKind::Dx100 {
-            let mut dx = Vec::new();
-            let mut progs = Vec::new();
-            let mut ready = Vec::new();
-            for (i, prog) in cw.dx.programs.iter().enumerate() {
-                dx.push(Dx100Timing::new(
-                    i,
-                    cfg.dx100.clone(),
-                    prog.clone(),
-                    &mem,
-                    cw.dx.programs.len(),
-                ));
-                progs.push(prog);
-                ready.push(vec![false; cfg.dx100.tiles + cw.dx.phases]);
-            }
-            (dx, progs, ready)
-        } else {
-            (Vec::new(), Vec::new(), Vec::new())
-        };
-        let dmp_hints = if kind == SystemKind::Dmp {
-            Some(cw.baseline.dmp_hints.as_slice())
-        } else {
-            None
-        };
+        let DxSetup {
+            dx,
+            programs: dx_programs,
+            ready,
+        } = variant.accelerators(cfg, cw, &mem);
+        let dmp_hints = variant.dmp_hints(cw);
         System {
             cfg,
             cores,

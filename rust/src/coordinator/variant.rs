@@ -1,0 +1,192 @@
+//! Per-[`SystemKind`] system assembly, factored out of the event loop.
+//!
+//! [`super::system::System`] used to pattern-match on the kind in three
+//! places (config adjustment, stream selection, accelerator construction).
+//! Each branch now lives on a [`SystemVariant`] implementation, so the
+//! constructor, the event loop, and stat collection are kind-agnostic and
+//! a fourth comparison point (e.g. an ideal-memory system) is one new
+//! variant rather than three new match arms.
+
+use super::system::SystemKind;
+use crate::compiler::CompiledWorkload;
+use crate::config::SystemConfig;
+use crate::core::Op;
+use crate::dx100::timing::{Dx100Program, Dx100Timing};
+use crate::mem::MemController;
+use crate::prefetch::DmpHints;
+
+/// Accelerator state built for one run (empty for CPU-only systems):
+/// timing models, their programs, and per-instance tile-ready flags.
+pub struct DxSetup<'a> {
+    pub dx: Vec<Dx100Timing>,
+    pub programs: Vec<&'a Dx100Program>,
+    pub ready: Vec<Vec<bool>>,
+}
+
+impl DxSetup<'_> {
+    fn none() -> Self {
+        DxSetup {
+            dx: Vec::new(),
+            programs: Vec::new(),
+            ready: Vec::new(),
+        }
+    }
+}
+
+/// Behaviour that differs between the simulated comparison points.
+pub trait SystemVariant: Sync {
+    fn kind(&self) -> SystemKind;
+
+    /// Adjust a base configuration for this system (e.g. the DX100 system
+    /// trades 2 MB of LLC for the scratchpad).
+    fn adjust(&self, cfg: SystemConfig) -> SystemConfig {
+        cfg
+    }
+
+    /// The per-core instruction streams this system executes.
+    fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]>;
+
+    /// DMP hint tables, if this system drives the indirect prefetcher.
+    fn dmp_hints<'a>(&self, _cw: &'a CompiledWorkload) -> Option<&'a [DmpHints]> {
+        None
+    }
+
+    /// Accelerator instances for this system.
+    fn accelerators<'a>(
+        &self,
+        _cfg: &SystemConfig,
+        _cw: &'a CompiledWorkload,
+        _mem: &MemController,
+    ) -> DxSetup<'a> {
+        DxSetup::none()
+    }
+}
+
+fn baseline_streams(cw: &CompiledWorkload) -> Vec<&[Op]> {
+    cw.baseline.streams.iter().map(|s| s.ops.as_slice()).collect()
+}
+
+/// The Table 3 multicore with stride prefetchers and a 10 MB LLC.
+pub struct BaselineVariant;
+
+impl SystemVariant for BaselineVariant {
+    fn kind(&self) -> SystemKind {
+        SystemKind::Baseline
+    }
+
+    fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]> {
+        baseline_streams(cw)
+    }
+}
+
+/// Baseline plus the DMP-like indirect prefetcher.
+pub struct DmpVariant;
+
+impl SystemVariant for DmpVariant {
+    fn kind(&self) -> SystemKind {
+        SystemKind::Dmp
+    }
+
+    fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]> {
+        baseline_streams(cw)
+    }
+
+    fn dmp_hints<'a>(&self, cw: &'a CompiledWorkload) -> Option<&'a [DmpHints]> {
+        Some(cw.baseline.dmp_hints.as_slice())
+    }
+}
+
+/// 8 MB LLC + DX100 instances: cores execute the compiled residual
+/// streams, the accelerators execute the packed instruction programs.
+pub struct Dx100Variant;
+
+impl SystemVariant for Dx100Variant {
+    fn kind(&self) -> SystemKind {
+        SystemKind::Dx100
+    }
+
+    fn adjust(&self, cfg: SystemConfig) -> SystemConfig {
+        cfg.for_dx100()
+    }
+
+    fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]> {
+        cw.dx
+            .core_streams
+            .iter()
+            .map(|s| s.ops.as_slice())
+            .collect()
+    }
+
+    fn accelerators<'a>(
+        &self,
+        cfg: &SystemConfig,
+        cw: &'a CompiledWorkload,
+        mem: &MemController,
+    ) -> DxSetup<'a> {
+        let mut dx = Vec::new();
+        let mut programs = Vec::new();
+        let mut ready = Vec::new();
+        for (i, prog) in cw.dx.programs.iter().enumerate() {
+            dx.push(Dx100Timing::new(
+                i,
+                cfg.dx100.clone(),
+                prog.clone(),
+                mem,
+                cw.dx.programs.len(),
+            ));
+            programs.push(prog);
+            ready.push(vec![false; cfg.dx100.tiles + cw.dx.phases]);
+        }
+        DxSetup { dx, programs, ready }
+    }
+}
+
+impl SystemKind {
+    /// The variant implementing this kind's behaviour.
+    pub fn variant(self) -> &'static dyn SystemVariant {
+        match self {
+            SystemKind::Baseline => &BaselineVariant,
+            SystemKind::Dmp => &DmpVariant,
+            SystemKind::Dx100 => &Dx100Variant,
+        }
+    }
+
+    /// Stable lower-case label (reports, JSON emission).
+    pub fn label(self) -> &'static str {
+        match self {
+            SystemKind::Baseline => "baseline",
+            SystemKind::Dmp => "dmp",
+            SystemKind::Dx100 => "dx100",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_report_their_kind() {
+        for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
+            assert_eq!(kind.variant().kind(), kind);
+        }
+    }
+
+    #[test]
+    fn only_dx100_adjusts_the_config() {
+        let base = SystemConfig::table3();
+        for kind in [SystemKind::Baseline, SystemKind::Dmp] {
+            assert_eq!(kind.variant().adjust(base.clone()), base);
+        }
+        let dx = SystemKind::Dx100.variant().adjust(base.clone());
+        assert_eq!(dx.llc.size, 8 * 1024 * 1024);
+        assert_eq!(dx, base.for_dx100());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(SystemKind::Baseline.label(), "baseline");
+        assert_eq!(SystemKind::Dmp.label(), "dmp");
+        assert_eq!(SystemKind::Dx100.label(), "dx100");
+    }
+}

@@ -430,9 +430,13 @@ impl Dx100Timing {
         self.start_ready_instrs(t);
         let mut flags_changed = false;
         let mut retired_units = Vec::new();
-        let units: Vec<Unit> = self.active.keys().copied().collect();
-        for unit in units {
-            let mut a = self.active.remove(&unit).unwrap();
+        // Fixed unit order: HashMap key order varies per instance, which
+        // would make the request issue order (and thus every downstream
+        // timing) differ between two runs of the same workload.
+        for unit in [Unit::Stream, Unit::Indirect, Unit::Alu, Unit::RangeFuser] {
+            let Some(mut a) = self.active.remove(&unit) else {
+                continue;
+            };
             let finished = self.progress(&mut a, t, env);
             if finished {
                 self.retire(a.seq, t, env);

@@ -1,0 +1,288 @@
+//! Shared bench-binary harness.
+//!
+//! Every `rust/benches/*` binary (`harness = false`) follows the same
+//! shape: parse the dataset scale from `DX100_SCALE`, run its figure or
+//! table through the engine, print the paper-style text tables plus a
+//! paper-reference line, and report wall time. This module centralizes
+//! that driver so the binaries stay one-screen descriptions of *what* to
+//! run, and adds what hand-rolled drivers never had:
+//!
+//! * **simulator throughput** — events/sec over the whole bench, in the
+//!   spirit of SP1's cycle tracker, so engine regressions are visible;
+//! * **machine-readable output** — a `BENCH_<name>.json` written next to
+//!   the text tables (override the directory with `DX100_BENCH_DIR`), so
+//!   sweep tooling can consume results without scraping stdout.
+//!
+//! The JSON encoder is local and std-only: no external serializer crates
+//! are available offline.
+
+use crate::coordinator::RunStats;
+use crate::metrics::Comparison;
+use crate::workloads::Scale;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Minimal JSON value.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    UInt(u64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::UInt(u) => {
+                let _ = write!(out, "{u}");
+            }
+            Json::Num(x) => {
+                // JSON has no NaN/Inf literals.
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Driver state for one bench binary.
+pub struct Harness {
+    name: &'static str,
+    title: String,
+    t0: Instant,
+    events: u64,
+    metrics: Vec<(String, Json)>,
+    rows: Vec<Json>,
+    paper_refs: Vec<String>,
+}
+
+impl Harness {
+    /// Start a bench: prints the `== title ==` banner and the clock.
+    pub fn new(name: &'static str, title: &str) -> Self {
+        println!("== {title} ==");
+        Harness {
+            name,
+            title: title.to_string(),
+            t0: Instant::now(),
+            events: 0,
+            metrics: Vec::new(),
+            rows: Vec::new(),
+            paper_refs: Vec::new(),
+        }
+    }
+
+    /// Dataset scale (`DX100_SCALE`, default 2).
+    pub fn scale(&self) -> Scale {
+        super::scale_from_env()
+    }
+
+    /// Print a pre-rendered multi-line table.
+    pub fn table(&self, table: &str) {
+        print!("{table}");
+        if !table.ends_with('\n') {
+            println!();
+        }
+    }
+
+    /// Print one line of bench output.
+    pub fn line(&self, s: &str) {
+        println!("{s}");
+    }
+
+    /// Print and record the paper-reference comparison line.
+    pub fn paper(&mut self, text: &str) {
+        println!("paper: {text}");
+        self.paper_refs.push(text.to_string());
+    }
+
+    /// Record a named scalar metric (JSON only; print via [`Self::line`]).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), Json::Num(value)));
+    }
+
+    /// Record one run as a JSON row and count its events.
+    pub fn run(&mut self, workload: &str, rs: &RunStats) {
+        self.events += rs.events;
+        self.rows.push(run_row(workload, rs));
+    }
+
+    /// Record every run of a comparison set.
+    pub fn comparisons(&mut self, comps: &[Comparison]) {
+        self.comparisons_tagged(comps, "");
+    }
+
+    /// Record comparison runs with a workload-label suffix (config sweeps
+    /// run the same workloads several times, e.g. `CG@tile4096`).
+    pub fn comparisons_tagged(&mut self, comps: &[Comparison], tag: &str) {
+        for c in comps {
+            let label = format!("{}{tag}", c.workload);
+            self.run(&label, &c.baseline);
+            if let Some(d) = &c.dmp {
+                self.run(&label, d);
+            }
+            self.run(&label, &c.dx100);
+        }
+    }
+
+    /// Finish: print wall time + simulator throughput and write
+    /// `BENCH_<name>.json`.
+    pub fn finish(self) {
+        let wall = self.t0.elapsed().as_secs_f64();
+        if self.events > 0 {
+            let eps = self.events as f64 / wall.max(1e-9);
+            println!(
+                "bench wall time {wall:.1}s | {} events | {} events/s | {} threads",
+                crate::util::si(self.events as f64),
+                crate::util::si(eps),
+                super::threads_from_env(),
+            );
+        } else {
+            println!("bench wall time {wall:.1}s");
+        }
+        let path = self.json_path();
+        let doc = self.into_json(wall);
+        match std::fs::write(&path, doc.render()) {
+            Ok(()) => println!("json: {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+
+    /// Where the JSON lands: `DX100_BENCH_DIR` (default: current dir).
+    fn json_path(&self) -> PathBuf {
+        let dir = std::env::var("DX100_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    fn into_json(self, wall: f64) -> Json {
+        let eps = if self.events > 0 {
+            Json::Num(self.events as f64 / wall.max(1e-9))
+        } else {
+            Json::Null
+        };
+        Json::Obj(vec![
+            ("bench".into(), Json::Str(self.name.into())),
+            ("title".into(), Json::Str(self.title)),
+            ("scale".into(), Json::UInt(super::scale_from_env().0 as u64)),
+            (
+                "threads".into(),
+                Json::UInt(super::threads_from_env() as u64),
+            ),
+            ("wall_seconds".into(), Json::Num(wall)),
+            ("events".into(), Json::UInt(self.events)),
+            ("events_per_sec".into(), eps),
+            (
+                "paper_refs".into(),
+                Json::Arr(self.paper_refs.into_iter().map(Json::Str).collect()),
+            ),
+            ("metrics".into(), Json::Obj(self.metrics)),
+            ("rows".into(), Json::Arr(self.rows)),
+        ])
+    }
+}
+
+fn run_row(workload: &str, rs: &RunStats) -> Json {
+    Json::Obj(vec![
+        ("workload".into(), Json::Str(workload.to_string())),
+        ("system".into(), Json::Str(rs.kind.label().to_string())),
+        ("cycles".into(), Json::UInt(rs.cycles)),
+        ("instrs".into(), Json::UInt(rs.instrs)),
+        ("spin_instrs".into(), Json::UInt(rs.spin_instrs)),
+        ("bw_util".into(), Json::Num(rs.bw_util)),
+        ("row_hit_rate".into(), Json::Num(rs.row_hit_rate)),
+        ("occupancy".into(), Json::Num(rs.occupancy)),
+        ("mpki".into(), Json::Num(rs.mpki)),
+        ("dram_reads".into(), Json::UInt(rs.dram_reads)),
+        ("dram_writes".into(), Json::UInt(rs.dram_writes)),
+        ("dram_bytes".into(), Json::UInt(rs.dram_bytes)),
+        ("events".into(), Json::UInt(rs.events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Int(-3).render(), "-3");
+        assert_eq!(Json::UInt(u64::MAX).render(), "18446744073709551615");
+        assert_eq!(Json::Num(2.5).render(), "2.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn json_strings_escape() {
+        let s = Json::Str("a\"b\\c\nd\u{1}".to_string()).render();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+    }
+
+    #[test]
+    fn json_compound_renders() {
+        let doc = Json::Obj(vec![
+            ("xs".into(), Json::Arr(vec![Json::UInt(1), Json::UInt(2)])),
+            ("ok".into(), Json::Bool(false)),
+        ]);
+        assert_eq!(doc.render(), "{\"xs\":[1,2],\"ok\":false}");
+    }
+}

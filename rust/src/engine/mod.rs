@@ -1,0 +1,337 @@
+//! Compile-once / run-many experiment engine.
+//!
+//! The paper's evaluation sweeps 12 workloads x 3 systems x several
+//! configurations (Figures 9-14). The naive path recompiles every workload
+//! once per system and simulates every (workload, system) cell serially,
+//! which makes the simulator itself the bandwidth bottleneck of the study.
+//! This module restructures the experiment path:
+//!
+//! * [`RunPlan`] describes a run matrix over borrowed workloads. Each
+//!   workload is compiled **exactly once** per plan execution and the
+//!   resulting [`CompiledWorkload`] is shared by reference across the
+//!   Baseline/DMP/DX100 runs (compilation is system-independent: the
+//!   DX100 config adjustment only touches the LLC).
+//! * [`execute_with`] fans the matrix out across host worker threads
+//!   (`DX100_THREADS`, default: available parallelism). Results are
+//!   deterministic and plan-ordered: each cell's simulation is a pure
+//!   function of (config, compiled workload), so threading changes wall
+//!   time, never stats.
+//! * [`Suite`] is the owning builder the CLI and benches use;
+//!   [`crate::metrics::run_suite`] and [`crate::metrics::compare_one`]
+//!   are thin wrappers over it.
+//! * [`harness`] is the shared bench-binary entry point: scale/thread env
+//!   knobs, wall-time + events/sec throughput, `BENCH_*.json` emission.
+
+pub mod harness;
+
+use crate::compiler::{compile, CompiledWorkload};
+use crate::config::SystemConfig;
+use crate::coordinator::{Experiment, RunStats, SystemKind};
+use crate::workloads::{self, Scale, WorkloadSpec};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// All three systems, in reporting order.
+pub const ALL_SYSTEMS: [SystemKind; 3] =
+    [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+
+/// Baseline + DX100 (the Figure 9-11 comparison points).
+pub const BASE_AND_DX: [SystemKind; 2] = [SystemKind::Baseline, SystemKind::Dx100];
+
+/// Worker-thread count: `DX100_THREADS` if set (>= 1), else the host's
+/// available parallelism.
+pub fn threads_from_env() -> usize {
+    std::env::var("DX100_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Dataset scale from `DX100_SCALE` (default 2 — a few seconds per figure).
+pub fn scale_from_env() -> Scale {
+    Scale(
+        std::env::var("DX100_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2),
+    )
+}
+
+/// One (workload, system) cell of a run matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSpec {
+    /// Index into the plan's workload list.
+    pub workload: usize,
+    pub system: SystemKind,
+}
+
+/// A run matrix over borrowed workloads: every workload runs on every
+/// system under one base configuration.
+#[derive(Clone, Copy)]
+pub struct RunPlan<'a> {
+    pub cfg: &'a SystemConfig,
+    pub workloads: &'a [WorkloadSpec],
+    pub systems: &'a [SystemKind],
+}
+
+impl<'a> RunPlan<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        workloads: &'a [WorkloadSpec],
+        systems: &'a [SystemKind],
+    ) -> Self {
+        RunPlan {
+            cfg,
+            workloads,
+            systems,
+        }
+    }
+
+    /// The matrix cells in deterministic workload-major order.
+    pub fn cells(&self) -> Vec<RunSpec> {
+        let mut out = Vec::with_capacity(self.workloads.len() * self.systems.len());
+        for workload in 0..self.workloads.len() {
+            for &system in self.systems {
+                out.push(RunSpec { workload, system });
+            }
+        }
+        out
+    }
+}
+
+/// Stats for one workload across the plan's systems.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    pub workload: &'static str,
+    /// One entry per plan system, in plan order.
+    pub runs: Vec<RunStats>,
+}
+
+impl WorkloadResult {
+    /// The run for `kind`, if the plan included it.
+    pub fn for_system(&self, kind: SystemKind) -> Option<&RunStats> {
+        self.runs.iter().find(|r| r.kind == kind)
+    }
+}
+
+/// Results of one plan execution.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    /// Per-workload results in plan order.
+    pub workloads: Vec<WorkloadResult>,
+    /// `compile` invocations the engine performed (one per workload).
+    pub compiles: usize,
+    /// Worker threads used for the run matrix.
+    pub threads: usize,
+}
+
+impl SuiteResult {
+    /// Total simulator events processed across all runs.
+    pub fn total_events(&self) -> u64 {
+        self.workloads
+            .iter()
+            .flat_map(|w| w.runs.iter())
+            .map(|r| r.events)
+            .sum()
+    }
+}
+
+/// Execute `plan` with the env-configured thread count.
+pub fn execute(plan: &RunPlan) -> SuiteResult {
+    execute_with(plan, threads_from_env())
+}
+
+/// Execute `plan` on exactly `threads` worker threads (capped at the cell
+/// count).
+///
+/// Results are bit-identical regardless of `threads`: cells share the
+/// compiled workloads immutably and each simulation is deterministic, so
+/// only wall time changes.
+pub fn execute_with(plan: &RunPlan, threads: usize) -> SuiteResult {
+    // Compile each workload exactly once; every system's run borrows the
+    // same CompiledWorkload.
+    let compiled: Vec<CompiledWorkload> = plan
+        .workloads
+        .iter()
+        .map(|w| {
+            compile(&w.program, &w.mem, plan.cfg)
+                .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name))
+        })
+        .collect();
+    let cells = plan.cells();
+    let threads = threads.max(1).min(cells.len().max(1));
+    let mut stats: Vec<Option<RunStats>> = cells.iter().map(|_| None).collect();
+    if threads <= 1 {
+        for (slot, &cell) in stats.iter_mut().zip(&cells) {
+            *slot = Some(run_cell(plan, &compiled, cell));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, RunStats)>();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let (next, cells, compiled) = (&next, &cells, &compiled);
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&cell) = cells.get(i) else { break };
+                    if tx.send((i, run_cell(plan, compiled, cell))).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            // Workers finish in arbitrary order; the index restores the
+            // deterministic plan order.
+            for (i, rs) in rx {
+                stats[i] = Some(rs);
+            }
+        });
+    }
+    let mut it = stats.into_iter().map(|s| s.expect("cell not executed"));
+    let results = plan
+        .workloads
+        .iter()
+        .map(|w| WorkloadResult {
+            workload: w.program.name,
+            runs: plan.systems.iter().map(|_| it.next().unwrap()).collect(),
+        })
+        .collect();
+    SuiteResult {
+        workloads: results,
+        compiles: compiled.len(),
+        threads,
+    }
+}
+
+fn run_cell(plan: &RunPlan, compiled: &[CompiledWorkload], cell: RunSpec) -> RunStats {
+    let ex = Experiment::new(cell.system, plan.cfg.clone());
+    ex.run_compiled(
+        &compiled[cell.workload],
+        plan.workloads[cell.workload].warm_caches,
+    )
+}
+
+/// Owning builder over [`RunPlan`] for multi-run experiments.
+pub struct Suite {
+    cfg: SystemConfig,
+    systems: Vec<SystemKind>,
+    workloads: Vec<WorkloadSpec>,
+}
+
+impl Suite {
+    /// An empty suite comparing Baseline and DX100 under `cfg`.
+    pub fn new(cfg: SystemConfig) -> Self {
+        Suite {
+            cfg,
+            systems: BASE_AND_DX.to_vec(),
+            workloads: Vec::new(),
+        }
+    }
+
+    /// The paper's 12-workload evaluation suite (Figures 9-12).
+    pub fn paper(cfg: SystemConfig, scale: Scale, with_dmp: bool) -> Self {
+        let suite = Suite::new(cfg).workloads(workloads::all(scale));
+        if with_dmp {
+            suite.with_dmp()
+        } else {
+            suite
+        }
+    }
+
+    /// Also run the DMP system (Figure 12).
+    pub fn with_dmp(mut self) -> Self {
+        self.systems = ALL_SYSTEMS.to_vec();
+        self
+    }
+
+    /// Replace the system list.
+    pub fn systems(mut self, systems: &[SystemKind]) -> Self {
+        self.systems = systems.to_vec();
+        self
+    }
+
+    /// Append one workload.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workloads.push(w);
+        self
+    }
+
+    /// Append several workloads.
+    pub fn workloads(mut self, ws: Vec<WorkloadSpec>) -> Self {
+        self.workloads.extend(ws);
+        self
+    }
+
+    /// Borrow as a run plan.
+    pub fn plan(&self) -> RunPlan<'_> {
+        RunPlan::new(&self.cfg, &self.workloads, &self.systems)
+    }
+
+    /// Execute with the env-configured thread count.
+    pub fn execute(&self) -> SuiteResult {
+        execute(&self.plan())
+    }
+
+    /// Execute on exactly `threads` workers.
+    pub fn execute_with(&self, threads: usize) -> SuiteResult {
+        execute_with(&self.plan(), threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::micro;
+
+    #[test]
+    fn cells_are_workload_major() {
+        let cfg = SystemConfig::table3();
+        let ws = vec![
+            micro::gather_full(1024, micro::IndexPattern::Streaming, 1),
+            micro::scatter(1024, micro::IndexPattern::Streaming, 2),
+        ];
+        let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
+        let cells = plan.cells();
+        assert_eq!(cells.len(), 6);
+        assert_eq!((cells[0].workload, cells[0].system.label()), (0, "baseline"));
+        assert_eq!((cells[2].workload, cells[2].system.label()), (0, "dx100"));
+        assert_eq!((cells[3].workload, cells[3].system.label()), (1, "baseline"));
+    }
+
+    #[test]
+    fn executes_single_workload_plan_threaded() {
+        let cfg = SystemConfig::table3();
+        let ws = vec![micro::gather_full(
+            2048,
+            micro::IndexPattern::Streaming,
+            3,
+        )];
+        let plan = RunPlan::new(&cfg, &ws, &BASE_AND_DX);
+        let r = execute_with(&plan, 2);
+        assert_eq!(r.compiles, 1);
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.workloads.len(), 1);
+        assert_eq!(r.workloads[0].runs.len(), 2);
+        assert_eq!(r.workloads[0].runs[0].kind, SystemKind::Baseline);
+        assert_eq!(r.workloads[0].runs[1].kind, SystemKind::Dx100);
+        assert!(r.workloads[0].for_system(SystemKind::Dmp).is_none());
+        assert!(r.total_events() > 0);
+    }
+
+    #[test]
+    fn suite_builder_defaults_and_dmp() {
+        let suite = Suite::new(SystemConfig::table3())
+            .workload(micro::gather_full(1024, micro::IndexPattern::Streaming, 4));
+        assert_eq!(suite.plan().systems, &BASE_AND_DX);
+        let suite = suite.with_dmp();
+        assert_eq!(suite.plan().systems, &ALL_SYSTEMS);
+        let r = suite.execute_with(1);
+        assert_eq!(r.workloads[0].runs.len(), 3);
+    }
+}

@@ -30,8 +30,15 @@
 //! * [`workloads`] — the twelve paper benchmarks (NAS CG/IS, GAP BFS/PR/BC,
 //!   UME GZ/GZP/GZI/GZPI, Spatter-xRAGE, Hash-Join PRH/PRO) plus the §6.1
 //!   microbenchmarks, expressed in the mini-IR.
-//! * [`coordinator`] — experiment driver assembling (workload × system ×
-//!   config) runs and producing the paper's metrics.
+//! * [`coordinator`] — assembles one (workload × system × config) run:
+//!   per-kind [`coordinator::SystemVariant`]s plus a kind-agnostic event
+//!   loop producing the paper's metrics.
+//! * [`engine`] — the compile-once / run-many experiment engine: a
+//!   [`engine::Suite`]/[`engine::RunPlan`] API that compiles each workload
+//!   exactly once, shares the compilation across Baseline/DMP/DX100, and
+//!   executes the run matrix on `DX100_THREADS` worker threads with
+//!   deterministic results; plus the shared bench harness
+//!   ([`engine::harness`]) with `BENCH_*.json` emission.
 //! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled JAX/Pallas
 //!   tile kernels (`artifacts/*.hlo.txt`) for functionally-executed tiles;
 //!   Python never runs at simulation time.
@@ -56,6 +63,7 @@ pub mod config;
 pub mod coordinator;
 pub mod core;
 pub mod dx100;
+pub mod engine;
 pub mod mem;
 pub mod metrics;
 pub mod prefetch;

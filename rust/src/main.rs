@@ -13,11 +13,18 @@
 //! ```
 //!
 //! Config overrides: `--set key=value` (see `SystemConfig::with_overrides`).
+//!
+//! Environment knobs (the experiment engine reads these):
+//!
+//! * `DX100_SCALE` — dataset scale for suite/bench runs (default 2).
+//! * `DX100_THREADS` — worker threads for the run matrix (default: all
+//!   available cores). Results are deterministic regardless of the count.
+//! * `DX100_BENCH_DIR` — where bench binaries write `BENCH_*.json`.
 
 use dx100::config::SystemConfig;
-use dx100::coordinator::{Experiment, SystemKind};
 use dx100::dx100::area::AreaReport;
-use dx100::metrics::Comparison;
+use dx100::engine;
+use dx100::metrics::compare_one;
 use dx100::report;
 use dx100::workloads::{self, micro, Scale};
 use std::collections::BTreeMap;
@@ -72,18 +79,6 @@ fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
         })
 }
 
-fn compare(w: &workloads::WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comparison {
-    let baseline = Experiment::new(SystemKind::Baseline, cfg.clone()).run(w);
-    let dmp = with_dmp.then(|| Experiment::new(SystemKind::Dmp, cfg.clone()).run(w));
-    let dx100 = Experiment::new(SystemKind::Dx100, cfg.clone()).run(w);
-    Comparison {
-        workload: w.program.name,
-        baseline,
-        dmp,
-        dx100,
-    }
-}
-
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, kv) = parse_flags(&args);
@@ -103,18 +98,18 @@ fn main() {
                     eprintln!("unknown workload {name}; options: {:?}", workloads::names());
                     std::process::exit(2);
                 });
-            let c = compare(&w, &cfg, true);
+            let c = compare_one(&w, &cfg, true);
             println!("{}", report::speedup_table(std::slice::from_ref(&c)));
             println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
             println!("{}", report::instr_mpki_table(std::slice::from_ref(&c)));
         }
         "suite" => {
             let scale = scale_of(&kv);
-            let mut comps = Vec::new();
-            for w in workloads::all(scale) {
-                eprintln!("running {} ...", w.program.name);
-                comps.push(compare(&w, &cfg, true));
-            }
+            eprintln!(
+                "running 12 workloads x 3 systems on {} threads (compile-once) ...",
+                engine::threads_from_env()
+            );
+            let comps = dx100::metrics::run_suite(&cfg, scale, true);
             println!("== Figure 9: speedup ==\n{}", report::speedup_table(&comps));
             println!(
                 "== Figure 10: bandwidth / RBH / occupancy ==\n{}",
@@ -141,7 +136,7 @@ fn main() {
             ];
             println!("== Figure 8a: All-Hits microbenchmarks ==");
             for w in &pats {
-                let c = compare(w, &cfg, false);
+                let c = compare_one(w, &cfg, false);
                 println!(
                     "{:<12} base={:>9}cyc dx={:>9}cyc speedup={:.2}x instr_red={:.1}x",
                     c.workload,
@@ -164,7 +159,7 @@ fn main() {
             for (rbh, chi, bgi) in orders {
                 let w =
                     micro::gather_allmiss(&cfg.dram, 16, micro::AllMissOrder { rbh, chi, bgi });
-                let c = compare(&w, &cfg, false);
+                let c = compare_one(&w, &cfg, false);
                 println!(
                     "rbh={rbh:.1} chi={chi} bgi={bgi}: speedup={:.2}x baseBW={:.0}% dxBW={:.0}%",
                     c.speedup(),
@@ -179,11 +174,8 @@ fn main() {
             for tile in [1024usize, 4096, 16384, 32768] {
                 let mut c2 = cfg.clone();
                 c2.dx100.tile_elems = tile;
-                let mut speedups = Vec::new();
-                for w in workloads::all(scale) {
-                    let c = compare(&w, &c2, false);
-                    speedups.push(c.speedup());
-                }
+                let comps = dx100::metrics::run_suite(&c2, scale, false);
+                let speedups: Vec<f64> = comps.iter().map(|c| c.speedup()).collect();
                 println!(
                     "tile={:>6}: geomean speedup {:.2}x",
                     tile,
@@ -201,11 +193,8 @@ fn main() {
             ];
             for (name, mut c2, inst) in configs {
                 c2.dx100.instances = inst;
-                let mut speedups = Vec::new();
-                for w in workloads::all(scale) {
-                    let c = compare(&w, &c2, false);
-                    speedups.push(c.speedup());
-                }
+                let comps = dx100::metrics::run_suite(&c2, scale, false);
+                let speedups: Vec<f64> = comps.iter().map(|c| c.speedup()).collect();
                 println!(
                     "{name}: geomean speedup {:.2}x",
                     dx100::util::geomean(&speedups)
@@ -250,7 +239,7 @@ fn main() {
         }
         "runtime" => match dx100::runtime::TileRuntime::load_default() {
             Ok(rt) => {
-                println!("PJRT platform: {}", rt.platform());
+                println!("platform: {}", rt.platform());
                 println!("artifacts: {:?}", rt.names());
                 let data: Vec<f32> = (0..rt.shapes.data_n).map(|i| i as f32).collect();
                 let idx: Vec<i32> = (0..rt.shapes.tile as i32).rev().collect();
@@ -268,6 +257,13 @@ fn main() {
                 "usage: dx100 <run|suite|micro|allmiss|tilesweep|scaling|area|isa|runtime> \
                  [--workload NAME] [--scale N] [--set key=value]"
             );
+            println!("env:");
+            println!("  DX100_SCALE=N       dataset scale for suite/bench runs (default 2)");
+            println!(
+                "  DX100_THREADS=N     worker threads for the run matrix \
+                 (default: all cores; results are identical at any N)"
+            );
+            println!("  DX100_BENCH_DIR=D   where bench binaries write BENCH_*.json (default .)");
         }
     }
 }

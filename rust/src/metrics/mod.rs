@@ -1,10 +1,13 @@
 //! Derived metrics over [`crate::coordinator::RunStats`]: speedups,
-//! geometric means, and paper-style comparison rows.
+//! geometric means, and paper-style comparison rows. The run helpers
+//! ([`compare_one`], [`run_suite`]) are thin wrappers over
+//! [`crate::engine`]'s compile-once, threaded executor.
 
 use crate::config::SystemConfig;
-use crate::coordinator::{Experiment, RunStats, SystemKind};
+use crate::coordinator::{RunStats, SystemKind};
+use crate::engine::{self, RunPlan, Suite, SuiteResult, WorkloadResult};
 use crate::util::geomean;
-use crate::workloads::{self, Scale, WorkloadSpec};
+use crate::workloads::{Scale, WorkloadSpec};
 
 /// One workload's baseline/DMP/DX100 comparison.
 #[derive(Clone, Debug)]
@@ -59,35 +62,58 @@ pub fn geomean_of(comps: &[Comparison], f: impl Fn(&Comparison) -> f64) -> f64 {
     geomean(&comps.iter().map(f).collect::<Vec<_>>())
 }
 
-/// Run baseline (+DMP) + DX100 for one workload.
-pub fn compare_one(w: &WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comparison {
-    let baseline = Experiment::new(SystemKind::Baseline, cfg.clone()).run(w);
-    let dmp = with_dmp.then(|| Experiment::new(SystemKind::Dmp, cfg.clone()).run(w));
-    let dx100 = Experiment::new(SystemKind::Dx100, cfg.clone()).run(w);
+/// Regroup one workload's engine runs into a paper-style comparison.
+///
+/// Panics unless the runs include both Baseline and Dx100 — a comparison
+/// is *defined* against those two endpoints. Plans built by this module
+/// always satisfy that; hand-built `Suite::systems(..)` lists must too.
+fn comparison_of(wr: WorkloadResult) -> Comparison {
+    let (mut baseline, mut dmp, mut dx100) = (None, None, None);
+    for r in wr.runs {
+        match r.kind {
+            SystemKind::Baseline => baseline = Some(r),
+            SystemKind::Dmp => dmp = Some(r),
+            SystemKind::Dx100 => dx100 = Some(r),
+        }
+    }
     Comparison {
-        workload: w.program.name,
-        baseline,
+        workload: wr.workload,
+        baseline: baseline.expect("plan must include Baseline"),
         dmp,
-        dx100,
+        dx100: dx100.expect("plan must include Dx100"),
     }
 }
 
-/// Run the full 12-workload suite (Figures 9-12).
+/// Convert an engine [`SuiteResult`] into paper-style comparisons. The
+/// plan must have included the Baseline and Dx100 systems.
+pub fn comparisons(result: SuiteResult) -> Vec<Comparison> {
+    result.workloads.into_iter().map(comparison_of).collect()
+}
+
+/// Run baseline (+DMP) + DX100 for one workload.
+///
+/// Thin wrapper over [`crate::engine`]: the workload is compiled once and
+/// shared across all systems, and the 2-3 runs execute on the engine's
+/// worker threads (`DX100_THREADS`).
+pub fn compare_one(w: &WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comparison {
+    let systems: &[SystemKind] = if with_dmp {
+        &engine::ALL_SYSTEMS
+    } else {
+        &engine::BASE_AND_DX
+    };
+    let plan = RunPlan::new(cfg, std::slice::from_ref(w), systems);
+    let mut result = engine::execute(&plan);
+    comparison_of(result.workloads.remove(0))
+}
+
+/// Run the full 12-workload suite (Figures 9-12): compile-once, threaded.
 pub fn run_suite(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> Vec<Comparison> {
-    workloads::all(scale)
-        .iter()
-        .map(|w| compare_one(w, cfg, with_dmp))
-        .collect()
+    comparisons(Suite::paper(cfg.clone(), scale, with_dmp).execute())
 }
 
 /// Bench scale from `DX100_SCALE` (default 2 — a few seconds per figure).
 pub fn bench_scale() -> Scale {
-    Scale(
-        std::env::var("DX100_SCALE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(2),
-    )
+    engine::scale_from_env()
 }
 
 #[cfg(test)]

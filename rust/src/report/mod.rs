@@ -1,5 +1,7 @@
-//! Paper-style text rendering of experiment results (the benches print
-//! these tables; see EXPERIMENTS.md for the recorded outputs).
+//! Paper-style text rendering of experiment results. The bench binaries
+//! print these tables through [`crate::engine::harness`], which also
+//! emits the machine-readable `BENCH_*.json` twin; `rust/EXPERIMENTS.md`
+//! records the table and JSON formats and how to reproduce a suite run.
 
 use crate::metrics::Comparison;
 use crate::util::geomean;

@@ -1,18 +1,26 @@
-//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas tile kernels from
-//! `artifacts/*.hlo.txt` and executes them on the CPU PJRT client.
+//! Tile-kernel runtime: loads the AOT-compiled JAX/Pallas artifacts from
+//! `artifacts/*.hlo.txt` and executes them for functionally-executed tiles.
 //!
 //! This is the only place the three layers meet at run time: Python lowered
 //! the Layer-2 model (which calls the Layer-1 Pallas kernels) to HLO
-//! **text** once (`make artifacts`), and this module compiles + executes
-//! those artifacts from Rust. Python never runs on the simulation path.
+//! **text** once (`make artifacts`), and this module executes those
+//! artifacts from Rust. Python never runs on the simulation path.
 //!
-//! HLO text is the interchange format: jax ≥ 0.5 serializes protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
-
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+//! Two interchangeable backends:
+//!
+//! * **`pjrt` feature** — compiles the HLO text with the XLA CPU PJRT
+//!   client (the original paper-artifact path). Requires the external
+//!   `xla` and `anyhow` crates; offline builds have no registry access,
+//!   so the feature is declared dependency-free in `Cargo.toml` and the
+//!   crates must be vendored before enabling it. HLO text is the
+//!   interchange format: jax >= 0.5 serializes protos with 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids.
+//! * **default (native)** — a std-only executor with the same kernel
+//!   semantics as the Pallas reference oracles
+//!   (`python/compile/kernels/ref.py`). It reads the same
+//!   `artifacts/manifest.txt` for shapes and artifact names, so the CLI
+//!   smoke test (`dx100 runtime`) and callers behave identically.
 
 /// Default artifact directory relative to the repo root.
 pub const ARTIFACT_DIR: &str = "artifacts";
@@ -25,181 +33,418 @@ pub struct TileShapes {
     pub range_cap: usize,
 }
 
-/// Runtime holding compiled executables for every artifact.
-pub struct TileRuntime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub shapes: TileShapes,
+/// Parse the manifest header (`tile=4096 data_n=262144 range_cap=16384`).
+/// Unknown keys are ignored; a malformed value for a known key is a hard
+/// error (a silently-defaulted shape would surface later as a confusing
+/// shape-mismatch at execution time).
+fn parse_shapes(header: &str) -> Result<TileShapes, String> {
+    let mut shapes = TileShapes {
+        tile: 4096,
+        data_n: 1 << 18,
+        range_cap: 4 * 4096,
+    };
+    for kv in header.split_whitespace() {
+        let mut it = kv.split('=');
+        let (key, value) = (it.next(), it.next());
+        let slot = match key {
+            Some("tile") => &mut shapes.tile,
+            Some("data_n") => &mut shapes.data_n,
+            Some("range_cap") => &mut shapes.range_cap,
+            _ => continue,
+        };
+        *slot = value
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format!("manifest header: bad value in `{kv}`"))?;
+    }
+    Ok(shapes)
 }
 
-impl TileRuntime {
-    /// Load every artifact in `dir` (compiling each HLO once).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("missing manifest in {dir:?}; run `make artifacts`"))?;
-        let header = manifest.lines().next().unwrap_or_default();
-        let mut tile = 4096;
-        let mut data_n = 1 << 18;
-        let mut range_cap = 4 * 4096;
-        for kv in header.split_whitespace() {
-            let mut it = kv.split('=');
-            match (it.next(), it.next()) {
-                (Some("tile"), Some(v)) => tile = v.parse()?,
-                (Some("data_n"), Some(v)) => data_n = v.parse()?,
-                (Some("range_cap"), Some(v)) => range_cap = v.parse()?,
-                _ => {}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{parse_shapes, TileShapes, ARTIFACT_DIR};
+    use std::fmt;
+    use std::path::{Path, PathBuf};
+
+    /// Error from the native tile runtime.
+    #[derive(Debug)]
+    pub struct RuntimeError(pub String);
+
+    impl fmt::Display for RuntimeError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for RuntimeError {}
+
+    pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+    fn err<T>(msg: impl Into<String>) -> Result<T> {
+        Err(RuntimeError(msg.into()))
+    }
+
+    /// Native tile executor: same manifest, same shapes, reference kernel
+    /// semantics in pure Rust.
+    pub struct TileRuntime {
+        names: Vec<String>,
+        pub shapes: TileShapes,
+    }
+
+    impl TileRuntime {
+        /// Load the manifest in `dir` (shape header + artifact names).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+                RuntimeError(format!(
+                    "missing manifest in {dir:?}; run `make artifacts`: {e}"
+                ))
+            })?;
+            let shapes =
+                parse_shapes(manifest.lines().next().unwrap_or_default()).map_err(RuntimeError)?;
+            let mut names: Vec<String> = manifest
+                .lines()
+                .skip(1)
+                .filter_map(|l| l.split_whitespace().next())
+                .map(str::to_string)
+                .collect();
+            names.sort();
+            Ok(TileRuntime { names, shapes })
+        }
+
+        /// Load from the conventional `artifacts/` directory next to the
+        /// current working directory (or its parents).
+        pub fn load_default() -> Result<Self> {
+            Self::load(&find_artifacts()?)
+        }
+
+        pub fn platform(&self) -> String {
+            "native (enable the `pjrt` feature for XLA execution)".to_string()
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.names.iter().any(|n| n == name)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            self.names.iter().map(String::as_str).collect()
+        }
+
+        /// `out[i] = data[idx[i]]`.
+        pub fn gather_f32(&self, data: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            idx.iter()
+                .map(|&i| match data.get(i as usize) {
+                    Some(&v) => Ok(v),
+                    None => err(format!("gather index {i} out of bounds")),
+                })
+                .collect()
+        }
+
+        /// `data[idx[i]] += vals[i]` (duplicates accumulate).
+        pub fn scatter_add_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            let mut out = data.to_vec();
+            for (&i, &v) in idx.iter().zip(vals) {
+                match out.get_mut(i as usize) {
+                    Some(slot) => *slot += v,
+                    None => return err(format!("scatter index {i} out of bounds")),
+                }
+            }
+            Ok(out)
+        }
+
+        /// `data[idx[i]] = vals[i]` (last write wins).
+        pub fn scatter_set_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            let mut out = data.to_vec();
+            for (&i, &v) in idx.iter().zip(vals) {
+                match out.get_mut(i as usize) {
+                    Some(slot) => *slot = v,
+                    None => return err(format!("scatter index {i} out of bounds")),
+                }
+            }
+            Ok(out)
+        }
+
+        /// One SpMV tile: `y[row[k]] += vals[k] * x[col[k]]`.
+        pub fn spmv_tile_f32(
+            &self,
+            vals: &[f32],
+            col: &[i32],
+            row: &[i32],
+            x: &[f32],
+            y: &[f32],
+        ) -> Result<Vec<f32>> {
+            let mut out = y.to_vec();
+            for k in 0..vals.len() {
+                let (Some(&c), Some(&r)) = (col.get(k), row.get(k)) else {
+                    return err("spmv col/row shorter than vals");
+                };
+                let Some(&xv) = x.get(c as usize) else {
+                    return err(format!("spmv col index {c} out of bounds"));
+                };
+                let Some(slot) = out.get_mut(r as usize) else {
+                    return err(format!("spmv row index {r} out of bounds"));
+                };
+                *slot += vals[k] * xv;
+            }
+            Ok(out)
+        }
+
+        fn check_shapes(&self, data: usize, idx: usize) -> Result<()> {
+            if data != self.shapes.data_n || idx != self.shapes.tile {
+                err(format!(
+                    "shape mismatch: data {data} (want {}), idx {idx} (want {})",
+                    self.shapes.data_n, self.shapes.tile
+                ))
+            } else {
+                Ok(())
             }
         }
-        let mut exes = HashMap::new();
-        for line in manifest.lines().skip(1) {
-            let Some(name) = line.split_whitespace().next() else {
-                continue;
-            };
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            exes.insert(name.to_string(), exe);
+    }
+
+    /// Walk up from the current directory to find `artifacts/manifest.txt`.
+    pub fn find_artifacts() -> Result<PathBuf> {
+        let mut dir = std::env::current_dir()
+            .map_err(|e| RuntimeError(format!("current dir: {e}")))?;
+        loop {
+            let cand = dir.join(ARTIFACT_DIR);
+            if cand.join("manifest.txt").exists() {
+                return Ok(cand);
+            }
+            if !dir.pop() {
+                return err("artifacts/manifest.txt not found; run `make artifacts` first");
+            }
         }
-        Ok(TileRuntime {
-            client,
-            exes,
-            shapes: TileShapes {
-                tile,
-                data_n,
-                range_cap,
-            },
-        })
     }
 
-    /// Load from the conventional `artifacts/` directory next to the
-    /// current working directory (or its parents).
-    pub fn load_default() -> Result<Self> {
-        Self::load(&find_artifacts()?)
-    }
+    #[cfg(test)]
+    mod tests {
+        use super::*;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        fn rt(tile: usize, data_n: usize) -> TileRuntime {
+            TileRuntime {
+                names: vec!["gather_f32".to_string()],
+                shapes: TileShapes {
+                    tile,
+                    data_n,
+                    range_cap: 4 * tile,
+                },
+            }
+        }
 
-    pub fn has(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
-    }
+        #[test]
+        fn native_gather_matches_reference() {
+            let r = rt(4, 8);
+            let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+            let out = r.gather_f32(&data, &[3, 0, 7, 7]).unwrap();
+            assert_eq!(out, vec![3.0, 0.0, 7.0, 7.0]);
+            assert!(r.gather_f32(&data, &[8, 0, 0, 0]).is_err());
+            assert!(r.gather_f32(&data[..4], &[0, 1, 2, 3]).is_err());
+        }
 
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
-    }
+        #[test]
+        fn native_scatter_semantics() {
+            let r = rt(3, 4);
+            let data = vec![0.0f32; 4];
+            let add = r.scatter_add_f32(&data, &[1, 1, 3], &[2.0, 3.0, 4.0]).unwrap();
+            assert_eq!(add, vec![0.0, 5.0, 0.0, 4.0]);
+            let set = r.scatter_set_f32(&data, &[1, 1, 3], &[2.0, 3.0, 4.0]).unwrap();
+            assert_eq!(set, vec![0.0, 3.0, 0.0, 4.0]);
+        }
 
-    /// Execute artifact `name` with the given literals; returns the tuple
-    /// elements of the result.
-    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let out = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        let tuple = lit.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
-        Ok(tuple)
-    }
+        #[test]
+        fn native_spmv_tile() {
+            let r = rt(2, 4);
+            // y[row[k]] += vals[k] * x[col[k]]
+            let out = r
+                .spmv_tile_f32(&[2.0, 3.0], &[0, 1], &[1, 1], &[10.0, 20.0], &[0.0, 1.0])
+                .unwrap();
+            assert_eq!(out, vec![0.0, 1.0 + 2.0 * 10.0 + 3.0 * 20.0]);
+        }
 
-    /// `out[i] = data[idx[i]]` via the Pallas gather artifact.
-    pub fn gather_f32(&self, data: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
-        self.check_shapes(data.len(), idx.len())?;
-        let out = self.execute(
-            "gather_f32",
-            &[xla::Literal::vec1(data), xla::Literal::vec1(idx)],
-        )?;
-        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-    }
-
-    /// `data[idx[i]] += vals[i]` (duplicates accumulate).
-    pub fn scatter_add_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
-        self.check_shapes(data.len(), idx.len())?;
-        let out = self.execute(
-            "scatter_add_f32",
-            &[
-                xla::Literal::vec1(data),
-                xla::Literal::vec1(idx),
-                xla::Literal::vec1(vals),
-            ],
-        )?;
-        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-    }
-
-    /// `data[idx[i]] = vals[i]` (last write wins).
-    pub fn scatter_set_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
-        self.check_shapes(data.len(), idx.len())?;
-        let out = self.execute(
-            "scatter_set_f32",
-            &[
-                xla::Literal::vec1(data),
-                xla::Literal::vec1(idx),
-                xla::Literal::vec1(vals),
-            ],
-        )?;
-        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-    }
-
-    /// One SpMV tile: `y[row[k]] += vals[k] * x[col[k]]`.
-    pub fn spmv_tile_f32(
-        &self,
-        vals: &[f32],
-        col: &[i32],
-        row: &[i32],
-        x: &[f32],
-        y: &[f32],
-    ) -> Result<Vec<f32>> {
-        let out = self.execute(
-            "spmv_tile_f32",
-            &[
-                xla::Literal::vec1(vals),
-                xla::Literal::vec1(col),
-                xla::Literal::vec1(row),
-                xla::Literal::vec1(x),
-                xla::Literal::vec1(y),
-            ],
-        )?;
-        Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-    }
-
-    fn check_shapes(&self, data: usize, idx: usize) -> Result<()> {
-        if data != self.shapes.data_n || idx != self.shapes.tile {
-            Err(anyhow!(
-                "shape mismatch: data {data} (want {}), idx {idx} (want {})",
-                self.shapes.data_n,
-                self.shapes.tile
-            ))
-        } else {
-            Ok(())
+        #[test]
+        fn manifest_header_parses() {
+            let s = parse_shapes("tile=128 data_n=1024 range_cap=512 junk x=y").unwrap();
+            assert_eq!((s.tile, s.data_n, s.range_cap), (128, 1024, 512));
+            let d = parse_shapes("").unwrap();
+            assert_eq!(d.tile, 4096);
+            assert!(parse_shapes("tile=8k").is_err());
         }
     }
 }
 
-/// Walk up from the current directory to find `artifacts/manifest.txt`.
-pub fn find_artifacts() -> Result<PathBuf> {
-    let mut dir = std::env::current_dir()?;
-    loop {
-        let cand = dir.join(ARTIFACT_DIR);
-        if cand.join("manifest.txt").exists() {
-            return Ok(cand);
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{parse_shapes, TileShapes, ARTIFACT_DIR};
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// Runtime holding compiled executables for every artifact.
+    pub struct TileRuntime {
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub shapes: TileShapes,
+    }
+
+    impl TileRuntime {
+        /// Load every artifact in `dir` (compiling each HLO once).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
+            let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+                .with_context(|| format!("missing manifest in {dir:?}; run `make artifacts`"))?;
+            let shapes = parse_shapes(manifest.lines().next().unwrap_or_default())
+                .map_err(|e| anyhow!("{e}"))?;
+            let mut exes = HashMap::new();
+            for line in manifest.lines().skip(1) {
+                let Some(name) = line.split_whitespace().next() else {
+                    continue;
+                };
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                exes.insert(name.to_string(), exe);
+            }
+            Ok(TileRuntime {
+                client,
+                exes,
+                shapes,
+            })
         }
-        if !dir.pop() {
-            return Err(anyhow!(
-                "artifacts/manifest.txt not found; run `make artifacts` first"
-            ));
+
+        /// Load from the conventional `artifacts/` directory next to the
+        /// current working directory (or its parents).
+        pub fn load_default() -> Result<Self> {
+            Self::load(&find_artifacts()?)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.exes.contains_key(name)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+            v.sort();
+            v
+        }
+
+        /// Execute artifact `name` with the given literals; returns the tuple
+        /// elements of the result.
+        pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = self
+                .exes
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let out = exe
+                .execute::<xla::Literal>(args)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+            let tuple = lit.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+            Ok(tuple)
+        }
+
+        /// `out[i] = data[idx[i]]` via the Pallas gather artifact.
+        pub fn gather_f32(&self, data: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            let out = self.execute(
+                "gather_f32",
+                &[xla::Literal::vec1(data), xla::Literal::vec1(idx)],
+            )?;
+            Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+
+        /// `data[idx[i]] += vals[i]` (duplicates accumulate).
+        pub fn scatter_add_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            let out = self.execute(
+                "scatter_add_f32",
+                &[
+                    xla::Literal::vec1(data),
+                    xla::Literal::vec1(idx),
+                    xla::Literal::vec1(vals),
+                ],
+            )?;
+            Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+
+        /// `data[idx[i]] = vals[i]` (last write wins).
+        pub fn scatter_set_f32(&self, data: &[f32], idx: &[i32], vals: &[f32]) -> Result<Vec<f32>> {
+            self.check_shapes(data.len(), idx.len())?;
+            let out = self.execute(
+                "scatter_set_f32",
+                &[
+                    xla::Literal::vec1(data),
+                    xla::Literal::vec1(idx),
+                    xla::Literal::vec1(vals),
+                ],
+            )?;
+            Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+
+        /// One SpMV tile: `y[row[k]] += vals[k] * x[col[k]]`.
+        pub fn spmv_tile_f32(
+            &self,
+            vals: &[f32],
+            col: &[i32],
+            row: &[i32],
+            x: &[f32],
+            y: &[f32],
+        ) -> Result<Vec<f32>> {
+            let out = self.execute(
+                "spmv_tile_f32",
+                &[
+                    xla::Literal::vec1(vals),
+                    xla::Literal::vec1(col),
+                    xla::Literal::vec1(row),
+                    xla::Literal::vec1(x),
+                    xla::Literal::vec1(y),
+                ],
+            )?;
+            Ok(out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+
+        fn check_shapes(&self, data: usize, idx: usize) -> Result<()> {
+            if data != self.shapes.data_n || idx != self.shapes.tile {
+                Err(anyhow!(
+                    "shape mismatch: data {data} (want {}), idx {idx} (want {})",
+                    self.shapes.data_n,
+                    self.shapes.tile
+                ))
+            } else {
+                Ok(())
+            }
+        }
+    }
+
+    /// Walk up from the current directory to find `artifacts/manifest.txt`.
+    pub fn find_artifacts() -> Result<PathBuf> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join(ARTIFACT_DIR);
+            if cand.join("manifest.txt").exists() {
+                return Ok(cand);
+            }
+            if !dir.pop() {
+                return Err(anyhow!(
+                    "artifacts/manifest.txt not found; run `make artifacts` first"
+                ));
+            }
         }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use backend::RuntimeError;
+pub use backend::{find_artifacts, TileRuntime};

@@ -1,0 +1,39 @@
+//! Compile-count hook: the engine must compile each workload exactly once
+//! per suite invocation, no matter how many systems run it.
+//!
+//! This lives in its own test binary on purpose: the hook is a
+//! process-wide counter, and any concurrently-running test that compiles a
+//! workload would make exact assertions flaky.
+
+use dx100::compiler::compile_invocations;
+use dx100::config::SystemConfig;
+use dx100::engine::Suite;
+use dx100::workloads::micro;
+
+#[test]
+fn suite_compiles_each_workload_exactly_once() {
+    let suite = Suite::new(SystemConfig::table3())
+        .with_dmp()
+        .workload(micro::gather_full(
+            4096,
+            micro::IndexPattern::UniformRandom,
+            21,
+        ))
+        .workload(micro::scatter(2048, micro::IndexPattern::Streaming, 22));
+
+    let before = compile_invocations();
+    let result = suite.execute_with(3);
+    let after = compile_invocations();
+
+    // 2 workloads x 3 systems = 6 runs, but only 2 compilations.
+    assert_eq!(result.compiles, 2);
+    assert_eq!(after - before, 2, "expected one compile per workload");
+    assert_eq!(result.workloads.len(), 2);
+    assert!(result.workloads.iter().all(|w| w.runs.len() == 3));
+
+    // A second invocation compiles again: dedup is per suite execution,
+    // not a process-global cache.
+    let again = suite.execute_with(1);
+    assert_eq!(again.compiles, 2);
+    assert_eq!(compile_invocations() - after, 2);
+}

@@ -1,0 +1,95 @@
+//! Engine integration: the threaded run matrix must be bit-identical to a
+//! serial run of the same plan, and compile-once sharing must match the
+//! legacy per-system compilation path.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, RunStats, SystemKind};
+use dx100::engine::{execute_with, RunPlan, ALL_SYSTEMS};
+use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
+
+fn small_workloads() -> Vec<WorkloadSpec> {
+    vec![
+        micro::gather_full(4096, micro::IndexPattern::UniformRandom, 11),
+        micro::rmw(2048, true, micro::IndexPattern::UniformRandom, 12),
+        nas::cg(Scale::test()),
+    ]
+}
+
+fn assert_identical(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.workload, b.workload);
+    let ctx = format!("{} on {:?}", a.workload, a.kind);
+    assert_eq!(a.cycles, b.cycles, "cycles differ for {ctx}");
+    assert_eq!(a.instrs, b.instrs, "instrs differ for {ctx}");
+    assert_eq!(a.spin_instrs, b.spin_instrs, "spin differs for {ctx}");
+    assert_eq!(a.dram_reads, b.dram_reads, "dram reads differ for {ctx}");
+    assert_eq!(a.dram_writes, b.dram_writes, "dram writes differ for {ctx}");
+    assert_eq!(a.dram_bytes, b.dram_bytes, "dram bytes differ for {ctx}");
+    assert_eq!(a.events, b.events, "event counts differ for {ctx}");
+    // Derived floats must match to the bit: same inputs, same math.
+    assert_eq!(a.bw_util.to_bits(), b.bw_util.to_bits(), "bw {ctx}");
+    assert_eq!(
+        a.row_hit_rate.to_bits(),
+        b.row_hit_rate.to_bits(),
+        "rbh {ctx}"
+    );
+    assert_eq!(a.occupancy.to_bits(), b.occupancy.to_bits(), "occ {ctx}");
+    assert_eq!(a.mpki.to_bits(), b.mpki.to_bits(), "mpki {ctx}");
+}
+
+#[test]
+fn threaded_engine_is_deterministic() {
+    let cfg = SystemConfig::table3();
+    let ws = small_workloads();
+    let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
+    let serial = execute_with(&plan, 1);
+    assert_eq!(serial.threads, 1);
+    for threads in [2, 4] {
+        let parallel = execute_with(&plan, threads);
+        assert!(parallel.threads >= 2, "expected a threaded run");
+        assert_eq!(serial.workloads.len(), parallel.workloads.len());
+        for (s, p) in serial.workloads.iter().zip(&parallel.workloads) {
+            assert_eq!(s.workload, p.workload);
+            assert_eq!(s.runs.len(), p.runs.len());
+            for (a, b) in s.runs.iter().zip(&p.runs) {
+                assert_identical(a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn compile_once_matches_per_system_compilation() {
+    let cfg = SystemConfig::table3();
+    let ws = vec![micro::gather_full(
+        8192,
+        micro::IndexPattern::UniformRandom,
+        3,
+    )];
+    let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
+    let shared = execute_with(&plan, 1);
+    for kind in ALL_SYSTEMS {
+        // The legacy path recompiles per system; stats must be identical.
+        let direct = Experiment::new(kind, cfg.clone()).run(&ws[0]);
+        let via_engine = shared.workloads[0]
+            .for_system(kind)
+            .unwrap_or_else(|| panic!("missing {kind:?} run"));
+        assert_identical(via_engine, &direct);
+    }
+}
+
+#[test]
+fn engine_results_are_plan_ordered() {
+    let cfg = SystemConfig::table3();
+    let ws = small_workloads();
+    let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
+    let r = execute_with(&plan, 4);
+    assert_eq!(r.compiles, ws.len());
+    let names: Vec<&str> = r.workloads.iter().map(|w| w.workload).collect();
+    let expect: Vec<&str> = ws.iter().map(|w| w.program.name).collect();
+    assert_eq!(names, expect);
+    for wr in &r.workloads {
+        let kinds: Vec<SystemKind> = wr.runs.iter().map(|r| r.kind).collect();
+        assert_eq!(kinds, ALL_SYSTEMS.to_vec());
+    }
+}
