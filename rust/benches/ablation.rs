@@ -3,10 +3,30 @@
 //! *coalescing* capacity (SRAM columns per row), the *fill rate* (address
 //! translation/insert throughput), and the controller's FR-FCFS visibility
 //! (request-buffer depth) for the baseline.
+//!
+//! Runs as one 15-point SweepPlan over a single workload: the front end
+//! compiles once for the whole study, config points that agree on the
+//! compiler-relevant knobs share one DX100 specialization, points whose
+//! *full* config matches the Table-3 default (rows=64, cols=8, fill=4,
+//! buf=32 are all the same machine) share one simulation, and unchanged
+//! cells replay from the persisted result cache.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::metrics::compare_one;
+use dx100::engine::{PointResult, Sweep};
+use dx100::metrics::{comparisons_at, Comparison};
 use dx100::workloads::micro::{self, AllMissOrder};
+
+const ROWS: [usize; 4] = [4, 16, 64, 256];
+const COLS: [usize; 4] = [1, 2, 8, 16];
+const FILLS: [usize; 4] = [1, 2, 4, 16];
+const BUFS: [usize; 3] = [8, 32, 128];
+
+fn one(point: PointResult) -> Comparison {
+    comparisons_at(point)
+        .into_iter()
+        .next()
+        .expect("one workload per point")
+}
 
 fn main() {
     let mut h = Harness::new(
@@ -27,11 +47,34 @@ fn main() {
         },
     );
 
-    h.line("\nRow-Table rows per slice (reordering window):");
-    for rows in [4usize, 16, 64, 256] {
+    let mut sweep = Sweep::new().workload(w);
+    for rows in ROWS {
         let mut cfg = SystemConfig::table3();
         cfg.dx100.rowtab_rows = rows;
-        let c = compare_one(&w, &cfg, false);
+        sweep = sweep.point(format!("rows{rows}"), cfg);
+    }
+    for cols in COLS {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.rowtab_cols = cols;
+        sweep = sweep.point(format!("cols{cols}"), cfg);
+    }
+    for rate in FILLS {
+        let mut cfg = SystemConfig::table3();
+        cfg.dx100.fill_rate = rate;
+        sweep = sweep.point(format!("fill{rate}"), cfg);
+    }
+    for buf in BUFS {
+        let mut cfg = SystemConfig::table3();
+        cfg.dram.request_buffer = buf;
+        sweep = sweep.point(format!("buf{buf}"), cfg);
+    }
+    let r = sweep.execute();
+    h.sweep(&r);
+    let mut points = r.points.into_iter();
+
+    h.line("\nRow-Table rows per slice (reordering window):");
+    for rows in ROWS {
+        let c = one(points.next().expect("rows point"));
         h.line(&format!(
             "  rows={rows:>4}: speedup {:.2}x, dx RBH {:.1}%, dx BW {:.1}%",
             c.speedup(),
@@ -43,10 +86,8 @@ fn main() {
     }
 
     h.line("\nRow-Table columns per row (coalescing capacity):");
-    for cols in [1usize, 2, 8, 16] {
-        let mut cfg = SystemConfig::table3();
-        cfg.dx100.rowtab_cols = cols;
-        let c = compare_one(&w, &cfg, false);
+    for cols in COLS {
+        let c = one(points.next().expect("cols point"));
         let coalesce = c
             .dx100
             .dx
@@ -63,20 +104,16 @@ fn main() {
     }
 
     h.line("\nIndirect-unit fill rate (indices/cycle):");
-    for rate in [1usize, 2, 4, 16] {
-        let mut cfg = SystemConfig::table3();
-        cfg.dx100.fill_rate = rate;
-        let c = compare_one(&w, &cfg, false);
+    for rate in FILLS {
+        let c = one(points.next().expect("fill point"));
         h.line(&format!("  fill={rate:>3}: speedup {:.2}x", c.speedup()));
         h.comparisons_tagged(std::slice::from_ref(&c), &format!("@fill{rate}"));
         h.metric(&format!("fill{rate}_speedup"), c.speedup());
     }
 
     h.line("\nBaseline FR-FCFS request buffer (controller visibility):");
-    for buf in [8usize, 32, 128] {
-        let mut cfg = SystemConfig::table3();
-        cfg.dram.request_buffer = buf;
-        let c = compare_one(&w, &cfg, false);
+    for buf in BUFS {
+        let c = one(points.next().expect("buf point"));
         h.line(&format!(
             "  buffer={buf:>4}: baseline RBH {:.1}%, BW {:.1}% (DX100 speedup {:.2}x)",
             c.baseline.row_hit_rate * 100.0,

@@ -3,12 +3,14 @@
 //! to synchronization spinning.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::metrics::{geomean_of, run_suite};
+use dx100::metrics::{comparisons_at, geomean_of, run_suite_sweep};
 use dx100::report;
 
 fn main() {
     let mut h = Harness::new("fig11", "Figure 11: instruction / MPKI reduction");
-    let comps = run_suite(&SystemConfig::table3(), h.scale(), false);
+    let mut r = run_suite_sweep(&SystemConfig::table3(), h.scale(), false);
+    h.sweep(&r);
+    let comps = comparisons_at(r.points.remove(0));
     h.table(&report::instr_mpki_table(&comps));
     h.comparisons(&comps);
     let instr = geomean_of(&comps, |c| c.instr_reduction());

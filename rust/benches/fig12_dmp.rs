@@ -1,13 +1,24 @@
 //! Figure 12: DX100 vs the DMP indirect prefetcher.
 //! Paper: 2.0x speedup, 3.3x bandwidth utilization over DMP.
+//!
+//! Runs as a single-point SweepPlan over all three systems, so unchanged
+//! reruns replay from the persisted result cache.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::metrics::run_suite;
+use dx100::engine::Sweep;
+use dx100::metrics::comparisons_at;
 use dx100::util::geomean;
+use dx100::workloads;
 
 fn main() {
     let mut h = Harness::new("fig12", "Figure 12: DX100 vs DMP");
-    let comps = run_suite(&SystemConfig::table3(), h.scale(), true);
+    let r = Sweep::new()
+        .with_dmp()
+        .point("", SystemConfig::table3())
+        .workloads(workloads::all(h.scale()))
+        .execute();
+    h.sweep(&r);
+    let comps = comparisons_at(r.points.into_iter().next().expect("one point"));
     h.line(&format!(
         "{:<8} {:>9} {:>9} {:>9} {:>8} | {:>7} {:>7}",
         "workload", "base", "dmp", "dx", "vs dmp", "dmpBW%", "dxBW%"

@@ -1,8 +1,14 @@
 //! Figure 14: scalability — 4 cores/2ch vs 8 cores/4ch with one or two
 //! DX100 instances. Paper: 2.6x (4c), 2.5x (8c, 1x), 2.7x (8c, 2x).
+//!
+//! Runs as one SweepPlan: the three system points share a single worker
+//! pool and one front-end compilation per workload; results replay from
+//! the persisted cache on unchanged reruns.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::metrics::{geomean_of, run_suite};
+use dx100::engine::Sweep;
+use dx100::metrics::{comparisons_at, geomean_of};
+use dx100::workloads;
 
 fn main() {
     let mut h = Harness::new("fig14", "Figure 14: core / DX100-instance scaling");
@@ -11,9 +17,16 @@ fn main() {
         ("8c4ch1x", "8 cores, 4ch, 1x DX100", SystemConfig::table3_8core(), 1, 2.5),
         ("8c4ch2x", "8 cores, 4ch, 2x DX100", SystemConfig::table3_8core(), 2, 2.7),
     ];
-    for (tag, name, mut cfg, instances, paper) in configs {
-        cfg.dx100.instances = instances;
-        let comps = run_suite(&cfg, h.scale(), false);
+    let mut sweep = Sweep::new().workloads(workloads::all(h.scale()));
+    for (tag, _, cfg, instances, _) in &configs {
+        let mut cfg = cfg.clone();
+        cfg.dx100.instances = *instances;
+        sweep = sweep.point(*tag, cfg);
+    }
+    let r = sweep.execute();
+    h.sweep(&r);
+    for (point, (tag, name, _, _, paper)) in r.points.into_iter().zip(configs) {
+        let comps = comparisons_at(point);
         let g = geomean_of(&comps, |c| c.speedup());
         h.line(&format!("{name}: geomean speedup {g:.2}x (paper {paper}x)"));
         h.comparisons_tagged(&comps, &format!("@{tag}"));

@@ -1,0 +1,136 @@
+//! CI gate over `BENCH_*.json` documents.
+//!
+//! ```text
+//! bench_check BENCH_fig09.json BENCH_fig13.json ...
+//! ```
+//!
+//! Exits non-zero (naming the file and field) when any document is
+//! missing, fails to parse, or violates the schema documented in
+//! `rust/EXPERIMENTS.md`: the universal header fields, a non-empty `rows`
+//! array whose entries carry (workload, system, cycles, events), and —
+//! when present — self-consistent `sweep`/`cache` accounting. Std-only,
+//! reusing the harness's JSON parser, so the bench-smoke CI job needs no
+//! extra tooling.
+
+use dx100::engine::harness::Json;
+use std::process::ExitCode;
+
+const SYSTEMS: [&str; 3] = ["baseline", "dmp", "dx100"];
+
+fn check_doc(doc: &Json) -> Result<(usize, usize), String> {
+    for key in ["bench", "title"] {
+        doc.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing or non-string {key:?}"))?;
+    }
+    for key in ["scale", "threads", "events"] {
+        doc.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("missing or non-integer {key:?}"))?;
+    }
+    let wall = doc
+        .get("wall_seconds")
+        .and_then(Json::as_f64)
+        .ok_or("missing or non-numeric \"wall_seconds\"")?;
+    if wall.is_nan() || wall < 0.0 {
+        return Err(format!("negative or NaN wall_seconds: {wall}"));
+    }
+    // events_per_sec is null for row-less table benches, numeric otherwise.
+    let eps = doc.get("events_per_sec").ok_or("missing \"events_per_sec\"")?;
+    if !eps.is_null() && eps.as_f64().is_none() {
+        return Err("non-numeric \"events_per_sec\"".to_string());
+    }
+    doc.get("paper_refs")
+        .and_then(Json::as_array)
+        .ok_or("missing or non-array \"paper_refs\"")?;
+    let metrics = doc.get("metrics").ok_or("missing \"metrics\"")?;
+    let n_metrics = match metrics {
+        Json::Obj(kvs) => kvs.len(),
+        _ => return Err("non-object \"metrics\"".to_string()),
+    };
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_array)
+        .ok_or("missing or non-array \"rows\"")?;
+    if rows.is_empty() {
+        return Err("empty \"rows\" (bench emitted no runs)".to_string());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let workload = row
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("rows[{i}]: missing \"workload\""))?;
+        if workload.is_empty() {
+            return Err(format!("rows[{i}]: empty workload label"));
+        }
+        let system = row
+            .get("system")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("rows[{i}]: missing \"system\""))?;
+        if !SYSTEMS.contains(&system) {
+            return Err(format!("rows[{i}]: unknown system {system:?}"));
+        }
+        let cycles = row
+            .get("cycles")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("rows[{i}]: missing \"cycles\""))?;
+        if cycles == 0 {
+            return Err(format!("rows[{i}] ({workload}): zero cycles"));
+        }
+        row.get("events")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("rows[{i}]: missing \"events\""))?;
+    }
+    // Optional sweep/cache accounting (emitted by sweep-driven benches):
+    // if present, it must be internally consistent.
+    if let Some(cache) = doc.get("cache") {
+        let hits = cache
+            .get("hits")
+            .and_then(Json::as_u64)
+            .ok_or("cache: missing \"hits\"")?;
+        let misses = cache
+            .get("misses")
+            .and_then(Json::as_u64)
+            .ok_or("cache: missing \"misses\"")?;
+        let cells = doc
+            .get("sweep")
+            .and_then(|s| s.get("cells"))
+            .and_then(Json::as_u64)
+            .ok_or("cache present but sweep.cells missing")?;
+        if hits + misses != cells {
+            return Err(format!(
+                "cache accounting mismatch: {hits} hits + {misses} misses != {cells} cells"
+            ));
+        }
+    }
+    Ok((rows.len(), n_metrics))
+}
+
+fn main() -> ExitCode {
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        eprintln!("usage: bench_check <BENCH_*.json> ...");
+        return ExitCode::from(2);
+    }
+    let mut failed = false;
+    for path in &paths {
+        let verdict = std::fs::read_to_string(path)
+            .map_err(|e| format!("unreadable: {e}"))
+            .and_then(|text| Json::parse(&text).map_err(|e| format!("malformed JSON: {e}")))
+            .and_then(|doc| check_doc(&doc));
+        match verdict {
+            Ok((rows, metrics)) => {
+                println!("OK {path}: {rows} rows, {metrics} metrics");
+            }
+            Err(e) => {
+                eprintln!("FAIL {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -20,7 +20,7 @@
 //! which both produces the address traces the timing model replays and the
 //! final memory image that must match the sequential interpreter's.
 
-use super::analysis::{analyze, LegalityError};
+use super::analysis::{analyze, Analysis, LegalityError};
 use super::interp::{interpret, InterpOutput};
 use super::ir::{ArrId, Expr, Program, Stmt, ARRAY_BASE, ARRAY_REGION};
 use crate::config::SystemConfig;
@@ -31,6 +31,7 @@ use crate::dx100::mem_image::MemImage;
 use crate::dx100::timing::{Dx100Program, TimedInstr};
 use crate::prefetch::{DmpConfig, DmpHints};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Behavioural flags forwarded to the experiment driver.
 #[derive(Clone, Copy, Debug)]
@@ -52,11 +53,39 @@ pub struct Dx100Run {
 }
 
 /// Everything the coordinator needs to run one workload on all systems.
+///
+/// The baseline half sits behind an [`Arc`]: it is config-independent, so
+/// the sweep engine shares one interpretation across every DX100
+/// specialization of the same workload (see [`Frontend::with_dx`]).
 pub struct CompiledWorkload {
     pub name: &'static str,
     pub flags: WorkloadFlags,
-    pub baseline: InterpOutput,
+    pub baseline: Arc<InterpOutput>,
     pub dx: Dx100Run,
+}
+
+/// Config-independent compilation front end: legality analysis plus the
+/// sequential interpretation that yields the baseline op streams, DMP
+/// hints, and the reference memory image. This is the expensive stage (it
+/// walks the whole iteration space), and nothing in it depends on
+/// [`SystemConfig`] — one front end serves every config point of a sweep.
+pub struct Frontend {
+    pub name: &'static str,
+    pub flags: WorkloadFlags,
+    pub analysis: Analysis,
+    pub baseline: Arc<InterpOutput>,
+}
+
+impl Frontend {
+    /// Pair this front end with one DX100 specialization.
+    pub fn with_dx(&self, dx: Dx100Run) -> CompiledWorkload {
+        CompiledWorkload {
+            name: self.name,
+            flags: self.flags,
+            baseline: Arc::clone(&self.baseline),
+            dx,
+        }
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -530,14 +559,43 @@ impl<'a> PhaseEmitter<'a> {
     }
 }
 
-/// Process-wide count of [`compile`] invocations. Compilation dominates
-/// suite setup cost, so the engine deduplicates it; its compile-once tests
-/// assert against this hook.
+/// Process-wide count of front-end compilations ([`frontend`], which
+/// [`compile`] calls). The front end walks the whole iteration space and
+/// dominates suite setup cost, so the engine deduplicates it; the
+/// compile-once/compile-dedup tests assert against this hook.
 static COMPILE_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
 
-/// How many times [`compile`] has run in this process.
+/// Process-wide count of DX100 specializations ([`specialize`]). The sweep
+/// engine dedupes these per (workload, compile-fingerprint); the
+/// compile-dedup tests assert against this hook.
+static SPECIALIZE_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// How many front-end compilations have run in this process.
 pub fn compile_invocations() -> u64 {
     COMPILE_INVOCATIONS.load(Ordering::Relaxed)
+}
+
+/// How many DX100 specializations have run in this process.
+pub fn specialize_invocations() -> u64 {
+    SPECIALIZE_INVOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Config-independent front end: analysis, legality, and the sequential
+/// interpretation (baseline streams + DMP hints + reference memory).
+pub fn frontend(p: &Program, init: &MemImage) -> Result<Frontend, LegalityError> {
+    COMPILE_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+    let (analysis, legal) = analyze(p);
+    legal?;
+    let baseline = interpret(p, init, Some(DmpConfig::default()));
+    Ok(Frontend {
+        name: p.name,
+        flags: WorkloadFlags {
+            atomic_rmw: p.atomic_rmw,
+            single_core_baseline: p.single_core_baseline,
+        },
+        analysis,
+        baseline: Arc::new(baseline),
+    })
 }
 
 /// Compile `p` for both the baseline and DX100 systems.
@@ -546,15 +604,28 @@ pub fn compile(
     init: &MemImage,
     cfg: &SystemConfig,
 ) -> Result<CompiledWorkload, LegalityError> {
-    COMPILE_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
-    let (analysis, legal) = analyze(p);
-    legal?;
-    let baseline = interpret(p, init, Some(DmpConfig::default()));
+    let fe = frontend(p, init)?;
+    let dx = specialize(&fe, p, init, cfg)?;
+    Ok(fe.with_dx(dx))
+}
+
+/// Lower `p` to DX100 instruction sequences for one configuration. Reads
+/// only `cfg.dx100.*` and `cfg.core.num_cores` — exactly the knobs covered
+/// by [`SystemConfig::compile_fingerprint`], which is what lets the sweep
+/// engine share one specialization across config points that agree on
+/// those values.
+pub fn specialize(
+    fe: &Frontend,
+    p: &Program,
+    init: &MemImage,
+    cfg: &SystemConfig,
+) -> Result<Dx100Run, LegalityError> {
+    SPECIALIZE_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
 
     // --- Phase cutting ---
     let tile_elems = cfg.dx100.tile_elems;
     let mut phases: Vec<(u64, usize)> = Vec::new();
-    if analysis.has_range_loop {
+    if fe.analysis.has_range_loop {
         let mut start = 0u64;
         let mut fused = 0u64;
         let mut n = 0usize;
@@ -693,19 +764,11 @@ pub fn compile(
         programs[instance].instrs.extend(instrs);
     }
 
-    Ok(CompiledWorkload {
-        name: p.name,
-        flags: WorkloadFlags {
-            atomic_rmw: p.atomic_rmw,
-            single_core_baseline: p.single_core_baseline,
-        },
-        baseline,
-        dx: Dx100Run {
-            programs,
-            core_streams,
-            mem,
-            phases: phases.len(),
-        },
+    Ok(Dx100Run {
+        programs,
+        core_streams,
+        mem,
+        phases: phases.len(),
     })
 }
 

@@ -25,6 +25,9 @@ pub mod interp;
 pub mod ir;
 
 pub use analysis::{analyze, AccessClass, Analysis, LegalityError};
-pub use codegen::{compile, compile_invocations, CompiledWorkload, Dx100Run, WorkloadFlags};
+pub use codegen::{
+    compile, compile_invocations, frontend, specialize, specialize_invocations, CompiledWorkload,
+    Dx100Run, Frontend, WorkloadFlags,
+};
 pub use interp::{interpret, InterpOutput};
 pub use ir::{Array, Expr, Program, Stmt};

@@ -4,6 +4,7 @@
 //! clock for DDR4-3200 is 1.6 GHz, i.e. one DRAM cycle = 2 CPU cycles; DDR4
 //! timing constants below are already converted.
 
+use crate::util::Fnv;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -284,6 +285,163 @@ impl SystemConfig {
     }
 }
 
+// The hash_into bodies destructure exhaustively (no `..`) on purpose:
+// adding a config field without extending its fingerprint would make the
+// persisted result cache replay stale stats, so the omission must be a
+// compile error, not a silent wrong number.
+
+impl CoreConfig {
+    fn hash_into(&self, h: &mut Fnv) {
+        let CoreConfig {
+            num_cores,
+            issue_width,
+            rob,
+            lq,
+            sq,
+        } = self;
+        h.usize(*num_cores)
+            .u64(*issue_width as u64)
+            .u64(*rob as u64)
+            .u64(*lq as u64)
+            .u64(*sq as u64);
+    }
+}
+
+impl CacheConfig {
+    fn hash_into(&self, h: &mut Fnv) {
+        let CacheConfig {
+            size,
+            ways,
+            latency,
+            mshrs,
+            stride_prefetcher,
+            prefetch_degree,
+        } = self;
+        h.usize(*size)
+            .usize(*ways)
+            .u64(*latency)
+            .usize(*mshrs)
+            .bool(*stride_prefetcher)
+            .usize(*prefetch_degree);
+    }
+}
+
+impl DramConfig {
+    fn hash_into(&self, h: &mut Fnv) {
+        let DramConfig {
+            channels,
+            ranks,
+            bankgroups,
+            banks_per_group,
+            row_bytes,
+            line_bytes,
+            request_buffer,
+            t_rp,
+            t_rcd,
+            t_ras,
+            t_rtp,
+            t_ccd_l,
+            t_ccd_s,
+            cl,
+            cwl,
+            t_burst,
+            t_wr,
+            t_rc,
+            backend_latency,
+        } = self;
+        h.usize(*channels)
+            .usize(*ranks)
+            .usize(*bankgroups)
+            .usize(*banks_per_group)
+            .usize(*row_bytes)
+            .usize(*line_bytes)
+            .usize(*request_buffer)
+            .u64(*t_rp)
+            .u64(*t_rcd)
+            .u64(*t_ras)
+            .u64(*t_rtp)
+            .u64(*t_ccd_l)
+            .u64(*t_ccd_s)
+            .u64(*cl)
+            .u64(*cwl)
+            .u64(*t_burst)
+            .u64(*t_wr)
+            .u64(*t_rc)
+            .u64(*backend_latency);
+    }
+}
+
+impl Dx100Config {
+    fn hash_into(&self, h: &mut Fnv) {
+        let Dx100Config {
+            instances,
+            tile_elems,
+            tiles,
+            rowtab_rows,
+            rowtab_cols,
+            registers,
+            request_table,
+            alu_lanes,
+            tlb_entries,
+            fill_rate,
+            writeback_rate,
+            mmio_store_latency,
+            spd_read_latency,
+        } = self;
+        h.usize(*instances)
+            .usize(*tile_elems)
+            .usize(*tiles)
+            .usize(*rowtab_rows)
+            .usize(*rowtab_cols)
+            .usize(*registers)
+            .usize(*request_table)
+            .usize(*alu_lanes)
+            .usize(*tlb_entries)
+            .usize(*fill_rate)
+            .usize(*writeback_rate)
+            .u64(*mmio_store_latency)
+            .u64(*spd_read_latency);
+    }
+}
+
+impl SystemConfig {
+    /// Stable fingerprint over **every** knob: two configs with equal
+    /// fingerprints simulate identically, so this (plus workload + system)
+    /// keys the engine's persisted result cache.
+    pub fn fingerprint(&self) -> u64 {
+        let SystemConfig {
+            core,
+            l1d,
+            l2,
+            llc,
+            dram,
+            dx100,
+            freq_ghz,
+        } = self;
+        let mut h = Fnv::with_seed(0xdc100);
+        core.hash_into(&mut h);
+        l1d.hash_into(&mut h);
+        l2.hash_into(&mut h);
+        llc.hash_into(&mut h);
+        dram.hash_into(&mut h);
+        dx100.hash_into(&mut h);
+        h.f64(*freq_ghz);
+        h.finish()
+    }
+
+    /// Stable fingerprint over the **compiler-relevant** knobs only:
+    /// `dx100.*` (tiling, instance count, registers) and `core.num_cores`
+    /// (dispatch/residual-compute interleaving). Codegen reads nothing
+    /// else from the configuration, so the sweep engine dedupes DX100
+    /// specialization across config points with equal values here.
+    pub fn compile_fingerprint(&self) -> u64 {
+        let mut h = Fnv::with_seed(0xdc51);
+        h.usize(self.core.num_cores);
+        self.dx100.hash_into(&mut h);
+        h.finish()
+    }
+}
+
 impl fmt::Display for SystemConfig {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
@@ -376,6 +534,34 @@ mod tests {
         let mut bad = BTreeMap::new();
         bad.insert("nope".to_string(), "1".to_string());
         assert!(SystemConfig::table3().with_overrides(&bad).is_err());
+    }
+
+    #[test]
+    fn fingerprints_track_knobs() {
+        let base = SystemConfig::table3();
+        assert_eq!(base.fingerprint(), SystemConfig::table3().fingerprint());
+        assert_eq!(
+            base.compile_fingerprint(),
+            SystemConfig::table3().compile_fingerprint()
+        );
+
+        // A DRAM-only knob changes the full fingerprint but not the
+        // compiler-relevant one (codegen never reads the request buffer).
+        let mut dram_only = SystemConfig::table3();
+        dram_only.dram.request_buffer = 128;
+        assert_ne!(dram_only.fingerprint(), base.fingerprint());
+        assert_eq!(dram_only.compile_fingerprint(), base.compile_fingerprint());
+
+        // Tile size is compiler-relevant: both fingerprints move.
+        let mut tiled = SystemConfig::table3();
+        tiled.dx100.tile_elems = 1024;
+        assert_ne!(tiled.fingerprint(), base.fingerprint());
+        assert_ne!(tiled.compile_fingerprint(), base.compile_fingerprint());
+
+        // Core count is compiler-relevant (dispatch interleaving).
+        let mut cores = SystemConfig::table3();
+        cores.core.num_cores = 8;
+        assert_ne!(cores.compile_fingerprint(), base.compile_fingerprint());
     }
 
     #[test]

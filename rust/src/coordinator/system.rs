@@ -18,7 +18,7 @@ use crate::workloads::WorkloadSpec;
 use std::collections::HashMap;
 
 /// Which system to simulate.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SystemKind {
     Baseline,
     Dmp,

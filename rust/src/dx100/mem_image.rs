@@ -118,6 +118,20 @@ impl MemImage {
     pub fn touched_pages(&self) -> usize {
         self.pages.len()
     }
+
+    /// Stable content hash, independent of `HashMap` iteration order.
+    /// Feeds the engine's persisted result-cache keys, so it must not vary
+    /// across processes or toolchains (hence [`crate::util::Fnv`], not
+    /// `std::hash`).
+    pub fn stable_hash(&self) -> u64 {
+        let mut keys: Vec<u64> = self.pages.keys().copied().collect();
+        keys.sort_unstable();
+        let mut h = crate::util::Fnv::with_seed(0x3e3);
+        for k in keys {
+            h.u64(k).bytes(&self.pages[&k]);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +147,21 @@ mod tests {
         assert_eq!(m.read_u64(0x2000), u64::MAX - 5);
         m.write_f32(0x3000, -1.5);
         assert_eq!(m.read_f32(0x3000), -1.5);
+    }
+
+    #[test]
+    fn stable_hash_tracks_content() {
+        let mut a = MemImage::new();
+        a.write_u32(0x0001_0000, 7);
+        a.write_u32(0x0005_0000, 9);
+        // Same content written in the opposite page order hashes equal.
+        let mut b = MemImage::new();
+        b.write_u32(0x0005_0000, 9);
+        b.write_u32(0x0001_0000, 7);
+        assert_eq!(a.stable_hash(), b.stable_hash());
+        // Different content diverges.
+        b.write_u32(0x0001_0000, 8);
+        assert_ne!(a.stable_hash(), b.stable_hash());
     }
 
     #[test]

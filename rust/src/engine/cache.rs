@@ -1,0 +1,425 @@
+//! Persisted result cache: skip unchanged sweep cells across bench
+//! invocations.
+//!
+//! Every sweep cell is a pure function of (config, workload, system), so
+//! its [`RunStats`] can be keyed by a stable fingerprint and replayed on
+//! the next invocation instead of re-simulated — a warm `fig13_tilesize`
+//! rerun is seconds of JSON reads instead of minutes of simulation. One
+//! cell is one small JSON file under the cache directory (default
+//! `target/dx100-cache/`), written atomically (temp file + rename) so
+//! concurrent bench processes never observe torn entries.
+//!
+//! **Keying.** The file name is a 128-bit fingerprint over:
+//!
+//! * a schema version (bump [`SCHEMA_VERSION`] when `RunStats` changes);
+//! * the running binary's identity (path, size, mtime) — a rebuilt
+//!   simulator silently invalidates every prior entry, which is the only
+//!   safe default when results depend on the code itself;
+//! * [`SystemConfig::fingerprint`] over **every** knob (not just the
+//!   compiler-relevant subset — DRAM timing changes results too);
+//! * the system kind (baseline / dmp / dx100);
+//! * the workload fingerprint: IR program structure, register file,
+//!   array table, initial memory image content, and cache-warming flag —
+//!   so two `micro::gather_full` variants with different sizes or seeds
+//!   never collide even though they share a program name.
+//!
+//! All hashing uses [`Fnv`] (stable across processes and toolchains);
+//! `std::hash` makes no such guarantee. Values that decode to a different
+//! workload name, system, or schema are treated as misses, never trusted.
+//!
+//! **Knobs.** `DX100_CACHE=0` disables the cache (`1`/unset enables it;
+//! anything else warns once and disables — fail-safe, since someone who
+//! set the variable was almost certainly opting out). `DX100_CACHE_DIR`
+//! overrides the directory. Delete the directory to flush.
+
+use super::harness::Json;
+use crate::coordinator::{RunStats, SystemKind};
+use crate::dx100::timing::Dx100Stats;
+use crate::util::Fnv;
+use crate::workloads::WorkloadSpec;
+use std::path::{Path, PathBuf};
+use std::sync::{Once, OnceLock};
+
+/// Bump when the persisted `RunStats` encoding changes shape.
+pub const SCHEMA_VERSION: u64 = 1;
+
+static WARN_CACHE: Once = Once::new();
+
+/// `DX100_CACHE` parse: `1`/unset = enabled, `0` = disabled. A malformed
+/// value warns once and **disables** the cache — a user who set the
+/// variable at all was almost certainly trying to turn it off (e.g.
+/// `DX100_CACHE=off` to force a cold-throughput run), and replaying
+/// cached cells against their intent is the harmful direction.
+pub fn enabled_from_env() -> bool {
+    match std::env::var("DX100_CACHE") {
+        Err(_) => true,
+        Ok(raw) => match raw.trim() {
+            "1" => true,
+            "0" => false,
+            _ => {
+                super::warn_once(&WARN_CACHE, "DX100_CACHE", &raw, "0 or 1");
+                false
+            }
+        },
+    }
+}
+
+/// 128-bit cell fingerprint (two independently-seeded 64-bit FNV passes;
+/// 64 bits alone is uncomfortably close to birthday collisions over a
+/// long-lived on-disk cache).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl CacheKey {
+    fn file_name(&self) -> String {
+        format!("{:016x}{:016x}.json", self.hi, self.lo)
+    }
+}
+
+/// Identity of the running binary: path + size + mtime. Folded into every
+/// key so a rebuilt simulator never replays results computed by old code.
+fn exe_identity() -> u64 {
+    static ID: OnceLock<u64> = OnceLock::new();
+    *ID.get_or_init(|| {
+        let mut h = Fnv::with_seed(0xb1a);
+        if let Ok(path) = std::env::current_exe() {
+            h.str(&path.to_string_lossy());
+            if let Ok(md) = std::fs::metadata(&path) {
+                h.u64(md.len());
+                if let Ok(mtime) = md.modified() {
+                    if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
+                        h.u64(d.as_secs()).u64(d.subsec_nanos() as u64);
+                    }
+                }
+            }
+        }
+        h.finish()
+    })
+}
+
+/// Stable fingerprint of a workload: program structure + registers +
+/// arrays + initial memory content + cache-warming flag. Dataset scale is
+/// covered implicitly — it changes `iters`, the array table, and the
+/// memory image.
+pub fn workload_fingerprint(w: &WorkloadSpec) -> u64 {
+    // Exhaustive destructuring (no `..`): a new workload/program field
+    // that is not folded in here must fail to compile, not silently
+    // alias cache entries.
+    let WorkloadSpec {
+        program,
+        mem,
+        warm_caches,
+        suite,
+    } = w;
+    let crate::compiler::Program {
+        name,
+        arrays,
+        regs,
+        iters,
+        body,
+        atomic_rmw,
+        single_core_baseline,
+        parallel_cores,
+    } = program;
+    let mut h = Fnv::with_seed(0x3077);
+    h.str(name)
+        .usize(*iters)
+        .bool(*atomic_rmw)
+        .bool(*single_core_baseline)
+        .usize(*parallel_cores)
+        .str(suite);
+    h.usize(regs.len());
+    for &r in regs {
+        h.u64(r);
+    }
+    h.usize(arrays.len());
+    for a in arrays {
+        let crate::compiler::Array {
+            name,
+            dtype,
+            len,
+            base,
+        } = a;
+        h.str(name).str(&format!("{dtype:?}")).usize(*len).u64(*base);
+    }
+    // The statement tree via its (stable within a build) Debug rendering;
+    // the exe identity in the cell key covers cross-build drift.
+    h.str(&format!("{body:?}"));
+    h.u64(mem.stable_hash()).bool(*warm_caches);
+    h.finish()
+}
+
+/// Key for one sweep cell. `cfg_fp` is [`SystemConfig::fingerprint`] and
+/// `wfp` is [`workload_fingerprint`] — both hoisted by the engine so they
+/// are computed once per point / per workload, not once per cell.
+///
+/// [`SystemConfig::fingerprint`]: crate::config::SystemConfig::fingerprint
+pub fn cell_key(cfg_fp: u64, system: SystemKind, wfp: u64) -> CacheKey {
+    let mut parts = [0u64; 2];
+    for (slot, seed) in parts.iter_mut().zip([0xa11c_e001u64, 0x0b0b_0002]) {
+        let mut h = Fnv::with_seed(seed);
+        h.u64(SCHEMA_VERSION)
+            .u64(exe_identity())
+            .u64(cfg_fp)
+            .str(system.label())
+            .u64(wfp);
+        *slot = h.finish();
+    }
+    CacheKey {
+        hi: parts[0],
+        lo: parts[1],
+    }
+}
+
+/// On-disk `RunStats` store. Stateless besides the directory; hit/miss
+/// accounting lives in [`super::SweepResult`].
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// A cache rooted at `dir` (created lazily on first store).
+    pub fn at(dir: impl Into<PathBuf>) -> Self {
+        ResultCache { dir: dir.into() }
+    }
+
+    /// The env-configured cache: `None` when `DX100_CACHE=0`. Directory:
+    /// `DX100_CACHE_DIR`, else `<CARGO_TARGET_DIR|target>/dx100-cache`.
+    pub fn from_env() -> Option<Self> {
+        if !enabled_from_env() {
+            return None;
+        }
+        let dir = match std::env::var("DX100_CACHE_DIR") {
+            Ok(d) => PathBuf::from(d),
+            Err(_) => {
+                let target =
+                    std::env::var("CARGO_TARGET_DIR").unwrap_or_else(|_| "target".to_string());
+                PathBuf::from(target).join("dx100-cache")
+            }
+        };
+        Some(ResultCache::at(dir))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the stats for `key`, verifying they describe (`name`,
+    /// `kind`). Any read, parse, or identity failure is a miss.
+    pub fn load(&self, key: &CacheKey, name: &'static str, kind: SystemKind) -> Option<RunStats> {
+        let text = std::fs::read_to_string(self.dir.join(key.file_name())).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        decode_run_stats(&doc, name, kind)
+    }
+
+    /// Persist the stats for `key`. Failures are silent: the cache is an
+    /// accelerator, never a correctness dependency.
+    pub fn store(&self, key: &CacheKey, rs: &RunStats) {
+        if std::fs::create_dir_all(&self.dir).is_err() {
+            return;
+        }
+        let file = key.file_name();
+        let tmp = self.dir.join(format!(".{file}.{}.tmp", std::process::id()));
+        let ok = std::fs::write(&tmp, encode_run_stats(rs).render()).is_ok()
+            && std::fs::rename(&tmp, self.dir.join(file)).is_ok();
+        if !ok {
+            // Never leave orphaned temp files behind (disk-full, perms).
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
+/// Floats are persisted as raw IEEE-754 bit patterns: the cold-vs-warm
+/// determinism guarantee is *bit* identity, and a decimal round-trip of a
+/// NaN would silently break it.
+fn encode_run_stats(rs: &RunStats) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::UInt(SCHEMA_VERSION)),
+        ("workload".into(), Json::Str(rs.workload.to_string())),
+        ("system".into(), Json::Str(rs.kind.label().to_string())),
+        ("cycles".into(), Json::UInt(rs.cycles)),
+        ("instrs".into(), Json::UInt(rs.instrs)),
+        ("spin_instrs".into(), Json::UInt(rs.spin_instrs)),
+        ("bw_util_bits".into(), Json::UInt(rs.bw_util.to_bits())),
+        (
+            "row_hit_rate_bits".into(),
+            Json::UInt(rs.row_hit_rate.to_bits()),
+        ),
+        ("occupancy_bits".into(), Json::UInt(rs.occupancy.to_bits())),
+        ("mpki_bits".into(), Json::UInt(rs.mpki.to_bits())),
+        ("dram_reads".into(), Json::UInt(rs.dram_reads)),
+        ("dram_writes".into(), Json::UInt(rs.dram_writes)),
+        ("dram_bytes".into(), Json::UInt(rs.dram_bytes)),
+        (
+            "dx".into(),
+            Json::Arr(rs.dx.iter().map(encode_dx_stats).collect()),
+        ),
+        ("events".into(), Json::UInt(rs.events)),
+    ])
+}
+
+fn encode_dx_stats(d: &Dx100Stats) -> Json {
+    Json::Obj(vec![
+        ("instructions".into(), Json::UInt(d.instructions)),
+        ("dram_reads".into(), Json::UInt(d.dram_reads)),
+        ("dram_writes".into(), Json::UInt(d.dram_writes)),
+        ("llc_path_accesses".into(), Json::UInt(d.llc_path_accesses)),
+        ("inserted_words".into(), Json::UInt(d.inserted_words)),
+        ("indirect_accesses".into(), Json::UInt(d.indirect_accesses)),
+        ("finish_time".into(), Json::UInt(d.finish_time)),
+        ("slice_full_stalls".into(), Json::UInt(d.slice_full_stalls)),
+    ])
+}
+
+fn get_u64(doc: &Json, key: &str) -> Option<u64> {
+    doc.get(key)?.as_u64()
+}
+
+fn get_f64_bits(doc: &Json, key: &str) -> Option<f64> {
+    Some(f64::from_bits(get_u64(doc, key)?))
+}
+
+fn decode_run_stats(doc: &Json, name: &'static str, kind: SystemKind) -> Option<RunStats> {
+    if get_u64(doc, "schema")? != SCHEMA_VERSION
+        || doc.get("workload")?.as_str()? != name
+        || doc.get("system")?.as_str()? != kind.label()
+    {
+        return None;
+    }
+    let dx = doc
+        .get("dx")?
+        .as_array()?
+        .iter()
+        .map(decode_dx_stats)
+        .collect::<Option<Vec<_>>>()?;
+    Some(RunStats {
+        kind,
+        workload: name,
+        cycles: get_u64(doc, "cycles")?,
+        instrs: get_u64(doc, "instrs")?,
+        spin_instrs: get_u64(doc, "spin_instrs")?,
+        bw_util: get_f64_bits(doc, "bw_util_bits")?,
+        row_hit_rate: get_f64_bits(doc, "row_hit_rate_bits")?,
+        occupancy: get_f64_bits(doc, "occupancy_bits")?,
+        mpki: get_f64_bits(doc, "mpki_bits")?,
+        dram_reads: get_u64(doc, "dram_reads")?,
+        dram_writes: get_u64(doc, "dram_writes")?,
+        dram_bytes: get_u64(doc, "dram_bytes")?,
+        dx,
+        events: get_u64(doc, "events")?,
+    })
+}
+
+fn decode_dx_stats(doc: &Json) -> Option<Dx100Stats> {
+    Some(Dx100Stats {
+        instructions: get_u64(doc, "instructions")?,
+        dram_reads: get_u64(doc, "dram_reads")?,
+        dram_writes: get_u64(doc, "dram_writes")?,
+        llc_path_accesses: get_u64(doc, "llc_path_accesses")?,
+        inserted_words: get_u64(doc, "inserted_words")?,
+        indirect_accesses: get_u64(doc, "indirect_accesses")?,
+        finish_time: get_u64(doc, "finish_time")?,
+        slice_full_stalls: get_u64(doc, "slice_full_stalls")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::workloads::micro;
+
+    fn sample_stats() -> RunStats {
+        RunStats {
+            kind: SystemKind::Dx100,
+            workload: "CG",
+            cycles: 123_456,
+            instrs: 789,
+            spin_instrs: 12,
+            bw_util: 0.734_521,
+            row_hit_rate: f64::NAN, // bit-exact round-trip must survive NaN
+            occupancy: 4.25,
+            mpki: 0.01,
+            dram_reads: 1000,
+            dram_writes: 2,
+            dram_bytes: 64_128,
+            dx: vec![Dx100Stats {
+                instructions: 10,
+                dram_reads: 20,
+                dram_writes: 30,
+                llc_path_accesses: 40,
+                inserted_words: 50,
+                indirect_accesses: 60,
+                finish_time: 70,
+                slice_full_stalls: 80,
+            }],
+            events: 424_242,
+        }
+    }
+
+    #[test]
+    fn run_stats_roundtrip_is_bit_exact() {
+        let rs = sample_stats();
+        let doc = Json::parse(&encode_run_stats(&rs).render()).unwrap();
+        let back = decode_run_stats(&doc, "CG", SystemKind::Dx100).unwrap();
+        assert_eq!(back.cycles, rs.cycles);
+        assert_eq!(back.instrs, rs.instrs);
+        assert_eq!(back.bw_util.to_bits(), rs.bw_util.to_bits());
+        assert_eq!(back.row_hit_rate.to_bits(), rs.row_hit_rate.to_bits());
+        assert!(back.row_hit_rate.is_nan());
+        assert_eq!(back.occupancy.to_bits(), rs.occupancy.to_bits());
+        assert_eq!(back.dx.len(), 1);
+        assert_eq!(back.dx[0].finish_time, 70);
+        assert_eq!(back.events, rs.events);
+    }
+
+    #[test]
+    fn decode_rejects_identity_mismatches() {
+        let doc = Json::parse(&encode_run_stats(&sample_stats()).render()).unwrap();
+        assert!(decode_run_stats(&doc, "IS", SystemKind::Dx100).is_none());
+        assert!(decode_run_stats(&doc, "CG", SystemKind::Baseline).is_none());
+    }
+
+    #[test]
+    fn store_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("dx100-cache-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::at(&dir);
+        let w = micro::gather_full(512, micro::IndexPattern::Streaming, 9);
+        let key = cell_key(
+            SystemConfig::table3().fingerprint(),
+            SystemKind::Dx100,
+            workload_fingerprint(&w),
+        );
+        assert!(cache.load(&key, "CG", SystemKind::Dx100).is_none());
+        let rs = sample_stats();
+        cache.store(&key, &rs);
+        let back = cache.load(&key, "CG", SystemKind::Dx100).unwrap();
+        assert_eq!(back.cycles, rs.cycles);
+        // Wrong identity on the same key is a miss, not a bad hit.
+        assert!(cache.load(&key, "IS", SystemKind::Dx100).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cell_keys_separate_configs_workloads_and_systems() {
+        let w1 = micro::gather_full(512, micro::IndexPattern::Streaming, 9);
+        let w2 = micro::gather_full(1024, micro::IndexPattern::Streaming, 9);
+        let base = SystemConfig::table3().fingerprint();
+        let f1 = workload_fingerprint(&w1);
+        let f2 = workload_fingerprint(&w2);
+        // Same program name, different size: fingerprints must differ.
+        assert_ne!(f1, f2);
+        let k = cell_key(base, SystemKind::Baseline, f1);
+        assert_eq!(k, cell_key(base, SystemKind::Baseline, f1));
+        assert_ne!(k, cell_key(base, SystemKind::Dx100, f1));
+        assert_ne!(k, cell_key(base, SystemKind::Baseline, f2));
+        let mut other = SystemConfig::table3();
+        other.dram.request_buffer = 8;
+        assert_ne!(k, cell_key(other.fingerprint(), SystemKind::Baseline, f1));
+    }
+}

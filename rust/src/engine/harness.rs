@@ -16,12 +16,26 @@
 //! The JSON encoder is local and std-only: no external serializer crates
 //! are available offline.
 
+use super::SweepResult;
 use crate::coordinator::RunStats;
 use crate::metrics::Comparison;
 use crate::workloads::Scale;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 use std::time::Instant;
+
+/// Sweep-execution accounting recorded via [`Harness::sweep`].
+#[derive(Clone, Copy, Debug)]
+struct SweepStats {
+    points: usize,
+    cells: usize,
+    compiles: usize,
+    specializations: usize,
+    deduped: usize,
+    cache_enabled: bool,
+    cache_hits: usize,
+    cache_misses: usize,
+}
 
 /// Minimal JSON value.
 #[derive(Clone, Debug)]
@@ -41,6 +55,67 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Parse a JSON document. Std-only counterpart to [`Json::render`];
+    /// the result cache and the `bench_check` CI gate both consume
+    /// documents this module emitted, so the dialect matches: no
+    /// surrogate-pair `\u` escapes, numbers fit u64/i64/f64.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            b: s.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(u) => Some(*u),
+            Json::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            Json::UInt(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
     }
 
     fn write(&self, out: &mut String) {
@@ -104,6 +179,188 @@ impl Json {
     }
 }
 
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or("unexpected end of input")? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => self.string().map(Json::Str),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("expected {word:?} at byte {}", self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| format!("bad \\u escape at byte {}", self.i))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                            self.i += 4;
+                            // Lone surrogates (the render side never emits
+                            // them) decode to the replacement character.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                c if c.is_ascii() => out.push(c as char),
+                c => {
+                    // Multi-byte UTF-8 scalar: copy it through whole.
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    let s = self
+                        .b
+                        .get(start..start + len)
+                        .and_then(|bs| std::str::from_utf8(bs).ok())
+                        .ok_or_else(|| format!("invalid utf-8 at byte {start}"))?;
+                    out.push_str(s);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number span");
+        if s.is_empty() {
+            return Err(format!("unexpected character at byte {start}"));
+        }
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            if s.starts_with('-') {
+                if let Ok(v) = s.parse::<i64>() {
+                    return Ok(Json::Int(v));
+                }
+            } else if let Ok(v) = s.parse::<u64>() {
+                return Ok(Json::UInt(v));
+            }
+        }
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {s:?}"))
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.i += 1; // '['
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                    self.ws();
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.i += 1; // '{'
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            if self.peek() != Some(b'"') {
+                return Err(format!("expected object key at byte {}", self.i));
+            }
+            let k = self.string()?;
+            self.ws();
+            if self.peek() != Some(b':') {
+                return Err(format!("expected ':' at byte {}", self.i));
+            }
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            out.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
 /// Driver state for one bench binary.
 pub struct Harness {
     name: &'static str,
@@ -113,6 +370,7 @@ pub struct Harness {
     metrics: Vec<(String, Json)>,
     rows: Vec<Json>,
     paper_refs: Vec<String>,
+    sweep: Option<SweepStats>,
 }
 
 impl Harness {
@@ -127,7 +385,24 @@ impl Harness {
             metrics: Vec::new(),
             rows: Vec::new(),
             paper_refs: Vec::new(),
+            sweep: None,
         }
+    }
+
+    /// Record a sweep execution's accounting (compiles, specializations,
+    /// cache hits/misses). Printed by [`Self::finish`] and emitted in the
+    /// JSON `sweep`/`cache` objects.
+    pub fn sweep(&mut self, r: &SweepResult) {
+        self.sweep = Some(SweepStats {
+            points: r.points.len(),
+            cells: r.cells(),
+            compiles: r.compiles,
+            specializations: r.specializations,
+            deduped: r.deduped,
+            cache_enabled: r.cache_enabled,
+            cache_hits: r.cache_hits,
+            cache_misses: r.cache_misses,
+        });
     }
 
     /// Dataset scale (`DX100_SCALE`, default 2).
@@ -198,6 +473,20 @@ impl Harness {
         } else {
             println!("bench wall time {wall:.1}s");
         }
+        if let Some(sw) = &self.sweep {
+            println!(
+                "sweep: {} points, {} cells | {} compiles, {} specializations, {} deduped | \
+                 cache {}: {} hits / {} misses",
+                sw.points,
+                sw.cells,
+                sw.compiles,
+                sw.specializations,
+                sw.deduped,
+                if sw.cache_enabled { "on" } else { "off" },
+                sw.cache_hits,
+                sw.cache_misses,
+            );
+        }
         let path = self.json_path();
         let doc = self.into_json(wall);
         match std::fs::write(&path, doc.render()) {
@@ -206,9 +495,13 @@ impl Harness {
         }
     }
 
-    /// Where the JSON lands: `DX100_BENCH_DIR` (default: current dir).
+    /// Where the JSON lands: `DX100_BENCH_DIR` (default: current dir),
+    /// created if missing — CI gates hard on the emitted JSON, so a
+    /// not-yet-existing directory must not silently downgrade emission
+    /// to a stderr warning.
     fn json_path(&self) -> PathBuf {
         let dir = std::env::var("DX100_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let _ = std::fs::create_dir_all(&dir);
         PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
     }
 
@@ -218,7 +511,7 @@ impl Harness {
         } else {
             Json::Null
         };
-        Json::Obj(vec![
+        let mut obj = vec![
             ("bench".into(), Json::Str(self.name.into())),
             ("title".into(), Json::Str(self.title)),
             ("scale".into(), Json::UInt(super::scale_from_env().0 as u64)),
@@ -229,13 +522,43 @@ impl Harness {
             ("wall_seconds".into(), Json::Num(wall)),
             ("events".into(), Json::UInt(self.events)),
             ("events_per_sec".into(), eps),
+        ];
+        if let Some(sw) = self.sweep {
+            obj.push((
+                "sweep".into(),
+                Json::Obj(vec![
+                    ("points".into(), Json::UInt(sw.points as u64)),
+                    ("cells".into(), Json::UInt(sw.cells as u64)),
+                    ("compiles".into(), Json::UInt(sw.compiles as u64)),
+                    (
+                        "specializations".into(),
+                        Json::UInt(sw.specializations as u64),
+                    ),
+                    ("deduped".into(), Json::UInt(sw.deduped as u64)),
+                    (
+                        "cells_per_sec".into(),
+                        Json::Num(sw.cells as f64 / wall.max(1e-9)),
+                    ),
+                ]),
+            ));
+            obj.push((
+                "cache".into(),
+                Json::Obj(vec![
+                    ("enabled".into(), Json::Bool(sw.cache_enabled)),
+                    ("hits".into(), Json::UInt(sw.cache_hits as u64)),
+                    ("misses".into(), Json::UInt(sw.cache_misses as u64)),
+                ]),
+            ));
+        }
+        obj.extend([
             (
-                "paper_refs".into(),
+                "paper_refs".to_string(),
                 Json::Arr(self.paper_refs.into_iter().map(Json::Str).collect()),
             ),
-            ("metrics".into(), Json::Obj(self.metrics)),
-            ("rows".into(), Json::Arr(self.rows)),
-        ])
+            ("metrics".to_string(), Json::Obj(self.metrics)),
+            ("rows".to_string(), Json::Arr(self.rows)),
+        ]);
+        Json::Obj(obj)
     }
 }
 
@@ -284,5 +607,47 @@ mod tests {
             ("ok".into(), Json::Bool(false)),
         ]);
         assert_eq!(doc.render(), "{\"xs\":[1,2],\"ok\":false}");
+    }
+
+    #[test]
+    fn parse_roundtrips_rendered_documents() {
+        let doc = Json::Obj(vec![
+            ("b".into(), Json::Str("fig13".into())),
+            ("n".into(), Json::UInt(u64::MAX)),
+            ("i".into(), Json::Int(-42)),
+            ("x".into(), Json::Num(2.5)),
+            ("none".into(), Json::Null),
+            ("ok".into(), Json::Bool(true)),
+            (
+                "rows".into(),
+                Json::Arr(vec![Json::Obj(vec![(
+                    "w".into(),
+                    Json::Str("CG@tile4096".into()),
+                )])]),
+            ),
+            ("esc".into(), Json::Str("a\"b\\c\nd\u{1}é".into())),
+        ]);
+        let back = Json::parse(&doc.render()).unwrap();
+        assert_eq!(back.render(), doc.render());
+        assert_eq!(back.get("b").unwrap().as_str(), Some("fig13"));
+        assert_eq!(back.get("n").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(back.get("i").unwrap().as_f64(), Some(-42.0));
+        assert_eq!(back.get("x").unwrap().as_f64(), Some(2.5));
+        assert!(back.get("none").unwrap().is_null());
+        assert_eq!(back.get("rows").unwrap().as_array().unwrap().len(), 1);
+        assert_eq!(back.get("esc").unwrap().as_str(), Some("a\"b\\c\nd\u{1}é"));
+        assert!(back.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_rejects_junk() {
+        let v = Json::parse(" { \"a\" : [ 1 , 2.5 , null ] }\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} x").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
     }
 }

@@ -2,34 +2,49 @@
 //!
 //! The paper's evaluation sweeps 12 workloads x 3 systems x several
 //! configurations (Figures 9-14). The naive path recompiles every workload
-//! once per system and simulates every (workload, system) cell serially,
+//! once per (system, config point) and simulates every cell serially,
 //! which makes the simulator itself the bandwidth bottleneck of the study.
-//! This module restructures the experiment path:
+//! This module restructures the experiment path around the **sweep** as
+//! the unit of parallelism:
 //!
-//! * [`RunPlan`] describes a run matrix over borrowed workloads. Each
-//!   workload is compiled **exactly once** per plan execution and the
-//!   resulting [`CompiledWorkload`] is shared by reference across the
-//!   Baseline/DMP/DX100 runs (compilation is system-independent: the
-//!   DX100 config adjustment only touches the LLC).
-//! * [`execute_with`] fans the matrix out across host worker threads
-//!   (`DX100_THREADS`, default: available parallelism). Results are
-//!   deterministic and plan-ordered: each cell's simulation is a pure
-//!   function of (config, compiled workload), so threading changes wall
-//!   time, never stats.
-//! * [`Suite`] is the owning builder the CLI and benches use;
-//!   [`crate::metrics::run_suite`] and [`crate::metrics::compare_one`]
-//!   are thin wrappers over it.
+//! * [`SweepPlan`] describes a (config point x workload x system) cube
+//!   over borrowed workloads. All cells across every config point feed one
+//!   worker pool — there is no barrier between config points, so a slow
+//!   cell of point 0 overlaps with point 3's work.
+//! * Compilation is staged: the config-independent **front end**
+//!   ([`crate::compiler::frontend`] — analysis + the sequential
+//!   interpretation) runs **exactly once per workload** for the whole
+//!   sweep, and the DX100 **specialization**
+//!   ([`crate::compiler::specialize`]) runs once per (workload,
+//!   [`SystemConfig::compile_fingerprint`]) — config points that agree on
+//!   the compiler-relevant knobs (`dx100.*`, `core.num_cores`) share one
+//!   specialization.
+//! * Cells whose *full* configuration fingerprints collide (identical
+//!   simulations) execute once and share the result within the plan.
+//! * [`cache`] persists `RunStats` keyed by (config, workload, system)
+//!   fingerprints under `target/dx100-cache/`, so unchanged cells are
+//!   skipped across bench invocations (`DX100_CACHE=0` disables).
+//! * Results return in deterministic plan order: each cell's simulation is
+//!   a pure function of (config, compiled workload), so threading and
+//!   caching change wall time, never stats.
+//! * [`RunPlan`]/[`Suite`] are the single-config-point specialisations the
+//!   CLI and `crate::metrics` wrappers use; they route through the same
+//!   sweep executor.
 //! * [`harness`] is the shared bench-binary entry point: scale/thread env
-//!   knobs, wall-time + events/sec throughput, `BENCH_*.json` emission.
+//!   knobs, wall-time + events/sec throughput, cache hit/miss surfacing,
+//!   `BENCH_*.json` emission.
 
+pub mod cache;
 pub mod harness;
 
-use crate::compiler::{compile, CompiledWorkload};
+use crate::compiler::{frontend, specialize, CompiledWorkload, Frontend};
 use crate::config::SystemConfig;
 use crate::coordinator::{Experiment, RunStats, SystemKind};
 use crate::workloads::{self, Scale, WorkloadSpec};
+use self::cache::ResultCache;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Once};
 
 /// All three systems, in reporting order.
 pub const ALL_SYSTEMS: [SystemKind; 3] =
@@ -38,66 +53,115 @@ pub const ALL_SYSTEMS: [SystemKind; 3] =
 /// Baseline + DX100 (the Figure 9-11 comparison points).
 pub const BASE_AND_DX: [SystemKind; 2] = [SystemKind::Baseline, SystemKind::Dx100];
 
+/// Warn once per process about a malformed environment knob. Silent
+/// fallback hid typos like `DX100_SCALE=4x` for whole bench runs.
+pub(crate) fn warn_once(once: &'static Once, name: &str, raw: &str, expect: &str) {
+    once.call_once(|| {
+        eprintln!("warning: ignoring {name}={raw:?} (expected {expect}); using the default");
+    });
+}
+
+static WARN_THREADS: Once = Once::new();
+static WARN_SCALE: Once = Once::new();
+
 /// Worker-thread count: `DX100_THREADS` if set (>= 1), else the host's
-/// available parallelism.
+/// available parallelism. A malformed value warns once and falls back.
 pub fn threads_from_env() -> usize {
-    std::env::var("DX100_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    let default = || {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    };
+    match std::env::var("DX100_THREADS") {
+        Err(_) => default(),
+        Ok(raw) => match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                warn_once(&WARN_THREADS, "DX100_THREADS", &raw, "an integer >= 1");
+                default()
+            }
+        },
+    }
 }
 
-/// Dataset scale from `DX100_SCALE` (default 2 — a few seconds per figure).
+/// Dataset scale from `DX100_SCALE` (default 2 — a few seconds per
+/// figure). A malformed value warns once and falls back.
 pub fn scale_from_env() -> Scale {
-    Scale(
-        std::env::var("DX100_SCALE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(2),
-    )
+    match std::env::var("DX100_SCALE") {
+        Err(_) => Scale(2),
+        Ok(raw) => match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Scale(n),
+            _ => {
+                warn_once(&WARN_SCALE, "DX100_SCALE", &raw, "an integer >= 1");
+                Scale(2)
+            }
+        },
+    }
 }
 
-/// One (workload, system) cell of a run matrix.
+/// One configuration point of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Reporting label, e.g. `tile4096` or `8c4ch2x`; may be empty for
+    /// single-point plans.
+    pub label: String,
+    pub cfg: SystemConfig,
+}
+
+impl SweepPoint {
+    pub fn new(label: impl Into<String>, cfg: SystemConfig) -> Self {
+        SweepPoint {
+            label: label.into(),
+            cfg,
+        }
+    }
+}
+
+/// One (config point, workload, system) cell of a sweep cube.
 #[derive(Clone, Copy, Debug)]
-pub struct RunSpec {
+pub struct SweepCell {
+    /// Index into the plan's point list.
+    pub point: usize,
     /// Index into the plan's workload list.
     pub workload: usize,
     pub system: SystemKind,
 }
 
-/// A run matrix over borrowed workloads: every workload runs on every
-/// system under one base configuration.
+/// A (config x workload x system) cube over borrowed workloads: every
+/// workload runs on every system under every config point.
 #[derive(Clone, Copy)]
-pub struct RunPlan<'a> {
-    pub cfg: &'a SystemConfig,
+pub struct SweepPlan<'a> {
+    pub points: &'a [SweepPoint],
     pub workloads: &'a [WorkloadSpec],
     pub systems: &'a [SystemKind],
 }
 
-impl<'a> RunPlan<'a> {
+impl<'a> SweepPlan<'a> {
     pub fn new(
-        cfg: &'a SystemConfig,
+        points: &'a [SweepPoint],
         workloads: &'a [WorkloadSpec],
         systems: &'a [SystemKind],
     ) -> Self {
-        RunPlan {
-            cfg,
+        SweepPlan {
+            points,
             workloads,
             systems,
         }
     }
 
-    /// The matrix cells in deterministic workload-major order.
-    pub fn cells(&self) -> Vec<RunSpec> {
-        let mut out = Vec::with_capacity(self.workloads.len() * self.systems.len());
-        for workload in 0..self.workloads.len() {
-            for &system in self.systems {
-                out.push(RunSpec { workload, system });
+    /// The cube cells in deterministic point-major, workload-major order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out =
+            Vec::with_capacity(self.points.len() * self.workloads.len() * self.systems.len());
+        for point in 0..self.points.len() {
+            for workload in 0..self.workloads.len() {
+                for &system in self.systems {
+                    out.push(SweepCell {
+                        point,
+                        workload,
+                        system,
+                    });
+                }
             }
         }
         out
@@ -119,12 +183,269 @@ impl WorkloadResult {
     }
 }
 
-/// Results of one plan execution.
+/// Per-point results of a sweep execution, in plan order.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub label: String,
+    /// Per-workload results in plan order.
+    pub workloads: Vec<WorkloadResult>,
+}
+
+/// Results of one sweep execution.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Per-point results in plan order.
+    pub points: Vec<PointResult>,
+    /// Front-end compilations performed (at most one per workload).
+    pub compiles: usize,
+    /// DX100 specializations performed (at most one per (workload,
+    /// compile-fingerprint) pair).
+    pub specializations: usize,
+    /// Worker threads used for the cell pool.
+    pub threads: usize,
+    /// Cells served from the persisted result cache.
+    pub cache_hits: usize,
+    /// Cells not in the cache (executed this invocation, or copied from an
+    /// identical cell executed this invocation).
+    pub cache_misses: usize,
+    /// Cells that shared the result of an identical cell within this plan
+    /// (same full config fingerprint, workload, and system).
+    pub deduped: usize,
+    /// Whether a persisted result cache was consulted.
+    pub cache_enabled: bool,
+}
+
+impl SweepResult {
+    /// Total number of cells in the plan.
+    pub fn cells(&self) -> usize {
+        self.cache_hits + self.cache_misses
+    }
+
+    /// Total simulator events processed across all runs (cache hits
+    /// contribute the event counts recorded when they first ran).
+    pub fn total_events(&self) -> u64 {
+        self.points
+            .iter()
+            .flat_map(|p| p.workloads.iter())
+            .flat_map(|w| w.runs.iter())
+            .map(|r| r.events)
+            .sum()
+    }
+}
+
+/// Execute `plan` with the env-configured thread count and result cache
+/// (`DX100_THREADS`, `DX100_CACHE`).
+pub fn execute_sweep(plan: &SweepPlan) -> SweepResult {
+    let cache = ResultCache::from_env();
+    execute_sweep_with(plan, threads_from_env(), cache.as_ref())
+}
+
+/// Execute `plan` on exactly `threads` worker threads (capped at the
+/// number of cells that actually need to run), consulting `cache` if
+/// given.
+///
+/// Results are bit-identical regardless of `threads` and of cache state:
+/// cells share compiled workloads immutably and each simulation is
+/// deterministic, so only wall time changes.
+pub fn execute_sweep_with(
+    plan: &SweepPlan,
+    threads: usize,
+    cache: Option<&ResultCache>,
+) -> SweepResult {
+    let cells = plan.cells();
+    let mut stats: Vec<Option<RunStats>> = cells.iter().map(|_| None).collect();
+
+    // Workload fingerprints are only needed when a cache is consulted;
+    // hashing a workload's memory image is cheap next to simulating it,
+    // but not free.
+    let wfps: Vec<u64> = if cache.is_some() {
+        plan.workloads.iter().map(cache::workload_fingerprint).collect()
+    } else {
+        Vec::new()
+    };
+
+    // Full config fingerprints, once per point: they key both the
+    // persisted cache cells and the within-plan dedup.
+    let full_fp: Vec<u64> = plan.points.iter().map(|p| p.cfg.fingerprint()).collect();
+
+    // Probe the persisted cache first: a hit costs one fingerprint + one
+    // small JSON read instead of a simulation.
+    let mut cache_hits = 0usize;
+    if let Some(c) = cache {
+        for (slot, cell) in stats.iter_mut().zip(&cells) {
+            let w = &plan.workloads[cell.workload];
+            let key = cache::cell_key(full_fp[cell.point], cell.system, wfps[cell.workload]);
+            if let Some(rs) = c.load(&key, w.program.name, cell.system) {
+                *slot = Some(rs);
+                cache_hits += 1;
+            }
+        }
+    }
+
+    // Misses. Identical cells (same full config fingerprint, workload and
+    // system — e.g. an ablation sweep whose `rows=64` point equals the
+    // Table-3 default) run once and share the result.
+    let mut canonical: Vec<usize> = Vec::new();
+    let mut copies: Vec<(usize, usize)> = Vec::new(); // (duplicate cell, canonical cell)
+    let mut seen: HashMap<(u64, usize, SystemKind), usize> = HashMap::new();
+    for (i, cell) in cells.iter().enumerate() {
+        if stats[i].is_some() {
+            continue;
+        }
+        let key = (full_fp[cell.point], cell.workload, cell.system);
+        match seen.get(&key) {
+            Some(&src) => copies.push((i, src)),
+            None => {
+                seen.insert(key, i);
+                canonical.push(i);
+            }
+        }
+    }
+
+    // Compile exactly what the canonical cells need: one front end per
+    // workload, one DX100 specialization per (compile-fingerprint,
+    // workload).
+    let compile_fp: Vec<u64> = plan
+        .points
+        .iter()
+        .map(|p| p.cfg.compile_fingerprint())
+        .collect();
+    let mut fronts: HashMap<usize, Frontend> = HashMap::new();
+    let mut specialized: HashMap<(u64, usize), CompiledWorkload> = HashMap::new();
+    for &i in &canonical {
+        let cell = cells[i];
+        let w = &plan.workloads[cell.workload];
+        let fe = fronts.entry(cell.workload).or_insert_with(|| {
+            frontend(&w.program, &w.mem)
+                .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name))
+        });
+        let skey = (compile_fp[cell.point], cell.workload);
+        specialized.entry(skey).or_insert_with(|| {
+            let dx = specialize(fe, &w.program, &w.mem, &plan.points[cell.point].cfg)
+                .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
+            fe.with_dx(dx)
+        });
+    }
+    let compiles = fronts.len();
+    let specializations = specialized.len();
+
+    // One pool over every remaining cell of every config point: no
+    // per-point barrier, so threads stay busy across the whole sweep.
+    let threads = threads.max(1).min(canonical.len().max(1));
+    if threads <= 1 {
+        for &i in &canonical {
+            stats[i] = Some(run_sweep_cell(plan, &specialized, &compile_fp, cells[i]));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, RunStats)>();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let (next, canonical, cells, specialized, compile_fp) =
+                    (&next, &canonical, &cells, &specialized, &compile_fp);
+                s.spawn(move || loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&i) = canonical.get(k) else { break };
+                    let rs = run_sweep_cell(plan, specialized, compile_fp, cells[i]);
+                    if tx.send((i, rs)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            // Workers finish in arbitrary order; the index restores the
+            // deterministic plan order.
+            for (i, rs) in rx {
+                stats[i] = Some(rs);
+            }
+        });
+    }
+    for &(dst, src) in &copies {
+        let rs = stats[src].clone();
+        stats[dst] = rs;
+    }
+
+    // Persist the new results for the next invocation.
+    if let Some(c) = cache {
+        for &i in &canonical {
+            let cell = cells[i];
+            let key = cache::cell_key(full_fp[cell.point], cell.system, wfps[cell.workload]);
+            c.store(&key, stats[i].as_ref().expect("canonical cell executed"));
+        }
+    }
+
+    let mut it = stats.into_iter().map(|s| s.expect("cell not executed"));
+    let points = plan
+        .points
+        .iter()
+        .map(|pt| PointResult {
+            label: pt.label.clone(),
+            workloads: plan
+                .workloads
+                .iter()
+                .map(|w| WorkloadResult {
+                    workload: w.program.name,
+                    runs: plan.systems.iter().map(|_| it.next().unwrap()).collect(),
+                })
+                .collect(),
+        })
+        .collect();
+    SweepResult {
+        points,
+        compiles,
+        specializations,
+        threads,
+        cache_hits,
+        cache_misses: cells.len() - cache_hits,
+        deduped: copies.len(),
+        cache_enabled: cache.is_some(),
+    }
+}
+
+fn run_sweep_cell(
+    plan: &SweepPlan,
+    specialized: &HashMap<(u64, usize), CompiledWorkload>,
+    compile_fp: &[u64],
+    cell: SweepCell,
+) -> RunStats {
+    let cw = &specialized[&(compile_fp[cell.point], cell.workload)];
+    let ex = Experiment::new(cell.system, plan.points[cell.point].cfg.clone());
+    ex.run_compiled(cw, plan.workloads[cell.workload].warm_caches)
+}
+
+/// A run matrix over borrowed workloads: every workload runs on every
+/// system under one base configuration. This is the single-config-point
+/// specialisation of [`SweepPlan`]; execution wraps it in a one-point
+/// sweep, so there is a single cell-enumeration code path.
+#[derive(Clone, Copy)]
+pub struct RunPlan<'a> {
+    pub cfg: &'a SystemConfig,
+    pub workloads: &'a [WorkloadSpec],
+    pub systems: &'a [SystemKind],
+}
+
+impl<'a> RunPlan<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        workloads: &'a [WorkloadSpec],
+        systems: &'a [SystemKind],
+    ) -> Self {
+        RunPlan {
+            cfg,
+            workloads,
+            systems,
+        }
+    }
+}
+
+/// Results of one single-point plan execution.
 #[derive(Clone, Debug)]
 pub struct SuiteResult {
     /// Per-workload results in plan order.
     pub workloads: Vec<WorkloadResult>,
-    /// `compile` invocations the engine performed (one per workload).
+    /// Front-end `compile` invocations the engine performed (one per
+    /// workload).
     pub compiles: usize,
     /// Worker threads used for the run matrix.
     pub threads: usize,
@@ -147,77 +468,22 @@ pub fn execute(plan: &RunPlan) -> SuiteResult {
 }
 
 /// Execute `plan` on exactly `threads` worker threads (capped at the cell
-/// count).
-///
-/// Results are bit-identical regardless of `threads`: cells share the
-/// compiled workloads immutably and each simulation is deterministic, so
-/// only wall time changes.
+/// count). Runs through the sweep executor as a single config point,
+/// without the persisted result cache — exact compile/run counts stay
+/// predictable for callers and tests.
 pub fn execute_with(plan: &RunPlan, threads: usize) -> SuiteResult {
-    // Compile each workload exactly once; every system's run borrows the
-    // same CompiledWorkload.
-    let compiled: Vec<CompiledWorkload> = plan
-        .workloads
-        .iter()
-        .map(|w| {
-            compile(&w.program, &w.mem, plan.cfg)
-                .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name))
-        })
-        .collect();
-    let cells = plan.cells();
-    let threads = threads.max(1).min(cells.len().max(1));
-    let mut stats: Vec<Option<RunStats>> = cells.iter().map(|_| None).collect();
-    if threads <= 1 {
-        for (slot, &cell) in stats.iter_mut().zip(&cells) {
-            *slot = Some(run_cell(plan, &compiled, cell));
-        }
-    } else {
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, RunStats)>();
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                let tx = tx.clone();
-                let (next, cells, compiled) = (&next, &cells, &compiled);
-                s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(&cell) = cells.get(i) else { break };
-                    if tx.send((i, run_cell(plan, compiled, cell))).is_err() {
-                        break;
-                    }
-                });
-            }
-            drop(tx);
-            // Workers finish in arbitrary order; the index restores the
-            // deterministic plan order.
-            for (i, rs) in rx {
-                stats[i] = Some(rs);
-            }
-        });
-    }
-    let mut it = stats.into_iter().map(|s| s.expect("cell not executed"));
-    let results = plan
-        .workloads
-        .iter()
-        .map(|w| WorkloadResult {
-            workload: w.program.name,
-            runs: plan.systems.iter().map(|_| it.next().unwrap()).collect(),
-        })
-        .collect();
+    let points = [SweepPoint::new("", plan.cfg.clone())];
+    let sweep = SweepPlan::new(&points, plan.workloads, plan.systems);
+    let mut r = execute_sweep_with(&sweep, threads, None);
     SuiteResult {
-        workloads: results,
-        compiles: compiled.len(),
-        threads,
+        workloads: r.points.remove(0).workloads,
+        compiles: r.compiles,
+        threads: r.threads,
     }
 }
 
-fn run_cell(plan: &RunPlan, compiled: &[CompiledWorkload], cell: RunSpec) -> RunStats {
-    let ex = Experiment::new(cell.system, plan.cfg.clone());
-    ex.run_compiled(
-        &compiled[cell.workload],
-        plan.workloads[cell.workload].warm_caches,
-    )
-}
-
-/// Owning builder over [`RunPlan`] for multi-run experiments.
+/// Owning builder over [`RunPlan`] for single-config multi-run
+/// experiments.
 pub struct Suite {
     cfg: SystemConfig,
     systems: Vec<SystemKind>,
@@ -284,24 +550,103 @@ impl Suite {
     }
 }
 
+/// Owning builder over [`SweepPlan`] for config-sweep experiments
+/// (fig13/fig14/fig12/ablation and anything the CLI sweeps).
+pub struct Sweep {
+    points: Vec<SweepPoint>,
+    systems: Vec<SystemKind>,
+    workloads: Vec<WorkloadSpec>,
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sweep {
+    /// An empty sweep comparing Baseline and DX100 at each point.
+    pub fn new() -> Self {
+        Sweep {
+            points: Vec::new(),
+            systems: BASE_AND_DX.to_vec(),
+            workloads: Vec::new(),
+        }
+    }
+
+    /// Append one config point.
+    pub fn point(mut self, label: impl Into<String>, cfg: SystemConfig) -> Self {
+        self.points.push(SweepPoint::new(label, cfg));
+        self
+    }
+
+    /// Also run the DMP system at every point.
+    pub fn with_dmp(mut self) -> Self {
+        self.systems = ALL_SYSTEMS.to_vec();
+        self
+    }
+
+    /// Replace the system list.
+    pub fn systems(mut self, systems: &[SystemKind]) -> Self {
+        self.systems = systems.to_vec();
+        self
+    }
+
+    /// Append one workload.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workloads.push(w);
+        self
+    }
+
+    /// Append several workloads.
+    pub fn workloads(mut self, ws: Vec<WorkloadSpec>) -> Self {
+        self.workloads.extend(ws);
+        self
+    }
+
+    /// Borrow as a sweep plan.
+    pub fn plan(&self) -> SweepPlan<'_> {
+        SweepPlan::new(&self.points, &self.workloads, &self.systems)
+    }
+
+    /// Execute with the env-configured thread count and result cache.
+    pub fn execute(&self) -> SweepResult {
+        execute_sweep(&self.plan())
+    }
+
+    /// Execute on exactly `threads` workers against an explicit cache
+    /// (`None` disables caching). Tests use this to avoid process-global
+    /// env coupling.
+    pub fn execute_with(&self, threads: usize, cache: Option<&ResultCache>) -> SweepResult {
+        execute_sweep_with(&self.plan(), threads, cache)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::workloads::micro;
 
     #[test]
-    fn cells_are_workload_major() {
-        let cfg = SystemConfig::table3();
+    fn sweep_cells_are_point_major() {
         let ws = vec![
             micro::gather_full(1024, micro::IndexPattern::Streaming, 1),
             micro::scatter(1024, micro::IndexPattern::Streaming, 2),
         ];
-        let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
+        let points = vec![
+            SweepPoint::new("a", SystemConfig::table3()),
+            SweepPoint::new("b", SystemConfig::table3_8core()),
+        ];
+        let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
         let cells = plan.cells();
-        assert_eq!(cells.len(), 6);
-        assert_eq!((cells[0].workload, cells[0].system.label()), (0, "baseline"));
-        assert_eq!((cells[2].workload, cells[2].system.label()), (0, "dx100"));
-        assert_eq!((cells[3].workload, cells[3].system.label()), (1, "baseline"));
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        // Point-major, then workload-major, then system order.
+        assert_eq!((cells[0].point, cells[0].workload), (0, 0));
+        assert_eq!(cells[0].system, SystemKind::Baseline);
+        assert_eq!((cells[1].point, cells[1].workload), (0, 0));
+        assert_eq!(cells[1].system, SystemKind::Dx100);
+        assert_eq!((cells[2].point, cells[2].workload), (0, 1));
+        assert_eq!((cells[4].point, cells[4].workload), (1, 0));
     }
 
     #[test]
@@ -333,5 +678,35 @@ mod tests {
         assert_eq!(suite.plan().systems, &ALL_SYSTEMS);
         let r = suite.execute_with(1);
         assert_eq!(r.workloads[0].runs.len(), 3);
+    }
+
+    #[test]
+    fn sweep_dedupes_identical_points_and_orders_results() {
+        // Two *identical* config points: the second is served entirely by
+        // within-plan dedup, and both report the same stats.
+        let sweep = Sweep::new()
+            .point("a", SystemConfig::table3())
+            .point("b", SystemConfig::table3())
+            .workload(micro::gather_full(1024, micro::IndexPattern::Streaming, 5));
+        let r = sweep.execute_with(2, None);
+        assert!(!r.cache_enabled);
+        assert_eq!(r.cells(), 4);
+        assert_eq!(r.cache_hits, 0);
+        assert_eq!(r.cache_misses, 4);
+        assert_eq!(r.deduped, 2);
+        assert_eq!(r.compiles, 1);
+        assert_eq!(r.specializations, 1);
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.points[0].label, "a");
+        assert_eq!(r.points[1].label, "b");
+        for (a, b) in r.points[0].workloads[0]
+            .runs
+            .iter()
+            .zip(&r.points[1].workloads[0].runs)
+        {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.events, b.events);
+        }
     }
 }

@@ -34,11 +34,15 @@
 //!   per-kind [`coordinator::SystemVariant`]s plus a kind-agnostic event
 //!   loop producing the paper's metrics.
 //! * [`engine`] — the compile-once / run-many experiment engine: a
-//!   [`engine::Suite`]/[`engine::RunPlan`] API that compiles each workload
-//!   exactly once, shares the compilation across Baseline/DMP/DX100, and
-//!   executes the run matrix on `DX100_THREADS` worker threads with
-//!   deterministic results; plus the shared bench harness
-//!   ([`engine::harness`]) with `BENCH_*.json` emission.
+//!   [`engine::Sweep`]/[`engine::SweepPlan`] API over (config × workload ×
+//!   system) that front-end-compiles each workload exactly once per sweep,
+//!   dedupes DX100 specialization across config points with equal
+//!   compiler-relevant knobs, executes all cells on one `DX100_THREADS`
+//!   worker pool (no per-point barrier) with deterministic results, and
+//!   replays unchanged cells from a persisted result cache
+//!   ([`engine::cache`], `DX100_CACHE`); plus the single-point
+//!   [`engine::Suite`]/[`engine::RunPlan`] wrappers and the shared bench
+//!   harness ([`engine::harness`]) with `BENCH_*.json` emission.
 //! * [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled JAX/Pallas
 //!   tile kernels (`artifacts/*.hlo.txt`) for functionally-executed tiles;
 //!   Python never runs at simulation time.

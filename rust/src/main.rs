@@ -19,6 +19,9 @@
 //! * `DX100_SCALE` — dataset scale for suite/bench runs (default 2).
 //! * `DX100_THREADS` — worker threads for the run matrix (default: all
 //!   available cores). Results are deterministic regardless of the count.
+//! * `DX100_CACHE` — persisted result cache for suite/sweep runs (`1` =
+//!   on, default; `0` = off). Cached results are bit-identical replays.
+//! * `DX100_CACHE_DIR` — cache directory (default `target/dx100-cache`).
 //! * `DX100_BENCH_DIR` — where bench binaries write `BENCH_*.json`.
 
 use dx100::config::SystemConfig;
@@ -263,6 +266,11 @@ fn main() {
                 "  DX100_THREADS=N     worker threads for the run matrix \
                  (default: all cores; results are identical at any N)"
             );
+            println!(
+                "  DX100_CACHE=0|1     persisted result cache for suite/sweep runs \
+                 (default 1; replays are bit-identical)"
+            );
+            println!("  DX100_CACHE_DIR=D   cache directory (default target/dx100-cache)");
             println!("  DX100_BENCH_DIR=D   where bench binaries write BENCH_*.json (default .)");
         }
     }

@@ -5,9 +5,9 @@
 
 use crate::config::SystemConfig;
 use crate::coordinator::{RunStats, SystemKind};
-use crate::engine::{self, RunPlan, Suite, SuiteResult, WorkloadResult};
+use crate::engine::{self, PointResult, RunPlan, SuiteResult, Sweep, SweepResult, WorkloadResult};
 use crate::util::geomean;
-use crate::workloads::{Scale, WorkloadSpec};
+use crate::workloads::{self, Scale, WorkloadSpec};
 
 /// One workload's baseline/DMP/DX100 comparison.
 #[derive(Clone, Debug)]
@@ -90,6 +90,12 @@ pub fn comparisons(result: SuiteResult) -> Vec<Comparison> {
     result.workloads.into_iter().map(comparison_of).collect()
 }
 
+/// Convert one sweep point's results into paper-style comparisons. The
+/// plan must have included the Baseline and Dx100 systems.
+pub fn comparisons_at(point: PointResult) -> Vec<Comparison> {
+    point.workloads.into_iter().map(comparison_of).collect()
+}
+
 /// Run baseline (+DMP) + DX100 for one workload.
 ///
 /// Thin wrapper over [`crate::engine`]: the workload is compiled once and
@@ -106,9 +112,29 @@ pub fn compare_one(w: &WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comp
     comparison_of(result.workloads.remove(0))
 }
 
-/// Run the full 12-workload suite (Figures 9-12): compile-once, threaded.
+/// Run the full 12-workload suite (Figures 9-12) as a single-point sweep:
+/// compile-once, threaded, and served from the persisted result cache
+/// when `DX100_CACHE` permits. Returns the raw [`SweepResult`] so callers
+/// can surface cache/compile accounting (e.g. via
+/// [`crate::engine::harness::Harness::sweep`]).
+pub fn run_suite_sweep(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> SweepResult {
+    let systems: &[SystemKind] = if with_dmp {
+        &engine::ALL_SYSTEMS
+    } else {
+        &engine::BASE_AND_DX
+    };
+    Sweep::new()
+        .point("", cfg.clone())
+        .systems(systems)
+        .workloads(workloads::all(scale))
+        .execute()
+}
+
+/// Run the full 12-workload suite (Figures 9-12): compile-once, threaded,
+/// result-cached (a thin wrapper over [`run_suite_sweep`]).
 pub fn run_suite(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> Vec<Comparison> {
-    comparisons(Suite::paper(cfg.clone(), scale, with_dmp).execute())
+    let mut r = run_suite_sweep(cfg, scale, with_dmp);
+    comparisons_at(r.points.remove(0))
 }
 
 /// Bench scale from `DX100_SCALE` (default 2 — a few seconds per figure).

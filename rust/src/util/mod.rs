@@ -24,6 +24,68 @@ pub fn div_ceil(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// Stable 64-bit FNV-1a hasher for config / workload fingerprints.
+///
+/// `std::hash` offers no stability guarantee across releases, and cache
+/// keys persisted to disk (`target/dx100-cache/`) must not rot when the
+/// toolchain updates, so fingerprinting uses this fixed algorithm. Feed
+/// fields explicitly (no `derive(Hash)`): the byte stream *is* the schema.
+#[derive(Clone, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Start from a seed, so independent fingerprints decorrelate.
+    pub fn with_seed(seed: u64) -> Self {
+        let mut h = Self::new();
+        h.u64(seed);
+        h
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` differ.
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.usize(s.len());
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Human-friendly SI formatting of a count (e.g. 16384 -> "16.4K").
 pub fn si(x: f64) -> String {
     let ax = x.abs();
@@ -41,6 +103,21 @@ pub fn si(x: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_length_prefixed() {
+        // Golden value: FNV-1a of the empty input is the offset basis.
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut a = Fnv::new();
+        a.str("ab").str("c");
+        let mut b = Fnv::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv::new();
+        c.str("ab").str("c");
+        assert_eq!(a.finish(), c.finish());
+        assert_ne!(Fnv::with_seed(1).finish(), Fnv::with_seed(2).finish());
+    }
 
     #[test]
     fn geomean_basic() {

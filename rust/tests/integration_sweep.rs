@@ -1,0 +1,186 @@
+//! Sweep-engine integration: a threaded sweep must be bit-identical to a
+//! serial run of the same plan, and a warm-cache rerun must replay every
+//! cell bit-identically without executing anything.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::RunStats;
+use dx100::engine::cache::ResultCache;
+use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint, SweepResult, BASE_AND_DX};
+use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
+use std::path::PathBuf;
+
+fn small_workloads() -> Vec<WorkloadSpec> {
+    vec![
+        micro::gather_full(4096, micro::IndexPattern::UniformRandom, 11),
+        nas::cg(Scale::test()),
+    ]
+}
+
+/// Two config points that differ in a compiler-relevant knob (tile size),
+/// plus one that differs only in DRAM scheduling visibility.
+fn points() -> Vec<SweepPoint> {
+    let mut small_tile = SystemConfig::table3();
+    small_tile.dx100.tile_elems = 1024;
+    let mut deep_buffer = SystemConfig::table3();
+    deep_buffer.dram.request_buffer = 128;
+    vec![
+        SweepPoint::new("base", SystemConfig::table3()),
+        SweepPoint::new("tile1k", small_tile),
+        SweepPoint::new("buf128", deep_buffer),
+    ]
+}
+
+fn assert_identical(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.workload, b.workload);
+    let ctx = format!("{} on {:?}", a.workload, a.kind);
+    assert_eq!(a.cycles, b.cycles, "cycles differ for {ctx}");
+    assert_eq!(a.instrs, b.instrs, "instrs differ for {ctx}");
+    assert_eq!(a.spin_instrs, b.spin_instrs, "spin differs for {ctx}");
+    assert_eq!(a.dram_reads, b.dram_reads, "dram reads differ for {ctx}");
+    assert_eq!(a.dram_writes, b.dram_writes, "dram writes differ for {ctx}");
+    assert_eq!(a.dram_bytes, b.dram_bytes, "dram bytes differ for {ctx}");
+    assert_eq!(a.events, b.events, "event counts differ for {ctx}");
+    // Derived floats must match to the bit: same inputs, same math.
+    assert_eq!(a.bw_util.to_bits(), b.bw_util.to_bits(), "bw {ctx}");
+    assert_eq!(
+        a.row_hit_rate.to_bits(),
+        b.row_hit_rate.to_bits(),
+        "rbh {ctx}"
+    );
+    assert_eq!(a.occupancy.to_bits(), b.occupancy.to_bits(), "occ {ctx}");
+    assert_eq!(a.mpki.to_bits(), b.mpki.to_bits(), "mpki {ctx}");
+    assert_eq!(a.dx.len(), b.dx.len(), "dx instance count differs {ctx}");
+    for (x, y) in a.dx.iter().zip(&b.dx) {
+        assert_eq!(x.instructions, y.instructions, "dx instrs {ctx}");
+        assert_eq!(x.dram_reads, y.dram_reads, "dx reads {ctx}");
+        assert_eq!(x.inserted_words, y.inserted_words, "dx words {ctx}");
+        assert_eq!(x.indirect_accesses, y.indirect_accesses, "dx ind {ctx}");
+        assert_eq!(x.finish_time, y.finish_time, "dx finish {ctx}");
+    }
+}
+
+fn assert_same_results(a: &SweepResult, b: &SweepResult) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.label, pb.label);
+        assert_eq!(pa.workloads.len(), pb.workloads.len());
+        for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
+            assert_eq!(wa.workload, wb.workload);
+            assert_eq!(wa.runs.len(), wb.runs.len());
+            for (ra, rb) in wa.runs.iter().zip(&wb.runs) {
+                assert_identical(ra, rb);
+            }
+        }
+    }
+}
+
+fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("dx100-sweep-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultCache::at(&dir), dir)
+}
+
+#[test]
+fn threaded_sweep_is_deterministic() {
+    let points = points();
+    let ws = small_workloads();
+    let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
+    let serial = execute_sweep_with(&plan, 1, None);
+    assert_eq!(serial.threads, 1);
+    assert_eq!(serial.cells(), 3 * 2 * 2);
+    // One front end per workload, no matter how many config points.
+    assert_eq!(serial.compiles, ws.len());
+    // base and buf128 share a compile fingerprint; tile1k re-specializes.
+    assert_eq!(serial.specializations, 2 * ws.len());
+    for threads in [2, 4] {
+        let parallel = execute_sweep_with(&plan, threads, None);
+        assert!(parallel.threads >= 2, "expected a threaded run");
+        assert_same_results(&serial, &parallel);
+    }
+}
+
+#[test]
+fn warm_cache_rerun_is_bit_identical_and_runs_nothing() {
+    let points = points();
+    let ws = small_workloads();
+    let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
+    let (cache, dir) = temp_cache("warm");
+
+    let cold = execute_sweep_with(&plan, 2, Some(&cache));
+    assert!(cold.cache_enabled);
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.cache_misses, cold.cells());
+    assert!(cold.compiles > 0);
+
+    let warm = execute_sweep_with(&plan, 2, Some(&cache));
+    assert!(warm.cache_enabled);
+    assert_eq!(warm.cache_hits, warm.cells(), "all cells must hit");
+    assert_eq!(warm.cache_misses, 0);
+    // Nothing left to compile or specialize on a fully warm run.
+    assert_eq!(warm.compiles, 0);
+    assert_eq!(warm.specializations, 0);
+    assert_same_results(&cold, &warm);
+
+    // The cache also serves a serial run identically.
+    let warm_serial = execute_sweep_with(&plan, 1, Some(&cache));
+    assert_eq!(warm_serial.cache_hits, warm_serial.cells());
+    assert_same_results(&cold, &warm_serial);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_does_not_leak_across_configs_or_workloads() {
+    // Populate a cache from one plan, then execute a *different* config
+    // point and workload set against the same directory: everything must
+    // miss (and still produce correct, plan-ordered results).
+    let (cache, dir) = temp_cache("isolate");
+    let base_points = vec![SweepPoint::new("base", SystemConfig::table3())];
+    let ws = vec![micro::gather_full(
+        2048,
+        micro::IndexPattern::UniformRandom,
+        7,
+    )];
+    let first = execute_sweep_with(
+        &SweepPlan::new(&base_points, &ws, &BASE_AND_DX),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(first.cache_hits, 0);
+
+    // Same workload constructor, different size: different fingerprint.
+    let ws2 = vec![micro::gather_full(
+        4096,
+        micro::IndexPattern::UniformRandom,
+        7,
+    )];
+    let other = execute_sweep_with(
+        &SweepPlan::new(&base_points, &ws2, &BASE_AND_DX),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(other.cache_hits, 0, "different workload must not hit");
+
+    // Same workload, different DRAM knob: different full fingerprint.
+    let mut cfg = SystemConfig::table3();
+    cfg.dram.request_buffer = 8;
+    let alt_points = vec![SweepPoint::new("buf8", cfg)];
+    let third = execute_sweep_with(
+        &SweepPlan::new(&alt_points, &ws, &BASE_AND_DX),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(third.cache_hits, 0, "different config must not hit");
+
+    // And the original plan still hits everything.
+    let again = execute_sweep_with(
+        &SweepPlan::new(&base_points, &ws, &BASE_AND_DX),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(again.cache_hits, again.cells());
+    assert_same_results(&first, &again);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

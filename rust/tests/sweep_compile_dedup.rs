@@ -1,0 +1,63 @@
+//! Compile-dedup hooks: across a sweep, the front end must compile each
+//! workload exactly once, and DX100 specialization must run once per
+//! (workload, compile-fingerprint) — config points that agree on the
+//! compiler-relevant knobs (`dx100.*`, `core.num_cores`) share one
+//! specialization.
+//!
+//! This lives in its own test binary on purpose: the hooks are
+//! process-wide counters, and any concurrently-running test that compiles
+//! a workload would make exact assertions flaky.
+
+use dx100::compiler::{compile_invocations, specialize_invocations};
+use dx100::config::SystemConfig;
+use dx100::engine::Sweep;
+use dx100::workloads::micro;
+
+#[test]
+fn sweep_compiles_once_per_workload_and_specializes_per_fingerprint() {
+    // Three config points: two agree on every compiler-relevant knob
+    // (they differ only in the DRAM request buffer, which codegen never
+    // reads) and one changes the tile size (compiler-relevant).
+    let mut deep_buffer = SystemConfig::table3();
+    deep_buffer.dram.request_buffer = 128;
+    let mut small_tile = SystemConfig::table3();
+    small_tile.dx100.tile_elems = 1024;
+
+    let sweep = Sweep::new()
+        .point("base", SystemConfig::table3())
+        .point("buf128", deep_buffer)
+        .point("tile1k", small_tile)
+        .workload(micro::gather_full(
+            4096,
+            micro::IndexPattern::UniformRandom,
+            31,
+        ))
+        .workload(micro::scatter(2048, micro::IndexPattern::Streaming, 32));
+
+    let compiles_before = compile_invocations();
+    let specializes_before = specialize_invocations();
+    let r = sweep.execute_with(3, None);
+    let compiles = compile_invocations() - compiles_before;
+    let specializes = specialize_invocations() - specializes_before;
+
+    // 3 points x 2 workloads x 2 systems = 12 cells...
+    assert_eq!(r.cells(), 12);
+    // ... but the hook sees ONE front-end compile per workload across all
+    // config points,
+    assert_eq!(compiles, 2, "expected one front-end compile per workload");
+    assert_eq!(r.compiles, 2);
+    // ... and one specialization per (workload, compile-fingerprint):
+    // base+buf128 share, tile1k re-specializes.
+    assert_eq!(
+        specializes, 4,
+        "expected base/buf128 to share a specialization"
+    );
+    assert_eq!(r.specializations, 4);
+
+    // A second invocation compiles again: dedup is per sweep execution,
+    // not a process-global cache (the *result* cache is what persists,
+    // and it is explicitly disabled here).
+    let r2 = sweep.execute_with(1, None);
+    assert_eq!(r2.compiles, 2);
+    assert_eq!(compile_invocations() - compiles_before, 4);
+}
