@@ -21,7 +21,7 @@ use dx100::runtime::TileRuntime;
 use dx100::util::Rng;
 use dx100::workloads::{nas, Scale};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error + Send + Sync>> {
     // ---- Layer 1+2 via PJRT: functional SpMV on real (small) data ----
     let rt = TileRuntime::load_default()?;
     println!(

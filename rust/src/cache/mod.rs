@@ -23,21 +23,37 @@ use std::collections::HashSet;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Access {
     /// Hit at L1/L2/LLC; total latency to data return.
-    Hit { level: u8, latency: Cycle },
+    Hit {
+        /// Level that hit (1/2/3).
+        level: u8,
+        /// Total latency to data return.
+        latency: Cycle,
+    },
     /// Line already being fetched; the op merged into the existing miss.
-    MergedMiss { line: u64 },
+    MergedMiss {
+        /// The in-flight line address.
+        line: u64,
+    },
     /// New miss; caller must enqueue a DRAM request for `line` and call
     /// [`Hierarchy::complete_fill`] when it returns. `lookup_latency` is the
     /// tag-check path latency to add before the DRAM access starts.
-    Miss { line: u64, lookup_latency: Cycle },
+    Miss {
+        /// Line address to fetch.
+        line: u64,
+        /// Tag-check latency before the DRAM access starts.
+        lookup_latency: Cycle,
+    },
     /// An MSHR was exhausted; retry after any completion.
     Blocked,
 }
 
 /// Three-level hierarchy: per-core L1D and L2, shared LLC.
 pub struct Hierarchy {
+    /// Per-core L1 data caches.
     pub l1: Vec<Cache>,
+    /// Per-core private L2 caches.
     pub l2: Vec<Cache>,
+    /// Shared last-level cache.
     pub llc: Cache,
     l1_mshr: Vec<MshrFile>,
     l2_mshr: Vec<MshrFile>,
@@ -53,6 +69,7 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
+    /// Build the hierarchy sized by `cfg` (one L1/L2 pair per core).
     pub fn new(cfg: &SystemConfig) -> Self {
         let n = cfg.core.num_cores;
         Hierarchy {
@@ -212,6 +229,7 @@ impl Hierarchy {
         self.l1.iter().map(|c| c.stats.misses).sum()
     }
 
+    /// LLC misses (demand + DX100 Cache-Interface lookups).
     pub fn llc_misses(&self) -> u64 {
         self.llc.stats.misses
     }

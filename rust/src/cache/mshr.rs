@@ -10,6 +10,7 @@ pub struct MshrFile {
 }
 
 impl MshrFile {
+    /// A file with capacity for `cap` outstanding primary misses.
     pub fn new(cap: usize) -> Self {
         MshrFile {
             cap,
@@ -17,10 +18,12 @@ impl MshrFile {
         }
     }
 
+    /// Whether every entry is in use (further misses block).
     pub fn full(&self) -> bool {
         self.entries.len() >= self.cap
     }
 
+    /// Whether `line` already has an outstanding miss.
     pub fn contains(&self, line: u64) -> bool {
         self.entries.contains_key(&line)
     }
@@ -46,10 +49,12 @@ impl MshrFile {
         self.entries.remove(&line).unwrap_or(0)
     }
 
+    /// Outstanding primary misses.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no miss is outstanding.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

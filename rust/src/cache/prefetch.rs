@@ -17,10 +17,12 @@ pub struct StridePrefetcher {
     degree: usize,
     /// Confidence threshold before prefetches are issued.
     threshold: u8,
+    /// Prefetch candidates emitted so far.
     pub issued: u64,
 }
 
 impl StridePrefetcher {
+    /// A prefetcher issuing up to `degree` lines ahead per trigger.
     pub fn new(degree: usize) -> Self {
         StridePrefetcher {
             table: HashMap::new(),

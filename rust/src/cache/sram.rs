@@ -6,11 +6,17 @@ use crate::sim::Cycle;
 /// Per-cache hit/miss statistics.
 #[derive(Clone, Debug, Default)]
 pub struct CacheStats {
+    /// Lookups that found the line.
     pub hits: u64,
+    /// Lookups that did not find the line.
     pub misses: u64,
+    /// Demand fills installed.
     pub fills: u64,
+    /// Prefetch fills installed.
     pub prefetch_fills: u64,
+    /// Valid lines displaced by fills.
     pub evictions: u64,
+    /// Lines removed by [`Cache::invalidate`].
     pub invalidations: u64,
 }
 
@@ -25,10 +31,12 @@ struct Line {
 pub struct Cache {
     sets: Vec<Vec<Line>>,
     set_mask: u64,
+    /// Hit/miss/fill accounting.
     pub stats: CacheStats,
 }
 
 impl Cache {
+    /// Build a cache from a level configuration (64-byte lines).
     pub fn new(cfg: &CacheConfig) -> Self {
         let lines = cfg.size / 64;
         let num_sets = (lines / cfg.ways).max(1);
@@ -122,6 +130,7 @@ impl Cache {
         Some(evicted)
     }
 
+    /// Drop `line` if present (coherence-exclusive handoff to DX100).
     pub fn invalidate(&mut self, line: u64) {
         let set = self.set_of(line);
         for l in &mut self.sets[set] {

@@ -32,18 +32,26 @@ pub enum AccessClass {
 /// One detected load site.
 #[derive(Clone, Debug)]
 pub struct LoadSite {
+    /// Array being loaded.
     pub arr: ArrId,
+    /// How the site indexes the array.
     pub class: AccessClass,
 }
 
 /// Whole-program analysis result.
 #[derive(Clone, Debug, Default)]
 pub struct Analysis {
+    /// Every load site, classified.
     pub loads: Vec<LoadSite>,
+    /// Arrays written anywhere in the loop.
     pub stored_arrays: BTreeSet<ArrId>,
+    /// Arrays read anywhere in the loop.
     pub loaded_arrays: BTreeSet<ArrId>,
+    /// Whether the body contains an inner range loop.
     pub has_range_loop: bool,
+    /// Whether the body contains a conditional statement.
     pub has_condition: bool,
+    /// Deepest indirection chain observed (0 = none).
     pub max_indirection: usize,
 }
 

@@ -36,7 +36,9 @@ use std::sync::Arc;
 /// Behavioural flags forwarded to the experiment driver.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkloadFlags {
+    /// RMWs execute atomically on the multicore baseline.
     pub atomic_rmw: bool,
+    /// The baseline runs on one core (unparallelizable scatter).
     pub single_core_baseline: bool,
 }
 
@@ -58,9 +60,13 @@ pub struct Dx100Run {
 /// the sweep engine shares one interpretation across every DX100
 /// specialization of the same workload (see [`Frontend::with_dx`]).
 pub struct CompiledWorkload {
+    /// Workload name.
     pub name: &'static str,
+    /// Behavioural flags for the driver.
     pub flags: WorkloadFlags,
+    /// Config-independent baseline half (shared across specializations).
     pub baseline: Arc<InterpOutput>,
+    /// The DX100 specialization.
     pub dx: Dx100Run,
 }
 
@@ -70,9 +76,13 @@ pub struct CompiledWorkload {
 /// walks the whole iteration space), and nothing in it depends on
 /// [`SystemConfig`] — one front end serves every config point of a sweep.
 pub struct Frontend {
+    /// Workload name.
     pub name: &'static str,
+    /// Behavioural flags for the driver.
     pub flags: WorkloadFlags,
+    /// Legality / access-pattern analysis of the program.
     pub analysis: Analysis,
+    /// Interpretation output (op streams, DMP hints, memory image).
     pub baseline: Arc<InterpOutput>,
 }
 

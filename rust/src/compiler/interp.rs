@@ -27,10 +27,15 @@ const ADDR_CALC: u16 = 2;
 
 /// Interpreter output.
 pub struct InterpOutput {
+    /// Final memory image after sequential execution.
     pub mem: MemImage,
+    /// Per-core baseline op streams.
     pub streams: Vec<OpStream>,
+    /// Per-core DMP hint tables.
     pub dmp_hints: Vec<DmpHints>,
+    /// Outer-loop iterations executed.
     pub total_iters: u64,
+    /// Inner (range-loop) iterations executed.
     pub total_inner_iters: u64,
 }
 

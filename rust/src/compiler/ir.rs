@@ -23,12 +23,15 @@ pub enum Expr {
 }
 
 impl Expr {
+    /// `arr[idx]`.
     pub fn load(arr: ArrId, idx: Expr) -> Expr {
         Expr::Load(arr, Box::new(idx))
     }
+    /// Binary operation node.
     pub fn bin(op: Op, a: Expr, b: Expr) -> Expr {
         Expr::Bin(op, Box::new(a), Box::new(b))
     }
+    /// A `u32` constant.
     pub fn cu32(v: u32) -> Expr {
         Expr::Const(v as u64, DType::U32)
     }
@@ -68,37 +71,65 @@ pub enum Stmt {
     /// Inner range loop `for j in lo..hi` (j = Iv(1)). Bounds may load
     /// arrays (direct range `H[i]..H[i+1]` or indirect `H[K[i]]..`).
     RangeFor {
+        /// Lower bound expression.
         lo: Expr,
+        /// Upper bound expression.
         hi: Expr,
+        /// Loop body.
         body: Vec<Stmt>,
     },
     /// Conditional execution of `body`.
-    If { cond: Expr, body: Vec<Stmt> },
+    If {
+        /// Condition (non-zero = taken).
+        cond: Expr,
+        /// Guarded statements.
+        body: Vec<Stmt>,
+    },
     /// `A[idx] = val`.
-    Store { arr: ArrId, idx: Expr, val: Expr },
+    Store {
+        /// Target array.
+        arr: ArrId,
+        /// Element index.
+        idx: Expr,
+        /// Stored value.
+        val: Expr,
+    },
     /// `A[idx] op= val` (op must be associative+commutative).
     Rmw {
+        /// Target array.
         arr: ArrId,
+        /// Element index.
         idx: Expr,
+        /// Combining operation.
         op: Op,
+        /// Operand value.
         val: Expr,
     },
     /// Consume a value on the core (`compute(v)`): `cost` models the
     /// per-element arithmetic the core keeps.
-    Sink { val: Expr, cost: u16 },
+    Sink {
+        /// Consumed value.
+        val: Expr,
+        /// Core cycles per element.
+        cost: u16,
+    },
 }
 
 /// A named array bound to a physical region.
 #[derive(Clone, Debug)]
 pub struct Array {
+    /// Array name (diagnostics).
     pub name: &'static str,
+    /// Element type.
     pub dtype: DType,
+    /// Element count.
     pub len: usize,
     /// Physical base address (assigned by `Program::add_array`).
     pub base: u64,
 }
 
 impl Array {
+    /// Physical byte address of element `idx`.
     pub fn addr(&self, idx: u64) -> u64 {
         self.base + idx * self.dtype.size()
     }
@@ -106,16 +137,22 @@ impl Array {
 
 /// Physical placement: arrays live in disjoint huge-page-aligned regions.
 pub const ARRAY_REGION: u64 = 1 << 26; // 64 MiB
+/// Base address of the first array region.
 pub const ARRAY_BASE: u64 = 1 << 26;
 
 /// A complete kernel: arrays + registers + a single outer loop over
 /// `iters` iterations whose body is `body` (Iv(0) = outer index).
 #[derive(Clone, Debug)]
 pub struct Program {
+    /// Kernel name.
     pub name: &'static str,
+    /// Declared arrays.
     pub arrays: Vec<Array>,
+    /// Initial scalar-register values.
     pub regs: Vec<u64>,
+    /// Outer-loop iteration count.
     pub iters: usize,
+    /// Loop-body statements.
     pub body: Vec<Stmt>,
     /// RMWs need atomics on the multicore baseline.
     pub atomic_rmw: bool,
@@ -127,6 +164,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// An empty kernel looping `iters` times.
     pub fn new(name: &'static str, iters: usize) -> Self {
         Program {
             name,
@@ -157,6 +195,7 @@ impl Program {
         self.arrays.len() - 1
     }
 
+    /// Set scalar register `r`'s initial value.
     pub fn set_reg(&mut self, r: u8, v: u64) {
         self.regs[r as usize] = v;
     }

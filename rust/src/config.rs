@@ -44,8 +44,11 @@ pub struct CacheConfig {
 /// CPU cycles @3.2 GHz (= 2x DRAM command-clock cycles @1.6 GHz).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DramConfig {
+    /// Independent DRAM channels (the intra-run sharding unit).
     pub channels: usize,
+    /// Ranks per channel.
     pub ranks: usize,
+    /// Bank groups per rank.
     pub bankgroups: usize,
     /// Banks per bank group.
     pub banks_per_group: usize,
@@ -103,6 +106,16 @@ impl DramConfig {
     pub fn lines_per_row(&self) -> usize {
         self.row_bytes / self.line_bytes
     }
+
+    /// Lower bound on the enqueue-to-completion latency of any request:
+    /// even an open-row CAS pays its CAS latency, the burst, and the
+    /// backend round trip. The coordinator's channel-sharded event loop
+    /// uses this as its time quantum — a scheduler activation inside a
+    /// quantum can only produce completions visible in later quanta, which
+    /// is what makes the front-end and channel phases separable.
+    pub fn min_completion_latency(&self) -> u64 {
+        self.cl.min(self.cwl) + self.t_burst + self.backend_latency
+    }
 }
 
 /// DX100 accelerator parameters (Table 3, "DX100" row).
@@ -146,11 +159,17 @@ impl Dx100Config {
 /// Complete system configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemConfig {
+    /// Core microarchitecture.
     pub core: CoreConfig,
+    /// Per-core L1 data cache.
     pub l1d: CacheConfig,
+    /// Per-core private L2.
     pub l2: CacheConfig,
+    /// Shared last-level cache.
     pub llc: CacheConfig,
+    /// DRAM timing and geometry.
     pub dram: DramConfig,
+    /// DX100 accelerator parameters.
     pub dx100: Dx100Config,
     /// CPU frequency in GHz (informational; time base is CPU cycles).
     pub freq_ghz: f64,

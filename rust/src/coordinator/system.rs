@@ -1,8 +1,32 @@
-//! Full-system event loop.
+//! Full-system event loop, quantum-phased for intra-run channel sharding.
 //!
 //! The per-kind branches (stream selection, accelerator construction,
 //! config adjustment) live on [`SystemVariant`](super::variant::SystemVariant);
 //! this module only assembles the shared machinery and drives events.
+//!
+//! # Execution discipline
+//!
+//! Time advances in bounded **quanta** of `Q =`
+//! [`DramConfig::min_completion_latency`](crate::config::DramConfig::min_completion_latency)
+//! cycles. Each quantum runs two phases:
+//!
+//! 1. **Front end** (always on the event-loop thread): cores, caches,
+//!    prefetchers, and DX100 controllers process every queued event below
+//!    the quantum end, in (time, FIFO) order. Memory requests land in the
+//!    controller's per-channel ingress queues; popped `ChannelSched`
+//!    events become recorded activation times.
+//! 2. **Channels**: each DRAM channel engine independently replays its
+//!    activation times (plus self-wakes) through the FR-FCFS scheduler.
+//!    Because any completion is dated at least `Q` cycles after its
+//!    activation, nothing a channel does in a quantum can feed back into
+//!    the same quantum's front end — the phases are separable.
+//!
+//! With `DX100_SHARDS > 1` phase 2 fans the channel engines out across
+//! worker threads (round-robin by channel index) and merges their event
+//! streams back in channel order. The per-channel work and the merge
+//! order are identical to the serial path, so **sharded runs produce
+//! bit-identical [`RunStats`]** — the engine's result cache and every
+//! figure output are unaffected by the knob.
 
 use super::variant::{DxSetup, SystemVariant};
 use crate::cache::{Hierarchy, StridePrefetcher};
@@ -11,24 +35,37 @@ use crate::config::SystemConfig;
 use crate::core::{CoreEnv, CoreModel, LineWaiters, MmioDelivery};
 use crate::dx100::timing::{Dx100Env, Dx100Stats, Dx100Timing};
 use crate::dx100::NO_TILE;
-use crate::mem::{dram::Completion, MemController, ReqSource};
+use crate::mem::{
+    dram::Completion, ChannelAdvance, ChannelFeed, MemController, ReqSource, ShardChannel,
+};
 use crate::prefetch::DmpHints;
 use crate::sim::{Cycle, Event, EventQueue};
 use crate::workloads::WorkloadSpec;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Which system to simulate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SystemKind {
+    /// Table 3 multicore with stride prefetchers (no accelerator).
     Baseline,
+    /// Baseline plus the DMP-like indirect prefetcher.
     Dmp,
+    /// Baseline (smaller LLC) plus DX100 instances.
     Dx100,
 }
 
 /// Results of one simulation run.
-#[derive(Clone, Debug)]
+///
+/// Every field is a pure function of (configuration, compiled workload,
+/// system kind): neither `DX100_THREADS` nor `DX100_SHARDS` changes any
+/// value here, only wall time (asserted by `tests/integration_shard.rs`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunStats {
+    /// System that produced this run.
     pub kind: SystemKind,
+    /// Workload name.
     pub workload: &'static str,
     /// End-to-end cycles.
     pub cycles: Cycle,
@@ -44,12 +81,16 @@ pub struct RunStats {
     pub occupancy: f64,
     /// LLC misses per kilo-instruction.
     pub mpki: f64,
+    /// DRAM read requests.
     pub dram_reads: u64,
+    /// DRAM write requests.
     pub dram_writes: u64,
+    /// DRAM bytes transferred.
     pub dram_bytes: u64,
     /// Per-instance DX100 stats (DX100 runs only).
     pub dx: Vec<Dx100Stats>,
-    /// Events processed (simulator-performance diagnostics).
+    /// Events processed (simulator-performance diagnostics): front-end
+    /// event pops plus channel scheduler invocations.
     pub events: u64,
 }
 
@@ -63,11 +104,15 @@ impl RunStats {
 /// An experiment: one system kind + configuration.
 #[derive(Clone)]
 pub struct Experiment {
+    /// System to simulate.
     pub kind: SystemKind,
+    /// Configuration, already adjusted for the kind (see
+    /// [`SystemVariant::adjust`](super::variant::SystemVariant::adjust)).
     pub cfg: SystemConfig,
 }
 
 impl Experiment {
+    /// Build an experiment, applying the kind's config adjustment.
     pub fn new(kind: SystemKind, cfg: SystemConfig) -> Self {
         Experiment {
             kind,
@@ -86,14 +131,38 @@ impl Experiment {
         self.run_compiled(&cw, w.warm_caches)
     }
 
+    /// Compile and run with an explicit intra-run shard count (bypasses
+    /// the `DX100_SHARDS` environment knob; tests use this).
+    pub fn run_sharded(&self, w: &WorkloadSpec, shards: usize) -> RunStats {
+        let cw = compile(&w.program, &w.mem, &self.cfg)
+            .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
+        self.run_compiled_sharded(&cw, w.warm_caches, shards)
+    }
+
     /// Run a pre-compiled workload (the engine and benches share one
-    /// compilation across all systems).
+    /// compilation across all systems). The intra-run shard count comes
+    /// from `DX100_SHARDS` (default 1).
     pub fn run_compiled(&self, cw: &CompiledWorkload, warm: bool) -> RunStats {
+        self.run_compiled_sharded(cw, warm, crate::engine::shards_from_env())
+    }
+
+    /// Run a pre-compiled workload with an explicit intra-run shard count.
+    /// The count is clamped to the number of DRAM channels; stats are
+    /// bit-identical at every value.
+    pub fn run_compiled_sharded(
+        &self,
+        cw: &CompiledWorkload,
+        warm: bool,
+        shards: usize,
+    ) -> RunStats {
         let mut sys = System::build(self.kind.variant(), &self.cfg, cw, warm);
-        sys.run();
+        sys.run(shards);
         sys.stats(self.kind, cw.name)
     }
 }
+
+/// Runaway-simulation guard (front-end events processed).
+const GUARD_LIMIT: u64 = 2_000_000_000;
 
 struct System<'a> {
     cfg: &'a SystemConfig,
@@ -235,110 +304,139 @@ impl<'a> System<'a> {
         }
     }
 
-    fn run(&mut self) {
-        for c in 0..self.cores.len() {
-            self.queue.push(0, Event::CoreWake(c));
-        }
-        for i in 0..self.dx.len() {
-            self.queue.push(0, Event::Dx100Wake(i));
-        }
-        let mut t: Cycle = 0;
-        let guard_limit: u64 = 2_000_000_000;
-        while let Some(ev) = self.queue.pop() {
-            self.events += 1;
-            assert!(self.events < guard_limit, "simulation livelock at t={t}");
-            t = ev.time;
-            match ev.event {
-                Event::CoreWake(c) => {
-                    if !self.cores[c].done {
-                        self.wake_core(c, t);
-                    }
+    /// Handle one popped front-end event at time `t`.
+    fn dispatch(&mut self, t: Cycle, event: Event) {
+        match event {
+            Event::CoreWake(c) => {
+                if !self.cores[c].done {
+                    self.wake_core(c, t);
                 }
-                Event::ChannelSched(ch) => {
-                    let (comps, wake) = self.mem.schedule(ch, t);
-                    for comp in comps {
-                        self.routing.insert(comp.id, comp);
-                        self.queue.push(comp.time, Event::DramDone(comp.id));
+            }
+            Event::ChannelSched(ch) => {
+                // Channels advance in the quantum's second phase; here we
+                // only record the requested activation time.
+                self.mem.note_sched(ch, t);
+            }
+            Event::DramDone(id) => {
+                let comp = self.routing.remove(&id).expect("unknown completion");
+                match comp.source {
+                    ReqSource::Core { core, .. } => {
+                        let line = comp.addr >> 6;
+                        self.hier.complete_fill(core, line, t);
+                        self.drain_writebacks(t);
+                        if let Some(ws) = self.waiters.remove(&line) {
+                            for (c, sidx) in ws {
+                                let ready = self.cores[c].complete_mem(sidx, t);
+                                self.queue.push(ready, Event::CoreWake(c));
+                            }
+                        }
+                        // Unblock MSHR-stalled cores.
+                        for c in 0..self.cores.len() {
+                            if self.cores[c].blocked {
+                                self.queue.push(t, Event::CoreWake(c));
+                            }
+                        }
                     }
-                    if let Some(w) = wake {
-                        self.queue.push(w, Event::ChannelSched(ch));
-                    }
-                }
-                Event::DramDone(id) => {
-                    let comp = self.routing.remove(&id).expect("unknown completion");
-                    match comp.source {
-                        ReqSource::Core { core, .. } => {
+                    ReqSource::Prefetch { core } => {
+                        if !comp.is_write && core != usize::MAX {
                             let line = comp.addr >> 6;
-                            self.hier.complete_fill(core, line, t);
+                            self.hier.complete_prefetch_fill(core, line, t);
                             self.drain_writebacks(t);
+                            // Demand accesses may have merged into this
+                            // in-flight prefetch: complete them too.
                             if let Some(ws) = self.waiters.remove(&line) {
                                 for (c, sidx) in ws {
                                     let ready = self.cores[c].complete_mem(sidx, t);
                                     self.queue.push(ready, Event::CoreWake(c));
                                 }
                             }
-                            // Unblock MSHR-stalled cores.
                             for c in 0..self.cores.len() {
                                 if self.cores[c].blocked {
                                     self.queue.push(t, Event::CoreWake(c));
                                 }
                             }
                         }
-                        ReqSource::Prefetch { core } => {
-                            if !comp.is_write && core != usize::MAX {
-                                let line = comp.addr >> 6;
-                                self.hier.complete_prefetch_fill(core, line, t);
-                                self.drain_writebacks(t);
-                                // Demand accesses may have merged into this
-                                // in-flight prefetch: complete them too.
-                                if let Some(ws) = self.waiters.remove(&line) {
-                                    for (c, sidx) in ws {
-                                        let ready = self.cores[c].complete_mem(sidx, t);
-                                        self.queue.push(ready, Event::CoreWake(c));
-                                    }
-                                }
-                                for c in 0..self.cores.len() {
-                                    if self.cores[c].blocked {
-                                        self.queue.push(t, Event::CoreWake(c));
-                                    }
-                                }
-                            }
-                        }
-                        ReqSource::Dx100 { instance, token } => {
-                            self.dx[instance].on_dram_done(
-                                token,
-                                t,
-                                &mut self.mem,
-                                &mut self.queue,
-                            );
-                        }
+                    }
+                    ReqSource::Dx100 { instance, token } => {
+                        self.dx[instance].on_dram_done(token, t, &mut self.mem, &mut self.queue);
                     }
                 }
-                Event::Dx100Wake(i) => {
-                    self.wake_dx(i, t);
-                }
-                Event::Timer(payload) => {
-                    let instance = (payload >> 32) as usize;
-                    let seq = (payload & 0xFFFF_FFFF) as u32;
-                    if self.dx[instance].deliver_part(seq) {
-                        // Fully delivered: clear ready bits of its tiles so
-                        // waiting cores observe the in-progress state.
-                        let inst = &self.dx_programs[instance].instrs[seq as usize].inst;
-                        for tile in inst.dest_tiles() {
-                            self.ready[instance][tile as usize] = false;
-                        }
-                        if inst.dest_tiles().is_empty() && inst.ts1 != NO_TILE {
-                            self.ready[instance][inst.ts1 as usize] = false;
-                        }
+            }
+            Event::Dx100Wake(i) => {
+                self.wake_dx(i, t);
+            }
+            Event::Timer(payload) => {
+                let instance = (payload >> 32) as usize;
+                let seq = (payload & 0xFFFF_FFFF) as u32;
+                if self.dx[instance].deliver_part(seq) {
+                    // Fully delivered: clear ready bits of its tiles so
+                    // waiting cores observe the in-progress state.
+                    let inst = &self.dx_programs[instance].instrs[seq as usize].inst;
+                    for tile in inst.dest_tiles() {
+                        self.ready[instance][tile as usize] = false;
                     }
-                    self.queue.push(t, Event::Dx100Wake(instance));
+                    if inst.dest_tiles().is_empty() && inst.ts1 != NO_TILE {
+                        self.ready[instance][inst.ts1 as usize] = false;
+                    }
                 }
+                self.queue.push(t, Event::Dx100Wake(instance));
             }
-            self.end_time = self.end_time.max(t);
-            // Early exit: everything done and quiet.
-            if self.queue.is_empty() {
-                break;
-            }
+        }
+    }
+
+    /// Phase 1 of a quantum: process every queued front-end event below
+    /// `t_end`, in (time, FIFO) order.
+    fn phase_front(&mut self, t_end: Cycle) {
+        while matches!(self.queue.peek_time(), Some(h) if h < t_end) {
+            let ev = self.queue.pop().expect("peeked event");
+            self.events += 1;
+            assert!(
+                self.events < GUARD_LIMIT,
+                "simulation livelock at t={}",
+                ev.time
+            );
+            self.end_time = self.end_time.max(ev.time);
+            self.dispatch(ev.time, ev.event);
+        }
+    }
+
+    /// Merge one channel's quantum result back into the event stream.
+    /// Callers must absorb advances in channel-index order — that order is
+    /// the determinism contract between serial and sharded execution.
+    fn absorb(&mut self, adv: ChannelAdvance) {
+        self.events += adv.sched_calls;
+        for comp in adv.completions {
+            self.queue.push(comp.time, Event::DramDone(comp.id));
+            self.routing.insert(comp.id, comp);
+        }
+    }
+
+    /// Earliest instant anything in the system wants to run.
+    fn next_quantum_start(&self) -> Option<Cycle> {
+        match (self.queue.peek_time(), self.mem.next_channel_time()) {
+            (None, None) => None,
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    fn run(&mut self, shards: usize) {
+        for c in 0..self.cores.len() {
+            self.queue.push(0, Event::CoreWake(c));
+        }
+        for i in 0..self.dx.len() {
+            self.queue.push(0, Event::Dx100Wake(i));
+        }
+        // Quantum bound: any channel activation at t >= quantum start
+        // completes at or after the quantum end, so front-end and channel
+        // phases never feed back into each other within a quantum.
+        let quantum = self.cfg.dram.min_completion_latency().max(1);
+        let shards = shards.max(1).min(self.mem.num_channels());
+        if shards > 1 {
+            self.run_sharded(quantum, shards);
+        } else {
+            self.run_serial(quantum);
         }
         if !self.cores.iter().all(|c| c.done) {
             for c in &self.cores {
@@ -357,6 +455,108 @@ impl<'a> System<'a> {
         }
     }
 
+    fn run_serial(&mut self, quantum: Cycle) {
+        while let Some(t0) = self.next_quantum_start() {
+            let t_end = t0.saturating_add(quantum);
+            self.phase_front(t_end);
+            if !self.mem.has_channel_work(t_end) {
+                continue;
+            }
+            for ch in 0..self.mem.num_channels() {
+                let adv = self.mem.advance_channel(ch, t_end);
+                self.absorb(adv);
+            }
+        }
+    }
+
+    fn run_sharded(&mut self, quantum: Cycle, nshards: usize) {
+        let nch = self.mem.num_channels();
+        let mut groups: Vec<Vec<ShardChannel>> = (0..nshards).map(|_| Vec::new()).collect();
+        for sc in self.mem.detach_shards() {
+            let g = sc.index() % nshards;
+            groups[g].push(sc);
+        }
+        let owned: Vec<Vec<usize>> = groups
+            .iter()
+            .map(|g| g.iter().map(|sc| sc.index()).collect())
+            .collect();
+        let sync = ShardSync {
+            epoch: AtomicU64::new(0),
+            t_end: AtomicU64::new(0),
+            done: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+        };
+        let mailboxes: Vec<ShardMailbox> = (0..nshards).map(|_| ShardMailbox::default()).collect();
+        let mut returned: Vec<ShardChannel> = Vec::with_capacity(nch);
+        std::thread::scope(|scope| {
+            let sync = &sync;
+            // If this thread unwinds (guard assert, unknown completion...),
+            // release the workers so the scope's implicit join can finish
+            // and the panic propagates instead of hanging.
+            let stop_guard = StopGuard(sync);
+            let handles: Vec<_> = groups
+                .into_iter()
+                .enumerate()
+                .map(|(si, group)| {
+                    let mbox = &mailboxes[si];
+                    scope.spawn(move || shard_worker(group, sync, mbox))
+                })
+                .collect();
+            let mut epoch = 0u64;
+            while let Some(t0) = self.next_quantum_start() {
+                let t_end = t0.saturating_add(quantum);
+                self.phase_front(t_end);
+                if !self.mem.has_channel_work(t_end) {
+                    continue;
+                }
+                // Ship each shard its channels' new work.
+                for (si, chans) in owned.iter().enumerate() {
+                    let mut feeds = mailboxes[si].feeds.lock().unwrap();
+                    for &ch in chans {
+                        let feed = self.mem.take_feed(ch);
+                        if !feed.is_empty() {
+                            feeds.push((ch, feed));
+                        }
+                    }
+                }
+                sync.t_end.store(t_end, Ordering::Release);
+                epoch += 1;
+                sync.epoch.store(epoch, Ordering::Release);
+                // Quanta are ~100 simulated cycles (microseconds of work):
+                // spin rather than park, yielding periodically.
+                let mut spins = 0u32;
+                while sync.done.load(Ordering::Acquire) < nshards {
+                    spins = spins.wrapping_add(1);
+                    if spins % 1024 == 0 {
+                        if handles.iter().any(|h| h.is_finished()) {
+                            panic!("shard worker exited early");
+                        }
+                        std::thread::yield_now();
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                sync.done.store(0, Ordering::Relaxed);
+                // Deterministic merge: channel-index order, exactly like
+                // the serial loop.
+                let mut advs: Vec<ChannelAdvance> = Vec::with_capacity(nch);
+                for mbox in &mailboxes {
+                    advs.append(&mut mbox.out.lock().unwrap());
+                }
+                advs.sort_by_key(|a| a.index);
+                for adv in advs {
+                    self.mem.sync_channel(&adv);
+                    self.absorb(adv);
+                }
+            }
+            drop(stop_guard); // normal exit: stop the workers
+            for h in handles {
+                returned.extend(h.join().expect("shard worker panicked"));
+            }
+        });
+        self.mem.attach_shards(returned);
+    }
+
     fn stats(&self, kind: SystemKind, workload: &'static str) -> RunStats {
         let cycles = self
             .cores
@@ -371,22 +571,93 @@ impl<'a> System<'a> {
         // Core-side MPKI: misses from the private L2s (the shared LLC also
         // serves DX100's Cache-Interface lookups, which are not core misses).
         let l2_misses: u64 = self.hier.l2.iter().map(|c| c.stats.misses).sum();
+        let dram = self.mem.stats();
         RunStats {
             kind,
             workload,
             cycles,
             instrs,
             spin_instrs: spin,
-            bw_util: self.mem.stats.bw_utilization(cycles, &self.cfg.dram),
-            row_hit_rate: self.mem.stats.row_hit_rate(),
+            bw_util: dram.bw_utilization(cycles, &self.cfg.dram),
+            row_hit_rate: dram.row_hit_rate(),
             occupancy: self.mem.mean_occupancy(cycles),
             mpki: l2_misses as f64 / (instrs.max(1) as f64 / 1000.0),
-            dram_reads: self.mem.stats.reads,
-            dram_writes: self.mem.stats.writes,
-            dram_bytes: self.mem.stats.bytes,
+            dram_reads: dram.reads,
+            dram_writes: dram.writes,
+            dram_bytes: dram.bytes,
             dx: self.dx.iter().map(|d| d.stats.clone()).collect(),
             events: self.events,
         }
+    }
+}
+
+/// Epoch-published quantum barrier between the event-loop thread and the
+/// shard workers.
+struct ShardSync {
+    /// Incremented by the main thread to release a quantum.
+    epoch: AtomicU64,
+    /// Quantum end time for the published epoch.
+    t_end: AtomicU64,
+    /// Workers that have finished the published epoch.
+    done: AtomicUsize,
+    /// Tells workers to return their channels and exit.
+    stop: AtomicBool,
+}
+
+/// Sets [`ShardSync::stop`] on drop (including unwinds of the main loop).
+struct StopGuard<'a>(&'a ShardSync);
+
+impl Drop for StopGuard<'_> {
+    fn drop(&mut self) {
+        self.0.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Per-shard work handoff: the main thread fills `feeds` before bumping
+/// the epoch; the worker fills `out` before bumping `done`.
+#[derive(Default)]
+struct ShardMailbox {
+    feeds: Mutex<Vec<(usize, ChannelFeed)>>,
+    out: Mutex<Vec<ChannelAdvance>>,
+}
+
+fn shard_worker(
+    mut group: Vec<ShardChannel>,
+    sync: &ShardSync,
+    mbox: &ShardMailbox,
+) -> Vec<ShardChannel> {
+    let mut seen = 0u64;
+    loop {
+        // Wait for the next quantum (or the stop flag).
+        let mut spins = 0u32;
+        loop {
+            let e = sync.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            if sync.stop.load(Ordering::Acquire) {
+                return group;
+            }
+            spins = spins.wrapping_add(1);
+            if spins % 1024 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let t_end = sync.t_end.load(Ordering::Acquire);
+        let mut feeds = std::mem::take(&mut *mbox.feeds.lock().unwrap());
+        let mut outs = Vec::with_capacity(group.len());
+        for sc in group.iter_mut() {
+            let feed = match feeds.iter().position(|(i, _)| *i == sc.index()) {
+                Some(p) => feeds.swap_remove(p).1,
+                None => ChannelFeed::default(),
+            };
+            outs.push(sc.advance(feed, t_end));
+        }
+        mbox.out.lock().unwrap().extend(outs);
+        sync.done.fetch_add(1, Ordering::AcqRel);
     }
 }
 
@@ -504,6 +775,17 @@ mod tests {
         for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
             let stats = Experiment::new(kind, cfg()).run(&w);
             assert!(stats.cycles > 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_run_matches_serial_on_micro() {
+        let w = micro::gather_full(8192, micro::IndexPattern::UniformRandom, 8);
+        for kind in [SystemKind::Baseline, SystemKind::Dx100] {
+            let ex = Experiment::new(kind, cfg());
+            let serial = ex.run_sharded(&w, 1);
+            let sharded = ex.run_sharded(&w, 2);
+            assert_eq!(serial, sharded, "{kind:?} diverged under sharding");
         }
     }
 }

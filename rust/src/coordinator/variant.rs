@@ -1,6 +1,6 @@
 //! Per-[`SystemKind`] system assembly, factored out of the event loop.
 //!
-//! [`super::system::System`] used to pattern-match on the kind in three
+//! The (private) `System` struct in [`super::system`] used to pattern-match on the kind in three
 //! places (config adjustment, stream selection, accelerator construction).
 //! Each branch now lives on a [`SystemVariant`] implementation, so the
 //! constructor, the event loop, and stat collection are kind-agnostic and
@@ -18,8 +18,11 @@ use crate::prefetch::DmpHints;
 /// Accelerator state built for one run (empty for CPU-only systems):
 /// timing models, their programs, and per-instance tile-ready flags.
 pub struct DxSetup<'a> {
+    /// Timing models, one per instance.
     pub dx: Vec<Dx100Timing>,
+    /// Each instance's program (borrowed from the compiled workload).
     pub programs: Vec<&'a Dx100Program>,
+    /// Per-instance tile-ready flag boards.
     pub ready: Vec<Vec<bool>>,
 }
 
@@ -35,6 +38,7 @@ impl DxSetup<'_> {
 
 /// Behaviour that differs between the simulated comparison points.
 pub trait SystemVariant: Sync {
+    /// The kind this variant implements.
     fn kind(&self) -> SystemKind;
 
     /// Adjust a base configuration for this system (e.g. the DX100 system

@@ -27,11 +27,17 @@ const RMW_MODIFY_LATENCY: Cycle = 2;
 /// Per-core execution statistics.
 #[derive(Clone, Debug, Default)]
 pub struct CoreStats {
+    /// Dynamic instructions retired.
     pub retired_instrs: u64,
+    /// Load ops issued.
     pub loads: u64,
+    /// Store ops issued.
     pub stores: u64,
+    /// Read-modify-write ops issued.
     pub rmws: u64,
+    /// Spin-wait instructions (included in `retired_instrs`).
     pub spin_instrs: u64,
+    /// Cycle the core retired its last op.
     pub finish_time: Cycle,
 }
 
@@ -42,24 +48,34 @@ pub type LineWaiters = HashMap<u64, Vec<(usize, usize)>>;
 /// A DX100 instruction delivery produced by a completed MMIO store triple.
 #[derive(Clone, Copy, Debug)]
 pub struct MmioDelivery {
+    /// Target DX100 instance.
     pub instance: u16,
+    /// Instruction sequence number being delivered.
     pub seq: u32,
+    /// Cycle the store lands at the accelerator.
     pub time: Cycle,
 }
 
 /// Book-keeping the system keeps for an outstanding core DRAM request.
 #[derive(Clone, Copy, Debug)]
 pub struct PendingMem {
+    /// Core that issued the request.
     pub core: usize,
+    /// Stream index of the waiting op.
     pub stream_idx: usize,
 }
 
 /// Mutable environment handed to the core on each wake.
 pub struct CoreEnv<'a> {
+    /// Cache hierarchy shared with the other cores.
     pub hier: &'a mut Hierarchy,
+    /// DRAM controller front end.
     pub mem: &'a mut MemController,
+    /// Event queue for self-scheduled wakes and DRAM activations.
     pub queue: &'a mut EventQueue,
+    /// In-flight line address -> waiting (core, stream index) ops.
     pub waiters: &'a mut LineWaiters,
+    /// This core's stride prefetcher.
     pub prefetcher: &'a mut StridePrefetcher,
     /// Ready-bit board of each DX100 instance: `flags[instance][flag]`.
     pub flags: &'a [Vec<bool>],
@@ -90,6 +106,7 @@ struct RobEntry {
 
 /// One modeled core.
 pub struct CoreModel {
+    /// Core index.
     pub id: usize,
     cfg: CoreConfig,
     next_op: usize,
@@ -101,7 +118,9 @@ pub struct CoreModel {
     issue_time: Cycle,
     slots_left: u32,
     pending_done: BinaryHeap<Reverse<(Cycle, usize)>>,
+    /// Execution statistics.
     pub stats: CoreStats,
+    /// Whether every op of the stream has retired.
     pub done: bool,
     /// Set when an access bounced off a full MSHR; the system re-wakes
     /// blocked cores on every completion.
@@ -113,6 +132,7 @@ pub struct CoreModel {
 }
 
 impl CoreModel {
+    /// A fresh core with an empty window.
     pub fn new(id: usize, cfg: CoreConfig) -> Self {
         CoreModel {
             id,
@@ -512,6 +532,7 @@ impl CoreModel {
         (self.loads_inflight, self.stores_inflight)
     }
 
+    /// Occupied ROB entries (diagnostics).
     pub fn rob_len(&self) -> usize {
         self.rob.len()
     }

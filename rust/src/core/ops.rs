@@ -11,30 +11,59 @@
 pub enum OpKind {
     /// Demand load from `addr`; `stream` tags the access stream for the
     /// stride prefetcher (stand-in for the load PC).
-    Load { addr: u64, stream: u32 },
+    Load {
+        /// Byte address.
+        addr: u64,
+        /// Access-stream tag for the stride prefetcher.
+        stream: u32,
+    },
     /// Store to `addr` (write-allocate).
-    Store { addr: u64, stream: u32 },
+    Store {
+        /// Byte address.
+        addr: u64,
+        /// Access-stream tag for the stride prefetcher.
+        stream: u32,
+    },
     /// Read-modify-write on `addr`. When `atomic`, the op has fence
     /// semantics: it issues only at ROB head and blocks younger memory ops
     /// until done, plus a cacheline-lock penalty.
-    Rmw { addr: u64, atomic: bool },
+    Rmw {
+        /// Byte address.
+        addr: u64,
+        /// Whether the RMW is atomic (fence semantics).
+        atomic: bool,
+    },
     /// Arithmetic block taking `cycles` of latency (dependent work).
-    Compute { cycles: u32 },
+    Compute {
+        /// Latency in cycles.
+        cycles: u32,
+    },
     /// Streaming read of DX100 scratchpad data (cacheable, prefetched;
     /// fixed effective latency, no DRAM traffic).
     SpdLoad,
     /// Memory-mapped store carrying 1/3 of a DX100 instruction; on
     /// completion of the third store, instruction `seq` is delivered to
     /// DX100 instance `instance`.
-    MmioStore { instance: u16, seq: u32 },
+    MmioStore {
+        /// Target DX100 instance.
+        instance: u16,
+        /// Instruction sequence number.
+        seq: u32,
+    },
     /// Spin-wait until DX100 `instance` sets ready flag `flag` (tile ready
     /// bit). Models the library's `wait` API.
-    WaitFlag { instance: u16, flag: u32 },
+    WaitFlag {
+        /// DX100 instance polled.
+        instance: u16,
+        /// Ready-flag index polled.
+        flag: u32,
+    },
 }
 
 /// One abstract operation plus its dependency and instruction weight.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Op {
+    /// What the operation does.
     pub kind: OpKind,
     /// Data dependency: this op may issue only after the op `dep` positions
     /// *earlier in the same core's stream* has completed. 0 = none.
@@ -44,6 +73,8 @@ pub struct Op {
 }
 
 impl Op {
+    /// A demand load on access stream `stream`, weighing `instrs`
+    /// dynamic instructions.
     pub fn load(addr: u64, stream: u32, instrs: u16) -> Self {
         Op {
             kind: OpKind::Load { addr, stream },
@@ -52,6 +83,7 @@ impl Op {
         }
     }
 
+    /// A store on access stream `stream`.
     pub fn store(addr: u64, stream: u32, instrs: u16) -> Self {
         Op {
             kind: OpKind::Store { addr, stream },
@@ -60,6 +92,7 @@ impl Op {
         }
     }
 
+    /// A read-modify-write (optionally atomic, i.e. fence-like).
     pub fn rmw(addr: u64, atomic: bool, instrs: u16) -> Self {
         Op {
             kind: OpKind::Rmw { addr, atomic },
@@ -68,6 +101,7 @@ impl Op {
         }
     }
 
+    /// An arithmetic block of `cycles` latency.
     pub fn compute(cycles: u32, instrs: u16) -> Self {
         Op {
             kind: OpKind::Compute { cycles },
@@ -76,11 +110,13 @@ impl Op {
         }
     }
 
+    /// Attach a relative data dependency (see [`Op::dep`]).
     pub fn with_dep(mut self, dep: u32) -> Self {
         self.dep = dep;
         self
     }
 
+    /// Whether the op occupies a load-queue slot.
     pub fn is_load(&self) -> bool {
         matches!(
             self.kind,
@@ -88,6 +124,7 @@ impl Op {
         )
     }
 
+    /// Whether the op occupies a store-queue slot.
     pub fn is_store(&self) -> bool {
         matches!(
             self.kind,
@@ -95,6 +132,7 @@ impl Op {
         )
     }
 
+    /// Whether the op accesses the cache/DRAM hierarchy.
     pub fn is_mem(&self) -> bool {
         matches!(
             self.kind,
@@ -106,14 +144,17 @@ impl Op {
 /// A complete per-core operation stream.
 #[derive(Clone, Debug, Default)]
 pub struct OpStream {
+    /// The operations, in program order.
     pub ops: Vec<Op>,
 }
 
 impl OpStream {
+    /// An empty stream.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append an op; returns its absolute index.
     pub fn push(&mut self, op: Op) -> usize {
         self.ops.push(op);
         self.ops.len() - 1
@@ -128,10 +169,12 @@ impl OpStream {
         self.push(op)
     }
 
+    /// Number of ops in the stream.
     pub fn len(&self) -> usize {
         self.ops.len()
     }
 
+    /// Whether the stream has no ops.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }

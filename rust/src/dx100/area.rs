@@ -11,12 +11,15 @@ use crate::config::Dx100Config;
 /// Area (mm²) and power (mW) of one component at 28 nm.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ComponentCost {
+    /// Silicon area in square millimetres.
     pub area_mm2: f64,
+    /// Power in milliwatts.
     pub power_mw: f64,
 }
 
 /// Full per-component breakdown (Table 4 rows).
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // field names mirror the Table 4 rows directly
 pub struct AreaReport {
     pub range_fuser: ComponentCost,
     pub alu: ComponentCost,
@@ -92,6 +95,7 @@ impl AreaReport {
         }
     }
 
+    /// The components as (label, cost) rows, in Table 4 order.
     pub fn components(&self) -> Vec<(&'static str, ComponentCost)> {
         vec![
             ("Range Fuser", self.range_fuser),

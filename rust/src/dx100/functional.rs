@@ -15,10 +15,20 @@ use std::fmt;
 /// Execution errors (programming-model violations).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ExecError {
+    /// Tile id out of range.
     BadTile(u8),
+    /// Register id out of range.
     BadRegister(u8),
+    /// IRMW with a non-associative / non-commutative op.
     IllegalRmwOp(Op),
-    RangeOverflow { produced: usize, capacity: usize },
+    /// Range fuser produced more elements than the output tiles hold.
+    RangeOverflow {
+        /// Elements the expansion produced.
+        produced: usize,
+        /// Elements the output tiles hold.
+        capacity: usize,
+    },
+    /// Instruction consumed a tile no prior instruction produced.
     EmptySource(u8),
 }
 
@@ -45,22 +55,37 @@ impl std::error::Error for ExecError {}
 pub enum InstrTrace {
     /// SLD/SST: cache-line addresses touched, in stream order.
     Stream {
+        /// Line addresses, in stream order.
         lines: Vec<u64>,
+        /// Whether this is an SST (write) stream.
         is_store: bool,
+        /// Tile elements the stream covers.
         elems: usize,
     },
     /// ILD/IST/IRMW: word addresses in tile-iteration order (condition
     /// already applied — exactly the accesses the hardware performs).
     Indirect {
+        /// Word addresses in tile-iteration order.
         words: Vec<u64>,
+        /// Whether this is an IST.
         is_store: bool,
+        /// Whether this is an IRMW.
         is_rmw: bool,
+        /// Tile elements the instruction covers.
         elems: usize,
     },
     /// ALUV/ALUS.
-    Alu { elems: usize },
+    Alu {
+        /// Elements processed.
+        elems: usize,
+    },
     /// RNG.
-    Range { in_elems: usize, out_elems: usize },
+    Range {
+        /// Boundary-tile input elements.
+        in_elems: usize,
+        /// Flattened output elements produced.
+        out_elems: usize,
+    },
 }
 
 impl InstrTrace {
@@ -200,11 +225,14 @@ pub fn apply_op(dtype: DType, op: Op, a: u64, b: u64) -> u64 {
 
 /// The functional accelerator state: scratchpad + register file.
 pub struct Dx100Functional {
+    /// Scratchpad tiles.
     pub spd: Scratchpad,
+    /// Scalar register file.
     pub rf: Vec<u64>,
 }
 
 impl Dx100Functional {
+    /// Fresh state with zeroed tiles and registers.
     pub fn new(tiles: usize, tile_elems: usize, registers: usize) -> Self {
         Dx100Functional {
             spd: Scratchpad::new(tiles, tile_elems),

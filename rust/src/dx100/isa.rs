@@ -34,6 +34,7 @@ pub enum Opcode {
 }
 
 impl Opcode {
+    /// Decode an opcode field; `None` for out-of-range values.
     pub fn from_u8(v: u8) -> Option<Self> {
         Some(match v {
             0 => Opcode::Ild,
@@ -62,15 +63,20 @@ impl Opcode {
 /// DX100 functional units (§3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Unit {
+    /// Stream Access unit (SLD/SST, §3.3).
     Stream,
+    /// Indirect Access unit (ILD/IST/IRMW, §3.2).
     Indirect,
+    /// Vector/scalar ALU (§3.4).
     Alu,
+    /// Range Fuser (§3.4).
     RangeFuser,
 }
 
 /// Element data types (Table 2 DTYPE).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
+#[allow(missing_docs)] // self-describing machine scalar types
 pub enum DType {
     U32 = 0,
     I32 = 1,
@@ -81,6 +87,7 @@ pub enum DType {
 }
 
 impl DType {
+    /// Decode a DTYPE field; `None` for out-of-range values.
     pub fn from_u8(v: u8) -> Option<Self> {
         Some(match v {
             0 => DType::U32,
@@ -105,6 +112,7 @@ impl DType {
 /// ALU / RMW operations (Table 2 OP).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
+#[allow(missing_docs)] // self-describing ALU operations
 pub enum Op {
     Add = 0,
     Sub = 1,
@@ -124,6 +132,7 @@ pub enum Op {
 }
 
 impl Op {
+    /// Decode an OP field; `None` for out-of-range values.
     pub fn from_u8(v: u8) -> Option<Self> {
         use Op::*;
         Some(match v {
@@ -161,8 +170,11 @@ impl Op {
 /// A decoded DX100 instruction.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Instruction {
+    /// Operation selector.
     pub opcode: Opcode,
+    /// Element data type.
     pub dtype: DType,
+    /// ALU/RMW operation (ALUV/ALUS/IRMW only).
     pub op: Op,
     /// Base physical address for memory-touching instructions.
     pub base: u64,
@@ -176,9 +188,11 @@ pub struct Instruction {
     pub ts2: u8,
     /// Condition tile (`NO_TILE` = unconditioned).
     pub tc: u8,
-    /// Scalar registers (stream start / stride / count, ALUS operand).
+    /// Scalar register 1 (stream start; ALUS operand).
     pub rs1: u8,
+    /// Scalar register 2 (stream stride).
     pub rs2: u8,
+    /// Scalar register 3 (stream element count).
     pub rs3: u8,
 }
 

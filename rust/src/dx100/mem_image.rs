@@ -16,6 +16,7 @@ pub struct MemImage {
 }
 
 impl MemImage {
+    /// An empty (all-zero) image.
     pub fn new() -> Self {
         Self::default()
     }
@@ -58,34 +59,42 @@ impl MemImage {
         p[off..off + n as usize].copy_from_slice(&value.to_le_bytes()[..n as usize]);
     }
 
+    /// Read a `u32` at `addr`.
     pub fn read_u32(&self, addr: u64) -> u32 {
         self.read_word(addr, 4) as u32
     }
 
+    /// Write a `u32` at `addr`.
     pub fn write_u32(&mut self, addr: u64, v: u32) {
         self.write_word(addr, 4, v as u64);
     }
 
+    /// Read an `f32` at `addr`.
     pub fn read_f32(&self, addr: u64) -> f32 {
         f32::from_bits(self.read_u32(addr))
     }
 
+    /// Write an `f32` at `addr`.
     pub fn write_f32(&mut self, addr: u64, v: f32) {
         self.write_u32(addr, v.to_bits());
     }
 
+    /// Read a `u64` at `addr`.
     pub fn read_u64(&self, addr: u64) -> u64 {
         self.read_word(addr, 8)
     }
 
+    /// Write a `u64` at `addr`.
     pub fn write_u64(&mut self, addr: u64, v: u64) {
         self.write_word(addr, 8, v);
     }
 
+    /// Read an `f64` at `addr`.
     pub fn read_f64(&self, addr: u64) -> f64 {
         f64::from_bits(self.read_u64(addr))
     }
 
+    /// Write an `f64` at `addr`.
     pub fn write_f64(&mut self, addr: u64, v: f64) {
         self.write_u64(addr, v.to_bits());
     }

@@ -10,8 +10,11 @@
 /// One scratchpad tile.
 #[derive(Clone, Debug)]
 pub struct Tile {
+    /// Raw 64-bit element storage.
     pub data: Vec<u64>,
+    /// Valid element count.
     pub size: usize,
+    /// Synchronization bit cores poll.
     pub ready: bool,
 }
 
@@ -19,10 +22,12 @@ pub struct Tile {
 #[derive(Clone, Debug)]
 pub struct Scratchpad {
     tiles: Vec<Tile>,
+    /// Capacity of each tile in elements.
     pub tile_elems: usize,
 }
 
 impl Scratchpad {
+    /// A scratchpad of `tiles` zeroed, ready tiles.
     pub fn new(tiles: usize, tile_elems: usize) -> Self {
         Scratchpad {
             tiles: (0..tiles)
@@ -36,14 +41,17 @@ impl Scratchpad {
         }
     }
 
+    /// Number of tiles.
     pub fn num_tiles(&self) -> usize {
         self.tiles.len()
     }
 
+    /// Borrow tile `id`.
     pub fn tile(&self, id: u8) -> &Tile {
         &self.tiles[id as usize]
     }
 
+    /// Mutably borrow tile `id`.
     pub fn tile_mut(&mut self, id: u8) -> &mut Tile {
         &mut self.tiles[id as usize]
     }
@@ -83,14 +91,17 @@ impl Scratchpad {
         self.tiles[id as usize].size = size;
     }
 
+    /// Valid element count of tile `id`.
     pub fn size_of(&self, id: u8) -> usize {
         self.tiles[id as usize].size
     }
 
+    /// Set tile `id`'s ready bit.
     pub fn set_ready(&mut self, id: u8, ready: bool) {
         self.tiles[id as usize].ready = ready;
     }
 
+    /// Whether tile `id` is ready.
     pub fn is_ready(&self, id: u8) -> bool {
         self.tiles[id as usize].ready
     }

@@ -69,7 +69,9 @@ pub fn enabled_from_env() -> bool {
 /// long-lived on-disk cache).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheKey {
+    /// High 64 bits (seed `0xcache`-derived pass).
     pub hi: u64,
+    /// Low 64 bits (independently seeded pass).
     pub lo: u64,
 }
 
@@ -204,6 +206,7 @@ impl ResultCache {
         Some(ResultCache::at(dir))
     }
 
+    /// Directory the cache persists into.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

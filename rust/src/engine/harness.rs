@@ -32,6 +32,7 @@ struct SweepStats {
     compiles: usize,
     specializations: usize,
     deduped: usize,
+    shards: usize,
     cache_enabled: bool,
     cache_hits: usize,
     cache_misses: usize,
@@ -39,6 +40,7 @@ struct SweepStats {
 
 /// Minimal JSON value.
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // variants mirror the JSON data model directly
 pub enum Json {
     Null,
     Bool(bool),
@@ -51,6 +53,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Serialize to compact JSON text.
     pub fn render(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -83,6 +86,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -90,6 +94,7 @@ impl Json {
         }
     }
 
+    /// Unsigned value, if this is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::UInt(u) => Some(*u),
@@ -98,6 +103,7 @@ impl Json {
         }
     }
 
+    /// Numeric value widened to `f64`, if this is any number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -107,6 +113,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(xs) => Some(xs),
@@ -114,6 +121,7 @@ impl Json {
         }
     }
 
+    /// Whether this is `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -399,6 +407,7 @@ impl Harness {
             compiles: r.compiles,
             specializations: r.specializations,
             deduped: r.deduped,
+            shards: r.shards,
             cache_enabled: r.cache_enabled,
             cache_hits: r.cache_hits,
             cache_misses: r.cache_misses,
@@ -458,6 +467,15 @@ impl Harness {
         }
     }
 
+    /// The intra-run shard count to report: what the recorded sweep
+    /// actually used, falling back to the environment knob for benches
+    /// that run without a sweep.
+    fn shards(&self) -> usize {
+        self.sweep
+            .as_ref()
+            .map_or_else(super::shards_from_env, |s| s.shards)
+    }
+
     /// Finish: print wall time + simulator throughput and write
     /// `BENCH_<name>.json`.
     pub fn finish(self) {
@@ -465,10 +483,11 @@ impl Harness {
         if self.events > 0 {
             let eps = self.events as f64 / wall.max(1e-9);
             println!(
-                "bench wall time {wall:.1}s | {} events | {} events/s | {} threads",
+                "bench wall time {wall:.1}s | {} events | {} events/s | {} threads | {} shards",
                 crate::util::si(self.events as f64),
                 crate::util::si(eps),
                 super::threads_from_env(),
+                self.shards(),
             );
         } else {
             println!("bench wall time {wall:.1}s");
@@ -506,6 +525,7 @@ impl Harness {
     }
 
     fn into_json(self, wall: f64) -> Json {
+        let shards = self.shards();
         let eps = if self.events > 0 {
             Json::Num(self.events as f64 / wall.max(1e-9))
         } else {
@@ -519,6 +539,7 @@ impl Harness {
                 "threads".into(),
                 Json::UInt(super::threads_from_env() as u64),
             ),
+            ("shards".into(), Json::UInt(shards as u64)),
             ("wall_seconds".into(), Json::Num(wall)),
             ("events".into(), Json::UInt(self.events)),
             ("events_per_sec".into(), eps),

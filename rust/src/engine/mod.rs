@@ -63,6 +63,7 @@ pub(crate) fn warn_once(once: &'static Once, name: &str, raw: &str, expect: &str
 
 static WARN_THREADS: Once = Once::new();
 static WARN_SCALE: Once = Once::new();
+static WARN_SHARDS: Once = Once::new();
 
 /// Worker-thread count: `DX100_THREADS` if set (>= 1), else the host's
 /// available parallelism. A malformed value warns once and falls back.
@@ -99,16 +100,38 @@ pub fn scale_from_env() -> Scale {
     }
 }
 
+/// Intra-run shard count from `DX100_SHARDS` (default 1 — no sharding).
+/// Each simulation fans its DRAM channel engines out across this many
+/// worker threads (clamped per run to the channel count); stats are
+/// bit-identical at every value, so the knob deliberately does **not**
+/// enter any cache or dedup fingerprint. A malformed value warns once and
+/// falls back. Note the multiplicative interaction with `DX100_THREADS`:
+/// a sweep can run `DX100_THREADS x DX100_SHARDS` threads at once.
+pub fn shards_from_env() -> usize {
+    match std::env::var("DX100_SHARDS") {
+        Err(_) => 1,
+        Ok(raw) => match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                warn_once(&WARN_SHARDS, "DX100_SHARDS", &raw, "an integer >= 1");
+                1
+            }
+        },
+    }
+}
+
 /// One configuration point of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
     /// Reporting label, e.g. `tile4096` or `8c4ch2x`; may be empty for
     /// single-point plans.
     pub label: String,
+    /// The configuration simulated at this point.
     pub cfg: SystemConfig,
 }
 
 impl SweepPoint {
+    /// A labelled configuration point.
     pub fn new(label: impl Into<String>, cfg: SystemConfig) -> Self {
         SweepPoint {
             label: label.into(),
@@ -124,6 +147,7 @@ pub struct SweepCell {
     pub point: usize,
     /// Index into the plan's workload list.
     pub workload: usize,
+    /// System simulated in this cell.
     pub system: SystemKind,
 }
 
@@ -131,12 +155,16 @@ pub struct SweepCell {
 /// workload runs on every system under every config point.
 #[derive(Clone, Copy)]
 pub struct SweepPlan<'a> {
+    /// Configuration points.
     pub points: &'a [SweepPoint],
+    /// Workloads, each run at every point.
     pub workloads: &'a [WorkloadSpec],
+    /// Systems, each run on every (point, workload).
     pub systems: &'a [SystemKind],
 }
 
 impl<'a> SweepPlan<'a> {
+    /// A plan over borrowed points, workloads, and systems.
     pub fn new(
         points: &'a [SweepPoint],
         workloads: &'a [WorkloadSpec],
@@ -171,6 +199,7 @@ impl<'a> SweepPlan<'a> {
 /// Stats for one workload across the plan's systems.
 #[derive(Clone, Debug)]
 pub struct WorkloadResult {
+    /// Workload name.
     pub workload: &'static str,
     /// One entry per plan system, in plan order.
     pub runs: Vec<RunStats>,
@@ -186,6 +215,7 @@ impl WorkloadResult {
 /// Per-point results of a sweep execution, in plan order.
 #[derive(Clone, Debug)]
 pub struct PointResult {
+    /// The point's reporting label.
     pub label: String,
     /// Per-workload results in plan order.
     pub workloads: Vec<WorkloadResult>,
@@ -203,6 +233,9 @@ pub struct SweepResult {
     pub specializations: usize,
     /// Worker threads used for the cell pool.
     pub threads: usize,
+    /// Intra-run channel shards requested per cell (`DX100_SHARDS`; each
+    /// run clamps to its channel count). Never part of any fingerprint.
+    pub shards: usize,
     /// Cells served from the persisted result cache.
     pub cache_hits: usize,
     /// Cells not in the cache (executed this invocation, or copied from an
@@ -233,24 +266,39 @@ impl SweepResult {
     }
 }
 
-/// Execute `plan` with the env-configured thread count and result cache
-/// (`DX100_THREADS`, `DX100_CACHE`).
+/// Execute `plan` with the env-configured thread count, result cache,
+/// and intra-run shard count (`DX100_THREADS`, `DX100_CACHE`,
+/// `DX100_SHARDS`).
 pub fn execute_sweep(plan: &SweepPlan) -> SweepResult {
     let cache = ResultCache::from_env();
     execute_sweep_with(plan, threads_from_env(), cache.as_ref())
 }
 
-/// Execute `plan` on exactly `threads` worker threads (capped at the
-/// number of cells that actually need to run), consulting `cache` if
-/// given.
-///
-/// Results are bit-identical regardless of `threads` and of cache state:
-/// cells share compiled workloads immutably and each simulation is
-/// deterministic, so only wall time changes.
+/// Execute `plan` on exactly `threads` worker threads, with the intra-run
+/// shard count taken from `DX100_SHARDS`.
 pub fn execute_sweep_with(
     plan: &SweepPlan,
     threads: usize,
     cache: Option<&ResultCache>,
+) -> SweepResult {
+    execute_sweep_sharded(plan, threads, cache, shards_from_env())
+}
+
+/// Execute `plan` on exactly `threads` worker threads (capped at the
+/// number of cells that actually need to run), consulting `cache` if
+/// given, with each cell's simulation sharded `shards` ways across its
+/// DRAM channels.
+///
+/// Results are bit-identical regardless of `threads`, `shards`, and cache
+/// state: cells share compiled workloads immutably and each simulation is
+/// deterministic, so only wall time changes. In particular a sharded run
+/// hits cache entries written by an unsharded run (and vice versa) —
+/// sharding is absent from every fingerprint.
+pub fn execute_sweep_sharded(
+    plan: &SweepPlan,
+    threads: usize,
+    cache: Option<&ResultCache>,
+    shards: usize,
 ) -> SweepResult {
     let cells = plan.cells();
     let mut stats: Vec<Option<RunStats>> = cells.iter().map(|_| None).collect();
@@ -332,9 +380,10 @@ pub fn execute_sweep_with(
     // One pool over every remaining cell of every config point: no
     // per-point barrier, so threads stay busy across the whole sweep.
     let threads = threads.max(1).min(canonical.len().max(1));
+    let shards = shards.max(1);
     if threads <= 1 {
         for &i in &canonical {
-            stats[i] = Some(run_sweep_cell(plan, &specialized, &compile_fp, cells[i]));
+            stats[i] = Some(run_sweep_cell(plan, &specialized, &compile_fp, cells[i], shards));
         }
     } else {
         let next = AtomicUsize::new(0);
@@ -347,7 +396,7 @@ pub fn execute_sweep_with(
                 s.spawn(move || loop {
                     let k = next.fetch_add(1, Ordering::Relaxed);
                     let Some(&i) = canonical.get(k) else { break };
-                    let rs = run_sweep_cell(plan, specialized, compile_fp, cells[i]);
+                    let rs = run_sweep_cell(plan, specialized, compile_fp, cells[i], shards);
                     if tx.send((i, rs)).is_err() {
                         break;
                     }
@@ -396,6 +445,7 @@ pub fn execute_sweep_with(
         compiles,
         specializations,
         threads,
+        shards,
         cache_hits,
         cache_misses: cells.len() - cache_hits,
         deduped: copies.len(),
@@ -408,10 +458,11 @@ fn run_sweep_cell(
     specialized: &HashMap<(u64, usize), CompiledWorkload>,
     compile_fp: &[u64],
     cell: SweepCell,
+    shards: usize,
 ) -> RunStats {
     let cw = &specialized[&(compile_fp[cell.point], cell.workload)];
     let ex = Experiment::new(cell.system, plan.points[cell.point].cfg.clone());
-    ex.run_compiled(cw, plan.workloads[cell.workload].warm_caches)
+    ex.run_compiled_sharded(cw, plan.workloads[cell.workload].warm_caches, shards)
 }
 
 /// A run matrix over borrowed workloads: every workload runs on every
@@ -420,12 +471,16 @@ fn run_sweep_cell(
 /// sweep, so there is a single cell-enumeration code path.
 #[derive(Clone, Copy)]
 pub struct RunPlan<'a> {
+    /// The single configuration every cell runs under.
     pub cfg: &'a SystemConfig,
+    /// Workloads to run.
     pub workloads: &'a [WorkloadSpec],
+    /// Systems to run each workload on.
     pub systems: &'a [SystemKind],
 }
 
 impl<'a> RunPlan<'a> {
+    /// A plan over borrowed workloads and systems.
     pub fn new(
         cfg: &'a SystemConfig,
         workloads: &'a [WorkloadSpec],

@@ -60,6 +60,14 @@
 //! let dx = Experiment::new(SystemKind::Dx100, cfg).run(&wl);
 //! println!("speedup = {:.2}x", base.cycles as f64 / dx.cycles as f64);
 //! ```
+//!
+//! A module-by-module tour with the lifecycle of one experiment cell lives
+//! in `ARCHITECTURE.md` at the repository root.
+
+// Every public item carries rustdoc; CI runs `cargo doc` with
+// `RUSTDOCFLAGS="-D warnings"`, which turns omissions (and broken
+// intra-doc links) into build failures.
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod compiler;

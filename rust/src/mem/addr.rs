@@ -13,10 +13,15 @@ use crate::util::log2_exact;
 /// Decoded DRAM coordinates for one cache line.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct DramCoord {
+    /// Channel index.
     pub channel: u32,
+    /// Rank within the channel.
     pub rank: u32,
+    /// Bank group within the rank.
     pub bankgroup: u32,
+    /// Bank within the bank group.
     pub bank: u32,
+    /// DRAM row (page).
     pub row: u32,
     /// Column in units of cache lines within the row.
     pub col: u32,
@@ -36,18 +41,29 @@ impl DramCoord {
 /// Bit-slicing address map.
 #[derive(Clone, Debug)]
 pub struct AddrMap {
+    /// Bits covering the cache-line offset.
     pub line_bits: u32,
+    /// Channel-select bits (lowest above the line offset).
     pub ch_bits: u32,
+    /// Bank-group-select bits.
     pub bg_bits: u32,
+    /// Bank-select bits.
     pub ba_bits: u32,
+    /// Rank-select bits.
     pub ra_bits: u32,
+    /// Column-select bits (cache lines per row).
     pub co_bits: u32,
+    /// Ranks per channel (for flat-bank arithmetic).
     pub ranks: usize,
+    /// Bank groups per rank.
     pub bankgroups: usize,
+    /// Banks per bank group.
     pub banks_per_group: usize,
 }
 
 impl AddrMap {
+    /// Derive the bit slicing from a DRAM geometry (all sizes must be
+    /// powers of two).
     pub fn new(cfg: &DramConfig) -> Self {
         AddrMap {
             line_bits: log2_exact(cfg.line_bytes as u64),

@@ -14,6 +14,29 @@
 //! * Requests that do not fit in the request buffer wait in an overflow
 //!   queue (this is where LLC-MSHR-side backpressure appears); DX100
 //!   self-throttles instead via [`MemController::space_in`].
+//!
+//! # Channel sharding
+//!
+//! Channels are timing-independent of each other, which the coordinator's
+//! quantum-phased event loop exploits to advance them in parallel inside a
+//! single run (`DX100_SHARDS`). The controller is therefore split in two:
+//!
+//! * A **front end** (owned by the event loop thread): address decode,
+//!   request-id allocation, per-channel ingress queues
+//!   ([`MemController::enqueue`]), the `ChannelSched` dedup guard
+//!   ([`MemController::sched_request`]), and a mirror of each channel's
+//!   request-buffer occupancy so [`MemController::space_in`] answers
+//!   without touching channel state.
+//! * Per-channel **engines** (`Channel`, private): bank/bus timing state,
+//!   the FR-FCFS scheduler, and per-channel [`DramStats`]. An engine is
+//!   advanced through a bounded time quantum with its `advance` routine —
+//!   either in place (serial) or detached onto a worker thread as a
+//!   [`ShardChannel`] (sharded). The advance routine is the *same function*
+//!   in both modes, so sharded stats are bit-identical to unsharded ones.
+//!
+//! The direct [`MemController::enqueue`] + [`MemController::schedule`] API
+//! remains for unit tests and small harnesses that drive the controller
+//! synchronously without the quantum loop.
 
 use super::addr::{AddrMap, DramCoord};
 use crate::config::DramConfig;
@@ -24,31 +47,55 @@ use std::collections::VecDeque;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReqSource {
     /// CPU core demand access. `op` is an opaque token returned on completion.
-    Core { core: usize, op: u64 },
+    Core {
+        /// Issuing core index.
+        core: usize,
+        /// Opaque token returned on completion.
+        op: u64,
+    },
     /// DX100 instance access. `token` identifies the tile element batch.
-    Dx100 { instance: usize, token: u64 },
+    Dx100 {
+        /// Issuing DX100 instance index.
+        instance: usize,
+        /// Opaque token identifying the tile element batch.
+        token: u64,
+    },
     /// Hardware prefetch on behalf of a core.
-    Prefetch { core: usize },
+    Prefetch {
+        /// Core whose prefetcher issued the access.
+        core: usize,
+    },
 }
 
 /// One cache-line-sized DRAM request.
 #[derive(Clone, Copy, Debug)]
 pub struct MemRequest {
+    /// Controller-assigned request id (unique within a run).
     pub id: u64,
+    /// Byte address.
     pub addr: u64,
+    /// Decoded DRAM coordinates of `addr`.
     pub coord: DramCoord,
+    /// Write (true) or read (false).
     pub is_write: bool,
+    /// Cycle the request entered the controller.
     pub arrival: Cycle,
+    /// Requester, echoed back in the [`Completion`].
     pub source: ReqSource,
 }
 
 /// Completion record handed back to the system when data returns.
 #[derive(Clone, Copy, Debug)]
 pub struct Completion {
+    /// Request id (matches [`MemRequest::id`]).
     pub id: u64,
+    /// Byte address of the completed access.
     pub addr: u64,
+    /// Cycle the data is available at the requester.
     pub time: Cycle,
+    /// Whether the completed access was a write.
     pub is_write: bool,
+    /// Original requester.
     pub source: ReqSource,
     /// Whether this access hit the open row (for per-request stats).
     pub row_hit: bool,
@@ -68,28 +115,26 @@ struct BankState {
     ready_cas: Cycle,
 }
 
-struct Channel {
-    buffer: Vec<MemRequest>,
-    overflow: VecDeque<MemRequest>,
-    banks: Vec<BankState>,
-    bus_free: Cycle,
-    bg_last_cas: Vec<Cycle>,
-    last_cas: Cycle,
-    occupancy: TimeWeighted,
-    /// Earliest pending `ChannelSched` event (dedup guard).
-    next_event: Cycle,
-}
-
-/// Aggregated DRAM statistics.
-#[derive(Clone, Debug, Default)]
+/// Aggregated DRAM statistics. Kept per channel internally; the
+/// controller-wide view from [`MemController::stats`] merges channels in
+/// index order, so it is identical at every shard count.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct DramStats {
+    /// Read requests committed.
     pub reads: u64,
+    /// Write requests committed.
     pub writes: u64,
+    /// Accesses that hit an open row.
     pub row_hits: u64,
+    /// Accesses that conflicted with a different open row (PRE+ACT paid).
     pub row_misses: u64,
+    /// Accesses to a closed bank (ACT paid).
     pub row_empty: u64,
+    /// Data bytes transferred.
     pub bytes: u64,
+    /// Sum over requests of commit-time minus arrival-time cycles.
     pub total_queue_latency: u64,
+    /// High-water mark of any channel's overflow queue.
     pub max_overflow: usize,
 }
 
@@ -111,162 +156,86 @@ impl DramStats {
         }
         self.bytes as f64 / (elapsed as f64 * cfg.peak_bytes_per_cycle())
     }
+
+    fn merge(&mut self, other: &DramStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.row_hits += other.row_hits;
+        self.row_misses += other.row_misses;
+        self.row_empty += other.row_empty;
+        self.bytes += other.bytes;
+        self.total_queue_latency += other.total_queue_latency;
+        self.max_overflow = self.max_overflow.max(other.max_overflow);
+    }
 }
 
-/// FR-FCFS DDR4 memory controller covering all channels.
-pub struct MemController {
-    pub cfg: DramConfig,
-    pub map: AddrMap,
-    channels: Vec<Channel>,
-    next_id: u64,
-    pub stats: DramStats,
+/// One channel's timing engine: request buffer, bank/bus state, scheduler,
+/// and per-channel stats. Owns no cross-channel state, so engines advance
+/// independently (the sharding invariant).
+struct Channel {
+    buffer: Vec<MemRequest>,
+    overflow: VecDeque<MemRequest>,
+    banks: Vec<BankState>,
+    bus_free: Cycle,
+    bg_last_cas: Vec<Cycle>,
+    last_cas: Cycle,
+    occupancy: TimeWeighted,
+    /// Carried self-wake: earliest time a buffered request's bank frees.
+    wake: Option<Cycle>,
+    stats: DramStats,
 }
 
-impl MemController {
-    pub fn new(cfg: DramConfig) -> Self {
-        let map = AddrMap::new(&cfg);
+impl Channel {
+    fn new(cfg: &DramConfig) -> Self {
         let banks_per_channel = cfg.ranks * cfg.bankgroups * cfg.banks_per_group;
-        let channels = (0..cfg.channels)
-            .map(|_| Channel {
-                buffer: Vec::with_capacity(cfg.request_buffer),
-                overflow: VecDeque::new(),
-                banks: vec![BankState::default(); banks_per_channel],
-                bus_free: 0,
-                bg_last_cas: vec![0; cfg.ranks * cfg.bankgroups],
-                last_cas: 0,
-                occupancy: TimeWeighted::new(0, 0.0),
-                next_event: Cycle::MAX,
-            })
-            .collect();
-        MemController {
-            map,
-            cfg,
-            channels,
-            next_id: 0,
+        Channel {
+            buffer: Vec::with_capacity(cfg.request_buffer),
+            overflow: VecDeque::new(),
+            banks: vec![BankState::default(); banks_per_channel],
+            bus_free: 0,
+            bg_last_cas: vec![0; cfg.ranks * cfg.bankgroups],
+            last_cas: 0,
+            occupancy: TimeWeighted::new(0, 0.0),
+            wake: None,
             stats: DramStats::default(),
         }
     }
 
-    fn bank_index(&self, c: &DramCoord) -> usize {
-        ((c.rank as usize * self.cfg.bankgroups + c.bankgroup as usize)
-            * self.cfg.banks_per_group)
+    fn bank_index(cfg: &DramConfig, c: &DramCoord) -> usize {
+        ((c.rank as usize * cfg.bankgroups + c.bankgroup as usize) * cfg.banks_per_group)
             + c.bank as usize
     }
 
-    fn bg_index(&self, c: &DramCoord) -> usize {
-        c.rank as usize * self.cfg.bankgroups + c.bankgroup as usize
-    }
-
-    /// Channel a byte address maps to.
-    pub fn channel_of(&self, addr: u64) -> usize {
-        self.map.decode(addr).channel as usize
-    }
-
-    /// Free request-buffer slots in channel `ch` (used by DX100 to
-    /// self-throttle and keep the buffer exactly full).
-    pub fn space_in(&self, ch: usize) -> usize {
-        self.cfg.request_buffer - self.channels[ch].buffer.len()
-    }
-
-    /// Current request-buffer length (for tests / introspection).
-    pub fn buffer_len(&self, ch: usize) -> usize {
-        self.channels[ch].buffer.len()
-    }
-
-    /// Pending overflow (backpressured) requests in a channel.
-    pub fn overflow_len(&self, ch: usize) -> usize {
-        self.channels[ch].overflow.len()
-    }
-
-    /// Enqueue a request. Returns its id. The caller must schedule a
-    /// `ChannelSched` event for `coord.channel` at the current time.
-    pub fn enqueue(
-        &mut self,
-        t: Cycle,
-        addr: u64,
-        is_write: bool,
-        source: ReqSource,
-    ) -> u64 {
-        let coord = self.map.decode(addr);
-        let id = self.next_id;
-        self.next_id += 1;
-        let req = MemRequest {
-            id,
-            addr,
-            coord,
-            is_write,
-            arrival: t,
-            source,
-        };
-        let cap = self.cfg.request_buffer;
-        let chi = coord.channel as usize;
-        let ch = &mut self.channels[chi];
-        if ch.buffer.len() < cap {
-            ch.buffer.push(req);
-            self.update_occupancy(chi, t);
+    /// Accept one request into the buffer (or the overflow queue when the
+    /// FR-FCFS window is full) — the channel-side half of
+    /// [`MemController::enqueue`].
+    fn admit(&mut self, cfg: &DramConfig, req: MemRequest) {
+        let t = req.arrival;
+        if self.buffer.len() < cfg.request_buffer {
+            self.buffer.push(req);
+            self.update_occupancy(t);
         } else {
-            ch.overflow.push_back(req);
-            self.stats.max_overflow = self.stats.max_overflow.max(ch.overflow.len());
-        }
-        id
-    }
-
-    /// Run the scheduler for channel `ch` at time `t`: commit every request
-    /// whose bank is available, in FR-FCFS priority order. Returns the
-    /// completions produced (future-dated) and the next wake time, if any
-    /// work remains.
-    pub fn schedule(&mut self, ch: usize, t: Cycle) -> (Vec<Completion>, Option<Cycle>) {
-        let mut completions = Vec::new();
-        if self.channels[ch].next_event <= t {
-            self.channels[ch].next_event = Cycle::MAX;
-        }
-        self.update_occupancy(ch, t);
-        loop {
-            let pick = self.pick_request(ch, t);
-            let Some(idx) = pick else { break };
-            let req = self.channels[ch].buffer.swap_remove(idx);
-            // Refill the FR-FCFS window from the overflow queue.
-            if let Some(next) = self.channels[ch].overflow.pop_front() {
-                self.channels[ch].buffer.push(next);
-            }
-            let chan = &mut self.channels[ch];
-            let completion = Self::commit(&self.cfg, chan, &req, t, &mut self.stats);
-            self.stats.total_queue_latency += completion.time.saturating_sub(req.arrival);
-            completions.push(completion);
-            self.update_occupancy(ch, t);
-        }
-        let wake = self.next_wake(ch).filter(|&w| self.sched_request(ch, w));
-        (completions, wake)
-    }
-
-    /// Dedup guard for `ChannelSched` events: returns true iff the caller
-    /// should actually push an event at `t` (none earlier is pending).
-    pub fn sched_request(&mut self, ch: usize, t: Cycle) -> bool {
-        if t < self.channels[ch].next_event {
-            self.channels[ch].next_event = t;
-            true
-        } else {
-            false
+            self.overflow.push_back(req);
+            self.stats.max_overflow = self.stats.max_overflow.max(self.overflow.len());
         }
     }
 
     /// Occupancy = waiting requests + committed requests whose CAS has not
     /// yet issued (they still hold a request-buffer slot in real hardware).
-    fn update_occupancy(&mut self, ch: usize, t: Cycle) {
-        let chan = &mut self.channels[ch];
-        let committed = chan.banks.iter().filter(|b| b.busy_until > t).count();
-        chan.occupancy
-            .set(t, (chan.buffer.len() + committed) as f64);
+    fn update_occupancy(&mut self, t: Cycle) {
+        let committed = self.banks.iter().filter(|b| b.busy_until > t).count();
+        self.occupancy.set(t, (self.buffer.len() + committed) as f64);
     }
 
-    /// FR-FCFS pick: among requests whose bank is available at `t`, prefer
-    /// open-row hits, then oldest arrival.
-    fn pick_request(&self, ch: usize, t: Cycle) -> Option<usize> {
-        let chan = &self.channels[ch];
+    /// FR-FCFS pick: among requests that have arrived by `t` and whose bank
+    /// is available at `t`, prefer open-row hits, then oldest arrival. The
+    /// arrival gate matters because a quantum advance admits the whole
+    /// quantum's requests up front — the scheduler must not see the future.
+    fn pick_request(&self, cfg: &DramConfig, t: Cycle) -> Option<usize> {
         let mut best: Option<(bool, Cycle, usize)> = None; // (is_hit, arrival, idx)
-        for (i, r) in chan.buffer.iter().enumerate() {
-            let b = &chan.banks[self.bank_index(&r.coord)];
-            if t < b.busy_until {
+        for (i, r) in self.buffer.iter().enumerate() {
+            let b = &self.banks[Self::bank_index(cfg, &r.coord)];
+            if t < b.busy_until || t < r.arrival {
                 continue;
             }
             let hit = b.open_row == Some(r.coord.row);
@@ -286,22 +255,37 @@ impl MemController {
         best.map(|(_, _, i)| i)
     }
 
+    /// Run the scheduler at time `t`: commit every request whose bank is
+    /// available, in FR-FCFS priority order, appending the (future-dated)
+    /// completions to `out`. Leaves [`Channel::wake`] at the next time any
+    /// remaining buffered request's bank frees.
+    fn schedule_at(&mut self, cfg: &DramConfig, t: Cycle, out: &mut Vec<Completion>) {
+        self.update_occupancy(t);
+        loop {
+            let Some(idx) = self.pick_request(cfg, t) else {
+                break;
+            };
+            let req = self.buffer.swap_remove(idx);
+            // Refill the FR-FCFS window from the overflow queue.
+            if let Some(next) = self.overflow.pop_front() {
+                self.buffer.push(next);
+            }
+            let completion = self.commit(cfg, &req, t);
+            self.stats.total_queue_latency += completion.time.saturating_sub(req.arrival);
+            out.push(completion);
+            self.update_occupancy(t);
+        }
+        self.wake = self.next_wake(cfg);
+    }
+
     /// Commit one request: compute its full command timeline and update bank
     /// / channel resource state.
-    fn commit(
-        cfg: &DramConfig,
-        chan: &mut Channel,
-        req: &MemRequest,
-        t: Cycle,
-        stats: &mut DramStats,
-    ) -> Completion {
-        let bi = ((req.coord.rank as usize * cfg.bankgroups + req.coord.bankgroup as usize)
-            * cfg.banks_per_group)
-            + req.coord.bank as usize;
+    fn commit(&mut self, cfg: &DramConfig, req: &MemRequest, t: Cycle) -> Completion {
+        let bi = Self::bank_index(cfg, &req.coord);
         let bgi = req.coord.rank as usize * cfg.bankgroups + req.coord.bankgroup as usize;
 
         let (cas_ready, row_hit, activated_at) = {
-            let b = &chan.banks[bi];
+            let b = &self.banks[bi];
             let act_floor = if b.activated {
                 b.last_act + cfg.t_rc
             } else {
@@ -313,35 +297,35 @@ impl MemController {
                     // Conflict: PRE then ACT then CAS.
                     let pre_t = b.ready_pre.max(t);
                     let act_t = (pre_t + cfg.t_rp).max(act_floor);
-                    stats.row_misses += 1;
+                    self.stats.row_misses += 1;
                     (act_t + cfg.t_rcd, false, Some(act_t))
                 }
                 None => {
                     // Empty: ACT then CAS.
                     let act_t = t.max(act_floor);
-                    stats.row_empty += 1;
+                    self.stats.row_empty += 1;
                     (act_t + cfg.t_rcd, false, Some(act_t))
                 }
             }
         };
         if row_hit {
-            stats.row_hits += 1;
+            self.stats.row_hits += 1;
         }
 
         // CAS-to-CAS constraints: tCCD_L within the bank group, tCCD_S across.
         let mut cas_t = cas_ready
-            .max(chan.bg_last_cas[bgi] + cfg.t_ccd_l)
-            .max(chan.last_cas + cfg.t_ccd_s);
+            .max(self.bg_last_cas[bgi] + cfg.t_ccd_l)
+            .max(self.last_cas + cfg.t_ccd_s);
         // Data-bus serialization.
         let cas_latency = if req.is_write { cfg.cwl } else { cfg.cl };
-        if cas_t + cas_latency < chan.bus_free {
-            cas_t = chan.bus_free - cas_latency;
+        if cas_t + cas_latency < self.bus_free {
+            cas_t = self.bus_free - cas_latency;
         }
         let data_start = cas_t + cas_latency;
         let data_end = data_start + cfg.t_burst;
 
         // State updates.
-        let b = &mut chan.banks[bi];
+        let b = &mut self.banks[bi];
         b.open_row = Some(req.coord.row);
         if let Some(act) = activated_at {
             b.last_act = act;
@@ -354,15 +338,15 @@ impl MemController {
             (b.last_act + cfg.t_ras).max(cas_t + cfg.t_rtp)
         };
         b.busy_until = cas_t;
-        chan.bg_last_cas[bgi] = cas_t;
-        chan.last_cas = cas_t;
-        chan.bus_free = data_end;
+        self.bg_last_cas[bgi] = cas_t;
+        self.last_cas = cas_t;
+        self.bus_free = data_end;
 
-        stats.bytes += cfg.line_bytes as u64;
+        self.stats.bytes += cfg.line_bytes as u64;
         if req.is_write {
-            stats.writes += 1;
+            self.stats.writes += 1;
         } else {
-            stats.reads += 1;
+            self.stats.reads += 1;
         }
 
         Completion {
@@ -375,30 +359,415 @@ impl MemController {
         }
     }
 
-    /// Earliest time any buffered request's bank becomes available.
-    fn next_wake(&self, ch: usize) -> Option<Cycle> {
-        let chan = &self.channels[ch];
-        chan.buffer
+    /// Earliest time any buffered request both has arrived and has an
+    /// available bank. The arrival floor keeps the activation loop
+    /// strictly advancing: without it, a not-yet-arrived request on a free
+    /// bank would report a wake at or before the current activation.
+    fn next_wake(&self, cfg: &DramConfig) -> Option<Cycle> {
+        self.buffer
             .iter()
-            .map(|r| chan.banks[self.bank_index(&r.coord)].busy_until)
+            .map(|r| {
+                self.banks[Self::bank_index(cfg, &r.coord)]
+                    .busy_until
+                    .max(r.arrival)
+            })
             .min()
     }
 
-    /// Whether any channel still has buffered or overflowed requests.
-    pub fn has_pending(&self) -> bool {
-        self.channels
+    /// Advance this channel through the quantum ending at `t_end`: admit the
+    /// front end's new requests, then run the scheduler at every requested
+    /// activation time and self-wake below `t_end`, in time order.
+    ///
+    /// This is the single advance routine shared by the serial and sharded
+    /// execution paths — bit-identical results at every shard count follow
+    /// from channels sharing no state and this function being deterministic.
+    fn advance(
+        &mut self,
+        cfg: &DramConfig,
+        index: usize,
+        feed: ChannelFeed,
+        t_end: Cycle,
+    ) -> ChannelAdvance {
+        // Admissions interleave with activations in arrival order so the
+        // time-weighted occupancy samples stay monotone (a future-dated
+        // request admitted early would clamp every earlier sample forward).
+        // The stable sort keeps enqueue order among equal arrivals, so the
+        // FR-FCFS age tie-break is unchanged.
+        let mut inbox = feed.requests;
+        inbox.sort_by_key(|r| r.arrival);
+        let mut ri = 0usize;
+        let mut completions = Vec::new();
+        let mut sched_calls = 0u64;
+        let mut si = 0usize;
+        loop {
+            // Next activation: earliest of the front end's requested times
+            // and the carried self-wake.
+            let mut t = self.wake;
+            if let Some(&s) = feed.scheds.get(si) {
+                t = Some(t.map_or(s, |w| w.min(s)));
+            }
+            let Some(t) = t.filter(|&x| x < t_end) else {
+                break;
+            };
+            while feed.scheds.get(si).is_some_and(|&s| s <= t) {
+                si += 1;
+            }
+            while inbox.get(ri).is_some_and(|r| r.arrival <= t) {
+                self.admit(cfg, inbox[ri]);
+                ri += 1;
+            }
+            // No need to clear `wake` here: `schedule_at` always ends by
+            // recomputing it from the remaining buffered requests.
+            self.schedule_at(cfg, t, &mut completions);
+            sched_calls += 1;
+        }
+        // Requests arriving after the last activation (future-dated
+        // enqueues whose activation lands in a later quantum): admit them
+        // now — still in arrival order, still monotone — and fold their
+        // arrival-floored wake in so the outer loop knows to come back.
+        if ri < inbox.len() {
+            while let Some(&req) = inbox.get(ri) {
+                self.admit(cfg, req);
+                ri += 1;
+            }
+            self.wake = self.next_wake(cfg);
+        }
+        // Every requested activation is below its quantum's end by
+        // construction (it was a popped event time); nothing may remain.
+        debug_assert_eq!(si, feed.scheds.len(), "channel {index}: sched beyond quantum");
+        debug_assert!(
+            completions.iter().all(|c| c.time >= t_end),
+            "channel {index}: completion inside its own quantum"
+        );
+        ChannelAdvance {
+            index,
+            completions,
+            sched_calls,
+            buffer_len: self.buffer.len(),
+            overflow_len: self.overflow.len(),
+            next_time: self.wake,
+        }
+    }
+}
+
+/// New work for one channel, drained from the controller front end at a
+/// quantum boundary ([`MemController::take_feed`]).
+#[derive(Debug, Default)]
+pub struct ChannelFeed {
+    /// Newly enqueued requests, in arrival order.
+    requests: Vec<MemRequest>,
+    /// Requested scheduler activation times (popped `ChannelSched` events),
+    /// nondecreasing.
+    scheds: Vec<Cycle>,
+}
+
+impl ChannelFeed {
+    /// Whether this feed carries neither requests nor activations.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty() && self.scheds.is_empty()
+    }
+}
+
+/// Result of advancing one channel through a quantum.
+#[derive(Debug)]
+pub struct ChannelAdvance {
+    /// Channel index (restores deterministic merge order).
+    pub index: usize,
+    /// Completions produced; all dated at or after the quantum end.
+    pub completions: Vec<Completion>,
+    /// Scheduler invocations performed (counted into `RunStats::events`).
+    pub sched_calls: u64,
+    /// Request-buffer length after the quantum (front-end mirror refresh).
+    pub buffer_len: usize,
+    /// Overflow-queue length after the quantum (front-end mirror refresh).
+    pub overflow_len: usize,
+    /// The channel's next self-activation time, if any work remains.
+    pub next_time: Option<Cycle>,
+}
+
+/// One detached channel engine, advanced on a shard worker thread. Created
+/// by [`MemController::detach_shards`]; every instance must be returned via
+/// [`MemController::attach_shards`] before stats are collected.
+pub struct ShardChannel {
+    index: usize,
+    cfg: DramConfig,
+    channel: Channel,
+}
+
+impl ShardChannel {
+    /// Index of the channel this engine models.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Advance through the quantum ending at `t_end` (see [`MemController`]
+    /// module docs for the determinism contract).
+    pub fn advance(&mut self, feed: ChannelFeed, t_end: Cycle) -> ChannelAdvance {
+        self.channel.advance(&self.cfg, self.index, feed, t_end)
+    }
+}
+
+/// Front-end (event-loop-side) view of one channel: ingress queues, the
+/// `ChannelSched` dedup guard, and an occupancy mirror kept consistent at
+/// quantum boundaries so `space_in` never reads channel-owned state.
+#[derive(Debug)]
+struct FrontChannel {
+    inbox: Vec<MemRequest>,
+    scheds: Vec<Cycle>,
+    /// Mirror of the channel's request-buffer length: channel-side value as
+    /// of the last sync, plus requests enqueued since.
+    buffer_len: usize,
+    /// Mirror of the channel's overflow-queue length (same discipline).
+    overflow_len: usize,
+    /// Earliest pending `ChannelSched` event (dedup guard).
+    next_event: Cycle,
+    /// The channel's next self-activation, as of the last sync.
+    next_time: Option<Cycle>,
+}
+
+impl FrontChannel {
+    fn new() -> Self {
+        FrontChannel {
+            inbox: Vec::new(),
+            scheds: Vec::new(),
+            buffer_len: 0,
+            overflow_len: 0,
+            next_event: Cycle::MAX,
+            next_time: None,
+        }
+    }
+}
+
+/// FR-FCFS DDR4 memory controller covering all channels (front end plus
+/// per-channel engines; see the module docs for the split).
+pub struct MemController {
+    /// DRAM timing and geometry.
+    pub cfg: DramConfig,
+    /// Address-to-coordinate mapping.
+    pub map: AddrMap,
+    channels: Vec<Channel>,
+    detached: bool,
+    front: Vec<FrontChannel>,
+    next_id: u64,
+}
+
+impl MemController {
+    /// Build a controller with one engine per configured channel.
+    pub fn new(cfg: DramConfig) -> Self {
+        let map = AddrMap::new(&cfg);
+        let channels = (0..cfg.channels).map(|_| Channel::new(&cfg)).collect();
+        let front = (0..cfg.channels).map(|_| FrontChannel::new()).collect();
+        MemController {
+            map,
+            cfg,
+            channels,
+            detached: false,
+            front,
+            next_id: 0,
+        }
+    }
+
+    /// Channel a byte address maps to.
+    pub fn channel_of(&self, addr: u64) -> usize {
+        self.map.decode(addr).channel as usize
+    }
+
+    /// Free request-buffer slots in channel `ch` (used by DX100 to
+    /// self-throttle and keep the buffer exactly full). Front-end view:
+    /// consistent as of the last quantum boundary plus enqueues since.
+    pub fn space_in(&self, ch: usize) -> usize {
+        self.cfg.request_buffer - self.front[ch].buffer_len
+    }
+
+    /// Current request-buffer length (for tests / introspection).
+    pub fn buffer_len(&self, ch: usize) -> usize {
+        self.front[ch].buffer_len
+    }
+
+    /// Pending overflow (backpressured) requests in a channel.
+    pub fn overflow_len(&self, ch: usize) -> usize {
+        self.front[ch].overflow_len
+    }
+
+    /// Enqueue a request. Returns its id. The caller must arrange a
+    /// `ChannelSched` activation for `coord.channel` at the request time
+    /// (see [`MemController::sched_request`]).
+    pub fn enqueue(&mut self, t: Cycle, addr: u64, is_write: bool, source: ReqSource) -> u64 {
+        let coord = self.map.decode(addr);
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = MemRequest {
+            id,
+            addr,
+            coord,
+            is_write,
+            arrival: t,
+            source,
+        };
+        let f = &mut self.front[coord.channel as usize];
+        // Mirror the channel-side buffer/overflow split so `space_in`
+        // stays accurate without reading channel state.
+        if f.buffer_len < self.cfg.request_buffer {
+            f.buffer_len += 1;
+        } else {
+            f.overflow_len += 1;
+        }
+        f.inbox.push(req);
+        id
+    }
+
+    /// Dedup guard for `ChannelSched` events: returns true iff the caller
+    /// should actually push an event at `t` (none earlier is pending).
+    pub fn sched_request(&mut self, ch: usize, t: Cycle) -> bool {
+        if t < self.front[ch].next_event {
+            self.front[ch].next_event = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a popped `ChannelSched(ch)` event at time `t`: releases the
+    /// dedup guard and queues the activation for the channel's next
+    /// quantum advance.
+    pub fn note_sched(&mut self, ch: usize, t: Cycle) {
+        let f = &mut self.front[ch];
+        if f.next_event <= t {
+            f.next_event = Cycle::MAX;
+        }
+        f.scheds.push(t);
+    }
+
+    /// Drain channel `ch`'s pending requests and activation times for a
+    /// quantum advance.
+    pub fn take_feed(&mut self, ch: usize) -> ChannelFeed {
+        let f = &mut self.front[ch];
+        ChannelFeed {
+            requests: std::mem::take(&mut f.inbox),
+            scheds: std::mem::take(&mut f.scheds),
+        }
+    }
+
+    /// Whether any channel has work below `t_end`: a pending activation
+    /// request or a self-wake. A non-empty inbox alone does *not* count —
+    /// a request with no activation this quantum is shipped together with
+    /// its (strictly later) `ChannelSched` event.
+    pub fn has_channel_work(&self, t_end: Cycle) -> bool {
+        self.front
             .iter()
-            .any(|c| !c.buffer.is_empty() || !c.overflow.is_empty())
+            .any(|f| !f.scheds.is_empty() || f.next_time.is_some_and(|w| w < t_end))
+    }
+
+    /// Earliest self-activation time across channels (quantum scheduling).
+    pub fn next_channel_time(&self) -> Option<Cycle> {
+        self.front.iter().filter_map(|f| f.next_time).min()
+    }
+
+    /// Refresh channel `ch`'s front-end mirror from a quantum-advance
+    /// result.
+    pub fn sync_channel(&mut self, adv: &ChannelAdvance) {
+        let f = &mut self.front[adv.index];
+        f.buffer_len = adv.buffer_len;
+        f.overflow_len = adv.overflow_len;
+        f.next_time = adv.next_time;
+    }
+
+    /// Advance channel `ch` in place through the quantum ending at `t_end`
+    /// (the serial counterpart of [`ShardChannel::advance`]).
+    pub fn advance_channel(&mut self, ch: usize, t_end: Cycle) -> ChannelAdvance {
+        assert!(!self.detached, "advance_channel on a detached controller");
+        let feed = self.take_feed(ch);
+        let adv = self.channels[ch].advance(&self.cfg, ch, feed, t_end);
+        self.sync_channel(&adv);
+        adv
+    }
+
+    /// Detach every channel engine for sharded execution. The controller
+    /// keeps serving front-end queries ([`MemController::enqueue`],
+    /// [`MemController::space_in`], ...) from its mirrors.
+    pub fn detach_shards(&mut self) -> Vec<ShardChannel> {
+        assert!(!self.detached, "channels already detached");
+        self.detached = true;
+        std::mem::take(&mut self.channels)
+            .into_iter()
+            .enumerate()
+            .map(|(index, channel)| ShardChannel {
+                index,
+                cfg: self.cfg.clone(),
+                channel,
+            })
+            .collect()
+    }
+
+    /// Re-attach the engines produced by [`MemController::detach_shards`]
+    /// (any order; they are re-sorted by channel index).
+    pub fn attach_shards(&mut self, mut shards: Vec<ShardChannel>) {
+        assert!(self.detached, "attach_shards without detach");
+        assert_eq!(shards.len(), self.front.len(), "missing shard channels");
+        shards.sort_by_key(|s| s.index);
+        self.channels = shards.into_iter().map(|s| s.channel).collect();
+        self.detached = false;
+    }
+
+    /// Run the scheduler for channel `ch` at time `t` synchronously:
+    /// commit every request whose bank is available, in FR-FCFS priority
+    /// order. Returns the completions produced (future-dated) and the next
+    /// wake time, if any work remains.
+    ///
+    /// This is the direct-drive API used by unit tests and standalone
+    /// harnesses; the coordinator's quantum loop goes through
+    /// [`MemController::advance_channel`] / [`ShardChannel::advance`]
+    /// instead.
+    pub fn schedule(&mut self, ch: usize, t: Cycle) -> (Vec<Completion>, Option<Cycle>) {
+        assert!(!self.detached, "schedule on a detached controller");
+        if self.front[ch].next_event <= t {
+            self.front[ch].next_event = Cycle::MAX;
+        }
+        let inbox = std::mem::take(&mut self.front[ch].inbox);
+        for req in inbox {
+            self.channels[ch].admit(&self.cfg, req);
+        }
+        let mut comps = Vec::new();
+        self.channels[ch].schedule_at(&self.cfg, t, &mut comps);
+        let wake = self.channels[ch].wake;
+        self.front[ch].buffer_len = self.channels[ch].buffer.len();
+        self.front[ch].overflow_len = self.channels[ch].overflow.len();
+        self.front[ch].next_time = wake;
+        // Preserve the historical contract: the returned wake passes the
+        // `ChannelSched` dedup guard, so a caller that pushes an event for
+        // it cannot double-schedule the channel.
+        (comps, wake.filter(|&w| self.sched_request(ch, w)))
+    }
+
+    /// Whether any channel still has buffered or overflowed requests
+    /// (front-end view; exact at quantum boundaries).
+    pub fn has_pending(&self) -> bool {
+        self.front
+            .iter()
+            .any(|f| f.buffer_len > 0 || f.overflow_len > 0)
+    }
+
+    /// Controller-wide statistics: per-channel stats merged in channel
+    /// index order (deterministic at every shard count).
+    pub fn stats(&self) -> DramStats {
+        assert!(!self.detached, "stats while channels are detached");
+        let mut s = DramStats::default();
+        for c in &self.channels {
+            s.merge(&c.stats);
+        }
+        s
     }
 
     /// Time-weighted mean request-buffer occupancy across channels.
     pub fn mean_occupancy(&self, end: Cycle) -> f64 {
+        assert!(!self.detached, "mean_occupancy while channels are detached");
         let s: f64 = self.channels.iter().map(|c| c.occupancy.mean(end)).sum();
         s / self.channels.len() as f64
     }
 
+    /// Number of channels (valid even while detached).
     pub fn num_channels(&self) -> usize {
-        self.channels.len()
+        self.front.len()
     }
 }
 
@@ -438,12 +807,12 @@ mod tests {
         c.enqueue(0, 0, false, ReqSource::Prefetch { core: 0 });
         let comps = run_to_completion(&mut c, 0);
         assert_eq!(comps.len(), 1);
-        let d = &c.cfg;
+        let d = c.cfg.clone();
         // Empty bank: ACT@0, CAS@tRCD, data@+CL, done@+tBURST+backend.
         let expect = d.t_rcd + d.cl + d.t_burst + d.backend_latency;
         assert_eq!(comps[0].time, expect);
         assert!(!comps[0].row_hit);
-        assert_eq!(c.stats.row_empty, 1);
+        assert_eq!(c.stats().row_empty, 1);
     }
 
     #[test]
@@ -456,10 +825,10 @@ mod tests {
         }
         let comps = run_to_completion(&mut c, 0);
         assert_eq!(comps.len(), 8);
-        assert_eq!(c.stats.row_hits, 7);
+        assert_eq!(c.stats().row_hits, 7);
         let mut times: Vec<Cycle> = comps.iter().map(|x| x.time).collect();
         times.sort();
-        let d = &c.cfg;
+        let d = c.cfg.clone();
         // Once streaming, spacing equals tCCD_L (same bank group).
         for w in times.windows(2).skip(1) {
             assert_eq!(w[1] - w[0], d.t_ccd_l);
@@ -477,7 +846,7 @@ mod tests {
         let comps = run_to_completion(&mut c, 0);
         let mut times: Vec<Cycle> = comps.iter().map(|x| x.time).collect();
         times.sort();
-        let d = &c.cfg;
+        let d = c.cfg.clone();
         // Steady-state spacing = tBURST (bus-limited), not tCCD_L.
         let tail: Vec<_> = times.windows(2).skip(8).map(|w| w[1] - w[0]).collect();
         assert!(
@@ -494,10 +863,10 @@ mod tests {
         c.enqueue(0, 0, false, ReqSource::Prefetch { core: 0 });
         c.enqueue(0, 256 * 1024, false, ReqSource::Prefetch { core: 0 });
         let comps = run_to_completion(&mut c, 0);
-        assert_eq!(c.stats.row_misses, 1);
+        assert_eq!(c.stats().row_misses, 1);
         let mut times: Vec<Cycle> = comps.iter().map(|x| x.time).collect();
         times.sort();
-        let d = &c.cfg;
+        let d = c.cfg.clone();
         // Gap dominated by tRTP/tRAS + tRP + tRCD; certainly > tRP + tRCD.
         assert!(times[1] - times[0] > d.t_rp + d.t_rcd);
     }
@@ -564,9 +933,10 @@ mod tests {
         c.enqueue(1, 32 * 64, false, ReqSource::Prefetch { core: 0 });
         let comps = run_to_completion(&mut c, 0);
         assert_eq!(comps.len(), 2);
-        assert_eq!(c.stats.writes, 1);
-        assert_eq!(c.stats.reads, 1);
-        assert_eq!(c.stats.row_hits, 1);
+        let s = c.stats();
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.row_hits, 1);
     }
 
     #[test]
@@ -578,9 +948,79 @@ mod tests {
         }
         let comps = run_to_completion(&mut c, 0);
         let end = comps.iter().map(|x| x.time).max().unwrap();
-        let util = c.stats.bw_utilization(end, &c.cfg);
+        let util = c.stats().bw_utilization(end, &c.cfg);
         // Perfectly streaming pattern should land well above 50% of peak.
         assert!(util > 0.5, "streaming util {util}");
-        assert_eq!(c.stats.bytes, n * 64);
+        assert_eq!(c.stats().bytes, n * 64);
+    }
+
+    #[test]
+    fn detached_advance_matches_serial_advance() {
+        // Same request pattern through advance_channel (serial) and a
+        // detached ShardChannel: identical completions and stats.
+        let mk = |c: &mut MemController| {
+            for i in 0..24u64 {
+                c.enqueue(i, i * 2 * 64, false, ReqSource::Prefetch { core: 0 });
+                let ch = c.channel_of(i * 2 * 64);
+                if c.sched_request(ch, i) {
+                    c.note_sched(ch, i);
+                }
+            }
+        };
+        let quantum = SystemConfig::table3().dram.min_completion_latency();
+        let drive_serial = |c: &mut MemController| {
+            let mut comps = Vec::new();
+            let mut t_end = quantum;
+            for _ in 0..10_000 {
+                let mut any = false;
+                for ch in 0..c.num_channels() {
+                    let adv = c.advance_channel(ch, t_end);
+                    any |= !adv.completions.is_empty() || adv.next_time.is_some();
+                    comps.extend(adv.completions);
+                }
+                match c.next_channel_time() {
+                    Some(w) => t_end = w + quantum,
+                    None if !any => break,
+                    None => {}
+                }
+            }
+            comps
+        };
+        let mut a = ctl();
+        mk(&mut a);
+        let ca = drive_serial(&mut a);
+
+        let mut b = ctl();
+        mk(&mut b);
+        let mut shards = b.detach_shards();
+        let mut cb: Vec<Completion> = Vec::new();
+        let mut t_end = quantum;
+        for _ in 0..10_000 {
+            let mut feeds: Vec<ChannelFeed> =
+                (0..b.num_channels()).map(|ch| b.take_feed(ch)).collect();
+            let mut next: Option<Cycle> = None;
+            let mut any = false;
+            for sc in shards.iter_mut() {
+                let adv = sc.advance(std::mem::take(&mut feeds[sc.index()]), t_end);
+                any |= !adv.completions.is_empty() || adv.next_time.is_some();
+                if let Some(w) = adv.next_time {
+                    next = Some(next.map_or(w, |n: Cycle| n.min(w)));
+                }
+                b.sync_channel(&adv);
+                cb.extend(adv.completions);
+            }
+            match next {
+                Some(w) => t_end = w + quantum,
+                None if !any => break,
+                None => {}
+            }
+        }
+        b.attach_shards(shards);
+
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!((x.id, x.time, x.addr, x.row_hit), (y.id, y.time, y.addr, y.row_hit));
+        }
+        assert_eq!(a.stats(), b.stats());
     }
 }

@@ -7,9 +7,16 @@
 //! resource-availability times when the request is *committed*, and wakes
 //! itself at the next interesting instant. Bank-level parallelism is modeled
 //! by allowing one committed-but-unfinished request per bank.
+//!
+//! Channels share no timing state, so a run can shard them across worker
+//! threads (`DX100_SHARDS`): see the [`dram`] module docs for the
+//! front-end / channel-engine split and the determinism contract.
 
 pub mod addr;
 pub mod dram;
 
 pub use addr::{AddrMap, DramCoord};
-pub use dram::{DramStats, MemController, MemRequest, ReqSource};
+pub use dram::{
+    ChannelAdvance, ChannelFeed, Completion, DramStats, MemController, MemRequest, ReqSource,
+    ShardChannel,
+};

@@ -12,9 +12,13 @@ use crate::workloads::{self, Scale, WorkloadSpec};
 /// One workload's baseline/DMP/DX100 comparison.
 #[derive(Clone, Debug)]
 pub struct Comparison {
+    /// Workload name.
     pub workload: &'static str,
+    /// Baseline-system run.
     pub baseline: RunStats,
+    /// DMP-system run, when the plan included it.
     pub dmp: Option<RunStats>,
+    /// DX100-system run.
     pub dx100: RunStats,
 }
 

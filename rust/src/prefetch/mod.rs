@@ -31,7 +31,9 @@ pub const TRAIN_ITERS: usize = 32;
 /// Configuration of the modeled indirect prefetcher.
 #[derive(Clone, Debug)]
 pub struct DmpConfig {
+    /// Prefetch distance in loop iterations.
     pub depth: usize,
+    /// Iterations suppressed at stream start (training period).
     pub train_iters: usize,
 }
 
@@ -52,11 +54,13 @@ pub type DmpHints = HashMap<usize, u64>;
 /// the training-period suppression applied.
 pub struct DmpHintBuilder {
     seen: HashMap<(usize, u32), usize>,
+    /// Accumulated per-core hint tables.
     pub hints: Vec<DmpHints>,
     cfg: DmpConfig,
 }
 
 impl DmpHintBuilder {
+    /// An empty builder for `cores` cores.
     pub fn new(cores: usize, cfg: DmpConfig) -> Self {
         DmpHintBuilder {
             seen: HashMap::new(),
@@ -79,10 +83,12 @@ impl DmpHintBuilder {
         }
     }
 
+    /// The configured prefetch distance.
     pub fn depth(&self) -> usize {
         self.cfg.depth
     }
 
+    /// Finish building and take the per-core hint tables.
     pub fn into_hints(self) -> Vec<DmpHints> {
         self.hints
     }

@@ -28,8 +28,11 @@ pub const ARTIFACT_DIR: &str = "artifacts";
 /// Shapes baked into the AOT artifacts (mirrors python/compile/model.py).
 #[derive(Clone, Copy, Debug)]
 pub struct TileShapes {
+    /// Elements per scratchpad tile.
     pub tile: usize,
+    /// Elements in the data array.
     pub data_n: usize,
+    /// Maximum elements a range expansion may produce.
     pub range_cap: usize,
 }
 
@@ -87,6 +90,7 @@ mod backend {
     /// semantics in pure Rust.
     pub struct TileRuntime {
         names: Vec<String>,
+        /// Shapes baked into the loaded artifacts.
         pub shapes: TileShapes,
     }
 
@@ -116,14 +120,17 @@ mod backend {
             Self::load(&find_artifacts()?)
         }
 
+        /// Human-readable backend description.
         pub fn platform(&self) -> String {
             "native (enable the `pjrt` feature for XLA execution)".to_string()
         }
 
+        /// Whether artifact `name` is in the manifest.
         pub fn has(&self, name: &str) -> bool {
             self.names.iter().any(|n| n == name)
         }
 
+        /// Sorted artifact names from the manifest.
         pub fn names(&self) -> Vec<&str> {
             self.names.iter().map(String::as_str).collect()
         }
@@ -284,6 +291,7 @@ mod backend {
     pub struct TileRuntime {
         client: xla::PjRtClient,
         exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// Shapes baked into the loaded artifacts.
         pub shapes: TileShapes,
     }
 
@@ -324,14 +332,17 @@ mod backend {
             Self::load(&find_artifacts()?)
         }
 
+        /// Human-readable backend description (the PJRT platform).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Whether artifact `name` was compiled from the manifest.
         pub fn has(&self, name: &str) -> bool {
             self.exes.contains_key(name)
         }
 
+        /// Sorted artifact names from the manifest.
         pub fn names(&self) -> Vec<&str> {
             let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
             v.sort();

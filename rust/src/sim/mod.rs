@@ -21,7 +21,10 @@ pub enum Event {
     /// Re-evaluate core `id`'s issue window (a dependency resolved, a slot
     /// freed, or its wake timer expired).
     CoreWake(usize),
-    /// Run the FR-FCFS scheduler for DRAM channel `id`.
+    /// Request an FR-FCFS scheduler activation for DRAM channel `id`. The
+    /// coordinator's quantum loop records the time and replays it during
+    /// the channel phase (possibly on a shard worker thread); standalone
+    /// harnesses call `MemController::schedule` directly instead.
     ChannelSched(usize),
     /// A DRAM request completed. Payload is the request id.
     DramDone(u64),

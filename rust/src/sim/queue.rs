@@ -7,9 +7,11 @@ use std::collections::BinaryHeap;
 /// An event scheduled at a point in simulated time.
 #[derive(Clone, Copy, Debug)]
 pub struct Scheduled {
+    /// Absolute simulation time.
     pub time: Cycle,
     /// Monotonic sequence number; breaks ties FIFO.
     pub seq: u64,
+    /// The event payload.
     pub event: Event,
 }
 
@@ -42,6 +44,7 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -63,10 +66,12 @@ impl EventQueue {
         self.heap.peek().map(|s| s.time)
     }
 
+    /// Whether no events are scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

@@ -7,12 +7,15 @@ use super::Cycle;
 pub struct Counter(pub u64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&mut self) {
         self.0 += 1;
     }
+    /// Add `n`.
     pub fn add(&mut self, n: u64) {
         self.0 += n;
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0
     }
@@ -21,9 +24,13 @@ impl Counter {
 /// Running mean / min / max of a scalar series.
 #[derive(Clone, Debug)]
 pub struct RunningStat {
+    /// Samples observed.
     pub n: u64,
+    /// Sum of samples.
     pub sum: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -39,6 +46,7 @@ impl Default for RunningStat {
 }
 
 impl RunningStat {
+    /// Record one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -46,6 +54,7 @@ impl RunningStat {
         self.max = self.max.max(x);
     }
 
+    /// Mean of the samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -66,6 +75,7 @@ pub struct TimeWeighted {
 }
 
 impl TimeWeighted {
+    /// A signal starting at `value` at time `start`.
     pub fn new(start: Cycle, value: f64) -> Self {
         TimeWeighted {
             value,

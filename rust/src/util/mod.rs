@@ -40,6 +40,7 @@ impl Default for Fnv {
 }
 
 impl Fnv {
+    /// Start from the FNV-1a offset basis.
     pub fn new() -> Self {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
@@ -51,6 +52,7 @@ impl Fnv {
         h
     }
 
+    /// Mix raw bytes.
     pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
         for &b in bs {
             self.0 ^= b as u64;
@@ -59,18 +61,22 @@ impl Fnv {
         self
     }
 
+    /// Mix a `u64` (little-endian bytes).
     pub fn u64(&mut self, v: u64) -> &mut Self {
         self.bytes(&v.to_le_bytes())
     }
 
+    /// Mix a `usize`, widened to 64 bits for cross-platform stability.
     pub fn usize(&mut self, v: usize) -> &mut Self {
         self.u64(v as u64)
     }
 
+    /// Mix an `f64` via its IEEE-754 bit pattern.
     pub fn f64(&mut self, v: f64) -> &mut Self {
         self.u64(v.to_bits())
     }
 
+    /// Mix a `bool` as one 64-bit word.
     pub fn bool(&mut self, v: bool) -> &mut Self {
         self.u64(v as u64)
     }
@@ -81,6 +87,7 @@ impl Fnv {
         self.bytes(s.as_bytes())
     }
 
+    /// The accumulated 64-bit hash.
     pub fn finish(&self) -> u64 {
         self.0
     }

@@ -26,10 +26,13 @@ use crate::dx100::mem_image::MemImage;
 
 /// A ready-to-compile workload: IR program + initial memory + metadata.
 pub struct WorkloadSpec {
+    /// The IR program to compile.
     pub program: Program,
+    /// Initial memory contents (arrays, indices).
     pub mem: MemImage,
     /// Pre-fill caches before timing (the §6.1 All-Hits scenario).
     pub warm_caches: bool,
+    /// Suite the workload belongs to (reporting).
     pub suite: &'static str,
 }
 
@@ -39,6 +42,7 @@ pub struct WorkloadSpec {
 pub struct Scale(pub usize);
 
 impl Scale {
+    /// Paper-faithful scale (minutes per simulation).
     pub fn full() -> Self {
         Scale(16)
     }
@@ -50,6 +54,7 @@ impl Scale {
     pub fn test() -> Self {
         Scale(1)
     }
+    /// Scale a base element count.
     pub fn apply(&self, base: usize) -> usize {
         base * self.0
     }

@@ -1,0 +1,113 @@
+//! Intra-run channel sharding: bit-identity and cache-key invariance.
+//!
+//! `DX100_SHARDS` fans one simulation's DRAM channel engines out across
+//! worker threads. The contract under test:
+//!
+//! * `RunStats` are **bit-identical** for every shard count, on every
+//!   system kind, for both multi-channel geometries (2-channel Table 3 and
+//!   the 4-channel §6.6 scale-up) — floats compared exactly, no epsilon.
+//! * Shard counts above the channel count clamp (and stay identical).
+//! * Sharding never enters a cache or dedup fingerprint: a sharded sweep
+//!   replays cells cached by an unsharded sweep verbatim.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::cache::ResultCache;
+use dx100::engine::{execute_sweep_sharded, SweepPlan, SweepPoint, ALL_SYSTEMS, BASE_AND_DX};
+use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
+use std::path::PathBuf;
+
+const ALL_KINDS: [SystemKind; 3] = ALL_SYSTEMS;
+
+fn workloads() -> Vec<WorkloadSpec> {
+    vec![
+        micro::gather_full(8192, micro::IndexPattern::UniformRandom, 21),
+        nas::cg(Scale::test()),
+    ]
+}
+
+#[test]
+fn sharded_stats_bit_identical_across_shard_counts() {
+    // 4-channel geometry: shards 2 and 4 genuinely partition the channels.
+    let cfg = SystemConfig::table3_8core();
+    for w in &workloads() {
+        for kind in ALL_KINDS {
+            let ex = Experiment::new(kind, cfg.clone());
+            let unsharded = ex.run_sharded(w, 1);
+            assert!(unsharded.cycles > 0 && unsharded.events > 0);
+            for shards in [2, 4] {
+                let sharded = ex.run_sharded(w, shards);
+                assert_eq!(
+                    unsharded, sharded,
+                    "{kind:?}/{} diverged at {shards} shards",
+                    w.program.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_count_clamps_to_channel_count() {
+    // Table 3 has 2 channels: 4 (and an absurd 64) shards clamp to 2 and
+    // stay bit-identical.
+    let cfg = SystemConfig::table3();
+    let w = micro::gather_full(8192, micro::IndexPattern::UniformRandom, 22);
+    for kind in [SystemKind::Baseline, SystemKind::Dx100] {
+        let ex = Experiment::new(kind, cfg.clone());
+        let unsharded = ex.run_sharded(&w, 1);
+        for shards in [2, 4, 64] {
+            assert_eq!(unsharded, ex.run_sharded(&w, shards), "{kind:?}@{shards}");
+        }
+    }
+}
+
+fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("dx100-shard-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultCache::at(&dir), dir)
+}
+
+#[test]
+fn sharded_sweep_hits_unsharded_cache_entries() {
+    let (cache, dir) = temp_cache("xhit");
+    let points = [SweepPoint::new("", SystemConfig::table3())];
+    let ws = [micro::gather_full(4096, micro::IndexPattern::UniformRandom, 23)];
+    let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
+
+    // Cold, unsharded: simulates and persists every cell.
+    let cold = execute_sweep_sharded(&plan, 1, Some(&cache), 1);
+    assert_eq!(cold.shards, 1);
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.cache_misses, cold.cells());
+
+    // Warm, sharded: the shard count must not perturb any cache key, so
+    // every cell replays from the unsharded run's entries.
+    let warm = execute_sweep_sharded(&plan, 2, Some(&cache), 4);
+    assert_eq!(warm.shards, 4);
+    assert_eq!(warm.cache_hits, warm.cells());
+    assert_eq!(warm.cache_misses, 0);
+
+    // And the replayed stats are the unsharded ones, bit for bit.
+    for (cp, wp) in cold.points.iter().zip(&warm.points) {
+        for (cw, ww) in cp.workloads.iter().zip(&wp.workloads) {
+            assert_eq!(cw.runs, ww.runs);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_execution_matches_cacheless_sweep() {
+    // No cache involved at all: a 4-sharded sweep equals a serial one.
+    let points = [SweepPoint::new("", SystemConfig::table3_8core())];
+    let ws = [micro::scatter(4096, micro::IndexPattern::Streaming, 24)];
+    let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
+    let a = execute_sweep_sharded(&plan, 1, None, 1);
+    let b = execute_sweep_sharded(&plan, 2, None, 4);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
+            assert_eq!(wa.runs, wb.runs);
+        }
+    }
+}
