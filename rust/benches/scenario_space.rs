@@ -1,0 +1,85 @@
+//! Scenario space: the generated indirect-access grid (≥24 scenarios —
+//! every index distribution × access shape, plus knob variants) × all
+//! three systems, through the sweep engine.
+//!
+//! Where Figures 9-12 evaluate the 12 paper kernels, this bench probes
+//! the *claim behind them*: reordering, coalescing, and interleaving help
+//! across diverse access types and index distributions. Per scenario it
+//! reports DX100 speedup over baseline and DMP plus the row-buffer hit
+//! rates, and per distribution/shape family the geomean speedup.
+//!
+//! Generation is seed-deterministic, so rerunning with `DX100_CACHE=1`
+//! replays every cell from the persisted result cache (CI asserts this).
+
+use dx100::config::SystemConfig;
+use dx100::engine::harness::Harness;
+use dx100::engine::Sweep;
+use dx100::metrics::{comparisons_at, geomean_of, Comparison};
+use dx100::workloads::Registry;
+
+fn geomean_where(comps: &[Comparison], pred: impl Fn(&str) -> bool) -> f64 {
+    let mut subset: Vec<Comparison> = Vec::new();
+    for c in comps {
+        if pred(c.workload) {
+            subset.push(c.clone());
+        }
+    }
+    geomean_of(&subset, |c| c.speedup())
+}
+
+fn main() {
+    let mut h = Harness::new(
+        "scenario_space",
+        "Scenario space: generated indirect-access patterns",
+    );
+    let reg = Registry::synth();
+    h.line(&format!("{} generated scenarios x baseline/DMP/DX100", reg.len()));
+    let mut r = Sweep::new()
+        .with_dmp()
+        .point("", SystemConfig::table3())
+        .workloads(reg.build_all(h.scale()))
+        .execute();
+    h.sweep(&r);
+    let comps = comparisons_at(r.points.remove(0));
+    h.line("scenario          speedup   vs DMP   rbh base->dx100");
+    for c in &comps {
+        let vs_dmp = c
+            .speedup_vs_dmp()
+            .map_or("    -".to_string(), |s| format!("{s:5.2}x"));
+        h.line(&format!(
+            "{:<16} {:6.2}x   {}   {:.2} -> {:.2}",
+            c.workload,
+            c.speedup(),
+            vs_dmp,
+            c.baseline.row_hit_rate,
+            c.dx100.row_hit_rate,
+        ));
+        h.metric(&format!("{}_speedup", c.workload), c.speedup());
+        h.metric(
+            &format!("{}_base_row_hit_rate", c.workload),
+            c.baseline.row_hit_rate,
+        );
+        h.metric(
+            &format!("{}_dx_row_hit_rate", c.workload),
+            c.dx100.row_hit_rate,
+        );
+    }
+    h.comparisons(&comps);
+    // Family geomeans cover the plain 5x5 grid only: the `+knob` variants
+    // deliberately skew locality, which would make the `uni`/`zipf`
+    // families incomparable with the others.
+    for dist in ["uni", "zipf", "runs", "chase", "hash"] {
+        let g = geomean_where(&comps, |w| w.starts_with(dist) && !w.contains('+'));
+        h.line(&format!("geomean speedup, {dist:<5} scenarios: {g:.2}x"));
+        h.metric(&format!("geomean_speedup_{dist}"), g);
+    }
+    for shape in ["gather", "scatter", "rmw", "cond", "2lvl"] {
+        let g = geomean_where(&comps, |w| w.ends_with(shape));
+        h.metric(&format!("geomean_speedup_{shape}"), g);
+    }
+    let g = geomean_of(&comps, |c| c.speedup());
+    h.line(&format!("geomean speedup, all scenarios: {g:.2}x"));
+    h.metric("geomean_speedup", g);
+    h.paper("reordering/coalescing/interleaving generalize across access types (S5, Table 1)");
+    h.finish();
+}

@@ -448,6 +448,39 @@ impl SystemConfig {
         h.finish()
     }
 
+    /// Stable fingerprint over every knob the **CPU-only** systems
+    /// (baseline and DMP) can observe: everything except `dx100.*`. The
+    /// accelerator parameters reach those systems' code paths in exactly
+    /// one place — `CoreEnv`'s `spd_latency`/`mmio_latency` fields — and
+    /// baseline/DMP instruction streams contain no scratchpad reads or
+    /// MMIO stores to consume them, so two configs agreeing here simulate
+    /// CPU-only systems identically. The sweep engine keys baseline/DMP
+    /// cache entries and within-plan dedup on this value (via
+    /// [`crate::engine::cache::system_fingerprint`]), which is what lets a
+    /// `dx100.*` sweep reuse one baseline simulation across all points.
+    /// `tests/per_system_fingerprint.rs` guards the exclusion with a
+    /// runtime A/B bit-identity check — extend that test before excluding
+    /// anything else.
+    pub fn fingerprint_sans_dx100(&self) -> u64 {
+        let SystemConfig {
+            core,
+            l1d,
+            l2,
+            llc,
+            dram,
+            dx100: _, // excluded: unread by baseline/DMP (see doc above)
+            freq_ghz,
+        } = self;
+        let mut h = Fnv::with_seed(0xba5e);
+        core.hash_into(&mut h);
+        l1d.hash_into(&mut h);
+        l2.hash_into(&mut h);
+        llc.hash_into(&mut h);
+        dram.hash_into(&mut h);
+        h.f64(*freq_ghz);
+        h.finish()
+    }
+
     /// Stable fingerprint over the **compiler-relevant** knobs only:
     /// `dx100.*` (tiling, instance count, registers) and `core.num_cores`
     /// (dispatch/residual-compute interleaving). Codegen reads nothing
@@ -581,6 +614,32 @@ mod tests {
         let mut cores = SystemConfig::table3();
         cores.core.num_cores = 8;
         assert_ne!(cores.compile_fingerprint(), base.compile_fingerprint());
+    }
+
+    #[test]
+    fn cpu_fingerprint_ignores_dx100_knobs_only() {
+        let base = SystemConfig::table3();
+        // Any dx100.* change is invisible to the CPU-only fingerprint but
+        // moves the full one.
+        let mut dx_only = SystemConfig::table3();
+        dx_only.dx100.tile_elems = 1024;
+        dx_only.dx100.instances = 2;
+        dx_only.dx100.mmio_store_latency = 999;
+        assert_eq!(
+            dx_only.fingerprint_sans_dx100(),
+            base.fingerprint_sans_dx100()
+        );
+        assert_ne!(dx_only.fingerprint(), base.fingerprint());
+        // Every non-dx100 section still moves it.
+        let mut d = SystemConfig::table3();
+        d.dram.request_buffer = 8;
+        assert_ne!(d.fingerprint_sans_dx100(), base.fingerprint_sans_dx100());
+        let mut l = SystemConfig::table3();
+        l.llc.size = 4 * 1024 * 1024;
+        assert_ne!(l.fingerprint_sans_dx100(), base.fingerprint_sans_dx100());
+        let mut c = SystemConfig::table3();
+        c.core.rob = 128;
+        assert_ne!(c.fingerprint_sans_dx100(), base.fingerprint_sans_dx100());
     }
 
     #[test]

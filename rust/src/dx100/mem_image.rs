@@ -128,6 +128,40 @@ impl MemImage {
         self.pages.len()
     }
 
+    /// Maximum `esize`-byte little-endian word (and the element index
+    /// where it occurs) among the `n` elements starting at `addr`;
+    /// unmapped elements read as zero. Page-chunked — one map lookup per
+    /// 64 KiB page instead of per element — so the debug-build workload
+    /// bounds validation can scan multi-million-entry index arrays
+    /// cheaply. `addr` must be `esize`-aligned (array bases are).
+    pub fn max_word_in(&self, addr: u64, n: u64, esize: u64) -> (u64, u64) {
+        debug_assert!(esize == 4 || esize == 8);
+        debug_assert_eq!(addr % esize, 0);
+        let mut max = 0u64;
+        let mut at = 0u64;
+        let mut i = 0u64;
+        while i < n {
+            let a = addr + i * esize;
+            let page = a >> PAGE_BITS;
+            let off = (a as usize) & (PAGE_SIZE - 1);
+            let chunk = (((PAGE_SIZE - off) as u64) / esize).min(n - i);
+            if let Some(p) = self.pages.get(&page) {
+                for k in 0..chunk {
+                    let o = off + (k * esize) as usize;
+                    let mut buf = [0u8; 8];
+                    buf[..esize as usize].copy_from_slice(&p[o..o + esize as usize]);
+                    let v = u64::from_le_bytes(buf);
+                    if v > max {
+                        max = v;
+                        at = i + k;
+                    }
+                }
+            }
+            i += chunk;
+        }
+        (max, at)
+    }
+
     /// Stable content hash, independent of `HashMap` iteration order.
     /// Feeds the engine's persisted result-cache keys, so it must not vary
     /// across processes or toolchains (hence [`crate::util::Fnv`], not
@@ -178,6 +212,31 @@ mod tests {
         let m = MemImage::new();
         assert_eq!(m.read_u64(0x9999_9999), 0);
         assert_eq!(m.read_f32(0), 0.0);
+    }
+
+    #[test]
+    fn max_word_in_matches_naive_scan() {
+        let mut m = MemImage::new();
+        let base = 0x4_0000u64; // page-aligned like array regions
+        // Span several pages (64 KiB = 16K u32 elements per page).
+        let n = 40_000u64;
+        for i in 0..n {
+            let v = ((i * 2_654_435_761) % 1_000_003) as u32;
+            m.write_u32(base + 4 * i, v);
+        }
+        m.write_u32(base + 4 * 17_123, 2_000_000); // unique max, page 2
+        let (max, at) = m.max_word_in(base, n, 4);
+        let mut naive = (0u64, 0u64);
+        for i in 0..n {
+            let v = m.read_word(base + 4 * i, 4);
+            if v > naive.0 {
+                naive = (v, i);
+            }
+        }
+        assert_eq!((max, at), naive);
+        assert_eq!((max, at), (2_000_000, 17_123));
+        // Unmapped ranges scan as zero.
+        assert_eq!(m.max_word_in(1 << 40, 128, 8), (0, 0));
     }
 
     #[test]

@@ -15,8 +15,12 @@
 //! * the running binary's identity (path, size, mtime) — a rebuilt
 //!   simulator silently invalidates every prior entry, which is the only
 //!   safe default when results depend on the code itself;
-//! * [`SystemConfig::fingerprint`] over **every** knob (not just the
-//!   compiler-relevant subset — DRAM timing changes results too);
+//! * the **system-relevant** configuration fingerprint
+//!   ([`system_fingerprint`]): the full [`SystemConfig::fingerprint`] for
+//!   DX100 cells, and [`SystemConfig::fingerprint_sans_dx100`] for
+//!   baseline/DMP cells, which never read the `dx100.*` knobs — so a
+//!   `dx100.*` sweep reuses one cached baseline result across all its
+//!   points instead of re-simulating it per point;
 //! * the system kind (baseline / dmp / dx100);
 //! * the workload fingerprint: IR program structure, register file,
 //!   array table, initial memory image content, and cache-warming flag —
@@ -33,6 +37,7 @@
 //! overrides the directory. Delete the directory to flush.
 
 use super::harness::Json;
+use crate::config::SystemConfig;
 use crate::coordinator::{RunStats, SystemKind};
 use crate::dx100::timing::Dx100Stats;
 use crate::util::Fnv;
@@ -154,11 +159,26 @@ pub fn workload_fingerprint(w: &WorkloadSpec) -> u64 {
     h.finish()
 }
 
-/// Key for one sweep cell. `cfg_fp` is [`SystemConfig::fingerprint`] and
-/// `wfp` is [`workload_fingerprint`] — both hoisted by the engine so they
-/// are computed once per point / per workload, not once per cell.
+/// The configuration fingerprint that keys cache entries and within-plan
+/// dedup for `kind`: the full [`SystemConfig::fingerprint`] for DX100,
+/// and [`SystemConfig::fingerprint_sans_dx100`] for the CPU-only systems,
+/// which never read the accelerator knobs.
 ///
-/// [`SystemConfig::fingerprint`]: crate::config::SystemConfig::fingerprint
+/// Narrowing a key is only safe when the excluded knobs are provably
+/// unread — a wrong exclusion silently replays stale results.
+/// `tests/per_system_fingerprint.rs` backs this policy with an A/B check:
+/// baseline and DMP `RunStats` must be bit-identical across a config pair
+/// that differs in every `dx100.*` knob.
+pub fn system_fingerprint(cfg: &SystemConfig, kind: SystemKind) -> u64 {
+    match kind {
+        SystemKind::Dx100 => cfg.fingerprint(),
+        SystemKind::Baseline | SystemKind::Dmp => cfg.fingerprint_sans_dx100(),
+    }
+}
+
+/// Key for one sweep cell. `cfg_fp` is [`system_fingerprint`] of the
+/// cell's (config, system) and `wfp` is [`workload_fingerprint`] —
+/// hoisted by the engine so workloads hash once per plan, not per cell.
 pub fn cell_key(cfg_fp: u64, system: SystemKind, wfp: u64) -> CacheKey {
     let mut parts = [0u64; 2];
     for (slot, seed) in parts.iter_mut().zip([0xa11c_e001u64, 0x0b0b_0002]) {
@@ -407,6 +427,11 @@ mod tests {
         assert!(cache.load(&key, "IS", SystemKind::Dx100).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    // The per-system key-narrowing policy (`system_fingerprint`) is
+    // guarded end to end in tests/per_system_fingerprint.rs — collapse
+    // assertions, the runtime A/B bit-identity check, and the sweep
+    // dedup/cache integration live there, in one place.
 
     #[test]
     fn cell_keys_separate_configs_workloads_and_systems() {

@@ -671,4 +671,75 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("\"unterminated").is_err());
     }
+
+    #[test]
+    fn parse_decodes_every_string_escape() {
+        let v = Json::parse(r#""a\"b\\c\/d\n\r\t\b\fAé""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c/d\n\r\t\u{8}\u{c}A\u{e9}"));
+        // Lone surrogates (never emitted by render) decode to U+FFFD
+        // rather than corrupting the document.
+        let v = Json::parse(r#""x\ud800y""#).unwrap();
+        assert_eq!(v.as_str(), Some("x\u{fffd}y"));
+        // Raw multi-byte UTF-8 passes through whole.
+        let v = Json::parse("\"héllo\u{1F600}\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo\u{1F600}"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_escapes() {
+        assert!(Json::parse(r#""bad \x escape""#).is_err());
+        assert!(Json::parse(r#""truncated \u00""#).is_err());
+        assert!(Json::parse(r#""not hex \u00zz""#).is_err());
+        assert!(Json::parse("\"dangling \\").is_err());
+    }
+
+    #[test]
+    fn parse_reads_exponent_floats() {
+        assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("2.5E-2").unwrap().as_f64(), Some(0.025));
+        assert_eq!(Json::parse("-1.5e+2").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(Json::parse("0.0").unwrap().as_f64(), Some(0.0));
+        // Exponent forms are floats, never integers.
+        assert!(Json::parse("1e3").unwrap().as_u64().is_none());
+        // Integer-looking values outside u64/i64 fall back to f64.
+        let huge = Json::parse("18446744073709551616").unwrap(); // u64::MAX + 1
+        assert!(huge.as_u64().is_none());
+        assert!(huge.as_f64().unwrap() > 1.8e19);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_numbers() {
+        assert!(Json::parse("--1").is_err());
+        assert!(Json::parse("+").is_err());
+        assert!(Json::parse("1.2.3").is_err());
+        assert!(Json::parse("1e").is_err());
+        assert!(Json::parse("e5").is_err());
+    }
+
+    #[test]
+    fn parse_handles_nested_arrays_and_objects() {
+        let text = r#"{"a":[[1,2],[{"b":{"c":[true,false,null]}}]],"d":{"e":{}}}"#;
+        let v = Json::parse(text).unwrap();
+        let a = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(a[0].as_array().unwrap().len(), 2);
+        let b = a[1].as_array().unwrap()[0].get("b").unwrap();
+        let c = b.get("c").unwrap().as_array().unwrap();
+        assert_eq!(c.len(), 3);
+        assert!(c[2].is_null());
+        assert!(matches!(v.get("d").unwrap().get("e"), Some(Json::Obj(kvs)) if kvs.is_empty()));
+        // Round-trip through render preserves structure.
+        assert_eq!(Json::parse(&v.render()).unwrap().render(), v.render());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_containers() {
+        assert!(Json::parse("[1 2]").is_err());
+        assert!(Json::parse("[1,2").is_err());
+        assert!(Json::parse("{\"a\"}").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("{\"a\":1,}").is_err());
+        assert!(Json::parse("{a:1}").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("]").is_err());
+    }
 }

@@ -19,8 +19,12 @@
 //!   [`SystemConfig::compile_fingerprint`]) — config points that agree on
 //!   the compiler-relevant knobs (`dx100.*`, `core.num_cores`) share one
 //!   specialization.
-//! * Cells whose *full* configuration fingerprints collide (identical
-//!   simulations) execute once and share the result within the plan.
+//! * Cells whose **system-relevant** configuration fingerprints collide
+//!   (identical simulations) execute once and share the result within the
+//!   plan. Baseline/DMP cells key on
+//!   [`SystemConfig::fingerprint_sans_dx100`] — they never read the
+//!   `dx100.*` knobs — so an accelerator-knob sweep simulates its CPU-only
+//!   endpoints once, not once per point ([`cache::system_fingerprint`]).
 //! * [`cache`] persists `RunStats` keyed by (config, workload, system)
 //!   fingerprints under `target/dx100-cache/`, so unchanged cells are
 //!   skipped across bench invocations (`DX100_CACHE=0` disables).
@@ -242,7 +246,7 @@ pub struct SweepResult {
     /// identical cell executed this invocation).
     pub cache_misses: usize,
     /// Cells that shared the result of an identical cell within this plan
-    /// (same full config fingerprint, workload, and system).
+    /// (same system-relevant config fingerprint, workload, and system).
     pub deduped: usize,
     /// Whether a persisted result cache was consulted.
     pub cache_enabled: bool,
@@ -312,17 +316,29 @@ pub fn execute_sweep_sharded(
         Vec::new()
     };
 
-    // Full config fingerprints, once per point: they key both the
-    // persisted cache cells and the within-plan dedup.
-    let full_fp: Vec<u64> = plan.points.iter().map(|p| p.cfg.fingerprint()).collect();
+    // System-relevant config fingerprints: the full config fingerprint
+    // for DX100 cells, the `dx100.*`-excluding one for baseline/DMP
+    // cells ([`cache::system_fingerprint`]), hashed once per (point,
+    // system) and fanned out per cell. They key both the persisted cache
+    // cells and the within-plan dedup, so CPU-only cells at config
+    // points differing only in accelerator knobs (e.g. every non-default
+    // point of a tile-size sweep) simulate once.
+    let mut fp_memo: HashMap<(usize, SystemKind), u64> = HashMap::new();
+    let mut cell_fp: Vec<u64> = Vec::with_capacity(cells.len());
+    for c in &cells {
+        let fp = *fp_memo.entry((c.point, c.system)).or_insert_with(|| {
+            cache::system_fingerprint(&plan.points[c.point].cfg, c.system)
+        });
+        cell_fp.push(fp);
+    }
 
     // Probe the persisted cache first: a hit costs one fingerprint + one
     // small JSON read instead of a simulation.
     let mut cache_hits = 0usize;
     if let Some(c) = cache {
-        for (slot, cell) in stats.iter_mut().zip(&cells) {
+        for ((slot, cell), fp) in stats.iter_mut().zip(&cells).zip(&cell_fp) {
             let w = &plan.workloads[cell.workload];
-            let key = cache::cell_key(full_fp[cell.point], cell.system, wfps[cell.workload]);
+            let key = cache::cell_key(*fp, cell.system, wfps[cell.workload]);
             if let Some(rs) = c.load(&key, w.program.name, cell.system) {
                 *slot = Some(rs);
                 cache_hits += 1;
@@ -330,9 +346,10 @@ pub fn execute_sweep_sharded(
         }
     }
 
-    // Misses. Identical cells (same full config fingerprint, workload and
-    // system — e.g. an ablation sweep whose `rows=64` point equals the
-    // Table-3 default) run once and share the result.
+    // Misses. Identical cells (same system-relevant config fingerprint,
+    // workload and system — e.g. an ablation sweep whose `rows=64` point
+    // equals the Table-3 default, or a baseline cell of a `dx100.*`-only
+    // sweep point) run once and share the result.
     let mut canonical: Vec<usize> = Vec::new();
     let mut copies: Vec<(usize, usize)> = Vec::new(); // (duplicate cell, canonical cell)
     let mut seen: HashMap<(u64, usize, SystemKind), usize> = HashMap::new();
@@ -340,7 +357,7 @@ pub fn execute_sweep_sharded(
         if stats[i].is_some() {
             continue;
         }
-        let key = (full_fp[cell.point], cell.workload, cell.system);
+        let key = (cell_fp[i], cell.workload, cell.system);
         match seen.get(&key) {
             Some(&src) => copies.push((i, src)),
             None => {
@@ -419,7 +436,7 @@ pub fn execute_sweep_sharded(
     if let Some(c) = cache {
         for &i in &canonical {
             let cell = cells[i];
-            let key = cache::cell_key(full_fp[cell.point], cell.system, wfps[cell.workload]);
+            let key = cache::cell_key(cell_fp[i], cell.system, wfps[cell.workload]);
             c.store(&key, stats[i].as_ref().expect("canonical cell executed"));
         }
     }

@@ -29,7 +29,11 @@
 //!   hoisting and DX100 code generation.
 //! * [`workloads`] — the twelve paper benchmarks (NAS CG/IS, GAP BFS/PR/BC,
 //!   UME GZ/GZP/GZI/GZPI, Spatter-xRAGE, Hash-Join PRH/PRO) plus the §6.1
-//!   microbenchmarks, expressed in the mini-IR.
+//!   microbenchmarks, expressed in the mini-IR; a scenario-synthesis
+//!   subsystem ([`workloads::synth`]) that generates workloads from
+//!   declarative (index distribution × access shape) specs; and a suite
+//!   registry ([`workloads::Registry`]) mapping workload names/families to
+//!   builders so sweeps iterate suites as data.
 //! * [`coordinator`] — assembles one (workload × system × config) run:
 //!   per-kind [`coordinator::SystemVariant`]s plus a kind-agnostic event
 //!   loop producing the paper's metrics.

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! dx100 run --workload CG --scale 4          # one workload, 3 systems
+//! dx100 run --workload uni-gather            # a generated scenario
+//!                                            # (workloads::synth names)
 //! dx100 suite --scale 4                      # all 12 workloads (Fig 9-11)
 //! dx100 micro                                # §6.1 microbenchmarks (Fig 8a)
 //! dx100 allmiss                              # Fig 8b/c sweep
@@ -89,16 +91,17 @@ fn main() {
     let cfg = cfg_of(&kv);
     match cmd {
         "run" => {
-            let name = kv
-                .get("workload")
-                .map(String::as_str)
-                .unwrap_or("Gather-Full");
+            let name = kv.get("workload").map(String::as_str).unwrap_or("CG");
             let scale = scale_of(&kv);
-            let w = workloads::all(scale)
-                .into_iter()
-                .find(|w| w.program.name.eq_ignore_ascii_case(name))
+            // Paper kernels plus every generated scenario, resolved by
+            // name so only the requested workload is built.
+            let reg = workloads::Registry::paper().with_synth();
+            let names = reg.names();
+            let canonical = names.iter().copied().find(|n| n.eq_ignore_ascii_case(name));
+            let w = canonical
+                .and_then(|n| reg.build(n, scale))
                 .unwrap_or_else(|| {
-                    eprintln!("unknown workload {name}; options: {:?}", workloads::names());
+                    eprintln!("unknown workload {name}; options: {names:?}");
                     std::process::exit(2);
                 });
             let c = compare_one(&w, &cfg, true);

@@ -100,12 +100,7 @@ pub fn bfs(scale: Scale) -> WorkloadSpec {
         let d = if rng.chance(0.4) { 1 } else { 0 };
         mem.write_u32(p.arrays[depth].addr(i), d);
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "GAP",
-    }
+    WorkloadSpec::new(p, mem, false, "GAP")
 }
 
 /// One PageRank push iteration.
@@ -138,12 +133,7 @@ pub fn pr(scale: Scale) -> WorkloadSpec {
     for i in 0..nodes as u64 {
         mem.write_f32(p.arrays[contrib].addr(i), rng.f32() / 15.0);
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "GAP",
-    }
+    WorkloadSpec::new(p, mem, false, "GAP")
 }
 
 /// Betweenness-centrality dependency accumulation over a frontier.
@@ -193,12 +183,7 @@ pub fn bc(scale: Scale) -> WorkloadSpec {
         mem.write_u32(p.arrays[depth].addr(i), rng.below(4) as u32);
         mem.write_f32(p.arrays[sigma].addr(i), rng.f32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "GAP",
-    }
+    WorkloadSpec::new(p, mem, false, "GAP")
 }
 
 #[cfg(test)]

@@ -97,12 +97,7 @@ pub fn prh(scale: Scale) -> WorkloadSpec {
     mem.store_u32_slice(p.arrays[keys].base, &key_vals);
     mem.store_u32_slice(p.arrays[base_off].base, &bases);
     mem.store_u32_slice(p.arrays[rank].base, &ranks);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "Hash-Join",
-    }
+    WorkloadSpec::new(p, mem, false, "Hash-Join")
 }
 
 /// Bucket-chaining probe pass.
@@ -158,12 +153,7 @@ pub fn pro(scale: Scale) -> WorkloadSpec {
     for i in 0..tuples as u64 {
         mem.write_u32(p.arrays[keys].addr(i), rng.next_u32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "Hash-Join",
-    }
+    WorkloadSpec::new(p, mem, false, "Hash-Join")
 }
 
 #[cfg(test)]

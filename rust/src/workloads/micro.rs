@@ -55,12 +55,7 @@ pub fn gather_spd(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
         mem.write_f32(p.arrays[a].addr(i), rng.f32());
     }
     fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 1);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: pattern == IndexPattern::Streaming,
-        suite: "micro",
-    }
+    WorkloadSpec::new(p, mem, pattern == IndexPattern::Streaming, "micro")
 }
 
 /// Gather-Full: the whole kernel `C[i] = A[B[i]]` is offloaded (§6.1).
@@ -81,12 +76,7 @@ pub fn gather_full(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
         mem.write_f32(p.arrays[a].addr(i), rng.f32());
     }
     fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 2);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: pattern == IndexPattern::Streaming,
-        suite: "micro",
-    }
+    WorkloadSpec::new(p, mem, pattern == IndexPattern::Streaming, "micro")
 }
 
 /// RMW microbenchmark `A[B[i]] += C[i]`; `atomic` selects the §6.1
@@ -114,12 +104,7 @@ pub fn rmw(n: usize, atomic: bool, pattern: IndexPattern, seed: u64) -> Workload
         mem.write_f32(p.arrays[c].addr(i), rng.f32());
     }
     fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 3);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: pattern == IndexPattern::Streaming,
-        suite: "micro",
-    }
+    WorkloadSpec::new(p, mem, pattern == IndexPattern::Streaming, "micro")
 }
 
 /// Scatter `A[B[i]] = C[i]` — single-core baseline (WAW hazards, §6.1).
@@ -141,12 +126,7 @@ pub fn scatter(n: usize, pattern: IndexPattern, seed: u64) -> WorkloadSpec {
         mem.write_f32(p.arrays[c].addr(i), rng.f32());
     }
     fill_indices(&p, &mut mem, b, n, data_len, pattern, seed ^ 4);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: pattern == IndexPattern::Streaming,
-        suite: "micro",
-    }
+    WorkloadSpec::new(p, mem, pattern == IndexPattern::Streaming, "micro")
 }
 
 /// All-Misses index ordering knobs for Figure 8 (b,c).
@@ -269,12 +249,7 @@ pub fn gather_allmiss(dram: &DramConfig, rows_per_bank: u32, order: AllMissOrder
     }];
     let mut mem = MemImage::new();
     mem.store_u32_slice(p.arrays[b].base, &idxs);
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "micro",
-    }
+    WorkloadSpec::new(p, mem, false, "micro")
 }
 
 #[cfg(test)]

@@ -1,4 +1,5 @@
-//! The paper's benchmarks, expressed in the compiler IR (§5, Table 1).
+//! The paper's benchmarks, expressed in the compiler IR (§5, Table 1),
+//! plus the scenario-synthesis subsystem and the suite registry.
 //!
 //! Five suites, twelve workloads, plus the §6.1 microbenchmarks:
 //!
@@ -13,16 +14,28 @@
 //! Dataset sizes are scaled down from the paper (DESIGN.md substitution
 //! table) while preserving the index distributions that drive row-buffer
 //! locality, coalescing, and MLP behaviour.
+//!
+//! Beyond the fixed kernels, [`synth`] generates workloads from
+//! declarative scenario specs (index distribution × access shape ×
+//! size/locality knobs), and [`Registry`] maps workload names to builders
+//! so suites — paper, generated, or mixed — are data the sweep engine can
+//! iterate, not hand-maintained lists.
 
 pub mod gap;
 pub mod hashjoin;
 pub mod micro;
 pub mod nas;
+pub mod registry;
 pub mod spatter;
+pub mod synth;
 pub mod ume;
 
-use crate::compiler::ir::Program;
+pub use registry::Registry;
+
+use crate::compiler::ir::{ArrId, Expr, Program, Stmt};
+use crate::dx100::isa::DType;
 use crate::dx100::mem_image::MemImage;
+use std::collections::HashMap;
 
 /// A ready-to-compile workload: IR program + initial memory + metadata.
 pub struct WorkloadSpec {
@@ -34,6 +47,129 @@ pub struct WorkloadSpec {
     pub warm_caches: bool,
     /// Suite the workload belongs to (reporting).
     pub suite: &'static str,
+}
+
+impl WorkloadSpec {
+    /// Assemble a workload. In debug builds this validates every
+    /// statically-checkable index array against its target array's bounds
+    /// ([`WorkloadSpec::validate_bounds`]) and panics on a violation — an
+    /// out-of-range index in a hand-written or generated pattern would
+    /// otherwise silently read/write a neighbouring region and skew every
+    /// downstream stat. Release builds skip the scan (it reads whole
+    /// index arrays).
+    pub fn new(program: Program, mem: MemImage, warm_caches: bool, suite: &'static str) -> Self {
+        let w = WorkloadSpec {
+            program,
+            mem,
+            warm_caches,
+            suite,
+        };
+        #[cfg(debug_assertions)]
+        if let Err(e) = w.validate_bounds() {
+            panic!("workload {}: {e}", w.program.name);
+        }
+        w
+    }
+
+    /// Check every statically-checkable access site against its target
+    /// array's length:
+    ///
+    /// * `A[Iv(0)]` sites require `iters <= len(A)`;
+    /// * `A[B[..]]` sites require every (reachable) entry of the index
+    ///   array `B` to be `< len(A)`. When `B` is indexed by `Iv(0)` only
+    ///   its first `iters` entries are checked; deeper chains check the
+    ///   whole array (conservative: unfilled entries read as 0).
+    ///
+    /// Sites whose index involves address calculation (`Bin`), registers,
+    /// or an inner-loop induction variable are skipped — their value
+    /// ranges are not recoverable without interpreting the program.
+    /// Index arrays with non-integer dtypes are skipped likewise.
+    pub fn validate_bounds(&self) -> Result<(), String> {
+        let mut sites: Vec<(ArrId, &Expr)> = Vec::new();
+        collect_stmt_sites(&self.program.body, &mut sites);
+        // Each index array is scanned at most once per reach limit; the
+        // scan memoizes (max value, position) across sites sharing it.
+        let mut max_used: HashMap<(ArrId, usize), (u64, u64)> = HashMap::new();
+        for (target, idx) in sites {
+            let tlen = self.program.arrays[target].len;
+            match idx {
+                Expr::Iv(0) => {
+                    if self.program.iters > tlen {
+                        return Err(format!(
+                            "array {} has {} elements but the outer loop runs {} iterations",
+                            self.program.arrays[target].name,
+                            tlen,
+                            self.program.iters
+                        ));
+                    }
+                }
+                Expr::Load(b, inner) => {
+                    let barr = &self.program.arrays[*b];
+                    if !matches!(barr.dtype, DType::U32 | DType::U64) {
+                        continue;
+                    }
+                    let limit = match inner.as_ref() {
+                        Expr::Iv(0) => self.program.iters.min(barr.len),
+                        _ => barr.len,
+                    };
+                    let (max, at) = *max_used.entry((*b, limit)).or_insert_with(|| {
+                        self.mem.max_word_in(barr.base, limit as u64, barr.dtype.size())
+                    });
+                    if max >= tlen as u64 {
+                        return Err(format!(
+                            "index array {}[{}] = {} is out of bounds for {} ({} elements)",
+                            barr.name,
+                            at,
+                            max,
+                            self.program.arrays[target].name,
+                            tlen
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Access sites: (target array, index expression) for every load, store,
+/// and RMW in the statement tree, including nested loads inside index and
+/// value expressions.
+fn collect_stmt_sites<'a>(stmts: &'a [Stmt], out: &mut Vec<(ArrId, &'a Expr)>) {
+    for s in stmts {
+        match s {
+            Stmt::RangeFor { lo, hi, body } => {
+                collect_expr_sites(lo, out);
+                collect_expr_sites(hi, out);
+                collect_stmt_sites(body, out);
+            }
+            Stmt::If { cond, body } => {
+                collect_expr_sites(cond, out);
+                collect_stmt_sites(body, out);
+            }
+            Stmt::Store { arr, idx, val } | Stmt::Rmw { arr, idx, val, .. } => {
+                out.push((*arr, idx));
+                collect_expr_sites(idx, out);
+                collect_expr_sites(val, out);
+            }
+            Stmt::Sink { val, .. } => collect_expr_sites(val, out),
+        }
+    }
+}
+
+fn collect_expr_sites<'a>(e: &'a Expr, out: &mut Vec<(ArrId, &'a Expr)>) {
+    match e {
+        Expr::Load(arr, idx) => {
+            out.push((*arr, idx));
+            collect_expr_sites(idx, out);
+        }
+        Expr::Bin(_, a, b) => {
+            collect_expr_sites(a, out);
+            collect_expr_sites(b, out);
+        }
+        _ => {}
+    }
 }
 
 /// Size scaling for the default datasets: `1` = the repo defaults
@@ -66,35 +202,23 @@ impl Scale {
     }
 }
 
-/// The 12 main evaluation workloads in paper order.
+/// The 12 main evaluation workloads in paper order (a thin wrapper over
+/// [`Registry::paper`]).
 pub fn all(scale: Scale) -> Vec<WorkloadSpec> {
-    vec![
-        nas::cg(scale),
-        nas::is(scale),
-        gap::bfs(scale),
-        gap::pr(scale),
-        gap::bc(scale),
-        ume::gz(scale),
-        ume::gzp(scale),
-        ume::gzi(scale),
-        ume::gzpi(scale),
-        spatter::xrage(scale),
-        hashjoin::prh(scale),
-        hashjoin::pro(scale),
-    ]
+    Registry::paper().build_all(scale)
 }
 
-/// Workload names in paper order (for reports).
+/// Workload names in paper order (for reports; a thin wrapper over
+/// [`Registry::paper`]).
 pub fn names() -> Vec<&'static str> {
-    vec![
-        "CG", "IS", "BFS", "PR", "BC", "GZ", "GZP", "GZI", "GZPI", "XRAGE", "PRH", "PRO",
-    ]
+    Registry::paper().names()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compiler::analyze;
+    use crate::util::Rng;
 
     #[test]
     fn all_workloads_build_and_are_legal() {
@@ -120,5 +244,84 @@ mod tests {
         assert_eq!(ws.len(), 12);
         let got: Vec<&str> = ws.iter().map(|w| w.program.name).collect();
         assert_eq!(got, names());
+    }
+
+    /// `C[i] = A[B[i]]` with explicit index contents.
+    fn gather_spec(indices: &[u32], data_len: usize) -> WorkloadSpec {
+        let n = indices.len();
+        let mut p = Program::new("bounds-check", n);
+        let a = p.add_array("A", DType::F32, data_len);
+        let b = p.add_array("B", DType::U32, n);
+        let c = p.add_array("C", DType::F32, n);
+        p.body = vec![Stmt::Store {
+            arr: c,
+            idx: Expr::Iv(0),
+            val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+        }];
+        let mut mem = MemImage::new();
+        mem.store_u32_slice(p.arrays[b].base, indices);
+        let mut rng = Rng::new(7);
+        for i in 0..data_len as u64 {
+            mem.write_f32(p.arrays[a].addr(i), rng.f32());
+        }
+        WorkloadSpec {
+            program: p,
+            mem,
+            warm_caches: false,
+            suite: "test",
+        }
+    }
+
+    #[test]
+    fn in_range_pattern_validates() {
+        let w = gather_spec(&[0, 1, 15, 7], 16);
+        assert!(w.validate_bounds().is_ok());
+    }
+
+    #[test]
+    fn out_of_range_pattern_is_rejected() {
+        let w = gather_spec(&[0, 1, 16, 7], 16); // 16 >= len(A)
+        let err = w.validate_bounds().unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+        assert!(err.contains("B[2]"), "{err}");
+    }
+
+    #[test]
+    fn overlong_outer_loop_is_rejected() {
+        let mut p = Program::new("iters-check", 32);
+        let a = p.add_array("A", DType::U32, 16); // 16 < 32 iters
+        p.body = vec![Stmt::Sink {
+            val: Expr::load(a, Expr::Iv(0)),
+            cost: 1,
+        }];
+        let w = WorkloadSpec {
+            program: p,
+            mem: MemImage::new(),
+            warm_caches: false,
+            suite: "test",
+        };
+        assert!(w.validate_bounds().is_err());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn debug_construction_panics_on_out_of_range() {
+        let w = gather_spec(&[99], 16);
+        let WorkloadSpec {
+            program,
+            mem,
+            warm_caches,
+            suite,
+        } = w;
+        let _ = WorkloadSpec::new(program, mem, warm_caches, suite);
+    }
+
+    #[test]
+    fn computed_indices_are_skipped_not_rejected() {
+        // PRH-style hashed index: `Bin` in the index expression cannot be
+        // bounded statically and must not be a false positive.
+        let w = hashjoin::prh(Scale::test());
+        assert!(w.validate_bounds().is_ok());
     }
 }

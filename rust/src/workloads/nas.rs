@@ -56,12 +56,7 @@ pub fn cg(scale: Scale) -> WorkloadSpec {
     for i in 0..xlen as u64 {
         mem.write_f32(p.arrays[x].addr(i), rng.f32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "NAS",
-    }
+    WorkloadSpec::new(p, mem, false, "NAS")
 }
 
 /// NAS IS key counting (bucketless, as footnoted in §5).
@@ -89,12 +84,7 @@ pub fn is(scale: Scale) -> WorkloadSpec {
     for i in 0..keys as u64 {
         mem.write_u32(p.arrays[k].addr(i), rng.below(key_space as u64) as u32);
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "NAS",
-    }
+    WorkloadSpec::new(p, mem, false, "NAS")
 }
 
 #[cfg(test)]

@@ -1,0 +1,206 @@
+//! Suite registry: workload **name → builder**, in a stable order.
+//!
+//! The paper suite used to be a hand-maintained `all()`/`names()` pair
+//! that had to agree element-for-element; adding a workload meant editing
+//! both plus every bench that wanted it. The registry makes suites data:
+//! each entry is a named, family-tagged builder closure, paper order is
+//! the registration order, and generated scenarios
+//! ([`crate::workloads::synth`]) register exactly like hand-written
+//! kernels. `engine::Sweep::workloads(reg.build_family(..))` is how a
+//! sweep iterates a **workload-family axis** — the registry owns which
+//! workloads exist, the sweep owns configs × systems.
+
+use super::synth::{self, ScenarioSpec};
+use super::{gap, hashjoin, nas, spatter, ume, Scale, WorkloadSpec};
+
+type BuildFn = Box<dyn Fn(Scale) -> WorkloadSpec + Send + Sync>;
+
+struct Entry {
+    name: &'static str,
+    family: &'static str,
+    build: BuildFn,
+}
+
+/// Ordered name → builder table; see the module docs.
+pub struct Registry {
+    entries: Vec<Entry>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Register a builder under `name` (must be unique) and `family`.
+    /// Registration order is iteration order everywhere.
+    pub fn register(
+        &mut self,
+        name: &'static str,
+        family: &'static str,
+        build: impl Fn(Scale) -> WorkloadSpec + Send + Sync + 'static,
+    ) {
+        assert!(
+            self.lookup(name).is_none(),
+            "duplicate workload name {name:?}"
+        );
+        self.entries.push(Entry {
+            name,
+            family,
+            build: Box::new(build),
+        });
+    }
+
+    /// Register a generated scenario (family `"synth"`, name from the
+    /// spec).
+    pub fn register_scenario(&mut self, spec: ScenarioSpec) {
+        let name = spec.name;
+        self.register(name, "synth", move |scale| spec.build(scale));
+    }
+
+    /// The paper's 12-workload evaluation suite, in paper order
+    /// (Figures 9-12).
+    pub fn paper() -> Self {
+        let mut r = Registry::new();
+        r.register("CG", "NAS", nas::cg);
+        r.register("IS", "NAS", nas::is);
+        r.register("BFS", "GAP", gap::bfs);
+        r.register("PR", "GAP", gap::pr);
+        r.register("BC", "GAP", gap::bc);
+        r.register("GZ", "UME", ume::gz);
+        r.register("GZP", "UME", ume::gzp);
+        r.register("GZI", "UME", ume::gzi);
+        r.register("GZPI", "UME", ume::gzpi);
+        r.register("XRAGE", "Spatter", spatter::xrage);
+        r.register("PRH", "Hash-Join", hashjoin::prh);
+        r.register("PRO", "Hash-Join", hashjoin::pro);
+        r
+    }
+
+    /// The default generated scenario space ([`synth::scenario_grid`]).
+    pub fn synth() -> Self {
+        Registry::new().with_synth()
+    }
+
+    /// Append the generated scenario space after the existing entries.
+    pub fn with_synth(mut self) -> Self {
+        for spec in synth::scenario_grid() {
+            self.register_scenario(spec);
+        }
+        self
+    }
+
+    fn lookup(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Number of registered workloads.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Workload names in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Families in first-registration order, deduplicated.
+    pub fn families(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for e in &self.entries {
+            if !out.contains(&e.family) {
+                out.push(e.family);
+            }
+        }
+        out
+    }
+
+    /// The family `name` belongs to, if registered.
+    pub fn family_of(&self, name: &str) -> Option<&'static str> {
+        self.lookup(name).map(|e| e.family)
+    }
+
+    /// Build one workload by name.
+    pub fn build(&self, name: &str, scale: Scale) -> Option<WorkloadSpec> {
+        self.lookup(name).map(|e| (e.build)(scale))
+    }
+
+    /// Build every workload, in registration order.
+    pub fn build_all(&self, scale: Scale) -> Vec<WorkloadSpec> {
+        self.entries.iter().map(|e| (e.build)(scale)).collect()
+    }
+
+    /// Build one family's workloads, in registration order.
+    pub fn build_family(&self, family: &str, scale: Scale) -> Vec<WorkloadSpec> {
+        self.entries
+            .iter()
+            .filter(|e| e.family == family)
+            .map(|e| (e.build)(scale))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_registry_preserves_order_and_families() {
+        let r = Registry::paper();
+        assert_eq!(
+            r.names(),
+            vec!["CG", "IS", "BFS", "PR", "BC", "GZ", "GZP", "GZI", "GZPI", "XRAGE", "PRH", "PRO"]
+        );
+        assert_eq!(
+            r.families(),
+            vec!["NAS", "GAP", "UME", "Spatter", "Hash-Join"]
+        );
+        assert_eq!(r.family_of("BFS"), Some("GAP"));
+        assert_eq!(r.family_of("nope"), None);
+    }
+
+    #[test]
+    fn builds_by_name_and_family() {
+        let r = Registry::paper();
+        let w = r.build("IS", Scale::test()).expect("IS registered");
+        assert_eq!(w.program.name, "IS");
+        assert!(r.build("nope", Scale::test()).is_none());
+        let gap = r.build_family("GAP", Scale::test());
+        let got: Vec<&str> = gap.iter().map(|w| w.program.name).collect();
+        assert_eq!(got, vec!["BFS", "PR", "BC"]);
+    }
+
+    #[test]
+    fn synth_scenarios_register_alongside_paper_kernels() {
+        let r = Registry::paper().with_synth();
+        assert_eq!(r.len(), 12 + synth::scenario_grid().len());
+        // Paper order is untouched; synth comes after, as its own family.
+        assert_eq!(r.names()[..12], super::super::names()[..]);
+        assert_eq!(r.families().last(), Some(&"synth"));
+        assert_eq!(r.family_of("uni-gather"), Some("synth"));
+        // Building by name reaches a generated scenario (the whole grid is
+        // built and checked in tests/integration_synth.rs).
+        let w = r.build("uni-gather", Scale::test()).expect("registered");
+        assert_eq!(w.suite, "synth");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate workload name")]
+    fn duplicate_names_are_rejected() {
+        let mut r = Registry::paper();
+        r.register("CG", "NAS", nas::cg);
+    }
+}

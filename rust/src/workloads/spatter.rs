@@ -6,6 +6,7 @@
 //! separated by large jumps (block boundaries and level changes). The
 //! paper's pattern is `ST A[B[i]] = V[i]` — a bulk scatter.
 
+use super::synth::dist::{self, IndexDist};
 use super::{Scale, WorkloadSpec};
 use crate::compiler::ir::{Expr, Program, Stmt};
 use crate::dx100::isa::DType;
@@ -14,22 +15,17 @@ use crate::util::Rng;
 
 /// Synthesize an xRAGE-like index trace: runs of 8–64 elements with
 /// stride 1/2/4, run bases jumping uniformly over the target array.
+/// Delegates to the generalized runs distribution with the historical
+/// parameters — the RNG draw sequence is unchanged, so the realized
+/// trace (and XRAGE's cache fingerprint) is bit-identical to the
+/// original hand-rolled generator.
 pub fn xrage_pattern(n: usize, target: usize, seed: u64) -> Vec<u32> {
-    let mut rng = Rng::new(seed);
-    let mut out = Vec::with_capacity(n);
-    while out.len() < n {
-        let run = rng.range(8, 65) as usize;
-        let stride = *rng.pick(&[1u64, 1, 2, 4]);
-        let span = run as u64 * stride;
-        let base = rng.below(target as u64 - span);
-        for k in 0..run {
-            if out.len() >= n {
-                break;
-            }
-            out.push((base + k as u64 * stride) as u32);
-        }
-    }
-    out
+    let runs = IndexDist::Runs {
+        min_run: 8,
+        max_run: 64,
+        strides: &[1, 1, 2, 4],
+    };
+    dist::generate(&runs, n, target, 0.0, None, seed)
 }
 
 /// Bulk scatter with the xRAGE pattern.
@@ -58,12 +54,7 @@ pub fn xrage(scale: Scale) -> WorkloadSpec {
     for i in 0..n as u64 {
         mem.write_f32(p.arrays[v].addr(i), rng.f32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "Spatter",
-    }
+    WorkloadSpec::new(p, mem, false, "Spatter")
 }
 
 #[cfg(test)]

@@ -1,0 +1,334 @@
+//! Index-stream distributions for the scenario synthesizer.
+//!
+//! Every generator is a pure function of its parameters and a 64-bit
+//! seed: the same `(dist, n, target, knobs, seed)` tuple produces the
+//! same `Vec<u32>` on every run of a given build, which is what makes
+//! generated workloads first-class citizens of the engine's persisted
+//! result cache (`MemImage::stable_hash` covers the realized indices,
+//! and the cache key includes the binary's identity). Zipf sampling uses
+//! `f64::powf`, whose last-ULP rounding can differ across platforms /
+//! libm builds, so cross-*platform* bit-identity is not guaranteed —
+//! the binary-keyed cache makes that distinction harmless.
+//!
+//! The axes mirror what the related work identifies as the levers on
+//! reordering/coalescing hardware: index *skew* (uniform vs Zipf — hot
+//! entries create coalescing opportunity), *spatial run structure*
+//! (clustered runs à la the xRAGE trace — row-buffer locality), serial
+//! *dependence* (pointer chase), and *bucket clustering* (hash-join
+//! partitions). Two post-passes add orthogonal knobs: `dup` (immediate
+//! repeats — the pure coalescing axis) and a hot-set fold (popularity
+//! skew with a controlled working-set fraction).
+
+use crate::util::Rng;
+
+/// How the index stream is distributed over the target array.
+#[derive(Clone, Debug)]
+pub enum IndexDist {
+    /// Independent uniform draws over the whole target.
+    Uniform,
+    /// Zipf-distributed ranks (`theta` in `(0, 1)`; larger = more skew),
+    /// scrambled over the target so popularity skew does not collapse
+    /// into spatial locality.
+    Zipf {
+        /// Skew exponent, `0 < theta < 1`.
+        theta: f64,
+    },
+    /// Runs of `min_run..=max_run` consecutive strided elements with
+    /// uniformly-jumping run bases — the xRAGE/Spatter spatial shape.
+    Runs {
+        /// Shortest run length (elements).
+        min_run: u64,
+        /// Longest run length (elements).
+        max_run: u64,
+        /// Stride mix; each run picks one uniformly (duplicates bias).
+        strides: &'static [u64],
+    },
+    /// A walk over a random single-cycle permutation of the target:
+    /// every index depends on the previous one (bulk linked-list
+    /// traversal), with no repeats within `target` steps.
+    Chase,
+    /// Draws clustered into the head regions of `buckets` equal slices of
+    /// the target — the hash-join bucket-partition shape (high
+    /// duplication, clustered spatially per bucket).
+    Hashed {
+        /// Number of bucket slices.
+        buckets: usize,
+    },
+}
+
+/// Locality knob: fold `access` of all draws into the first `set`
+/// fraction of the target (e.g. `set: 0.1, access: 0.9` = 90% of
+/// accesses hit 10% of the data).
+#[derive(Clone, Copy, Debug)]
+pub struct Hotspot {
+    /// Fraction of the target that is hot, `(0, 1]`.
+    pub set: f64,
+    /// Fraction of draws folded into the hot set, `[0, 1]`.
+    pub access: f64,
+}
+
+/// Generate `n` indices in `[0, target)`: the base distribution, then the
+/// hot-set fold, then the duplication pass (`dup` = probability a draw
+/// repeats its predecessor exactly).
+pub fn generate(
+    dist: &IndexDist,
+    n: usize,
+    target: usize,
+    dup: f64,
+    hot: Option<Hotspot>,
+    seed: u64,
+) -> Vec<u32> {
+    assert!(target >= 2, "target too small to distribute over");
+    assert!(
+        target <= u32::MAX as usize,
+        "indices are u32; target {target} overflows"
+    );
+    let mut rng = Rng::new(seed);
+    let mut out = match dist {
+        IndexDist::Uniform => (0..n).map(|_| rng.below(target as u64) as u32).collect(),
+        IndexDist::Zipf { theta } => zipf(n, target as u64, *theta, &mut rng),
+        IndexDist::Runs {
+            min_run,
+            max_run,
+            strides,
+        } => runs(n, target as u64, *min_run, *max_run, strides, &mut rng),
+        IndexDist::Chase => chase(n, target, &mut rng),
+        IndexDist::Hashed { buckets } => hashed(n, target as u64, *buckets, &mut rng),
+    };
+    if let Some(h) = hot {
+        assert!(h.set > 0.0 && h.set <= 1.0, "hot set fraction {}", h.set);
+        let hot_len = ((target as f64 * h.set) as u32).max(1);
+        for x in out.iter_mut() {
+            if rng.chance(h.access) {
+                *x %= hot_len;
+            }
+        }
+    }
+    if dup > 0.0 {
+        for i in 1..out.len() {
+            let prev = out[i - 1];
+            if rng.chance(dup) {
+                out[i] = prev;
+            }
+        }
+    }
+    out
+}
+
+/// Zipf via the Gray et al. constant-time inversion (the YCSB generator):
+/// rank 0 is the hottest item. Ranks are scrambled over the target with a
+/// fixed odd multiplier so the hot set is spatially scattered.
+fn zipf(n: usize, items: u64, theta: f64, rng: &mut Rng) -> Vec<u32> {
+    assert!(
+        theta > 0.0 && theta < 1.0,
+        "zipf theta must be in (0, 1), got {theta}"
+    );
+    let zetan: f64 = (1..=items).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+    let zeta2 = 1.0 + 0.5f64.powf(theta);
+    let alpha = 1.0 / (1.0 - theta);
+    let eta = (1.0 - (2.0 / items as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+    (0..n)
+        .map(|_| {
+            let u = rng.f64();
+            let uz = u * zetan;
+            let rank = if uz < 1.0 {
+                0
+            } else if uz < 1.0 + 0.5f64.powf(theta) {
+                1
+            } else {
+                (items as f64 * (eta * u - eta + 1.0).powf(alpha)) as u64
+            }
+            .min(items - 1);
+            // Scramble: fixed odd multiplier is a bijection mod 2^64, and
+            // the modulo spreads ranks over the whole target.
+            (rank.wrapping_mul(0x9E37_79B9_7F4A_7C15) % items) as u32
+        })
+        .collect()
+}
+
+/// Strided runs with uniform base jumps (generalized `xrage_pattern`).
+fn runs(
+    n: usize,
+    target: u64,
+    min_run: u64,
+    max_run: u64,
+    strides: &[u64],
+    rng: &mut Rng,
+) -> Vec<u32> {
+    assert!(min_run >= 1 && max_run >= min_run);
+    let max_stride = strides.iter().copied().max().expect("non-empty stride mix");
+    assert!(
+        max_run * max_stride < target,
+        "runs span the whole target; shrink max_run/strides"
+    );
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let run = rng.range(min_run, max_run + 1);
+        let stride = *rng.pick(strides);
+        let span = run * stride;
+        let base = rng.below(target - span);
+        for k in 0..run {
+            if out.len() >= n {
+                break;
+            }
+            out.push((base + k * stride) as u32);
+        }
+    }
+    out
+}
+
+/// Walk a random cyclic permutation: index `k+1` is wherever index `k`
+/// points. Sattolo's algorithm yields a **single** cycle covering the
+/// whole target (a plain shuffle could strand the walk in a short
+/// cycle), so the walk provably never repeats within `target` steps.
+/// The walk is precomputed here — the IR consumes a plain index array —
+/// but the realized stream has the pointer-chase distribution:
+/// near-uniform jumps, zero reuse.
+fn chase(n: usize, target: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..target as u32).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.below_usize(i); // [0, i): Sattolo, not Fisher-Yates
+        perm.swap(i, j);
+    }
+    let mut at = rng.below(target as u64) as u32;
+    (0..n)
+        .map(|_| {
+            let here = at;
+            at = perm[at as usize];
+            here
+        })
+        .collect()
+}
+
+/// Bucketed draws: pick a bucket uniformly, then one of the first
+/// `min(width, 16)` slots of that bucket's slice — hash-table heads.
+fn hashed(n: usize, target: u64, buckets: usize, rng: &mut Rng) -> Vec<u32> {
+    let buckets = (buckets as u64).clamp(1, target);
+    let width = (target / buckets).max(1);
+    let head = width.min(16);
+    (0..n)
+        .map(|_| {
+            let b = rng.below(buckets);
+            ((b * width + rng.below(head)).min(target - 1)) as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    const N: usize = 4096;
+    const TARGET: usize = 65536;
+
+    fn sample(dist: IndexDist) -> Vec<u32> {
+        generate(&dist, N, TARGET, 0.0, None, 0xD15)
+    }
+
+    #[test]
+    fn all_dists_stay_in_bounds_and_are_deterministic() {
+        let dists = [
+            IndexDist::Uniform,
+            IndexDist::Zipf { theta: 0.8 },
+            IndexDist::Runs {
+                min_run: 8,
+                max_run: 64,
+                strides: &[1, 1, 2, 4],
+            },
+            IndexDist::Chase,
+            IndexDist::Hashed { buckets: 256 },
+        ];
+        for d in dists {
+            let a = sample(d.clone());
+            assert_eq!(a.len(), N);
+            assert!(a.iter().all(|&i| (i as usize) < TARGET), "{d:?}");
+            assert_eq!(a, sample(d.clone()), "{d:?} not seed-deterministic");
+            let b = generate(&d, N, TARGET, 0.0, None, 0xD16);
+            assert_ne!(a, b, "{d:?} ignores its seed");
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_uniform_is_not() {
+        let count_top = |xs: &[u32]| {
+            // Mass on the 16 most frequent values.
+            let mut freq = std::collections::HashMap::new();
+            for &x in xs {
+                *freq.entry(x).or_insert(0usize) += 1;
+            }
+            let mut counts: Vec<usize> = freq.values().copied().collect();
+            counts.sort_unstable_by(|a, b| b.cmp(a));
+            counts.iter().take(16).sum::<usize>()
+        };
+        let zipf = count_top(&sample(IndexDist::Zipf { theta: 0.8 }));
+        let uni = count_top(&sample(IndexDist::Uniform));
+        assert!(
+            zipf > uni * 4,
+            "zipf top-16 mass {zipf} not clearly above uniform {uni}"
+        );
+    }
+
+    #[test]
+    fn runs_have_small_steps_and_big_jumps() {
+        let xs = sample(IndexDist::Runs {
+            min_run: 8,
+            max_run: 64,
+            strides: &[1, 1, 2, 4],
+        });
+        let mut small = 0;
+        let mut large = 0;
+        for w in xs.windows(2) {
+            let d = (w[1] as i64 - w[0] as i64).unsigned_abs();
+            if d <= 4 {
+                small += 1;
+            } else if d > 1024 {
+                large += 1;
+            }
+        }
+        assert!(small > xs.len() * 3 / 4, "small={small}");
+        assert!(large > 16, "large={large}");
+    }
+
+    #[test]
+    fn chase_never_repeats_within_target_steps() {
+        let xs = sample(IndexDist::Chase);
+        let set: HashSet<u32> = xs.iter().copied().collect();
+        assert_eq!(set.len(), xs.len(), "a permutation walk cannot repeat");
+    }
+
+    #[test]
+    fn hashed_clusters_into_bucket_heads() {
+        let xs = sample(IndexDist::Hashed { buckets: 256 });
+        let set: HashSet<u32> = xs.iter().copied().collect();
+        // 256 buckets x 16 head slots bounds the distinct values.
+        assert!(set.len() <= 256 * 16, "{} distinct", set.len());
+        assert!(set.len() > 256, "{} distinct", set.len());
+    }
+
+    #[test]
+    fn dup_knob_raises_immediate_repeats() {
+        let plain = generate(&IndexDist::Uniform, N, TARGET, 0.0, None, 0xD17);
+        let dupped = generate(&IndexDist::Uniform, N, TARGET, 0.5, None, 0xD17);
+        let repeats = |xs: &[u32]| xs.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(repeats(&plain) < N / 64);
+        let r = repeats(&dupped);
+        assert!((N / 3..2 * N / 3).contains(&r), "repeat count {r}");
+    }
+
+    #[test]
+    fn hot_knob_concentrates_accesses() {
+        let hot = Hotspot {
+            set: 0.1,
+            access: 0.9,
+        };
+        let xs = generate(&IndexDist::Uniform, N, TARGET, 0.0, Some(hot), 0xD18);
+        let hot_len = (TARGET / 10) as u32;
+        let in_hot = xs.iter().filter(|&&x| x < hot_len).count();
+        assert!(
+            in_hot > N * 8 / 10,
+            "{in_hot}/{N} draws in the hot set; expected ~91%"
+        );
+        assert!(xs.iter().all(|&x| (x as usize) < TARGET));
+    }
+}

@@ -1,0 +1,476 @@
+//! Declarative scenario synthesis: generate indirect-access workloads
+//! from (index distribution × access shape × size/locality knobs) specs
+//! instead of hand-writing a new IR-building module per scenario.
+//!
+//! The paper evaluates DX100 on 12 fixed kernels, but its claim is
+//! general: access reordering, coalescing, and interleaving help across
+//! diverse access types and index distributions (§5, Table 1). This
+//! module turns "a scenario" into data:
+//!
+//! * [`PatternSpec`] describes an index stream compositionally — a
+//!   [`dist::IndexDist`] (uniform / zipf / clustered runs / pointer
+//!   chase / hash-bucketed) plus dataset-size, dtype, duplication, and
+//!   hot-set locality knobs;
+//! * [`AccessShape`] picks the loop body the stream drives: gather
+//!   `OUT[i] = A[B[i]]`, scatter, RMW/histogram, conditional RMW, or the
+//!   2-level `A[B[C[i]]]` indirection;
+//! * [`ScenarioSpec`] combines the two and lowers to the existing
+//!   [`Program`] + [`MemImage`] pair, returning a standard
+//!   [`WorkloadSpec`] that compiles, simulates, caches, and reports like
+//!   any hand-written kernel.
+//!
+//! Generation is **seed-deterministic**: a spec realizes the same bytes
+//! every run, so `MemImage::stable_hash` keys generated workloads into
+//! the persisted result cache exactly like the paper kernels — rerunning
+//! `bench scenario_space` replays warm cells instead of re-simulating.
+//!
+//! [`scenario_grid`] enumerates the default scenario space (every
+//! distribution × every shape, plus knob variants); the suite registry
+//! ([`crate::workloads::Registry`]) registers it alongside the paper
+//! kernels so sweeps can iterate workload families by name.
+
+pub mod dist;
+
+pub use dist::{Hotspot, IndexDist};
+
+use super::{Scale, WorkloadSpec};
+use crate::compiler::ir::{Expr, Program, Stmt};
+use crate::dx100::isa::{DType, Op};
+use crate::dx100::mem_image::MemImage;
+use crate::util::{Fnv, Rng};
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+/// An index stream: distribution plus size/type/locality knobs. All
+/// sizes are *base* element counts, scaled at build time (`stream` via
+/// [`Scale::apply`], `target` via [`Scale::target`] like every paper
+/// kernel's indirect target).
+#[derive(Clone, Debug)]
+pub struct PatternSpec {
+    /// Index distribution.
+    pub dist: IndexDist,
+    /// Base index-stream length (outer-loop iterations).
+    pub stream: usize,
+    /// Base target-array length (the array the indices point into).
+    pub target: usize,
+    /// Target/value element type (`F32` or `F64`).
+    pub dtype: DType,
+    /// Probability a draw repeats its predecessor (coalescing knob).
+    pub dup: f64,
+    /// Optional hot-set fold (locality knob).
+    pub hot: Option<Hotspot>,
+    /// Generation seed; every derived RNG stream mixes in a distinct
+    /// constant, so one seed pins the whole realized workload.
+    pub seed: u64,
+}
+
+impl PatternSpec {
+    /// A pattern with the default sizes: 16K-index stream (× scale) over
+    /// a 1M-element target (× capped scale — 4-16 MiB of `F32`, past the
+    /// LLC like the paper's indirect targets).
+    pub fn new(dist: IndexDist, seed: u64) -> Self {
+        PatternSpec {
+            dist,
+            stream: 16384,
+            target: 1 << 20,
+            dtype: DType::F32,
+            dup: 0.0,
+            hot: None,
+            seed,
+        }
+    }
+
+    /// Override the base stream length.
+    pub fn with_stream(mut self, stream: usize) -> Self {
+        self.stream = stream;
+        self
+    }
+
+    /// Override the base target length.
+    pub fn with_target(mut self, target: usize) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Override the element type (`F32` or `F64`).
+    pub fn with_dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Set the duplication knob.
+    pub fn with_dup(mut self, dup: f64) -> Self {
+        self.dup = dup;
+        self
+    }
+
+    /// Set the hot-set locality knob.
+    pub fn with_hot(mut self, set: f64, access: f64) -> Self {
+        self.hot = Some(Hotspot { set, access });
+        self
+    }
+
+    /// Realize `n` indices in `[0, target)` for this pattern.
+    pub fn indices(&self, n: usize, target: usize) -> Vec<u32> {
+        dist::generate(&self.dist, n, target, self.dup, self.hot, self.seed)
+    }
+}
+
+/// The access shape the index stream drives (Table 1's access types).
+#[derive(Clone, Debug)]
+pub enum AccessShape {
+    /// `OUT[i] = A[B[i]]` — bulk indirect load.
+    Gather,
+    /// `A[B[i]] = V[i]` — bulk indirect store. Like the §6.1 Scatter
+    /// microbenchmark, the baseline runs single-core (WAW hazards).
+    Scatter,
+    /// `A[B[i]] op= V[i]` — bulk read-modify-write / histogram.
+    Rmw {
+        /// Combining op (must be associative + commutative).
+        op: Op,
+        /// Whether the multicore baseline needs atomics.
+        atomic: bool,
+    },
+    /// `if (M[i] >= F) A[B[i]] += V[i]` — conditional indirect access;
+    /// `density` is the fraction of iterations whose condition holds.
+    Conditional {
+        /// Taken-fraction of the condition, `[0, 1]`.
+        density: f64,
+    },
+    /// `OUT[i] = A[MAP[B[i]]]` — 2-level indirection through a uniform
+    /// random map (the `LD A[B[C[i]]]` shape).
+    TwoLevel,
+}
+
+/// A complete scenario: named pattern × shape, lowered on demand.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Workload name (interned; shows up in reports, JSON, cache keys).
+    pub name: &'static str,
+    /// The index stream.
+    pub pattern: PatternSpec,
+    /// The loop body the stream drives.
+    pub shape: AccessShape,
+}
+
+/// Intern a workload name: `Program` and `RunStats` carry `&'static str`
+/// names, and generated scenarios mint theirs at runtime. Each distinct
+/// name leaks exactly once per process.
+fn intern(name: &str) -> &'static str {
+    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = pool.lock().expect("name pool poisoned");
+    if let Some(&s) = guard.get(name) {
+        return s;
+    }
+    let s: &'static str = Box::leak(name.to_string().into_boxed_str());
+    guard.insert(s);
+    s
+}
+
+impl ScenarioSpec {
+    /// A named scenario (the name is interned for `'static` metadata).
+    pub fn new(name: &str, pattern: PatternSpec, shape: AccessShape) -> Self {
+        ScenarioSpec {
+            name: intern(name),
+            pattern,
+            shape,
+        }
+    }
+
+    /// Lower to a ready-to-compile workload at `scale`. Deterministic:
+    /// the same spec and scale realize bit-identical memory images.
+    pub fn build(&self, scale: Scale) -> WorkloadSpec {
+        assert!(
+            matches!(self.pattern.dtype, DType::F32 | DType::F64),
+            "{}: scenario targets must be F32 or F64",
+            self.name
+        );
+        let n = scale.apply(self.pattern.stream);
+        let target = scale.target(self.pattern.target);
+        let dtype = self.pattern.dtype;
+        let seed = self.pattern.seed;
+        let mut p = Program::new(self.name, n);
+        let mut mem = MemImage::new();
+        match &self.shape {
+            AccessShape::Gather => {
+                let a = p.add_array("A", dtype, target);
+                let b = p.add_array("B", DType::U32, n);
+                let out = p.add_array("OUT", dtype, n);
+                p.body = vec![Stmt::Store {
+                    arr: out,
+                    idx: Expr::Iv(0),
+                    val: Expr::load(a, Expr::load(b, Expr::Iv(0))),
+                }];
+                mem.store_u32_slice(p.arrays[b].base, &self.pattern.indices(n, target));
+                fill_values(&p, &mut mem, a, target, seed ^ 0xA0);
+            }
+            AccessShape::Scatter => {
+                let a = p.add_array("A", dtype, target);
+                let b = p.add_array("B", DType::U32, n);
+                let v = p.add_array("V", dtype, n);
+                p.single_core_baseline = true;
+                p.body = vec![
+                    Stmt::Store {
+                        arr: a,
+                        idx: Expr::load(b, Expr::Iv(0)),
+                        val: Expr::load(v, Expr::Iv(0)),
+                    },
+                    Stmt::Sink {
+                        val: Expr::load(v, Expr::Iv(0)),
+                        cost: 1,
+                    },
+                ];
+                mem.store_u32_slice(p.arrays[b].base, &self.pattern.indices(n, target));
+                fill_values(&p, &mut mem, v, n, seed ^ 0xA1);
+            }
+            AccessShape::Rmw { op, atomic } => {
+                let a = p.add_array("A", dtype, target);
+                let b = p.add_array("B", DType::U32, n);
+                let v = p.add_array("V", dtype, n);
+                p.atomic_rmw = *atomic;
+                p.body = vec![
+                    Stmt::Rmw {
+                        arr: a,
+                        idx: Expr::load(b, Expr::Iv(0)),
+                        op: *op,
+                        val: Expr::load(v, Expr::Iv(0)),
+                    },
+                    Stmt::Sink {
+                        val: Expr::load(v, Expr::Iv(0)),
+                        cost: 1,
+                    },
+                ];
+                mem.store_u32_slice(p.arrays[b].base, &self.pattern.indices(n, target));
+                fill_values(&p, &mut mem, a, target, seed ^ 0xA2);
+                fill_values(&p, &mut mem, v, n, seed ^ 0xA3);
+            }
+            AccessShape::Conditional { density } => {
+                assert!((0.0..=1.0).contains(density), "{}: density", self.name);
+                let a = p.add_array("A", dtype, target);
+                let b = p.add_array("B", DType::U32, n);
+                let v = p.add_array("V", dtype, n);
+                let m = p.add_array("M", DType::F32, n);
+                // M is uniform in [0, 1): P(M >= 1 - density) = density.
+                p.set_reg(0, ((1.0 - density) as f32).to_bits() as u64);
+                p.atomic_rmw = true;
+                p.body = vec![
+                    Stmt::If {
+                        cond: Expr::bin(
+                            Op::Ge,
+                            Expr::load(m, Expr::Iv(0)),
+                            Expr::Reg(0, DType::F32),
+                        ),
+                        body: vec![Stmt::Rmw {
+                            arr: a,
+                            idx: Expr::load(b, Expr::Iv(0)),
+                            op: Op::Add,
+                            val: Expr::load(v, Expr::Iv(0)),
+                        }],
+                    },
+                    Stmt::Sink {
+                        val: Expr::load(v, Expr::Iv(0)),
+                        cost: 1,
+                    },
+                ];
+                mem.store_u32_slice(p.arrays[b].base, &self.pattern.indices(n, target));
+                fill_values(&p, &mut mem, a, target, seed ^ 0xA4);
+                fill_values(&p, &mut mem, v, n, seed ^ 0xA5);
+                let mut rng = Rng::new(seed ^ 0xA6);
+                for i in 0..n as u64 {
+                    mem.write_f32(p.arrays[m].addr(i), rng.f32());
+                }
+            }
+            AccessShape::TwoLevel => {
+                let a = p.add_array("A", dtype, target);
+                let map = p.add_array("MAP", DType::U32, target);
+                let b = p.add_array("B", DType::U32, n);
+                let out = p.add_array("OUT", dtype, n);
+                p.body = vec![Stmt::Store {
+                    arr: out,
+                    idx: Expr::Iv(0),
+                    val: Expr::load(a, Expr::load(map, Expr::load(b, Expr::Iv(0)))),
+                }];
+                // The pattern indexes MAP; MAP scatters uniformly into A,
+                // so the pattern's duplication structure survives while
+                // the final addresses decorrelate spatially.
+                mem.store_u32_slice(p.arrays[b].base, &self.pattern.indices(n, target));
+                let mut rng = Rng::new(seed ^ 0xA7);
+                for i in 0..target as u64 {
+                    mem.write_u32(p.arrays[map].addr(i), rng.below(target as u64) as u32);
+                }
+                fill_values(&p, &mut mem, a, target, seed ^ 0xA8);
+            }
+        }
+        WorkloadSpec::new(p, mem, false, "synth")
+    }
+}
+
+/// Fill `len` elements of `arr` with uniform values of its dtype.
+fn fill_values(p: &Program, mem: &mut MemImage, arr: usize, len: usize, seed: u64) {
+    let a = &p.arrays[arr];
+    let mut rng = Rng::new(seed);
+    for i in 0..len as u64 {
+        match a.dtype {
+            DType::F64 => mem.write_f64(a.addr(i), rng.f64()),
+            _ => mem.write_f32(a.addr(i), rng.f32()),
+        }
+    }
+}
+
+/// Deterministic per-scenario seed derived from the scenario name.
+fn grid_seed(name: &str) -> u64 {
+    let mut h = Fnv::with_seed(0x5EED);
+    h.str(name);
+    h.finish()
+}
+
+/// The default scenario space: every index distribution × every access
+/// shape, plus knob variants (pure duplication, a 90/10 hot set, and a
+/// double-precision target). Currently 5 × 5 + 3 = 28 scenarios; names
+/// are `"<dist>-<shape>"` with a `+knob` suffix on the variants.
+pub fn scenario_grid() -> Vec<ScenarioSpec> {
+    let dists: [(&str, IndexDist); 5] = [
+        ("uni", IndexDist::Uniform),
+        ("zipf", IndexDist::Zipf { theta: 0.8 }),
+        (
+            "runs",
+            IndexDist::Runs {
+                min_run: 8,
+                max_run: 64,
+                strides: &[1, 1, 2, 4],
+            },
+        ),
+        ("chase", IndexDist::Chase),
+        ("hash", IndexDist::Hashed { buckets: 1024 }),
+    ];
+    let shapes: [(&str, AccessShape); 5] = [
+        ("gather", AccessShape::Gather),
+        ("scatter", AccessShape::Scatter),
+        (
+            "rmw",
+            AccessShape::Rmw {
+                op: Op::Add,
+                atomic: true,
+            },
+        ),
+        ("cond", AccessShape::Conditional { density: 0.5 }),
+        ("2lvl", AccessShape::TwoLevel),
+    ];
+    let mut out = Vec::new();
+    for (dname, dist) in &dists {
+        for (sname, shape) in &shapes {
+            let name = format!("{dname}-{sname}");
+            let pattern = PatternSpec::new(dist.clone(), grid_seed(&name));
+            out.push(ScenarioSpec::new(&name, pattern, shape.clone()));
+        }
+    }
+    out.push(ScenarioSpec::new(
+        "uni-gather+dup",
+        PatternSpec::new(IndexDist::Uniform, grid_seed("uni-gather+dup")).with_dup(0.5),
+        AccessShape::Gather,
+    ));
+    out.push(ScenarioSpec::new(
+        "uni-gather+hot",
+        PatternSpec::new(IndexDist::Uniform, grid_seed("uni-gather+hot")).with_hot(0.1, 0.9),
+        AccessShape::Gather,
+    ));
+    out.push(ScenarioSpec::new(
+        "zipf-gather+f64",
+        PatternSpec::new(IndexDist::Zipf { theta: 0.8 }, grid_seed("zipf-gather+f64"))
+            .with_dtype(DType::F64),
+        AccessShape::Gather,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::analyze;
+
+    fn tiny(dist: IndexDist, shape: AccessShape, name: &str) -> ScenarioSpec {
+        let seed = grid_seed(name);
+        let pattern = PatternSpec::new(dist, seed).with_stream(1024).with_target(8192);
+        ScenarioSpec::new(name, pattern, shape)
+    }
+
+    #[test]
+    fn interning_is_stable_and_shared() {
+        let a = intern("synth-test-name");
+        let b = intern("synth-test-name");
+        assert!(std::ptr::eq(a, b), "same name must intern to one str");
+        assert_eq!(a, "synth-test-name");
+    }
+
+    #[test]
+    fn every_shape_lowers_and_is_legal() {
+        let shapes = [
+            ("t-gather", AccessShape::Gather),
+            ("t-scatter", AccessShape::Scatter),
+            (
+                "t-rmw",
+                AccessShape::Rmw {
+                    op: Op::Add,
+                    atomic: false,
+                },
+            ),
+            ("t-cond", AccessShape::Conditional { density: 0.5 }),
+            ("t-2lvl", AccessShape::TwoLevel),
+        ];
+        for (name, shape) in shapes {
+            let s = tiny(IndexDist::Uniform, shape, name);
+            let w = s.build(Scale::test());
+            assert_eq!(w.program.name, name);
+            assert_eq!(w.suite, "synth");
+            let (a, legal) = analyze(&w.program);
+            assert!(legal.is_ok(), "{name}: {:?}", legal.err());
+            assert!(a.max_indirection >= 1, "{name} has no indirection");
+            assert!(w.validate_bounds().is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn two_level_reaches_depth_two() {
+        let s = tiny(IndexDist::Uniform, AccessShape::TwoLevel, "t-depth");
+        let (a, _) = analyze(&s.build(Scale::test()).program);
+        assert!(a.max_indirection >= 2, "depth {}", a.max_indirection);
+    }
+
+    #[test]
+    fn conditional_has_condition_and_density_register() {
+        let s = tiny(
+            IndexDist::Uniform,
+            AccessShape::Conditional { density: 0.25 },
+            "t-dense",
+        );
+        let w = s.build(Scale::test());
+        let (a, _) = analyze(&w.program);
+        assert!(a.has_condition);
+        assert_eq!(w.program.regs[0], (0.75f32).to_bits() as u64);
+    }
+
+    #[test]
+    fn builds_are_bit_deterministic() {
+        let s = tiny(IndexDist::Zipf { theta: 0.8 }, AccessShape::Gather, "t-det");
+        let a = s.build(Scale::test());
+        let b = s.build(Scale::test());
+        assert_eq!(a.mem.stable_hash(), b.mem.stable_hash());
+        assert_eq!(a.program.iters, b.program.iters);
+        // A different seed realizes different memory.
+        let mut other = s.clone();
+        other.pattern.seed ^= 1;
+        assert_ne!(
+            other.build(Scale::test()).mem.stable_hash(),
+            a.mem.stable_hash()
+        );
+    }
+
+    #[test]
+    fn grid_covers_at_least_24_unique_scenarios() {
+        let grid = scenario_grid();
+        assert!(grid.len() >= 24, "grid has {}", grid.len());
+        let names: std::collections::HashSet<&str> = grid.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), grid.len(), "scenario names must be unique");
+    }
+}

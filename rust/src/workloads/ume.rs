@@ -64,12 +64,7 @@ fn gradient_rmw(name: &'static str, scale: Scale, seed: u64) -> WorkloadSpec {
         mem.write_f32(p.arrays[val].addr(i), rng.f32());
         mem.write_f32(p.arrays[mask].addr(i), rng.f32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "UME",
-    }
+    WorkloadSpec::new(p, mem, false, "UME")
 }
 
 fn gradient_indirect_range(name: &'static str, scale: Scale, seed: u64) -> WorkloadSpec {
@@ -121,12 +116,7 @@ fn gradient_indirect_range(name: &'static str, scale: Scale, seed: u64) -> Workl
     for i in 0..mesh as u64 {
         mem.write_f32(p.arrays[g].addr(i), rng.f32());
     }
-    WorkloadSpec {
-        program: p,
-        mem,
-        warm_caches: false,
-        suite: "UME",
-    }
+    WorkloadSpec::new(p, mem, false, "UME")
 }
 
 /// Zone-gradient RMW.

@@ -1,0 +1,167 @@
+//! A/B guard for the per-system relevant-knob fingerprints.
+//!
+//! Baseline/DMP cache and dedup keys exclude the `dx100.*` knobs
+//! (`SystemConfig::fingerprint_sans_dx100`, selected per system by
+//! `engine::cache::system_fingerprint`). That exclusion is only safe if
+//! no baseline/DMP code path reads those knobs; by inspection the sole
+//! route is `CoreEnv`'s scratchpad/MMIO latencies, which baseline/DMP
+//! instruction streams never consume. These tests back the inspection at
+//! runtime: a config pair differing in **every** `dx100.*` knob must
+//! produce bit-identical `RunStats` on the CPU-only systems, and the
+//! sweep engine must dedupe / cache-hit accordingly. If a future change
+//! makes a CPU-only path read an accelerator knob, the bit-identity
+//! assertions here fail before the narrowed key can poison the cache.
+
+use dx100::config::{Dx100Config, SystemConfig};
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::cache::{system_fingerprint, ResultCache};
+use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint};
+use dx100::workloads::micro;
+use std::path::PathBuf;
+
+/// `table3` with every `dx100.*` knob changed and nothing else.
+///
+/// Exhaustive destructuring (no `..`) on purpose: the narrowed cache key
+/// drops the *whole* `dx100` section automatically, so a new knob that
+/// this guard does not vary must be a compile error here, not a silently
+/// untested exclusion.
+fn dx_warped() -> SystemConfig {
+    let mut cfg = SystemConfig::table3();
+    let Dx100Config {
+        instances,
+        tile_elems,
+        tiles,
+        rowtab_rows,
+        rowtab_cols,
+        registers,
+        request_table,
+        alu_lanes,
+        tlb_entries,
+        fill_rate,
+        writeback_rate,
+        mmio_store_latency,
+        spd_read_latency,
+    } = &mut cfg.dx100;
+    *instances = 2;
+    *tile_elems = 1024;
+    *tiles = 8;
+    *rowtab_rows = 16;
+    *rowtab_cols = 4;
+    *registers = 64;
+    *request_table = 32;
+    *alu_lanes = 4;
+    *tlb_entries = 64;
+    *fill_rate = 2;
+    *writeback_rate = 8;
+    *mmio_store_latency = 999;
+    *spd_read_latency = 77;
+    cfg
+}
+
+fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("dx100-sysfp-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultCache::at(&dir), dir)
+}
+
+#[test]
+fn cpu_fingerprints_collapse_across_dx_knobs_dx100s_must_not() {
+    let base = SystemConfig::table3();
+    let warp = dx_warped();
+    for kind in [SystemKind::Baseline, SystemKind::Dmp] {
+        assert_eq!(
+            system_fingerprint(&base, kind),
+            system_fingerprint(&warp, kind),
+            "{kind:?} key must ignore dx100.* knobs"
+        );
+    }
+    assert_ne!(
+        system_fingerprint(&base, SystemKind::Dx100),
+        system_fingerprint(&warp, SystemKind::Dx100),
+        "DX100 key must track dx100.* knobs"
+    );
+}
+
+#[test]
+fn ab_baseline_and_dmp_stats_bit_identical_across_dx_knobs() {
+    // The runtime half of the inspection: simulate one workload on both
+    // configs and require *bit* identity (RunStats is PartialEq; the
+    // derived floats compare by value, and these runs produce no NaNs —
+    // asserted below so a NaN can never vacuously pass).
+    let base = SystemConfig::table3();
+    let warp = dx_warped();
+    let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 0xAB);
+    for kind in [SystemKind::Baseline, SystemKind::Dmp] {
+        let a = Experiment::new(kind, base.clone()).run(&w);
+        let b = Experiment::new(kind, warp.clone()).run(&w);
+        assert!(a.bw_util.is_finite() && a.row_hit_rate.is_finite());
+        assert!(a.occupancy.is_finite() && a.mpki.is_finite());
+        assert_eq!(a, b, "{kind:?} stats must not depend on dx100.* knobs");
+    }
+}
+
+#[test]
+fn sweep_dedupes_cpu_cells_across_dx_only_points() {
+    let points = vec![
+        SweepPoint::new("base", SystemConfig::table3()),
+        SweepPoint::new("warp", dx_warped()),
+    ];
+    let ws = vec![micro::gather_full(
+        2048,
+        micro::IndexPattern::UniformRandom,
+        0xAC,
+    )];
+    let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+    let plan = SweepPlan::new(&points, &ws, &systems);
+    let r = execute_sweep_with(&plan, 2, None);
+    assert_eq!(r.cells(), 6);
+    // Baseline and DMP of the warped point reuse the base point's runs;
+    // only DX100 simulates twice.
+    assert_eq!(r.deduped, 2);
+    for si in [0, 1] {
+        let a = &r.points[0].workloads[0].runs[si];
+        let b = &r.points[1].workloads[0].runs[si];
+        assert_eq!(a, b, "deduped {:?} runs must be shared", a.kind);
+    }
+    let dx_a = &r.points[0].workloads[0].runs[2];
+    let dx_b = &r.points[1].workloads[0].runs[2];
+    assert_eq!(dx_a.kind, SystemKind::Dx100);
+    assert_eq!(dx_b.kind, SystemKind::Dx100);
+}
+
+#[test]
+fn cache_serves_cpu_cells_across_dx_only_configs() {
+    // Populate the cache at `base`; a sweep over the dx-warped config must
+    // hit for baseline/DMP and miss only the DX100 cell.
+    let (cache, dir) = temp_cache("ab");
+    let ws = vec![micro::gather_full(
+        2048,
+        micro::IndexPattern::UniformRandom,
+        0xAD,
+    )];
+    let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+    let base_points = vec![SweepPoint::new("base", SystemConfig::table3())];
+    let cold = execute_sweep_with(
+        &SweepPlan::new(&base_points, &ws, &systems),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(cold.cache_hits, 0);
+
+    let warp_points = vec![SweepPoint::new("warp", dx_warped())];
+    let warm = execute_sweep_with(
+        &SweepPlan::new(&warp_points, &ws, &systems),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(warm.cache_hits, 2, "baseline + DMP must replay");
+    assert_eq!(warm.cache_misses, 1, "DX100 must re-simulate");
+    for si in [0, 1] {
+        assert_eq!(
+            &cold.points[0].workloads[0].runs[si],
+            &warm.points[0].workloads[0].runs[si]
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
