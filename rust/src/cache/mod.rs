@@ -6,6 +6,29 @@
 //! allocates MSHRs down the hierarchy and produces a DRAM request. MSHR
 //! exhaustion at any level back-pressures the core — one of the paper's §2.2
 //! structural MLP limiters.
+//!
+//! # Front-end sharding split
+//!
+//! The coordinator's staged event loop advances cores (and their private
+//! caches) in parallel *lanes* within a time quantum, then merges their
+//! shared-resource traffic deterministically (see `docs/CONCURRENCY.md`).
+//! The hierarchy is split along that seam, mirroring how
+//! [`crate::mem::ShardChannel`] detaches DRAM channel engines:
+//!
+//! * [`PrivateLane`] — one core's L1D + private L2 and their MSHR files.
+//!   Detached via [`Hierarchy::take_lane`] for the parallel front-end
+//!   stage and re-attached with [`Hierarchy::put_lane`] before any shared
+//!   work runs. [`PrivateLane::access_private`] resolves L1/L2 hits
+//!   locally and *reserves* MSHR room for accesses that must continue
+//!   into the shared stage.
+//! * The shared tier — LLC, LLC MSHRs, the dirty-line set, and pending
+//!   writebacks — stays on [`Hierarchy`]. [`Hierarchy::shared_access`]
+//!   finishes a reserved private miss against it, in the deterministic
+//!   merge order the coordinator imposes.
+//!
+//! [`Hierarchy::access`] remains as the one-call synchronous path for
+//! unit tests and direct-drive harnesses; the staged pair
+//! (`access_private` + `shared_access`) is what full-system runs use.
 
 pub mod mshr;
 pub mod prefetch;
@@ -47,16 +70,134 @@ pub enum Access {
     Blocked,
 }
 
-/// Three-level hierarchy: per-core L1D and L2, shared LLC.
+/// Where a lane-local (L1/L2-only) lookup ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrivateAccess {
+    /// Hit in the private L1 or L2; total latency to data return.
+    Hit {
+        /// Level that hit (1/2).
+        level: u8,
+        /// Total latency to data return.
+        latency: Cycle,
+    },
+    /// Missed both private levels. MSHR room for the eventual allocation
+    /// has been **reserved** ([`PrivateLane::pending_shared`]); the caller
+    /// must hand the access to the shared stage, which settles the
+    /// reservation via [`Hierarchy::shared_access`].
+    Miss,
+    /// A private MSHR file has no room (counting reservations already
+    /// outstanding this round); retry after any completion.
+    Blocked,
+}
+
+/// Outcome of the shared-stage half of a staged access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharedAccess {
+    /// LLC hit: the line was filled into the lane's L1/L2; data returns
+    /// after `latency` (full three-level tag path).
+    LlcHit {
+        /// Total latency to data return.
+        latency: Cycle,
+    },
+    /// Merged into an outstanding miss at some level; the caller waits for
+    /// that line's fill.
+    Merged {
+        /// The in-flight line address.
+        line: u64,
+    },
+    /// New miss: MSHRs are allocated at every level; the caller must
+    /// enqueue a DRAM read and call [`Hierarchy::complete_fill`] on
+    /// return.
+    Miss {
+        /// Tag-check latency before the DRAM access starts.
+        lookup_latency: Cycle,
+    },
+    /// The shared LLC MSHR file is full. The reservation is **kept**; the
+    /// caller parks the access and retries after a completion frees an
+    /// entry.
+    LlcFull,
+}
+
+/// One core's private cache state: L1D + L2 with their MSHR files.
+/// Detachable from the [`Hierarchy`] so front-end lanes advance on worker
+/// threads without touching shared state.
+pub struct PrivateLane {
+    /// Private L1 data cache.
+    pub l1: Cache,
+    /// Private unified L2.
+    pub l2: Cache,
+    l1_mshr: MshrFile,
+    l2_mshr: MshrFile,
+    l1_lat: Cycle,
+    l2_lat: Cycle,
+    /// Accesses deferred to the shared stage whose eventual MSHR
+    /// allocation has been promised but not yet performed.
+    pending_shared: u32,
+}
+
+impl PrivateLane {
+    fn new(cfg: &SystemConfig) -> Self {
+        PrivateLane {
+            l1: Cache::new(&cfg.l1d),
+            l2: Cache::new(&cfg.l2),
+            l1_mshr: MshrFile::new(cfg.l1d.mshrs),
+            l2_mshr: MshrFile::new(cfg.l2.mshrs),
+            l1_lat: cfg.l1d.latency,
+            l2_lat: cfg.l2.latency,
+            pending_shared: 0,
+        }
+    }
+
+    /// Whether both private MSHR files can absorb one more allocation,
+    /// counting reservations already promised to the shared stage.
+    fn has_room(&self) -> bool {
+        let pending = self.pending_shared as usize;
+        self.l1_mshr.len() + pending < self.l1_mshr.capacity()
+            && self.l2_mshr.len() + pending < self.l2_mshr.capacity()
+    }
+
+    /// Lane-local demand access: L1 then L2 tags. A miss **reserves** MSHR
+    /// room (see [`PrivateAccess::Miss`]); exhaustion reports
+    /// [`PrivateAccess::Blocked`]. A secondary access to a line already in
+    /// flight in this lane's MSHRs never blocks — its settlement merges
+    /// allocation-free (or, if the fill lands first, resolves against the
+    /// freshly released entry) — matching the one-call path, where merges
+    /// skip the fullness check entirely.
+    pub fn access_private(&mut self, addr: u64, t: Cycle) -> PrivateAccess {
+        let line = addr >> 6;
+        if self.l1.lookup(line, t) {
+            return PrivateAccess::Hit {
+                level: 1,
+                latency: self.l1_lat,
+            };
+        }
+        if self.l2.lookup(line, t) {
+            self.l1.fill(line, t);
+            return PrivateAccess::Hit {
+                level: 2,
+                latency: self.l1_lat + self.l2_lat,
+            };
+        }
+        let contained = self.l1_mshr.contains(line) || self.l2_mshr.contains(line);
+        if !contained && !self.has_room() {
+            return PrivateAccess::Blocked;
+        }
+        self.pending_shared += 1;
+        PrivateAccess::Miss
+    }
+
+    /// Reserved-but-unsettled shared-stage accesses (diagnostics).
+    pub fn pending_shared(&self) -> u32 {
+        self.pending_shared
+    }
+}
+
+/// Three-level hierarchy: per-core L1D and L2 (detachable
+/// [`PrivateLane`]s), shared LLC.
 pub struct Hierarchy {
-    /// Per-core L1 data caches.
-    pub l1: Vec<Cache>,
-    /// Per-core private L2 caches.
-    pub l2: Vec<Cache>,
+    lanes: Vec<Option<PrivateLane>>,
     /// Shared last-level cache.
     pub llc: Cache,
-    l1_mshr: Vec<MshrFile>,
-    l2_mshr: Vec<MshrFile>,
     llc_mshr: MshrFile,
     l1_lat: Cycle,
     l2_lat: Cycle,
@@ -69,15 +210,12 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
-    /// Build the hierarchy sized by `cfg` (one L1/L2 pair per core).
+    /// Build the hierarchy sized by `cfg` (one L1/L2 lane per core).
     pub fn new(cfg: &SystemConfig) -> Self {
         let n = cfg.core.num_cores;
         Hierarchy {
-            l1: (0..n).map(|_| Cache::new(&cfg.l1d)).collect(),
-            l2: (0..n).map(|_| Cache::new(&cfg.l2)).collect(),
+            lanes: (0..n).map(|_| Some(PrivateLane::new(cfg))).collect(),
             llc: Cache::new(&cfg.llc),
-            l1_mshr: (0..n).map(|_| MshrFile::new(cfg.l1d.mshrs)).collect(),
-            l2_mshr: (0..n).map(|_| MshrFile::new(cfg.l2.mshrs)).collect(),
             llc_mshr: MshrFile::new(cfg.llc.mshrs),
             l1_lat: cfg.l1d.latency,
             l2_lat: cfg.l2.latency,
@@ -87,77 +225,166 @@ impl Hierarchy {
         }
     }
 
-    /// Demand access by core `c` to byte address `addr` at time `t`.
+    /// Detach core `c`'s private lane for a parallel front-end stage.
+    /// Panics if already detached; every take must be paired with a
+    /// [`Hierarchy::put_lane`] before any shared-stage work runs.
+    pub fn take_lane(&mut self, c: usize) -> PrivateLane {
+        self.lanes[c].take().expect("lane already detached")
+    }
+
+    /// Re-attach core `c`'s private lane after a front-end stage.
+    pub fn put_lane(&mut self, c: usize, lane: PrivateLane) {
+        debug_assert!(self.lanes[c].is_none(), "lane {c} attached twice");
+        self.lanes[c] = Some(lane);
+    }
+
+    /// Number of private lanes (== cores).
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Borrow core `c`'s lane (panics while detached).
+    pub fn lane(&self, c: usize) -> &PrivateLane {
+        self.lanes[c].as_ref().expect("lane detached")
+    }
+
+    /// Mark a line dirty (store / RMW) for writeback accounting.
+    pub fn mark_dirty(&mut self, line: u64) {
+        self.dirty.insert(line);
+    }
+
+    /// Demand access by core `c` to byte address `addr` at time `t` — the
+    /// one-call synchronous path (unit tests, direct-drive harnesses).
+    /// Full-system runs use the staged pair
+    /// [`PrivateLane::access_private`] + [`Hierarchy::shared_access`],
+    /// which resolves the same way but lets lanes run detached.
     /// `is_write` marks the line dirty (store / RMW) for writeback traffic.
     pub fn access(&mut self, c: usize, addr: u64, t: Cycle, is_write: bool) -> Access {
         let line = addr >> 6;
         if is_write {
             self.dirty.insert(line);
         }
-        if self.l1[c].lookup(line, t) {
-            return Access::Hit {
-                level: 1,
-                latency: self.l1_lat,
-            };
-        }
-        if self.l2[c].lookup(line, t) {
-            self.l1[c].fill(line, t);
-            return Access::Hit {
-                level: 2,
-                latency: self.l1_lat + self.l2_lat,
-            };
-        }
-        if self.llc.lookup(line, t) {
-            self.l2[c].fill(line, t);
-            self.l1[c].fill(line, t);
-            return Access::Hit {
-                level: 3,
-                latency: self.l1_lat + self.l2_lat + self.llc_lat,
-            };
-        }
-        // Full miss path. Merge if the line is already in flight anywhere on
-        // this core's path or at the shared LLC.
-        if self.l1_mshr[c].contains(line)
-            || self.l2_mshr[c].contains(line)
-            || self.llc_mshr.contains(line)
-        {
-            // Secondary miss: track the merge at the innermost level that
-            // has an entry (allocation-free merge).
-            if self.l1_mshr[c].contains(line) {
-                self.l1_mshr[c].merge(line);
-            } else if self.l2_mshr[c].contains(line) {
-                self.l2_mshr[c].merge(line);
-            } else {
-                self.llc_mshr.merge(line);
+        let (l1_lat, l2_lat, llc_lat) = (self.l1_lat, self.l2_lat, self.llc_lat);
+        let mut lane = self.lanes[c].take().expect("lane detached");
+        let result = 'resolve: {
+            if lane.l1.lookup(line, t) {
+                break 'resolve Access::Hit {
+                    level: 1,
+                    latency: l1_lat,
+                };
             }
-            return Access::MergedMiss { line };
+            if lane.l2.lookup(line, t) {
+                lane.l1.fill(line, t);
+                break 'resolve Access::Hit {
+                    level: 2,
+                    latency: l1_lat + l2_lat,
+                };
+            }
+            if self.llc.lookup(line, t) {
+                lane.l2.fill(line, t);
+                lane.l1.fill(line, t);
+                break 'resolve Access::Hit {
+                    level: 3,
+                    latency: l1_lat + l2_lat + llc_lat,
+                };
+            }
+            // Full miss path. Merge if the line is already in flight anywhere
+            // on this core's path or at the shared LLC.
+            if lane.l1_mshr.contains(line)
+                || lane.l2_mshr.contains(line)
+                || self.llc_mshr.contains(line)
+            {
+                // Secondary miss: track the merge at the innermost level that
+                // has an entry (allocation-free merge).
+                if lane.l1_mshr.contains(line) {
+                    lane.l1_mshr.merge(line);
+                } else if lane.l2_mshr.contains(line) {
+                    lane.l2_mshr.merge(line);
+                } else {
+                    self.llc_mshr.merge(line);
+                }
+                break 'resolve Access::MergedMiss { line };
+            }
+            if lane.l1_mshr.full() || lane.l2_mshr.full() || self.llc_mshr.full() {
+                break 'resolve Access::Blocked;
+            }
+            lane.l1_mshr.allocate(line);
+            lane.l2_mshr.allocate(line);
+            self.llc_mshr.allocate(line);
+            Access::Miss {
+                line,
+                lookup_latency: l1_lat + l2_lat + llc_lat,
+            }
+        };
+        self.lanes[c] = Some(lane);
+        result
+    }
+
+    /// Shared-stage half of a staged access: settle a reservation made by
+    /// [`PrivateLane::access_private`] for core `c`. Resolution order and
+    /// bookkeeping match [`Hierarchy::access`]'s post-private portion;
+    /// [`SharedAccess::LlcFull`] keeps the reservation so the caller can
+    /// retry after a completion.
+    pub fn shared_access(&mut self, c: usize, addr: u64, t: Cycle, is_write: bool) -> SharedAccess {
+        let line = addr >> 6;
+        if is_write {
+            self.dirty.insert(line);
         }
-        if self.l1_mshr[c].full() || self.l2_mshr[c].full() || self.llc_mshr.full() {
-            return Access::Blocked;
-        }
-        self.l1_mshr[c].allocate(line);
-        self.l2_mshr[c].allocate(line);
-        self.llc_mshr.allocate(line);
-        Access::Miss {
-            line,
-            lookup_latency: self.l1_lat + self.l2_lat + self.llc_lat,
-        }
+        let (l1_lat, l2_lat, llc_lat) = (self.l1_lat, self.l2_lat, self.llc_lat);
+        let mut lane = self.lanes[c].take().expect("lane detached");
+        debug_assert!(lane.pending_shared > 0, "shared_access without reservation");
+        let result = 'resolve: {
+            if self.llc.lookup(line, t) {
+                lane.l2.fill(line, t);
+                lane.l1.fill(line, t);
+                lane.pending_shared = lane.pending_shared.saturating_sub(1);
+                break 'resolve SharedAccess::LlcHit {
+                    latency: l1_lat + l2_lat + llc_lat,
+                };
+            }
+            if lane.l1_mshr.contains(line)
+                || lane.l2_mshr.contains(line)
+                || self.llc_mshr.contains(line)
+            {
+                if lane.l1_mshr.contains(line) {
+                    lane.l1_mshr.merge(line);
+                } else if lane.l2_mshr.contains(line) {
+                    lane.l2_mshr.merge(line);
+                } else {
+                    self.llc_mshr.merge(line);
+                }
+                lane.pending_shared = lane.pending_shared.saturating_sub(1);
+                break 'resolve SharedAccess::Merged { line };
+            }
+            if self.llc_mshr.full() {
+                break 'resolve SharedAccess::LlcFull;
+            }
+            lane.l1_mshr.allocate(line);
+            lane.l2_mshr.allocate(line);
+            lane.pending_shared = lane.pending_shared.saturating_sub(1);
+            self.llc_mshr.allocate(line);
+            SharedAccess::Miss {
+                lookup_latency: l1_lat + l2_lat + llc_lat,
+            }
+        };
+        self.lanes[c] = Some(lane);
+        result
     }
 
     /// A DRAM fill for `line` on behalf of core `c` returned: install the
     /// line at every level and release MSHRs. Returns the number of merged
     /// (secondary) accesses that were waiting.
     pub fn complete_fill(&mut self, c: usize, line: u64, t: Cycle) -> u64 {
-        let merged = self.l1_mshr[c].release(line)
-            + self.l2_mshr[c].release(line)
-            + self.llc_mshr.release(line);
+        let llc_merged = self.llc_mshr.release(line);
         if let Some(victim) = self.llc.fill(line, t) {
             if self.dirty.remove(&victim) {
                 self.writebacks.push(victim);
             }
         }
-        self.l2[c].fill(line, t);
-        self.l1[c].fill(line, t);
+        let lane = self.lanes[c].as_mut().expect("lane detached");
+        let merged = lane.l1_mshr.release(line) + lane.l2_mshr.release(line) + llc_merged;
+        lane.l2.fill(line, t);
+        lane.l1.fill(line, t);
         merged
     }
 
@@ -170,20 +397,27 @@ impl Hierarchy {
     /// Prefetch fill into L2 + LLC only (does not disturb L1).
     pub fn complete_prefetch_fill(&mut self, c: usize, line: u64, t: Cycle) {
         self.llc_mshr.release(line);
-        self.l2_mshr[c].release(line);
         self.llc.fill(line, t);
-        self.l2[c].fill_prefetch(line, t);
+        let lane = self.lanes[c].as_mut().expect("lane detached");
+        lane.l2_mshr.release(line);
+        lane.l2.fill_prefetch(line, t);
     }
 
-    /// Try to reserve MSHR space for a prefetch (L2 + LLC path).
+    /// Try to reserve MSHR space for a prefetch (L2 + LLC path). Respects
+    /// the lane's outstanding shared-stage reservations so a prefetch
+    /// never consumes a slot promised to a demand access.
     pub fn reserve_prefetch(&mut self, c: usize, line: u64) -> bool {
-        if self.l2_mshr[c].contains(line) || self.llc_mshr.contains(line) {
+        let llc_merge = self.llc_mshr.contains(line);
+        let llc_full = self.llc_mshr.full();
+        let lane = self.lanes[c].as_mut().expect("lane detached");
+        if lane.l2_mshr.contains(line) || llc_merge {
             return false; // already in flight
         }
-        if self.l2_mshr[c].full() || self.llc_mshr.full() {
+        let pending = lane.pending_shared as usize;
+        if lane.l2_mshr.len() + pending >= lane.l2_mshr.capacity() || llc_full {
             return false;
         }
-        self.l2_mshr[c].allocate(line);
+        lane.l2_mshr.allocate(line);
         self.llc_mshr.allocate(line);
         true
     }
@@ -191,18 +425,19 @@ impl Hierarchy {
     /// Whether any cache holds the line (DX100 coherency-directory snoop).
     pub fn snoop(&self, line: u64) -> bool {
         self.llc.contains(line)
-            || self.l2.iter().any(|c| c.contains(line))
-            || self.l1.iter().any(|c| c.contains(line))
+            || self.lanes.iter().any(|l| {
+                let l = l.as_ref().expect("lane detached");
+                l.l2.contains(line) || l.l1.contains(line)
+            })
     }
 
     /// Invalidate a line everywhere (DX100 coherency agent, SPD tiles).
     pub fn invalidate(&mut self, line: u64) {
         self.llc.invalidate(line);
-        for c in &mut self.l2 {
-            c.invalidate(line);
-        }
-        for c in &mut self.l1 {
-            c.invalidate(line);
+        for l in &mut self.lanes {
+            let l = l.as_mut().expect("lane detached");
+            l.l2.invalidate(line);
+            l.l1.invalidate(line);
         }
     }
 
@@ -222,11 +457,35 @@ impl Hierarchy {
         self.llc.fill(addr >> 6, t);
     }
 
+    /// Pre-install a line at every level of every lane (§6.1 All-Hits
+    /// cache warming).
+    pub fn warm_fill(&mut self, line: u64, t: Cycle) {
+        self.llc.fill(line, t);
+        for l in &mut self.lanes {
+            let l = l.as_mut().expect("lane detached");
+            l.l2.fill(line, t);
+            l.l1.fill(line, t);
+        }
+    }
+
     /// Total demand misses that reached DRAM (for MPKI).
     pub fn demand_misses(&self) -> u64 {
         // L1 misses that also missed L2 and LLC == LLC misses on the demand
         // path; report per-level for diagnostics but MPKI uses L1 here.
-        self.l1.iter().map(|c| c.stats.misses).sum()
+        self.lanes
+            .iter()
+            .map(|l| l.as_ref().expect("lane detached").l1.stats.misses)
+            .sum()
+    }
+
+    /// Total private-L2 demand misses (core-side MPKI numerator; the
+    /// shared LLC also serves DX100 Cache-Interface lookups, which are not
+    /// core misses).
+    pub fn l2_demand_misses(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.as_ref().expect("lane detached").l2.stats.misses)
+            .sum()
     }
 
     /// LLC misses (demand + DX100 Cache-Interface lookups).
@@ -329,6 +588,132 @@ mod tests {
         h.llc_fill(0x5000, 1);
         assert!(h.llc_access(0x5000, 2).is_some());
         // LLC fills are not visible in core L1s.
-        assert!(!h.l1[0].contains(0x5000 >> 6));
+        assert!(!h.lane(0).l1.contains(0x5000 >> 6));
+    }
+
+    #[test]
+    fn staged_access_matches_one_call_path() {
+        // The same access sequence through (access_private + shared_access)
+        // must resolve like the synchronous `access` path.
+        let mut a = hier();
+        let mut b = hier();
+        let addr = 0x9000u64;
+        let line = addr >> 6;
+
+        // Cold miss.
+        let one = a.access(0, addr, 0, false);
+        let mut lane = b.take_lane(0);
+        assert_eq!(lane.access_private(addr, 0), PrivateAccess::Miss);
+        assert_eq!(lane.pending_shared(), 1);
+        b.put_lane(0, lane);
+        let two = b.shared_access(0, addr, 0, false);
+        assert!(matches!(one, Access::Miss { lookup_latency, .. }
+            if matches!(two, SharedAccess::Miss { lookup_latency: l2 } if l2 == lookup_latency)));
+        assert_eq!(b.lane(0).pending_shared(), 0);
+
+        // Same-line secondary: both paths merge.
+        assert!(matches!(a.access(0, addr + 8, 1, false), Access::MergedMiss { .. }));
+        let mut lane = b.take_lane(0);
+        assert_eq!(lane.access_private(addr + 8, 1), PrivateAccess::Miss);
+        b.put_lane(0, lane);
+        assert!(matches!(b.shared_access(0, addr + 8, 1, false), SharedAccess::Merged { .. }));
+
+        // Fill, then both paths hit L1.
+        a.complete_fill(0, line, 100);
+        b.complete_fill(0, line, 100);
+        assert!(matches!(a.access(0, addr, 200, false), Access::Hit { level: 1, .. }));
+        let mut lane = b.take_lane(0);
+        assert!(matches!(
+            lane.access_private(addr, 200),
+            PrivateAccess::Hit { level: 1, .. }
+        ));
+        b.put_lane(0, lane);
+    }
+
+    #[test]
+    fn llc_hit_in_shared_stage_fills_private_levels() {
+        let mut h = hier();
+        h.llc_fill(0x7000, 0);
+        let mut lane = h.take_lane(1);
+        assert_eq!(lane.access_private(0x7000, 5), PrivateAccess::Miss);
+        h.put_lane(1, lane);
+        match h.shared_access(1, 0x7000, 5, false) {
+            SharedAccess::LlcHit { latency } => assert!(latency > 0),
+            other => panic!("expected LLC hit, got {other:?}"),
+        }
+        // The shared stage installed the line privately.
+        let mut lane = h.take_lane(1);
+        assert!(matches!(
+            lane.access_private(0x7000, 10),
+            PrivateAccess::Hit { level: 1, .. }
+        ));
+        h.put_lane(1, lane);
+    }
+
+    #[test]
+    fn llc_full_keeps_reservation_for_retry() {
+        // A shrunken LLC MSHR file so one lane's prefetch path can fill it.
+        let mut cfg = SystemConfig::table3();
+        cfg.llc.mshrs = 4;
+        let mut h = Hierarchy::new(&cfg);
+        // Saturate the LLC MSHR file from another core's prefetch path.
+        for i in 0..cfg.llc.mshrs as u64 {
+            assert!(h.reserve_prefetch(1, 0x10_0000 + i * 977));
+        }
+        let mut lane = h.take_lane(0);
+        assert_eq!(lane.access_private(0x8000, 0), PrivateAccess::Miss);
+        h.put_lane(0, lane);
+        assert_eq!(h.shared_access(0, 0x8000, 0, false), SharedAccess::LlcFull);
+        // Reservation survives for the retry...
+        assert_eq!(h.lane(0).pending_shared(), 1);
+        // ...and succeeds once an entry frees.
+        h.complete_prefetch_fill(1, 0x10_0000, 50);
+        assert!(matches!(
+            h.shared_access(0, 0x8000, 60, false),
+            SharedAccess::Miss { .. }
+        ));
+        assert_eq!(h.lane(0).pending_shared(), 0);
+    }
+
+    #[test]
+    fn reservations_backpressure_private_mshrs() {
+        let mut h = hier();
+        let mshrs = SystemConfig::table3().l1d.mshrs;
+        let mut lane = h.take_lane(0);
+        for i in 0..mshrs as u64 {
+            assert_eq!(
+                lane.access_private(i * 64 * 1024 * 1024, 0),
+                PrivateAccess::Miss,
+                "i={i}"
+            );
+        }
+        // All room is reserved even though nothing is allocated yet.
+        assert_eq!(lane.access_private(0xdead0000, 1), PrivateAccess::Blocked);
+        h.put_lane(0, lane);
+    }
+
+    #[test]
+    fn secondary_to_inflight_line_never_blocks_in_staged_path() {
+        // Fill the L1 MSHR file with real allocations, then touch another
+        // word of an in-flight line: the one-call path merges, and the
+        // staged path must defer (not block) just the same.
+        let mut h = hier();
+        let mshrs = SystemConfig::table3().l1d.mshrs;
+        for i in 0..mshrs as u64 {
+            let mut lane = h.take_lane(0);
+            assert_eq!(lane.access_private(i * 64 * 1024 * 1024, 0), PrivateAccess::Miss);
+            h.put_lane(0, lane);
+            assert!(matches!(
+                h.shared_access(0, i * 64 * 1024 * 1024, 0, false),
+                SharedAccess::Miss { .. }
+            ));
+        }
+        let mut lane = h.take_lane(0);
+        // New line: full, blocked.
+        assert_eq!(lane.access_private(0xdead0000, 1), PrivateAccess::Blocked);
+        // Same line as allocation 0, different word: defers for a merge.
+        assert_eq!(lane.access_private(8, 1), PrivateAccess::Miss);
+        h.put_lane(0, lane);
+        assert!(matches!(h.shared_access(0, 8, 1, false), SharedAccess::Merged { .. }));
     }
 }

@@ -54,6 +54,11 @@ impl MshrFile {
         self.entries.len()
     }
 
+    /// Total primary-miss capacity (the Table 3 MSHR count).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     /// Whether no miss is outstanding.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()

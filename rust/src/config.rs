@@ -451,7 +451,7 @@ impl SystemConfig {
     /// Stable fingerprint over every knob the **CPU-only** systems
     /// (baseline and DMP) can observe: everything except `dx100.*`. The
     /// accelerator parameters reach those systems' code paths in exactly
-    /// one place — `CoreEnv`'s `spd_latency`/`mmio_latency` fields — and
+    /// one place — `LaneEnv`'s `spd_latency`/`mmio_latency` fields — and
     /// baseline/DMP instruction streams contain no scratchpad reads or
     /// MMIO stores to consume them, so two configs agreeing here simulate
     /// CPU-only systems identically. The sweep engine keys baseline/DMP

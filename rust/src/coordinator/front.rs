@@ -1,0 +1,159 @@
+//! Front-end shard lanes: the parallelizable half of a quantum's front
+//! end.
+//!
+//! A [`FrontLane`] bundles everything one core may touch while advancing
+//! inside a time quantum: its [`CoreModel`], its private L1/L2
+//! ([`crate::cache::PrivateLane`], detached from the hierarchy for the
+//! stage), its stride prefetcher, and its own event queue. Lanes share
+//! **nothing**, so any subset of them can advance concurrently; all
+//! shared-resource traffic is recorded as [`LaneAction`]s and merged by
+//! the coordinator's shared stage in `(time, core index, emission order)`
+//! order — which is what makes results bit-identical at every fan-out
+//! (`DX100_SHARDS`) and pool size (`DX100_THREADS`).
+//!
+//! [`SimJob`] is the unit the [`Crew`](crate::engine::pool::Crew)
+//! schedules: either a group of front lanes or a group of detached DRAM
+//! channel engines, advanced through one quantum.
+
+use super::variant::SystemVariant;
+use super::SystemKind;
+use crate::cache::PrivateLane;
+use crate::cache::StridePrefetcher;
+use crate::compiler::CompiledWorkload;
+use crate::core::{CoreModel, LaneAction, LaneEnv};
+use crate::engine::pool::CrewWork;
+use crate::mem::{ChannelAdvance, ChannelFeed, ShardChannel};
+use crate::sim::{Cycle, EventQueue};
+use std::sync::Arc;
+
+/// Runaway-lane guard (events popped by one lane).
+const LANE_GUARD_LIMIT: u64 = 2_000_000_000;
+
+/// One core's complete front-end state, advanced independently within a
+/// quantum. Owned data only (the op stream lives behind an
+/// [`Arc<CompiledWorkload>`]), so lanes move freely onto pool workers.
+pub(crate) struct FrontLane {
+    /// Core index (== lane index; the deterministic merge key).
+    pub idx: usize,
+    /// The out-of-order core model.
+    pub core: CoreModel,
+    /// This core's stride prefetcher.
+    pub prefetcher: StridePrefetcher,
+    /// This core's event queue (`CoreWake(idx)` events only).
+    pub queue: EventQueue,
+    /// Private L1/L2; present only while the lane is detached from the
+    /// hierarchy for a front-end stage.
+    pub lane: Option<PrivateLane>,
+    /// Shared-stage work deferred by the last advance (drained by the
+    /// coordinator each round).
+    pub actions: Vec<LaneAction>,
+    /// The compiled workload the op stream is resolved from.
+    pub cw: Arc<CompiledWorkload>,
+    /// System kind (selects the op stream and DMP-hint use).
+    pub kind: SystemKind,
+    /// Effective scratchpad read latency.
+    pub spd_latency: Cycle,
+    /// Uncacheable MMIO store latency.
+    pub mmio_latency: Cycle,
+    /// Latest event time this lane has processed (keeps lane-queue pushes
+    /// monotone).
+    pub last_time: Cycle,
+    /// Front-end events this lane has popped (into `RunStats`).
+    pub events: u64,
+}
+
+impl FrontLane {
+    /// Advance this lane through every queued event strictly below
+    /// `t_end`, in (time, FIFO) order. Pure function of the lane's own
+    /// state plus the read-only `flags` snapshot — safe on any thread.
+    pub fn advance(&mut self, t_end: Cycle, flags: &[Vec<bool>]) {
+        if self.queue.peek_time().is_none() {
+            return;
+        }
+        let cw = Arc::clone(&self.cw);
+        let variant = self.kind.variant();
+        let ops = variant.stream_of(&cw, self.idx);
+        let dmp_hints = variant.dmp_hints_of(&cw, self.idx);
+        while matches!(self.queue.peek_time(), Some(h) if h < t_end) {
+            let ev = self.queue.pop().expect("peeked event");
+            self.events += 1;
+            assert!(
+                self.events < LANE_GUARD_LIMIT,
+                "lane {} livelock at t={}",
+                self.idx,
+                ev.time
+            );
+            self.last_time = self.last_time.max(ev.time);
+            if self.core.done {
+                continue;
+            }
+            let mut env = LaneEnv {
+                lane: self.lane.as_mut().expect("lane caches not attached"),
+                queue: &mut self.queue,
+                prefetcher: &mut self.prefetcher,
+                flags,
+                actions: &mut self.actions,
+                spd_latency: self.spd_latency,
+                mmio_latency: self.mmio_latency,
+                dmp_hints,
+            };
+            self.core.wake(ev.time, ops, &mut env);
+        }
+    }
+}
+
+/// One quantum work item for the run's crew: a group of front lanes or a
+/// group of detached channel engines.
+pub(crate) enum SimJob {
+    /// Advance a group of front-end lanes through the quantum.
+    Front(FrontJob),
+    /// Advance a group of DRAM channel engines through the quantum.
+    Channels(ChannelJob),
+}
+
+impl CrewWork for SimJob {
+    fn run(&mut self) {
+        match self {
+            SimJob::Front(j) => j.run(),
+            SimJob::Channels(j) => j.run(),
+        }
+    }
+}
+
+/// A group of front lanes plus the per-round flag snapshot.
+pub(crate) struct FrontJob {
+    /// Lanes to advance, each independent of the others.
+    pub lanes: Vec<FrontLane>,
+    /// Quantum end (exclusive).
+    pub t_end: Cycle,
+    /// Read-only DX100 ready-flag snapshot for this round.
+    pub flags: Arc<Vec<Vec<bool>>>,
+}
+
+impl FrontJob {
+    fn run(&mut self) {
+        for lane in &mut self.lanes {
+            lane.advance(self.t_end, &self.flags);
+        }
+    }
+}
+
+/// A group of detached channel engines with their quantum feeds.
+pub(crate) struct ChannelJob {
+    /// The channel engines this job owns for the quantum.
+    pub chans: Vec<ShardChannel>,
+    /// One feed per engine, same order as `chans`.
+    pub feeds: Vec<ChannelFeed>,
+    /// Quantum end (exclusive).
+    pub t_end: Cycle,
+    /// Advance results, filled by `run` (one per engine).
+    pub advs: Vec<ChannelAdvance>,
+}
+
+impl ChannelJob {
+    fn run(&mut self) {
+        for (sc, feed) in self.chans.iter_mut().zip(self.feeds.drain(..)) {
+            self.advs.push(sc.advance(feed, self.t_end));
+        }
+    }
+}

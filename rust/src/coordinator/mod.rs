@@ -16,6 +16,7 @@
 //! [`crate::engine`], which compiles each workload once and fans the run
 //! matrix out across worker threads.
 
+mod front;
 pub mod system;
 pub mod variant;
 

@@ -1,4 +1,5 @@
-//! Full-system event loop, quantum-phased for intra-run channel sharding.
+//! Full-system event loop, quantum-phased and staged for intra-run
+//! sharding of both the front end and the DRAM channels.
 //!
 //! The per-kind branches (stream selection, accelerator construction,
 //! config adjustment) live on [`SystemVariant`](super::variant::SystemVariant);
@@ -8,42 +9,51 @@
 //!
 //! Time advances in bounded **quanta** of `Q =`
 //! [`DramConfig::min_completion_latency`](crate::config::DramConfig::min_completion_latency)
-//! cycles. Each quantum runs two phases:
+//! cycles. Each quantum runs two phases, each with a parallelizable
+//! stage and a deterministic merge:
 //!
-//! 1. **Front end** (always on the event-loop thread): cores, caches,
-//!    prefetchers, and DX100 controllers process every queued event below
-//!    the quantum end, in (time, FIFO) order. Memory requests land in the
-//!    controller's per-channel ingress queues; popped `ChannelSched`
-//!    events become recorded activation times.
+//! 1. **Front end**, in one or more *rounds*. Each round has two stages:
+//!    * **Lane stage** (parallelizable): every core with pending events
+//!      below the quantum end advances as an independent front lane —
+//!      its core model, private L1/L2 (detached from the hierarchy via
+//!      [`crate::cache::Hierarchy::take_lane`]), stride prefetcher, and
+//!      its own event queue. Private hits resolve locally; everything
+//!      that needs a shared resource is recorded as a timestamped
+//!      [`LaneAction`](crate::core::LaneAction).
+//!    * **Shared stage** (event-loop thread): lane actions and the shared
+//!      event queue (DRAM completions, DX100 wakes, MMIO timers) merge in
+//!      `(time, kind, core index, emission order)` order and apply to the
+//!      shared tier — LLC, DRAM controller front end, DX100 instances.
+//!      New work below the quantum end triggers another round.
 //! 2. **Channels**: each DRAM channel engine independently replays its
-//!    activation times (plus self-wakes) through the FR-FCFS scheduler.
-//!    Because any completion is dated at least `Q` cycles after its
-//!    activation, nothing a channel does in a quantum can feed back into
-//!    the same quantum's front end — the phases are separable.
+//!    activation times (plus self-wakes) through the FR-FCFS scheduler;
+//!    results merge back in channel-index order. Because any completion
+//!    is dated at least `Q` cycles after its activation, nothing a
+//!    channel does in a quantum can feed back into the same quantum's
+//!    front end.
 //!
-//! With `DX100_SHARDS > 1` phase 2 fans the channel engines out across
-//! worker threads (round-robin by channel index) and merges their event
-//! streams back in channel order. The per-channel work and the merge
-//! order are identical to the serial path, so **sharded runs produce
-//! bit-identical [`RunStats`]** — the engine's result cache and every
-//! figure output are unaffected by the knob.
+//! With a fan-out hint above 1 (`DX100_SHARDS`), the lane stage and the
+//! channel stage run as [`Crew`] jobs: the run's own thread drains them
+//! and idle workers of the shared [`WorkerPool`] help. The per-lane /
+//! per-channel work and the merge orders are identical at every fan-out
+//! and pool size, so **sharded runs produce bit-identical [`RunStats`]**
+//! — the engine's result cache and every figure output are unaffected by
+//! either knob. `docs/CONCURRENCY.md` is the full treatment.
 
+use super::front::{ChannelJob, FrontJob, FrontLane, SimJob};
 use super::variant::{DxSetup, SystemVariant};
-use crate::cache::{Hierarchy, StridePrefetcher};
+use crate::cache::{Hierarchy, SharedAccess, StridePrefetcher};
 use crate::compiler::{compile, CompiledWorkload};
 use crate::config::SystemConfig;
-use crate::core::{CoreEnv, CoreModel, LineWaiters, MmioDelivery};
+use crate::core::{CoreModel, LaneActionKind, LineWaiters};
 use crate::dx100::timing::{Dx100Env, Dx100Stats, Dx100Timing};
 use crate::dx100::NO_TILE;
-use crate::mem::{
-    dram::Completion, ChannelAdvance, ChannelFeed, MemController, ReqSource, ShardChannel,
-};
-use crate::prefetch::DmpHints;
+use crate::engine::pool::{Crew, WorkerPool};
+use crate::mem::{dram::Completion, MemController, ReqSource, ShardChannel};
 use crate::sim::{Cycle, Event, EventQueue};
 use crate::workloads::WorkloadSpec;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Which system to simulate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -89,8 +99,13 @@ pub struct RunStats {
     pub dram_bytes: u64,
     /// Per-instance DX100 stats (DX100 runs only).
     pub dx: Vec<Dx100Stats>,
-    /// Events processed (simulator-performance diagnostics): front-end
-    /// event pops plus channel scheduler invocations.
+    /// Front-end events processed: lane event pops plus shared-stage
+    /// event pops (simulator-performance diagnostics).
+    pub front_events: u64,
+    /// Channel-phase scheduler invocations (simulator-performance
+    /// diagnostics).
+    pub channel_events: u64,
+    /// Total events processed: `front_events + channel_events`.
     pub events: u64,
 }
 
@@ -102,6 +117,20 @@ impl RunStats {
 }
 
 /// An experiment: one system kind + configuration.
+///
+/// ```
+/// use dx100::config::SystemConfig;
+/// use dx100::coordinator::{Experiment, SystemKind};
+/// use dx100::workloads::micro;
+///
+/// let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 7);
+/// let ex = Experiment::new(SystemKind::Baseline, SystemConfig::table3());
+/// // `DX100_SHARDS` is a fan-out hint: results are bit-identical at every
+/// // value, so an explicitly sharded run equals the serial one.
+/// let serial = ex.run_sharded(&w, 1);
+/// let sharded = ex.run_sharded(&w, 2);
+/// assert_eq!(serial, sharded);
+/// ```
 #[derive(Clone)]
 pub struct Experiment {
     /// System to simulate.
@@ -126,32 +155,35 @@ impl Experiment {
     /// systems (and across worker threads), go through
     /// [`crate::engine`] or call [`Experiment::run_compiled`] directly.
     pub fn run(&self, w: &WorkloadSpec) -> RunStats {
-        let cw = compile(&w.program, &w.mem, &self.cfg)
-            .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
-        self.run_compiled(&cw, w.warm_caches)
+        let shards = crate::engine::shards_from_env();
+        grow_pool_for_hint(shards);
+        self.run_sharded(w, shards)
     }
 
-    /// Compile and run with an explicit intra-run shard count (bypasses
+    /// Compile and run with an explicit intra-run fan-out hint (bypasses
     /// the `DX100_SHARDS` environment knob; tests use this).
     pub fn run_sharded(&self, w: &WorkloadSpec, shards: usize) -> RunStats {
         let cw = compile(&w.program, &w.mem, &self.cfg)
             .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
-        self.run_compiled_sharded(&cw, w.warm_caches, shards)
+        self.run_compiled_sharded(&Arc::new(cw), w.warm_caches, shards)
     }
 
     /// Run a pre-compiled workload (the engine and benches share one
-    /// compilation across all systems). The intra-run shard count comes
+    /// compilation across all systems). The intra-run fan-out hint comes
     /// from `DX100_SHARDS` (default 1).
-    pub fn run_compiled(&self, cw: &CompiledWorkload, warm: bool) -> RunStats {
-        self.run_compiled_sharded(cw, warm, crate::engine::shards_from_env())
+    pub fn run_compiled(&self, cw: &Arc<CompiledWorkload>, warm: bool) -> RunStats {
+        let shards = crate::engine::shards_from_env();
+        grow_pool_for_hint(shards);
+        self.run_compiled_sharded(cw, warm, shards)
     }
 
-    /// Run a pre-compiled workload with an explicit intra-run shard count.
-    /// The count is clamped to the number of DRAM channels; stats are
+    /// Run a pre-compiled workload with an explicit intra-run fan-out
+    /// hint. The hint is clamped per phase (to the core count for the
+    /// front end, the channel count for the channel phase); stats are
     /// bit-identical at every value.
     pub fn run_compiled_sharded(
         &self,
-        cw: &CompiledWorkload,
+        cw: &Arc<CompiledWorkload>,
         warm: bool,
         shards: usize,
     ) -> RunStats {
@@ -161,25 +193,59 @@ impl Experiment {
     }
 }
 
-/// Runaway-simulation guard (front-end events processed).
+/// Env-driven entry points grow the shared pool for their fan-out hint
+/// (never past the `DX100_THREADS` policy). Explicit-args APIs leave
+/// pool sizing to their caller, so a sweep's explicit thread cap remains
+/// the bound on busy executors.
+fn grow_pool_for_hint(shards: usize) {
+    if shards > 1 {
+        let cap = crate::engine::threads_from_env().saturating_sub(1);
+        WorkerPool::global().ensure_workers((shards - 1).min(cap));
+    }
+}
+
+/// Runaway-simulation guard (front-end events processed on the shared
+/// stage; lanes carry their own guard).
 const GUARD_LIMIT: u64 = 2_000_000_000;
+
+/// A shared-stage access that found the LLC MSHR file full; retried after
+/// completions free entries, in FIFO order.
+struct ParkedAccess {
+    core: usize,
+    stream_idx: usize,
+    addr: u64,
+    is_write: bool,
+    issue_at: Cycle,
+}
+
+/// One lane action queued for the shared stage's deterministic merge,
+/// ordered by `(time, core index, emission order)`; same-time shared
+/// events sort ahead of actions.
+#[derive(Clone, Copy)]
+struct RoundAction {
+    time: Cycle,
+    core: usize,
+    seq: u64,
+    kind: LaneActionKind,
+}
 
 struct System<'a> {
     cfg: &'a SystemConfig,
-    cores: Vec<CoreModel>,
-    streams: Vec<&'a [crate::core::Op]>,
+    lanes: Vec<Option<FrontLane>>,
     hier: Hierarchy,
     mem: MemController,
+    /// Shared event queue: `ChannelSched` / `DramDone` / `Dx100Wake` /
+    /// `Timer`. `CoreWake` events live on the lanes' own queues.
     queue: EventQueue,
     waiters: LineWaiters,
-    prefetchers: Vec<StridePrefetcher>,
-    dmp_hints: Option<&'a [DmpHints]>,
     dx: Vec<Dx100Timing>,
     dx_programs: Vec<&'a crate::dx100::timing::Dx100Program>,
     ready: Vec<Vec<bool>>,
     routing: HashMap<u64, Completion>,
-    mmio_buf: Vec<MmioDelivery>,
-    events: u64,
+    parked: VecDeque<ParkedAccess>,
+    /// Shared-stage event pops (lane pops are counted on the lanes).
+    shared_events: u64,
+    channel_events: u64,
     end_time: Cycle,
 }
 
@@ -187,23 +253,14 @@ impl<'a> System<'a> {
     fn build(
         variant: &dyn SystemVariant,
         cfg: &'a SystemConfig,
-        cw: &'a CompiledWorkload,
+        cw: &'a Arc<CompiledWorkload>,
         warm: bool,
     ) -> Self {
-        let streams: Vec<&'a [crate::core::Op]> = variant.streams(cw);
-        let ncores = streams.len().max(1);
-        let mut core_cfg = cfg.core.clone();
-        core_cfg.num_cores = core_cfg.num_cores.max(ncores);
+        let ncores = variant.streams(cw).len().max(1);
         let mut hier_cfg = cfg.clone();
-        hier_cfg.core.num_cores = core_cfg.num_cores;
+        hier_cfg.core.num_cores = cfg.core.num_cores.max(ncores);
         let mut hier = Hierarchy::new(&hier_cfg);
         let mem = MemController::new(cfg.dram.clone());
-        let cores: Vec<CoreModel> = (0..ncores)
-            .map(|i| CoreModel::new(i, cfg.core.clone()))
-            .collect();
-        let prefetchers = (0..ncores)
-            .map(|_| StridePrefetcher::new(cfg.l2.prefetch_degree))
-            .collect();
         // Warm caches: pre-install every array line at every level
         // (the §6.1 All-Hits scenario).
         if warm {
@@ -219,11 +276,7 @@ impl<'a> System<'a> {
                 }
             }
             for line in lines {
-                hier.llc.fill(line, 0);
-                for c in 0..ncores {
-                    hier.l2[c].fill(line, 0);
-                    hier.l1[c].fill(line, 0);
-                }
+                hier.warm_fill(line, 0);
             }
         }
         let DxSetup {
@@ -231,47 +284,75 @@ impl<'a> System<'a> {
             programs: dx_programs,
             ready,
         } = variant.accelerators(cfg, cw, &mem);
-        let dmp_hints = variant.dmp_hints(cw);
+        let kind = variant.kind();
+        let lanes = (0..ncores)
+            .map(|i| {
+                Some(FrontLane {
+                    idx: i,
+                    core: CoreModel::new(i, cfg.core.clone()),
+                    prefetcher: StridePrefetcher::new(cfg.l2.prefetch_degree),
+                    queue: EventQueue::new(),
+                    lane: None,
+                    actions: Vec::new(),
+                    cw: Arc::clone(cw),
+                    kind,
+                    spd_latency: cfg.dx100.spd_read_latency,
+                    mmio_latency: cfg.dx100.mmio_store_latency,
+                    last_time: 0,
+                    events: 0,
+                })
+            })
+            .collect();
         System {
             cfg,
-            cores,
-            streams,
+            lanes,
             hier,
             mem,
             queue: EventQueue::new(),
             waiters: LineWaiters::new(),
-            prefetchers,
-            dmp_hints,
             dx,
             dx_programs,
             ready,
             routing: HashMap::new(),
-            mmio_buf: Vec::new(),
-            events: 0,
+            parked: VecDeque::new(),
+            shared_events: 0,
+            channel_events: 0,
             end_time: 0,
         }
     }
 
-    fn wake_core(&mut self, c: usize, t: Cycle) {
-        let hints = self.dmp_hints.and_then(|h| h.get(c));
-        let mut env = CoreEnv {
-            hier: &mut self.hier,
-            mem: &mut self.mem,
-            queue: &mut self.queue,
-            waiters: &mut self.waiters,
-            prefetcher: &mut self.prefetchers[c],
-            flags: &self.ready,
-            mmio_out: &mut self.mmio_buf,
-            spd_latency: self.cfg.dx100.spd_read_latency,
-            mmio_latency: self.cfg.dx100.mmio_store_latency,
-            dmp_hints: hints,
-        };
-        self.cores[c].wake(t, self.streams[c], &mut env);
-        // Route MMIO deliveries: encode (instance, seq) into a Timer event.
-        let deliveries = std::mem::take(&mut self.mmio_buf);
-        for d in deliveries {
-            let payload = ((d.instance as u64) << 32) | d.seq as u64;
-            self.queue.push(d.time, Event::Timer(payload));
+    fn lane_ref(&self, c: usize) -> &FrontLane {
+        self.lanes[c].as_ref().expect("front lane in flight")
+    }
+
+    fn lane_mut(&mut self, c: usize) -> &mut FrontLane {
+        self.lanes[c].as_mut().expect("front lane in flight")
+    }
+
+    /// Push a `CoreWake` onto lane `c`'s queue, clamped forward to the
+    /// lane's own progress so per-lane event time stays monotone.
+    fn wake_lane(&mut self, c: usize, t: Cycle) {
+        let fl = self.lane_mut(c);
+        let t = t.max(fl.last_time);
+        fl.queue.push(t, Event::CoreWake(c));
+    }
+
+    /// Complete every op waiting on `line` at time `t`.
+    fn complete_waiters(&mut self, line: u64, t: Cycle) {
+        if let Some(ws) = self.waiters.remove(&line) {
+            for (c, sidx) in ws {
+                let ready = self.lane_mut(c).core.complete_mem(sidx, t);
+                self.wake_lane(c, ready);
+            }
+        }
+    }
+
+    /// Re-wake MSHR-blocked cores after a completion freed entries.
+    fn wake_blocked(&mut self, t: Cycle) {
+        for c in 0..self.lanes.len() {
+            if self.lane_ref(c).core.blocked {
+                self.wake_lane(c, t);
+            }
         }
     }
 
@@ -284,9 +365,9 @@ impl<'a> System<'a> {
         };
         let flags_changed = self.dx[i].wake(t, &mut env);
         if flags_changed {
-            for c in 0..self.cores.len() {
-                if !self.cores[c].done {
-                    self.queue.push(t, Event::CoreWake(c));
+            for c in 0..self.lanes.len() {
+                if !self.lane_ref(c).core.done {
+                    self.wake_lane(c, t);
                 }
             }
         }
@@ -304,16 +385,105 @@ impl<'a> System<'a> {
         }
     }
 
-    /// Handle one popped front-end event at time `t`.
-    fn dispatch(&mut self, t: Cycle, event: Event) {
-        match event {
-            Event::CoreWake(c) => {
-                if !self.cores[c].done {
-                    self.wake_core(c, t);
+    /// Enqueue a DRAM read and its channel activation.
+    fn enqueue_read(&mut self, start: Cycle, addr: u64, source: ReqSource) {
+        self.mem.enqueue(start, addr, false, source);
+        let ch = self.mem.channel_of(addr);
+        if self.mem.sched_request(ch, start) {
+            self.queue.push(start, Event::ChannelSched(ch));
+        }
+    }
+
+    /// Settle one shared access for (`core`, `stream_idx`) at time `t`.
+    /// `issue_at` is the core's bandwidth-accounted issue cycle.
+    fn settle_access(
+        &mut self,
+        t: Cycle,
+        core: usize,
+        stream_idx: usize,
+        addr: u64,
+        is_write: bool,
+        issue_at: Cycle,
+    ) {
+        let line = addr >> 6;
+        match self.hier.shared_access(core, addr, t, is_write) {
+            SharedAccess::LlcHit { latency } => {
+                // Retries may settle after their issue cycle; data is
+                // never ready before the settle itself.
+                let at = t.max(issue_at + latency);
+                let ready = self.lane_mut(core).core.complete_mem(stream_idx, at);
+                self.wake_lane(core, ready);
+            }
+            SharedAccess::Merged { line } => {
+                self.waiters.entry(line).or_default().push((core, stream_idx));
+            }
+            SharedAccess::Miss { lookup_latency } => {
+                let start = t.max(issue_at + lookup_latency);
+                self.enqueue_read(
+                    start,
+                    addr,
+                    ReqSource::Core {
+                        core,
+                        op: stream_idx as u64,
+                    },
+                );
+                self.waiters.entry(line).or_default().push((core, stream_idx));
+            }
+            SharedAccess::LlcFull => self.parked.push_back(ParkedAccess {
+                core,
+                stream_idx,
+                addr,
+                is_write,
+                issue_at,
+            }),
+        }
+    }
+
+    /// Retry parked accesses after a completion freed LLC MSHR entries
+    /// (FIFO; still-full accesses go back to the queue in order).
+    fn retry_parked(&mut self, t: Cycle) {
+        for _ in 0..self.parked.len() {
+            let p = self.parked.pop_front().expect("parked entry");
+            self.settle_access(t, p.core, p.stream_idx, p.addr, p.is_write, p.issue_at);
+        }
+    }
+
+    /// Apply one lane action on the shared stage.
+    fn apply_action(&mut self, t: Cycle, core: usize, kind: LaneActionKind) {
+        match kind {
+            LaneActionKind::Access {
+                stream_idx,
+                addr,
+                is_write,
+                issue_at,
+            } => self.settle_access(t, core, stream_idx, addr, is_write, issue_at),
+            LaneActionKind::Dirty { line } => self.hier.mark_dirty(line),
+            LaneActionKind::Prefetch { line } => {
+                if !self.hier.llc.contains(line) && self.hier.reserve_prefetch(core, line) {
+                    self.enqueue_read(t, line << 6, ReqSource::Prefetch { core });
                 }
             }
+            LaneActionKind::DmpHint { addr } => {
+                let line = addr >> 6;
+                if !self.hier.llc.contains(line) && self.hier.reserve_prefetch(core, line) {
+                    self.enqueue_read(t, addr, ReqSource::Prefetch { core });
+                }
+            }
+            LaneActionKind::Mmio { instance, seq, at } => {
+                // Route MMIO deliveries: encode (instance, seq) into a
+                // Timer event, exactly like the pre-staged design.
+                let payload = ((instance as u64) << 32) | seq as u64;
+                self.queue.push(at, Event::Timer(payload));
+            }
+        }
+    }
+
+    /// Handle one popped shared event at time `t`.
+    fn dispatch(&mut self, t: Cycle, event: Event) {
+        match event {
+            Event::CoreWake(_) => unreachable!("CoreWake events live on lane queues"),
             Event::ChannelSched(ch) => {
-                // Channels advance in the quantum's second phase; here we
+                // Channels advance in the quantum's channel phase; here we
                 // only record the requested activation time.
                 self.mem.note_sched(ch, t);
             }
@@ -324,37 +494,21 @@ impl<'a> System<'a> {
                         let line = comp.addr >> 6;
                         self.hier.complete_fill(core, line, t);
                         self.drain_writebacks(t);
-                        if let Some(ws) = self.waiters.remove(&line) {
-                            for (c, sidx) in ws {
-                                let ready = self.cores[c].complete_mem(sidx, t);
-                                self.queue.push(ready, Event::CoreWake(c));
-                            }
-                        }
+                        self.retry_parked(t);
+                        self.complete_waiters(line, t);
                         // Unblock MSHR-stalled cores.
-                        for c in 0..self.cores.len() {
-                            if self.cores[c].blocked {
-                                self.queue.push(t, Event::CoreWake(c));
-                            }
-                        }
+                        self.wake_blocked(t);
                     }
                     ReqSource::Prefetch { core } => {
                         if !comp.is_write && core != usize::MAX {
                             let line = comp.addr >> 6;
                             self.hier.complete_prefetch_fill(core, line, t);
                             self.drain_writebacks(t);
+                            self.retry_parked(t);
                             // Demand accesses may have merged into this
                             // in-flight prefetch: complete them too.
-                            if let Some(ws) = self.waiters.remove(&line) {
-                                for (c, sidx) in ws {
-                                    let ready = self.cores[c].complete_mem(sidx, t);
-                                    self.queue.push(ready, Event::CoreWake(c));
-                                }
-                            }
-                            for c in 0..self.cores.len() {
-                                if self.cores[c].blocked {
-                                    self.queue.push(t, Event::CoreWake(c));
-                                }
-                            }
+                            self.complete_waiters(line, t);
+                            self.wake_blocked(t);
                         }
                     }
                     ReqSource::Dx100 { instance, token } => {
@@ -384,27 +538,178 @@ impl<'a> System<'a> {
         }
     }
 
-    /// Phase 1 of a quantum: process every queued front-end event below
-    /// `t_end`, in (time, FIFO) order.
-    fn phase_front(&mut self, t_end: Cycle) {
-        while matches!(self.queue.peek_time(), Some(h) if h < t_end) {
-            let ev = self.queue.pop().expect("peeked event");
-            self.events += 1;
-            assert!(
-                self.events < GUARD_LIMIT,
-                "simulation livelock at t={}",
-                ev.time
-            );
-            self.end_time = self.end_time.max(ev.time);
-            self.dispatch(ev.time, ev.event);
+    /// The front-end phase of one quantum: rounds of (parallel lane stage,
+    /// deterministic shared stage) until nothing below `t_end` remains.
+    fn phase_front(&mut self, t_end: Cycle, fan: usize, crew: Option<&Crew<SimJob>>) {
+        loop {
+            // Lane stage: advance every lane with pending events.
+            let active: Vec<usize> = (0..self.lanes.len())
+                .filter(|&c| matches!(self.lane_ref(c).queue.peek_time(), Some(h) if h < t_end))
+                .collect();
+            let mut actions: Vec<RoundAction> = Vec::new();
+            if !active.is_empty() {
+                let mut fls: Vec<FrontLane> = active
+                    .iter()
+                    .map(|&c| {
+                        let mut fl = self.lanes[c].take().expect("front lane in flight");
+                        fl.lane = Some(self.hier.take_lane(c));
+                        fl
+                    })
+                    .collect();
+                let groups = fan.min(fls.len()).max(1);
+                match crew {
+                    Some(crew) if groups > 1 => {
+                        // Jobs ship to other threads, so they carry a flag
+                        // snapshot (identical values to the inline read).
+                        // Contiguous groups; grouping never affects
+                        // results (lanes share nothing), only balance.
+                        let flags = Arc::new(self.ready.clone());
+                        let total = fls.len();
+                        let base = total / groups;
+                        let extra = total % groups;
+                        let mut it = fls.into_iter();
+                        let jobs: Vec<SimJob> = (0..groups)
+                            .map(|g| {
+                                let take = base + usize::from(g < extra);
+                                SimJob::Front(FrontJob {
+                                    lanes: it.by_ref().take(take).collect(),
+                                    t_end,
+                                    flags: Arc::clone(&flags),
+                                })
+                            })
+                            .collect();
+                        fls = crew
+                            .dispatch(jobs)
+                            .into_iter()
+                            .flat_map(|j| match j {
+                                SimJob::Front(fj) => fj.lanes,
+                                SimJob::Channels(_) => unreachable!("channel job in front stage"),
+                            })
+                            .collect();
+                    }
+                    _ => {
+                        // Inline: lanes read the live flag board directly
+                        // (no snapshot allocation on the serial path).
+                        for fl in &mut fls {
+                            fl.advance(t_end, &self.ready);
+                        }
+                    }
+                }
+                // Merge lanes back and collect their deferred actions.
+                for mut fl in fls {
+                    let idx = fl.idx;
+                    self.hier.put_lane(idx, fl.lane.take().expect("lane caches"));
+                    self.end_time = self.end_time.max(fl.last_time);
+                    let acts = std::mem::take(&mut fl.actions);
+                    self.lanes[idx] = Some(fl);
+                    for (seq, a) in acts.into_iter().enumerate() {
+                        actions.push(RoundAction {
+                            time: a.time,
+                            core: idx,
+                            seq: seq as u64,
+                            kind: a.kind,
+                        });
+                    }
+                }
+            }
+            let events_due = matches!(self.queue.peek_time(), Some(h) if h < t_end);
+            if active.is_empty() && actions.is_empty() && !events_due {
+                break;
+            }
+            // Shared stage: merge the round's (sorted) lane actions with
+            // the LIVE shared event queue in time order. Events pushed
+            // while the stage runs (MMIO timers, channel activations, DX100
+            // self-wakes) join the merge at their correct position, exactly
+            // like the pre-staged single-heap loop; on a time tie, events
+            // apply first (their effects are causes the same-time actions
+            // settle against).
+            actions.sort_unstable_by_key(|a| (a.time, a.core, a.seq));
+            let mut ai = 0;
+            loop {
+                let next_event = self.queue.peek_time().filter(|&h| h < t_end);
+                let take_event = match (next_event, actions.get(ai)) {
+                    (Some(te), Some(a)) => te <= a.time,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => break,
+                };
+                if take_event {
+                    let ev = self.queue.pop().expect("peeked event");
+                    self.shared_events += 1;
+                    assert!(
+                        self.shared_events < GUARD_LIMIT,
+                        "simulation livelock at t={}",
+                        ev.time
+                    );
+                    self.end_time = self.end_time.max(ev.time);
+                    self.dispatch(ev.time, ev.event);
+                } else {
+                    let a = actions[ai];
+                    ai += 1;
+                    self.apply_action(a.time, a.core, a.kind);
+                }
+            }
         }
+    }
+
+    /// The channel phase of one quantum: advance every channel engine,
+    /// merging completions back in channel-index order.
+    fn phase_channels(
+        &mut self,
+        t_end: Cycle,
+        crew: Option<&Crew<SimJob>>,
+        detached: &mut Option<Vec<ShardChannel>>,
+        fan: usize,
+    ) {
+        let Some(chans) = detached.take() else {
+            for ch in 0..self.mem.num_channels() {
+                let adv = self.mem.advance_channel(ch, t_end);
+                self.absorb(adv);
+            }
+            return;
+        };
+        let crew = crew.expect("detached channels without a crew");
+        let groups = fan.min(chans.len()).max(1);
+        let mut jobs: Vec<ChannelJob> = (0..groups)
+            .map(|_| ChannelJob {
+                chans: Vec::new(),
+                feeds: Vec::new(),
+                t_end,
+                advs: Vec::new(),
+            })
+            .collect();
+        for sc in chans {
+            let g = sc.index() % groups;
+            jobs[g].feeds.push(self.mem.take_feed(sc.index()));
+            jobs[g].chans.push(sc);
+        }
+        let done = crew.dispatch(jobs.into_iter().map(SimJob::Channels).collect());
+        let mut returned = Vec::with_capacity(self.mem.num_channels());
+        let mut advs = Vec::with_capacity(self.mem.num_channels());
+        for job in done {
+            match job {
+                SimJob::Channels(mut cj) => {
+                    returned.append(&mut cj.chans);
+                    advs.append(&mut cj.advs);
+                }
+                SimJob::Front(_) => unreachable!("front job in channel stage"),
+            }
+        }
+        // Deterministic merge: channel-index order, exactly like the
+        // serial loop.
+        advs.sort_unstable_by_key(|a| a.index);
+        for adv in advs {
+            self.mem.sync_channel(&adv);
+            self.absorb(adv);
+        }
+        *detached = Some(returned);
     }
 
     /// Merge one channel's quantum result back into the event stream.
     /// Callers must absorb advances in channel-index order — that order is
     /// the determinism contract between serial and sharded execution.
-    fn absorb(&mut self, adv: ChannelAdvance) {
-        self.events += adv.sched_calls;
+    fn absorb(&mut self, adv: crate::mem::ChannelAdvance) {
+        self.channel_events += adv.sched_calls;
         for comp in adv.completions {
             self.queue.push(comp.time, Event::DramDone(comp.id));
             self.routing.insert(comp.id, comp);
@@ -413,17 +718,21 @@ impl<'a> System<'a> {
 
     /// Earliest instant anything in the system wants to run.
     fn next_quantum_start(&self) -> Option<Cycle> {
-        match (self.queue.peek_time(), self.mem.next_channel_time()) {
-            (None, None) => None,
-            (Some(a), None) => Some(a),
-            (None, Some(b)) => Some(b),
-            (Some(a), Some(b)) => Some(a.min(b)),
+        let mut next: Option<Cycle> = self.queue.peek_time();
+        for fl in &self.lanes {
+            if let Some(h) = fl.as_ref().expect("front lane in flight").queue.peek_time() {
+                next = Some(next.map_or(h, |n| n.min(h)));
+            }
         }
+        if let Some(b) = self.mem.next_channel_time() {
+            next = Some(next.map_or(b, |n| n.min(b)));
+        }
+        next
     }
 
     fn run(&mut self, shards: usize) {
-        for c in 0..self.cores.len() {
-            self.queue.push(0, Event::CoreWake(c));
+        for c in 0..self.lanes.len() {
+            self.wake_lane(c, 0);
         }
         for i in 0..self.dx.len() {
             self.queue.push(0, Event::Dx100Wake(i));
@@ -432,145 +741,72 @@ impl<'a> System<'a> {
         // completes at or after the quantum end, so front-end and channel
         // phases never feed back into each other within a quantum.
         let quantum = self.cfg.dram.min_completion_latency().max(1);
-        let shards = shards.max(1).min(self.mem.num_channels());
-        if shards > 1 {
-            self.run_sharded(quantum, shards);
-        } else {
-            self.run_serial(quantum);
+        let shards = shards.max(1);
+        let front_fan = shards.min(self.lanes.len()).max(1);
+        let chan_fan = shards.min(self.mem.num_channels()).max(1);
+        // The fan-out hint asks for `shards - 1` opportunistic helpers
+        // from the shared pool; the run thread is the guaranteed
+        // executor. Helpers come from whatever workers the pool already
+        // has — the entry points that own the thread policy (env-driven
+        // runs, sweep batches) size the pool, so an explicit `threads`
+        // cap stays the bound on busy executors. Helpers never change
+        // results, only wall time.
+        let crew =
+            (front_fan > 1 || chan_fan > 1).then(|| Crew::new(WorkerPool::global(), shards - 1));
+        let mut detached = (chan_fan > 1).then(|| self.mem.detach_shards());
+        while let Some(t0) = self.next_quantum_start() {
+            let t_end = t0.saturating_add(quantum);
+            self.phase_front(t_end, front_fan, crew.as_ref());
+            if !self.mem.has_channel_work(t_end) {
+                continue;
+            }
+            self.phase_channels(t_end, crew.as_ref(), &mut detached, chan_fan);
         }
-        if !self.cores.iter().all(|c| c.done) {
-            for c in &self.cores {
+        if let Some(chans) = detached.take() {
+            self.mem.attach_shards(chans);
+        }
+        if !(0..self.lanes.len()).all(|c| self.lane_ref(c).core.done) {
+            for c in 0..self.lanes.len() {
+                let core = &self.lane_ref(c).core;
                 eprintln!(
                     "core {}: done={} rob={} inflight={:?} blocked={}",
-                    c.id,
-                    c.done,
-                    c.rob_len(),
-                    c.inflight(),
-                    c.blocked
+                    core.id,
+                    core.done,
+                    core.rob_len(),
+                    core.inflight(),
+                    core.blocked
                 );
             }
             eprintln!("waiters: {} lines", self.waiters.len());
+            eprintln!("parked: {} accesses", self.parked.len());
             eprintln!("mem pending: {}", self.mem.has_pending());
             panic!("cores not drained at t={}", self.end_time);
         }
     }
 
-    fn run_serial(&mut self, quantum: Cycle) {
-        while let Some(t0) = self.next_quantum_start() {
-            let t_end = t0.saturating_add(quantum);
-            self.phase_front(t_end);
-            if !self.mem.has_channel_work(t_end) {
-                continue;
-            }
-            for ch in 0..self.mem.num_channels() {
-                let adv = self.mem.advance_channel(ch, t_end);
-                self.absorb(adv);
-            }
-        }
-    }
-
-    fn run_sharded(&mut self, quantum: Cycle, nshards: usize) {
-        let nch = self.mem.num_channels();
-        let mut groups: Vec<Vec<ShardChannel>> = (0..nshards).map(|_| Vec::new()).collect();
-        for sc in self.mem.detach_shards() {
-            let g = sc.index() % nshards;
-            groups[g].push(sc);
-        }
-        let owned: Vec<Vec<usize>> = groups
-            .iter()
-            .map(|g| g.iter().map(|sc| sc.index()).collect())
-            .collect();
-        let sync = ShardSync {
-            epoch: AtomicU64::new(0),
-            t_end: AtomicU64::new(0),
-            done: AtomicUsize::new(0),
-            stop: AtomicBool::new(false),
-        };
-        let mailboxes: Vec<ShardMailbox> = (0..nshards).map(|_| ShardMailbox::default()).collect();
-        let mut returned: Vec<ShardChannel> = Vec::with_capacity(nch);
-        std::thread::scope(|scope| {
-            let sync = &sync;
-            // If this thread unwinds (guard assert, unknown completion...),
-            // release the workers so the scope's implicit join can finish
-            // and the panic propagates instead of hanging.
-            let stop_guard = StopGuard(sync);
-            let handles: Vec<_> = groups
-                .into_iter()
-                .enumerate()
-                .map(|(si, group)| {
-                    let mbox = &mailboxes[si];
-                    scope.spawn(move || shard_worker(group, sync, mbox))
-                })
-                .collect();
-            let mut epoch = 0u64;
-            while let Some(t0) = self.next_quantum_start() {
-                let t_end = t0.saturating_add(quantum);
-                self.phase_front(t_end);
-                if !self.mem.has_channel_work(t_end) {
-                    continue;
-                }
-                // Ship each shard its channels' new work.
-                for (si, chans) in owned.iter().enumerate() {
-                    let mut feeds = mailboxes[si].feeds.lock().unwrap();
-                    for &ch in chans {
-                        let feed = self.mem.take_feed(ch);
-                        if !feed.is_empty() {
-                            feeds.push((ch, feed));
-                        }
-                    }
-                }
-                sync.t_end.store(t_end, Ordering::Release);
-                epoch += 1;
-                sync.epoch.store(epoch, Ordering::Release);
-                // Quanta are ~100 simulated cycles (microseconds of work):
-                // spin rather than park, yielding periodically.
-                let mut spins = 0u32;
-                while sync.done.load(Ordering::Acquire) < nshards {
-                    spins = spins.wrapping_add(1);
-                    if spins % 1024 == 0 {
-                        if handles.iter().any(|h| h.is_finished()) {
-                            panic!("shard worker exited early");
-                        }
-                        std::thread::yield_now();
-                    } else {
-                        std::hint::spin_loop();
-                    }
-                }
-                sync.done.store(0, Ordering::Relaxed);
-                // Deterministic merge: channel-index order, exactly like
-                // the serial loop.
-                let mut advs: Vec<ChannelAdvance> = Vec::with_capacity(nch);
-                for mbox in &mailboxes {
-                    advs.append(&mut mbox.out.lock().unwrap());
-                }
-                advs.sort_by_key(|a| a.index);
-                for adv in advs {
-                    self.mem.sync_channel(&adv);
-                    self.absorb(adv);
-                }
-            }
-            drop(stop_guard); // normal exit: stop the workers
-            for h in handles {
-                returned.extend(h.join().expect("shard worker panicked"));
-            }
-        });
-        self.mem.attach_shards(returned);
-    }
-
     fn stats(&self, kind: SystemKind, workload: &'static str) -> RunStats {
-        let cycles = self
-            .cores
-            .iter()
+        let cores = || {
+            self.lanes
+                .iter()
+                .map(|l| &l.as_ref().expect("front lane in flight").core)
+        };
+        let cycles = cores()
             .map(|c| c.stats.finish_time)
             .chain(self.dx.iter().map(|d| d.stats.finish_time))
             .max()
             .unwrap_or(self.end_time)
             .max(1);
-        let instrs: u64 = self.cores.iter().map(|c| c.stats.retired_instrs).sum();
-        let spin: u64 = self.cores.iter().map(|c| c.stats.spin_instrs).sum();
+        let instrs: u64 = cores().map(|c| c.stats.retired_instrs).sum();
+        let spin: u64 = cores().map(|c| c.stats.spin_instrs).sum();
         // Core-side MPKI: misses from the private L2s (the shared LLC also
         // serves DX100's Cache-Interface lookups, which are not core misses).
-        let l2_misses: u64 = self.hier.l2.iter().map(|c| c.stats.misses).sum();
+        let l2_misses: u64 = self.hier.l2_demand_misses();
+        let lane_events: u64 = self
+            .lanes
+            .iter()
+            .map(|l| l.as_ref().expect("front lane in flight").events)
+            .sum();
+        let front_events = lane_events + self.shared_events;
         let dram = self.mem.stats();
         RunStats {
             kind,
@@ -586,78 +822,10 @@ impl<'a> System<'a> {
             dram_writes: dram.writes,
             dram_bytes: dram.bytes,
             dx: self.dx.iter().map(|d| d.stats.clone()).collect(),
-            events: self.events,
+            front_events,
+            channel_events: self.channel_events,
+            events: front_events + self.channel_events,
         }
-    }
-}
-
-/// Epoch-published quantum barrier between the event-loop thread and the
-/// shard workers.
-struct ShardSync {
-    /// Incremented by the main thread to release a quantum.
-    epoch: AtomicU64,
-    /// Quantum end time for the published epoch.
-    t_end: AtomicU64,
-    /// Workers that have finished the published epoch.
-    done: AtomicUsize,
-    /// Tells workers to return their channels and exit.
-    stop: AtomicBool,
-}
-
-/// Sets [`ShardSync::stop`] on drop (including unwinds of the main loop).
-struct StopGuard<'a>(&'a ShardSync);
-
-impl Drop for StopGuard<'_> {
-    fn drop(&mut self) {
-        self.0.stop.store(true, Ordering::Release);
-    }
-}
-
-/// Per-shard work handoff: the main thread fills `feeds` before bumping
-/// the epoch; the worker fills `out` before bumping `done`.
-#[derive(Default)]
-struct ShardMailbox {
-    feeds: Mutex<Vec<(usize, ChannelFeed)>>,
-    out: Mutex<Vec<ChannelAdvance>>,
-}
-
-fn shard_worker(
-    mut group: Vec<ShardChannel>,
-    sync: &ShardSync,
-    mbox: &ShardMailbox,
-) -> Vec<ShardChannel> {
-    let mut seen = 0u64;
-    loop {
-        // Wait for the next quantum (or the stop flag).
-        let mut spins = 0u32;
-        loop {
-            let e = sync.epoch.load(Ordering::Acquire);
-            if e != seen {
-                seen = e;
-                break;
-            }
-            if sync.stop.load(Ordering::Acquire) {
-                return group;
-            }
-            spins = spins.wrapping_add(1);
-            if spins % 1024 == 0 {
-                std::thread::yield_now();
-            } else {
-                std::hint::spin_loop();
-            }
-        }
-        let t_end = sync.t_end.load(Ordering::Acquire);
-        let mut feeds = std::mem::take(&mut *mbox.feeds.lock().unwrap());
-        let mut outs = Vec::with_capacity(group.len());
-        for sc in group.iter_mut() {
-            let feed = match feeds.iter().position(|(i, _)| *i == sc.index()) {
-                Some(p) => feeds.swap_remove(p).1,
-                None => ChannelFeed::default(),
-            };
-            outs.push(sc.advance(feed, t_end));
-        }
-        mbox.out.lock().unwrap().extend(outs);
-        sync.done.fetch_add(1, Ordering::AcqRel);
     }
 }
 
@@ -677,6 +845,7 @@ mod tests {
         assert!(stats.cycles > 0);
         assert!(stats.instrs > 0);
         assert!(stats.dram_reads > 0, "random gather must reach DRAM");
+        assert_eq!(stats.events, stats.front_events + stats.channel_events);
     }
 
     #[test]

@@ -50,9 +50,21 @@ pub trait SystemVariant: Sync {
     /// The per-core instruction streams this system executes.
     fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]>;
 
+    /// The op stream core `c` executes — the allocation-free single-core
+    /// accessor front-end lanes use on every advance (out-of-range cores
+    /// see an empty stream and retire immediately).
+    fn stream_of<'a>(&self, cw: &'a CompiledWorkload, c: usize) -> &'a [Op];
+
     /// DMP hint tables, if this system drives the indirect prefetcher.
     fn dmp_hints<'a>(&self, _cw: &'a CompiledWorkload) -> Option<&'a [DmpHints]> {
         None
+    }
+
+    /// Core `c`'s DMP hint table — the allocation-free per-core accessor
+    /// front-end lanes use on every advance. Defaults through
+    /// [`SystemVariant::dmp_hints`] so the two stay one source of truth.
+    fn dmp_hints_of<'a>(&self, cw: &'a CompiledWorkload, c: usize) -> Option<&'a DmpHints> {
+        self.dmp_hints(cw).and_then(|tables| tables.get(c))
     }
 
     /// Accelerator instances for this system.
@@ -70,6 +82,14 @@ fn baseline_streams(cw: &CompiledWorkload) -> Vec<&[Op]> {
     cw.baseline.streams.iter().map(|s| s.ops.as_slice()).collect()
 }
 
+fn baseline_stream_of(cw: &CompiledWorkload, c: usize) -> &[Op] {
+    cw.baseline
+        .streams
+        .get(c)
+        .map(|s| s.ops.as_slice())
+        .unwrap_or(&[])
+}
+
 /// The Table 3 multicore with stride prefetchers and a 10 MB LLC.
 pub struct BaselineVariant;
 
@@ -80,6 +100,10 @@ impl SystemVariant for BaselineVariant {
 
     fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]> {
         baseline_streams(cw)
+    }
+
+    fn stream_of<'a>(&self, cw: &'a CompiledWorkload, c: usize) -> &'a [Op] {
+        baseline_stream_of(cw, c)
     }
 }
 
@@ -93,6 +117,10 @@ impl SystemVariant for DmpVariant {
 
     fn streams<'a>(&self, cw: &'a CompiledWorkload) -> Vec<&'a [Op]> {
         baseline_streams(cw)
+    }
+
+    fn stream_of<'a>(&self, cw: &'a CompiledWorkload, c: usize) -> &'a [Op] {
+        baseline_stream_of(cw, c)
     }
 
     fn dmp_hints<'a>(&self, cw: &'a CompiledWorkload) -> Option<&'a [DmpHints]> {
@@ -119,6 +147,14 @@ impl SystemVariant for Dx100Variant {
             .iter()
             .map(|s| s.ops.as_slice())
             .collect()
+    }
+
+    fn stream_of<'a>(&self, cw: &'a CompiledWorkload, c: usize) -> &'a [Op] {
+        cw.dx
+            .core_streams
+            .get(c)
+            .map(|s| s.ops.as_slice())
+            .unwrap_or(&[])
     }
 
     fn accelerators<'a>(

@@ -10,5 +10,8 @@
 pub mod model;
 pub mod ops;
 
-pub use model::{CoreEnv, CoreModel, CoreStats, LineWaiters, MmioDelivery, PendingMem};
+pub use model::{
+    CoreModel, CoreStats, LaneAction, LaneActionKind, LaneEnv, LineWaiters, MmioDelivery,
+    PendingMem,
+};
 pub use ops::{Op, OpKind, OpStream};

@@ -7,11 +7,23 @@
 //! wake retires finished ops in order, refills the ROB from the op stream,
 //! and issues ready ops — scanning at most `IQ_SCAN` waiting entries, the
 //! analog of the Table 3 50-entry issue queue.
+//!
+//! # Lane discipline
+//!
+//! A wake runs entirely against **lane-local** state ([`LaneEnv`]): this
+//! core's [`PrivateLane`] caches, its stride prefetcher, its own event
+//! queue, and a read-only snapshot of the DX100 ready flags. Work that
+//! needs a shared resource — the LLC, the DRAM controller, MMIO delivery,
+//! prefetch reservations — is not performed here; it is recorded as a
+//! timestamped [`LaneAction`] and applied later by the coordinator's
+//! shared stage in a deterministic core-index-ordered merge. That seam is
+//! what lets several cores' front ends advance in parallel inside one
+//! time quantum with bit-identical results at any fan-out (see
+//! `docs/CONCURRENCY.md`).
 
 use super::ops::{Op, OpKind};
-use crate::cache::{Access, Hierarchy, StridePrefetcher};
+use crate::cache::{PrivateAccess, PrivateLane, StridePrefetcher};
 use crate::config::CoreConfig;
-use crate::mem::{MemController, ReqSource};
 use crate::sim::{Cycle, Event, EventQueue};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -65,22 +77,78 @@ pub struct PendingMem {
     pub stream_idx: usize,
 }
 
-/// Mutable environment handed to the core on each wake.
-pub struct CoreEnv<'a> {
-    /// Cache hierarchy shared with the other cores.
-    pub hier: &'a mut Hierarchy,
-    /// DRAM controller front end.
-    pub mem: &'a mut MemController,
-    /// Event queue for self-scheduled wakes and DRAM activations.
+/// One shared-resource interaction deferred from a lane wake to the
+/// coordinator's shared stage. Ordered within a lane by emission; the
+/// shared stage merges lanes by `(time, core index, emission order)`.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneAction {
+    /// Event time of the wake that produced the action.
+    pub time: Cycle,
+    /// What the shared stage must do.
+    pub kind: LaneActionKind,
+}
+
+/// The shared-stage work items a lane can emit.
+#[derive(Clone, Copy, Debug)]
+pub enum LaneActionKind {
+    /// A demand access that missed the private L1/L2 and holds an MSHR
+    /// reservation; the shared stage resolves it against the LLC / DRAM
+    /// via [`crate::cache::Hierarchy::shared_access`].
+    Access {
+        /// Stream index of the waiting op (completion routing).
+        stream_idx: usize,
+        /// Byte address.
+        addr: u64,
+        /// Whether the access dirties the line.
+        is_write: bool,
+        /// Issue cycle the core allocated (bandwidth-accounted); latencies
+        /// accumulate from here.
+        issue_at: Cycle,
+    },
+    /// A private-level write hit: mark the line dirty for writeback
+    /// accounting (no completion needed).
+    Dirty {
+        /// Line address to mark.
+        line: u64,
+    },
+    /// A stride-prefetcher candidate line; the shared stage filters it
+    /// against the LLC, reserves MSHRs, and enqueues the DRAM read.
+    Prefetch {
+        /// Candidate line address.
+        line: u64,
+    },
+    /// A DMP indirect-prefetch hint attached to the issued op.
+    DmpHint {
+        /// Predicted byte address.
+        addr: u64,
+    },
+    /// A completed MMIO store triple: deliver instruction `seq` to
+    /// `instance` at `at`.
+    Mmio {
+        /// Target DX100 instance.
+        instance: u16,
+        /// Instruction sequence number.
+        seq: u32,
+        /// Delivery time at the accelerator.
+        at: Cycle,
+    },
+}
+
+/// Lane-local environment handed to the core on each wake. Everything
+/// here is private to the core (or an immutable snapshot), so wakes of
+/// different cores can run on different worker threads.
+pub struct LaneEnv<'a> {
+    /// This core's private L1/L2 caches and MSHR files.
+    pub lane: &'a mut PrivateLane,
+    /// This core's own event queue (self-scheduled wakes only).
     pub queue: &'a mut EventQueue,
-    /// In-flight line address -> waiting (core, stream index) ops.
-    pub waiters: &'a mut LineWaiters,
     /// This core's stride prefetcher.
     pub prefetcher: &'a mut StridePrefetcher,
-    /// Ready-bit board of each DX100 instance: `flags[instance][flag]`.
+    /// Ready-bit board snapshot of each DX100 instance:
+    /// `flags[instance][flag]`, as of the current merge round.
     pub flags: &'a [Vec<bool>],
-    /// Completed MMIO instruction deliveries (collected by the system).
-    pub mmio_out: &'a mut Vec<MmioDelivery>,
+    /// Deferred shared-stage work, appended in emission order.
+    pub actions: &'a mut Vec<LaneAction>,
     /// Effective scratchpad read latency (cacheable + stride-prefetched).
     pub spd_latency: Cycle,
     /// Uncacheable MMIO store latency.
@@ -183,9 +251,10 @@ impl CoreModel {
         at
     }
 
-    /// Mark a memory op complete (called on DRAM return / merged-line fill).
-    /// Returns the time the op's result is architecturally ready (RMW adds
-    /// modify / lock latency); the caller schedules a `CoreWake` then.
+    /// Mark a memory op complete (called on DRAM return / merged-line fill
+    /// / shared-stage LLC hit). Returns the time the op's result is
+    /// architecturally ready (RMW adds modify / lock latency); the caller
+    /// schedules a `CoreWake` then.
     pub fn complete_mem(&mut self, stream_idx: usize, t: Cycle) -> Cycle {
         let penalty = self
             .rob_entry(stream_idx)
@@ -227,7 +296,7 @@ impl CoreModel {
     }
 
     /// Main state machine. Call on every `CoreWake(self.id)` event.
-    pub fn wake(&mut self, t: Cycle, ops: &[Op], env: &mut CoreEnv) {
+    pub fn wake(&mut self, t: Cycle, ops: &[Op], env: &mut LaneEnv) {
         self.blocked = false;
         if self.next_wake_at <= t {
             self.next_wake_at = Cycle::MAX;
@@ -334,7 +403,7 @@ impl CoreModel {
         }
     }
 
-    fn try_issue(&mut self, i: usize, t: Cycle, env: &mut CoreEnv) -> IssueResult {
+    fn try_issue(&mut self, i: usize, t: Cycle, env: &mut LaneEnv) -> IssueResult {
         let e = self.rob[i];
         let idx = e.stream_idx;
         match e.op.kind {
@@ -358,10 +427,13 @@ impl CoreModel {
                 self.stores_inflight += 1;
                 self.stats.stores += 1;
                 let done = at + env.mmio_latency;
-                env.mmio_out.push(MmioDelivery {
-                    instance,
-                    seq,
-                    time: done,
+                env.actions.push(LaneAction {
+                    time: t,
+                    kind: LaneActionKind::Mmio {
+                        instance,
+                        seq,
+                        at: done,
+                    },
                 });
                 self.pending_done.push(Reverse((done, idx)));
                 IssueResult::Issued
@@ -399,16 +471,21 @@ impl CoreModel {
         stream: u32,
         is_write: bool,
         is_rmw_like: bool,
-        env: &mut CoreEnv,
+        env: &mut LaneEnv,
     ) -> IssueResult {
         let e = self.rob[i];
         let idx = e.stream_idx;
-        let access = env.hier.access(self.id, addr, t, is_write);
-        match access {
-            Access::Blocked => IssueResult::Blocked,
-            Access::Hit { latency, .. } => {
+        match env.lane.access_private(addr, t) {
+            PrivateAccess::Blocked => IssueResult::Blocked,
+            PrivateAccess::Hit { latency, .. } => {
                 let at = self.alloc_issue(t, e.op.instrs);
                 self.mark_issued_mem(i, is_write, is_rmw_like);
+                if is_write {
+                    env.actions.push(LaneAction {
+                        time: t,
+                        kind: LaneActionKind::Dirty { line: addr >> 6 },
+                    });
+                }
                 let extra = if is_rmw_like {
                     if matches!(e.op.kind, OpKind::Rmw { atomic: true, .. }) {
                         ATOMIC_LOCK_PENALTY + RMW_MODIFY_LATENCY
@@ -423,59 +500,25 @@ impl CoreModel {
                 self.fire_dmp_hint(idx, t, env);
                 IssueResult::Issued
             }
-            Access::MergedMiss { line } => {
-                let _ = self.alloc_issue(t, e.op.instrs);
-                self.mark_issued_mem(i, is_write, is_rmw_like);
-                env.waiters.entry(line).or_default().push((self.id, idx));
-                self.observe_prefetch(addr, stream, t, env);
-                self.fire_dmp_hint(idx, t, env);
-                IssueResult::Issued
-            }
-            Access::Miss {
-                line,
-                lookup_latency,
-            } => {
+            PrivateAccess::Miss => {
+                // The lane reserved MSHR room; the shared stage settles the
+                // access (LLC hit, merge, DRAM miss, or parked retry) and
+                // wakes this core when data is ready.
                 let at = self.alloc_issue(t, e.op.instrs);
                 self.mark_issued_mem(i, is_write, is_rmw_like);
-                let start = at + lookup_latency;
-                env.mem.enqueue(
-                    start,
-                    addr,
-                    false, // fills are reads; dirty writeback handled on eviction
-                    ReqSource::Core {
-                        core: self.id,
-                        op: idx as u64,
+                env.actions.push(LaneAction {
+                    time: t,
+                    kind: LaneActionKind::Access {
+                        stream_idx: idx,
+                        addr,
+                        is_write,
+                        issue_at: at,
                     },
-                );
-                let ch = env.mem.channel_of(addr);
-                if env.mem.sched_request(ch, start) {
-                    env.queue.push(start, Event::ChannelSched(ch));
-                }
-                env.waiters.entry(line).or_default().push((self.id, idx));
+                });
                 self.observe_prefetch(addr, stream, t, env);
                 self.fire_dmp_hint(idx, t, env);
                 IssueResult::Issued
             }
-        }
-    }
-
-    /// Fire the DMP indirect prefetch attached to op `idx`, if any: the
-    /// predicted `A[B[i+d]]` line goes through the L2/LLC prefetch path.
-    fn fire_dmp_hint(&mut self, idx: usize, t: Cycle, env: &mut CoreEnv) {
-        let Some(hints) = env.dmp_hints else { return };
-        let Some(&addr) = hints.get(&idx) else { return };
-        let line = addr >> 6;
-        if env.hier.llc.contains(line) || env.hier.l2[self.id].contains(line) {
-            return;
-        }
-        if !env.hier.reserve_prefetch(self.id, line) {
-            return;
-        }
-        env.mem
-            .enqueue(t, addr, false, ReqSource::Prefetch { core: self.id });
-        let ch = env.mem.channel_of(addr);
-        if env.mem.sched_request(ch, t) {
-            env.queue.push(t, Event::ChannelSched(ch));
         }
     }
 
@@ -500,30 +543,35 @@ impl CoreModel {
         }
     }
 
-    fn observe_prefetch(&mut self, addr: u64, stream: u32, t: Cycle, env: &mut CoreEnv) {
+    /// Emit the DMP indirect prefetch attached to op `idx`, if any: the
+    /// predicted `A[B[i+d]]` line goes through the shared stage's
+    /// L2/LLC prefetch path.
+    fn fire_dmp_hint(&mut self, idx: usize, t: Cycle, env: &mut LaneEnv) {
+        let Some(hints) = env.dmp_hints else { return };
+        let Some(&addr) = hints.get(&idx) else { return };
+        if env.lane.l2.contains(addr >> 6) {
+            return;
+        }
+        env.actions.push(LaneAction {
+            time: t,
+            kind: LaneActionKind::DmpHint { addr },
+        });
+    }
+
+    fn observe_prefetch(&mut self, addr: u64, stream: u32, t: Cycle, env: &mut LaneEnv) {
         if stream == 0 {
             return;
         }
         let key = ((self.id as u64) << 32) | stream as u64;
         let lines = env.prefetcher.observe(key, addr >> 6);
         for line in lines {
-            let pf_addr = line << 6;
-            if env.hier.llc.contains(line) || env.hier.l2[self.id].contains(line) {
+            if env.lane.l2.contains(line) {
                 continue;
             }
-            if !env.hier.reserve_prefetch(self.id, line) {
-                continue;
-            }
-            env.mem.enqueue(
-                t,
-                pf_addr,
-                false,
-                ReqSource::Prefetch { core: self.id },
-            );
-            let ch = env.mem.channel_of(pf_addr);
-            if env.mem.sched_request(ch, t) {
-                env.queue.push(t, Event::ChannelSched(ch));
-            }
+            env.actions.push(LaneAction {
+                time: t,
+                kind: LaneActionKind::Prefetch { line },
+            });
         }
     }
 
@@ -547,10 +595,13 @@ enum IssueResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::{Hierarchy, SharedAccess};
     use crate::config::SystemConfig;
     use crate::core::ops::OpStream;
+    use crate::mem::{MemController, ReqSource};
 
-    /// Minimal single-core harness driving one CoreModel to completion.
+    /// Minimal single-core harness driving one CoreModel to completion
+    /// through the staged (lane wake + shared apply) discipline.
     struct Harness {
         core: CoreModel,
         hier: Hierarchy,
@@ -581,6 +632,91 @@ mod tests {
             }
         }
 
+        /// One lane wake followed by an inline shared stage (the harness
+        /// is single-core, so the merge is trivial).
+        fn wake_core(&mut self, t: Cycle) {
+            let mut lane = self.hier.take_lane(0);
+            let mut actions = Vec::new();
+            let mut env = LaneEnv {
+                lane: &mut lane,
+                queue: &mut self.queue,
+                prefetcher: &mut self.prefetcher,
+                flags: &self.flags,
+                actions: &mut actions,
+                spd_latency: 8,
+                mmio_latency: 40,
+                dmp_hints: None,
+            };
+            self.core.wake(t, &self.ops, &mut env);
+            self.hier.put_lane(0, lane);
+            for a in actions {
+                self.apply(a);
+            }
+        }
+
+        fn enqueue_dram(&mut self, start: Cycle, addr: u64, source: ReqSource) {
+            self.mem.enqueue(start, addr, false, source);
+            let ch = self.mem.channel_of(addr);
+            if self.mem.sched_request(ch, start) {
+                self.queue.push(start, Event::ChannelSched(ch));
+            }
+        }
+
+        /// Single-core replica of the coordinator's shared stage — keep in
+        /// sync with `System::{settle_access, apply_action}` in
+        /// `coordinator/system.rs` (LlcFull parking is omitted: this
+        /// harness never saturates the 256-entry LLC MSHR file).
+        fn apply(&mut self, a: LaneAction) {
+            match a.kind {
+                LaneActionKind::Access {
+                    stream_idx,
+                    addr,
+                    is_write,
+                    issue_at,
+                } => match self.hier.shared_access(0, addr, a.time, is_write) {
+                    SharedAccess::LlcHit { latency } => {
+                        let at = a.time.max(issue_at + latency);
+                        let ready = self.core.complete_mem(stream_idx, at);
+                        self.queue.push(ready, Event::CoreWake(0));
+                    }
+                    SharedAccess::Merged { line } => {
+                        self.waiters.entry(line).or_default().push((0, stream_idx));
+                    }
+                    SharedAccess::Miss { lookup_latency } => {
+                        let line = addr >> 6;
+                        let start = a.time.max(issue_at + lookup_latency);
+                        self.enqueue_dram(
+                            start,
+                            addr,
+                            ReqSource::Core {
+                                core: 0,
+                                op: stream_idx as u64,
+                            },
+                        );
+                        self.waiters.entry(line).or_default().push((0, stream_idx));
+                    }
+                    SharedAccess::LlcFull => panic!("harness never fills the LLC MSHRs"),
+                },
+                LaneActionKind::Dirty { line } => self.hier.mark_dirty(line),
+                LaneActionKind::Prefetch { line } => {
+                    if !self.hier.llc.contains(line) && self.hier.reserve_prefetch(0, line) {
+                        self.enqueue_dram(a.time, line << 6, ReqSource::Prefetch { core: 0 });
+                    }
+                }
+                LaneActionKind::DmpHint { addr } => {
+                    let line = addr >> 6;
+                    if !self.hier.llc.contains(line) && self.hier.reserve_prefetch(0, line) {
+                        self.enqueue_dram(a.time, addr, ReqSource::Prefetch { core: 0 });
+                    }
+                }
+                LaneActionKind::Mmio { instance, seq, at } => self.mmio.push(MmioDelivery {
+                    instance,
+                    seq,
+                    time: at,
+                }),
+            }
+        }
+
         fn run(&mut self) -> Cycle {
             self.queue.push(0, Event::CoreWake(0));
             let mut t = 0;
@@ -591,19 +727,7 @@ mod tests {
                 t = ev.time;
                 match ev.event {
                     Event::CoreWake(_) => {
-                        let mut env = CoreEnv {
-                            hier: &mut self.hier,
-                            mem: &mut self.mem,
-                            queue: &mut self.queue,
-                            waiters: &mut self.waiters,
-                            prefetcher: &mut self.prefetcher,
-                            flags: &self.flags,
-                            mmio_out: &mut self.mmio,
-                            spd_latency: 8,
-                            mmio_latency: 40,
-                            dmp_hints: None,
-                        };
-                        self.core.wake(t, &self.ops, &mut env);
+                        self.wake_core(t);
                         if self.core.done {
                             break;
                         }
@@ -612,9 +736,6 @@ mod tests {
                         let (comps, wake) = self.mem.schedule(ch, t);
                         for c in comps {
                             self.queue.push(c.time, Event::DramDone(c.id));
-                            // Stash line completion via waiters on DramDone.
-                            // Encode addr in a map: we reuse the completion
-                            // records directly here.
                             self.pendings.push((c.id, c.addr, c.time, c.source));
                         }
                         if let Some(w) = wake {
@@ -656,13 +777,6 @@ mod tests {
         }
     }
 
-    // Work around not declaring the field above.
-    impl Harness {
-        fn with_pendings(ops: OpStream) -> Self {
-            Self::new(ops)
-        }
-    }
-
     fn stream_of(ops: Vec<Op>) -> OpStream {
         OpStream { ops }
     }
@@ -671,7 +785,7 @@ mod tests {
     fn compute_only_bounded_by_issue_width() {
         // 1000 compute ops of 8 instrs each on an 8-wide core: ~1000 cycles.
         let ops = (0..1000).map(|_| Op::compute(1, 8)).collect();
-        let mut h = Harness::with_pendings(stream_of(ops));
+        let mut h = Harness::new(stream_of(ops));
         let t = h.run();
         assert!(h.core.done);
         assert_eq!(h.core.stats.retired_instrs, 8000);
@@ -692,7 +806,7 @@ mod tests {
             };
             prev = Some(idx);
         }
-        let mut h = Harness::with_pendings(s);
+        let mut h = Harness::new(s);
         let t = h.run();
         assert!(h.core.done);
         // Single miss ~ 58 (lookup) + ~170 (DRAM) cycles; chain of 64 must
@@ -705,7 +819,7 @@ mod tests {
         // 64 independent missing loads spread across banks: MLP-limited,
         // far faster than the same loads chained by dependencies.
         let ops = (0..64u64).map(|i| Op::load(i * 64, 0, 1)).collect();
-        let mut h = Harness::with_pendings(stream_of(ops));
+        let mut h = Harness::new(stream_of(ops));
         let t_indep = h.run();
 
         let mut s = OpStream::new();
@@ -718,7 +832,7 @@ mod tests {
             };
             prev = Some(idx);
         }
-        let mut h2 = Harness::with_pendings(s);
+        let mut h2 = Harness::new(s);
         let t_dep = h2.run();
         assert!(
             t_dep as f64 > 3.0 * t_indep as f64,
@@ -730,9 +844,9 @@ mod tests {
     fn atomic_rmw_serializes() {
         let atomics: Vec<Op> = (0..200).map(|i| Op::rmw(i * 64, true, 3)).collect();
         let plain: Vec<Op> = (0..200).map(|i| Op::rmw(i * 64, false, 3)).collect();
-        let mut ha = Harness::with_pendings(stream_of(atomics));
+        let mut ha = Harness::new(stream_of(atomics));
         let ta = ha.run();
-        let mut hp = Harness::with_pendings(stream_of(plain));
+        let mut hp = Harness::new(stream_of(plain));
         let tp = hp.run();
         assert!(
             ta as f64 > 2.5 * tp as f64,
@@ -751,7 +865,7 @@ mod tests {
             dep: 0,
             instrs: 2,
         });
-        let mut h = Harness::with_pendings(s);
+        let mut h = Harness::new(s);
         // Set the flag after construction so the first poll spins.
         h.flags[0][3] = false;
         h.queue.push(0, Event::CoreWake(0));
@@ -768,19 +882,7 @@ mod tests {
                 set_done = true;
             }
             if let Event::CoreWake(_) = ev.event {
-                let mut env = CoreEnv {
-                    hier: &mut h.hier,
-                    mem: &mut h.mem,
-                    queue: &mut h.queue,
-                    waiters: &mut h.waiters,
-                    prefetcher: &mut h.prefetcher,
-                    flags: &h.flags,
-                    mmio_out: &mut h.mmio,
-                    spd_latency: 8,
-                    mmio_latency: 40,
-                    dmp_hints: None,
-                };
-                h.core.wake(t, &h.ops, &mut env);
+                h.wake_core(t);
                 if h.core.done {
                     break;
                 }
@@ -804,7 +906,7 @@ mod tests {
                 instrs: 1,
             });
         }
-        let mut h = Harness::with_pendings(s);
+        let mut h = Harness::new(s);
         h.run();
         assert_eq!(h.mmio.len(), 3);
         assert!(h.mmio.iter().all(|d| d.instance == 0 && d.seq == 0));
@@ -816,7 +918,7 @@ mod tests {
         // Sequential loads over one array with a stream tag: after warmup
         // the prefetcher should have issued work.
         let ops = (0..512u64).map(|i| Op::load(i * 64, 7, 1)).collect();
-        let mut h = Harness::with_pendings(stream_of(ops));
+        let mut h = Harness::new(stream_of(ops));
         h.run();
         assert!(h.prefetcher.issued > 100, "issued={}", h.prefetcher.issued);
     }

@@ -40,15 +40,16 @@ use super::harness::Json;
 use crate::config::SystemConfig;
 use crate::coordinator::{RunStats, SystemKind};
 use crate::dx100::timing::Dx100Stats;
-use crate::util::Fnv;
+use crate::util::{Fnv, WarnOnce};
 use crate::workloads::WorkloadSpec;
 use std::path::{Path, PathBuf};
-use std::sync::{Once, OnceLock};
+use std::sync::OnceLock;
 
 /// Bump when the persisted `RunStats` encoding changes shape.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: per-phase event counts (`front_events` / `channel_events`).
+pub const SCHEMA_VERSION: u64 = 2;
 
-static WARN_CACHE: Once = Once::new();
+static WARN_CACHE: WarnOnce = WarnOnce::new();
 
 /// `DX100_CACHE` parse: `1`/unset = enabled, `0` = disabled. A malformed
 /// value warns once and **disables** the cache — a user who set the
@@ -62,7 +63,7 @@ pub fn enabled_from_env() -> bool {
             "1" => true,
             "0" => false,
             _ => {
-                super::warn_once(&WARN_CACHE, "DX100_CACHE", &raw, "0 or 1");
+                WARN_CACHE.warn("DX100_CACHE", &raw, "0 or 1");
                 false
             }
         },
@@ -281,6 +282,8 @@ fn encode_run_stats(rs: &RunStats) -> Json {
             "dx".into(),
             Json::Arr(rs.dx.iter().map(encode_dx_stats).collect()),
         ),
+        ("front_events".into(), Json::UInt(rs.front_events)),
+        ("channel_events".into(), Json::UInt(rs.channel_events)),
         ("events".into(), Json::UInt(rs.events)),
     ])
 }
@@ -333,6 +336,8 @@ fn decode_run_stats(doc: &Json, name: &'static str, kind: SystemKind) -> Option<
         dram_writes: get_u64(doc, "dram_writes")?,
         dram_bytes: get_u64(doc, "dram_bytes")?,
         dx,
+        front_events: get_u64(doc, "front_events")?,
+        channel_events: get_u64(doc, "channel_events")?,
         events: get_u64(doc, "events")?,
     })
 }
@@ -380,6 +385,8 @@ mod tests {
                 finish_time: 70,
                 slice_full_stalls: 80,
             }],
+            front_events: 400_000,
+            channel_events: 24_242,
             events: 424_242,
         }
     }

@@ -33,6 +33,9 @@ struct SweepStats {
     specializations: usize,
     deduped: usize,
     shards: usize,
+    pool_workers: usize,
+    cells_on_workers: u64,
+    cells_on_caller: u64,
     cache_enabled: bool,
     cache_hits: usize,
     cache_misses: usize,
@@ -375,6 +378,8 @@ pub struct Harness {
     title: String,
     t0: Instant,
     events: u64,
+    front_events: u64,
+    channel_events: u64,
     metrics: Vec<(String, Json)>,
     rows: Vec<Json>,
     paper_refs: Vec<String>,
@@ -390,6 +395,8 @@ impl Harness {
             title: title.to_string(),
             t0: Instant::now(),
             events: 0,
+            front_events: 0,
+            channel_events: 0,
             metrics: Vec::new(),
             rows: Vec::new(),
             paper_refs: Vec::new(),
@@ -408,6 +415,9 @@ impl Harness {
             specializations: r.specializations,
             deduped: r.deduped,
             shards: r.shards,
+            pool_workers: r.pool_workers,
+            cells_on_workers: r.cells_on_workers,
+            cells_on_caller: r.cells_on_caller,
             cache_enabled: r.cache_enabled,
             cache_hits: r.cache_hits,
             cache_misses: r.cache_misses,
@@ -446,6 +456,8 @@ impl Harness {
     /// Record one run as a JSON row and count its events.
     pub fn run(&mut self, workload: &str, rs: &RunStats) {
         self.events += rs.events;
+        self.front_events += rs.front_events;
+        self.channel_events += rs.channel_events;
         self.rows.push(run_row(workload, rs));
     }
 
@@ -489,6 +501,13 @@ impl Harness {
                 super::threads_from_env(),
                 self.shards(),
             );
+            println!(
+                "phases: front {} events ({}/s) | channels {} events ({}/s)",
+                crate::util::si(self.front_events as f64),
+                crate::util::si(self.front_events as f64 / wall.max(1e-9)),
+                crate::util::si(self.channel_events as f64),
+                crate::util::si(self.channel_events as f64 / wall.max(1e-9)),
+            );
         } else {
             println!("bench wall time {wall:.1}s");
         }
@@ -504,6 +523,10 @@ impl Harness {
                 if sw.cache_enabled { "on" } else { "off" },
                 sw.cache_hits,
                 sw.cache_misses,
+            );
+            println!(
+                "pool: {} workers | {} cells on workers / {} on caller",
+                sw.pool_workers, sw.cells_on_workers, sw.cells_on_caller,
             );
         }
         let path = self.json_path();
@@ -531,6 +554,15 @@ impl Harness {
         } else {
             Json::Null
         };
+        let phase_eps = |ran: bool, n: u64| {
+            if ran {
+                Json::Num(n as f64 / wall.max(1e-9))
+            } else {
+                Json::Null
+            }
+        };
+        let front_eps = phase_eps(self.events > 0, self.front_events);
+        let channel_eps = phase_eps(self.events > 0, self.channel_events);
         let mut obj = vec![
             ("bench".into(), Json::Str(self.name.into())),
             ("title".into(), Json::Str(self.title)),
@@ -543,6 +575,10 @@ impl Harness {
             ("wall_seconds".into(), Json::Num(wall)),
             ("events".into(), Json::UInt(self.events)),
             ("events_per_sec".into(), eps),
+            ("front_events".into(), Json::UInt(self.front_events)),
+            ("front_events_per_sec".into(), front_eps),
+            ("channel_events".into(), Json::UInt(self.channel_events)),
+            ("channel_events_per_sec".into(), channel_eps),
         ];
         if let Some(sw) = self.sweep {
             obj.push((
@@ -560,6 +596,17 @@ impl Harness {
                         "cells_per_sec".into(),
                         Json::Num(sw.cells as f64 / wall.max(1e-9)),
                     ),
+                ]),
+            ));
+            obj.push((
+                "pool".into(),
+                Json::Obj(vec![
+                    ("workers".into(), Json::UInt(sw.pool_workers as u64)),
+                    (
+                        "cells_on_workers".into(),
+                        Json::UInt(sw.cells_on_workers),
+                    ),
+                    ("cells_on_caller".into(), Json::UInt(sw.cells_on_caller)),
                 ]),
             ));
             obj.push((
@@ -597,6 +644,8 @@ fn run_row(workload: &str, rs: &RunStats) -> Json {
         ("dram_reads".into(), Json::UInt(rs.dram_reads)),
         ("dram_writes".into(), Json::UInt(rs.dram_writes)),
         ("dram_bytes".into(), Json::UInt(rs.dram_bytes)),
+        ("front_events".into(), Json::UInt(rs.front_events)),
+        ("channel_events".into(), Json::UInt(rs.channel_events)),
         ("events".into(), Json::UInt(rs.events)),
     ])
 }

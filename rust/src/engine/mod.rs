@@ -34,21 +34,28 @@
 //! * [`RunPlan`]/[`Suite`] are the single-config-point specialisations the
 //!   CLI and `crate::metrics` wrappers use; they route through the same
 //!   sweep executor.
+//! * [`pool`] owns **all** simulation parallelism: one process-wide
+//!   worker pool executes sweep cells as batch jobs (the calling thread
+//!   helps, so `DX100_THREADS` bounds total executors) and serves
+//!   intra-run fan-out (front-end lanes + channel shards, `DX100_SHARDS`)
+//!   as opportunistic crew jobs on the *same* workers — the two knobs
+//!   compose instead of multiplying into oversubscription.
 //! * [`harness`] is the shared bench-binary entry point: scale/thread env
-//!   knobs, wall-time + events/sec throughput, cache hit/miss surfacing,
-//!   `BENCH_*.json` emission.
+//!   knobs, wall-time + per-phase events/sec throughput, cache hit/miss
+//!   and pool-occupancy surfacing, `BENCH_*.json` emission.
 
 pub mod cache;
 pub mod harness;
+pub mod pool;
 
 use crate::compiler::{frontend, specialize, CompiledWorkload, Frontend};
 use crate::config::SystemConfig;
 use crate::coordinator::{Experiment, RunStats, SystemKind};
 use crate::workloads::{self, Scale, WorkloadSpec};
 use self::cache::ResultCache;
+use crate::util::WarnOnce;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Once};
+use std::sync::Arc;
 
 /// All three systems, in reporting order.
 pub const ALL_SYSTEMS: [SystemKind; 3] =
@@ -57,17 +64,9 @@ pub const ALL_SYSTEMS: [SystemKind; 3] =
 /// Baseline + DX100 (the Figure 9-11 comparison points).
 pub const BASE_AND_DX: [SystemKind; 2] = [SystemKind::Baseline, SystemKind::Dx100];
 
-/// Warn once per process about a malformed environment knob. Silent
-/// fallback hid typos like `DX100_SCALE=4x` for whole bench runs.
-pub(crate) fn warn_once(once: &'static Once, name: &str, raw: &str, expect: &str) {
-    once.call_once(|| {
-        eprintln!("warning: ignoring {name}={raw:?} (expected {expect}); using the default");
-    });
-}
-
-static WARN_THREADS: Once = Once::new();
-static WARN_SCALE: Once = Once::new();
-static WARN_SHARDS: Once = Once::new();
+static WARN_THREADS: WarnOnce = WarnOnce::new();
+static WARN_SCALE: WarnOnce = WarnOnce::new();
+static WARN_SHARDS: WarnOnce = WarnOnce::new();
 
 /// Worker-thread count: `DX100_THREADS` if set (>= 1), else the host's
 /// available parallelism. A malformed value warns once and falls back.
@@ -82,7 +81,7 @@ pub fn threads_from_env() -> usize {
         Ok(raw) => match raw.trim().parse::<usize>() {
             Ok(n) if n >= 1 => n,
             _ => {
-                warn_once(&WARN_THREADS, "DX100_THREADS", &raw, "an integer >= 1");
+                WARN_THREADS.warn("DX100_THREADS", &raw, "an integer >= 1");
                 default()
             }
         },
@@ -97,27 +96,35 @@ pub fn scale_from_env() -> Scale {
         Ok(raw) => match raw.trim().parse::<usize>() {
             Ok(n) if n >= 1 => Scale(n),
             _ => {
-                warn_once(&WARN_SCALE, "DX100_SCALE", &raw, "an integer >= 1");
+                WARN_SCALE.warn("DX100_SCALE", &raw, "an integer >= 1");
                 Scale(2)
             }
         },
     }
 }
 
-/// Intra-run shard count from `DX100_SHARDS` (default 1 — no sharding).
-/// Each simulation fans its DRAM channel engines out across this many
-/// worker threads (clamped per run to the channel count); stats are
-/// bit-identical at every value, so the knob deliberately does **not**
-/// enter any cache or dedup fingerprint. A malformed value warns once and
-/// falls back. Note the multiplicative interaction with `DX100_THREADS`:
-/// a sweep can run `DX100_THREADS x DX100_SHARDS` threads at once.
+/// Intra-run fan-out hint from `DX100_SHARDS` (default 1 — no fan-out).
+///
+/// The hint bounds how many pieces one simulation is *split* into per
+/// phase — front-end core lanes and DRAM channel engines alike — not how
+/// many threads run it. Shard pieces execute as [`pool`] crew jobs: the
+/// run's own thread always makes progress by itself, and idle workers of
+/// the shared `DX100_THREADS` pool opportunistically help, so
+/// `DX100_THREADS x DX100_SHARDS` never oversubscribes the host. Stats
+/// are bit-identical at every value, so the knob deliberately does
+/// **not** enter any cache or dedup fingerprint. A malformed value warns
+/// once and falls back.
 pub fn shards_from_env() -> usize {
     match std::env::var("DX100_SHARDS") {
         Err(_) => 1,
         Ok(raw) => match raw.trim().parse::<usize>() {
             Ok(n) if n >= 1 => n,
             _ => {
-                warn_once(&WARN_SHARDS, "DX100_SHARDS", &raw, "an integer >= 1");
+                WARN_SHARDS.warn(
+                    "DX100_SHARDS",
+                    &raw,
+                    "an integer >= 1 (per-run fan-out hint, not a thread count)",
+                );
                 1
             }
         },
@@ -235,11 +242,18 @@ pub struct SweepResult {
     /// DX100 specializations performed (at most one per (workload,
     /// compile-fingerprint) pair).
     pub specializations: usize,
-    /// Worker threads used for the cell pool.
+    /// Concurrency cap used for the cell batch (callers + pool workers).
     pub threads: usize,
-    /// Intra-run channel shards requested per cell (`DX100_SHARDS`; each
-    /// run clamps to its channel count). Never part of any fingerprint.
+    /// Intra-run fan-out hint per cell (`DX100_SHARDS`; each run clamps
+    /// per phase to its core / channel counts). Never part of any
+    /// fingerprint.
     pub shards: usize,
+    /// Pool workers alive when the sweep executed.
+    pub pool_workers: usize,
+    /// Cells executed by pool workers.
+    pub cells_on_workers: u64,
+    /// Cells executed by the calling thread.
+    pub cells_on_caller: u64,
     /// Cells served from the persisted result cache.
     pub cache_hits: usize,
     /// Cells not in the cache (executed this invocation, or copied from an
@@ -288,10 +302,12 @@ pub fn execute_sweep_with(
     execute_sweep_sharded(plan, threads, cache, shards_from_env())
 }
 
-/// Execute `plan` on exactly `threads` worker threads (capped at the
-/// number of cells that actually need to run), consulting `cache` if
-/// given, with each cell's simulation sharded `shards` ways across its
-/// DRAM channels.
+/// Execute `plan` with a concurrency cap of `threads` executors — the
+/// calling thread plus workers of the process-wide [`pool::WorkerPool`]
+/// (capped at the number of cells that actually need to run) —
+/// consulting `cache` if given, with each cell's simulation split
+/// `shards` ways per phase (front-end lanes and DRAM channels) as
+/// opportunistic crew jobs on the *same* pool.
 ///
 /// Results are bit-identical regardless of `threads`, `shards`, and cache
 /// state: cells share compiled workloads immutably and each simulation is
@@ -369,14 +385,15 @@ pub fn execute_sweep_sharded(
 
     // Compile exactly what the canonical cells need: one front end per
     // workload, one DX100 specialization per (compile-fingerprint,
-    // workload).
+    // workload). Specializations sit behind `Arc` so cell jobs on the
+    // worker pool share them without copies.
     let compile_fp: Vec<u64> = plan
         .points
         .iter()
         .map(|p| p.cfg.compile_fingerprint())
         .collect();
     let mut fronts: HashMap<usize, Frontend> = HashMap::new();
-    let mut specialized: HashMap<(u64, usize), CompiledWorkload> = HashMap::new();
+    let mut specialized: HashMap<(u64, usize), Arc<CompiledWorkload>> = HashMap::new();
     for &i in &canonical {
         let cell = cells[i];
         let w = &plan.workloads[cell.workload];
@@ -388,44 +405,62 @@ pub fn execute_sweep_sharded(
         specialized.entry(skey).or_insert_with(|| {
             let dx = specialize(fe, &w.program, &w.mem, &plan.points[cell.point].cfg)
                 .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
-            fe.with_dx(dx)
+            Arc::new(fe.with_dx(dx))
         });
     }
     let compiles = fronts.len();
     let specializations = specialized.len();
 
-    // One pool over every remaining cell of every config point: no
-    // per-point barrier, so threads stay busy across the whole sweep.
-    let threads = threads.max(1).min(canonical.len().max(1));
+    // Every remaining cell of every config point feeds the process-wide
+    // worker pool as one batch: no per-point barrier, no per-sweep thread
+    // spawn, and the calling thread claims cells like any worker.
+    let thread_budget = threads.max(1);
+    let threads = thread_budget.min(canonical.len().max(1));
     let shards = shards.max(1);
+    let pool = pool::WorkerPool::global();
+    if shards > 1 {
+        // Shard helpers draw from the same pool as cells. Make the whole
+        // thread budget available even when few cells are cold (a warm
+        // cache plus one big straggler is exactly the case the fan-out
+        // hint exists for); cells alone would only grow the pool to the
+        // cold-cell count.
+        pool.ensure_workers(thread_budget.saturating_sub(1));
+    }
+    let mut cells_on_workers = 0u64;
+    let mut cells_on_caller = 0u64;
     if threads <= 1 {
         for &i in &canonical {
             stats[i] = Some(run_sweep_cell(plan, &specialized, &compile_fp, cells[i], shards));
+            cells_on_caller += 1;
         }
     } else {
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, RunStats)>();
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                let tx = tx.clone();
-                let (next, canonical, cells, specialized, compile_fp) =
-                    (&next, &canonical, &cells, &specialized, &compile_fp);
-                s.spawn(move || loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(&i) = canonical.get(k) else { break };
-                    let rs = run_sweep_cell(plan, specialized, compile_fp, cells[i], shards);
-                    if tx.send((i, rs)).is_err() {
-                        break;
+        // Self-contained cell descriptors: pool jobs are `'static`.
+        let descs: Arc<Vec<CellDesc>> = Arc::new(
+            canonical
+                .iter()
+                .map(|&i| {
+                    let cell = cells[i];
+                    CellDesc {
+                        cw: Arc::clone(&specialized[&(compile_fp[cell.point], cell.workload)]),
+                        cfg: plan.points[cell.point].cfg.clone(),
+                        system: cell.system,
+                        warm: plan.workloads[cell.workload].warm_caches,
+                        shards,
                     }
-                });
-            }
-            drop(tx);
-            // Workers finish in arbitrary order; the index restores the
-            // deterministic plan order.
-            for (i, rs) in rx {
-                stats[i] = Some(rs);
-            }
+                })
+                .collect(),
+        );
+        let out = pool.run_indexed(descs.len(), threads, move |k| {
+            let d = &descs[k];
+            Experiment::new(d.system, d.cfg.clone()).run_compiled_sharded(&d.cw, d.warm, d.shards)
         });
+        cells_on_workers = out.on_workers;
+        cells_on_caller = out.on_caller;
+        // Results return in claim-independent index order; map them back
+        // onto the deterministic plan slots.
+        for (k, rs) in out.results.into_iter().enumerate() {
+            stats[canonical[k]] = Some(rs);
+        }
     }
     for &(dst, src) in &copies {
         let rs = stats[src].clone();
@@ -463,6 +498,9 @@ pub fn execute_sweep_sharded(
         specializations,
         threads,
         shards,
+        pool_workers: pool.workers(),
+        cells_on_workers,
+        cells_on_caller,
         cache_hits,
         cache_misses: cells.len() - cache_hits,
         deduped: copies.len(),
@@ -470,9 +508,19 @@ pub fn execute_sweep_sharded(
     }
 }
 
+/// Everything one cell job needs, owned (`'static`) so it can run on any
+/// pool worker.
+struct CellDesc {
+    cw: Arc<CompiledWorkload>,
+    cfg: SystemConfig,
+    system: SystemKind,
+    warm: bool,
+    shards: usize,
+}
+
 fn run_sweep_cell(
     plan: &SweepPlan,
-    specialized: &HashMap<(u64, usize), CompiledWorkload>,
+    specialized: &HashMap<(u64, usize), Arc<CompiledWorkload>>,
     compile_fp: &[u64],
     cell: SweepCell,
     shards: usize,
@@ -624,6 +672,30 @@ impl Suite {
 
 /// Owning builder over [`SweepPlan`] for config-sweep experiments
 /// (fig13/fig14/fig12/ablation and anything the CLI sweeps).
+///
+/// Execution runs on the process-wide [`pool::WorkerPool`]: the
+/// concurrency cap counts the calling thread, so stats are bit-identical
+/// at every cap (and at every `DX100_SHARDS` fan-out).
+///
+/// ```
+/// use dx100::config::SystemConfig;
+/// use dx100::engine::Sweep;
+/// use dx100::workloads::micro;
+///
+/// let sweep = Sweep::new()
+///     .point("t3", SystemConfig::table3())
+///     .workload(micro::gather_full(1024, micro::IndexPattern::Streaming, 11));
+/// let serial = sweep.execute_with(1, None);
+/// let pooled = sweep.execute_with(4, None); // 4-way pool-configured
+/// assert_eq!(pooled.threads.min(4), pooled.threads);
+/// for (a, b) in serial.points[0].workloads[0]
+///     .runs
+///     .iter()
+///     .zip(&pooled.points[0].workloads[0].runs)
+/// {
+///     assert_eq!(a, b); // pool size changes wall time, never stats
+/// }
+/// ```
 pub struct Sweep {
     points: Vec<SweepPoint>,
     systems: Vec<SystemKind>,

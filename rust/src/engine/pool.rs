@@ -1,0 +1,572 @@
+//! The unified simulation worker pool.
+//!
+//! One process-wide pool of persistent worker threads owns **all**
+//! simulation parallelism:
+//!
+//! * **Sweep cells** execute as indexed batch jobs
+//!   ([`WorkerPool::run_indexed`]): the calling thread claims work like
+//!   any worker, so a pool with zero free workers still makes progress,
+//!   and `DX100_THREADS` bounds the *total* executor count (callers +
+//!   workers), not a per-sweep spawn.
+//! * **Intra-run fan-out** (channel shards and front-end lanes) executes
+//!   as [`Crew`] jobs: a run publishes a set of [`CrewWork`] items each
+//!   time quantum, drains them on its own thread, and any idle pool
+//!   workers that picked up the run's helper tasks join in. Helpers are
+//!   strictly opportunistic — a busy pool degrades a sharded run to
+//!   serial execution of the same jobs, never to different results.
+//!
+//! This replaces the per-run `std::thread::scope` spawns of the earlier
+//! design: `DX100_SHARDS` is a **fan-out hint** (how many pieces a run is
+//! split into), and `DX100_THREADS` is the only thread count. Their
+//! product no longer oversubscribes the host; shard helpers simply queue
+//! behind cell work and serve the tail of a sweep, when workers would
+//! otherwise idle.
+//!
+//! Everything here affects wall-clock only. Job content is identical
+//! whether a job runs on the caller or a worker, and callers re-impose
+//! deterministic order on results (cells by plan index, crew jobs by
+//! shard index), so `RunStats` are bit-identical at every pool size.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Occupancy counters for the pool (reported by the bench harness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Worker threads currently spawned.
+    pub workers: usize,
+    /// Batch jobs executed by pool workers.
+    pub jobs_on_workers: u64,
+    /// Batch jobs executed by calling threads (helping their own batch).
+    pub jobs_on_callers: u64,
+    /// Crew helper tasks that reached a worker thread.
+    pub helpers_started: u64,
+    /// Crew jobs (quantum work items) executed by helpers.
+    pub crew_jobs_helped: u64,
+}
+
+struct PoolInner {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    workers: AtomicUsize,
+    jobs_on_workers: AtomicU64,
+    jobs_on_callers: AtomicU64,
+    helpers_started: AtomicU64,
+    crew_jobs_helped: AtomicU64,
+}
+
+/// The process-wide simulation worker pool. See the module docs.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+/// Upper bound on pool workers, a guard against pathological
+/// `DX100_THREADS` values; real hosts sit far below it.
+const MAX_WORKERS: usize = 512;
+
+impl WorkerPool {
+    fn new() -> Self {
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                workers: AtomicUsize::new(0),
+                jobs_on_workers: AtomicU64::new(0),
+                jobs_on_callers: AtomicU64::new(0),
+                helpers_started: AtomicU64::new(0),
+                crew_jobs_helped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The process-wide pool. Workers are spawned lazily by
+    /// [`WorkerPool::ensure_workers`]; merely touching the pool spawns
+    /// nothing.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(WorkerPool::new)
+    }
+
+    /// Grow the pool to at least `n` persistent workers (never shrinks;
+    /// capped defensively). Callers size this as `threads - 1`: the
+    /// calling thread is the remaining executor.
+    pub fn ensure_workers(&self, n: usize) {
+        let n = n.min(MAX_WORKERS);
+        loop {
+            let cur = self.inner.workers.load(Ordering::Acquire);
+            if cur >= n {
+                return;
+            }
+            if self
+                .inner
+                .workers
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            let inner = Arc::clone(&self.inner);
+            std::thread::Builder::new()
+                .name(format!("dx100-pool-{cur}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawn pool worker");
+        }
+    }
+
+    /// Current worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.inner.workers.load(Ordering::Acquire)
+    }
+
+    /// Occupancy counters since process start.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers(),
+            jobs_on_workers: self.inner.jobs_on_workers.load(Ordering::Relaxed),
+            jobs_on_callers: self.inner.jobs_on_callers.load(Ordering::Relaxed),
+            helpers_started: self.inner.helpers_started.load(Ordering::Relaxed),
+            crew_jobs_helped: self.inner.crew_jobs_helped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Enqueue one fire-and-forget task for the workers.
+    pub fn submit(&self, task: Task) {
+        self.inner.queue.lock().unwrap().push_back(task);
+        self.inner.available.notify_one();
+    }
+
+    /// Execute `jobs` independent jobs with at most `parallel` concurrent
+    /// executors (this thread plus pool workers) and return the outputs in
+    /// index order, plus where they ran. A panicking job poisons the
+    /// batch: every remaining job still runs (or is skipped once the
+    /// panic is observed), and the panic is re-raised on the calling
+    /// thread.
+    pub fn run_indexed<T, F>(&self, jobs: usize, parallel: usize, job: F) -> BatchOutcome<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if jobs == 0 {
+            return BatchOutcome {
+                results: Vec::new(),
+                on_workers: 0,
+                on_caller: 0,
+            };
+        }
+        let batch = Arc::new(IndexedBatch {
+            job,
+            total: jobs,
+            next: AtomicUsize::new(0),
+            state: Mutex::new(BatchState {
+                done: 0,
+                on_workers: 0,
+                on_caller: 0,
+                results: (0..jobs).map(|_| None).collect(),
+                panic: None,
+            }),
+            finished: Condvar::new(),
+        });
+        let extra = parallel.saturating_sub(1).min(jobs - 1);
+        self.ensure_workers(extra);
+        for _ in 0..extra {
+            let b = Arc::clone(&batch);
+            let inner = Arc::clone(&self.inner);
+            self.submit(Box::new(move || {
+                let ran = b.drain(true);
+                inner.jobs_on_workers.fetch_add(ran, Ordering::Relaxed);
+            }));
+        }
+        let on_caller = batch.drain(false);
+        self.inner
+            .jobs_on_callers
+            .fetch_add(on_caller, Ordering::Relaxed);
+        // Workers may still be finishing claimed jobs; `done` and the
+        // attribution counters update together under the state lock, so
+        // once every job is done the counts are exact.
+        let mut state = batch.state.lock().unwrap();
+        while state.done < jobs {
+            state = batch.finished.wait(state).unwrap();
+        }
+        if let Some(msg) = state.panic.take() {
+            drop(state);
+            panic!("pool batch job panicked: {msg}");
+        }
+        let results = state
+            .results
+            .iter_mut()
+            .map(|r| r.take().expect("batch job produced no result"))
+            .collect();
+        let (on_workers, on_caller) = (state.on_workers, state.on_caller);
+        drop(state);
+        BatchOutcome {
+            results,
+            on_workers,
+            on_caller,
+        }
+    }
+
+    /// Spawn `helpers` opportunistic crew-helper tasks serving `crew`.
+    /// Helpers exit as soon as the crew stops; a helper that never reaches
+    /// a worker thread simply never helps.
+    fn submit_crew_helpers<J: CrewWork>(&self, crew: &Arc<CrewShared<J>>, helpers: usize) {
+        for _ in 0..helpers {
+            let shared = Arc::clone(crew);
+            let inner = Arc::clone(&self.inner);
+            self.submit(Box::new(move || {
+                inner.helpers_started.fetch_add(1, Ordering::Relaxed);
+                let helped = crew_helper_loop(&shared);
+                inner.crew_jobs_helped.fetch_add(helped, Ordering::Relaxed);
+            }));
+        }
+    }
+}
+
+/// Results of one [`WorkerPool::run_indexed`] batch: outputs in index
+/// order plus per-batch occupancy (who executed the jobs).
+pub struct BatchOutcome<T> {
+    /// Job outputs, index order.
+    pub results: Vec<T>,
+    /// Jobs executed by pool workers.
+    pub on_workers: u64,
+    /// Jobs executed by the calling thread.
+    pub on_caller: u64,
+}
+
+struct BatchState<T> {
+    done: usize,
+    /// Jobs actually executed by pool workers (exact: updated with `done`
+    /// under this lock).
+    on_workers: u64,
+    /// Jobs actually executed by the calling thread.
+    on_caller: u64,
+    results: Vec<Option<T>>,
+    panic: Option<String>,
+}
+
+struct IndexedBatch<T, F> {
+    job: F,
+    total: usize,
+    next: AtomicUsize,
+    state: Mutex<BatchState<T>>,
+    finished: Condvar,
+}
+
+impl<T: Send, F: Fn(usize) -> T + Send + Sync> IndexedBatch<T, F> {
+    /// Claim and run jobs until the batch is exhausted (or poisoned);
+    /// returns how many jobs this executor ran.
+    fn drain(&self, on_worker: bool) -> u64 {
+        let mut ran = 0u64;
+        loop {
+            if self.state.lock().unwrap().panic.is_some() {
+                // Poisoned: mark every unclaimed job done so waiters exit.
+                let i = self.next.fetch_add(1, Ordering::Relaxed);
+                if i >= self.total {
+                    return ran;
+                }
+                self.finish(None, None);
+                continue;
+            }
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return ran;
+            }
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (self.job)(i)));
+            ran += 1;
+            match out {
+                Ok(v) => {
+                    let mut state = self.state.lock().unwrap();
+                    state.results[i] = Some(v);
+                    drop(state);
+                    self.finish(None, Some(on_worker));
+                }
+                Err(e) => self.finish(Some(panic_message(&e)), Some(on_worker)),
+            }
+        }
+    }
+
+    /// Mark one job finished. `ran_by` is `Some(on_worker)` for jobs that
+    /// actually executed, `None` for poisoned skips.
+    fn finish(&self, panic: Option<String>, ran_by: Option<bool>) {
+        let mut state = self.state.lock().unwrap();
+        state.done += 1;
+        match ran_by {
+            Some(true) => state.on_workers += 1,
+            Some(false) => state.on_caller += 1,
+            None => {}
+        }
+        if state.panic.is_none() {
+            state.panic = panic;
+        }
+        if state.done >= self.total {
+            self.finished.notify_all();
+        }
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    loop {
+        let task = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = inner.available.wait(q).unwrap();
+            }
+        };
+        // Batch tasks catch their own panics; a stray unwind from a raw
+        // `submit` task must not take the worker down with it.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    }
+}
+
+/// One unit of intra-run quantum work (a group of channel engines or
+/// front-end lanes). `run` must be deterministic and self-contained: the
+/// same job produces the same state mutation on any thread.
+pub trait CrewWork: Send + 'static {
+    /// Execute the job to completion.
+    fn run(&mut self);
+}
+
+/// Per-epoch job board shared between a run and its helpers.
+struct CrewShared<J> {
+    /// Bumped by the run thread each time a fresh job set is published.
+    epoch: AtomicU64,
+    /// Set when the run ends (or unwinds); helpers exit.
+    stop: AtomicBool,
+    /// Set when a helper's job panicked; the run thread re-raises.
+    poisoned: AtomicBool,
+    /// Jobs of the current epoch, claimed by popping.
+    jobs: Mutex<Vec<J>>,
+    /// Completed jobs of the current epoch (order is claim order; callers
+    /// re-sort by their own identity, e.g. channel index).
+    done: Mutex<Vec<J>>,
+    /// Jobs still outstanding in the current epoch.
+    pending: AtomicUsize,
+    /// Parking lot for helpers between epochs (paired with `bell`): a
+    /// parked helper burns no CPU and frees its worker's core for other
+    /// pool work until the next epoch or stop.
+    signal: Mutex<()>,
+    /// Rung after every epoch publish and on stop.
+    bell: Condvar,
+}
+
+/// A run-scoped fan-out context: publishes job sets to the pool each time
+/// quantum and collects them back, with the run thread always draining.
+///
+/// Dropping the crew stops its helpers (including on unwind).
+pub struct Crew<J: CrewWork> {
+    shared: Arc<CrewShared<J>>,
+}
+
+impl<J: CrewWork> Crew<J> {
+    /// A crew for one run, requesting up to `helpers` opportunistic pool
+    /// helpers (capped by the pool's worker count; zero is valid and
+    /// degrades to inline execution).
+    pub fn new(pool: &WorkerPool, helpers: usize) -> Self {
+        let shared = Arc::new(CrewShared {
+            epoch: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+            jobs: Mutex::new(Vec::new()),
+            done: Mutex::new(Vec::new()),
+            pending: AtomicUsize::new(0),
+            signal: Mutex::new(()),
+            bell: Condvar::new(),
+        });
+        // Helpers beyond the worker count could never run concurrently;
+        // with no workers at all, don't leave dead tasks in the queue.
+        let helpers = helpers.min(pool.workers());
+        if helpers > 0 {
+            pool.submit_crew_helpers(&shared, helpers);
+        }
+        Crew { shared }
+    }
+
+    /// Execute one epoch's job set and return the completed jobs (claim
+    /// order — callers re-impose deterministic order). The calling thread
+    /// drains jobs itself, so progress never depends on helpers.
+    pub fn dispatch(&self, jobs: Vec<J>) -> Vec<J> {
+        let n = jobs.len();
+        if n == 0 {
+            return jobs;
+        }
+        debug_assert!(self.shared.jobs.lock().unwrap().is_empty());
+        self.shared.pending.store(n, Ordering::Release);
+        *self.shared.jobs.lock().unwrap() = jobs;
+        self.shared.epoch.fetch_add(1, Ordering::Release);
+        // Lock-then-notify so a helper that just checked the epoch and is
+        // entering its wait cannot miss the wakeup.
+        drop(self.shared.signal.lock().unwrap());
+        self.shared.bell.notify_all();
+        // Drain alongside any helpers.
+        while let Some(mut job) = claim_job(&self.shared) {
+            job.run();
+            self.shared.done.lock().unwrap().push(job);
+            self.shared.pending.fetch_sub(1, Ordering::AcqRel);
+        }
+        // Helpers may still hold claimed jobs; quanta are microseconds of
+        // work, so spin with yields rather than park.
+        let mut spins = 0u32;
+        while self.shared.pending.load(Ordering::Acquire) > 0 {
+            if self.shared.poisoned.load(Ordering::Acquire) {
+                panic!("crew job panicked on a pool helper");
+            }
+            spins = spins.wrapping_add(1);
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        if self.shared.poisoned.load(Ordering::Acquire) {
+            panic!("crew job panicked on a pool helper");
+        }
+        std::mem::take(&mut *self.shared.done.lock().unwrap())
+    }
+}
+
+impl<J: CrewWork> Drop for Crew<J> {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        drop(self.shared.signal.lock().unwrap());
+        self.shared.bell.notify_all();
+    }
+}
+
+/// Helper body: park until a fresh epoch (or stop), then drain the job
+/// board. Returns how many jobs this helper executed.
+fn crew_helper_loop<J: CrewWork>(shared: &CrewShared<J>) -> u64 {
+    let mut seen = 0u64;
+    let mut helped = 0u64;
+    loop {
+        // Park until a new epoch is published or the crew stops; parked
+        // helpers burn no CPU (the epoch/stop checks happen under the
+        // signal lock, so the publisher's lock-then-notify cannot race
+        // past a helper entering the wait).
+        {
+            let mut guard = shared.signal.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::Acquire) {
+                    return helped;
+                }
+                let e = shared.epoch.load(Ordering::Acquire);
+                if e != seen {
+                    seen = e;
+                    break;
+                }
+                guard = shared.bell.wait(guard).unwrap();
+            }
+        }
+        while let Some(mut job) = claim_job(shared) {
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run())).is_ok();
+            if ok {
+                shared.done.lock().unwrap().push(job);
+            } else {
+                shared.poisoned.store(true, Ordering::Release);
+            }
+            shared.pending.fetch_sub(1, Ordering::AcqRel);
+            helped += 1;
+        }
+    }
+}
+
+/// Pop one job off the board. The lock guard lives only inside this call,
+/// so `while let` callers never hold it across a job run.
+fn claim_job<J: CrewWork>(shared: &CrewShared<J>) -> Option<J> {
+    shared.jobs.lock().unwrap().pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_returns_in_order_at_any_parallelism() {
+        let pool = WorkerPool::global();
+        for parallel in [1, 2, 8] {
+            let out = pool.run_indexed(37, parallel, |i| i * i);
+            assert_eq!(out.results, (0..37).map(|i| i * i).collect::<Vec<_>>());
+            assert_eq!(out.on_workers + out.on_caller, 37);
+        }
+    }
+
+    #[test]
+    fn run_indexed_makes_progress_without_workers() {
+        // parallel=1 submits no worker tasks: the caller drains everything.
+        let pool = WorkerPool::new();
+        let out = pool.run_indexed(5, 1, |i| i + 1);
+        assert_eq!(out.results, vec![1, 2, 3, 4, 5]);
+        assert_eq!(out.on_caller, 5);
+        assert_eq!(out.on_workers, 0);
+        assert_eq!(pool.stats().jobs_on_callers, 5);
+        assert_eq!(pool.stats().jobs_on_workers, 0);
+    }
+
+    #[test]
+    fn run_indexed_propagates_panics() {
+        let pool = WorkerPool::global();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_indexed(8, 4, |i| {
+                if i == 3 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+    }
+
+    struct AddOne(Vec<u64>);
+    impl CrewWork for AddOne {
+        fn run(&mut self) {
+            for v in &mut self.0 {
+                *v += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn crew_executes_jobs_with_and_without_helpers() {
+        let pool = WorkerPool::global();
+        pool.ensure_workers(3);
+        for helpers in [0, 3] {
+            let crew = Crew::new(pool, helpers);
+            for round in 0..50u64 {
+                let jobs: Vec<AddOne> = (0..4).map(|k| AddOne(vec![round + k])).collect();
+                let mut done = crew.dispatch(jobs);
+                assert_eq!(done.len(), 4);
+                done.sort_by_key(|j| j.0[0]);
+                for (k, j) in done.iter().enumerate() {
+                    assert_eq!(j.0[0], round + k as u64 + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crew_stops_helpers_on_drop() {
+        let pool = WorkerPool::global();
+        pool.ensure_workers(1);
+        let crew = Crew::new(pool, 1);
+        let done = crew.dispatch(vec![AddOne(vec![1])]);
+        assert_eq!(done.len(), 1);
+        drop(crew);
+        // Helpers observing `stop` exit; nothing to assert beyond not
+        // hanging — give the helper a moment to notice.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}

@@ -41,9 +41,11 @@
 //!   [`engine::Sweep`]/[`engine::SweepPlan`] API over (config × workload ×
 //!   system) that front-end-compiles each workload exactly once per sweep,
 //!   dedupes DX100 specialization across config points with equal
-//!   compiler-relevant knobs, executes all cells on one `DX100_THREADS`
-//!   worker pool (no per-point barrier) with deterministic results, and
-//!   replays unchanged cells from a persisted result cache
+//!   compiler-relevant knobs, executes all cells as batch jobs on the
+//!   process-wide [`engine::pool::WorkerPool`] (`DX100_THREADS`
+//!   executors, no per-point barrier, deterministic results), fans each
+//!   simulation out per the `DX100_SHARDS` hint via pool-served crew
+//!   jobs, and replays unchanged cells from a persisted result cache
 //!   ([`engine::cache`], `DX100_CACHE`); plus the single-point
 //!   [`engine::Suite`]/[`engine::RunPlan`] wrappers and the shared bench
 //!   harness ([`engine::harness`]) with `BENCH_*.json` emission.

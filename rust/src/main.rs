@@ -266,8 +266,12 @@ fn main() {
             println!("env:");
             println!("  DX100_SCALE=N       dataset scale for suite/bench runs (default 2)");
             println!(
-                "  DX100_THREADS=N     worker threads for the run matrix \
+                "  DX100_THREADS=N     simulation worker pool size \
                  (default: all cores; results are identical at any N)"
+            );
+            println!(
+                "  DX100_SHARDS=N      per-run fan-out hint (front-end lanes + DRAM \
+                 channels; default 1; results are identical at any N)"
             );
             println!(
                 "  DX100_CACHE=0|1     persisted result cache for suite/sweep runs \

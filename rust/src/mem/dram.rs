@@ -30,9 +30,13 @@
 //! * Per-channel **engines** (`Channel`, private): bank/bus timing state,
 //!   the FR-FCFS scheduler, and per-channel [`DramStats`]. An engine is
 //!   advanced through a bounded time quantum with its `advance` routine —
-//!   either in place (serial) or detached onto a worker thread as a
-//!   [`ShardChannel`] (sharded). The advance routine is the *same function*
-//!   in both modes, so sharded stats are bit-identical to unsharded ones.
+//!   either in place (serial) or detached as a [`ShardChannel`] and moved
+//!   into a crew job on the shared worker pool (sharded): the coordinator
+//!   drains each channel's [`ChannelFeed`] at the quantum boundary, hands
+//!   feeds and engines to the pool, and syncs the returned
+//!   [`ChannelAdvance`]s back in channel-index order. The advance routine
+//!   is the *same function* in both modes, so sharded stats are
+//!   bit-identical to unsharded ones.
 //!
 //! The direct [`MemController::enqueue`] + [`MemController::schedule`] API
 //! remains for unit tests and small harnesses that drive the controller

@@ -167,6 +167,8 @@ mod tests {
             dram_writes: 0,
             dram_bytes: 0,
             dx: vec![],
+            front_events: 0,
+            channel_events: 0,
             events: 0,
         }
     }

@@ -93,6 +93,44 @@ impl Fnv {
     }
 }
 
+/// One-shot stderr warning for a malformed environment knob.
+///
+/// Every `DX100_*` parser shares this helper so a typo like
+/// `DX100_SCALE=4x` or `DX100_SHARDS=auto` warns exactly once per process
+/// instead of being silently swallowed (or spamming once per run). Each
+/// knob owns one static instance:
+///
+/// ```
+/// use dx100::util::WarnOnce;
+/// static WARN_DEMO: WarnOnce = WarnOnce::new();
+/// WARN_DEMO.warn("DX100_DEMO", "bogus", "an integer >= 1");
+/// WARN_DEMO.warn("DX100_DEMO", "bogus", "an integer >= 1"); // silent
+/// ```
+#[derive(Debug)]
+pub struct WarnOnce(std::sync::Once);
+
+impl Default for WarnOnce {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WarnOnce {
+    /// A fresh, not-yet-fired warning slot (usable in `static` position).
+    pub const fn new() -> Self {
+        WarnOnce(std::sync::Once::new())
+    }
+
+    /// Print `warning: ignoring NAME="raw" (expected EXPECT); using the
+    /// default` the first time this instance fires; later calls are
+    /// no-ops.
+    pub fn warn(&self, name: &str, raw: &str, expect: &str) {
+        self.0.call_once(|| {
+            eprintln!("warning: ignoring {name}={raw:?} (expected {expect}); using the default");
+        });
+    }
+}
+
 /// Human-friendly SI formatting of a count (e.g. 16384 -> "16.4K").
 pub fn si(x: f64) -> String {
     let ax = x.abs();

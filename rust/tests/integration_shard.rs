@@ -1,12 +1,18 @@
-//! Intra-run channel sharding: bit-identity and cache-key invariance.
+//! Intra-run sharding: bit-identity and cache-key invariance.
 //!
-//! `DX100_SHARDS` fans one simulation's DRAM channel engines out across
-//! worker threads. The contract under test:
+//! `DX100_SHARDS` is a fan-out hint: it splits one simulation's front-end
+//! core lanes *and* its DRAM channel engines into crew jobs served by the
+//! shared worker pool. The contract under test:
 //!
-//! * `RunStats` are **bit-identical** for every shard count, on every
-//!   system kind, for both multi-channel geometries (2-channel Table 3 and
-//!   the 4-channel §6.6 scale-up) — floats compared exactly, no epsilon.
-//! * Shard counts above the channel count clamp (and stay identical).
+//! * `RunStats` are **bit-identical** for every fan-out, on every system
+//!   kind, for both multi-channel geometries (2-channel Table 3 and the
+//!   4-channel §6.6 scale-up) — floats compared exactly, no epsilon.
+//! * The front-end seam holds even when the core count does not divide
+//!   the fan-out (uneven lane groups).
+//! * Fan-outs above the core/channel counts clamp (and stay identical).
+//! * A saturated pool (more fan-out than workers) degrades to inline
+//!   execution of the same jobs: a `threads=2, shards=4` sweep equals a
+//!   fully serial one.
 //! * Sharding never enters a cache or dedup fingerprint: a sharded sweep
 //!   replays cells cached by an unsharded sweep verbatim.
 
@@ -43,6 +49,56 @@ fn sharded_stats_bit_identical_across_shard_counts() {
                     w.program.name
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn front_end_sharding_bit_identical_with_uneven_core_groups() {
+    // 6 cores: fan-outs 2 and 4 both leave uneven lane groups (3+3 and
+    // 2+2+1+1), exercising the front-end shard seam on every system.
+    let mut cfg = SystemConfig::table3_8core();
+    cfg.core.num_cores = 6;
+    for w in &workloads() {
+        for kind in ALL_KINDS {
+            let ex = Experiment::new(kind, cfg.clone());
+            let serial = ex.run_sharded(w, 1);
+            assert!(serial.front_events > 0, "front end must process events");
+            assert_eq!(
+                serial.events,
+                serial.front_events + serial.channel_events,
+                "event accounting must split by phase"
+            );
+            // 3 leaves uneven groups on the 4-lane baseline front end
+            // (2+1+1) and on the 6-lane DX100 one (2+2+2 channels-wise,
+            // 2+2+1+1 at 4); every fan-out must be bit-identical.
+            for shards in [2, 3, 4] {
+                let sharded = ex.run_sharded(w, shards);
+                assert_eq!(
+                    serial, sharded,
+                    "{kind:?}/{} diverged at fan-out {shards} with 6 cores",
+                    w.program.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_saturated_sweep_matches_serial() {
+    // More fan-out than pool concurrency: a (threads=2, shards=4) sweep
+    // must complete and equal the fully serial one bit for bit — shard
+    // helpers are opportunistic, never load-bearing.
+    let points = [SweepPoint::new("", SystemConfig::table3_8core())];
+    let ws = workloads();
+    let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
+    let serial = execute_sweep_sharded(&plan, 1, None, 1);
+    let saturated = execute_sweep_sharded(&plan, 2, None, 4);
+    assert_eq!(saturated.threads, 2);
+    assert_eq!(saturated.shards, 4);
+    for (pa, pb) in serial.points.iter().zip(&saturated.points) {
+        for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
+            assert_eq!(wa.runs, wb.runs);
         }
     }
 }

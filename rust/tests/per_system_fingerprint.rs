@@ -4,7 +4,7 @@
 //! (`SystemConfig::fingerprint_sans_dx100`, selected per system by
 //! `engine::cache::system_fingerprint`). That exclusion is only safe if
 //! no baseline/DMP code path reads those knobs; by inspection the sole
-//! route is `CoreEnv`'s scratchpad/MMIO latencies, which baseline/DMP
+//! route is `LaneEnv`'s scratchpad/MMIO latencies, which baseline/DMP
 //! instruction streams never consume. These tests back the inspection at
 //! runtime: a config pair differing in **every** `dx100.*` knob must
 //! produce bit-identical `RunStats` on the CPU-only systems, and the
