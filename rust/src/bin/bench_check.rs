@@ -1,23 +1,77 @@
 //! CI gate over `BENCH_*.json` documents.
 //!
 //! ```text
-//! bench_check BENCH_fig09.json BENCH_fig13.json ...
+//! bench_check [--require-profile] BENCH_fig09.json BENCH_fig13.json ...
 //! ```
 //!
 //! Exits non-zero (naming the file and field) when any document is
 //! missing, fails to parse, or violates the schema documented in
 //! `rust/EXPERIMENTS.md`: the universal header fields, a non-empty `rows`
 //! array whose entries carry (workload, system, cycles, events), and —
-//! when present — self-consistent `sweep`/`cache` accounting. Std-only,
-//! reusing the harness's JSON parser, so the bench-smoke CI job needs no
-//! extra tooling.
+//! when present — self-consistent `sweep`/`cache` accounting and a
+//! well-formed `profile` object. With `--require-profile` (the CI
+//! bench-smoke job passes it for its `DX100_PROFILE=1` run), every
+//! document must additionally carry a `profile` covering all five phase
+//! regions of the quantum loop. Std-only, reusing the harness's JSON
+//! parser, so the bench-smoke CI job needs no extra tooling.
 
 use dx100::engine::harness::Json;
 use std::process::ExitCode;
 
 const SYSTEMS: [&str; 3] = ["baseline", "dmp", "dx100"];
 
-fn check_doc(doc: &Json) -> Result<(usize, usize), String> {
+/// The five phase regions every profiled run of the staged quantum loop
+/// enters (see `docs/CONCURRENCY.md`); `--require-profile` demands all of
+/// them.
+const PHASE_REGIONS: [&str; 5] = [
+    "front_lanes",
+    "dx100_lane",
+    "shared_stage",
+    "channel_crews",
+    "merge",
+];
+
+/// Validate the optional `profile` object: every region must carry a
+/// finite non-negative `seconds` and a positive `calls` count. With
+/// `required`, the object must exist and cover [`PHASE_REGIONS`].
+fn check_profile(doc: &Json, required: bool) -> Result<(), String> {
+    let Some(profile) = doc.get("profile") else {
+        if required {
+            return Err("missing \"profile\" (bench not run with DX100_PROFILE=1?)".to_string());
+        }
+        return Ok(());
+    };
+    let regions = match profile {
+        Json::Obj(kvs) => kvs,
+        _ => return Err("non-object \"profile\"".to_string()),
+    };
+    for (name, stat) in regions {
+        let secs = stat
+            .get("seconds")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("profile.{name}: missing \"seconds\""))?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!("profile.{name}: bad seconds {secs}"));
+        }
+        let calls = stat
+            .get("calls")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("profile.{name}: missing \"calls\""))?;
+        if calls == 0 {
+            return Err(format!("profile.{name}: zero calls"));
+        }
+    }
+    if required {
+        for want in PHASE_REGIONS {
+            if !regions.iter().any(|(name, _)| name == want) {
+                return Err(format!("profile: missing phase region {want:?}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_doc(doc: &Json, require_profile: bool) -> Result<(usize, usize), String> {
     for key in ["bench", "title"] {
         doc.get(key)
             .and_then(Json::as_str)
@@ -103,13 +157,25 @@ fn check_doc(doc: &Json) -> Result<(usize, usize), String> {
             ));
         }
     }
+    check_profile(doc, require_profile)?;
     Ok((rows.len(), n_metrics))
 }
 
 fn main() -> ExitCode {
-    let paths: Vec<String> = std::env::args().skip(1).collect();
+    let mut require_profile = false;
+    let mut paths: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--require-profile" => require_profile = true,
+            _ if arg.starts_with("--") => {
+                eprintln!("unknown flag {arg:?}");
+                return ExitCode::from(2);
+            }
+            _ => paths.push(arg),
+        }
+    }
     if paths.is_empty() {
-        eprintln!("usage: bench_check <BENCH_*.json> ...");
+        eprintln!("usage: bench_check [--require-profile] <BENCH_*.json> ...");
         return ExitCode::from(2);
     }
     let mut failed = false;
@@ -117,7 +183,7 @@ fn main() -> ExitCode {
         let verdict = std::fs::read_to_string(path)
             .map_err(|e| format!("unreadable: {e}"))
             .and_then(|text| Json::parse(&text).map_err(|e| format!("malformed JSON: {e}")))
-            .and_then(|doc| check_doc(&doc));
+            .and_then(|doc| check_doc(&doc, require_profile));
         match verdict {
             Ok((rows, metrics)) => {
                 println!("OK {path}: {rows} rows, {metrics} metrics");

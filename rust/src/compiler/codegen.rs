@@ -590,13 +590,17 @@ pub fn specialize_invocations() -> u64 {
     SPECIALIZE_INVOCATIONS.load(Ordering::Relaxed)
 }
 
-/// Config-independent front end: analysis, legality, and the sequential
-/// interpretation (baseline streams + DMP hints + reference memory).
-pub fn frontend(p: &Program, init: &MemImage) -> Result<Frontend, LegalityError> {
+/// Config-light front end: analysis, legality, and the sequential
+/// interpretation (baseline streams + DMP hints + reference memory). Reads
+/// only `dmp` from the system configuration — the prefetch depth and
+/// training window are baked into the hint tables here — so the sweep
+/// engine shares one front end across all config points that agree on
+/// [`SystemConfig::dmp_fingerprint`].
+pub fn frontend(p: &Program, init: &MemImage, dmp: DmpConfig) -> Result<Frontend, LegalityError> {
     COMPILE_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
     let (analysis, legal) = analyze(p);
     legal?;
-    let baseline = interpret(p, init, Some(DmpConfig::default()));
+    let baseline = interpret(p, init, Some(dmp));
     Ok(Frontend {
         name: p.name,
         flags: WorkloadFlags {
@@ -614,15 +618,16 @@ pub fn compile(
     init: &MemImage,
     cfg: &SystemConfig,
 ) -> Result<CompiledWorkload, LegalityError> {
-    let fe = frontend(p, init)?;
+    let fe = frontend(p, init, cfg.dmp.clone())?;
     let dx = specialize(&fe, p, init, cfg)?;
     Ok(fe.with_dx(dx))
 }
 
 /// Lower `p` to DX100 instruction sequences for one configuration. Reads
-/// only `cfg.dx100.*` and `cfg.core.num_cores` — exactly the knobs covered
-/// by [`SystemConfig::compile_fingerprint`], which is what lets the sweep
-/// engine share one specialization across config points that agree on
+/// only `cfg.dx100.*` and `cfg.core.num_cores`; together with the front
+/// end's `cfg.dmp` those are the knobs covered by
+/// [`SystemConfig::compile_fingerprint`], which is what lets the sweep
+/// engine share one compiled workload across config points that agree on
 /// those values.
 pub fn specialize(
     fe: &Frontend,

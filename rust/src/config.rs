@@ -4,6 +4,7 @@
 //! clock for DDR4-3200 is 1.6 GHz, i.e. one DRAM cycle = 2 CPU cycles; DDR4
 //! timing constants below are already converted.
 
+use crate::prefetch::DmpConfig;
 use crate::util::Fnv;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -171,6 +172,9 @@ pub struct SystemConfig {
     pub dram: DramConfig,
     /// DX100 accelerator parameters.
     pub dx100: Dx100Config,
+    /// Indirect-prefetcher (DMP) parameters; read only by the DMP system's
+    /// compiled hint tables.
+    pub dmp: DmpConfig,
     /// CPU frequency in GHz (informational; time base is CPU cycles).
     pub freq_ghz: f64,
 }
@@ -251,6 +255,7 @@ impl SystemConfig {
                 mmio_store_latency: 40,
                 spd_read_latency: 20,
             },
+            dmp: DmpConfig::default(),
             freq_ghz: 3.2,
         }
     }
@@ -277,7 +282,7 @@ impl SystemConfig {
     ///
     /// Recognized keys: `cores`, `channels`, `tile`, `tiles`, `instances`,
     /// `llc_kb`, `rob`, `lq`, `sq`, `request_buffer`, `fill_rate`,
-    /// `rowtab_rows`, `rowtab_cols`.
+    /// `rowtab_rows`, `rowtab_cols`, `dmp_depth`, `dmp_train`.
     pub fn with_overrides(mut self, overrides: &BTreeMap<String, String>) -> Result<Self, String> {
         for (k, v) in overrides {
             let n: u64 = v
@@ -297,6 +302,8 @@ impl SystemConfig {
                 "fill_rate" => self.dx100.fill_rate = n as usize,
                 "rowtab_rows" => self.dx100.rowtab_rows = n as usize,
                 "rowtab_cols" => self.dx100.rowtab_cols = n as usize,
+                "dmp_depth" => self.dmp.depth = n as usize,
+                "dmp_train" => self.dmp.train_iters = n as usize,
                 _ => return Err(format!("unknown config override: {k}")),
             }
         }
@@ -423,6 +430,14 @@ impl Dx100Config {
     }
 }
 
+// `DmpConfig` lives in `crate::prefetch`; its fingerprint schema lives
+// here with the others so the exhaustive-destructure rule stays in one
+// file.
+fn hash_dmp_into(d: &DmpConfig, h: &mut Fnv) {
+    let DmpConfig { depth, train_iters } = d;
+    h.usize(*depth).usize(*train_iters);
+}
+
 impl SystemConfig {
     /// Stable fingerprint over **every** knob: two configs with equal
     /// fingerprints simulate identically, so this (plus workload + system)
@@ -435,6 +450,7 @@ impl SystemConfig {
             llc,
             dram,
             dx100,
+            dmp,
             freq_ghz,
         } = self;
         let mut h = Fnv::with_seed(0xdc100);
@@ -444,22 +460,25 @@ impl SystemConfig {
         llc.hash_into(&mut h);
         dram.hash_into(&mut h);
         dx100.hash_into(&mut h);
+        hash_dmp_into(dmp, &mut h);
         h.f64(*freq_ghz);
         h.finish()
     }
 
-    /// Stable fingerprint over every knob the **CPU-only** systems
+    /// Stable fingerprint over every knob the **CPU-side** systems
     /// (baseline and DMP) can observe: everything except `dx100.*`. The
     /// accelerator parameters reach those systems' code paths in exactly
     /// one place — `LaneEnv`'s `spd_latency`/`mmio_latency` fields — and
     /// baseline/DMP instruction streams contain no scratchpad reads or
     /// MMIO stores to consume them, so two configs agreeing here simulate
-    /// CPU-only systems identically. The sweep engine keys baseline/DMP
-    /// cache entries and within-plan dedup on this value (via
+    /// CPU-side systems identically. The sweep engine keys **DMP** cache
+    /// entries and within-plan dedup on this value (via
     /// [`crate::engine::cache::system_fingerprint`]), which is what lets a
-    /// `dx100.*` sweep reuse one baseline simulation across all points.
-    /// `tests/per_system_fingerprint.rs` guards the exclusion with a
-    /// runtime A/B bit-identity check — extend that test before excluding
+    /// `dx100.*` sweep reuse one cached DMP simulation across all points;
+    /// the baseline additionally ignores `dmp.*` — see
+    /// [`Self::fingerprint_sans_dx100_dmp`].
+    /// `tests/per_system_fingerprint.rs` guards the exclusions with
+    /// runtime A/B bit-identity checks — extend that test before excluding
     /// anything else.
     pub fn fingerprint_sans_dx100(&self) -> u64 {
         let SystemConfig {
@@ -469,9 +488,40 @@ impl SystemConfig {
             llc,
             dram,
             dx100: _, // excluded: unread by baseline/DMP (see doc above)
+            dmp,
             freq_ghz,
         } = self;
         let mut h = Fnv::with_seed(0xba5e);
+        core.hash_into(&mut h);
+        l1d.hash_into(&mut h);
+        l2.hash_into(&mut h);
+        llc.hash_into(&mut h);
+        dram.hash_into(&mut h);
+        hash_dmp_into(dmp, &mut h);
+        h.f64(*freq_ghz);
+        h.finish()
+    }
+
+    /// Stable fingerprint over every knob the **baseline** system can
+    /// observe: everything except `dx100.*` *and* `dmp.*`. The prefetcher
+    /// parameters shape only the DMP hint tables, which the baseline op
+    /// stream never consults, so two configs agreeing here simulate the
+    /// baseline identically. Keys baseline cache entries and within-plan
+    /// dedup — a `dmp.*` sweep reuses one baseline simulation across all
+    /// its points. Same A/B guard policy as
+    /// [`Self::fingerprint_sans_dx100`].
+    pub fn fingerprint_sans_dx100_dmp(&self) -> u64 {
+        let SystemConfig {
+            core,
+            l1d,
+            l2,
+            llc,
+            dram,
+            dx100: _, // excluded: unread by the baseline
+            dmp: _,   // excluded: only DMP hint tables read it
+            freq_ghz,
+        } = self;
+        let mut h = Fnv::with_seed(0xba5e_0d0d);
         core.hash_into(&mut h);
         l1d.hash_into(&mut h);
         l2.hash_into(&mut h);
@@ -481,15 +531,27 @@ impl SystemConfig {
         h.finish()
     }
 
+    /// Stable fingerprint over the `dmp.*` section alone. Keys the sweep
+    /// engine's front-end dedup: the compiler front end bakes DMP hints
+    /// into its interpretation, so front ends are shareable exactly across
+    /// config points that agree here.
+    pub fn dmp_fingerprint(&self) -> u64 {
+        let mut h = Fnv::with_seed(0xd3f0);
+        hash_dmp_into(&self.dmp, &mut h);
+        h.finish()
+    }
+
     /// Stable fingerprint over the **compiler-relevant** knobs only:
-    /// `dx100.*` (tiling, instance count, registers) and `core.num_cores`
-    /// (dispatch/residual-compute interleaving). Codegen reads nothing
-    /// else from the configuration, so the sweep engine dedupes DX100
-    /// specialization across config points with equal values here.
+    /// `dx100.*` (tiling, instance count, registers), `core.num_cores`
+    /// (dispatch/residual-compute interleaving), and `dmp.*` (hint tables
+    /// baked in by the front end). Codegen reads nothing else from the
+    /// configuration, so the sweep engine dedupes DX100 specialization
+    /// across config points with equal values here.
     pub fn compile_fingerprint(&self) -> u64 {
         let mut h = Fnv::with_seed(0xdc51);
         h.usize(self.core.num_cores);
         self.dx100.hash_into(&mut h);
+        hash_dmp_into(&self.dmp, &mut h);
         h.finish()
     }
 }
@@ -580,9 +642,11 @@ mod tests {
         let mut ov = BTreeMap::new();
         ov.insert("cores".to_string(), "8".to_string());
         ov.insert("tile".to_string(), "1024".to_string());
+        ov.insert("dmp_depth".to_string(), "4".to_string());
         let c = SystemConfig::table3().with_overrides(&ov).unwrap();
         assert_eq!(c.core.num_cores, 8);
         assert_eq!(c.dx100.tile_elems, 1024);
+        assert_eq!(c.dmp.depth, 4);
         let mut bad = BTreeMap::new();
         bad.insert("nope".to_string(), "1".to_string());
         assert!(SystemConfig::table3().with_overrides(&bad).is_err());
@@ -640,6 +704,34 @@ mod tests {
         let mut c = SystemConfig::table3();
         c.core.rob = 128;
         assert_ne!(c.fingerprint_sans_dx100(), base.fingerprint_sans_dx100());
+    }
+
+    #[test]
+    fn dmp_knobs_split_fingerprints_per_system() {
+        let base = SystemConfig::table3();
+        let mut warped = SystemConfig::table3();
+        warped.dmp.depth = 4;
+        warped.dmp.train_iters = 8;
+        // The baseline key ignores dmp.*; every other key tracks it.
+        assert_eq!(
+            warped.fingerprint_sans_dx100_dmp(),
+            base.fingerprint_sans_dx100_dmp()
+        );
+        assert_ne!(
+            warped.fingerprint_sans_dx100(),
+            base.fingerprint_sans_dx100()
+        );
+        assert_ne!(warped.fingerprint(), base.fingerprint());
+        assert_ne!(warped.dmp_fingerprint(), base.dmp_fingerprint());
+        // The front end bakes hints in: dmp is compiler-relevant.
+        assert_ne!(warped.compile_fingerprint(), base.compile_fingerprint());
+        // Non-dmp knobs still move the baseline key.
+        let mut d = SystemConfig::table3();
+        d.dram.request_buffer = 8;
+        assert_ne!(
+            d.fingerprint_sans_dx100_dmp(),
+            base.fingerprint_sans_dx100_dmp()
+        );
     }
 
     #[test]

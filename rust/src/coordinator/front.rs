@@ -21,9 +21,11 @@ use crate::cache::PrivateLane;
 use crate::cache::StridePrefetcher;
 use crate::compiler::CompiledWorkload;
 use crate::core::{CoreModel, LaneAction, LaneEnv};
+use crate::dx100::timing::{Dx100Env, Dx100Timing, DxAction};
 use crate::engine::pool::CrewWork;
 use crate::mem::{ChannelAdvance, ChannelFeed, ShardChannel};
 use crate::sim::{Cycle, EventQueue};
+use crate::util::regions;
 use std::sync::Arc;
 
 /// Runaway-lane guard (events popped by one lane).
@@ -102,11 +104,66 @@ impl FrontLane {
     }
 }
 
-/// One quantum work item for the run's crew: a group of front lanes or a
-/// group of detached channel engines.
+/// One DX100 instance's complete lane state, advanced independently
+/// within a front-end round. The same share-nothing contract as
+/// [`FrontLane`]: the timing model owns a private address map, the queue
+/// holds only this instance's wakes, and all externally visible effects
+/// ([`DxAction`]s) are merged by the shared stage at
+/// `(time, lane index, emission order)` — the lane sorts *after* every
+/// core at equal time, so accelerator traffic never reorders against core
+/// traffic nondeterministically.
+pub(crate) struct DxLane {
+    /// Instance index (its merge key is `num_cores + idx`).
+    pub idx: usize,
+    /// The cycle-level accelerator model.
+    pub timing: Dx100Timing,
+    /// This instance's event queue (`Dx100Wake(idx)` events only).
+    pub queue: EventQueue,
+    /// Shared-stage work deferred by the last advance.
+    pub actions: Vec<DxAction>,
+    /// Per-channel request-buffer space snapshot, refilled by the
+    /// coordinator before each round.
+    pub space: Vec<usize>,
+    /// Latest event time this lane has processed (monotone pushes).
+    pub last_time: Cycle,
+    /// Front-end events this lane has popped (into `RunStats`).
+    pub events: u64,
+}
+
+impl DxLane {
+    /// Advance this instance through every queued wake strictly below
+    /// `t_end`. Reads nothing shared — safe on any thread.
+    pub fn advance(&mut self, t_end: Cycle) {
+        while matches!(self.queue.peek_time(), Some(h) if h < t_end) {
+            let ev = self.queue.pop().expect("peeked event");
+            self.events += 1;
+            assert!(
+                self.events < LANE_GUARD_LIMIT,
+                "dx100 lane {} livelock at t={}",
+                self.idx,
+                ev.time
+            );
+            self.last_time = self.last_time.max(ev.time);
+            if self.timing.done {
+                continue;
+            }
+            let mut env = Dx100Env {
+                queue: &mut self.queue,
+                space: &mut self.space,
+                actions: &mut self.actions,
+            };
+            self.timing.wake(ev.time, &mut env);
+        }
+    }
+}
+
+/// One quantum work item for the run's crew: a group of front lanes, the
+/// DX100 accelerator lanes, or a group of detached channel engines.
 pub(crate) enum SimJob {
     /// Advance a group of front-end lanes through the quantum.
     Front(FrontJob),
+    /// Advance the DX100 instance lanes through the quantum.
+    Dx(DxJob),
     /// Advance a group of DRAM channel engines through the quantum.
     Channels(ChannelJob),
 }
@@ -115,6 +172,7 @@ impl CrewWork for SimJob {
     fn run(&mut self) {
         match self {
             SimJob::Front(j) => j.run(),
+            SimJob::Dx(j) => j.run(),
             SimJob::Channels(j) => j.run(),
         }
     }
@@ -132,8 +190,26 @@ pub(crate) struct FrontJob {
 
 impl FrontJob {
     fn run(&mut self) {
+        let _r = regions::scope("front_lanes");
         for lane in &mut self.lanes {
             lane.advance(self.t_end, &self.flags);
+        }
+    }
+}
+
+/// The DX100 instance lanes for one front-end round.
+pub(crate) struct DxJob {
+    /// Lanes to advance (instances still running this quantum).
+    pub lanes: Vec<DxLane>,
+    /// Quantum end (exclusive).
+    pub t_end: Cycle,
+}
+
+impl DxJob {
+    fn run(&mut self) {
+        let _r = regions::scope("dx100_lane");
+        for lane in &mut self.lanes {
+            lane.advance(self.t_end);
         }
     }
 }
@@ -152,6 +228,7 @@ pub(crate) struct ChannelJob {
 
 impl ChannelJob {
     fn run(&mut self) {
+        let _r = regions::scope("channel_crews");
         for (sc, feed) in self.chans.iter_mut().zip(self.feeds.drain(..)) {
             self.advs.push(sc.advance(feed, self.t_end));
         }

@@ -19,12 +19,18 @@
 //!      [`crate::cache::Hierarchy::take_lane`]), stride prefetcher, and
 //!      its own event queue. Private hits resolve locally; everything
 //!      that needs a shared resource is recorded as a timestamped
-//!      [`LaneAction`](crate::core::LaneAction).
-//!    * **Shared stage** (event-loop thread): lane actions and the shared
-//!      event queue (DRAM completions, DX100 wakes, MMIO timers) merge in
-//!      `(time, kind, core index, emission order)` order and apply to the
-//!      shared tier — LLC, DRAM controller front end, DX100 instances.
-//!      New work below the quantum end triggers another round.
+//!      [`LaneAction`](crate::core::LaneAction). Every DX100 instance
+//!      with pending wakes advances the same way as a
+//!      [`DxLane`](super::front::DxLane): its cycle model runs against a
+//!      per-channel request-buffer space snapshot and defers LLC /
+//!      DRAM / ready-flag effects as
+//!      [`DxAction`](crate::dx100::timing::DxAction)s.
+//!    * **Shared stage** (event-loop thread): core and DX100 lane actions
+//!      and the shared event queue (DRAM completions, MMIO timers) merge
+//!      in `(time, lane index, emission order)` order — DX100 lanes
+//!      index after every core — and apply to the shared tier: LLC,
+//!      DRAM controller front end, ready-flag boards. New work below the
+//!      quantum end triggers another round.
 //! 2. **Channels**: each DRAM channel engine independently replays its
 //!    activation times (plus self-wakes) through the FR-FCFS scheduler;
 //!    results merge back in channel-index order. Because any completion
@@ -40,17 +46,18 @@
 //! — the engine's result cache and every figure output are unaffected by
 //! either knob. `docs/CONCURRENCY.md` is the full treatment.
 
-use super::front::{ChannelJob, FrontJob, FrontLane, SimJob};
+use super::front::{ChannelJob, DxJob, DxLane, FrontJob, FrontLane, SimJob};
 use super::variant::{DxSetup, SystemVariant};
 use crate::cache::{Hierarchy, SharedAccess, StridePrefetcher};
 use crate::compiler::{compile, CompiledWorkload};
 use crate::config::SystemConfig;
 use crate::core::{CoreModel, LaneActionKind, LineWaiters};
-use crate::dx100::timing::{Dx100Env, Dx100Stats, Dx100Timing};
+use crate::dx100::timing::{Dx100Stats, DxActionKind};
 use crate::dx100::NO_TILE;
 use crate::engine::pool::{Crew, WorkerPool};
 use crate::mem::{dram::Completion, MemController, ReqSource, ShardChannel};
 use crate::sim::{Cycle, Event, EventQueue};
+use crate::util::regions;
 use crate::workloads::WorkloadSpec;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -219,14 +226,24 @@ struct ParkedAccess {
 }
 
 /// One lane action queued for the shared stage's deterministic merge,
-/// ordered by `(time, core index, emission order)`; same-time shared
-/// events sort ahead of actions.
+/// ordered by `(time, lane index, emission order)`; same-time shared
+/// events sort ahead of actions. Core lanes use their core index; DX100
+/// lanes use `num_cores + instance`, so at equal time every core action
+/// applies before any accelerator action.
 #[derive(Clone, Copy)]
 struct RoundAction {
     time: Cycle,
     core: usize,
     seq: u64,
-    kind: LaneActionKind,
+    kind: RoundKind,
+}
+
+/// The payload of a [`RoundAction`]: a core lane's deferred effect or a
+/// DX100 lane's.
+#[derive(Clone, Copy)]
+enum RoundKind {
+    Core(LaneActionKind),
+    Dx(DxActionKind),
 }
 
 struct System<'a> {
@@ -234,11 +251,12 @@ struct System<'a> {
     lanes: Vec<Option<FrontLane>>,
     hier: Hierarchy,
     mem: MemController,
-    /// Shared event queue: `ChannelSched` / `DramDone` / `Dx100Wake` /
-    /// `Timer`. `CoreWake` events live on the lanes' own queues.
+    /// Shared event queue: `ChannelSched` / `DramDone` / `Timer`.
+    /// `CoreWake` events live on the core lanes' own queues and
+    /// `Dx100Wake` events on the DX100 lanes' queues.
     queue: EventQueue,
     waiters: LineWaiters,
-    dx: Vec<Dx100Timing>,
+    dx_lanes: Vec<Option<DxLane>>,
     dx_programs: Vec<&'a crate::dx100::timing::Dx100Program>,
     ready: Vec<Vec<bool>>,
     routing: HashMap<u64, Completion>,
@@ -284,6 +302,21 @@ impl<'a> System<'a> {
             programs: dx_programs,
             ready,
         } = variant.accelerators(cfg, cw, &mem);
+        let dx_lanes = dx
+            .into_iter()
+            .enumerate()
+            .map(|(i, timing)| {
+                Some(DxLane {
+                    idx: i,
+                    timing,
+                    queue: EventQueue::new(),
+                    actions: Vec::new(),
+                    space: Vec::new(),
+                    last_time: 0,
+                    events: 0,
+                })
+            })
+            .collect();
         let kind = variant.kind();
         let lanes = (0..ncores)
             .map(|i| {
@@ -310,7 +343,7 @@ impl<'a> System<'a> {
             mem,
             queue: EventQueue::new(),
             waiters: LineWaiters::new(),
-            dx,
+            dx_lanes,
             dx_programs,
             ready,
             routing: HashMap::new(),
@@ -356,18 +389,74 @@ impl<'a> System<'a> {
         }
     }
 
-    fn wake_dx(&mut self, i: usize, t: Cycle) {
-        let mut env = Dx100Env {
-            hier: &mut self.hier,
-            mem: &mut self.mem,
-            queue: &mut self.queue,
-            ready: &mut self.ready[i],
-        };
-        let flags_changed = self.dx[i].wake(t, &mut env);
-        if flags_changed {
-            for c in 0..self.lanes.len() {
-                if !self.lane_ref(c).core.done {
-                    self.wake_lane(c, t);
+    fn dx_ref(&self, i: usize) -> &DxLane {
+        self.dx_lanes[i].as_ref().expect("dx lane in flight")
+    }
+
+    fn dx_mut(&mut self, i: usize) -> &mut DxLane {
+        self.dx_lanes[i].as_mut().expect("dx lane in flight")
+    }
+
+    /// Push a `Dx100Wake` onto instance `i`'s lane queue, clamped forward
+    /// to the lane's own progress so per-lane event time stays monotone.
+    fn wake_dx_lane(&mut self, i: usize, t: Cycle) {
+        let dl = self.dx_mut(i);
+        let t = t.max(dl.last_time);
+        dl.queue.push(t, Event::Dx100Wake(i));
+    }
+
+    /// Apply one deferred DX100 lane action on the shared stage: resolve
+    /// the LLC Cache-Interface probe / coherency snoop the lane deferred,
+    /// issue the DRAM traffic, or flip a ready flag.
+    fn apply_dx_action(&mut self, t: Cycle, instance: usize, kind: DxActionKind) {
+        match kind {
+            DxActionKind::Flag { index, value } => {
+                if index < self.ready[instance].len() {
+                    self.ready[instance][index] = value;
+                }
+                if value {
+                    // A tile/phase became ready: spinning cores re-poll.
+                    for c in 0..self.lanes.len() {
+                        if !self.lane_ref(c).core.done {
+                            self.wake_lane(c, t);
+                        }
+                    }
+                }
+            }
+            DxActionKind::StreamAccess {
+                token,
+                addr,
+                is_store,
+            } => {
+                if !is_store && self.hier.llc_access(addr, t).is_some() {
+                    if let Some(w) = self.dx_mut(instance).timing.on_llc_hit(token, t) {
+                        self.wake_dx_lane(instance, w);
+                    }
+                    return;
+                }
+                self.dx_mut(instance).timing.note_dram_issue(is_store);
+                self.mem
+                    .enqueue(t, addr, is_store, ReqSource::Dx100 { instance, token });
+                let ch = self.mem.channel_of(addr);
+                if self.mem.sched_request(ch, t) {
+                    self.queue.push(t, Event::ChannelSched(ch));
+                }
+            }
+            DxActionKind::IndirectAccess { token, addr } => {
+                if self.hier.snoop(addr >> 6) {
+                    // Cache Interface path: serve from the live LLC.
+                    self.hier.llc_fill(addr, t);
+                    if let Some(w) = self.dx_mut(instance).timing.on_llc_hit(token, t) {
+                        self.wake_dx_lane(instance, w);
+                    }
+                    return;
+                }
+                self.dx_mut(instance).timing.note_dram_issue(false);
+                self.mem
+                    .enqueue(t, addr, false, ReqSource::Dx100 { instance, token });
+                let ch = self.mem.channel_of(addr);
+                if self.mem.sched_request(ch, t) {
+                    self.queue.push(t, Event::ChannelSched(ch));
                 }
             }
         }
@@ -512,17 +601,38 @@ impl<'a> System<'a> {
                         }
                     }
                     ReqSource::Dx100 { instance, token } => {
-                        self.dx[instance].on_dram_done(token, t, &mut self.mem, &mut self.queue);
+                        let fu = self.dx_mut(instance).timing.on_dram_done(token, t);
+                        if let Some(wb) = fu.write_back {
+                            // Write half of a store/RMW line (§3.2 stage 3).
+                            self.mem.enqueue(
+                                t,
+                                wb.addr,
+                                true,
+                                ReqSource::Dx100 {
+                                    instance,
+                                    token: wb.token,
+                                },
+                            );
+                            let ch = self.mem.channel_of(wb.addr);
+                            if self.mem.sched_request(ch, t) {
+                                self.queue.push(t, Event::ChannelSched(ch));
+                            }
+                        }
+                        if let Some(w) = fu.wake_at {
+                            self.wake_dx_lane(instance, w);
+                        }
                     }
                 }
             }
             Event::Dx100Wake(i) => {
-                self.wake_dx(i, t);
+                // Wakes normally live on the DX100 lanes' own queues; one
+                // reaching the shared queue is just re-routed.
+                self.wake_dx_lane(i, t);
             }
             Event::Timer(payload) => {
                 let instance = (payload >> 32) as usize;
                 let seq = (payload & 0xFFFF_FFFF) as u32;
-                if self.dx[instance].deliver_part(seq) {
+                if self.dx_mut(instance).timing.deliver_part(seq) {
                     // Fully delivered: clear ready bits of its tiles so
                     // waiting cores observe the in-progress state.
                     let inst = &self.dx_programs[instance].instrs[seq as usize].inst;
@@ -533,21 +643,30 @@ impl<'a> System<'a> {
                         self.ready[instance][inst.ts1 as usize] = false;
                     }
                 }
-                self.queue.push(t, Event::Dx100Wake(instance));
+                self.wake_dx_lane(instance, t);
             }
         }
     }
 
     /// The front-end phase of one quantum: rounds of (parallel lane stage,
     /// deterministic shared stage) until nothing below `t_end` remains.
+    /// The lane stage covers both the core front lanes and the DX100
+    /// accelerator lanes; their deferred actions merge into one stream
+    /// keyed `(time, lane index, emission order)` with DX100 lanes
+    /// indexed after every core.
     fn phase_front(&mut self, t_end: Cycle, fan: usize, crew: Option<&Crew<SimJob>>) {
+        let ncores = self.lanes.len();
         loop {
-            // Lane stage: advance every lane with pending events.
+            // Lane stage: advance every core / DX100 lane with pending
+            // events below the quantum end.
             let active: Vec<usize> = (0..self.lanes.len())
                 .filter(|&c| matches!(self.lane_ref(c).queue.peek_time(), Some(h) if h < t_end))
                 .collect();
+            let active_dx: Vec<usize> = (0..self.dx_lanes.len())
+                .filter(|&i| matches!(self.dx_ref(i).queue.peek_time(), Some(h) if h < t_end))
+                .collect();
             let mut actions: Vec<RoundAction> = Vec::new();
-            if !active.is_empty() {
+            if !active.is_empty() || !active_dx.is_empty() {
                 let mut fls: Vec<FrontLane> = active
                     .iter()
                     .map(|&c| {
@@ -556,46 +675,78 @@ impl<'a> System<'a> {
                         fl
                     })
                     .collect();
+                // Detach active DX100 lanes with a fresh per-channel
+                // request-buffer space snapshot. The snapshot point (after
+                // the previous shared stage, before any lane advances) is
+                // the same at every fan-out, so drain gating is
+                // deterministic.
+                let mut dls: Vec<DxLane> = active_dx
+                    .iter()
+                    .map(|&i| {
+                        let mut dl = self.dx_lanes[i].take().expect("dx lane in flight");
+                        dl.space.clear();
+                        dl.space
+                            .extend((0..self.mem.num_channels()).map(|ch| self.mem.space_in(ch)));
+                        dl
+                    })
+                    .collect();
                 let groups = fan.min(fls.len()).max(1);
                 match crew {
-                    Some(crew) if groups > 1 => {
-                        // Jobs ship to other threads, so they carry a flag
-                        // snapshot (identical values to the inline read).
-                        // Contiguous groups; grouping never affects
-                        // results (lanes share nothing), only balance.
-                        let flags = Arc::new(self.ready.clone());
+                    Some(crew) if groups > 1 || !dls.is_empty() => {
+                        // Jobs ship to other threads, so front jobs carry a
+                        // flag snapshot (identical values to the inline
+                        // read). Contiguous groups; grouping never affects
+                        // results (lanes share nothing), only balance. The
+                        // DX100 lanes ride as one extra job, overlapping
+                        // the accelerator model with the core lanes.
                         let total = fls.len();
                         let base = total / groups;
                         let extra = total % groups;
                         let mut it = fls.into_iter();
-                        let jobs: Vec<SimJob> = (0..groups)
-                            .map(|g| {
+                        let mut jobs: Vec<SimJob> = Vec::with_capacity(groups + 1);
+                        if total > 0 {
+                            let flags = Arc::new(self.ready.clone());
+                            jobs.extend((0..groups).map(|g| {
                                 let take = base + usize::from(g < extra);
                                 SimJob::Front(FrontJob {
                                     lanes: it.by_ref().take(take).collect(),
                                     t_end,
                                     flags: Arc::clone(&flags),
                                 })
-                            })
-                            .collect();
-                        fls = crew
-                            .dispatch(jobs)
-                            .into_iter()
-                            .flat_map(|j| match j {
-                                SimJob::Front(fj) => fj.lanes,
+                            }));
+                        }
+                        if !dls.is_empty() {
+                            jobs.push(SimJob::Dx(DxJob {
+                                lanes: std::mem::take(&mut dls),
+                                t_end,
+                            }));
+                        }
+                        fls = Vec::with_capacity(total);
+                        for j in crew.dispatch(jobs) {
+                            match j {
+                                SimJob::Front(fj) => fls.extend(fj.lanes),
+                                SimJob::Dx(dj) => dls = dj.lanes,
                                 SimJob::Channels(_) => unreachable!("channel job in front stage"),
-                            })
-                            .collect();
+                            }
+                        }
                     }
                     _ => {
                         // Inline: lanes read the live flag board directly
                         // (no snapshot allocation on the serial path).
-                        for fl in &mut fls {
-                            fl.advance(t_end, &self.ready);
+                        {
+                            let _r = regions::scope("front_lanes");
+                            for fl in &mut fls {
+                                fl.advance(t_end, &self.ready);
+                            }
+                        }
+                        let _r = regions::scope("dx100_lane");
+                        for dl in &mut dls {
+                            dl.advance(t_end);
                         }
                     }
                 }
                 // Merge lanes back and collect their deferred actions.
+                let _r = regions::scope("merge");
                 for mut fl in fls {
                     let idx = fl.idx;
                     self.hier.put_lane(idx, fl.lane.take().expect("lane caches"));
@@ -607,22 +758,37 @@ impl<'a> System<'a> {
                             time: a.time,
                             core: idx,
                             seq: seq as u64,
-                            kind: a.kind,
+                            kind: RoundKind::Core(a.kind),
+                        });
+                    }
+                }
+                for mut dl in dls {
+                    let idx = dl.idx;
+                    self.end_time = self.end_time.max(dl.last_time);
+                    let acts = std::mem::take(&mut dl.actions);
+                    self.dx_lanes[idx] = Some(dl);
+                    for (seq, a) in acts.into_iter().enumerate() {
+                        actions.push(RoundAction {
+                            time: a.time,
+                            core: ncores + idx,
+                            seq: seq as u64,
+                            kind: RoundKind::Dx(a.kind),
                         });
                     }
                 }
             }
             let events_due = matches!(self.queue.peek_time(), Some(h) if h < t_end);
-            if active.is_empty() && actions.is_empty() && !events_due {
+            if active.is_empty() && active_dx.is_empty() && actions.is_empty() && !events_due {
                 break;
             }
             // Shared stage: merge the round's (sorted) lane actions with
             // the LIVE shared event queue in time order. Events pushed
-            // while the stage runs (MMIO timers, channel activations, DX100
-            // self-wakes) join the merge at their correct position, exactly
-            // like the pre-staged single-heap loop; on a time tie, events
-            // apply first (their effects are causes the same-time actions
+            // while the stage runs (MMIO timers, channel activations)
+            // join the merge at their correct position, exactly like the
+            // pre-staged single-heap loop; on a time tie, events apply
+            // first (their effects are causes the same-time actions
             // settle against).
+            let _r = regions::scope("shared_stage");
             actions.sort_unstable_by_key(|a| (a.time, a.core, a.seq));
             let mut ai = 0;
             loop {
@@ -646,7 +812,10 @@ impl<'a> System<'a> {
                 } else {
                     let a = actions[ai];
                     ai += 1;
-                    self.apply_action(a.time, a.core, a.kind);
+                    match a.kind {
+                        RoundKind::Core(k) => self.apply_action(a.time, a.core, k),
+                        RoundKind::Dx(k) => self.apply_dx_action(a.time, a.core - ncores, k),
+                    }
                 }
             }
         }
@@ -662,6 +831,7 @@ impl<'a> System<'a> {
         fan: usize,
     ) {
         let Some(chans) = detached.take() else {
+            let _r = regions::scope("channel_crews");
             for ch in 0..self.mem.num_channels() {
                 let adv = self.mem.advance_channel(ch, t_end);
                 self.absorb(adv);
@@ -697,6 +867,7 @@ impl<'a> System<'a> {
         }
         // Deterministic merge: channel-index order, exactly like the
         // serial loop.
+        let _r = regions::scope("merge");
         advs.sort_unstable_by_key(|a| a.index);
         for adv in advs {
             self.mem.sync_channel(&adv);
@@ -724,6 +895,11 @@ impl<'a> System<'a> {
                 next = Some(next.map_or(h, |n| n.min(h)));
             }
         }
+        for dl in &self.dx_lanes {
+            if let Some(h) = dl.as_ref().expect("dx lane in flight").queue.peek_time() {
+                next = Some(next.map_or(h, |n| n.min(h)));
+            }
+        }
         if let Some(b) = self.mem.next_channel_time() {
             next = Some(next.map_or(b, |n| n.min(b)));
         }
@@ -734,8 +910,8 @@ impl<'a> System<'a> {
         for c in 0..self.lanes.len() {
             self.wake_lane(c, 0);
         }
-        for i in 0..self.dx.len() {
-            self.queue.push(0, Event::Dx100Wake(i));
+        for i in 0..self.dx_lanes.len() {
+            self.wake_dx_lane(i, 0);
         }
         // Quantum bound: any channel activation at t >= quantum start
         // completes at or after the quantum end, so front-end and channel
@@ -790,9 +966,14 @@ impl<'a> System<'a> {
                 .iter()
                 .map(|l| &l.as_ref().expect("front lane in flight").core)
         };
+        let dx_stats: Vec<Dx100Stats> = self
+            .dx_lanes
+            .iter()
+            .map(|d| d.as_ref().expect("dx lane in flight").timing.stats.clone())
+            .collect();
         let cycles = cores()
             .map(|c| c.stats.finish_time)
-            .chain(self.dx.iter().map(|d| d.stats.finish_time))
+            .chain(dx_stats.iter().map(|d| d.finish_time))
             .max()
             .unwrap_or(self.end_time)
             .max(1);
@@ -806,7 +987,12 @@ impl<'a> System<'a> {
             .iter()
             .map(|l| l.as_ref().expect("front lane in flight").events)
             .sum();
-        let front_events = lane_events + self.shared_events;
+        let dx_events: u64 = self
+            .dx_lanes
+            .iter()
+            .map(|d| d.as_ref().expect("dx lane in flight").events)
+            .sum();
+        let front_events = lane_events + dx_events + self.shared_events;
         let dram = self.mem.stats();
         RunStats {
             kind,
@@ -821,7 +1007,7 @@ impl<'a> System<'a> {
             dram_reads: dram.reads,
             dram_writes: dram.writes,
             dram_bytes: dram.bytes,
-            dx: self.dx.iter().map(|d| d.stats.clone()).collect(),
+            dx: dx_stats,
             front_events,
             channel_events: self.channel_events,
             events: front_events + self.channel_events,

@@ -30,4 +30,7 @@ pub use functional::{Dx100Functional, ExecError, InstrTrace};
 pub use isa::{DType, Instruction, Op, Opcode, NO_TILE};
 pub use mem_image::MemImage;
 pub use scratchpad::Scratchpad;
-pub use timing::{Dx100Env, Dx100Program, Dx100Stats, Dx100Timing, TimedInstr};
+pub use timing::{
+    Dx100Env, Dx100Program, Dx100Stats, Dx100Timing, DxAction, DxActionKind, DxFollowUp,
+    DxWriteBack, TimedInstr,
+};

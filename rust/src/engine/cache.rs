@@ -17,10 +17,12 @@
 //!   safe default when results depend on the code itself;
 //! * the **system-relevant** configuration fingerprint
 //!   ([`system_fingerprint`]): the full [`SystemConfig::fingerprint`] for
-//!   DX100 cells, and [`SystemConfig::fingerprint_sans_dx100`] for
-//!   baseline/DMP cells, which never read the `dx100.*` knobs — so a
-//!   `dx100.*` sweep reuses one cached baseline result across all its
-//!   points instead of re-simulating it per point;
+//!   DX100 cells, [`SystemConfig::fingerprint_sans_dx100`] for DMP cells
+//!   (which never read the `dx100.*` knobs), and
+//!   [`SystemConfig::fingerprint_sans_dx100_dmp`] for baseline cells
+//!   (which never read `dmp.*` either) — so a `dx100.*` sweep reuses one
+//!   cached baseline/DMP result across all its points instead of
+//!   re-simulating it per point;
 //! * the system kind (baseline / dmp / dx100);
 //! * the workload fingerprint: IR program structure, register file,
 //!   array table, initial memory image content, and cache-warming flag —
@@ -162,18 +164,23 @@ pub fn workload_fingerprint(w: &WorkloadSpec) -> u64 {
 
 /// The configuration fingerprint that keys cache entries and within-plan
 /// dedup for `kind`: the full [`SystemConfig::fingerprint`] for DX100,
-/// and [`SystemConfig::fingerprint_sans_dx100`] for the CPU-only systems,
-/// which never read the accelerator knobs.
+/// [`SystemConfig::fingerprint_sans_dx100`] for DMP (which never reads
+/// the accelerator knobs), and [`SystemConfig::fingerprint_sans_dx100_dmp`]
+/// for the baseline (which additionally never reads the prefetcher
+/// knobs) — so a `dx100.*` sweep reuses one cached baseline/DMP result
+/// per point, and a `dmp.*` sweep reuses one cached baseline result.
 ///
 /// Narrowing a key is only safe when the excluded knobs are provably
 /// unread — a wrong exclusion silently replays stale results.
-/// `tests/per_system_fingerprint.rs` backs this policy with an A/B check:
+/// `tests/per_system_fingerprint.rs` backs this policy with A/B checks:
 /// baseline and DMP `RunStats` must be bit-identical across a config pair
-/// that differs in every `dx100.*` knob.
+/// that differs in every `dx100.*` knob, and baseline `RunStats` across a
+/// pair that differs in every `dmp.*` knob.
 pub fn system_fingerprint(cfg: &SystemConfig, kind: SystemKind) -> u64 {
     match kind {
         SystemKind::Dx100 => cfg.fingerprint(),
-        SystemKind::Baseline | SystemKind::Dmp => cfg.fingerprint_sans_dx100(),
+        SystemKind::Dmp => cfg.fingerprint_sans_dx100(),
+        SystemKind::Baseline => cfg.fingerprint_sans_dx100_dmp(),
     }
 }
 

@@ -19,6 +19,7 @@
 use super::SweepResult;
 use crate::coordinator::RunStats;
 use crate::metrics::Comparison;
+use crate::util::regions;
 use crate::workloads::Scale;
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -390,6 +391,9 @@ impl Harness {
     /// Start a bench: prints the `== title ==` banner and the clock.
     pub fn new(name: &'static str, title: &str) -> Self {
         println!("== {title} ==");
+        // Each BENCH_*.json profiles exactly its own run, even when one
+        // process hosts several harnesses (tests do).
+        regions::reset();
         Harness {
             name,
             title: title.to_string(),
@@ -529,8 +533,30 @@ impl Harness {
                 sw.pool_workers, sw.cells_on_workers, sw.cells_on_caller,
             );
         }
+        let profile = if regions::enabled() {
+            Some(regions::snapshot())
+        } else {
+            None
+        };
+        if let Some(regs) = &profile {
+            // One line per region: wall seconds, share of bench wall time,
+            // and entry count. Shares can sum past 100%: regions run on
+            // pool workers concurrently and nested times are inclusive.
+            for r in regs {
+                println!(
+                    "profile: {:<13} {:>9.3}s ({:>5.1}% of wall) | {} calls",
+                    r.name,
+                    r.seconds,
+                    100.0 * r.seconds / wall.max(1e-9),
+                    r.calls,
+                );
+            }
+            if regs.is_empty() {
+                println!("profile: no regions entered (run too small?)");
+            }
+        }
         let path = self.json_path();
-        let doc = self.into_json(wall);
+        let doc = self.into_json(wall, profile);
         match std::fs::write(&path, doc.render()) {
             Ok(()) => println!("json: {}", path.display()),
             Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
@@ -547,7 +573,7 @@ impl Harness {
         PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
     }
 
-    fn into_json(self, wall: f64) -> Json {
+    fn into_json(self, wall: f64, profile: Option<Vec<regions::RegionStat>>) -> Json {
         let shards = self.shards();
         let eps = if self.events > 0 {
             Json::Num(self.events as f64 / wall.max(1e-9))
@@ -616,6 +642,26 @@ impl Harness {
                     ("hits".into(), Json::UInt(sw.cache_hits as u64)),
                     ("misses".into(), Json::UInt(sw.cache_misses as u64)),
                 ]),
+            ));
+        }
+        if let Some(regs) = profile {
+            // Present only under DX100_PROFILE=1 (bench_check --require-profile
+            // gates on it in CI). Host wall times: never merged into rows.
+            obj.push((
+                "profile".into(),
+                Json::Obj(
+                    regs.into_iter()
+                        .map(|r| {
+                            (
+                                r.name.to_string(),
+                                Json::Obj(vec![
+                                    ("seconds".into(), Json::Num(r.seconds)),
+                                    ("calls".into(), Json::UInt(r.calls)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
             ));
         }
         obj.extend([

@@ -11,20 +11,23 @@
 //!   over borrowed workloads. All cells across every config point feed one
 //!   worker pool — there is no barrier between config points, so a slow
 //!   cell of point 0 overlaps with point 3's work.
-//! * Compilation is staged: the config-independent **front end**
+//! * Compilation is staged: the config-light **front end**
 //!   ([`crate::compiler::frontend`] — analysis + the sequential
-//!   interpretation) runs **exactly once per workload** for the whole
-//!   sweep, and the DX100 **specialization**
-//!   ([`crate::compiler::specialize`]) runs once per (workload,
-//!   [`SystemConfig::compile_fingerprint`]) — config points that agree on
-//!   the compiler-relevant knobs (`dx100.*`, `core.num_cores`) share one
-//!   specialization.
+//!   interpretation) runs **once per (workload,
+//!   [`SystemConfig::dmp_fingerprint`])** for the whole sweep — every
+//!   non-prefetcher sweep shares one per workload — and the DX100
+//!   **specialization** ([`crate::compiler::specialize`]) runs once per
+//!   (workload, [`SystemConfig::compile_fingerprint`]) — config points
+//!   that agree on the compiler-relevant knobs (`dx100.*`,
+//!   `core.num_cores`, `dmp.*`) share one specialization.
 //! * Cells whose **system-relevant** configuration fingerprints collide
 //!   (identical simulations) execute once and share the result within the
-//!   plan. Baseline/DMP cells key on
-//!   [`SystemConfig::fingerprint_sans_dx100`] — they never read the
-//!   `dx100.*` knobs — so an accelerator-knob sweep simulates its CPU-only
-//!   endpoints once, not once per point ([`cache::system_fingerprint`]).
+//!   plan. DMP cells key on [`SystemConfig::fingerprint_sans_dx100`] —
+//!   they never read the `dx100.*` knobs — and baseline cells on
+//!   [`SystemConfig::fingerprint_sans_dx100_dmp`] (no `dmp.*` reads
+//!   either), so an accelerator- or prefetcher-knob sweep simulates its
+//!   CPU-only endpoints once, not once per point
+//!   ([`cache::system_fingerprint`]).
 //! * [`cache`] persists `RunStats` keyed by (config, workload, system)
 //!   fingerprints under `target/dx100-cache/`, so unchanged cells are
 //!   skipped across bench invocations (`DX100_CACHE=0` disables).
@@ -333,8 +336,9 @@ pub fn execute_sweep_sharded(
     };
 
     // System-relevant config fingerprints: the full config fingerprint
-    // for DX100 cells, the `dx100.*`-excluding one for baseline/DMP
-    // cells ([`cache::system_fingerprint`]), hashed once per (point,
+    // for DX100 cells, the `dx100.*`-excluding one for DMP cells, the
+    // `dx100.*`+`dmp.*`-excluding one for baseline cells
+    // ([`cache::system_fingerprint`]), hashed once per (point,
     // system) and fanned out per cell. They key both the persisted cache
     // cells and the within-plan dedup, so CPU-only cells at config
     // points differing only in accelerator knobs (e.g. every non-default
@@ -384,21 +388,24 @@ pub fn execute_sweep_sharded(
     }
 
     // Compile exactly what the canonical cells need: one front end per
-    // workload, one DX100 specialization per (compile-fingerprint,
-    // workload). Specializations sit behind `Arc` so cell jobs on the
-    // worker pool share them without copies.
+    // (workload, dmp-fingerprint) — the front end bakes DMP hints into
+    // its interpretation, so points that agree on `dmp.*` (every
+    // non-prefetcher sweep) share one — and one DX100 specialization per
+    // (compile-fingerprint, workload). Specializations sit behind `Arc`
+    // so cell jobs on the worker pool share them without copies.
     let compile_fp: Vec<u64> = plan
         .points
         .iter()
         .map(|p| p.cfg.compile_fingerprint())
         .collect();
-    let mut fronts: HashMap<usize, Frontend> = HashMap::new();
+    let dmp_fp: Vec<u64> = plan.points.iter().map(|p| p.cfg.dmp_fingerprint()).collect();
+    let mut fronts: HashMap<(usize, u64), Frontend> = HashMap::new();
     let mut specialized: HashMap<(u64, usize), Arc<CompiledWorkload>> = HashMap::new();
     for &i in &canonical {
         let cell = cells[i];
         let w = &plan.workloads[cell.workload];
-        let fe = fronts.entry(cell.workload).or_insert_with(|| {
-            frontend(&w.program, &w.mem)
+        let fe = fronts.entry((cell.workload, dmp_fp[cell.point])).or_insert_with(|| {
+            frontend(&w.program, &w.mem, plan.points[cell.point].cfg.dmp.clone())
                 .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name))
         });
         let skey = (compile_fp[cell.point], cell.workload);

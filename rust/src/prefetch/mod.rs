@@ -29,7 +29,11 @@ pub const DEFAULT_DEPTH: usize = 16;
 pub const TRAIN_ITERS: usize = 32;
 
 /// Configuration of the modeled indirect prefetcher.
-#[derive(Clone, Debug)]
+///
+/// Part of [`crate::config::SystemConfig`] (the `dmp` section), so the
+/// knobs are sweepable and fingerprinted like every other system
+/// parameter; only the DMP system's hint tables read them.
+#[derive(Clone, Debug, PartialEq)]
 pub struct DmpConfig {
     /// Prefetch distance in loop iterations.
     pub depth: usize,

@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic PRNG, math helpers, formatting.
+//! Small shared utilities: deterministic PRNG, math helpers, formatting,
+//! and the region-level wall-clock profiler.
 
+pub mod regions;
 pub mod rng;
 
 pub use rng::Rng;

@@ -1,0 +1,292 @@
+//! Region-level wall-clock profiler for the simulator hot path.
+//!
+//! The staged quantum loop has five phases whose relative cost decides
+//! every subsequent performance change: the parallel front lanes, the
+//! DX100 lane, the serial shared stage, the channel crews, and the merge
+//! steps. This tracker attributes *wall* time to named regions so
+//! `BENCH_*.json` says where a bench actually spent it
+//! (`docs/CONCURRENCY.md` names the regions; the idiom follows sp1's
+//! cycle tracker: named start/end scopes, nesting allowed, totals
+//! reported per run).
+//!
+//! Profiling is off by default and gated by `DX100_PROFILE=1`. When off,
+//! [`begin`]/[`end`]/[`scope`] reduce to one relaxed atomic load — no
+//! clock reads, no thread-local touch, no allocation — so the hot path
+//! pays nothing (`tests/profiler_overhead.rs` pins this down to zero
+//! allocations). When on, each region entry records `Instant::now()` on a
+//! thread-local stack and each exit folds the elapsed nanoseconds into a
+//! process-wide total; times are **inclusive** (a nested region's time is
+//! also counted by its enclosing region).
+//!
+//! Wall time is host-dependent, so region totals deliberately never touch
+//! `RunStats` — stats stay a pure function of (config, workload, system)
+//! and cache replays stay bit-identical. The harness reads [`snapshot`]
+//! after a bench and emits the totals as the `profile` object.
+
+use super::WarnOnce;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+const UNRESOLVED: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Tri-state so the `DX100_PROFILE` parse happens once, lazily, and
+/// [`set_enabled`] can override it for tests and harness runs.
+static STATE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+static WARN_PROFILE: WarnOnce = WarnOnce::new();
+
+/// Per-region accumulated totals: `(name, nanoseconds, entries)`. A plain
+/// linear-scan vector under a mutex — there are a handful of regions and
+/// one lock per region *exit*, not per simulated event.
+static TOTALS: Mutex<Vec<(&'static str, u128, u64)>> = Mutex::new(Vec::new());
+
+thread_local! {
+    /// Open-region stack of the current thread: `(name, entry instant)`.
+    static OPEN: RefCell<Vec<(&'static str, Instant)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Whether region profiling is on (`DX100_PROFILE=1`, or a prior
+/// [`set_enabled`] call). The environment is consulted once; a malformed
+/// value warns once and profiling stays off.
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = match std::env::var("DX100_PROFILE") {
+                Err(_) => false,
+                Ok(raw) => match raw.trim() {
+                    "1" => true,
+                    "0" | "" => false,
+                    _ => {
+                        WARN_PROFILE.warn("DX100_PROFILE", &raw, "0 or 1");
+                        false
+                    }
+                },
+            };
+            set_enabled(on);
+            on
+        }
+    }
+}
+
+/// Force profiling on or off, overriding the environment. Tests and the
+/// harness use this; simulation code should only ever read [`enabled`].
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+fn lock_totals() -> std::sync::MutexGuard<'static, Vec<(&'static str, u128, u64)>> {
+    // A panicking test must not poison profiling for the rest of the
+    // process; the totals are plain counters, always valid.
+    TOTALS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn record(name: &'static str, nanos: u128) {
+    let mut totals = lock_totals();
+    match totals.iter_mut().find(|(n, _, _)| *n == name) {
+        Some((_, ns, calls)) => {
+            *ns += nanos;
+            *calls += 1;
+        }
+        None => totals.push((name, nanos, 1)),
+    }
+}
+
+/// Enter the named region on this thread. No-op when profiling is off.
+pub fn begin(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    OPEN.with(|open| open.borrow_mut().push((name, Instant::now())));
+}
+
+/// Exit the named region on this thread, folding its elapsed time into
+/// the process-wide totals. Tolerant of unbalanced use: an `end` with no
+/// matching `begin` is ignored, and an `end` that skips over deeper
+/// still-open regions closes them implicitly (each charged to its own
+/// name), so a missed exit can never corrupt the totals or panic.
+pub fn end(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    OPEN.with(|open| {
+        let mut open = open.borrow_mut();
+        let Some(at) = open.iter().rposition(|(n, _)| *n == name) else {
+            return;
+        };
+        for (n, t0) in open.drain(at..).rev() {
+            record(n, t0.elapsed().as_nanos());
+        }
+    });
+}
+
+/// RAII region guard: [`begin`] now, [`end`] on drop.
+///
+/// The guard arms itself from the enable state at construction, so a
+/// toggle between entry and exit can never record a half-open region.
+#[must_use = "the region closes when this guard drops"]
+pub struct Scope {
+    name: &'static str,
+    armed: bool,
+}
+
+/// Enter `name`, returning a guard that exits it when dropped.
+pub fn scope(name: &'static str) -> Scope {
+    let armed = enabled();
+    if armed {
+        OPEN.with(|open| open.borrow_mut().push((name, Instant::now())));
+    }
+    Scope { name, armed }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        if self.armed {
+            end(self.name);
+        }
+    }
+}
+
+/// One region's accumulated totals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegionStat {
+    /// Region name as passed to [`begin`]/[`scope`].
+    pub name: &'static str,
+    /// Total wall time spent inside the region (inclusive of nesting).
+    pub seconds: f64,
+    /// Number of times the region was entered.
+    pub calls: u64,
+}
+
+/// The current totals, sorted by region name for stable reporting.
+pub fn snapshot() -> Vec<RegionStat> {
+    let totals = lock_totals();
+    let mut out: Vec<RegionStat> = totals
+        .iter()
+        .map(|&(name, ns, calls)| RegionStat {
+            name,
+            seconds: ns as f64 / 1e9,
+            calls,
+        })
+        .collect();
+    out.sort_by_key(|r| r.name);
+    out
+}
+
+/// Clear all accumulated totals (the harness calls this at bench start so
+/// each `BENCH_*.json` profiles exactly its own run).
+pub fn reset() {
+    lock_totals().clear();
+}
+
+/// Serializes tests that flip the process-global enable state or read the
+/// process-global totals (shared with the harness's profile tests).
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        g
+    }
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        begin("front_lanes");
+        end("front_lanes");
+        let _s = scope("merge");
+        drop(_s);
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn nested_scopes_accumulate_inclusively() {
+        let _g = guard();
+        set_enabled(true);
+        {
+            let _outer = scope("outer");
+            {
+                let _inner = scope("inner");
+            }
+            {
+                let _inner = scope("inner");
+            }
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let inner = snap.iter().find(|r| r.name == "inner").unwrap();
+        let outer = snap.iter().find(|r| r.name == "outer").unwrap();
+        assert_eq!(inner.calls, 2);
+        assert_eq!(outer.calls, 1);
+        // Inclusive timing: the outer region contains both inner entries.
+        assert!(outer.seconds >= inner.seconds);
+        assert!(snap.iter().all(|r| r.seconds >= 0.0));
+    }
+
+    #[test]
+    fn unbalanced_ends_are_tolerated() {
+        let _g = guard();
+        set_enabled(true);
+        // end() with nothing open: ignored.
+        end("nothing");
+        // A skipped inner end: closing the outer region implicitly closes
+        // (and charges) the inner one.
+        begin("outer");
+        begin("inner");
+        end("outer");
+        set_enabled(false);
+        let snap = snapshot();
+        assert!(snap.iter().all(|r| r.name != "nothing"));
+        assert_eq!(snap.iter().find(|r| r.name == "outer").unwrap().calls, 1);
+        assert_eq!(snap.iter().find(|r| r.name == "inner").unwrap().calls, 1);
+        // The stack is empty again: a fresh balanced pair still works.
+        begin_end_roundtrip();
+    }
+
+    fn begin_end_roundtrip() {
+        set_enabled(true);
+        begin("roundtrip");
+        end("roundtrip");
+        set_enabled(false);
+        assert_eq!(
+            snapshot().iter().find(|r| r.name == "roundtrip").unwrap().calls,
+            1
+        );
+    }
+
+    #[test]
+    fn reset_clears_totals() {
+        let _g = guard();
+        set_enabled(true);
+        begin("ephemeral");
+        end("ephemeral");
+        set_enabled(false);
+        assert!(!snapshot().is_empty());
+        reset();
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted() {
+        let _g = guard();
+        set_enabled(true);
+        for name in ["zeta", "alpha", "merge"] {
+            begin(name);
+            end(name);
+        }
+        set_enabled(false);
+        let names: Vec<&str> = snapshot().iter().map(|r| r.name).collect();
+        assert_eq!(names, vec!["alpha", "merge", "zeta"]);
+    }
+}

@@ -1,0 +1,84 @@
+//! End-to-end check of the harness's `profile` emission: a profiled run
+//! must land a `profile` object in `BENCH_*.json` covering all five phase
+//! regions of the staged quantum loop, and an unprofiled run must omit
+//! the key entirely (the CI gate `bench_check --require-profile` builds
+//! on exactly this contract).
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::harness::{Harness, Json};
+use dx100::util::regions;
+use dx100::workloads::micro;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// The five regions `docs/CONCURRENCY.md` names; `bench_check` requires
+/// the same set.
+const PHASE_REGIONS: [&str; 5] = [
+    "front_lanes",
+    "dx100_lane",
+    "shared_stage",
+    "channel_crews",
+    "merge",
+];
+
+/// Serializes the tests: they flip the process-global profiler state and
+/// share the `DX100_BENCH_DIR` environment variable.
+static PROFILE_LOCK: Mutex<()> = Mutex::new(());
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dx100-bench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::env::set_var("DX100_BENCH_DIR", &dir);
+    dir
+}
+
+fn run_bench(name: &'static str) -> Json {
+    let mut h = Harness::new(name, "profile emission smoke");
+    let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 31);
+    // A DX100 run exercises every phase region, including the detached
+    // accelerator lane.
+    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3()).run(&w);
+    h.run("gather", &rs);
+    h.finish();
+    let path = std::env::var("DX100_BENCH_DIR").map(PathBuf::from).unwrap();
+    let text = std::fs::read_to_string(path.join(format!("BENCH_{name}.json"))).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn profiled_bench_json_carries_all_phase_regions() {
+    let _g = PROFILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = bench_dir("on");
+    regions::set_enabled(true);
+    let doc = run_bench("profile_on");
+    regions::set_enabled(false);
+
+    let profile = doc.get("profile").expect("profiled run must emit profile");
+    for region in PHASE_REGIONS {
+        let stat = profile
+            .get(region)
+            .unwrap_or_else(|| panic!("profile missing phase region {region:?}"));
+        let secs = stat.get("seconds").and_then(Json::as_f64).unwrap();
+        assert!(secs.is_finite() && secs >= 0.0, "{region}: bad seconds");
+        let calls = stat.get("calls").and_then(Json::as_u64).unwrap();
+        assert!(calls >= 1, "{region}: no entries recorded");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unprofiled_bench_json_omits_profile() {
+    let _g = PROFILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = bench_dir("off");
+    regions::set_enabled(false);
+    let doc = run_bench("profile_off");
+    assert!(
+        doc.get("profile").is_none(),
+        "unprofiled run must omit the profile key"
+    );
+    // The rest of the schema is unaffected either way.
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("profile_off"));
+    assert!(doc.get("rows").and_then(Json::as_array).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -118,6 +118,36 @@ fn shard_count_clamps_to_channel_count() {
     }
 }
 
+#[test]
+fn stats_bit_identical_across_thread_shard_matrix() {
+    // The full (DX100_THREADS, DX100_SHARDS) ∈ {1,2,4}² matrix on every
+    // system kind: pool size and fan-out are pure execution hints, so all
+    // nine sweeps must return the (1,1) run's RunStats bit for bit. This
+    // covers the detached DX100 lane too — its deferred actions merge into
+    // the shared stage identically whether the lane advances inline
+    // (shards=1) or on a crew worker.
+    let points = [SweepPoint::new("", SystemConfig::table3_8core())];
+    let ws = [micro::gather_full(8192, micro::IndexPattern::UniformRandom, 25)];
+    let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
+    let reference = execute_sweep_sharded(&plan, 1, None, 1);
+    for threads in [1, 2, 4] {
+        for shards in [1, 2, 4] {
+            if (threads, shards) == (1, 1) {
+                continue;
+            }
+            let run = execute_sweep_sharded(&plan, threads, None, shards);
+            for (pa, pb) in reference.points.iter().zip(&run.points) {
+                for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
+                    assert_eq!(
+                        wa.runs, wb.runs,
+                        "stats diverged at threads={threads}, shards={shards}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
     let dir = std::env::temp_dir().join(format!("dx100-shard-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);

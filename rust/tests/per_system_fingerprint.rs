@@ -1,18 +1,23 @@
 //! A/B guard for the per-system relevant-knob fingerprints.
 //!
-//! Baseline/DMP cache and dedup keys exclude the `dx100.*` knobs
-//! (`SystemConfig::fingerprint_sans_dx100`, selected per system by
-//! `engine::cache::system_fingerprint`). That exclusion is only safe if
-//! no baseline/DMP code path reads those knobs; by inspection the sole
-//! route is `LaneEnv`'s scratchpad/MMIO latencies, which baseline/DMP
-//! instruction streams never consume. These tests back the inspection at
-//! runtime: a config pair differing in **every** `dx100.*` knob must
-//! produce bit-identical `RunStats` on the CPU-only systems, and the
-//! sweep engine must dedupe / cache-hit accordingly. If a future change
-//! makes a CPU-only path read an accelerator knob, the bit-identity
-//! assertions here fail before the narrowed key can poison the cache.
+//! Baseline/DMP cache and dedup keys exclude the `dx100.*` knobs, and the
+//! baseline key additionally excludes `dmp.*`
+//! (`SystemConfig::fingerprint_sans_dx100` /
+//! `fingerprint_sans_dx100_dmp`, selected per system by
+//! `engine::cache::system_fingerprint`). Those exclusions are only safe
+//! if no excluded knob is read on the keyed system's code path; by
+//! inspection the sole `dx100.*` route is `LaneEnv`'s scratchpad/MMIO
+//! latencies, which baseline/DMP instruction streams never consume, and
+//! the sole `dmp.*` route is the compiled hint tables, which only the DMP
+//! variant consults. These tests back the inspection at runtime: a config
+//! pair differing in **every** excluded knob must produce bit-identical
+//! `RunStats` on the keyed systems, and the sweep engine must dedupe /
+//! cache-hit accordingly. If a future change makes a keyed path read an
+//! excluded knob, the bit-identity assertions here fail before the
+//! narrowed key can poison the cache.
 
 use dx100::config::{Dx100Config, SystemConfig};
+use dx100::prefetch::DmpConfig;
 use dx100::coordinator::{Experiment, SystemKind};
 use dx100::engine::cache::{system_fingerprint, ResultCache};
 use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint};
@@ -58,6 +63,17 @@ fn dx_warped() -> SystemConfig {
     cfg
 }
 
+/// `table3` with every `dmp.*` knob changed and nothing else. Same
+/// exhaustive-destructure rule as [`dx_warped`]: a new prefetcher knob
+/// must be varied here or fail to compile.
+fn dmp_warped() -> SystemConfig {
+    let mut cfg = SystemConfig::table3();
+    let DmpConfig { depth, train_iters } = &mut cfg.dmp;
+    *depth = 4;
+    *train_iters = 8;
+    cfg
+}
+
 fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
     let dir = std::env::temp_dir().join(format!("dx100-sysfp-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -80,6 +96,96 @@ fn cpu_fingerprints_collapse_across_dx_knobs_dx100s_must_not() {
         system_fingerprint(&warp, SystemKind::Dx100),
         "DX100 key must track dx100.* knobs"
     );
+}
+
+#[test]
+fn baseline_key_collapses_across_dmp_knobs_others_must_not() {
+    let base = SystemConfig::table3();
+    let warp = dmp_warped();
+    assert_eq!(
+        system_fingerprint(&base, SystemKind::Baseline),
+        system_fingerprint(&warp, SystemKind::Baseline),
+        "baseline key must ignore dmp.* knobs"
+    );
+    for kind in [SystemKind::Dmp, SystemKind::Dx100] {
+        assert_ne!(
+            system_fingerprint(&base, kind),
+            system_fingerprint(&warp, kind),
+            "{kind:?} key must track dmp.* knobs"
+        );
+    }
+}
+
+#[test]
+fn ab_baseline_stats_bit_identical_across_dmp_knobs() {
+    // Runtime half of the `dmp.*` exclusion: the baseline never consults
+    // the hint tables, so warping the prefetcher knobs must leave its
+    // stats bit-identical.
+    let base = SystemConfig::table3();
+    let warp = dmp_warped();
+    let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 0xAE);
+    let a = Experiment::new(SystemKind::Baseline, base).run(&w);
+    let b = Experiment::new(SystemKind::Baseline, warp).run(&w);
+    assert!(a.bw_util.is_finite() && a.row_hit_rate.is_finite());
+    assert!(a.occupancy.is_finite() && a.mpki.is_finite());
+    assert_eq!(a, b, "baseline stats must not depend on dmp.* knobs");
+}
+
+#[test]
+fn sweep_dedupes_baseline_across_dmp_only_points() {
+    let points = vec![
+        SweepPoint::new("base", SystemConfig::table3()),
+        SweepPoint::new("warp", dmp_warped()),
+    ];
+    let ws = vec![micro::gather_full(
+        2048,
+        micro::IndexPattern::UniformRandom,
+        0xAF,
+    )];
+    let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+    let plan = SweepPlan::new(&points, &ws, &systems);
+    let r = execute_sweep_with(&plan, 2, None);
+    assert_eq!(r.cells(), 6);
+    // Only the baseline of the warped point reuses the base point's run;
+    // DMP and DX100 both track the prefetcher knobs.
+    assert_eq!(r.deduped, 1);
+    let a = &r.points[0].workloads[0].runs[0];
+    let b = &r.points[1].workloads[0].runs[0];
+    assert_eq!(a.kind, SystemKind::Baseline);
+    assert_eq!(a, b, "deduped baseline runs must be shared");
+}
+
+#[test]
+fn cache_serves_baseline_across_dmp_only_configs() {
+    let (cache, dir) = temp_cache("dmp");
+    let ws = vec![micro::gather_full(
+        2048,
+        micro::IndexPattern::UniformRandom,
+        0xB0,
+    )];
+    let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+    let base_points = vec![SweepPoint::new("base", SystemConfig::table3())];
+    let cold = execute_sweep_with(
+        &SweepPlan::new(&base_points, &ws, &systems),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(cold.cache_hits, 0);
+
+    let warp_points = vec![SweepPoint::new("warp", dmp_warped())];
+    let warm = execute_sweep_with(
+        &SweepPlan::new(&warp_points, &ws, &systems),
+        1,
+        Some(&cache),
+    );
+    assert_eq!(warm.cache_hits, 1, "baseline must replay");
+    assert_eq!(warm.cache_misses, 2, "DMP + DX100 must re-simulate");
+    assert_eq!(
+        &cold.points[0].workloads[0].runs[0],
+        &warm.points[0].workloads[0].runs[0]
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,111 @@
+//! Zero-overhead guard for the region profiler when it is off.
+//!
+//! `util::regions` instruments the simulator's hottest loops (front
+//! lanes, DX100 lane, shared stage, channel crews, merge), so the
+//! `DX100_PROFILE=0` path must cost nothing measurable. This test pins
+//! the strongest cheap proxy available: **zero heap allocations** across
+//! many begin/end and scope pairs while profiling is disabled. A counting
+//! global allocator makes any accidental allocation (e.g. a thread-local
+//! Vec growing, a String formatting) a hard failure rather than a silent
+//! per-event tax.
+//!
+//! The test binary is its own process (integration test), so installing a
+//! `#[global_allocator]` here cannot affect the library's other tests.
+//! Allocations are counted **per thread** (const-initialized TLS cell, no
+//! destructor, so the counter itself never allocates): the harness runs
+//! tests on sibling threads whose incidental allocations must not bleed
+//! into another test's measurement window.
+
+use dx100::util::regions;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper that counts this thread's allocations.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        LOCAL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LOCAL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn this_thread_allocs() -> u64 {
+    LOCAL_ALLOCS.with(Cell::get)
+}
+
+/// Serializes the two tests: they flip the process-global enable state.
+static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn disabled_profiler_allocates_nothing_on_the_hot_path() {
+    let _g = ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Resolve the tri-state and warm every code path once (the first
+    // enabled() call may read the environment, which allocates).
+    regions::set_enabled(false);
+    regions::reset();
+    regions::begin("front_lanes");
+    regions::end("front_lanes");
+    drop(regions::scope("merge"));
+
+    let before = this_thread_allocs();
+    for _ in 0..100_000 {
+        regions::begin("front_lanes");
+        regions::end("front_lanes");
+        let _s = regions::scope("shared_stage");
+    }
+    let after = this_thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "disabled-profiler hot path must not allocate"
+    );
+    // And it recorded nothing.
+    assert!(regions::snapshot().is_empty());
+}
+
+#[test]
+fn enabled_profiler_steady_state_does_not_allocate_per_scope() {
+    let _g = ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Not a zero-allocation claim overall (the totals vector and the
+    // thread-local open-scope stack grow once), but steady-state entries
+    // must not allocate per call: the per-exit cost is a clock read plus
+    // a mutex'd counter update.
+    regions::set_enabled(true);
+    regions::reset();
+    for _ in 0..64 {
+        let _s = regions::scope("channel_crews");
+    }
+    let before = this_thread_allocs();
+    for _ in 0..10_000 {
+        let _s = regions::scope("channel_crews");
+    }
+    let after = this_thread_allocs();
+    regions::set_enabled(false);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state profiling must not allocate per scope"
+    );
+    let snap = regions::snapshot();
+    let crews = snap.iter().find(|r| r.name == "channel_crews").unwrap();
+    assert_eq!(crews.calls, 64 + 10_000);
+    regions::reset();
+}

@@ -6,15 +6,20 @@
 //!
 //! This lives in its own test binary on purpose: the hooks are
 //! process-wide counters, and any concurrently-running test that compiles
-//! a workload would make exact assertions flaky.
+//! a workload would make exact assertions flaky. Tests within this binary
+//! serialize on [`HOOK_LOCK`] for the same reason.
 
 use dx100::compiler::{compile_invocations, specialize_invocations};
 use dx100::config::SystemConfig;
 use dx100::engine::Sweep;
 use dx100::workloads::micro;
+use std::sync::Mutex;
+
+static HOOK_LOCK: Mutex<()> = Mutex::new(());
 
 #[test]
 fn sweep_compiles_once_per_workload_and_specializes_per_fingerprint() {
+    let _g = HOOK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     // Three config points: two agree on every compiler-relevant knob
     // (they differ only in the DRAM request buffer, which codegen never
     // reads) and one changes the tile size (compiler-relevant).
@@ -60,4 +65,32 @@ fn sweep_compiles_once_per_workload_and_specializes_per_fingerprint() {
     let r2 = sweep.execute_with(1, None);
     assert_eq!(r2.compiles, 2);
     assert_eq!(compile_invocations() - compiles_before, 4);
+}
+
+#[test]
+fn dmp_points_split_front_end_compiles() {
+    let _g = HOOK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // The front end bakes DMP hints into its interpretation, so two
+    // points that differ in `dmp.*` cannot share one: the engine keys
+    // front ends on (workload, dmp fingerprint).
+    let mut warped = SystemConfig::table3();
+    warped.dmp.depth = 4;
+    let sweep = Sweep::new()
+        .point("base", SystemConfig::table3())
+        .point("dmp4", warped)
+        .workload(micro::gather_full(
+            4096,
+            micro::IndexPattern::UniformRandom,
+            33,
+        ));
+    let before = compile_invocations();
+    let r = sweep.execute_with(2, None);
+    let compiles = compile_invocations() - before;
+    // 2 points x 1 workload x 2 systems (baseline + DX100) = 4 cells; the
+    // baseline pair dedupes (its key ignores dmp.*), but each dmp
+    // fingerprint gets its own front end for the DX100 cells.
+    assert_eq!(r.cells(), 4);
+    assert_eq!(compiles, 2, "expected one front end per dmp fingerprint");
+    assert_eq!(r.compiles, 2);
+    assert_eq!(r.deduped, 1, "baseline must dedupe across dmp.* points");
 }
