@@ -12,7 +12,7 @@
 //! cells replay from the persisted result cache.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::engine::{PointResult, Sweep};
+use dx100::engine::{ExecOptions, PointResult, Sweep};
 use dx100::metrics::{comparisons_at, Comparison};
 use dx100::workloads::micro::{self, AllMissOrder};
 
@@ -68,7 +68,7 @@ fn main() {
         cfg.dram.request_buffer = buf;
         sweep = sweep.point(format!("buf{buf}"), cfg);
     }
-    let r = sweep.execute();
+    let r = sweep.execute(&ExecOptions::new());
     h.sweep(&r);
     let mut points = r.points.into_iter();
 

@@ -5,7 +5,7 @@
 //! reruns replay from the persisted result cache.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::engine::Sweep;
+use dx100::engine::{ExecOptions, Sweep};
 use dx100::metrics::comparisons_at;
 use dx100::util::geomean;
 use dx100::workloads;
@@ -16,7 +16,7 @@ fn main() {
         .with_dmp()
         .point("", SystemConfig::table3())
         .workloads(workloads::all(h.scale()))
-        .execute();
+        .execute(&ExecOptions::new());
     h.sweep(&r);
     let comps = comparisons_at(r.points.into_iter().next().expect("one point"));
     h.line(&format!(

@@ -8,7 +8,7 @@
 //! (`DX100_CACHE=0` disables).
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::engine::Sweep;
+use dx100::engine::{ExecOptions, Sweep};
 use dx100::metrics::{comparisons_at, geomean_of};
 use dx100::workloads;
 
@@ -22,7 +22,7 @@ fn main() {
         cfg.dx100.tile_elems = tile;
         sweep = sweep.point(format!("tile{tile}"), cfg);
     }
-    let r = sweep.execute();
+    let r = sweep.execute(&ExecOptions::new());
     h.sweep(&r);
     for (point, tile) in r.points.into_iter().zip(TILES) {
         let comps = comparisons_at(point);

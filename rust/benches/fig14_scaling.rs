@@ -6,7 +6,7 @@
 //! the persisted cache on unchanged reruns.
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::engine::Sweep;
+use dx100::engine::{ExecOptions, Sweep};
 use dx100::metrics::{comparisons_at, geomean_of};
 use dx100::workloads;
 
@@ -23,7 +23,7 @@ fn main() {
         cfg.dx100.instances = *instances;
         sweep = sweep.point(*tag, cfg);
     }
-    let r = sweep.execute();
+    let r = sweep.execute(&ExecOptions::new());
     h.sweep(&r);
     for (point, (tag, name, _, _, paper)) in r.points.into_iter().zip(configs) {
         let comps = comparisons_at(point);

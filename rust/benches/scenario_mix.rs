@@ -1,0 +1,80 @@
+//! Multi-tenant mixes on one shared DX100: tenant pairs co-scheduled on
+//! disjoint core groups, sharing the accelerator, LLC, and DRAM, under
+//! every request-buffer arbitration policy.
+//!
+//! Where the figure benches evaluate workloads *solo*, this bench probes
+//! what the paper's shared-resource design implies but never measures:
+//! how much one tenant's indirection traffic costs another when both go
+//! through the same DX100. Per (mix, policy) it reports each tenant's
+//! slowdown vs its cached solo baseline, the row-hit-rate interference,
+//! and Jain's fairness index across the tenants.
+//!
+//! Tenant workloads come from the registry (paper kernels + generated
+//! scenarios), so solo baselines are served from the persisted result
+//! cache when enabled, and the mixes themselves are bit-identical across
+//! the `(DX100_THREADS, DX100_SHARDS)` matrix like every solo run.
+
+use dx100::config::SystemConfig;
+use dx100::engine::harness::Harness;
+use dx100::engine::mix::run_mix;
+use dx100::engine::ExecOptions;
+use dx100::workloads::mix::{ArbPolicy, MixSpec};
+use dx100::workloads::Registry;
+
+fn main() {
+    let mut h = Harness::new("scenario_mix", "Multi-tenant mixes on one shared DX100");
+    let reg = Registry::paper().with_synth();
+    let cfg = SystemConfig::table3();
+    let opts = ExecOptions::new();
+    // Three contention archetypes: bandwidth vs locality-skewed traffic,
+    // latency-bound chasing next to streaming gathers (phase-shifted so
+    // the chaser starts into a warm accelerator), and a paper kernel
+    // sharing with an atomic-RMW scenario.
+    let mixes = [
+        MixSpec::new()
+            .tenant("uni-gather", 4)
+            .tenant("zipf-gather", 4),
+        MixSpec::new()
+            .tenant("chase-gather", 4)
+            .tenant_at("uni-gather", 4, 1000),
+        MixSpec::new().tenant("CG", 4).tenant("hash-rmw", 4),
+    ];
+    h.line(&format!(
+        "{} tenant pairs x {} arbitration policies",
+        mixes.len(),
+        ArbPolicy::ALL.len()
+    ));
+    let mut worst_fairness = f64::INFINITY;
+    for (mi, mix) in mixes.iter().enumerate() {
+        h.line(&format!("-- mix {}: {}", mi, mix.label()));
+        for policy in ArbPolicy::ALL {
+            let r = run_mix(mix, &reg, &cfg, h.scale(), policy, &opts)
+                .expect("mix tenants come from the registry");
+            let key = format!("m{mi}_{}", policy.label());
+            h.line(&format!(
+                "   {:<4} fairness {:.3}  (solo cache: {} hits / {} misses)",
+                policy.label(),
+                r.fairness,
+                r.solo_cache_hits,
+                r.solo_cache_misses,
+            ));
+            for t in &r.tenants {
+                h.line(&format!(
+                    "        {:<14} x{} slowdown {:5.2}x  rbh interference {:+.3}",
+                    t.workload, t.cores, t.slowdown, t.row_hit_interference,
+                ));
+                h.metric(&format!("{key}_{}_slowdown", t.workload), t.slowdown);
+                h.metric(
+                    &format!("{key}_{}_rbh_interference", t.workload),
+                    t.row_hit_interference,
+                );
+            }
+            h.metric(&format!("{key}_fairness"), r.fairness);
+            worst_fairness = worst_fairness.min(r.fairness);
+            h.run(r.combined.workload, &r.combined);
+        }
+    }
+    h.metric("worst_fairness", worst_fairness);
+    h.paper("one DX100 serves multiple client cores' indirection streams (S4.1, S4.4)");
+    h.finish();
+}

@@ -13,7 +13,7 @@
 
 use dx100::config::SystemConfig;
 use dx100::engine::harness::Harness;
-use dx100::engine::Sweep;
+use dx100::engine::{ExecOptions, Sweep};
 use dx100::metrics::{comparisons_at, geomean_of, Comparison};
 use dx100::workloads::Registry;
 
@@ -38,7 +38,7 @@ fn main() {
         .with_dmp()
         .point("", SystemConfig::table3())
         .workloads(reg.build_all(h.scale()))
-        .execute();
+        .execute(&ExecOptions::new());
     h.sweep(&r);
     let comps = comparisons_at(r.points.remove(0));
     h.line("scenario          speedup   vs DMP   rbh base->dx100");

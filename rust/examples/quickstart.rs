@@ -7,6 +7,7 @@
 
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::ExecOptions;
 use dx100::workloads::micro::{self, IndexPattern};
 
 fn main() {
@@ -16,8 +17,8 @@ fn main() {
     // C[i] = A[B[i]] over 64K random indices — the canonical bulk gather.
     let w = micro::gather_full(1 << 16, IndexPattern::UniformRandom, 42);
 
-    let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w);
-    let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w);
+    let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w, &ExecOptions::new());
+    let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w, &ExecOptions::new());
 
     println!("baseline : {:>10} cycles, BW {:>5.1}%, RBH {:>5.1}%, occupancy {:>5.1}",
         base.cycles, base.bw_util * 100.0, base.row_hit_rate * 100.0, base.occupancy);

@@ -677,7 +677,15 @@ pub fn specialize(
     );
     let mut mem = init.clone();
     // Synthetic iota array for Iv(0)-as-value (compiler-materialized).
-    let iota_base = ARRAY_BASE + p.arrays.len() as u64 * ARRAY_REGION;
+    // Placed one region past the highest array so it follows relocated
+    // (tenant-shifted) programs too; for the default layout this is the
+    // same address as `ARRAY_BASE + arrays.len() * ARRAY_REGION`.
+    let iota_base = p
+        .arrays
+        .iter()
+        .map(|a| a.base + ARRAY_REGION)
+        .max()
+        .unwrap_or(ARRAY_BASE);
     let needs_iota = p.body.iter().any(stmt_uses_iv0_value);
     if needs_iota {
         for i in 0..p.iters as u64 {

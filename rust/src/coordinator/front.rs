@@ -35,8 +35,15 @@ const LANE_GUARD_LIMIT: u64 = 2_000_000_000;
 /// quantum. Owned data only (the op stream lives behind an
 /// [`Arc<CompiledWorkload>`]), so lanes move freely onto pool workers.
 pub(crate) struct FrontLane {
-    /// Core index (== lane index; the deterministic merge key).
+    /// Global core index (== lane index; the deterministic merge key).
     pub idx: usize,
+    /// Tenant-local stream index into the compiled workload (equals
+    /// `idx` for solo runs, `idx - core_base` for mix tenants).
+    pub stream: usize,
+    /// First global DX100 context id owned by this lane's tenant: the
+    /// lane's view of the ready-flag boards starts there, so tenant-local
+    /// instance ids in its op stream resolve to its own contexts.
+    pub dx_base: usize,
     /// The out-of-order core model.
     pub core: CoreModel,
     /// This core's stride prefetcher.
@@ -74,8 +81,11 @@ impl FrontLane {
         }
         let cw = Arc::clone(&self.cw);
         let variant = self.kind.variant();
-        let ops = variant.stream_of(&cw, self.idx);
-        let dmp_hints = variant.dmp_hints_of(&cw, self.idx);
+        let ops = variant.stream_of(&cw, self.stream);
+        let dmp_hints = variant.dmp_hints_of(&cw, self.stream);
+        // Tenant-scope the flag boards: the op stream's instance ids are
+        // local to this lane's tenant.
+        let flags = &flags[self.dx_base.min(flags.len())..];
         while matches!(self.queue.peek_time(), Some(h) if h < t_end) {
             let ev = self.queue.pop().expect("peeked event");
             self.events += 1;

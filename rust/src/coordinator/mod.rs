@@ -15,10 +15,16 @@
 //! in [`system`] is kind-agnostic. Multi-run experiments should go through
 //! [`crate::engine`], which compiles each workload once and fans the run
 //! matrix out across worker threads.
+//!
+//! Multi-tenant runs ([`Experiment::run_mix`]) co-schedule several
+//! compiled workloads on disjoint core groups sharing one LLC + DRAM +
+//! DX100, with per-tenant attribution ([`TenantRunStats`]) and a
+//! pluggable accelerator arbitration policy
+//! ([`crate::workloads::mix::ArbPolicy`]).
 
 mod front;
 pub mod system;
 pub mod variant;
 
-pub use system::{Experiment, RunStats, SystemKind};
+pub use system::{Experiment, MixRun, RunInput, RunStats, SystemKind, Tenant, TenantRunStats};
 pub use variant::{BaselineVariant, DmpVariant, Dx100Variant, DxSetup, SystemVariant};

@@ -55,9 +55,11 @@ use crate::core::{CoreModel, LaneActionKind, LineWaiters};
 use crate::dx100::timing::{Dx100Stats, DxActionKind};
 use crate::dx100::NO_TILE;
 use crate::engine::pool::{Crew, WorkerPool};
+use crate::engine::ExecOptions;
 use crate::mem::{dram::Completion, MemController, ReqSource, ShardChannel};
 use crate::sim::{Cycle, Event, EventQueue};
 use crate::util::regions;
+use crate::workloads::mix::ArbPolicy;
 use crate::workloads::WorkloadSpec;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -123,19 +125,125 @@ impl RunStats {
     }
 }
 
+/// What [`Experiment::run`] executes: a workload spec (compiled on the
+/// spot) or a pre-compiled workload shared across systems and threads.
+/// `&WorkloadSpec` converts implicitly, so the common call reads
+/// `ex.run(&w, &opts)`.
+pub enum RunInput<'a> {
+    /// Compile the spec per call.
+    Spec(&'a WorkloadSpec),
+    /// Run a workload someone already compiled (the engine and benches
+    /// share one compilation across all systems and worker threads).
+    Compiled {
+        /// The shared compiled workload.
+        cw: &'a Arc<CompiledWorkload>,
+        /// Pre-warm every cache level with the workload's lines.
+        warm: bool,
+    },
+}
+
+impl<'a> From<&'a WorkloadSpec> for RunInput<'a> {
+    fn from(w: &'a WorkloadSpec) -> Self {
+        RunInput::Spec(w)
+    }
+}
+
+/// One co-scheduled tenant of a [`Experiment::run_mix`] run.
+///
+/// The compiled workload should be built against a configuration whose
+/// `core.num_cores` is the tenant's core-group size and whose
+/// `dx100.instances` is 1, so its op streams reference tenant-local
+/// instance ids (the coordinator remaps them onto global shared-DX100
+/// context ids). [`crate::workloads::mix::MixSpec`] +
+/// [`crate::engine::mix::run_mix`] assemble tenants this way; building
+/// them by hand is only needed for custom harnesses.
+pub struct Tenant {
+    /// The tenant's compiled workload (already relocated if tenants could
+    /// otherwise alias addresses).
+    pub cw: Arc<CompiledWorkload>,
+    /// Pre-warm the shared caches with this tenant's lines.
+    pub warm: bool,
+    /// Cycle at which this tenant's cores and DX100 contexts wake.
+    pub offset: Cycle,
+}
+
+impl Tenant {
+    /// A tenant starting at cycle 0.
+    pub fn new(cw: &Arc<CompiledWorkload>, warm: bool) -> Self {
+        Tenant {
+            cw: Arc::clone(cw),
+            warm,
+            offset: 0,
+        }
+    }
+
+    /// A tenant whose cores and DX100 contexts wake at `offset`.
+    pub fn at(cw: &Arc<CompiledWorkload>, warm: bool, offset: Cycle) -> Self {
+        Tenant {
+            cw: Arc::clone(cw),
+            warm,
+            offset,
+        }
+    }
+}
+
+/// Per-tenant slice of a mix run's statistics, attributed at the shared
+/// tier: DRAM completions carry their requester ([`ReqSource`]), which
+/// maps to the owning tenant through the core / DX100-context layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantRunStats {
+    /// The tenant's (relocated) workload name.
+    pub workload: &'static str,
+    /// End-to-end cycles, measured from the tenant's start offset to its
+    /// last core / DX100-context retirement.
+    pub cycles: Cycle,
+    /// Instructions retired by the tenant's cores.
+    pub instrs: u64,
+    /// DRAM read completions attributed to the tenant.
+    pub dram_reads: u64,
+    /// DRAM write completions attributed to the tenant.
+    pub dram_writes: u64,
+    /// Row-buffer hits among the tenant's DRAM completions.
+    pub row_hits: u64,
+    /// All DRAM completions attributed to the tenant.
+    pub row_accesses: u64,
+}
+
+impl TenantRunStats {
+    /// Row-buffer hit rate over the tenant's attributed DRAM traffic.
+    pub fn row_hit_rate(&self) -> f64 {
+        if self.row_accesses == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / self.row_accesses as f64
+        }
+    }
+}
+
+/// Results of a co-scheduled [`Experiment::run_mix`]: whole-system stats
+/// plus per-tenant slices, in tenant order.
+#[derive(Clone, Debug)]
+pub struct MixRun {
+    /// Whole-system stats (cycles span the longest tenant).
+    pub stats: RunStats,
+    /// Per-tenant attribution, in tenant order.
+    pub tenants: Vec<TenantRunStats>,
+}
+
 /// An experiment: one system kind + configuration.
 ///
 /// ```
 /// use dx100::config::SystemConfig;
 /// use dx100::coordinator::{Experiment, SystemKind};
+/// use dx100::engine::ExecOptions;
 /// use dx100::workloads::micro;
 ///
 /// let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 7);
 /// let ex = Experiment::new(SystemKind::Baseline, SystemConfig::table3());
-/// // `DX100_SHARDS` is a fan-out hint: results are bit-identical at every
+/// // Shards are a fan-out hint: results are bit-identical at every
 /// // value, so an explicitly sharded run equals the serial one.
-/// let serial = ex.run_sharded(&w, 1);
-/// let sharded = ex.run_sharded(&w, 2);
+/// let serial = ex.run(&w, &ExecOptions::new().shards(1));
+/// let sharded = ex.run(&w, &ExecOptions::new().shards(2));
 /// assert_eq!(serial, sharded);
 /// ```
 #[derive(Clone)]
@@ -156,57 +264,69 @@ impl Experiment {
         }
     }
 
-    /// Compile and run a workload end to end.
+    /// Run a workload end to end under `opts` — the single run entry
+    /// point (specs compile per call; pass [`RunInput::Compiled`] to
+    /// share a compilation).
     ///
-    /// Compiles per call; to share one [`CompiledWorkload`] across several
-    /// systems (and across worker threads), go through
-    /// [`crate::engine`] or call [`Experiment::run_compiled`] directly.
-    pub fn run(&self, w: &WorkloadSpec) -> RunStats {
-        let shards = crate::engine::shards_from_env();
-        grow_pool_for_hint(shards);
-        self.run_sharded(w, shards)
+    /// Only the shard fan-out and profile override of `opts` apply here:
+    /// a single run has no cell-level thread fan-out (the thread cap
+    /// bounds how many pool workers may help its shard crews), and the
+    /// persisted result cache belongs to the sweep executor
+    /// ([`crate::engine::execute_sweep`]).
+    pub fn run<'a>(&self, input: impl Into<RunInput<'a>>, opts: &ExecOptions) -> RunStats {
+        opts.apply_profile();
+        let shards = opts.resolved_shards();
+        grow_pool_for_hint(shards, opts.resolved_threads());
+        match input.into() {
+            RunInput::Spec(w) => {
+                let cw = compile(&w.program, &w.mem, &self.cfg)
+                    .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
+                self.exec(&Arc::new(cw), w.warm_caches, shards)
+            }
+            RunInput::Compiled { cw, warm } => self.exec(cw, warm, shards),
+        }
     }
 
-    /// Compile and run with an explicit intra-run fan-out hint (bypasses
-    /// the `DX100_SHARDS` environment knob; tests use this).
-    pub fn run_sharded(&self, w: &WorkloadSpec, shards: usize) -> RunStats {
-        let cw = compile(&w.program, &w.mem, &self.cfg)
-            .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
-        self.run_compiled_sharded(&Arc::new(cw), w.warm_caches, shards)
-    }
-
-    /// Run a pre-compiled workload (the engine and benches share one
-    /// compilation across all systems). The intra-run fan-out hint comes
-    /// from `DX100_SHARDS` (default 1).
-    pub fn run_compiled(&self, cw: &Arc<CompiledWorkload>, warm: bool) -> RunStats {
-        let shards = crate::engine::shards_from_env();
-        grow_pool_for_hint(shards);
-        self.run_compiled_sharded(cw, warm, shards)
-    }
-
-    /// Run a pre-compiled workload with an explicit intra-run fan-out
-    /// hint. The hint is clamped per phase (to the core count for the
-    /// front end, the channel count for the channel phase); stats are
-    /// bit-identical at every value.
-    pub fn run_compiled_sharded(
+    /// Co-schedule `tenants` on disjoint core groups sharing this
+    /// experiment's LLC, DRAM, and DX100, with the accelerator's
+    /// per-channel request-buffer space arbitrated by `policy`. `name`
+    /// labels the combined [`RunStats`].
+    pub fn run_mix(
         &self,
-        cw: &Arc<CompiledWorkload>,
-        warm: bool,
-        shards: usize,
-    ) -> RunStats {
-        let mut sys = System::build(self.kind.variant(), &self.cfg, cw, warm);
+        name: &'static str,
+        tenants: &[Tenant],
+        policy: ArbPolicy,
+        opts: &ExecOptions,
+    ) -> MixRun {
+        opts.apply_profile();
+        let shards = opts.resolved_shards();
+        grow_pool_for_hint(shards, opts.resolved_threads());
+        let mut sys = System::build(self.kind.variant(), &self.cfg, tenants, policy);
+        sys.run(shards);
+        MixRun {
+            stats: sys.stats(self.kind, name),
+            tenants: sys.tenant_stats(),
+        }
+    }
+
+    /// Run a pre-compiled workload with an explicit shard fan-out — the
+    /// engine's cell executor. Pool sizing stays with the caller, so a
+    /// sweep's explicit thread cap remains the bound on busy executors.
+    pub(crate) fn exec(&self, cw: &Arc<CompiledWorkload>, warm: bool, shards: usize) -> RunStats {
+        let tenants = [Tenant::new(cw, warm)];
+        let mut sys = System::build(self.kind.variant(), &self.cfg, &tenants, ArbPolicy::Fifo);
         sys.run(shards);
         sys.stats(self.kind, cw.name)
     }
 }
 
-/// Env-driven entry points grow the shared pool for their fan-out hint
-/// (never past the `DX100_THREADS` policy). Explicit-args APIs leave
-/// pool sizing to their caller, so a sweep's explicit thread cap remains
-/// the bound on busy executors.
-fn grow_pool_for_hint(shards: usize) {
+/// Public run entry points grow the shared pool for their fan-out hint,
+/// never past their thread policy. The engine-internal cell executor
+/// ([`Experiment::exec`]) leaves pool sizing to the sweep executor, so an
+/// explicit sweep thread cap remains the bound on busy executors.
+fn grow_pool_for_hint(shards: usize, threads: usize) {
     if shards > 1 {
-        let cap = crate::engine::threads_from_env().saturating_sub(1);
+        let cap = threads.saturating_sub(1);
         WorkerPool::global().ensure_workers((shards - 1).min(cap));
     }
 }
@@ -246,6 +366,27 @@ enum RoundKind {
     Dx(DxActionKind),
 }
 
+/// One tenant's slot layout inside the shared system, plus its
+/// accumulated DRAM attribution.
+struct TenantMeta {
+    name: &'static str,
+    core_base: usize,
+    cores: usize,
+    dx_base: usize,
+    dx_count: usize,
+    offset: Cycle,
+    dram: TenantDram,
+}
+
+/// DRAM completions attributed to one tenant at dispatch time.
+#[derive(Clone, Copy, Default)]
+struct TenantDram {
+    reads: u64,
+    writes: u64,
+    row_hits: u64,
+    accesses: u64,
+}
+
 struct System<'a> {
     cfg: &'a SystemConfig,
     lanes: Vec<Option<FrontLane>>,
@@ -261,6 +402,17 @@ struct System<'a> {
     ready: Vec<Vec<bool>>,
     routing: HashMap<u64, Completion>,
     parked: VecDeque<ParkedAccess>,
+    /// Tenant layout + per-tenant attribution (one entry for solo runs).
+    tenants: Vec<TenantMeta>,
+    /// Global core index -> owning tenant index.
+    core_tenant: Vec<usize>,
+    /// Global DX100 context index -> owning tenant index.
+    dx_tenant: Vec<usize>,
+    /// Shared-DX100 arbitration policy ([`ArbPolicy::Fifo`] for solo
+    /// runs, where every policy is the identity).
+    arb: ArbPolicy,
+    /// Quanta started so far (drives round-robin arbitration turns).
+    quanta: u64,
     /// Shared-stage event pops (lane pops are counted on the lanes).
     shared_events: u64,
     channel_events: u64,
@@ -271,19 +423,41 @@ impl<'a> System<'a> {
     fn build(
         variant: &dyn SystemVariant,
         cfg: &'a SystemConfig,
-        cw: &'a Arc<CompiledWorkload>,
-        warm: bool,
+        tenants: &'a [Tenant],
+        arb: ArbPolicy,
     ) -> Self {
-        let ncores = variant.streams(cw).len().max(1);
+        assert!(!tenants.is_empty(), "system needs at least one tenant");
+        // Tenant layout: disjoint core groups in tenant order; DX100
+        // contexts numbered globally across tenants in the same order.
+        let mut metas: Vec<TenantMeta> = Vec::with_capacity(tenants.len());
+        let mut core_tenant: Vec<usize> = Vec::new();
+        let mut dx_tenant: Vec<usize> = Vec::new();
+        for (ti, t) in tenants.iter().enumerate() {
+            let cores = variant.streams(&t.cw).len().max(1);
+            let dx_count = variant.dx_count(&t.cw);
+            metas.push(TenantMeta {
+                name: t.cw.name,
+                core_base: core_tenant.len(),
+                cores,
+                dx_base: dx_tenant.len(),
+                dx_count,
+                offset: t.offset,
+                dram: TenantDram::default(),
+            });
+            core_tenant.extend(std::iter::repeat(ti).take(cores));
+            dx_tenant.extend(std::iter::repeat(ti).take(dx_count));
+        }
+        let ncores = core_tenant.len();
+        let ndx = dx_tenant.len();
         let mut hier_cfg = cfg.clone();
         hier_cfg.core.num_cores = cfg.core.num_cores.max(ncores);
         let mut hier = Hierarchy::new(&hier_cfg);
         let mem = MemController::new(cfg.dram.clone());
         // Warm caches: pre-install every array line at every level
-        // (the §6.1 All-Hits scenario).
-        if warm {
-            let mut lines = std::collections::BTreeSet::new();
-            for tp in cw.baseline.streams.iter() {
+        // (the §6.1 All-Hits scenario), per requesting tenant.
+        let mut lines = std::collections::BTreeSet::new();
+        for t in tenants.iter().filter(|t| t.warm) {
+            for tp in t.cw.baseline.streams.iter() {
                 for op in &tp.ops {
                     if let crate::core::OpKind::Load { addr, .. }
                     | crate::core::OpKind::Store { addr, .. }
@@ -293,49 +467,62 @@ impl<'a> System<'a> {
                     }
                 }
             }
-            for line in lines {
-                hier.warm_fill(line, 0);
-            }
         }
-        let DxSetup {
-            dx,
-            programs: dx_programs,
-            ready,
-        } = variant.accelerators(cfg, cw, &mem);
-        let dx_lanes = dx
-            .into_iter()
-            .enumerate()
-            .map(|(i, timing)| {
-                Some(DxLane {
-                    idx: i,
+        for line in lines {
+            hier.warm_fill(line, 0);
+        }
+        // DX100 contexts: each tenant's programs get global ids
+        // `dx_base..dx_base + dx_count` on the one shared accelerator, so
+        // multi-tenant runs pay the same inter-context coherence cost as
+        // multi-instance solo runs.
+        let mut dx_lanes: Vec<Option<DxLane>> = Vec::with_capacity(ndx);
+        let mut dx_programs: Vec<&'a crate::dx100::timing::Dx100Program> =
+            Vec::with_capacity(ndx);
+        let mut ready: Vec<Vec<bool>> = Vec::with_capacity(ndx);
+        for (ti, t) in tenants.iter().enumerate() {
+            let DxSetup {
+                dx,
+                programs,
+                ready: boards,
+            } = variant.accelerators(cfg, &t.cw, &mem, metas[ti].dx_base, ndx);
+            for timing in dx {
+                let idx = dx_lanes.len();
+                dx_lanes.push(Some(DxLane {
+                    idx,
                     timing,
                     queue: EventQueue::new(),
                     actions: Vec::new(),
                     space: Vec::new(),
                     last_time: 0,
                     events: 0,
-                })
-            })
-            .collect();
+                }));
+            }
+            dx_programs.extend(programs);
+            ready.extend(boards);
+        }
         let kind = variant.kind();
-        let lanes = (0..ncores)
-            .map(|i| {
-                Some(FrontLane {
+        let mut lanes: Vec<Option<FrontLane>> = Vec::with_capacity(ncores);
+        for (ti, t) in tenants.iter().enumerate() {
+            for s in 0..metas[ti].cores {
+                let i = metas[ti].core_base + s;
+                lanes.push(Some(FrontLane {
                     idx: i,
+                    stream: s,
+                    dx_base: metas[ti].dx_base,
                     core: CoreModel::new(i, cfg.core.clone()),
                     prefetcher: StridePrefetcher::new(cfg.l2.prefetch_degree),
                     queue: EventQueue::new(),
                     lane: None,
                     actions: Vec::new(),
-                    cw: Arc::clone(cw),
+                    cw: Arc::clone(&t.cw),
                     kind,
                     spd_latency: cfg.dx100.spd_read_latency,
                     mmio_latency: cfg.dx100.mmio_store_latency,
                     last_time: 0,
                     events: 0,
-                })
-            })
-            .collect();
+                }));
+            }
+        }
         System {
             cfg,
             lanes,
@@ -348,6 +535,11 @@ impl<'a> System<'a> {
             ready,
             routing: HashMap::new(),
             parked: VecDeque::new(),
+            tenants: metas,
+            core_tenant,
+            dx_tenant,
+            arb,
+            quanta: 0,
             shared_events: 0,
             channel_events: 0,
             end_time: 0,
@@ -416,7 +608,10 @@ impl<'a> System<'a> {
                 }
                 if value {
                     // A tile/phase became ready: spinning cores re-poll.
-                    for c in 0..self.lanes.len() {
+                    // Only the owning tenant's cores can observe this flag
+                    // board, so the wake stays inside its core group.
+                    let m = &self.tenants[self.dx_tenant[instance]];
+                    for c in m.core_base..m.core_base + m.cores {
                         if !self.lane_ref(c).core.done {
                             self.wake_lane(c, t);
                         }
@@ -560,10 +755,35 @@ impl<'a> System<'a> {
             }
             LaneActionKind::Mmio { instance, seq, at } => {
                 // Route MMIO deliveries: encode (instance, seq) into a
-                // Timer event, exactly like the pre-staged design.
+                // Timer event, exactly like the pre-staged design. The
+                // lane's instance id is tenant-local; translate it to the
+                // global DX100 context index.
+                let instance = self.tenants[self.core_tenant[core]].dx_base + instance as usize;
                 let payload = ((instance as u64) << 32) | seq as u64;
                 self.queue.push(at, Event::Timer(payload));
             }
+        }
+    }
+
+    /// Attribute one DRAM completion to the tenant that caused it (the
+    /// core group for demand/prefetch traffic, the context owner for
+    /// DX100 traffic). Internal writebacks carry `core == usize::MAX`
+    /// and stay unattributed.
+    fn attribute(&mut self, comp: &Completion) {
+        let ti = match comp.source {
+            ReqSource::Core { core, .. } => Some(self.core_tenant[core]),
+            ReqSource::Dx100 { instance, .. } => Some(self.dx_tenant[instance]),
+            ReqSource::Prefetch { core } => (core != usize::MAX).then(|| self.core_tenant[core]),
+        };
+        if let Some(ti) = ti {
+            let d = &mut self.tenants[ti].dram;
+            if comp.is_write {
+                d.writes += 1;
+            } else {
+                d.reads += 1;
+            }
+            d.accesses += 1;
+            d.row_hits += u64::from(comp.row_hit);
         }
     }
 
@@ -578,6 +798,7 @@ impl<'a> System<'a> {
             }
             Event::DramDone(id) => {
                 let comp = self.routing.remove(&id).expect("unknown completion");
+                self.attribute(&comp);
                 match comp.source {
                     ReqSource::Core { core, .. } => {
                         let line = comp.addr >> 6;
@@ -679,14 +900,36 @@ impl<'a> System<'a> {
                 // request-buffer space snapshot. The snapshot point (after
                 // the previous shared stage, before any lane advances) is
                 // the same at every fan-out, so drain gating is
-                // deterministic.
+                // deterministic. Arbitration shapes the snapshot — not the
+                // live queues — so every policy stays bit-identical across
+                // the (threads, shards) matrix: round-robin zeroes the
+                // visible space for off-turn tenants (turn rotates per
+                // quantum), occupancy-cap grants each tenant an equal
+                // ceiling of the free buffer space. Both collapse to FIFO
+                // when one tenant owns every context.
+                let ntenants = self.tenants.len();
+                let turn = (self.quanta % ntenants as u64) as usize;
+                let arb = self.arb;
                 let mut dls: Vec<DxLane> = active_dx
                     .iter()
                     .map(|&i| {
                         let mut dl = self.dx_lanes[i].take().expect("dx lane in flight");
+                        let ti = self.dx_tenant[i];
                         dl.space.clear();
-                        dl.space
-                            .extend((0..self.mem.num_channels()).map(|ch| self.mem.space_in(ch)));
+                        dl.space.extend((0..self.mem.num_channels()).map(|ch| {
+                            let s = self.mem.space_in(ch);
+                            match arb {
+                                ArbPolicy::Fifo => s,
+                                ArbPolicy::RoundRobin => {
+                                    if ti == turn {
+                                        s
+                                    } else {
+                                        0
+                                    }
+                                }
+                                ArbPolicy::OccupancyCap => s.div_ceil(ntenants),
+                            }
+                        }));
                         dl
                     })
                     .collect();
@@ -862,7 +1105,7 @@ impl<'a> System<'a> {
                     returned.append(&mut cj.chans);
                     advs.append(&mut cj.advs);
                 }
-                SimJob::Front(_) => unreachable!("front job in channel stage"),
+                SimJob::Front(_) | SimJob::Dx(_) => unreachable!("lane job in channel stage"),
             }
         }
         // Deterministic merge: channel-index order, exactly like the
@@ -907,11 +1150,14 @@ impl<'a> System<'a> {
     }
 
     fn run(&mut self, shards: usize) {
+        // Each lane starts at its tenant's phase offset (0 for solo runs).
         for c in 0..self.lanes.len() {
-            self.wake_lane(c, 0);
+            let at = self.tenants[self.core_tenant[c]].offset;
+            self.wake_lane(c, at);
         }
         for i in 0..self.dx_lanes.len() {
-            self.wake_dx_lane(i, 0);
+            let at = self.tenants[self.dx_tenant[i]].offset;
+            self.wake_dx_lane(i, at);
         }
         // Quantum bound: any channel activation at t >= quantum start
         // completes at or after the quantum end, so front-end and channel
@@ -932,6 +1178,10 @@ impl<'a> System<'a> {
         let mut detached = (chan_fan > 1).then(|| self.mem.detach_shards());
         while let Some(t0) = self.next_quantum_start() {
             let t_end = t0.saturating_add(quantum);
+            // Advance the arbitration turn once per quantum. The counter
+            // depends only on the quantum sequence, which is identical at
+            // every (threads, shards) pair.
+            self.quanta = self.quanta.wrapping_add(1);
             self.phase_front(t_end, front_fan, crew.as_ref());
             if !self.mem.has_channel_work(t_end) {
                 continue;
@@ -1013,6 +1263,37 @@ impl<'a> System<'a> {
             events: front_events + self.channel_events,
         }
     }
+
+    /// Per-tenant statistics for a mix run: wall cycles measured from the
+    /// tenant's own phase offset, retired instructions from its core
+    /// group, and the DRAM traffic attributed to it at completion time.
+    fn tenant_stats(&self) -> Vec<TenantRunStats> {
+        self.tenants
+            .iter()
+            .map(|m| {
+                let finish = (m.core_base..m.core_base + m.cores)
+                    .map(|c| self.lane_ref(c).core.stats.finish_time)
+                    .chain(
+                        (m.dx_base..m.dx_base + m.dx_count)
+                            .map(|i| self.dx_ref(i).timing.stats.finish_time),
+                    )
+                    .max()
+                    .unwrap_or(m.offset);
+                let instrs = (m.core_base..m.core_base + m.cores)
+                    .map(|c| self.lane_ref(c).core.stats.retired_instrs)
+                    .sum();
+                TenantRunStats {
+                    workload: m.name,
+                    cycles: finish.saturating_sub(m.offset).max(1),
+                    instrs,
+                    dram_reads: m.dram.reads,
+                    dram_writes: m.dram.writes,
+                    row_hits: m.dram.row_hits,
+                    row_accesses: m.dram.accesses,
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -1027,7 +1308,7 @@ mod tests {
     #[test]
     fn baseline_runs_gather() {
         let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 1);
-        let stats = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
+        let stats = Experiment::new(SystemKind::Baseline, cfg()).run(&w, &ExecOptions::new());
         assert!(stats.cycles > 0);
         assert!(stats.instrs > 0);
         assert!(stats.dram_reads > 0, "random gather must reach DRAM");
@@ -1037,8 +1318,8 @@ mod tests {
     #[test]
     fn dx100_beats_baseline_on_random_gather() {
         let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 2);
-        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
-        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w, &ExecOptions::new());
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w, &ExecOptions::new());
         let speedup = dx.speedup_over(&base);
         assert!(
             speedup > 1.2,
@@ -1057,8 +1338,8 @@ mod tests {
     #[test]
     fn dx100_improves_row_hits_and_occupancy() {
         let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 3);
-        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
-        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w, &ExecOptions::new());
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w, &ExecOptions::new());
         assert!(
             dx.row_hit_rate > base.row_hit_rate,
             "RBH: dx {} vs base {}",
@@ -1077,16 +1358,16 @@ mod tests {
     fn atomics_hurt_baseline_but_not_dx100() {
         let wa = micro::rmw(8192, true, micro::IndexPattern::UniformRandom, 4);
         let wn = micro::rmw(8192, false, micro::IndexPattern::UniformRandom, 4);
-        let ba = Experiment::new(SystemKind::Baseline, cfg()).run(&wa);
-        let bn = Experiment::new(SystemKind::Baseline, cfg()).run(&wn);
+        let ba = Experiment::new(SystemKind::Baseline, cfg()).run(&wa, &ExecOptions::new());
+        let bn = Experiment::new(SystemKind::Baseline, cfg()).run(&wn, &ExecOptions::new());
         assert!(
             ba.cycles as f64 > 1.5 * bn.cycles as f64,
             "atomic {} vs plain {}",
             ba.cycles,
             bn.cycles
         );
-        let dxa = Experiment::new(SystemKind::Dx100, cfg()).run(&wa);
-        let dxn = Experiment::new(SystemKind::Dx100, cfg()).run(&wn);
+        let dxa = Experiment::new(SystemKind::Dx100, cfg()).run(&wa, &ExecOptions::new());
+        let dxn = Experiment::new(SystemKind::Dx100, cfg()).run(&wn, &ExecOptions::new());
         // DX100 is insensitive to the atomicity flag (exclusive access).
         let ratio = dxa.cycles as f64 / dxn.cycles as f64;
         assert!((0.8..1.25).contains(&ratio), "dx ratio {ratio}");
@@ -1095,9 +1376,9 @@ mod tests {
     #[test]
     fn dmp_between_baseline_and_dx100() {
         let w = micro::gather_full(16384, micro::IndexPattern::UniformRandom, 5);
-        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
-        let dmp = Experiment::new(SystemKind::Dmp, cfg()).run(&w);
-        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w, &ExecOptions::new());
+        let dmp = Experiment::new(SystemKind::Dmp, cfg()).run(&w, &ExecOptions::new());
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w, &ExecOptions::new());
         assert!(
             dmp.cycles < base.cycles,
             "DMP should improve on baseline: {} vs {}",
@@ -1116,8 +1397,8 @@ mod tests {
     fn warm_gather_spd_modest_speedup() {
         // §6.1 All-Hits: speedup comes from instruction reduction only.
         let w = micro::gather_spd(8192, micro::IndexPattern::Streaming, 6);
-        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w);
-        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w);
+        let base = Experiment::new(SystemKind::Baseline, cfg()).run(&w, &ExecOptions::new());
+        let dx = Experiment::new(SystemKind::Dx100, cfg()).run(&w, &ExecOptions::new());
         let sp = dx.speedup_over(&base);
         assert!(sp > 0.7 && sp < 3.0, "Gather-SPD speedup {sp}");
         let instr_red = base.instrs as f64 / dx.instrs as f64;
@@ -1128,7 +1409,7 @@ mod tests {
     fn full_workload_cg_runs_on_all_systems() {
         let w = crate::workloads::nas::cg(Scale::test());
         for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
-            let stats = Experiment::new(kind, cfg()).run(&w);
+            let stats = Experiment::new(kind, cfg()).run(&w, &ExecOptions::new());
             assert!(stats.cycles > 0, "{kind:?}");
         }
     }
@@ -1138,9 +1419,53 @@ mod tests {
         let w = micro::gather_full(8192, micro::IndexPattern::UniformRandom, 8);
         for kind in [SystemKind::Baseline, SystemKind::Dx100] {
             let ex = Experiment::new(kind, cfg());
-            let serial = ex.run_sharded(&w, 1);
-            let sharded = ex.run_sharded(&w, 2);
+            let serial = ex.run(&w, &ExecOptions::new().shards(1));
+            let sharded = ex.run(&w, &ExecOptions::new().shards(2));
             assert_eq!(serial, sharded, "{kind:?} diverged under sharding");
         }
+    }
+
+    #[test]
+    fn single_tenant_mix_matches_solo_run() {
+        // A one-tenant mix is the solo run: same layout, FIFO arbitration
+        // identical to every other policy, offset 0. The combined stats
+        // must be bit-identical and the tenant slice must account for all
+        // DRAM demand traffic.
+        let w = micro::gather_full(8192, micro::IndexPattern::UniformRandom, 9);
+        let ex = Experiment::new(SystemKind::Dx100, cfg());
+        let solo = ex.run(&w, &ExecOptions::new());
+        let cw = crate::compiler::compile(&w.program, &w.mem, &ex.cfg).expect("compile");
+        let tenants = [Tenant::new(&Arc::new(cw), w.warm_caches)];
+        for policy in [ArbPolicy::Fifo, ArbPolicy::RoundRobin, ArbPolicy::OccupancyCap] {
+            let mix = ex.run_mix("solo-mix", &tenants, policy, &ExecOptions::new());
+            assert_eq!(mix.stats.cycles, solo.cycles, "{policy:?}");
+            assert_eq!(mix.stats.dram_reads, solo.dram_reads, "{policy:?}");
+            assert_eq!(mix.tenants.len(), 1);
+            let t = &mix.tenants[0];
+            assert_eq!(t.cycles, solo.cycles, "{policy:?}");
+            assert_eq!(t.instrs, solo.instrs, "{policy:?}");
+            assert!(t.row_accesses > 0, "{policy:?}: no attributed DRAM traffic");
+        }
+    }
+
+    #[test]
+    fn two_tenant_mix_runs_and_attributes() {
+        let ex = Experiment::new(SystemKind::Dx100, cfg());
+        let mk = |seed: u64| {
+            let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, seed);
+            let cw = crate::compiler::compile(&w.program, &w.mem, &ex.cfg).expect("compile");
+            Tenant::new(&Arc::new(cw), w.warm_caches)
+        };
+        let tenants = [mk(11), mk(12)];
+        let mix = ex.run_mix("pair", &tenants, ArbPolicy::RoundRobin, &ExecOptions::new());
+        assert_eq!(mix.tenants.len(), 2);
+        for t in &mix.tenants {
+            assert!(t.cycles > 0 && t.instrs > 0, "{}", t.workload);
+            assert!(t.cycles <= mix.stats.cycles, "{}", t.workload);
+        }
+        // Both micro gathers share the same address layout here (no
+        // relocation), so warm lines overlap — but attribution still
+        // splits the demand traffic between the two core groups.
+        assert!(mix.tenants.iter().all(|t| t.row_accesses > 0));
     }
 }

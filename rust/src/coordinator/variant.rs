@@ -67,12 +67,24 @@ pub trait SystemVariant: Sync {
         self.dmp_hints(cw).and_then(|tables| tables.get(c))
     }
 
-    /// Accelerator instances for this system.
+    /// How many accelerator contexts this system builds for `cw` (the
+    /// coordinator lays out tenant contexts before building any).
+    fn dx_count(&self, _cw: &CompiledWorkload) -> usize {
+        0
+    }
+
+    /// Accelerator instances for this system. `base` is the first global
+    /// context id to assign (0 for solo runs) and `total` the number of
+    /// contexts sharing the accelerator system-wide — multi-tenant runs
+    /// pass the mix-wide count so inter-context coherence costs match a
+    /// multi-instance solo run.
     fn accelerators<'a>(
         &self,
         _cfg: &SystemConfig,
         _cw: &'a CompiledWorkload,
         _mem: &MemController,
+        _base: usize,
+        _total: usize,
     ) -> DxSetup<'a> {
         DxSetup::none()
     }
@@ -157,22 +169,28 @@ impl SystemVariant for Dx100Variant {
             .unwrap_or(&[])
     }
 
+    fn dx_count(&self, cw: &CompiledWorkload) -> usize {
+        cw.dx.programs.len()
+    }
+
     fn accelerators<'a>(
         &self,
         cfg: &SystemConfig,
         cw: &'a CompiledWorkload,
         mem: &MemController,
+        base: usize,
+        total: usize,
     ) -> DxSetup<'a> {
         let mut dx = Vec::new();
         let mut programs = Vec::new();
         let mut ready = Vec::new();
         for (i, prog) in cw.dx.programs.iter().enumerate() {
             dx.push(Dx100Timing::new(
-                i,
+                base + i,
                 cfg.dx100.clone(),
                 prog.clone(),
                 mem,
-                cw.dx.programs.len(),
+                total.max(cw.dx.programs.len()),
             ));
             programs.push(prog);
             ready.push(vec![false; cfg.dx100.tiles + cw.dx.phases]);

@@ -162,6 +162,26 @@ impl MemImage {
         (max, at)
     }
 
+    /// Shift the whole image up by `delta` bytes (tenant relocation for
+    /// multi-tenant mixes). `delta` must be page-aligned, so the move
+    /// re-keys pages without copying bytes.
+    pub fn rebase(&mut self, delta: u64) {
+        assert_eq!(
+            delta % PAGE_SIZE as u64,
+            0,
+            "rebase delta must be page-aligned"
+        );
+        if delta == 0 || self.pages.is_empty() {
+            return;
+        }
+        let shift = delta >> PAGE_BITS;
+        self.pages = self
+            .pages
+            .drain()
+            .map(|(page, data)| (page + shift, data))
+            .collect();
+    }
+
     /// Stable content hash, independent of `HashMap` iteration order.
     /// Feeds the engine's persisted result-cache keys, so it must not vary
     /// across processes or toolchains (hence [`crate::util::Fnv`], not
@@ -247,6 +267,23 @@ mod tests {
         assert_eq!(m.touched_pages(), 2);
         assert_eq!(m.read_u32(0), 1);
         assert_eq!(m.read_u32(1 << 30), 2);
+    }
+
+    #[test]
+    fn rebase_moves_content_without_copies() {
+        let mut m = MemImage::new();
+        m.write_u32(0x0400_0000, 41);
+        m.write_u64(0x0800_0008, 42);
+        let pages = m.touched_pages();
+        m.rebase(1 << 32);
+        assert_eq!(m.touched_pages(), pages);
+        assert_eq!(m.read_u32(0x0400_0000), 0);
+        assert_eq!(m.read_u32((1 << 32) + 0x0400_0000), 41);
+        assert_eq!(m.read_u64((1 << 32) + 0x0800_0008), 42);
+        // Zero delta is the identity.
+        let h = m.stable_hash();
+        m.rebase(0);
+        assert_eq!(m.stable_hash(), h);
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Multi-tenant mix execution: solo baselines + the co-scheduled run +
+//! derived contention metrics.
+//!
+//! [`run_mix`] is the end-to-end entry point behind `run --mix` and
+//! `benches/scenario_mix.rs`. For a [`MixSpec`] it:
+//!
+//! 1. builds each tenant's workload *unrelocated* and runs it solo on the
+//!    DX100 system through [`execute_sweep`] — bit-identical to an
+//!    ordinary solo run of the same (config, workload), so the persisted
+//!    result cache serves these baselines across mixes and benches;
+//! 2. builds the tenants *relocated* ([`TENANT_STRIDE`]-spaced address
+//!    windows), compiles each against its core-group-sized config, and
+//!    co-schedules them with [`Experiment::run_mix`] under the requested
+//!    [`ArbPolicy`];
+//! 3. derives per-tenant slowdown vs the cached solo run, Jain fairness
+//!    across tenants, and row-hit interference (solo row-hit rate minus
+//!    the tenant's attributed in-mix rate).
+//!
+//! Everything downstream of the registry builders is deterministic, so a
+//! mix result is bit-identical across the `(DX100_THREADS, DX100_SHARDS)`
+//! matrix like every solo lane.
+
+use super::{execute_sweep, ExecOptions, SweepPlan, SweepPoint};
+use crate::config::SystemConfig;
+use crate::coordinator::{Experiment, RunStats, SystemKind, Tenant, TenantRunStats};
+use crate::metrics::jain_fairness;
+use crate::sim::Cycle;
+use crate::workloads::mix::{ArbPolicy, MixSpec};
+use crate::workloads::synth::intern;
+use crate::workloads::{Registry, Scale};
+use std::sync::Arc;
+
+/// One tenant's outcome in a mix: its cached solo baseline, its in-mix
+/// slice, and the derived contention metrics.
+#[derive(Clone, Debug)]
+pub struct MixTenantResult {
+    /// Registry workload name (un-relocated).
+    pub workload: &'static str,
+    /// Cores in the tenant's group.
+    pub cores: usize,
+    /// The tenant's start offset (cycles).
+    pub offset: Cycle,
+    /// Solo run on the same per-tenant configuration (cache-served when
+    /// the persisted result cache is enabled).
+    pub solo: RunStats,
+    /// The tenant's attributed slice of the co-scheduled run.
+    pub mix: TenantRunStats,
+    /// `mix.cycles / solo.cycles` (1.0 = no interference; < 1 can happen
+    /// when a co-tenant's traffic opens rows the tenant reuses).
+    pub slowdown: f64,
+    /// Solo row-hit rate minus the tenant's attributed in-mix row-hit
+    /// rate (positive = the mix costs this tenant row locality).
+    pub row_hit_interference: f64,
+}
+
+/// Results of one mix execution under one arbitration policy.
+#[derive(Clone, Debug)]
+pub struct MixResult {
+    /// Canonical mix label ([`MixSpec::label`]).
+    pub label: &'static str,
+    /// The DX100 arbitration policy used.
+    pub policy: ArbPolicy,
+    /// Whole-system stats of the co-scheduled run (its `workload` is
+    /// `mix:<label>@<policy>`).
+    pub combined: RunStats,
+    /// Per-tenant outcomes, in tenant order.
+    pub tenants: Vec<MixTenantResult>,
+    /// Jain fairness index over the tenants' `1/slowdown` (1.0 = every
+    /// tenant slowed equally; `1/N` = one tenant got everything).
+    pub fairness: f64,
+    /// Solo-baseline cells served from the persisted result cache.
+    pub solo_cache_hits: usize,
+    /// Solo-baseline cells simulated this invocation.
+    pub solo_cache_misses: usize,
+}
+
+/// The per-tenant configuration: the base config with the tenant's
+/// core-group size and a single DX100 context (the coordinator assigns
+/// global context ids across tenants).
+fn tenant_cfg(base: &SystemConfig, cores: usize) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.core.num_cores = cores;
+    cfg.dx100.instances = 1;
+    cfg
+}
+
+/// Run `mix` end to end on the DX100 system: per-tenant solo baselines
+/// (cache-shared with ordinary solo runs), the co-scheduled run under
+/// `policy`, and the derived slowdown / fairness / row-hit-interference
+/// metrics. `base` is the *unadjusted* system configuration (the DX100
+/// LLC adjustment is applied per run, exactly like solo paths).
+pub fn run_mix(
+    mix: &MixSpec,
+    reg: &Registry,
+    base: &SystemConfig,
+    scale: Scale,
+    policy: ArbPolicy,
+    opts: &ExecOptions,
+) -> Result<MixResult, String> {
+    if mix.tenants.len() < 2 {
+        return Err("a mix needs at least two tenants".to_string());
+    }
+    // Solo baselines: one single-cell sweep per tenant (tenant configs
+    // differ, so they cannot share one plan's point axis). Unrelocated
+    // specs + the standard sweep path = the same cache keys as any other
+    // solo run of that (config, workload, system).
+    let solo_specs = mix.build_solo(reg, scale)?;
+    let systems = [SystemKind::Dx100];
+    let mut solos: Vec<RunStats> = Vec::with_capacity(mix.tenants.len());
+    let mut solo_cache_hits = 0;
+    let mut solo_cache_misses = 0;
+    for (t, spec) in mix.tenants.iter().zip(solo_specs) {
+        let points = [SweepPoint::new("", tenant_cfg(base, t.cores))];
+        let workloads = [spec];
+        let mut r = execute_sweep(&SweepPlan::new(&points, &workloads, &systems), opts);
+        solo_cache_hits += r.cache_hits;
+        solo_cache_misses += r.cache_misses;
+        let mut point = r.points.remove(0);
+        solos.push(point.workloads.remove(0).runs.remove(0));
+    }
+    // The co-scheduled run: relocated tenants, each compiled against its
+    // own core-group config (adjusted for the DX100 system), sharing one
+    // LLC + DRAM + DX100 sized for the whole mix.
+    let relocated = mix.build_relocated(reg, scale)?;
+    let mut tenants: Vec<Tenant> = Vec::with_capacity(mix.tenants.len());
+    for (t, w) in mix.tenants.iter().zip(&relocated) {
+        let ex = Experiment::new(SystemKind::Dx100, tenant_cfg(base, t.cores));
+        let cw = crate::compiler::compile(&w.program, &w.mem, &ex.cfg)
+            .map_err(|e| format!("{} rejected by compiler: {e}", w.program.name))?;
+        tenants.push(Tenant::at(&Arc::new(cw), w.warm_caches, t.offset));
+    }
+    let label = mix.label();
+    let name = intern(&format!("mix:{label}@{}", policy.label()));
+    let ex = Experiment::new(SystemKind::Dx100, tenant_cfg(base, mix.total_cores()));
+    let run = ex.run_mix(name, &tenants, policy, opts);
+    // Derived metrics: slowdown vs the cached solo, Jain fairness over
+    // per-tenant throughput ratios, row-hit interference.
+    let tenants: Vec<MixTenantResult> = mix
+        .tenants
+        .iter()
+        .zip(solos)
+        .zip(run.tenants)
+        .map(|((spec, solo), slice)| {
+            let slowdown = slice.cycles as f64 / solo.cycles.max(1) as f64;
+            let row_hit_interference = solo.row_hit_rate - slice.row_hit_rate();
+            MixTenantResult {
+                workload: spec.workload,
+                cores: spec.cores,
+                offset: spec.offset,
+                solo,
+                mix: slice,
+                slowdown,
+                row_hit_interference,
+            }
+        })
+        .collect();
+    let speedups: Vec<f64> = tenants.iter().map(|t| 1.0 / t.slowdown.max(1e-12)).collect();
+    Ok(MixResult {
+        label,
+        policy,
+        combined: run.stats,
+        tenants,
+        fairness: jain_fairness(&speedups),
+        solo_cache_hits,
+        solo_cache_misses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_runs_and_derives_metrics() {
+        let reg = Registry::paper().with_synth();
+        let mix = MixSpec::new()
+            .tenant("uni-gather", 2)
+            .tenant("zipf-gather", 2);
+        let cfg = SystemConfig::table3();
+        let opts = ExecOptions::new().no_cache();
+        let r = run_mix(&mix, &reg, &cfg, Scale::test(), ArbPolicy::Fifo, &opts)
+            .expect("mix runs");
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.solo_cache_misses, 2);
+        assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12, "{}", r.fairness);
+        for t in &r.tenants {
+            assert!(t.solo.cycles > 0 && t.mix.cycles > 0, "{}", t.workload);
+            assert!(t.slowdown > 0.0, "{}", t.workload);
+            // Co-scheduling cannot make a tenant much faster than solo.
+            assert!(t.slowdown > 0.5, "{}: slowdown {}", t.workload, t.slowdown);
+        }
+        assert!(r.combined.cycles >= r.tenants.iter().map(|t| t.mix.cycles).max().unwrap());
+    }
+
+    #[test]
+    fn unknown_tenant_is_an_error() {
+        let reg = Registry::paper();
+        let mix = MixSpec::new().tenant("nope", 2).tenant("CG", 2);
+        let err = run_mix(
+            &mix,
+            &reg,
+            &SystemConfig::table3(),
+            Scale::test(),
+            ArbPolicy::Fifo,
+            &ExecOptions::new().no_cache(),
+        )
+        .unwrap_err();
+        assert!(err.contains("nope"), "{err}");
+    }
+}

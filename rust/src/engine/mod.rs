@@ -43,12 +43,23 @@
 //!   intra-run fan-out (front-end lanes + channel shards, `DX100_SHARDS`)
 //!   as opportunistic crew jobs on the *same* workers — the two knobs
 //!   compose instead of multiplying into oversubscription.
+//! * [`ExecOptions`] is the one options builder every entry point takes
+//!   — `Sweep::execute(&opts)`, [`execute`], and
+//!   [`Experiment::run`](crate::coordinator::Experiment::run) alike.
+//!   Unset knobs resolve from the environment, so `ExecOptions::new()`
+//!   reproduces the env-driven defaults; there are no `_with`/`_sharded`
+//!   call-path variants.
+//! * [`mix`] co-schedules several registry workloads as tenants of one
+//!   shared system (disjoint core groups, one DX100 + LLC + DRAM) and
+//!   derives per-tenant slowdown / fairness / row-hit interference
+//!   against cache-served solo runs.
 //! * [`harness`] is the shared bench-binary entry point: scale/thread env
 //!   knobs, wall-time + per-phase events/sec throughput, cache hit/miss
 //!   and pool-occupancy surfacing, `BENCH_*.json` emission.
 
 pub mod cache;
 pub mod harness;
+pub mod mix;
 pub mod pool;
 
 use crate::compiler::{frontend, specialize, CompiledWorkload, Frontend};
@@ -131,6 +142,112 @@ pub fn shards_from_env() -> usize {
                 1
             }
         },
+    }
+}
+
+/// Result-cache policy of an execution (see [`ExecOptions::no_cache`] /
+/// [`ExecOptions::cache`]).
+#[derive(Clone, Debug, Default)]
+pub enum CacheMode {
+    /// Resolve from `DX100_CACHE` / `DX100_CACHE_DIR` (the default).
+    #[default]
+    FromEnv,
+    /// Never consult or write the persisted cache.
+    Off,
+    /// Use this explicit cache (tests use a temp directory to avoid
+    /// process-global env coupling).
+    At(ResultCache),
+}
+
+/// Execution options for every run/execute entry point: worker-thread
+/// cap, intra-run shard fan-out, result-cache policy, and profiler
+/// override.
+///
+/// Every knob left unset resolves from the environment (`DX100_THREADS`,
+/// `DX100_SHARDS`, `DX100_CACHE`, `DX100_PROFILE`), so
+/// `ExecOptions::new()` *is* the env-driven default; setting a knob pins
+/// it for that call. None of the knobs changes any statistic — threads,
+/// shards, and cache state affect wall time only (asserted by
+/// `tests/integration_shard.rs` and `tests/integration_mix.rs`).
+///
+/// ```
+/// use dx100::engine::ExecOptions;
+///
+/// let opts = ExecOptions::new().threads(2).shards(4).no_cache();
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    threads: Option<usize>,
+    shards: Option<usize>,
+    cache: CacheMode,
+    profile: Option<bool>,
+}
+
+impl ExecOptions {
+    /// Env-driven defaults for every knob.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cap concurrent executors at `n` (calling thread included) instead
+    /// of `DX100_THREADS`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Split each run `n` ways per phase (front lanes / DRAM channels)
+    /// instead of `DX100_SHARDS`. A fan-out hint, not a thread count:
+    /// stats are bit-identical at every value.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n.max(1));
+        self
+    }
+
+    /// Never consult or write the persisted result cache.
+    pub fn no_cache(mut self) -> Self {
+        self.cache = CacheMode::Off;
+        self
+    }
+
+    /// Use this explicit result cache instead of the env-configured one.
+    pub fn cache(mut self, cache: ResultCache) -> Self {
+        self.cache = CacheMode::At(cache);
+        self
+    }
+
+    /// Force the region profiler on or off for this process (overrides
+    /// `DX100_PROFILE`; the override is sticky, as the profiler is a
+    /// process-wide facility).
+    pub fn profile(mut self, on: bool) -> Self {
+        self.profile = Some(on);
+        self
+    }
+
+    /// The effective thread cap.
+    pub(crate) fn resolved_threads(&self) -> usize {
+        self.threads.unwrap_or_else(threads_from_env)
+    }
+
+    /// The effective shard fan-out hint.
+    pub(crate) fn resolved_shards(&self) -> usize {
+        self.shards.unwrap_or_else(shards_from_env)
+    }
+
+    /// The effective result cache, if any.
+    pub(crate) fn resolved_cache(&self) -> Option<ResultCache> {
+        match &self.cache {
+            CacheMode::FromEnv => ResultCache::from_env(),
+            CacheMode::Off => None,
+            CacheMode::At(c) => Some(c.clone()),
+        }
+    }
+
+    /// Apply the profiler override, if set.
+    pub(crate) fn apply_profile(&self) {
+        if let Some(on) = self.profile {
+            crate::util::regions::set_enabled(on);
+        }
     }
 }
 
@@ -287,42 +404,25 @@ impl SweepResult {
     }
 }
 
-/// Execute `plan` with the env-configured thread count, result cache,
-/// and intra-run shard count (`DX100_THREADS`, `DX100_CACHE`,
-/// `DX100_SHARDS`).
-pub fn execute_sweep(plan: &SweepPlan) -> SweepResult {
-    let cache = ResultCache::from_env();
-    execute_sweep_with(plan, threads_from_env(), cache.as_ref())
-}
-
-/// Execute `plan` on exactly `threads` worker threads, with the intra-run
-/// shard count taken from `DX100_SHARDS`.
-pub fn execute_sweep_with(
-    plan: &SweepPlan,
-    threads: usize,
-    cache: Option<&ResultCache>,
-) -> SweepResult {
-    execute_sweep_sharded(plan, threads, cache, shards_from_env())
-}
-
-/// Execute `plan` with a concurrency cap of `threads` executors — the
-/// calling thread plus workers of the process-wide [`pool::WorkerPool`]
-/// (capped at the number of cells that actually need to run) —
-/// consulting `cache` if given, with each cell's simulation split
-/// `shards` ways per phase (front-end lanes and DRAM channels) as
+/// Execute `plan` under `opts` — the one sweep executor. Concurrency is
+/// capped at the resolved thread count (the calling thread plus workers
+/// of the process-wide [`pool::WorkerPool`], capped at the number of
+/// cells that actually need to run); the resolved result cache is
+/// consulted if enabled; each cell's simulation is split the resolved
+/// shard count of ways per phase (front-end lanes and DRAM channels) as
 /// opportunistic crew jobs on the *same* pool.
 ///
-/// Results are bit-identical regardless of `threads`, `shards`, and cache
+/// Results are bit-identical regardless of threads, shards, and cache
 /// state: cells share compiled workloads immutably and each simulation is
 /// deterministic, so only wall time changes. In particular a sharded run
 /// hits cache entries written by an unsharded run (and vice versa) —
 /// sharding is absent from every fingerprint.
-pub fn execute_sweep_sharded(
-    plan: &SweepPlan,
-    threads: usize,
-    cache: Option<&ResultCache>,
-    shards: usize,
-) -> SweepResult {
+pub fn execute_sweep(plan: &SweepPlan, opts: &ExecOptions) -> SweepResult {
+    opts.apply_profile();
+    let threads = opts.resolved_threads();
+    let shards = opts.resolved_shards();
+    let cache = opts.resolved_cache();
+    let cache = cache.as_ref();
     let cells = plan.cells();
     let mut stats: Vec<Option<RunStats>> = cells.iter().map(|_| None).collect();
 
@@ -459,7 +559,7 @@ pub fn execute_sweep_sharded(
         );
         let out = pool.run_indexed(descs.len(), threads, move |k| {
             let d = &descs[k];
-            Experiment::new(d.system, d.cfg.clone()).run_compiled_sharded(&d.cw, d.warm, d.shards)
+            Experiment::new(d.system, d.cfg.clone()).exec(&d.cw, d.warm, d.shards)
         });
         cells_on_workers = out.on_workers;
         cells_on_caller = out.on_caller;
@@ -534,7 +634,7 @@ fn run_sweep_cell(
 ) -> RunStats {
     let cw = &specialized[&(compile_fp[cell.point], cell.workload)];
     let ex = Experiment::new(cell.system, plan.points[cell.point].cfg.clone());
-    ex.run_compiled_sharded(cw, plan.workloads[cell.workload].warm_caches, shards)
+    ex.exec(cw, plan.workloads[cell.workload].warm_caches, shards)
 }
 
 /// A run matrix over borrowed workloads: every workload runs on every
@@ -589,19 +689,15 @@ impl SuiteResult {
     }
 }
 
-/// Execute `plan` with the env-configured thread count.
-pub fn execute(plan: &RunPlan) -> SuiteResult {
-    execute_with(plan, threads_from_env())
-}
-
-/// Execute `plan` on exactly `threads` worker threads (capped at the cell
-/// count). Runs through the sweep executor as a single config point,
-/// without the persisted result cache — exact compile/run counts stay
-/// predictable for callers and tests.
-pub fn execute_with(plan: &RunPlan, threads: usize) -> SuiteResult {
+/// Execute `plan` under `opts`. Runs through the sweep executor as a
+/// single config point, always **without** the persisted result cache
+/// (`opts`' cache mode is ignored on this path): single-point plans back
+/// tests and CLI comparisons whose exact compile/run counts must stay
+/// predictable.
+pub fn execute(plan: &RunPlan, opts: &ExecOptions) -> SuiteResult {
     let points = [SweepPoint::new("", plan.cfg.clone())];
     let sweep = SweepPlan::new(&points, plan.workloads, plan.systems);
-    let mut r = execute_sweep_with(&sweep, threads, None);
+    let mut r = execute_sweep(&sweep, &opts.clone().no_cache());
     SuiteResult {
         workloads: r.points.remove(0).workloads,
         compiles: r.compiles,
@@ -666,14 +762,10 @@ impl Suite {
         RunPlan::new(&self.cfg, &self.workloads, &self.systems)
     }
 
-    /// Execute with the env-configured thread count.
-    pub fn execute(&self) -> SuiteResult {
-        execute(&self.plan())
-    }
-
-    /// Execute on exactly `threads` workers.
-    pub fn execute_with(&self, threads: usize) -> SuiteResult {
-        execute_with(&self.plan(), threads)
+    /// Execute under `opts` (uncached, like every single-point plan; see
+    /// [`execute`]).
+    pub fn execute(&self, opts: &ExecOptions) -> SuiteResult {
+        execute(&self.plan(), opts)
     }
 }
 
@@ -686,14 +778,14 @@ impl Suite {
 ///
 /// ```
 /// use dx100::config::SystemConfig;
-/// use dx100::engine::Sweep;
+/// use dx100::engine::{ExecOptions, Sweep};
 /// use dx100::workloads::micro;
 ///
 /// let sweep = Sweep::new()
 ///     .point("t3", SystemConfig::table3())
 ///     .workload(micro::gather_full(1024, micro::IndexPattern::Streaming, 11));
-/// let serial = sweep.execute_with(1, None);
-/// let pooled = sweep.execute_with(4, None); // 4-way pool-configured
+/// let serial = sweep.execute(&ExecOptions::new().threads(1).no_cache());
+/// let pooled = sweep.execute(&ExecOptions::new().threads(4).no_cache());
 /// assert_eq!(pooled.threads.min(4), pooled.threads);
 /// for (a, b) in serial.points[0].workloads[0]
 ///     .runs
@@ -760,16 +852,11 @@ impl Sweep {
         SweepPlan::new(&self.points, &self.workloads, &self.systems)
     }
 
-    /// Execute with the env-configured thread count and result cache.
-    pub fn execute(&self) -> SweepResult {
-        execute_sweep(&self.plan())
-    }
-
-    /// Execute on exactly `threads` workers against an explicit cache
-    /// (`None` disables caching). Tests use this to avoid process-global
-    /// env coupling.
-    pub fn execute_with(&self, threads: usize, cache: Option<&ResultCache>) -> SweepResult {
-        execute_sweep_with(&self.plan(), threads, cache)
+    /// Execute under `opts` ([`ExecOptions::new`] reproduces the env
+    /// defaults: `DX100_THREADS` workers, `DX100_SHARDS` fan-out, and the
+    /// `DX100_CACHE` result cache).
+    pub fn execute(&self, opts: &ExecOptions) -> SweepResult {
+        execute_sweep(&self.plan(), opts)
     }
 }
 
@@ -809,7 +896,7 @@ mod tests {
             3,
         )];
         let plan = RunPlan::new(&cfg, &ws, &BASE_AND_DX);
-        let r = execute_with(&plan, 2);
+        let r = execute(&plan, &ExecOptions::new().threads(2));
         assert_eq!(r.compiles, 1);
         assert_eq!(r.threads, 2);
         assert_eq!(r.workloads.len(), 1);
@@ -827,8 +914,24 @@ mod tests {
         assert_eq!(suite.plan().systems, &BASE_AND_DX);
         let suite = suite.with_dmp();
         assert_eq!(suite.plan().systems, &ALL_SYSTEMS);
-        let r = suite.execute_with(1);
+        let r = suite.execute(&ExecOptions::new().threads(1));
         assert_eq!(r.workloads[0].runs.len(), 3);
+    }
+
+    #[test]
+    fn exec_options_pin_and_default() {
+        let opts = ExecOptions::new().threads(3).shards(2).no_cache();
+        assert_eq!(opts.resolved_threads(), 3);
+        assert_eq!(opts.resolved_shards(), 2);
+        assert!(opts.resolved_cache().is_none());
+        // Zero requests clamp to one executor / one shard.
+        let opts = ExecOptions::new().threads(0).shards(0);
+        assert_eq!(opts.resolved_threads(), 1);
+        assert_eq!(opts.resolved_shards(), 1);
+        // Unset knobs resolve from the environment helpers.
+        let opts = ExecOptions::new();
+        assert_eq!(opts.resolved_threads(), threads_from_env());
+        assert_eq!(opts.resolved_shards(), shards_from_env());
     }
 
     #[test]
@@ -839,7 +942,7 @@ mod tests {
             .point("a", SystemConfig::table3())
             .point("b", SystemConfig::table3())
             .workload(micro::gather_full(1024, micro::IndexPattern::Streaming, 5));
-        let r = sweep.execute_with(2, None);
+        let r = sweep.execute(&ExecOptions::new().threads(2).no_cache());
         assert!(!r.cache_enabled);
         assert_eq!(r.cells(), 4);
         assert_eq!(r.cache_hits, 0);

@@ -58,12 +58,13 @@
 //! ```no_run
 //! use dx100::config::SystemConfig;
 //! use dx100::coordinator::{Experiment, SystemKind};
+//! use dx100::engine::ExecOptions;
 //! use dx100::workloads::micro;
 //!
 //! let cfg = SystemConfig::table3();
 //! let wl = micro::gather_full(1 << 18, micro::IndexPattern::UniformRandom, 7);
-//! let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&wl);
-//! let dx = Experiment::new(SystemKind::Dx100, cfg).run(&wl);
+//! let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&wl, &ExecOptions::new());
+//! let dx = Experiment::new(SystemKind::Dx100, cfg).run(&wl, &ExecOptions::new());
 //! println!("speedup = {:.2}x", base.cycles as f64 / dx.cycles as f64);
 //! ```
 //!

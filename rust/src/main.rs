@@ -4,6 +4,9 @@
 //! dx100 run --workload CG --scale 4          # one workload, 3 systems
 //! dx100 run --workload uni-gather            # a generated scenario
 //!                                            # (workloads::synth names)
+//! dx100 run --mix CG:4,zipf-gather:4         # co-scheduled tenants on one
+//!            --policy rr                     # shared DX100 (fifo|rr|cap)
+//! dx100 list-workloads                       # every registry name
 //! dx100 suite --scale 4                      # all 12 workloads (Fig 9-11)
 //! dx100 micro                                # §6.1 microbenchmarks (Fig 8a)
 //! dx100 allmiss                              # Fig 8b/c sweep
@@ -73,7 +76,7 @@ fn scale_of(kv: &BTreeMap<String, String>) -> Scale {
 fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
     let overrides: BTreeMap<String, String> = kv
         .iter()
-        .filter(|(k, _)| !["scale", "workload", "system"].contains(&k.as_str()))
+        .filter(|(k, _)| !["scale", "workload", "system", "mix", "policy"].contains(&k.as_str()))
         .map(|(k, v)| (k.clone(), v.clone()))
         .collect();
     SystemConfig::table3()
@@ -90,6 +93,55 @@ fn main() {
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     let cfg = cfg_of(&kv);
     match cmd {
+        "run" if kv.contains_key("mix") => {
+            let spec = kv.get("mix").expect("guarded by contains_key");
+            let mix = workloads::mix::MixSpec::parse(spec).unwrap_or_else(|e| {
+                eprintln!("bad --mix: {e}");
+                std::process::exit(2);
+            });
+            let policy = match kv.get("policy") {
+                None => workloads::mix::ArbPolicy::Fifo,
+                Some(p) => workloads::mix::ArbPolicy::parse(p).unwrap_or_else(|| {
+                    eprintln!("bad --policy {p}; options: fifo, rr, cap");
+                    std::process::exit(2);
+                }),
+            };
+            let reg = workloads::Registry::paper().with_synth();
+            let r = engine::mix::run_mix(
+                &mix,
+                &reg,
+                &cfg,
+                scale_of(&kv),
+                policy,
+                &engine::ExecOptions::new(),
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("mix error: {e}");
+                std::process::exit(2);
+            });
+            println!(
+                "== mix {} @ {} ({} cores, {} cycles) ==",
+                r.label,
+                r.policy.label(),
+                mix.total_cores(),
+                r.combined.cycles
+            );
+            println!(
+                "{:<16} {:>5} {:>12} {:>12} {:>9} {:>8}",
+                "tenant", "cores", "solo cyc", "mix cyc", "slowdown", "rbh-intf"
+            );
+            for t in &r.tenants {
+                println!(
+                    "{:<16} {:>5} {:>12} {:>12} {:>8.2}x {:>+8.3}",
+                    t.workload, t.cores, t.solo.cycles, t.mix.cycles, t.slowdown,
+                    t.row_hit_interference
+                );
+            }
+            println!(
+                "fairness {:.3} | solo cache: {} hits / {} misses",
+                r.fairness, r.solo_cache_hits, r.solo_cache_misses
+            );
+        }
         "run" => {
             let name = kv.get("workload").map(String::as_str).unwrap_or("CG");
             let scale = scale_of(&kv);
@@ -108,6 +160,22 @@ fn main() {
             println!("{}", report::speedup_table(std::slice::from_ref(&c)));
             println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
             println!("{}", report::instr_mpki_table(std::slice::from_ref(&c)));
+        }
+        "list-workloads" => {
+            let reg = workloads::Registry::paper().with_synth();
+            for family in reg.families() {
+                let members: Vec<&str> = reg
+                    .names()
+                    .into_iter()
+                    .filter(|n| reg.family_of(n) == Some(family))
+                    .collect();
+                println!("{family:<10} {}", members.join(" "));
+            }
+            println!(
+                "{} workloads; any of them can be a `run --workload` target or a \
+                 `run --mix name:cores[,..]` tenant",
+                reg.len()
+            );
         }
         "suite" => {
             let scale = scale_of(&kv);
@@ -260,8 +328,9 @@ fn main() {
         },
         _ => {
             println!(
-                "usage: dx100 <run|suite|micro|allmiss|tilesweep|scaling|area|isa|runtime> \
-                 [--workload NAME] [--scale N] [--set key=value]"
+                "usage: dx100 <run|list-workloads|suite|micro|allmiss|tilesweep|scaling|area|\
+                 isa|runtime> [--workload NAME] [--mix name:cores[@offset],..] \
+                 [--policy fifo|rr|cap] [--scale N] [--set key=value]"
             );
             println!("env:");
             println!("  DX100_SCALE=N       dataset scale for suite/bench runs (default 2)");

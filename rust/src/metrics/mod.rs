@@ -5,7 +5,9 @@
 
 use crate::config::SystemConfig;
 use crate::coordinator::{RunStats, SystemKind};
-use crate::engine::{self, PointResult, RunPlan, SuiteResult, Sweep, SweepResult, WorkloadResult};
+use crate::engine::{
+    self, ExecOptions, PointResult, RunPlan, SuiteResult, Sweep, SweepResult, WorkloadResult,
+};
 use crate::util::geomean;
 use crate::workloads::{self, Scale, WorkloadSpec};
 
@@ -112,7 +114,7 @@ pub fn compare_one(w: &WorkloadSpec, cfg: &SystemConfig, with_dmp: bool) -> Comp
         &engine::BASE_AND_DX
     };
     let plan = RunPlan::new(cfg, std::slice::from_ref(w), systems);
-    let mut result = engine::execute(&plan);
+    let mut result = engine::execute(&plan, &ExecOptions::new());
     comparison_of(result.workloads.remove(0))
 }
 
@@ -131,7 +133,7 @@ pub fn run_suite_sweep(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> Swee
         .point("", cfg.clone())
         .systems(systems)
         .workloads(workloads::all(scale))
-        .execute()
+        .execute(&ExecOptions::new())
 }
 
 /// Run the full 12-workload suite (Figures 9-12): compile-once, threaded,
@@ -144,6 +146,19 @@ pub fn run_suite(cfg: &SystemConfig, scale: Scale, with_dmp: bool) -> Vec<Compar
 /// Bench scale from `DX100_SCALE` (default 2 — a few seconds per figure).
 pub fn bench_scale() -> Scale {
     engine::scale_from_env()
+}
+
+/// Jain's fairness index over per-tenant allocations (throughput ratios
+/// in the mix reports): `(Σx)² / (n·Σx²)`. 1.0 means perfectly equal;
+/// `1/n` means one tenant received everything. Empty or all-zero inputs
+/// report 1.0 (nothing is being shared unfairly).
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if xs.is_empty() || s2 == 0.0 {
+        return 1.0;
+    }
+    (s * s) / (xs.len() as f64 * s2)
 }
 
 #[cfg(test)]
@@ -185,6 +200,17 @@ mod tests {
         assert!((c.speedup_vs_dmp().unwrap() - 1.5).abs() < 1e-9);
         assert!((c.bw_improvement() - 4.0).abs() < 1e-9);
         assert!((c.instr_reduction() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jain_fairness_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert!((jain_fairness(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // One tenant gets everything: index = 1/n.
+        assert!((jain_fairness(&[1.0, 0.0]) - 0.5).abs() < 1e-12);
+        let f = jain_fairness(&[1.0, 0.5]);
+        assert!(f > 0.5 && f < 1.0, "{f}");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Multi-tenant mix specifications.
+//!
+//! A [`MixSpec`] names N tenants — any [`Registry`] workload, paper
+//! kernel or generated scenario — with a core-group size and an optional
+//! phase offset each. It lowers through the same seed-deterministic,
+//! cache-stable path as `workloads/synth`: tenant workloads are built by
+//! the registry's deterministic builders, then *relocated* to disjoint
+//! [`TENANT_STRIDE`]-spaced address windows so co-scheduled tenants never
+//! alias a cache line or DRAM row by accident. The un-relocated builds
+//! are bit-identical to ordinary solo runs, which is what lets the engine
+//! serve a mix's solo baselines from the persisted result cache.
+//!
+//! The actual co-scheduling lives in
+//! [`Experiment::run_mix`](crate::coordinator::Experiment::run_mix); the
+//! end-to-end entry point (solo baselines + mix + derived fairness
+//! metrics) is [`crate::engine::mix::run_mix`].
+
+use super::registry::Registry;
+use super::synth::intern;
+use super::{Scale, WorkloadSpec};
+use crate::sim::Cycle;
+
+/// Address distance between consecutive tenants' relocated windows.
+///
+/// A multiple of both the memory-image page size (64 KiB) and every DRAM
+/// row/channel span, so relocation re-keys pages without copying and
+/// changes only row *ids*, never intra-row offsets or channel interleave
+/// phase. 4 GiB also clears the compiler's 64 MiB-per-array regions with
+/// dozens of arrays to spare.
+pub const TENANT_STRIDE: u64 = 1 << 32;
+
+/// How the shared DX100's per-channel request-buffer space is divided
+/// between tenants each quantum.
+///
+/// Arbitration shapes the buffer-space *snapshot* each accelerator lane
+/// sees at the start of a front-end round (never the live queues), which
+/// keeps every policy bit-identical across the `(DX100_THREADS,
+/// DX100_SHARDS)` matrix. With a single tenant all three policies are the
+/// identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArbPolicy {
+    /// First-come-first-served: every tenant sees the full free space.
+    Fifo,
+    /// One tenant per quantum gets the full space; the others see none.
+    RoundRobin,
+    /// Every tenant's visible space is capped at `1/N` of the free space
+    /// (rounded up).
+    OccupancyCap,
+}
+
+impl ArbPolicy {
+    /// Every policy, in report order.
+    pub const ALL: [ArbPolicy; 3] = [
+        ArbPolicy::Fifo,
+        ArbPolicy::RoundRobin,
+        ArbPolicy::OccupancyCap,
+    ];
+
+    /// Stable lower-case label (reports, JSON emission, CLI).
+    pub fn label(self) -> &'static str {
+        match self {
+            ArbPolicy::Fifo => "fifo",
+            ArbPolicy::RoundRobin => "rr",
+            ArbPolicy::OccupancyCap => "cap",
+        }
+    }
+
+    /// Parse a label produced by [`ArbPolicy::label`] (long aliases
+    /// accepted).
+    pub fn parse(s: &str) -> Option<ArbPolicy> {
+        match s {
+            "fifo" => Some(ArbPolicy::Fifo),
+            "rr" | "round-robin" => Some(ArbPolicy::RoundRobin),
+            "cap" | "occupancy-cap" => Some(ArbPolicy::OccupancyCap),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant of a [`MixSpec`]: a registry workload name, its core-group
+/// size, and the cycle at which it starts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Registry workload name (paper kernel or synth scenario).
+    pub workload: &'static str,
+    /// Cores in this tenant's group.
+    pub cores: usize,
+    /// Cycle at which the tenant's cores and DX100 contexts wake.
+    pub offset: Cycle,
+}
+
+/// N co-scheduled tenants: workload × core split × phase offsets.
+///
+/// ```
+/// use dx100::workloads::mix::MixSpec;
+///
+/// let m = MixSpec::parse("uni-gather:4,zipf-gather:4@1000").unwrap();
+/// assert_eq!(m.total_cores(), 8);
+/// assert_eq!(m.label(), "uni-gather:4+zipf-gather:4@1000");
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MixSpec {
+    /// The tenants, in core-group order.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl MixSpec {
+    /// An empty mix (add tenants with [`MixSpec::tenant`]).
+    pub fn new() -> Self {
+        MixSpec::default()
+    }
+
+    /// Add a tenant starting at cycle 0.
+    pub fn tenant(self, workload: &str, cores: usize) -> Self {
+        self.tenant_at(workload, cores, 0)
+    }
+
+    /// Add a tenant whose cores and DX100 contexts wake at `offset`.
+    pub fn tenant_at(mut self, workload: &str, cores: usize, offset: Cycle) -> Self {
+        assert!(cores > 0, "tenant needs at least one core");
+        self.tenants.push(TenantSpec {
+            workload: intern(workload),
+            cores,
+            offset,
+        });
+        self
+    }
+
+    /// Parse the CLI grammar: comma-separated `name:cores` entries, each
+    /// with an optional `@offset` phase (cycles), e.g.
+    /// `uni-gather:4,zipf-gather:4@1000`.
+    pub fn parse(s: &str) -> Result<MixSpec, String> {
+        let mut mix = MixSpec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty tenant in mix spec {s:?}"));
+            }
+            let (head, offset) = match part.split_once('@') {
+                Some((h, o)) => (
+                    h,
+                    o.parse::<Cycle>()
+                        .map_err(|_| format!("bad offset in mix tenant {part:?}"))?,
+                ),
+                None => (part, 0),
+            };
+            let (name, cores) = head
+                .split_once(':')
+                .ok_or_else(|| format!("mix tenant {part:?} is not name:cores"))?;
+            let cores: usize = cores
+                .parse()
+                .map_err(|_| format!("bad core count in mix tenant {part:?}"))?;
+            if name.is_empty() || cores == 0 {
+                return Err(format!("mix tenant {part:?} needs a name and cores >= 1"));
+            }
+            mix = mix.tenant_at(name, cores, offset);
+        }
+        if mix.tenants.len() < 2 {
+            return Err(format!("mix spec {s:?} needs at least two tenants"));
+        }
+        Ok(mix)
+    }
+
+    /// Canonical label: tenants joined with `+`, offsets appended as
+    /// `@offset` when non-zero. `parse(label())` round-trips.
+    pub fn label(&self) -> &'static str {
+        let s = self
+            .tenants
+            .iter()
+            .map(|t| {
+                if t.offset == 0 {
+                    format!("{}:{}", t.workload, t.cores)
+                } else {
+                    format!("{}:{}@{}", t.workload, t.cores, t.offset)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+");
+        intern(&s)
+    }
+
+    /// Total cores across every tenant group.
+    pub fn total_cores(&self) -> usize {
+        self.tenants.iter().map(|t| t.cores).sum()
+    }
+
+    /// Build every tenant's workload exactly as a solo run would —
+    /// unrelocated, bit-identical to `reg.build(name, scale)` — so solo
+    /// baselines share cache entries with ordinary runs.
+    pub fn build_solo(&self, reg: &Registry, scale: Scale) -> Result<Vec<WorkloadSpec>, String> {
+        self.tenants
+            .iter()
+            .map(|t| {
+                reg.build(t.workload, scale)
+                    .ok_or_else(|| format!("unknown workload {:?} in mix", t.workload))
+            })
+            .collect()
+    }
+
+    /// Build every tenant's workload relocated to its own address window:
+    /// tenant `i`'s arrays and memory image shift up by `i *`
+    /// [`TENANT_STRIDE`] and its program is renamed `name#t<i>` (all
+    /// tenants rename, so two instances of one workload stay
+    /// distinguishable in per-tenant stats). Tenant 0 keeps its solo
+    /// addresses.
+    pub fn build_relocated(
+        &self,
+        reg: &Registry,
+        scale: Scale,
+    ) -> Result<Vec<WorkloadSpec>, String> {
+        let mut out = self.build_solo(reg, scale)?;
+        for (ti, w) in out.iter_mut().enumerate() {
+            relocate(w, ti);
+        }
+        Ok(out)
+    }
+}
+
+/// Shift workload `w` into tenant `ti`'s address window and rename its
+/// program `name#t<ti>`. The shift moves whole memory-image pages and
+/// adds a row-aligned constant to every array base, so index *values*
+/// (element indices, not addresses) are untouched and the workload's
+/// access pattern is preserved exactly — only its row/bank ids move.
+fn relocate(w: &mut WorkloadSpec, ti: usize) {
+    w.program.name = intern(&format!("{}#t{}", w.program.name, ti));
+    let delta = ti as u64 * TENANT_STRIDE;
+    if delta == 0 {
+        return;
+    }
+    for a in &mut w.program.arrays {
+        a.base += delta;
+    }
+    w.mem.rebase(delta);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_label() {
+        let m = MixSpec::parse("uni-gather:4,zipf-gather:2@500,CG:2").unwrap();
+        assert_eq!(m.tenants.len(), 3);
+        assert_eq!(m.total_cores(), 8);
+        assert_eq!(m.tenants[1].offset, 500);
+        assert_eq!(MixSpec::parse(m.label()).unwrap(), m);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "solo:4",
+            "a,b",
+            "a:0,b:4",
+            ":4,b:4",
+            "a:4,b:x",
+            "a:4,b:4@x",
+        ] {
+            assert!(MixSpec::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn policy_labels_roundtrip() {
+        for p in ArbPolicy::ALL {
+            assert_eq!(ArbPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(ArbPolicy::parse("round-robin"), Some(ArbPolicy::RoundRobin));
+        assert_eq!(ArbPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn relocation_shifts_windows_and_preserves_solo_tenant_zero() {
+        let reg = Registry::paper().with_synth();
+        let m = MixSpec::new()
+            .tenant("uni-gather", 2)
+            .tenant("uni-gather", 2);
+        let solo = m.build_solo(&reg, Scale::test()).unwrap();
+        let relo = m.build_relocated(&reg, Scale::test()).unwrap();
+        // Tenant 0: same addresses, new name.
+        assert_eq!(relo[0].program.name, "uni-gather#t0");
+        assert_eq!(relo[0].mem.stable_hash(), solo[0].mem.stable_hash());
+        assert_eq!(
+            relo[0].program.arrays[0].base,
+            solo[0].program.arrays[0].base
+        );
+        // Tenant 1: every base shifted by exactly one stride, image moved.
+        assert_eq!(relo[1].program.name, "uni-gather#t1");
+        for (a, b) in relo[1].program.arrays.iter().zip(&solo[1].program.arrays) {
+            assert_eq!(a.base, b.base + TENANT_STRIDE);
+        }
+        assert_ne!(relo[1].mem.stable_hash(), solo[1].mem.stable_hash());
+        assert_eq!(relo[1].mem.touched_pages(), solo[1].mem.touched_pages());
+        // Relocated tenants still pass the bounds validator (indices are
+        // element offsets, unaffected by the base shift).
+        for w in &relo {
+            assert!(w.validate_bounds().is_ok(), "{}", w.program.name);
+        }
+    }
+
+    #[test]
+    fn tenant_windows_do_not_overlap() {
+        let reg = Registry::paper().with_synth();
+        let m = MixSpec::new().tenant("CG", 4).tenant("zipf-gather", 4);
+        let relo = m.build_relocated(&reg, Scale::test()).unwrap();
+        let hi = |w: &WorkloadSpec| {
+            w.program
+                .arrays
+                .iter()
+                .map(|a| a.base + crate::compiler::ir::ARRAY_REGION)
+                .max()
+                .unwrap_or(0)
+        };
+        let lo = |w: &WorkloadSpec| w.program.arrays.iter().map(|a| a.base).min().unwrap_or(0);
+        assert!(hi(&relo[0]) <= lo(&relo[1]), "tenant windows overlap");
+    }
+}

@@ -19,11 +19,14 @@
 //! declarative scenario specs (index distribution × access shape ×
 //! size/locality knobs), and [`Registry`] maps workload names to builders
 //! so suites — paper, generated, or mixed — are data the sweep engine can
-//! iterate, not hand-maintained lists.
+//! iterate, not hand-maintained lists. [`mix`] composes registry entries
+//! into multi-tenant co-scheduling specs (tenants × core split × phase
+//! offsets) for shared-DX100 contention studies.
 
 pub mod gap;
 pub mod hashjoin;
 pub mod micro;
+pub mod mix;
 pub mod nas;
 pub mod registry;
 pub mod spatter;

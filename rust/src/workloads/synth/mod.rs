@@ -154,9 +154,10 @@ pub struct ScenarioSpec {
 }
 
 /// Intern a workload name: `Program` and `RunStats` carry `&'static str`
-/// names, and generated scenarios mint theirs at runtime. Each distinct
-/// name leaks exactly once per process.
-fn intern(name: &str) -> &'static str {
+/// names, and generated scenarios mint theirs at runtime (mix tenants and
+/// labels too, via [`crate::workloads::mix`]). Each distinct name leaks
+/// exactly once per process.
+pub(crate) fn intern(name: &str) -> &'static str {
     static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
     let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
     let mut guard = pool.lock().expect("name pool poisoned");

@@ -6,6 +6,7 @@
 
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::ExecOptions;
 use dx100::engine::harness::{Harness, Json};
 use dx100::util::regions;
 use dx100::workloads::micro;
@@ -38,7 +39,7 @@ fn run_bench(name: &'static str) -> Json {
     let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 31);
     // A DX100 run exercises every phase region, including the detached
     // accelerator lane.
-    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3()).run(&w);
+    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3()).run(&w, &ExecOptions::new());
     h.run("gather", &rs);
     h.finish();
     let path = std::env::var("DX100_BENCH_DIR").map(PathBuf::from).unwrap();

@@ -7,7 +7,7 @@
 
 use dx100::compiler::compile_invocations;
 use dx100::config::SystemConfig;
-use dx100::engine::Suite;
+use dx100::engine::{ExecOptions, Suite};
 use dx100::workloads::micro;
 
 #[test]
@@ -22,7 +22,7 @@ fn suite_compiles_each_workload_exactly_once() {
         .workload(micro::scatter(2048, micro::IndexPattern::Streaming, 22));
 
     let before = compile_invocations();
-    let result = suite.execute_with(3);
+    let result = suite.execute(&ExecOptions::new().threads(3));
     let after = compile_invocations();
 
     // 2 workloads x 3 systems = 6 runs, but only 2 compilations.
@@ -33,7 +33,7 @@ fn suite_compiles_each_workload_exactly_once() {
 
     // A second invocation compiles again: dedup is per suite execution,
     // not a process-global cache.
-    let again = suite.execute_with(1);
+    let again = suite.execute(&ExecOptions::new().threads(1));
     assert_eq!(again.compiles, 2);
     assert_eq!(compile_invocations() - after, 2);
 }

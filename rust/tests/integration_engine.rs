@@ -4,7 +4,7 @@
 
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, RunStats, SystemKind};
-use dx100::engine::{execute_with, RunPlan, ALL_SYSTEMS};
+use dx100::engine::{execute, ExecOptions, RunPlan, ALL_SYSTEMS};
 use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
 
 fn small_workloads() -> Vec<WorkloadSpec> {
@@ -42,10 +42,10 @@ fn threaded_engine_is_deterministic() {
     let cfg = SystemConfig::table3();
     let ws = small_workloads();
     let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
-    let serial = execute_with(&plan, 1);
+    let serial = execute(&plan, &ExecOptions::new().threads(1));
     assert_eq!(serial.threads, 1);
     for threads in [2, 4] {
-        let parallel = execute_with(&plan, threads);
+        let parallel = execute(&plan, &ExecOptions::new().threads(threads));
         assert!(parallel.threads >= 2, "expected a threaded run");
         assert_eq!(serial.workloads.len(), parallel.workloads.len());
         for (s, p) in serial.workloads.iter().zip(&parallel.workloads) {
@@ -67,10 +67,10 @@ fn compile_once_matches_per_system_compilation() {
         3,
     )];
     let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
-    let shared = execute_with(&plan, 1);
+    let shared = execute(&plan, &ExecOptions::new().threads(1));
     for kind in ALL_SYSTEMS {
         // The legacy path recompiles per system; stats must be identical.
-        let direct = Experiment::new(kind, cfg.clone()).run(&ws[0]);
+        let direct = Experiment::new(kind, cfg.clone()).run(&ws[0], &ExecOptions::new());
         let via_engine = shared.workloads[0]
             .for_system(kind)
             .unwrap_or_else(|| panic!("missing {kind:?} run"));
@@ -83,7 +83,7 @@ fn engine_results_are_plan_ordered() {
     let cfg = SystemConfig::table3();
     let ws = small_workloads();
     let plan = RunPlan::new(&cfg, &ws, &ALL_SYSTEMS);
-    let r = execute_with(&plan, 4);
+    let r = execute(&plan, &ExecOptions::new().threads(4));
     assert_eq!(r.compiles, ws.len());
     let names: Vec<&str> = r.workloads.iter().map(|w| w.workload).collect();
     let expect: Vec<&str> = ws.iter().map(|w| w.program.name).collect();

@@ -1,0 +1,162 @@
+//! Multi-tenant mix integration: the unified [`ExecOptions`] execution
+//! path is bit-identical across its thread/shard knobs, co-scheduled
+//! mixes are deterministic across the full `(DX100_THREADS,
+//! DX100_SHARDS)` matrix, and mix solo baselines share persisted cache
+//! entries with ordinary solo runs.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::SystemKind;
+use dx100::engine::cache::ResultCache;
+use dx100::engine::mix::{run_mix, MixResult};
+use dx100::engine::{execute, execute_sweep, ExecOptions, RunPlan, SweepPlan, SweepPoint};
+use dx100::workloads::mix::{ArbPolicy, MixSpec};
+use dx100::workloads::{micro, Registry, Scale};
+use std::path::PathBuf;
+
+fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("dx100-mix-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultCache::at(&dir), dir)
+}
+
+/// The per-tenant config `run_mix` compiles solo baselines against: the
+/// base config restricted to the tenant's core group with one DX100
+/// context.
+fn solo_cfg(cores: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::table3();
+    cfg.core.num_cores = cores;
+    cfg.dx100.instances = 1;
+    cfg
+}
+
+/// The single execution path behind every public entry point is
+/// bit-identical at every (threads, shards) setting — this is what the
+/// deleted `run_sharded`/`execute_with`/`execute_sweep_sharded` variants
+/// used to assert piecewise.
+#[test]
+fn exec_options_matrix_is_bit_identical() {
+    let cfg = SystemConfig::table3();
+    let w = [micro::gather_full(1 << 12, micro::IndexPattern::UniformRandom, 7)];
+    let plan = RunPlan::new(&cfg, &w, &dx100::engine::BASE_AND_DX);
+    let reference = execute(&plan, &ExecOptions::new().threads(1).shards(1));
+    for threads in [1usize, 2, 4] {
+        for shards in [1usize, 2, 4] {
+            let r = execute(&plan, &ExecOptions::new().threads(threads).shards(shards));
+            for (got, want) in r.workloads.iter().zip(&reference.workloads) {
+                assert_eq!(
+                    got.runs, want.runs,
+                    "threads={threads} shards={shards} diverged on {}",
+                    got.workload
+                );
+            }
+        }
+    }
+}
+
+fn assert_same_mix(a: &MixResult, b: &MixResult, tag: &str) {
+    assert_eq!(a.combined, b.combined, "{tag}: combined stats diverged");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{tag}");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.solo, y.solo, "{tag}: {} solo diverged", x.workload);
+        assert_eq!(x.mix, y.mix, "{tag}: {} slice diverged", x.workload);
+        assert_eq!(
+            x.slowdown.to_bits(),
+            y.slowdown.to_bits(),
+            "{tag}: {} slowdown diverged",
+            x.workload
+        );
+    }
+    assert_eq!(a.fairness.to_bits(), b.fairness.to_bits(), "{tag}");
+}
+
+/// Co-scheduled mixes are deterministic across the whole
+/// `(threads, shards)` matrix, under every arbitration policy.
+#[test]
+fn mix_is_bit_identical_across_threads_and_shards() {
+    let reg = Registry::paper().with_synth();
+    let mix = MixSpec::new()
+        .tenant("uni-gather", 2)
+        .tenant("zipf-gather", 2);
+    let cfg = SystemConfig::table3();
+    let (cache, dir) = temp_cache("matrix");
+    for policy in [ArbPolicy::Fifo, ArbPolicy::RoundRobin, ArbPolicy::OccupancyCap] {
+        let mut reference: Option<MixResult> = None;
+        for threads in [1usize, 2, 4] {
+            for shards in [1usize, 2, 4] {
+                let opts = ExecOptions::new()
+                    .threads(threads)
+                    .shards(shards)
+                    .cache(cache.clone());
+                let r = run_mix(&mix, &reg, &cfg, Scale::test(), policy, &opts).unwrap();
+                match &reference {
+                    None => reference = Some(r),
+                    Some(want) => assert_same_mix(
+                        &r,
+                        want,
+                        &format!("{} threads={threads} shards={shards}", policy.label()),
+                    ),
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A mix's solo baselines are the same cache cells as ordinary solo runs
+/// of the same (config, workload): runs populate the cache for mixes and
+/// vice versa.
+#[test]
+fn mix_solo_baselines_share_cache_with_ordinary_runs() {
+    let reg = Registry::paper().with_synth();
+    let (cache, dir) = temp_cache("reuse");
+    // An ordinary solo run of uni-gather on the 2-core config...
+    let points = [SweepPoint::new("", solo_cfg(2))];
+    let workloads = [reg.build("uni-gather", Scale::test()).unwrap()];
+    let systems = [SystemKind::Dx100];
+    let plan = SweepPlan::new(&points, &workloads, &systems);
+    let opts = ExecOptions::new().threads(1).cache(cache.clone());
+    let solo = execute_sweep(&plan, &opts);
+    assert_eq!((solo.cache_hits, solo.cache_misses), (0, 1));
+    // ...is a cache hit for the mix's uni-gather baseline; only the
+    // zipf-gather tenant still needs simulating.
+    let mix = MixSpec::new()
+        .tenant("uni-gather", 2)
+        .tenant("zipf-gather", 2);
+    let cfg = SystemConfig::table3();
+    let r = run_mix(&mix, &reg, &cfg, Scale::test(), ArbPolicy::Fifo, &opts).unwrap();
+    assert_eq!((r.solo_cache_hits, r.solo_cache_misses), (1, 1));
+    // The cached baseline is the very result the ordinary run produced.
+    let ordinary = &solo.points[0].workloads[0].runs[0];
+    assert_eq!(&r.tenants[0].solo, ordinary);
+    // A second mix under another policy replays both baselines.
+    let r2 = run_mix(&mix, &reg, &cfg, Scale::test(), ArbPolicy::RoundRobin, &opts).unwrap();
+    assert_eq!((r2.solo_cache_hits, r2.solo_cache_misses), (2, 0));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Phase offsets delay a tenant without perturbing determinism, and the
+/// derived metrics stay in range.
+#[test]
+fn offsets_and_derived_metrics_are_sane() {
+    let reg = Registry::paper().with_synth();
+    let mix = MixSpec::new()
+        .tenant("uni-gather", 2)
+        .tenant_at("zipf-gather", 2, 5000);
+    let cfg = SystemConfig::table3();
+    let opts = ExecOptions::new().no_cache();
+    let r = run_mix(&mix, &reg, &cfg, Scale::test(), ArbPolicy::OccupancyCap, &opts).unwrap();
+    assert_eq!(r.tenants[1].offset, 5000);
+    // The delayed tenant finishes after its offset, so the combined run
+    // must span it.
+    assert!(r.combined.cycles >= 5000, "{}", r.combined.cycles);
+    assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12, "{}", r.fairness);
+    for t in &r.tenants {
+        assert!(t.slowdown > 0.0, "{}", t.workload);
+        assert!(
+            t.row_hit_interference.abs() <= 1.0,
+            "{}: {}",
+            t.workload,
+            t.row_hit_interference
+        );
+    }
+}

@@ -19,7 +19,7 @@
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
 use dx100::engine::cache::ResultCache;
-use dx100::engine::{execute_sweep_sharded, SweepPlan, SweepPoint, ALL_SYSTEMS, BASE_AND_DX};
+use dx100::engine::{execute_sweep, ExecOptions, SweepPlan, SweepPoint, ALL_SYSTEMS, BASE_AND_DX};
 use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
 use std::path::PathBuf;
 
@@ -39,10 +39,10 @@ fn sharded_stats_bit_identical_across_shard_counts() {
     for w in &workloads() {
         for kind in ALL_KINDS {
             let ex = Experiment::new(kind, cfg.clone());
-            let unsharded = ex.run_sharded(w, 1);
+            let unsharded = ex.run(w, &ExecOptions::new().shards(1));
             assert!(unsharded.cycles > 0 && unsharded.events > 0);
             for shards in [2, 4] {
-                let sharded = ex.run_sharded(w, shards);
+                let sharded = ex.run(w, &ExecOptions::new().shards(shards));
                 assert_eq!(
                     unsharded, sharded,
                     "{kind:?}/{} diverged at {shards} shards",
@@ -62,7 +62,7 @@ fn front_end_sharding_bit_identical_with_uneven_core_groups() {
     for w in &workloads() {
         for kind in ALL_KINDS {
             let ex = Experiment::new(kind, cfg.clone());
-            let serial = ex.run_sharded(w, 1);
+            let serial = ex.run(w, &ExecOptions::new().shards(1));
             assert!(serial.front_events > 0, "front end must process events");
             assert_eq!(
                 serial.events,
@@ -73,7 +73,7 @@ fn front_end_sharding_bit_identical_with_uneven_core_groups() {
             // (2+1+1) and on the 6-lane DX100 one (2+2+2 channels-wise,
             // 2+2+1+1 at 4); every fan-out must be bit-identical.
             for shards in [2, 3, 4] {
-                let sharded = ex.run_sharded(w, shards);
+                let sharded = ex.run(w, &ExecOptions::new().shards(shards));
                 assert_eq!(
                     serial, sharded,
                     "{kind:?}/{} diverged at fan-out {shards} with 6 cores",
@@ -92,8 +92,8 @@ fn pool_saturated_sweep_matches_serial() {
     let points = [SweepPoint::new("", SystemConfig::table3_8core())];
     let ws = workloads();
     let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
-    let serial = execute_sweep_sharded(&plan, 1, None, 1);
-    let saturated = execute_sweep_sharded(&plan, 2, None, 4);
+    let serial = execute_sweep(&plan, &ExecOptions::new().threads(1).shards(1).no_cache());
+    let saturated = execute_sweep(&plan, &ExecOptions::new().threads(2).shards(4).no_cache());
     assert_eq!(saturated.threads, 2);
     assert_eq!(saturated.shards, 4);
     for (pa, pb) in serial.points.iter().zip(&saturated.points) {
@@ -111,9 +111,9 @@ fn shard_count_clamps_to_channel_count() {
     let w = micro::gather_full(8192, micro::IndexPattern::UniformRandom, 22);
     for kind in [SystemKind::Baseline, SystemKind::Dx100] {
         let ex = Experiment::new(kind, cfg.clone());
-        let unsharded = ex.run_sharded(&w, 1);
+        let unsharded = ex.run(&w, &ExecOptions::new().shards(1));
         for shards in [2, 4, 64] {
-            assert_eq!(unsharded, ex.run_sharded(&w, shards), "{kind:?}@{shards}");
+            assert_eq!(unsharded, ex.run(&w, &ExecOptions::new().shards(shards)), "{kind:?}@{shards}");
         }
     }
 }
@@ -129,13 +129,13 @@ fn stats_bit_identical_across_thread_shard_matrix() {
     let points = [SweepPoint::new("", SystemConfig::table3_8core())];
     let ws = [micro::gather_full(8192, micro::IndexPattern::UniformRandom, 25)];
     let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
-    let reference = execute_sweep_sharded(&plan, 1, None, 1);
+    let reference = execute_sweep(&plan, &ExecOptions::new().threads(1).shards(1).no_cache());
     for threads in [1, 2, 4] {
         for shards in [1, 2, 4] {
             if (threads, shards) == (1, 1) {
                 continue;
             }
-            let run = execute_sweep_sharded(&plan, threads, None, shards);
+            let run = execute_sweep(&plan, &ExecOptions::new().threads(threads).shards(shards).no_cache());
             for (pa, pb) in reference.points.iter().zip(&run.points) {
                 for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
                     assert_eq!(
@@ -162,14 +162,14 @@ fn sharded_sweep_hits_unsharded_cache_entries() {
     let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
 
     // Cold, unsharded: simulates and persists every cell.
-    let cold = execute_sweep_sharded(&plan, 1, Some(&cache), 1);
+    let cold = execute_sweep(&plan, &ExecOptions::new().threads(1).shards(1).cache(cache.clone()));
     assert_eq!(cold.shards, 1);
     assert_eq!(cold.cache_hits, 0);
     assert_eq!(cold.cache_misses, cold.cells());
 
     // Warm, sharded: the shard count must not perturb any cache key, so
     // every cell replays from the unsharded run's entries.
-    let warm = execute_sweep_sharded(&plan, 2, Some(&cache), 4);
+    let warm = execute_sweep(&plan, &ExecOptions::new().threads(2).shards(4).cache(cache.clone()));
     assert_eq!(warm.shards, 4);
     assert_eq!(warm.cache_hits, warm.cells());
     assert_eq!(warm.cache_misses, 0);
@@ -189,8 +189,8 @@ fn sharded_execution_matches_cacheless_sweep() {
     let points = [SweepPoint::new("", SystemConfig::table3_8core())];
     let ws = [micro::scatter(4096, micro::IndexPattern::Streaming, 24)];
     let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
-    let a = execute_sweep_sharded(&plan, 1, None, 1);
-    let b = execute_sweep_sharded(&plan, 2, None, 4);
+    let a = execute_sweep(&plan, &ExecOptions::new().threads(1).shards(1).no_cache());
+    let b = execute_sweep(&plan, &ExecOptions::new().threads(2).shards(4).no_cache());
     for (pa, pb) in a.points.iter().zip(&b.points) {
         for (wa, wb) in pa.workloads.iter().zip(&pb.workloads) {
             assert_eq!(wa.runs, wb.runs);

@@ -5,7 +5,7 @@
 use dx100::config::SystemConfig;
 use dx100::coordinator::RunStats;
 use dx100::engine::cache::ResultCache;
-use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint, SweepResult, BASE_AND_DX};
+use dx100::engine::{execute_sweep, ExecOptions, SweepPlan, SweepPoint, SweepResult, BASE_AND_DX};
 use dx100::workloads::{micro, nas, Scale, WorkloadSpec};
 use std::path::PathBuf;
 
@@ -86,7 +86,7 @@ fn threaded_sweep_is_deterministic() {
     let points = points();
     let ws = small_workloads();
     let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
-    let serial = execute_sweep_with(&plan, 1, None);
+    let serial = execute_sweep(&plan, &ExecOptions::new().threads(1).no_cache());
     assert_eq!(serial.threads, 1);
     assert_eq!(serial.cells(), 3 * 2 * 2);
     // One front end per workload, no matter how many config points.
@@ -94,7 +94,7 @@ fn threaded_sweep_is_deterministic() {
     // base and buf128 share a compile fingerprint; tile1k re-specializes.
     assert_eq!(serial.specializations, 2 * ws.len());
     for threads in [2, 4] {
-        let parallel = execute_sweep_with(&plan, threads, None);
+        let parallel = execute_sweep(&plan, &ExecOptions::new().threads(threads).no_cache());
         assert!(parallel.threads >= 2, "expected a threaded run");
         assert_same_results(&serial, &parallel);
     }
@@ -107,13 +107,13 @@ fn warm_cache_rerun_is_bit_identical_and_runs_nothing() {
     let plan = SweepPlan::new(&points, &ws, &BASE_AND_DX);
     let (cache, dir) = temp_cache("warm");
 
-    let cold = execute_sweep_with(&plan, 2, Some(&cache));
+    let cold = execute_sweep(&plan, &ExecOptions::new().threads(2).cache(cache.clone()));
     assert!(cold.cache_enabled);
     assert_eq!(cold.cache_hits, 0);
     assert_eq!(cold.cache_misses, cold.cells());
     assert!(cold.compiles > 0);
 
-    let warm = execute_sweep_with(&plan, 2, Some(&cache));
+    let warm = execute_sweep(&plan, &ExecOptions::new().threads(2).cache(cache.clone()));
     assert!(warm.cache_enabled);
     assert_eq!(warm.cache_hits, warm.cells(), "all cells must hit");
     assert_eq!(warm.cache_misses, 0);
@@ -123,7 +123,7 @@ fn warm_cache_rerun_is_bit_identical_and_runs_nothing() {
     assert_same_results(&cold, &warm);
 
     // The cache also serves a serial run identically.
-    let warm_serial = execute_sweep_with(&plan, 1, Some(&cache));
+    let warm_serial = execute_sweep(&plan, &ExecOptions::new().threads(1).cache(cache.clone()));
     assert_eq!(warm_serial.cache_hits, warm_serial.cells());
     assert_same_results(&cold, &warm_serial);
 
@@ -142,10 +142,9 @@ fn cache_does_not_leak_across_configs_or_workloads() {
         micro::IndexPattern::UniformRandom,
         7,
     )];
-    let first = execute_sweep_with(
+    let first = execute_sweep(
         &SweepPlan::new(&base_points, &ws, &BASE_AND_DX),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(first.cache_hits, 0);
 
@@ -155,10 +154,9 @@ fn cache_does_not_leak_across_configs_or_workloads() {
         micro::IndexPattern::UniformRandom,
         7,
     )];
-    let other = execute_sweep_with(
+    let other = execute_sweep(
         &SweepPlan::new(&base_points, &ws2, &BASE_AND_DX),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(other.cache_hits, 0, "different workload must not hit");
 
@@ -166,18 +164,16 @@ fn cache_does_not_leak_across_configs_or_workloads() {
     let mut cfg = SystemConfig::table3();
     cfg.dram.request_buffer = 8;
     let alt_points = vec![SweepPoint::new("buf8", cfg)];
-    let third = execute_sweep_with(
+    let third = execute_sweep(
         &SweepPlan::new(&alt_points, &ws, &BASE_AND_DX),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(third.cache_hits, 0, "different config must not hit");
 
     // And the original plan still hits everything.
-    let again = execute_sweep_with(
+    let again = execute_sweep(
         &SweepPlan::new(&base_points, &ws, &BASE_AND_DX),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(again.cache_hits, again.cells());
     assert_same_results(&first, &again);

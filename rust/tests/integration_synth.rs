@@ -7,7 +7,7 @@ use dx100::compiler::analyze;
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
 use dx100::engine::cache::{workload_fingerprint, ResultCache};
-use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint, ALL_SYSTEMS};
+use dx100::engine::{execute_sweep, ExecOptions, SweepPlan, SweepPoint, ALL_SYSTEMS};
 use dx100::workloads::synth::{self, AccessShape, IndexDist, PatternSpec, ScenarioSpec};
 use dx100::workloads::{Registry, Scale, WorkloadSpec};
 use std::path::PathBuf;
@@ -56,8 +56,8 @@ fn fixed_seed_reproduces_bit_identical_runstats() {
     assert_eq!(workload_fingerprint(&w1), workload_fingerprint(&w2));
     // ...and simulate bit-identically on every system.
     for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
-        let a = Experiment::new(kind, SystemConfig::table3()).run(&w1);
-        let b = Experiment::new(kind, SystemConfig::table3()).run(&w2);
+        let a = Experiment::new(kind, SystemConfig::table3()).run(&w1, &ExecOptions::new());
+        let b = Experiment::new(kind, SystemConfig::table3()).run(&w2, &ExecOptions::new());
         assert_eq!(a, b, "{kind:?} differs across identical builds");
     }
     // A different seed is a different workload.
@@ -87,7 +87,7 @@ fn generated_workloads_replay_from_the_result_cache() {
     ];
     let points = vec![SweepPoint::new("", SystemConfig::table3())];
     let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
-    let cold = execute_sweep_with(&plan, 2, Some(&cache));
+    let cold = execute_sweep(&plan, &ExecOptions::new().threads(2).cache(cache.clone()));
     assert_eq!(cold.cache_hits, 0);
     assert_eq!(cold.cache_misses, 6);
 
@@ -107,7 +107,7 @@ fn generated_workloads_replay_from_the_result_cache() {
         .build(Scale::test()),
     ];
     let plan2 = SweepPlan::new(&points, &ws2, &ALL_SYSTEMS);
-    let warm = execute_sweep_with(&plan2, 2, Some(&cache));
+    let warm = execute_sweep(&plan2, &ExecOptions::new().threads(2).cache(cache.clone()));
     assert_eq!(warm.cache_hits, warm.cells(), "all cells must hit");
     assert_eq!(warm.compiles, 0);
     for (a, b) in cold.points[0].workloads.iter().zip(&warm.points[0].workloads) {
@@ -139,7 +139,7 @@ fn registry_sweeps_the_synth_family_through_the_engine() {
     assert_eq!(ws.len(), 2);
     let points = vec![SweepPoint::new("", SystemConfig::table3())];
     let plan = SweepPlan::new(&points, &ws, &ALL_SYSTEMS);
-    let r = execute_sweep_with(&plan, 2, None);
+    let r = execute_sweep(&plan, &ExecOptions::new().threads(2).no_cache());
     assert_eq!(r.cells(), 6);
     let names: Vec<&str> = r.points[0].workloads.iter().map(|w| w.workload).collect();
     assert_eq!(names, vec!["fam-uni", "fam-chase"]);

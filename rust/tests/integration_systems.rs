@@ -3,6 +3,7 @@
 
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::ExecOptions;
 use dx100::metrics::compare_one;
 use dx100::util::geomean;
 use dx100::workloads::{self, micro, Scale};
@@ -15,7 +16,7 @@ fn cfg() -> SystemConfig {
 fn all_twelve_workloads_complete_on_all_systems() {
     for w in workloads::all(Scale::test()) {
         for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
-            let stats = Experiment::new(kind, cfg()).run(&w);
+            let stats = Experiment::new(kind, cfg()).run(&w, &ExecOptions::new());
             assert!(
                 stats.cycles > 0 && stats.instrs > 0,
                 "{} on {kind:?}",
@@ -159,7 +160,7 @@ fn two_instances_run_and_complete() {
     let mut c = SystemConfig::table3_8core();
     c.dx100.instances = 2;
     let w = workloads::nas::is(Scale::test());
-    let stats = Experiment::new(SystemKind::Dx100, c).run(&w);
+    let stats = Experiment::new(SystemKind::Dx100, c).run(&w, &ExecOptions::new());
     assert_eq!(stats.dx.len(), 2);
     assert!(stats.dx.iter().all(|d| d.instructions > 0));
 }

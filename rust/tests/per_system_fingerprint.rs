@@ -20,7 +20,7 @@ use dx100::config::{Dx100Config, SystemConfig};
 use dx100::prefetch::DmpConfig;
 use dx100::coordinator::{Experiment, SystemKind};
 use dx100::engine::cache::{system_fingerprint, ResultCache};
-use dx100::engine::{execute_sweep_with, SweepPlan, SweepPoint};
+use dx100::engine::{execute_sweep, ExecOptions, SweepPlan, SweepPoint};
 use dx100::workloads::micro;
 use std::path::PathBuf;
 
@@ -124,8 +124,8 @@ fn ab_baseline_stats_bit_identical_across_dmp_knobs() {
     let base = SystemConfig::table3();
     let warp = dmp_warped();
     let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 0xAE);
-    let a = Experiment::new(SystemKind::Baseline, base).run(&w);
-    let b = Experiment::new(SystemKind::Baseline, warp).run(&w);
+    let a = Experiment::new(SystemKind::Baseline, base).run(&w, &ExecOptions::new());
+    let b = Experiment::new(SystemKind::Baseline, warp).run(&w, &ExecOptions::new());
     assert!(a.bw_util.is_finite() && a.row_hit_rate.is_finite());
     assert!(a.occupancy.is_finite() && a.mpki.is_finite());
     assert_eq!(a, b, "baseline stats must not depend on dmp.* knobs");
@@ -144,7 +144,7 @@ fn sweep_dedupes_baseline_across_dmp_only_points() {
     )];
     let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
     let plan = SweepPlan::new(&points, &ws, &systems);
-    let r = execute_sweep_with(&plan, 2, None);
+    let r = execute_sweep(&plan, &ExecOptions::new().threads(2).no_cache());
     assert_eq!(r.cells(), 6);
     // Only the baseline of the warped point reuses the base point's run;
     // DMP and DX100 both track the prefetcher knobs.
@@ -165,18 +165,16 @@ fn cache_serves_baseline_across_dmp_only_configs() {
     )];
     let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
     let base_points = vec![SweepPoint::new("base", SystemConfig::table3())];
-    let cold = execute_sweep_with(
+    let cold = execute_sweep(
         &SweepPlan::new(&base_points, &ws, &systems),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(cold.cache_hits, 0);
 
     let warp_points = vec![SweepPoint::new("warp", dmp_warped())];
-    let warm = execute_sweep_with(
+    let warm = execute_sweep(
         &SweepPlan::new(&warp_points, &ws, &systems),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(warm.cache_hits, 1, "baseline must replay");
     assert_eq!(warm.cache_misses, 2, "DMP + DX100 must re-simulate");
@@ -198,8 +196,8 @@ fn ab_baseline_and_dmp_stats_bit_identical_across_dx_knobs() {
     let warp = dx_warped();
     let w = micro::gather_full(2048, micro::IndexPattern::UniformRandom, 0xAB);
     for kind in [SystemKind::Baseline, SystemKind::Dmp] {
-        let a = Experiment::new(kind, base.clone()).run(&w);
-        let b = Experiment::new(kind, warp.clone()).run(&w);
+        let a = Experiment::new(kind, base.clone()).run(&w, &ExecOptions::new());
+        let b = Experiment::new(kind, warp.clone()).run(&w, &ExecOptions::new());
         assert!(a.bw_util.is_finite() && a.row_hit_rate.is_finite());
         assert!(a.occupancy.is_finite() && a.mpki.is_finite());
         assert_eq!(a, b, "{kind:?} stats must not depend on dx100.* knobs");
@@ -219,7 +217,7 @@ fn sweep_dedupes_cpu_cells_across_dx_only_points() {
     )];
     let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
     let plan = SweepPlan::new(&points, &ws, &systems);
-    let r = execute_sweep_with(&plan, 2, None);
+    let r = execute_sweep(&plan, &ExecOptions::new().threads(2).no_cache());
     assert_eq!(r.cells(), 6);
     // Baseline and DMP of the warped point reuse the base point's runs;
     // only DX100 simulates twice.
@@ -247,18 +245,16 @@ fn cache_serves_cpu_cells_across_dx_only_configs() {
     )];
     let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
     let base_points = vec![SweepPoint::new("base", SystemConfig::table3())];
-    let cold = execute_sweep_with(
+    let cold = execute_sweep(
         &SweepPlan::new(&base_points, &ws, &systems),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(cold.cache_hits, 0);
 
     let warp_points = vec![SweepPoint::new("warp", dx_warped())];
-    let warm = execute_sweep_with(
+    let warm = execute_sweep(
         &SweepPlan::new(&warp_points, &ws, &systems),
-        1,
-        Some(&cache),
+        &ExecOptions::new().threads(1).cache(cache.clone()),
     );
     assert_eq!(warm.cache_hits, 2, "baseline + DMP must replay");
     assert_eq!(warm.cache_misses, 1, "DX100 must re-simulate");

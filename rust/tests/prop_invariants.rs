@@ -5,6 +5,7 @@ use dx100::compiler::ir::{Expr, Program, Stmt};
 use dx100::compiler::{compile, interpret};
 use dx100::config::SystemConfig;
 use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::ExecOptions;
 use dx100::dx100::isa::{DType, Instruction, Op, Opcode};
 use dx100::dx100::mem_image::MemImage;
 use dx100::testkit::{check, gen};
@@ -225,8 +226,8 @@ fn prop_simulation_timing_sane() {
             rng.next_u64(),
         );
         let cfg = SystemConfig::table3();
-        let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w);
-        let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w);
+        let base = Experiment::new(SystemKind::Baseline, cfg.clone()).run(&w, &ExecOptions::new());
+        let dx = Experiment::new(SystemKind::Dx100, cfg).run(&w, &ExecOptions::new());
         assert!(base.cycles > 0 && dx.cycles > 0);
         assert!(base.bw_util <= 1.0 && dx.bw_util <= 1.0, "util must be <= peak");
         assert!(dx.row_hit_rate <= 1.0 && base.row_hit_rate <= 1.0);

@@ -11,7 +11,7 @@
 
 use dx100::compiler::{compile_invocations, specialize_invocations};
 use dx100::config::SystemConfig;
-use dx100::engine::Sweep;
+use dx100::engine::{ExecOptions, Sweep};
 use dx100::workloads::micro;
 use std::sync::Mutex;
 
@@ -41,7 +41,7 @@ fn sweep_compiles_once_per_workload_and_specializes_per_fingerprint() {
 
     let compiles_before = compile_invocations();
     let specializes_before = specialize_invocations();
-    let r = sweep.execute_with(3, None);
+    let r = sweep.execute(&ExecOptions::new().threads(3).no_cache());
     let compiles = compile_invocations() - compiles_before;
     let specializes = specialize_invocations() - specializes_before;
 
@@ -62,7 +62,7 @@ fn sweep_compiles_once_per_workload_and_specializes_per_fingerprint() {
     // A second invocation compiles again: dedup is per sweep execution,
     // not a process-global cache (the *result* cache is what persists,
     // and it is explicitly disabled here).
-    let r2 = sweep.execute_with(1, None);
+    let r2 = sweep.execute(&ExecOptions::new().threads(1).no_cache());
     assert_eq!(r2.compiles, 2);
     assert_eq!(compile_invocations() - compiles_before, 4);
 }
@@ -84,7 +84,7 @@ fn dmp_points_split_front_end_compiles() {
             33,
         ));
     let before = compile_invocations();
-    let r = sweep.execute_with(2, None);
+    let r = sweep.execute(&ExecOptions::new().threads(2).no_cache());
     let compiles = compile_invocations() - before;
     // 2 points x 1 workload x 2 systems (baseline + DX100) = 4 cells; the
     // baseline pair dedupes (its key ignores dmp.*), but each dmp
