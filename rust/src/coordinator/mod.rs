@@ -26,5 +26,8 @@ mod front;
 pub mod system;
 pub mod variant;
 
-pub use system::{Experiment, MixRun, RunInput, RunStats, SystemKind, Tenant, TenantRunStats};
+pub use system::{
+    snapshot_outputs, Experiment, MixRun, OutputSnapshot, RunInput, RunStats, SystemKind, Tenant,
+    TenantRunStats,
+};
 pub use variant::{BaselineVariant, DmpVariant, Dx100Variant, DxSetup, SystemVariant};

@@ -49,8 +49,11 @@
 use super::front::{ChannelJob, DxJob, DxLane, FrontJob, FrontLane, SimJob};
 use super::variant::{DxSetup, SystemVariant};
 use crate::cache::{Hierarchy, SharedAccess, StridePrefetcher};
-use crate::compiler::{compile, CompiledWorkload};
+use crate::compiler::ir::Program;
+use crate::compiler::{analyze, compile, CompiledWorkload};
 use crate::config::SystemConfig;
+use crate::dx100::isa::DType;
+use crate::dx100::mem_image::MemImage;
 use crate::core::{CoreModel, LaneActionKind, LineWaiters};
 use crate::dx100::timing::{Dx100Stats, DxActionKind};
 use crate::dx100::NO_TILE;
@@ -220,6 +223,50 @@ impl TenantRunStats {
     }
 }
 
+/// Final contents of one output array after the functional execution
+/// whose op streams the timing run replays.
+///
+/// The timing model itself carries no data values — the compiler's
+/// functional executions do (the sequential interpreter for Baseline /
+/// DMP streams, the DX100 functional model for accelerator programs) —
+/// so the post-run values of an array are a pure function of (compiled
+/// workload, system kind). [`Experiment::output_snapshot`] selects the
+/// right image; the differential fuzzer ([`crate::engine::fuzz`])
+/// compares snapshots across systems and against a fresh
+/// [`crate::compiler::interpret`] reference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutputSnapshot {
+    /// Array name (IR-level).
+    pub array: &'static str,
+    /// Element type of the array.
+    pub dtype: DType,
+    /// One raw word per element, in index order.
+    pub words: Vec<u64>,
+    /// Position-sensitive region hash ([`MemImage::region_hash`]) — a
+    /// cheap equality probe before any word-level diff.
+    pub hash: u64,
+}
+
+/// Snapshot every array the program's loop body stores to, out of `mem`,
+/// in array-id order.
+pub fn snapshot_outputs(p: &Program, mem: &MemImage) -> Vec<OutputSnapshot> {
+    let (analysis, _) = analyze(p);
+    analysis
+        .stored_arrays
+        .iter()
+        .map(|&id| {
+            let a = &p.arrays[id];
+            let (n, esize) = (a.len as u64, a.dtype.size());
+            OutputSnapshot {
+                array: a.name,
+                dtype: a.dtype,
+                words: mem.snapshot_words(a.base, n, esize),
+                hash: mem.region_hash(a.base, n, esize),
+            }
+        })
+        .collect()
+}
+
 /// Results of a co-scheduled [`Experiment::run_mix`]: whole-system stats
 /// plus per-tenant slices, in tenant order.
 #[derive(Clone, Debug)]
@@ -307,6 +354,20 @@ impl Experiment {
             stats: sys.stats(self.kind, name),
             tenants: sys.tenant_stats(),
         }
+    }
+
+    /// Post-run output-array snapshot for this experiment's system kind:
+    /// the final values of every stored array, read from the functional
+    /// image whose op streams the timing run replays — the sequential
+    /// interpreter's image for Baseline and DMP, the DX100 functional
+    /// model's image for DX100. `p` is the workload's IR program (the
+    /// compiled workload does not retain it).
+    pub fn output_snapshot(&self, cw: &CompiledWorkload, p: &Program) -> Vec<OutputSnapshot> {
+        let mem = match self.kind {
+            SystemKind::Dx100 => &cw.dx.mem,
+            SystemKind::Baseline | SystemKind::Dmp => &cw.baseline.mem,
+        };
+        snapshot_outputs(p, mem)
     }
 
     /// Run a pre-compiled workload with an explicit shard fan-out — the

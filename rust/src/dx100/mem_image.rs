@@ -195,6 +195,26 @@ impl MemImage {
         }
         h.finish()
     }
+
+    /// One raw `esize`-byte word per element of the `n`-element region at
+    /// `addr` (unmapped elements read as zero). The post-run output-array
+    /// snapshot the differential fuzzer compares across systems.
+    pub fn snapshot_words(&self, addr: u64, n: u64, esize: u64) -> Vec<u64> {
+        (0..n).map(|i| self.read_word(addr + i * esize, esize)).collect()
+    }
+
+    /// Position-sensitive FNV-1a hash of one region — unlike
+    /// [`MemImage::stable_hash`], which covers the whole image page-wise,
+    /// this pins the element *order* of a single array, so two images can
+    /// be compared array-by-array without materializing both snapshots.
+    pub fn region_hash(&self, addr: u64, n: u64, esize: u64) -> u64 {
+        let mut h = crate::util::Fnv::with_seed(0x51AB ^ esize);
+        h.u64(n);
+        for i in 0..n {
+            h.u64(self.read_word(addr + i * esize, esize));
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +230,24 @@ mod tests {
         assert_eq!(m.read_u64(0x2000), u64::MAX - 5);
         m.write_f32(0x3000, -1.5);
         assert_eq!(m.read_f32(0x3000), -1.5);
+    }
+
+    #[test]
+    fn region_snapshot_and_hash_are_positional() {
+        let mut m = MemImage::new();
+        m.write_u32(0x1000, 3);
+        m.write_u32(0x1004, 5);
+        assert_eq!(m.snapshot_words(0x1000, 3, 4), vec![3, 5, 0]);
+        let h = m.region_hash(0x1000, 2, 4);
+        assert_eq!(h, m.region_hash(0x1000, 2, 4), "hash must be stable");
+        // Swapping the two elements keeps stable_hash-style content but
+        // must change the positional region hash.
+        let mut swapped = MemImage::new();
+        swapped.write_u32(0x1000, 5);
+        swapped.write_u32(0x1004, 3);
+        assert_ne!(h, swapped.region_hash(0x1000, 2, 4));
+        // Length is part of the hash.
+        assert_ne!(h, m.region_hash(0x1000, 3, 4));
     }
 
     #[test]

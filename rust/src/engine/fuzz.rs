@@ -1,0 +1,617 @@
+//! Differential fuzzing harness (ROADMAP item 5): random generated
+//! scenarios × three systems, checked by three oracle layers.
+//!
+//! Each **case** is pinned by a single `u64` seed: the seed samples a
+//! [`ScenarioSpec`] (index distribution × access shape × knobs, via
+//! [`crate::testkit::scenario`]), the spec's own generation seed, and —
+//! in mix mode — the tenant pairing. The case lowers through the suite
+//! registry exactly like a named scenario, compiles per system, and runs
+//! on Baseline, DMP, and DX100 through [`ExecOptions`]. Per case the
+//! oracles check:
+//!
+//! 1. **Functional equivalence** — the post-run output-array snapshot of
+//!    every system ([`Experiment::output_snapshot`]) must match a fresh
+//!    [`interpret`] reference, and all three systems must agree with each
+//!    other. Pure data-movement shapes (gather / scatter / 2-level, and
+//!    min/max RMW) compare **bit-exactly**; float-accumulating shapes
+//!    (add-RMW, conditional add) tolerate the relative reordering error
+//!    the DX100 tiling legitimately introduces (same discipline as
+//!    `tests/prop_invariants.rs`).
+//! 2. **Conservation invariants** — DRAM reads cover the compulsory
+//!    index-array traffic, `events == front_events + channel_events`
+//!    with both sides active, row-hit rate and bandwidth utilization stay
+//!    in `[0, 1]`, and DX100's row-buffer hit rate does not lose to the
+//!    baseline's on coalescing-friendly gathers (clustered runs or heavy
+//!    duplication).
+//! 3. **Stat sanity** — cycles / instructions / event counts are nonzero
+//!    and self-consistent; DX100 runs carry per-instance stats whose
+//!    finish times bound the run, non-DX100 runs carry none.
+//!
+//! Mix mode co-schedules two sampled tenants under every [`ArbPolicy`]
+//! (fairness bounds, per-tenant attribution conservation) and
+//! additionally asserts that a **single-tenant mix equals the solo run**
+//! bit-for-bit under every policy — with one tenant, arbitration is the
+//! identity by contract.
+//!
+//! Violations never panic: they accumulate as strings in a
+//! [`FuzzReport`], and every failure carries the case seed plus a
+//! one-line `dx100 fuzz --replay <seed>` reproduction
+//! ([`FuzzFailure::replay_line`]). Verdicts are a pure function of
+//! (seed, config) — thread count, shard fan-out, and cache state cannot
+//! change them — so a replay reproduces the verdict bit-for-bit.
+
+use super::{ExecOptions, ALL_SYSTEMS};
+use crate::compiler::{compile, interpret};
+use crate::config::SystemConfig;
+use crate::coordinator::{
+    snapshot_outputs, Experiment, OutputSnapshot, RunInput, RunStats, SystemKind, Tenant,
+};
+use crate::dx100::isa::{DType, Op};
+use crate::testkit::scenario::scenario_spec;
+use crate::util::{div_ceil, Fnv, Rng};
+use crate::workloads::mix::{ArbPolicy, MixSpec};
+use crate::workloads::synth::{AccessShape, IndexDist, ScenarioSpec};
+use crate::workloads::{Registry, Scale, WorkloadSpec};
+use std::sync::Arc;
+
+/// Default base seed of a fuzz batch (`fuzz` with no `--seed`).
+pub const DEFAULT_SEED: u64 = 0xD1F0;
+
+/// Scenario scale: fuzz cases are deliberately small (the sampled specs
+/// keep base sizes down) so a 100-case batch stays CI-affordable.
+const FUZZ_SCALE: Scale = Scale(1);
+
+/// Slack on the coalescing row-buffer-hit ordering check: tiny scenarios
+/// are noisy, so DX100 only *fails* the check when it loses clearly.
+const RBH_SLACK: f64 = 0.05;
+
+/// One failed case: its seed, what it ran, and every oracle violation.
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    /// Batch-relative case index (0 for replays).
+    pub case: usize,
+    /// The case seed — everything needed to reproduce.
+    pub seed: u64,
+    /// Scenario name(s) the case ran.
+    pub scenario: String,
+    /// Whether the case ran in mix mode.
+    pub mix: bool,
+    /// Every oracle violation, in check order.
+    pub violations: Vec<String>,
+}
+
+impl FuzzFailure {
+    /// The one-line CLI reproduction for this failure.
+    pub fn replay_line(&self) -> String {
+        format!(
+            "dx100 fuzz --replay {:#x}{}",
+            self.seed,
+            if self.mix { " --mix 1" } else { "" }
+        )
+    }
+}
+
+/// Outcome of a fuzz batch (or a single replayed case).
+#[derive(Clone, Debug)]
+pub struct FuzzReport {
+    /// Cases executed.
+    pub cases: usize,
+    /// Oracle checks evaluated across all cases.
+    pub checks: u64,
+    /// Cases with at least one violation.
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzReport {
+    /// Whether every case passed every oracle.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Stable fingerprint of the verdict — case/check counts plus every
+    /// failure seed and violation string — for bit-for-bit replay
+    /// comparison.
+    pub fn verdict_hash(&self) -> u64 {
+        let mut h = Fnv::with_seed(0xFD9);
+        h.usize(self.cases).u64(self.checks);
+        for f in &self.failures {
+            h.u64(f.seed).bool(f.mix).str(&f.scenario);
+            for v in &f.violations {
+                h.str(v);
+            }
+        }
+        h.finish()
+    }
+}
+
+/// The seed of batch case `case` under base seed `base` — stable across
+/// releases (FNV, not `std::hash`), so a CI failure line replays anywhere.
+pub fn case_seed(base: u64, case: usize) -> u64 {
+    let mut h = Fnv::with_seed(base);
+    h.usize(case);
+    h.finish()
+}
+
+/// Run a fuzz batch: `cases` seeded cases (solo differential cases, or
+/// two-tenant mix cases when `mix`) against `cfg`. The persisted result
+/// cache is bypassed regardless of `opts` — every verdict is an honest
+/// simulation of the current build.
+pub fn fuzz(
+    cases: usize,
+    base_seed: u64,
+    mix: bool,
+    cfg: &SystemConfig,
+    opts: &ExecOptions,
+) -> FuzzReport {
+    let opts = opts.clone().no_cache();
+    let mut report = FuzzReport {
+        cases,
+        checks: 0,
+        failures: Vec::new(),
+    };
+    for case in 0..cases {
+        let seed = case_seed(base_seed, case);
+        let (scenario, checks, violations) = if mix {
+            run_mix_case(seed, cfg, &opts)
+        } else {
+            run_case(seed, cfg, &opts)
+        };
+        report.checks += checks;
+        if !violations.is_empty() {
+            report.failures.push(FuzzFailure {
+                case,
+                seed,
+                scenario,
+                mix,
+                violations,
+            });
+        }
+    }
+    report
+}
+
+/// Re-run one case from its printed seed. Verdicts are deterministic, so
+/// the replayed report matches the original case bit-for-bit.
+pub fn replay(seed: u64, mix: bool, cfg: &SystemConfig, opts: &ExecOptions) -> FuzzReport {
+    let opts = opts.clone().no_cache();
+    let (scenario, checks, violations) = if mix {
+        run_mix_case(seed, cfg, &opts)
+    } else {
+        run_case(seed, cfg, &opts)
+    };
+    let failures = if violations.is_empty() {
+        Vec::new()
+    } else {
+        vec![FuzzFailure {
+            case: 0,
+            seed,
+            scenario,
+            mix,
+            violations,
+        }]
+    };
+    FuzzReport {
+        cases: 1,
+        checks,
+        failures,
+    }
+}
+
+/// Violation collector: counts every evaluated check, records failures as
+/// strings instead of panicking, so one case reports all of its
+/// violations at once.
+#[derive(Default)]
+struct Oracle {
+    checks: u64,
+    violations: Vec<String>,
+}
+
+impl Oracle {
+    fn check(&mut self, ok: bool, msg: impl FnOnce() -> String) {
+        self.checks += 1;
+        if !ok {
+            self.violations.push(msg());
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        self.violations.push(msg);
+    }
+}
+
+/// Whether the shape accumulates floats in a reorderable reduction —
+/// DX100 tiling may re-associate those sums, so equivalence is checked
+/// with a relative tolerance instead of bit-exactly.
+fn fp_accumulating(shape: &AccessShape) -> bool {
+    matches!(
+        shape,
+        AccessShape::Rmw { op: Op::Add, .. } | AccessShape::Conditional { .. }
+    )
+}
+
+/// Whether the sampled pattern is coalescing-friendly enough that DX100's
+/// row-buffer hit rate should not lose to the baseline's (the paper's
+/// access-reordering claim, checked on gathers only — scatters and RMWs
+/// change the write mix).
+fn coalescing_friendly(spec: &ScenarioSpec) -> bool {
+    matches!(spec.shape, AccessShape::Gather)
+        && (matches!(spec.pattern.dist, IndexDist::Runs { .. }) || spec.pattern.dup >= 0.5)
+}
+
+/// Relative tolerance for float-accumulating shapes, by element type.
+fn fp_tolerance(dtype: DType) -> f64 {
+    match dtype {
+        DType::F64 => 1e-9,
+        _ => 1e-3,
+    }
+}
+
+/// Compare one system's output snapshot against the interpret reference.
+fn check_outputs(
+    o: &mut Oracle,
+    spec: &ScenarioSpec,
+    label: &str,
+    tolerant: bool,
+    want: &[OutputSnapshot],
+    got: &[OutputSnapshot],
+) {
+    o.check(want.len() == got.len(), || {
+        format!(
+            "{}/{label}: {} output arrays, reference has {}",
+            spec.name,
+            got.len(),
+            want.len()
+        )
+    });
+    for (w, g) in want.iter().zip(got) {
+        o.check(w.array == g.array && w.dtype == g.dtype, || {
+            format!(
+                "{}/{label}: output array mismatch ({}:{:?} vs {}:{:?})",
+                spec.name, g.array, g.dtype, w.array, w.dtype
+            )
+        });
+        if !tolerant {
+            o.check(w.hash == g.hash && w.words == g.words, || {
+                let at = w
+                    .words
+                    .iter()
+                    .zip(&g.words)
+                    .position(|(a, b)| a != b)
+                    .map(|i| format!(" (first diff at [{i}])"))
+                    .unwrap_or_default();
+                format!(
+                    "{}/{label}: {} diverges bit-exactly from the reference{at}",
+                    spec.name, w.array
+                )
+            });
+            continue;
+        }
+        let tol = fp_tolerance(w.dtype);
+        let bad = w.words.iter().zip(&g.words).enumerate().find(|(_, (a, b))| {
+            let (x, y) = match w.dtype {
+                DType::F64 => (f64::from_bits(**a), f64::from_bits(**b)),
+                _ => (
+                    f32::from_bits(**a as u32) as f64,
+                    f32::from_bits(**b as u32) as f64,
+                ),
+            };
+            (x - y).abs() > tol * x.abs().max(1.0)
+        });
+        o.check(bad.is_none(), || {
+            let (i, (a, b)) = bad.expect("guarded by is_none");
+            format!(
+                "{}/{label}: {}[{i}] off by more than {tol:e} rel ({a:#x} vs {b:#x})",
+                spec.name, w.array
+            )
+        });
+    }
+}
+
+/// Layer (b) + (c): conservation invariants and stat sanity for one run.
+fn check_stats(
+    o: &mut Oracle,
+    spec: &ScenarioSpec,
+    w: &WorkloadSpec,
+    cfg: &SystemConfig,
+    rs: &RunStats,
+) {
+    let tag = || format!("{}/{}", spec.name, rs.kind.label());
+    // Stat sanity: nonzero, finite, self-consistent.
+    o.check(rs.cycles > 0 && rs.instrs > 0, || {
+        format!("{}: empty run (cycles={} instrs={})", tag(), rs.cycles, rs.instrs)
+    });
+    o.check(
+        (0.0..=1.0).contains(&rs.row_hit_rate) && (0.0..=1.0).contains(&rs.bw_util),
+        || {
+            format!(
+                "{}: rate out of [0,1] (rbh={} bw={})",
+                tag(),
+                rs.row_hit_rate,
+                rs.bw_util
+            )
+        },
+    );
+    o.check(
+        rs.occupancy.is_finite() && rs.occupancy >= 0.0 && rs.mpki.is_finite() && rs.mpki >= 0.0,
+        || format!("{}: occupancy/mpki insane ({} / {})", tag(), rs.occupancy, rs.mpki),
+    );
+    // Conservation: the per-phase event counts must both be active and
+    // sum exactly to the total (front end vs per-channel engines).
+    o.check(
+        rs.events == rs.front_events + rs.channel_events
+            && rs.front_events > 0
+            && rs.channel_events > 0,
+        || {
+            format!(
+                "{}: event conservation broken (total={} front={} channel={})",
+                tag(),
+                rs.events,
+                rs.front_events,
+                rs.channel_events
+            )
+        },
+    );
+    // Conservation: cold caches make one 4-byte-per-iteration stream
+    // compulsory DRAM traffic for every shape — the index array B for
+    // gather / scatter / RMW / two-level, the F32 condition mask M for
+    // the conditional shape (B is branch-guarded there, M never is).
+    // Arrays occupy disjoint regions, so the lines are exclusively its.
+    let compulsory = div_ceil(w.program.iters as u64 * 4, cfg.dram.line_bytes as u64);
+    o.check(rs.dram_reads >= compulsory, || {
+        format!(
+            "{}: DRAM reads {} below compulsory index traffic {}",
+            tag(),
+            rs.dram_reads,
+            compulsory
+        )
+    });
+    o.check(rs.dram_bytes >= rs.dram_reads + rs.dram_writes, || {
+        format!(
+            "{}: dram_bytes {} < transactions {}",
+            tag(),
+            rs.dram_bytes,
+            rs.dram_reads + rs.dram_writes
+        )
+    });
+    // Per-kind accelerator stats.
+    match rs.kind {
+        SystemKind::Dx100 => {
+            o.check(!rs.dx.is_empty(), || format!("{}: no DX100 instance stats", tag()));
+            let instrs: u64 = rs.dx.iter().map(|d| d.instructions).sum();
+            o.check(instrs > 0, || format!("{}: DX100 retired nothing", tag()));
+            o.check(rs.dx.iter().all(|d| d.finish_time <= rs.cycles), || {
+                format!("{}: a DX100 instance outlived the run", tag())
+            });
+        }
+        _ => o.check(rs.dx.is_empty(), || {
+            format!("{}: non-DX100 run carries DX100 stats", tag())
+        }),
+    }
+}
+
+/// One solo differential case: sample, lower through the registry, run on
+/// all three systems, apply all three oracle layers.
+fn run_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, Vec<String>) {
+    let mut rng = Rng::new(seed);
+    let spec = scenario_spec(&mut rng, seed);
+    let mut o = Oracle::default();
+    let mut reg = Registry::new();
+    reg.register_scenario(spec.clone());
+    let w = reg.build(spec.name, FUZZ_SCALE).expect("just registered");
+    // The independent sequential reference (layer a).
+    let reference = interpret(&w.program, &w.mem, None);
+    let ref_snap = snapshot_outputs(&w.program, &reference.mem);
+    let mut runs: Vec<(SystemKind, RunStats, Vec<OutputSnapshot>)> = Vec::new();
+    for kind in ALL_SYSTEMS {
+        let ex = Experiment::new(kind, cfg.clone());
+        let cw = match compile(&w.program, &w.mem, &ex.cfg) {
+            Ok(cw) => Arc::new(cw),
+            Err(e) => {
+                o.fail(format!("{}/{}: rejected by compiler: {e}", spec.name, kind.label()));
+                continue;
+            }
+        };
+        let rs = ex.run(RunInput::Compiled { cw: &cw, warm: w.warm_caches }, opts);
+        let snap = ex.output_snapshot(&cw, &w.program);
+        // Baseline and DMP replay the sequential interpretation, so they
+        // must match the reference bit-exactly; DX100 gets the
+        // accumulation tolerance on reorderable float reductions.
+        let tolerant = kind == SystemKind::Dx100 && fp_accumulating(&spec.shape);
+        check_outputs(&mut o, &spec, kind.label(), tolerant, &ref_snap, &snap);
+        check_stats(&mut o, &spec, &w, cfg, &rs);
+        runs.push((kind, rs, snap));
+    }
+    // Cross-system agreement: every pair of systems, same tolerance rule.
+    for i in 0..runs.len() {
+        for j in i + 1..runs.len() {
+            let label = format!("{}≡{}", runs[i].0.label(), runs[j].0.label());
+            let tolerant = (runs[i].0 == SystemKind::Dx100 || runs[j].0 == SystemKind::Dx100)
+                && fp_accumulating(&spec.shape);
+            check_outputs(&mut o, &spec, &label, tolerant, &runs[i].2, &runs[j].2);
+        }
+    }
+    // Coalescing claim: DX100's row-buffer hit rate must not clearly lose
+    // to the baseline's on run-clustered or duplication-heavy gathers.
+    if coalescing_friendly(&spec) {
+        let find = |k: SystemKind| {
+            runs.iter().find(|(kind, ..)| *kind == k).map(|(_, rs, _)| rs)
+        };
+        if let (Some(base), Some(dx)) = (find(SystemKind::Baseline), find(SystemKind::Dx100)) {
+            o.check(dx.row_hit_rate + RBH_SLACK >= base.row_hit_rate, || {
+                format!(
+                    "{}: DX100 row-hit rate {:.3} loses to baseline {:.3} on a coalescing-friendly gather",
+                    spec.name, dx.row_hit_rate, base.row_hit_rate
+                )
+            });
+        }
+    }
+    (spec.name.to_string(), o.checks, o.violations)
+}
+
+/// One mix case: two sampled tenants co-scheduled under every arbitration
+/// policy, plus the single-tenant-mix ≡ solo identity.
+fn run_mix_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, Vec<String>) {
+    let mut rng = Rng::new(seed);
+    let a = scenario_spec(&mut rng, seed ^ 0x51);
+    let b = scenario_spec(&mut rng, seed ^ 0x52);
+    let label = format!("{}+{}", a.name, b.name);
+    let mut o = Oracle::default();
+    let mut reg = Registry::new();
+    reg.register_scenario(a.clone());
+    reg.register_scenario(b.clone());
+    let total = cfg.core.num_cores.max(2);
+    let cores_a = 1 + rng.below_usize(total - 1);
+    let offset = *rng.pick(&[0, 0, 500, 2000]);
+    let mix = MixSpec::new()
+        .tenant(a.name, cores_a)
+        .tenant_at(b.name, total - cores_a, offset);
+    for policy in ArbPolicy::ALL {
+        let r = match super::mix::run_mix(&mix, &reg, cfg, FUZZ_SCALE, policy, opts) {
+            Ok(r) => r,
+            Err(e) => {
+                o.fail(format!("{label}@{}: mix failed: {e}", policy.label()));
+                continue;
+            }
+        };
+        let tag = || format!("{label}@{}", policy.label());
+        o.check(r.tenants.len() == 2, || format!("{}: wrong tenant count", tag()));
+        o.check(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-9, || {
+            format!("{}: fairness {} out of (0,1]", tag(), r.fairness)
+        });
+        o.check(
+            r.combined.cycles >= r.tenants.iter().map(|t| t.mix.cycles).max().unwrap_or(0),
+            || format!("{}: combined run shorter than a tenant", tag()),
+        );
+        // Attributed traffic is conserved: every tenant slice stays
+        // self-consistent and the slices never exceed the shared totals
+        // (end-of-run writebacks are unattributed, so ≤, not ==).
+        let (reads, writes): (u64, u64) = r
+            .tenants
+            .iter()
+            .fold((0, 0), |(r0, w0), t| (r0 + t.mix.dram_reads, w0 + t.mix.dram_writes));
+        o.check(
+            reads <= r.combined.dram_reads && writes <= r.combined.dram_writes,
+            || {
+                format!(
+                    "{}: attributed traffic ({reads}r/{writes}w) exceeds combined ({}r/{}w)",
+                    tag(),
+                    r.combined.dram_reads,
+                    r.combined.dram_writes
+                )
+            },
+        );
+        for t in &r.tenants {
+            o.check(
+                t.solo.cycles > 0 && t.mix.cycles > 0 && t.slowdown > 0.0,
+                || format!("{}/{}: empty tenant run", tag(), t.workload),
+            );
+            o.check(
+                t.mix.row_hits <= t.mix.row_accesses
+                    && t.mix.row_accesses == t.mix.dram_reads + t.mix.dram_writes,
+                || format!("{}/{}: tenant DRAM attribution inconsistent", tag(), t.workload),
+            );
+            o.check((0.0..=1.0).contains(&t.mix.row_hit_rate()), || {
+                format!("{}/{}: tenant row-hit rate out of [0,1]", tag(), t.workload)
+            });
+            o.check(t.mix.dram_reads > 0, || {
+                format!("{}/{}: tenant attributed no DRAM reads", tag(), t.workload)
+            });
+        }
+    }
+    // Single-tenant mix == solo, under every policy: with one tenant the
+    // arbitration snapshot is the identity by contract, so the whole
+    // RunStats must be bit-identical to the plain solo path.
+    let w = reg.build(a.name, FUZZ_SCALE).expect("registered above");
+    let ex = Experiment::new(SystemKind::Dx100, cfg.clone());
+    match compile(&w.program, &w.mem, &ex.cfg) {
+        Ok(cw) => {
+            let cw = Arc::new(cw);
+            let solo = ex.run(RunInput::Compiled { cw: &cw, warm: w.warm_caches }, opts);
+            for policy in ArbPolicy::ALL {
+                let mr = ex.run_mix(cw.name, &[Tenant::new(&cw, w.warm_caches)], policy, opts);
+                o.check(mr.stats == solo, || {
+                    format!(
+                        "{}: single-tenant mix@{} != solo ({} vs {} cycles)",
+                        a.name,
+                        policy.label(),
+                        mr.stats.cycles,
+                        solo.cycles
+                    )
+                });
+                let t = &mr.tenants[0];
+                o.check(
+                    t.instrs == solo.instrs
+                        && t.dram_reads <= solo.dram_reads
+                        && t.dram_writes <= solo.dram_writes
+                        && t.row_accesses == t.dram_reads + t.dram_writes,
+                    || {
+                        format!(
+                            "{}: single-tenant attribution not conserved @{}",
+                            a.name,
+                            policy.label()
+                        )
+                    },
+                );
+            }
+        }
+        Err(e) => o.fail(format!("{}: rejected by compiler: {e}", a.name)),
+    }
+    (label, o.checks, o.violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_seeds_are_stable_and_distinct() {
+        assert_eq!(case_seed(8, 0), case_seed(8, 0));
+        assert_ne!(case_seed(8, 0), case_seed(8, 1));
+        assert_ne!(case_seed(8, 0), case_seed(9, 0));
+    }
+
+    #[test]
+    fn oracle_collects_instead_of_panicking() {
+        let mut o = Oracle::default();
+        o.check(true, || unreachable!("message closures are lazy"));
+        o.check(false, || "first".to_string());
+        o.check(false, || "second".to_string());
+        assert_eq!(o.checks, 3);
+        assert_eq!(o.violations, vec!["first", "second"]);
+    }
+
+    #[test]
+    fn verdict_hash_tracks_failures() {
+        let clean = FuzzReport {
+            cases: 2,
+            checks: 10,
+            failures: Vec::new(),
+        };
+        let mut failed = clean.clone();
+        failed.failures.push(FuzzFailure {
+            case: 1,
+            seed: 0xAB,
+            scenario: "fz-x".into(),
+            mix: false,
+            violations: vec!["boom".into()],
+        });
+        assert_ne!(clean.verdict_hash(), failed.verdict_hash());
+        assert_eq!(clean.verdict_hash(), clean.verdict_hash());
+        assert!(failed.failures[0].replay_line().contains("--replay 0xab"));
+    }
+
+    #[test]
+    fn fp_classification_matches_shapes() {
+        assert!(fp_accumulating(&AccessShape::Rmw {
+            op: Op::Add,
+            atomic: true
+        }));
+        assert!(fp_accumulating(&AccessShape::Conditional { density: 0.5 }));
+        assert!(!fp_accumulating(&AccessShape::Gather));
+        assert!(!fp_accumulating(&AccessShape::Rmw {
+            op: Op::Max,
+            atomic: false
+        }));
+        assert!(!fp_accumulating(&AccessShape::TwoLevel));
+    }
+}

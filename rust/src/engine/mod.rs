@@ -53,11 +53,16 @@
 //!   shared system (disjoint core groups, one DX100 + LLC + DRAM) and
 //!   derives per-tenant slowdown / fairness / row-hit interference
 //!   against cache-served solo runs.
+//! * [`fuzz`] is the differential fuzzer: seeded random scenarios run on
+//!   all three systems and are checked for functional equivalence against
+//!   the sequential reference, conservation invariants, and stat sanity
+//!   (`dx100 fuzz` on the CLI; failures replay from a single seed).
 //! * [`harness`] is the shared bench-binary entry point: scale/thread env
 //!   knobs, wall-time + per-phase events/sec throughput, cache hit/miss
 //!   and pool-occupancy surfacing, `BENCH_*.json` emission.
 
 pub mod cache;
+pub mod fuzz;
 pub mod harness;
 pub mod mix;
 pub mod pool;

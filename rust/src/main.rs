@@ -6,6 +6,9 @@
 //!                                            # (workloads::synth names)
 //! dx100 run --mix CG:4,zipf-gather:4         # co-scheduled tenants on one
 //!            --policy rr                     # shared DX100 (fifo|rr|cap)
+//! dx100 fuzz --cases 100 [--seed S]          # differential fuzzer: random
+//!            [--mix 1]                       # scenarios x 3 systems
+//! dx100 fuzz --replay 0xSEED [--mix 1]       # re-run one failing case
 //! dx100 list-workloads                       # every registry name
 //! dx100 suite --scale 4                      # all 12 workloads (Fig 9-11)
 //! dx100 micro                                # §6.1 microbenchmarks (Fig 8a)
@@ -76,7 +79,10 @@ fn scale_of(kv: &BTreeMap<String, String>) -> Scale {
 fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
     let overrides: BTreeMap<String, String> = kv
         .iter()
-        .filter(|(k, _)| !["scale", "workload", "system", "mix", "policy"].contains(&k.as_str()))
+        .filter(|(k, _)| {
+            !["scale", "workload", "system", "mix", "policy", "cases", "seed", "replay"]
+                .contains(&k.as_str())
+        })
         .map(|(k, v)| (k.clone(), v.clone()))
         .collect();
     SystemConfig::table3()
@@ -85,6 +91,15 @@ fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
             eprintln!("config error: {e}");
             std::process::exit(2);
         })
+}
+
+/// Parse a fuzz seed: plain decimal or `0x`-prefixed hex (the form the
+/// failure lines print).
+fn parse_seed(raw: &str) -> Option<u64> {
+    match raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => raw.parse().ok(),
+    }
 }
 
 fn main() {
@@ -160,6 +175,59 @@ fn main() {
             println!("{}", report::speedup_table(std::slice::from_ref(&c)));
             println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
             println!("{}", report::instr_mpki_table(std::slice::from_ref(&c)));
+        }
+        "fuzz" => {
+            let opts = engine::ExecOptions::new();
+            let mix = kv
+                .get("mix")
+                .map(|v| !matches!(v.as_str(), "0" | "false"))
+                .unwrap_or(false);
+            let report = if let Some(raw) = kv.get("replay") {
+                let seed = parse_seed(raw).unwrap_or_else(|| {
+                    eprintln!("bad --replay {raw}: want a decimal or 0x-hex seed");
+                    std::process::exit(2);
+                });
+                eprintln!("replaying case {seed:#x} (mix={mix}) ...");
+                engine::fuzz::replay(seed, mix, &cfg, &opts)
+            } else {
+                let cases = kv
+                    .get("cases")
+                    .map(|v| {
+                        v.parse().unwrap_or_else(|_| {
+                            eprintln!("bad --cases {v}");
+                            std::process::exit(2);
+                        })
+                    })
+                    .unwrap_or(50);
+                let seed = match kv.get("seed") {
+                    None => engine::fuzz::DEFAULT_SEED,
+                    Some(raw) => parse_seed(raw).unwrap_or_else(|| {
+                        eprintln!("bad --seed {raw}: want a decimal or 0x-hex seed");
+                        std::process::exit(2);
+                    }),
+                };
+                eprintln!(
+                    "fuzzing {cases} {} cases (base seed {seed:#x}) ...",
+                    if mix { "mix" } else { "differential" }
+                );
+                engine::fuzz::fuzz(cases, seed, mix, &cfg, &opts)
+            };
+            for f in &report.failures {
+                println!("FAIL case {} seed {:#x} [{}]", f.case, f.seed, f.scenario);
+                for v in &f.violations {
+                    println!("  {v}");
+                }
+                println!("  replay: {}", f.replay_line());
+            }
+            println!(
+                "fuzz: {} cases, {} checks, {} failed",
+                report.cases,
+                report.checks,
+                report.failures.len()
+            );
+            if !report.passed() {
+                std::process::exit(1);
+            }
         }
         "list-workloads" => {
             let reg = workloads::Registry::paper().with_synth();
@@ -328,9 +396,10 @@ fn main() {
         },
         _ => {
             println!(
-                "usage: dx100 <run|list-workloads|suite|micro|allmiss|tilesweep|scaling|area|\
-                 isa|runtime> [--workload NAME] [--mix name:cores[@offset],..] \
-                 [--policy fifo|rr|cap] [--scale N] [--set key=value]"
+                "usage: dx100 <run|fuzz|list-workloads|suite|micro|allmiss|tilesweep|scaling|\
+                 area|isa|runtime> [--workload NAME] [--mix name:cores[@offset],..] \
+                 [--policy fifo|rr|cap] [--scale N] [--set key=value] \
+                 [--cases N] [--seed S] [--replay S] [--mix 1]"
             );
             println!("env:");
             println!("  DX100_SCALE=N       dataset scale for suite/bench runs (default 2)");

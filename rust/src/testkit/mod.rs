@@ -1,6 +1,8 @@
 //! Minimal property-testing kit (no external crates are available offline):
 //! a deterministic case runner over seeded generators with failure-seed
-//! reporting. Used by `rust/tests/prop_*.rs` for coordinator invariants.
+//! reporting, plus scenario-space generators for the differential fuzzer.
+//! Used by `rust/tests/prop_*.rs` for coordinator invariants and by
+//! [`crate::engine::fuzz`].
 
 use crate::util::Rng;
 
@@ -56,6 +58,95 @@ pub mod gen {
     }
 }
 
+/// Random-scenario generators over the `workloads::synth` space: a
+/// deterministic [`Rng`] samples an index distribution, an access shape,
+/// and the size/locality knobs, yielding a [`ScenarioSpec`] that lowers
+/// through the registry path like any named scenario. One seed pins the
+/// sampled spec *and* its realized memory, so a failing fuzz case is a
+/// single u64 away from replay ([`crate::engine::fuzz`]).
+pub mod scenario {
+    use crate::dx100::isa::{DType, Op};
+    use crate::util::Rng;
+    use crate::workloads::synth::{AccessShape, IndexDist, PatternSpec, ScenarioSpec};
+
+    /// Stride tables for [`IndexDist::Runs`] (the enum wants `'static`).
+    const STRIDE_SETS: [&[u64]; 3] = [&[1, 1, 2, 4], &[1], &[2, 4, 8]];
+
+    /// Sample an index distribution: (stable label, distribution).
+    pub fn index_dist(rng: &mut Rng) -> (&'static str, IndexDist) {
+        match rng.below(5) {
+            0 => ("uni", IndexDist::Uniform),
+            1 => (
+                "zipf",
+                IndexDist::Zipf {
+                    theta: *rng.pick(&[0.6, 0.8, 0.99]),
+                },
+            ),
+            2 => {
+                let min_run = 4 + rng.below(12);
+                (
+                    "runs",
+                    IndexDist::Runs {
+                        min_run,
+                        max_run: min_run + 1 + rng.below(60),
+                        strides: rng.pick(&STRIDE_SETS),
+                    },
+                )
+            }
+            3 => ("chase", IndexDist::Chase),
+            _ => (
+                "hash",
+                IndexDist::Hashed {
+                    buckets: *rng.pick(&[64usize, 256, 1024]),
+                },
+            ),
+        }
+    }
+
+    /// Sample an access shape: (stable label, shape).
+    pub fn access_shape(rng: &mut Rng) -> (&'static str, AccessShape) {
+        match rng.below(5) {
+            0 => ("gather", AccessShape::Gather),
+            1 => ("scatter", AccessShape::Scatter),
+            2 => (
+                "rmw",
+                AccessShape::Rmw {
+                    op: *rng.pick(&[Op::Add, Op::Min, Op::Max]),
+                    atomic: rng.chance(0.5),
+                },
+            ),
+            3 => (
+                "cond",
+                AccessShape::Conditional {
+                    density: *rng.pick(&[0.1, 0.25, 0.5, 0.9]),
+                },
+            ),
+            _ => ("2lvl", AccessShape::TwoLevel),
+        }
+    }
+
+    /// Sample a complete scenario. Sizes are kept small (256–1024 base
+    /// stream over a 4K–16K target) so a fuzz batch of hundreds of cases
+    /// stays CI-affordable; `seed` pins the sampled knobs, the realized
+    /// index stream, and the scenario's unique name
+    /// (`fz-<dist>-<shape>-<seed>`).
+    pub fn scenario_spec(rng: &mut Rng, seed: u64) -> ScenarioSpec {
+        let (dlabel, dist) = index_dist(rng);
+        let (slabel, shape) = access_shape(rng);
+        let mut pattern = PatternSpec::new(dist, seed)
+            .with_stream(256usize << rng.below(3))
+            .with_target(4096usize << rng.below(3))
+            .with_dup(*rng.pick(&[0.0, 0.0, 0.25, 0.5, 0.75]));
+        if rng.chance(0.25) {
+            pattern = pattern.with_hot(0.1, 0.9);
+        }
+        if rng.chance(0.2) {
+            pattern = pattern.with_dtype(DType::F64);
+        }
+        ScenarioSpec::new(&format!("fz-{dlabel}-{slabel}-{seed:016x}"), pattern, shape)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,6 +175,25 @@ mod tests {
         for _ in 0..100 {
             let s = gen::size(&mut rng, 64);
             assert!((1..=64).contains(&s));
+        }
+    }
+
+    #[test]
+    fn scenario_sampling_is_deterministic_and_buildable() {
+        use crate::compiler::analyze;
+        use crate::workloads::Scale;
+        for case in 0..8u64 {
+            let seed = 0xFA2E ^ case;
+            let a = scenario::scenario_spec(&mut Rng::new(seed), seed);
+            let b = scenario::scenario_spec(&mut Rng::new(seed), seed);
+            assert!(std::ptr::eq(a.name, b.name), "names must intern equal");
+            let wa = a.build(Scale::test());
+            let wb = b.build(Scale::test());
+            assert_eq!(wa.mem.stable_hash(), wb.mem.stable_hash(), "{}", a.name);
+            let (an, legal) = analyze(&wa.program);
+            assert!(legal.is_ok(), "{}: {:?}", a.name, legal.err());
+            assert!(an.max_indirection >= 1, "{}", a.name);
+            assert!(wa.validate_bounds().is_ok(), "{}", a.name);
         }
     }
 

@@ -262,6 +262,74 @@ mod tests {
     }
 
     #[test]
+    fn parse_errors_name_the_offending_tenant() {
+        // Each malformed class produces its own diagnostic, and the
+        // message carries the offending fragment (or the whole spec for
+        // spec-level failures) so a CLI user can see *which* tenant broke.
+        for (bad, want) in [
+            ("a:4,,b:4", "empty tenant in mix spec"),
+            ("a:4,b:4@x", "bad offset in mix tenant \"b:4@x\""),
+            ("a:4,bee", "mix tenant \"bee\" is not name:cores"),
+            ("a:4,b:x", "bad core count in mix tenant \"b:x\""),
+            ("a:4,b:-1", "bad core count in mix tenant \"b:-1\""),
+            ("a:4,:4", "needs a name and cores >= 1"),
+            ("a:4,b:0", "needs a name and cores >= 1"),
+            ("solo:4", "needs at least two tenants"),
+            ("", "empty tenant in mix spec"),
+        ] {
+            let err = MixSpec::parse(bad).unwrap_err();
+            assert!(
+                err.contains(want),
+                "{bad:?}: error {err:?} should mention {want:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_accepts_huge_but_valid_offsets_and_rejects_overflow_cores() {
+        // Offsets parse as cycles (u64): large values are legal phases.
+        let m = MixSpec::parse("a:1,b:1@18446744073709551615").unwrap();
+        assert_eq!(m.tenants[1].offset, u64::MAX);
+        // Core counts beyond usize overflow the parse, not the process.
+        let err = MixSpec::parse("a:99999999999999999999999,b:4").unwrap_err();
+        assert!(err.contains("bad core count"), "{err:?}");
+    }
+
+    #[test]
+    fn unknown_workloads_fail_at_build_not_parse() {
+        // Names are resolved against the registry only at build time, so
+        // the parse succeeds and build_solo names the missing workload.
+        let m = MixSpec::parse("no-such-kernel:4,CG:4").unwrap();
+        let err = m.build_solo(&Registry::paper(), Scale::test()).unwrap_err();
+        assert!(
+            err.contains("unknown workload \"no-such-kernel\" in mix"),
+            "{err:?}"
+        );
+        // Synth names resolve only once the synth family is registered.
+        assert!(MixSpec::parse("uni-gather:4,CG:4")
+            .unwrap()
+            .build_solo(&Registry::paper(), Scale::test())
+            .is_err());
+        assert!(MixSpec::parse("uni-gather:4,CG:4")
+            .unwrap()
+            .build_solo(&Registry::paper().with_synth(), Scale::test())
+            .is_ok());
+    }
+
+    #[test]
+    fn policy_parse_rejects_unknown_and_case_mangled_labels() {
+        for bad in ["", "FIFO", "Rr", "fcfs", "cap ", "occupancy"] {
+            assert_eq!(ArbPolicy::parse(bad), None, "{bad:?} should not parse");
+        }
+        // The documented long aliases stay accepted.
+        assert_eq!(ArbPolicy::parse("round-robin"), Some(ArbPolicy::RoundRobin));
+        assert_eq!(
+            ArbPolicy::parse("occupancy-cap"),
+            Some(ArbPolicy::OccupancyCap)
+        );
+    }
+
+    #[test]
     fn policy_labels_roundtrip() {
         for p in ArbPolicy::ALL {
             assert_eq!(ArbPolicy::parse(p.label()), Some(p));
