@@ -1,19 +1,24 @@
 //! CI gate over `BENCH_*.json` documents.
 //!
 //! ```text
-//! bench_check [--require-profile] BENCH_fig09.json BENCH_fig13.json ...
+//! bench_check [--require-profile] [--require-telemetry] \
+//!     [--check-trace TRACE.json] BENCH_fig09.json BENCH_fig13.json ...
 //! ```
 //!
 //! Exits non-zero (naming the file and field) when any document is
 //! missing, fails to parse, or violates the schema documented in
 //! `rust/EXPERIMENTS.md`: the universal header fields, a non-empty `rows`
 //! array whose entries carry (workload, system, cycles, events), and —
-//! when present — self-consistent `sweep`/`cache` accounting and a
-//! well-formed `profile` object. With `--require-profile` (the CI
-//! bench-smoke job passes it for its `DX100_PROFILE=1` run), every
-//! document must additionally carry a `profile` covering all five phase
-//! regions of the quantum loop. Std-only, reusing the harness's JSON
-//! parser, so the bench-smoke CI job needs no extra tooling.
+//! when present — self-consistent `sweep`/`cache` accounting and
+//! well-formed `profile` / `telemetry` objects. With `--require-profile`
+//! (the CI bench-smoke job passes it for its `DX100_PROFILE=1` run),
+//! every document must additionally carry a `profile` covering all five
+//! phase regions of the quantum loop; with `--require-telemetry`
+//! (paired with `DX100_TELEMETRY=1`), a `telemetry` object with at least
+//! one windowed channel series. `--check-trace` validates an emitted
+//! Chrome-trace timeline (non-empty `traceEvents`, per-track monotone
+//! timestamps). Std-only, reusing the harness's JSON parser, so the
+//! bench-smoke CI job needs no extra tooling.
 
 use dx100::engine::harness::Json;
 use std::process::ExitCode;
@@ -71,7 +76,161 @@ fn check_profile(doc: &Json, required: bool) -> Result<(), String> {
     Ok(())
 }
 
-fn check_doc(doc: &Json, require_profile: bool) -> Result<(usize, usize), String> {
+/// Validate the optional `telemetry` object: per-run entries carrying
+/// channel window series (monotone, sane rates) and well-formed latency
+/// histograms. With `required`, the object must exist and at least one
+/// run must carry a non-empty window series.
+fn check_telemetry(doc: &Json, required: bool) -> Result<(), String> {
+    let Some(telem) = doc.get("telemetry") else {
+        if required {
+            return Err(
+                "missing \"telemetry\" (bench not run with DX100_TELEMETRY=1?)".to_string()
+            );
+        }
+        return Ok(());
+    };
+    let runs = match telem {
+        Json::Obj(kvs) => kvs,
+        _ => return Err("non-object \"telemetry\"".to_string()),
+    };
+    if runs.is_empty() {
+        return Err("empty \"telemetry\" object".to_string());
+    }
+    let mut windowed_runs = 0usize;
+    for (run, td) in runs {
+        let channels = td
+            .get("channels")
+            .and_then(Json::as_array)
+            .ok_or_else(|| format!("telemetry.{run}: missing \"channels\""))?;
+        let mut run_windows = 0usize;
+        for (ch, series) in channels.iter().enumerate() {
+            let windows = series
+                .get("windows")
+                .and_then(Json::as_array)
+                .ok_or_else(|| format!("telemetry.{run}.channels[{ch}]: missing \"windows\""))?;
+            run_windows += windows.len();
+            let mut last_t1 = 0u64;
+            for (i, w) in windows.iter().enumerate() {
+                let at = |key: &str| {
+                    w.get(key).and_then(Json::as_u64).ok_or_else(|| {
+                        format!("telemetry.{run}.channels[{ch}].windows[{i}]: missing {key:?}")
+                    })
+                };
+                let t0 = at("t0")?;
+                let t1 = at("t1")?;
+                if t1 < t0 || t0 < last_t1 {
+                    return Err(format!(
+                        "telemetry.{run}.channels[{ch}].windows[{i}]: \
+                         non-monotone span [{t0}, {t1}) after t1={last_t1}"
+                    ));
+                }
+                last_t1 = t1;
+                let rhr = w
+                    .get("row_hit_rate")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| {
+                        format!(
+                            "telemetry.{run}.channels[{ch}].windows[{i}]: \
+                             missing \"row_hit_rate\""
+                        )
+                    })?;
+                if !(0.0..=1.0).contains(&rhr) {
+                    return Err(format!(
+                        "telemetry.{run}.channels[{ch}].windows[{i}]: \
+                         row_hit_rate {rhr} outside [0, 1]"
+                    ));
+                }
+            }
+            check_hist(series.get("dram_latency"), &format!("{run}.channels[{ch}]"))?;
+        }
+        if run_windows > 0 {
+            windowed_runs += 1;
+        }
+        check_hist(td.get("dx_latency"), run)?;
+        td.get("samples")
+            .and_then(Json::as_array)
+            .ok_or_else(|| format!("telemetry.{run}: missing \"samples\""))?;
+    }
+    if required && windowed_runs == 0 {
+        return Err("telemetry: no run carries a non-empty channel window series".to_string());
+    }
+    Ok(())
+}
+
+/// A latency histogram must carry `HIST_BUCKETS` buckets summing to its
+/// `count`.
+fn check_hist(hist: Option<&Json>, who: &str) -> Result<(), String> {
+    let hist = hist.ok_or_else(|| format!("telemetry.{who}: missing latency histogram"))?;
+    let buckets = hist
+        .get("buckets")
+        .and_then(Json::as_array)
+        .ok_or_else(|| format!("telemetry.{who}: histogram missing \"buckets\""))?;
+    if buckets.len() != dx100::util::telemetry::HIST_BUCKETS {
+        return Err(format!(
+            "telemetry.{who}: {} buckets (want {})",
+            buckets.len(),
+            dx100::util::telemetry::HIST_BUCKETS
+        ));
+    }
+    let count = hist
+        .get("count")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("telemetry.{who}: histogram missing \"count\""))?;
+    let total: u64 = buckets.iter().filter_map(Json::as_u64).sum();
+    if total != count {
+        return Err(format!(
+            "telemetry.{who}: histogram buckets sum {total} != count {count}"
+        ));
+    }
+    Ok(())
+}
+
+/// Validate a Chrome-trace file: parseable, non-empty `traceEvents`, and
+/// per-(pid, tid) timestamps never going backwards.
+fn check_trace(path: &str) -> Result<usize, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let evs = doc
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .ok_or("missing or non-array \"traceEvents\"")?;
+    if evs.is_empty() {
+        return Err("empty \"traceEvents\"".to_string());
+    }
+    let mut last: std::collections::HashMap<(u64, u64), u64> = std::collections::HashMap::new();
+    for (i, e) in evs.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("traceEvents[{i}]: missing \"ph\""))?;
+        if ph == "M" {
+            continue; // metadata records carry no timestamp
+        }
+        let pid = e
+            .get("pid")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("traceEvents[{i}]: missing \"pid\""))?;
+        let tid = e.get("tid").and_then(Json::as_u64).unwrap_or(0);
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("traceEvents[{i}]: missing \"ts\""))?;
+        let prev = last.entry((pid, tid)).or_insert(0);
+        if ts < *prev {
+            return Err(format!(
+                "traceEvents[{i}]: track ({pid},{tid}) goes backwards ({ts} < {prev})"
+            ));
+        }
+        *prev = ts;
+    }
+    Ok(evs.len())
+}
+
+fn check_doc(
+    doc: &Json,
+    require_profile: bool,
+    require_telemetry: bool,
+) -> Result<(usize, usize), String> {
     for key in ["bench", "title"] {
         doc.get(key)
             .and_then(Json::as_str)
@@ -158,15 +317,27 @@ fn check_doc(doc: &Json, require_profile: bool) -> Result<(usize, usize), String
         }
     }
     check_profile(doc, require_profile)?;
+    check_telemetry(doc, require_telemetry)?;
     Ok((rows.len(), n_metrics))
 }
 
 fn main() -> ExitCode {
     let mut require_profile = false;
+    let mut require_telemetry = false;
+    let mut traces: Vec<String> = Vec::new();
     let mut paths: Vec<String> = Vec::new();
-    for arg in std::env::args().skip(1) {
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
         match arg.as_str() {
             "--require-profile" => require_profile = true,
+            "--require-telemetry" => require_telemetry = true,
+            "--check-trace" => match args.next() {
+                Some(p) => traces.push(p),
+                None => {
+                    eprintln!("--check-trace: missing trace path");
+                    return ExitCode::from(2);
+                }
+            },
             _ if arg.starts_with("--") => {
                 eprintln!("unknown flag {arg:?}");
                 return ExitCode::from(2);
@@ -174,8 +345,11 @@ fn main() -> ExitCode {
             _ => paths.push(arg),
         }
     }
-    if paths.is_empty() {
-        eprintln!("usage: bench_check [--require-profile] <BENCH_*.json> ...");
+    if paths.is_empty() && traces.is_empty() {
+        eprintln!(
+            "usage: bench_check [--require-profile] [--require-telemetry] \
+             [--check-trace TRACE.json] <BENCH_*.json> ..."
+        );
         return ExitCode::from(2);
     }
     let mut failed = false;
@@ -183,11 +357,20 @@ fn main() -> ExitCode {
         let verdict = std::fs::read_to_string(path)
             .map_err(|e| format!("unreadable: {e}"))
             .and_then(|text| Json::parse(&text).map_err(|e| format!("malformed JSON: {e}")))
-            .and_then(|doc| check_doc(&doc, require_profile));
+            .and_then(|doc| check_doc(&doc, require_profile, require_telemetry));
         match verdict {
             Ok((rows, metrics)) => {
                 println!("OK {path}: {rows} rows, {metrics} metrics");
             }
+            Err(e) => {
+                eprintln!("FAIL {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+    for path in &traces {
+        match check_trace(path) {
+            Ok(events) => println!("OK {path}: {events} trace events"),
             Err(e) => {
                 eprintln!("FAIL {path}: {e}");
                 failed = true;

@@ -492,6 +492,17 @@ impl Hierarchy {
     pub fn llc_misses(&self) -> u64 {
         self.llc.stats.misses
     }
+
+    /// Current shared-LLC MSHR occupancy (telemetry's point-in-time
+    /// sample at quantum boundaries).
+    pub fn llc_mshr_len(&self) -> usize {
+        self.llc_mshr.len()
+    }
+
+    /// Shared-LLC MSHR capacity.
+    pub fn llc_mshr_capacity(&self) -> usize {
+        self.llc_mshr.capacity()
+    }
 }
 
 #[cfg(test)]

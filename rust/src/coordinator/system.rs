@@ -62,6 +62,7 @@ use crate::engine::ExecOptions;
 use crate::mem::{dram::Completion, MemController, ReqSource, ShardChannel};
 use crate::sim::{Cycle, Event, EventQueue};
 use crate::util::regions;
+use crate::util::telemetry::{self, push_sample, Hist, SysSample, TelemetryData};
 use crate::workloads::mix::ArbPolicy;
 use crate::workloads::WorkloadSpec;
 use std::collections::{HashMap, VecDeque};
@@ -83,6 +84,11 @@ pub enum SystemKind {
 /// Every field is a pure function of (configuration, compiled workload,
 /// system kind): neither `DX100_THREADS` nor `DX100_SHARDS` changes any
 /// value here, only wall time (asserted by `tests/integration_shard.rs`).
+/// The one qualifier is [`RunStats::telemetry`]: whether it is `Some`
+/// depends on the telemetry knob (`DX100_TELEMETRY` /
+/// [`ExecOptions::telemetry`]), but its *contents* obey the same rule,
+/// and the knob changes no other field — which is why telemetry stays
+/// out of every fingerprint and cache key.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunStats {
     /// System that produced this run.
@@ -119,6 +125,11 @@ pub struct RunStats {
     pub channel_events: u64,
     /// Total events processed: `front_events + channel_events`.
     pub events: u64,
+    /// Simulated-time telemetry (series, histograms, spans), collected
+    /// only when the telemetry knob was on at run construction. Never
+    /// persisted to the result cache: cached replays carry `None`, and
+    /// telemetry-enabled runs bypass cache reads.
+    pub telemetry: Option<Box<TelemetryData>>,
 }
 
 impl RunStats {
@@ -315,13 +326,14 @@ impl Experiment {
     /// point (specs compile per call; pass [`RunInput::Compiled`] to
     /// share a compilation).
     ///
-    /// Only the shard fan-out and profile override of `opts` apply here:
-    /// a single run has no cell-level thread fan-out (the thread cap
-    /// bounds how many pool workers may help its shard crews), and the
-    /// persisted result cache belongs to the sweep executor
-    /// ([`crate::engine::execute_sweep`]).
+    /// Only the shard fan-out and the profile/telemetry overrides of
+    /// `opts` apply here: a single run has no cell-level thread fan-out
+    /// (the thread cap bounds how many pool workers may help its shard
+    /// crews), and the persisted result cache belongs to the sweep
+    /// executor ([`crate::engine::execute_sweep`]).
     pub fn run<'a>(&self, input: impl Into<RunInput<'a>>, opts: &ExecOptions) -> RunStats {
         opts.apply_profile();
+        opts.apply_telemetry();
         let shards = opts.resolved_shards();
         grow_pool_for_hint(shards, opts.resolved_threads());
         match input.into() {
@@ -346,6 +358,7 @@ impl Experiment {
         opts: &ExecOptions,
     ) -> MixRun {
         opts.apply_profile();
+        opts.apply_telemetry();
         let shards = opts.resolved_shards();
         grow_pool_for_hint(shards, opts.resolved_threads());
         let mut sys = System::build(self.kind.variant(), &self.cfg, tenants, policy);
@@ -478,6 +491,10 @@ struct System<'a> {
     shared_events: u64,
     channel_events: u64,
     end_time: Cycle,
+    /// System-level telemetry samples, one per active quantum boundary.
+    /// `None` when the telemetry knob is off (the off path allocates
+    /// nothing and does no per-quantum work beyond one `is_some` check).
+    telem: Option<Vec<SysSample>>,
 }
 
 impl<'a> System<'a> {
@@ -604,6 +621,7 @@ impl<'a> System<'a> {
             shared_events: 0,
             channel_events: 0,
             end_time: 0,
+            telem: telemetry::enabled().then(Vec::new),
         }
     }
 
@@ -1244,10 +1262,15 @@ impl<'a> System<'a> {
             // every (threads, shards) pair.
             self.quanta = self.quanta.wrapping_add(1);
             self.phase_front(t_end, front_fan, crew.as_ref());
-            if !self.mem.has_channel_work(t_end) {
-                continue;
+            if self.mem.has_channel_work(t_end) {
+                self.phase_channels(t_end, crew.as_ref(), &mut detached, chan_fan);
             }
-            self.phase_channels(t_end, crew.as_ref(), &mut detached, chan_fan);
+            // Sample on the coordinator thread at the quantum boundary:
+            // the `t_end` sequence and every sampled value are identical
+            // at all (threads, shards) pairs, so the series is too.
+            if self.telem.is_some() {
+                self.sample(t_end);
+            }
         }
         if let Some(chans) = detached.take() {
             self.mem.attach_shards(chans);
@@ -1269,6 +1292,49 @@ impl<'a> System<'a> {
             eprintln!("mem pending: {}", self.mem.has_pending());
             panic!("cores not drained at t={}", self.end_time);
         }
+    }
+
+    /// Record one [`SysSample`] at the quantum boundary `t_end`.
+    ///
+    /// Must not touch `self.mem`: with `chan_fan > 1` the channel shards
+    /// stay detached between quanta, and per-channel series are read from
+    /// the channels themselves in [`System::stats`] after re-attach.
+    /// Lanes and DX100 lanes *are* home between quanta (`phase_front`
+    /// restores them), so their counters are safe to read here.
+    fn sample(&mut self, t_end: Cycle) {
+        let dx_queue: u64 = (0..self.dx_lanes.len())
+            .map(|i| self.dx_ref(i).timing.queue_depth() as u64)
+            .sum();
+        let llc_mshr = self.hier.llc_mshr_len() as u64;
+        let lane_events: u64 = (0..self.lanes.len()).map(|c| self.lane_ref(c).events).sum();
+        let dx_events: u64 = (0..self.dx_lanes.len()).map(|i| self.dx_ref(i).events).sum();
+        let front_events = lane_events + dx_events + self.shared_events;
+        let inserted_words: u64 = (0..self.dx_lanes.len())
+            .map(|i| self.dx_ref(i).timing.stats.inserted_words)
+            .sum();
+        let indirect_accesses: u64 = (0..self.dx_lanes.len())
+            .map(|i| self.dx_ref(i).timing.stats.indirect_accesses)
+            .sum();
+        let tenant_instrs: Vec<u64> = self
+            .tenants
+            .iter()
+            .map(|m| {
+                (m.core_base..m.core_base + m.cores)
+                    .map(|c| self.lane_ref(c).core.stats.retired_instrs)
+                    .sum()
+            })
+            .collect();
+        let s = SysSample {
+            t: t_end,
+            dx_queue,
+            llc_mshr,
+            front_events,
+            inserted_words,
+            indirect_accesses,
+            tenant_instrs,
+        };
+        let samples = self.telem.as_mut().expect("sample() with telemetry off");
+        push_sample(samples, s);
     }
 
     fn stats(&self, kind: SystemKind, workload: &'static str) -> RunStats {
@@ -1305,6 +1371,27 @@ impl<'a> System<'a> {
             .sum();
         let front_events = lane_events + dx_events + self.shared_events;
         let dram = self.mem.stats();
+        // Telemetry assembly: per-channel series come from the channels
+        // (re-attached by the time stats() runs), DX100 histograms and
+        // spans merge across instances in instance order, and the system
+        // samples are the coordinator-thread series from `sample()`.
+        let telemetry = self.mem.telemetry().map(|channels| {
+            let mut dx_latency = Hist::default();
+            let mut dx_spans = Vec::new();
+            for d in self.dx_lanes.iter() {
+                let timing = &d.as_ref().expect("dx lane in flight").timing;
+                if let Some((lat, spans)) = timing.telemetry() {
+                    dx_latency.merge(lat);
+                    dx_spans.extend_from_slice(spans);
+                }
+            }
+            Box::new(TelemetryData {
+                channels,
+                samples: self.telem.clone().unwrap_or_default(),
+                dx_latency,
+                dx_spans,
+            })
+        });
         RunStats {
             kind,
             workload,
@@ -1322,6 +1409,7 @@ impl<'a> System<'a> {
             front_events,
             channel_events: self.channel_events,
             events: front_events + self.channel_events,
+            telemetry,
         }
     }
 

@@ -346,6 +346,11 @@ fn decode_run_stats(doc: &Json, name: &'static str, kind: SystemKind) -> Option<
         front_events: get_u64(doc, "front_events")?,
         channel_events: get_u64(doc, "channel_events")?,
         events: get_u64(doc, "events")?,
+        // Telemetry is never persisted (see `encode_run_stats`), so a
+        // cached replay can never resurface stale series: the decoded
+        // stats always carry `None`, and telemetry-enabled runs bypass
+        // the cache probe entirely.
+        telemetry: None,
     })
 }
 
@@ -395,6 +400,7 @@ mod tests {
             front_events: 400_000,
             channel_events: 24_242,
             events: 424_242,
+            telemetry: None,
         }
     }
 

@@ -20,6 +20,7 @@ use super::SweepResult;
 use crate::coordinator::RunStats;
 use crate::metrics::Comparison;
 use crate::util::regions;
+use crate::util::telemetry::{Hist, TelemetryData};
 use crate::workloads::Scale;
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -385,6 +386,9 @@ pub struct Harness {
     rows: Vec<Json>,
     paper_refs: Vec<String>,
     sweep: Option<SweepStats>,
+    /// Per-run telemetry objects, keyed `workload/system` — populated
+    /// only when runs carried [`RunStats::telemetry`].
+    telemetry: Vec<(String, Json)>,
 }
 
 impl Harness {
@@ -405,6 +409,7 @@ impl Harness {
             rows: Vec::new(),
             paper_refs: Vec::new(),
             sweep: None,
+            telemetry: Vec::new(),
         }
     }
 
@@ -457,12 +462,18 @@ impl Harness {
         self.metrics.push((key.to_string(), Json::Num(value)));
     }
 
-    /// Record one run as a JSON row and count its events.
+    /// Record one run as a JSON row and count its events. Runs that
+    /// carried telemetry also land in the JSON `telemetry` object, keyed
+    /// `workload/system`.
     pub fn run(&mut self, workload: &str, rs: &RunStats) {
         self.events += rs.events;
         self.front_events += rs.front_events;
         self.channel_events += rs.channel_events;
         self.rows.push(run_row(workload, rs));
+        if let Some(td) = &rs.telemetry {
+            self.telemetry
+                .push((format!("{workload}/{}", rs.kind.label()), telemetry_json(td)));
+        }
     }
 
     /// Record every run of a comparison set.
@@ -664,6 +675,12 @@ impl Harness {
                 ),
             ));
         }
+        if !self.telemetry.is_empty() {
+            // Present only when runs collected telemetry (DX100_TELEMETRY=1;
+            // bench_check --require-telemetry gates on it in CI). Simulated
+            // cycles only: never merged with the wall-clock profile above.
+            obj.push(("telemetry".into(), Json::Obj(self.telemetry)));
+        }
         obj.extend([
             (
                 "paper_refs".to_string(),
@@ -696,9 +713,312 @@ fn run_row(workload: &str, rs: &RunStats) -> Json {
     ])
 }
 
+fn hist_json(h: &Hist) -> Json {
+    Json::Obj(vec![
+        ("count".into(), Json::UInt(h.count)),
+        ("sum".into(), Json::UInt(h.sum)),
+        ("mean".into(), Json::Num(h.mean())),
+        (
+            "buckets".into(),
+            Json::Arr(h.buckets.iter().map(|&b| Json::UInt(b)).collect()),
+        ),
+    ])
+}
+
+/// Encode one run's [`TelemetryData`] as the JSON object emitted under
+/// the harness `telemetry` key (and by `run --telemetry` tooling). All
+/// values are simulated cycles or exact counters — deterministic across
+/// the thread/shard matrix like the data itself.
+pub fn telemetry_json(td: &TelemetryData) -> Json {
+    let channels = td
+        .channels
+        .iter()
+        .map(|ch| {
+            let windows = ch
+                .windows
+                .iter()
+                .map(|w| {
+                    Json::Obj(vec![
+                        ("t0".into(), Json::UInt(w.t0)),
+                        ("t1".into(), Json::UInt(w.t1)),
+                        ("reads".into(), Json::UInt(w.reads)),
+                        ("writes".into(), Json::UInt(w.writes)),
+                        ("row_hits".into(), Json::UInt(w.row_hits)),
+                        ("row_misses".into(), Json::UInt(w.row_misses)),
+                        ("row_empty".into(), Json::UInt(w.row_empty)),
+                        ("bytes".into(), Json::UInt(w.bytes)),
+                        ("buffer_len".into(), Json::UInt(w.buffer_len)),
+                        ("overflow_len".into(), Json::UInt(w.overflow_len)),
+                        ("row_hit_rate".into(), Json::Num(w.row_hit_rate())),
+                        ("bytes_per_cycle".into(), Json::Num(w.bytes_per_cycle())),
+                    ])
+                })
+                .collect();
+            Json::Obj(vec![
+                ("windows".into(), Json::Arr(windows)),
+                ("dram_latency".into(), hist_json(&ch.dram_latency)),
+            ])
+        })
+        .collect();
+    let samples = td
+        .samples
+        .iter()
+        .map(|s| {
+            Json::Obj(vec![
+                ("t".into(), Json::UInt(s.t)),
+                ("dx_queue".into(), Json::UInt(s.dx_queue)),
+                ("llc_mshr".into(), Json::UInt(s.llc_mshr)),
+                ("front_events".into(), Json::UInt(s.front_events)),
+                ("inserted_words".into(), Json::UInt(s.inserted_words)),
+                ("indirect_accesses".into(), Json::UInt(s.indirect_accesses)),
+                (
+                    "tenant_instrs".into(),
+                    Json::Arr(s.tenant_instrs.iter().map(|&v| Json::UInt(v)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("channels".into(), Json::Arr(channels)),
+        ("samples".into(), Json::Arr(samples)),
+        ("dx_latency".into(), hist_json(&td.dx_latency)),
+        // Spans are timeline data: counted here, laid out by
+        // [`chrome_trace`]. Keeps BENCH_*.json bounded.
+        ("dx_span_count".into(), Json::UInt(td.dx_spans.len() as u64)),
+    ])
+}
+
+/// Lay runs' telemetry out as a Chrome-trace / Perfetto document
+/// (`{"traceEvents": [...]}`; load via `chrome://tracing` or
+/// <https://ui.perfetto.dev>). One simulated cycle maps to one
+/// microsecond of trace time. Each run gets its own process (pid), with
+/// counter tracks for channel windows and system samples, slice tracks
+/// (`tid 100+ch`) for busy DRAM windows, and slice tracks
+/// (`tid 200+instance`) for DX100 instruction lifetimes.
+pub fn chrome_trace(runs: &[(&str, &TelemetryData)]) -> Json {
+    // (pid, tid, ts) sort keys keep each track's timestamps monotone —
+    // Perfetto tolerates interleaving, `bench_check --check-trace`
+    // verifies per-track order strictly.
+    let mut evs: Vec<(u64, u64, u64, Json)> = Vec::new();
+    for (i, (label, td)) in runs.iter().enumerate() {
+        let pid = i as u64 + 1;
+        evs.push((
+            pid,
+            0,
+            0,
+            Json::Obj(vec![
+                ("name".into(), Json::Str("process_name".into())),
+                ("ph".into(), Json::Str("M".into())),
+                ("pid".into(), Json::UInt(pid)),
+                (
+                    "args".into(),
+                    Json::Obj(vec![("name".into(), Json::Str(label.to_string()))]),
+                ),
+            ]),
+        ));
+        for (ch, series) in td.channels.iter().enumerate() {
+            let tid = 100 + ch as u64;
+            for w in &series.windows {
+                evs.push((
+                    pid,
+                    0,
+                    w.t1,
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(format!("dram-ch{ch}"))),
+                        ("ph".into(), Json::Str("C".into())),
+                        ("ts".into(), Json::UInt(w.t1)),
+                        ("pid".into(), Json::UInt(pid)),
+                        (
+                            "args".into(),
+                            Json::Obj(vec![
+                                ("row_hit_rate".into(), Json::Num(w.row_hit_rate())),
+                                ("bytes_per_cycle".into(), Json::Num(w.bytes_per_cycle())),
+                                ("buffer".into(), Json::UInt(w.buffer_len)),
+                            ]),
+                        ),
+                    ]),
+                ));
+                if w.reads + w.writes > 0 {
+                    evs.push((
+                        pid,
+                        tid,
+                        w.t0,
+                        Json::Obj(vec![
+                            ("name".into(), Json::Str(format!("ch{ch} busy"))),
+                            ("ph".into(), Json::Str("X".into())),
+                            ("ts".into(), Json::UInt(w.t0)),
+                            ("dur".into(), Json::UInt(w.t1.saturating_sub(w.t0))),
+                            ("pid".into(), Json::UInt(pid)),
+                            ("tid".into(), Json::UInt(tid)),
+                            (
+                                "args".into(),
+                                Json::Obj(vec![
+                                    ("reads".into(), Json::UInt(w.reads)),
+                                    ("writes".into(), Json::UInt(w.writes)),
+                                ]),
+                            ),
+                        ]),
+                    ));
+                }
+            }
+        }
+        for s in &td.samples {
+            evs.push((
+                pid,
+                0,
+                s.t,
+                Json::Obj(vec![
+                    ("name".into(), Json::Str("system".into())),
+                    ("ph".into(), Json::Str("C".into())),
+                    ("ts".into(), Json::UInt(s.t)),
+                    ("pid".into(), Json::UInt(pid)),
+                    (
+                        "args".into(),
+                        Json::Obj(vec![
+                            ("dx_queue".into(), Json::UInt(s.dx_queue)),
+                            ("llc_mshr".into(), Json::UInt(s.llc_mshr)),
+                        ]),
+                    ),
+                ]),
+            ));
+        }
+        for sp in &td.dx_spans {
+            let tid = 200 + sp.instance as u64;
+            evs.push((
+                pid,
+                tid,
+                sp.start,
+                Json::Obj(vec![
+                    (
+                        "name".into(),
+                        Json::Str(format!("dx{}#{}", sp.instance, sp.seq)),
+                    ),
+                    ("ph".into(), Json::Str("X".into())),
+                    ("ts".into(), Json::UInt(sp.start)),
+                    ("dur".into(), Json::UInt(sp.end.saturating_sub(sp.start))),
+                    ("pid".into(), Json::UInt(pid)),
+                    ("tid".into(), Json::UInt(tid)),
+                ]),
+            ));
+        }
+    }
+    evs.sort_by_key(|&(pid, tid, ts, _)| (pid, tid, ts));
+    Json::Obj(vec![(
+        "traceEvents".into(),
+        Json::Arr(evs.into_iter().map(|(_, _, _, e)| e).collect()),
+    )])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::telemetry::{ChannelSeries, ChannelWindow, DxInstrSpan, SysSample};
+
+    fn sample_telemetry() -> TelemetryData {
+        let mut ch = ChannelSeries::default();
+        ch.windows.push(ChannelWindow {
+            t0: 0,
+            t1: 1000,
+            reads: 10,
+            writes: 2,
+            row_hits: 8,
+            row_misses: 3,
+            row_empty: 1,
+            bytes: 768,
+            buffer_len: 4,
+            overflow_len: 0,
+        });
+        ch.windows.push(ChannelWindow {
+            t0: 1000,
+            t1: 2000,
+            buffer_len: 1,
+            ..Default::default()
+        });
+        ch.dram_latency.record(40);
+        ch.dram_latency.record(120);
+        let mut td = TelemetryData {
+            channels: vec![ch],
+            samples: vec![
+                SysSample {
+                    t: 1000,
+                    dx_queue: 3,
+                    llc_mshr: 2,
+                    front_events: 100,
+                    inserted_words: 50,
+                    indirect_accesses: 10,
+                    tenant_instrs: vec![40],
+                },
+                SysSample {
+                    t: 2000,
+                    front_events: 200,
+                    tenant_instrs: vec![90],
+                    ..Default::default()
+                },
+            ],
+            dx_latency: Hist::default(),
+            dx_spans: vec![DxInstrSpan {
+                instance: 0,
+                seq: 7,
+                start: 100,
+                end: 900,
+            }],
+        };
+        td.dx_latency.record(64);
+        td
+    }
+
+    #[test]
+    fn telemetry_json_shape() {
+        let doc = Json::parse(&telemetry_json(&sample_telemetry()).render()).unwrap();
+        let chans = doc.get("channels").unwrap().as_array().unwrap();
+        assert_eq!(chans.len(), 1);
+        let windows = chans[0].get("windows").unwrap().as_array().unwrap();
+        assert_eq!(windows.len(), 2);
+        let w0 = &windows[0];
+        assert_eq!(w0.get("reads").unwrap().as_u64(), Some(10));
+        let rhr = w0.get("row_hit_rate").unwrap().as_f64().unwrap();
+        assert!((rhr - 8.0 / 12.0).abs() < 1e-12);
+        let lat = chans[0].get("dram_latency").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(lat.get("sum").unwrap().as_u64(), Some(160));
+        assert_eq!(
+            lat.get("buckets").unwrap().as_array().unwrap().len(),
+            crate::util::telemetry::HIST_BUCKETS
+        );
+        let samples = doc.get("samples").unwrap().as_array().unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].get("dx_queue").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("dx_span_count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn chrome_trace_tracks_are_monotone() {
+        let td = sample_telemetry();
+        let doc = Json::parse(&chrome_trace(&[("CG/dx100", &td)]).render()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(!evs.is_empty());
+        // First event is the process-name metadata record.
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("M"));
+        // Per-(pid, tid) timestamps never go backwards.
+        let mut last: std::collections::HashMap<(u64, u64), u64> = std::collections::HashMap::new();
+        for e in evs {
+            if e.get("ph").unwrap().as_str() == Some("M") {
+                continue;
+            }
+            let pid = e.get("pid").unwrap().as_u64().unwrap();
+            let tid = e.get("tid").map_or(0, |t| t.as_u64().unwrap());
+            let ts = e.get("ts").unwrap().as_u64().unwrap();
+            let prev = last.entry((pid, tid)).or_insert(0);
+            assert!(ts >= *prev, "track ({pid},{tid}) went backwards");
+            *prev = ts;
+        }
+        // The one DX100 span landed as a complete event on tid 200.
+        assert!(evs.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("X")
+                && e.get("tid").and_then(Json::as_u64) == Some(200)
+                && e.get("dur").and_then(Json::as_u64) == Some(800)
+        }));
+    }
 
     #[test]
     fn json_scalars_render() {

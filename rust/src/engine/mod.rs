@@ -186,6 +186,7 @@ pub struct ExecOptions {
     shards: Option<usize>,
     cache: CacheMode,
     profile: Option<bool>,
+    telemetry: Option<bool>,
 }
 
 impl ExecOptions {
@@ -229,6 +230,16 @@ impl ExecOptions {
         self
     }
 
+    /// Force simulated-time telemetry on or off for this process
+    /// (overrides `DX100_TELEMETRY`; sticky like [`ExecOptions::profile`]
+    /// — systems read the knob once at construction). Telemetry never
+    /// enters a fingerprint or cache key; enabled runs simply bypass
+    /// cache reads so every emitted series is fresh.
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.telemetry = Some(on);
+        self
+    }
+
     /// The effective thread cap.
     pub(crate) fn resolved_threads(&self) -> usize {
         self.threads.unwrap_or_else(threads_from_env)
@@ -253,6 +264,20 @@ impl ExecOptions {
         if let Some(on) = self.profile {
             crate::util::regions::set_enabled(on);
         }
+    }
+
+    /// Apply the telemetry override, if set.
+    pub(crate) fn apply_telemetry(&self) {
+        if let Some(on) = self.telemetry {
+            crate::util::telemetry::set_enabled(on);
+        }
+    }
+
+    /// Whether telemetry will be on once overrides apply: the explicit
+    /// knob if set, otherwise the process-wide state (env-resolved).
+    pub(crate) fn telemetry_enabled(&self) -> bool {
+        self.telemetry
+            .unwrap_or_else(crate::util::telemetry::enabled)
     }
 }
 
@@ -424,6 +449,8 @@ impl SweepResult {
 /// sharding is absent from every fingerprint.
 pub fn execute_sweep(plan: &SweepPlan, opts: &ExecOptions) -> SweepResult {
     opts.apply_profile();
+    opts.apply_telemetry();
+    let telemetry_on = opts.telemetry_enabled();
     let threads = opts.resolved_threads();
     let shards = opts.resolved_shards();
     let cache = opts.resolved_cache();
@@ -458,9 +485,13 @@ pub fn execute_sweep(plan: &SweepPlan, opts: &ExecOptions) -> SweepResult {
     }
 
     // Probe the persisted cache first: a hit costs one fingerprint + one
-    // small JSON read instead of a simulation.
+    // small JSON read instead of a simulation. Telemetry-enabled runs
+    // skip the probe (never the store): cached stats carry no telemetry,
+    // so replaying one would silently emit an empty series — instead the
+    // cell re-simulates and produces fresh series. The knob stays out of
+    // every fingerprint, so entries written either way remain shared.
     let mut cache_hits = 0usize;
-    if let Some(c) = cache {
+    if let (Some(c), false) = (cache, telemetry_on) {
         for ((slot, cell), fp) in stats.iter_mut().zip(&cells).zip(&cell_fp) {
             let w = &plan.workloads[cell.workload];
             let key = cache::cell_key(*fp, cell.system, wfps[cell.workload]);

@@ -52,6 +52,12 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
                 }
                 i += 2;
             }
+            // Bare boolean flags: they must not swallow the next argument
+            // like the generic `--flag value` arm below would.
+            "--telemetry" | "--profile" => {
+                kv.insert(args[i].trim_start_matches("--").to_string(), "1".to_string());
+                i += 1;
+            }
             flag if flag.starts_with("--") && i + 1 < args.len() => {
                 kv.insert(
                     flag.trim_start_matches("--").to_string(),
@@ -80,8 +86,11 @@ fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
     let overrides: BTreeMap<String, String> = kv
         .iter()
         .filter(|(k, _)| {
-            !["scale", "workload", "system", "mix", "policy", "cases", "seed", "replay"]
-                .contains(&k.as_str())
+            ![
+                "scale", "workload", "system", "mix", "policy", "cases", "seed", "replay",
+                "profile", "telemetry", "trace",
+            ]
+            .contains(&k.as_str())
         })
         .map(|(k, v)| (k.clone(), v.clone()))
         .collect();
@@ -102,10 +111,65 @@ fn parse_seed(raw: &str) -> Option<u64> {
     }
 }
 
+/// One-line telemetry summary for a run (printed under `--telemetry`).
+fn print_telemetry(label: &str, rs: &dx100::coordinator::RunStats) {
+    let Some(td) = &rs.telemetry else {
+        return;
+    };
+    let windows: usize = td.channels.iter().map(|c| c.windows.len()).sum();
+    let mut dram_lat = dx100::util::telemetry::Hist::default();
+    for ch in &td.channels {
+        dram_lat.merge(&ch.dram_latency);
+    }
+    println!(
+        "telemetry {label:<10} {} samples | {} windows / {} channels | \
+         dram lat {:.1} cyc ({} reqs) | dx lat {:.1} cyc ({} accesses) | {} spans",
+        td.samples.len(),
+        windows,
+        td.channels.len(),
+        dram_lat.mean(),
+        dram_lat.count,
+        td.dx_latency.mean(),
+        td.dx_latency.count,
+        td.dx_spans.len(),
+    );
+}
+
+/// Write a Chrome-trace/Perfetto timeline for the labelled runs that
+/// carried telemetry; exits nonzero when nothing was collected.
+fn write_trace(path: &str, runs: &[(&str, &dx100::coordinator::RunStats)]) {
+    let with_telem: Vec<(&str, &dx100::util::telemetry::TelemetryData)> = runs
+        .iter()
+        .filter_map(|(label, rs)| rs.telemetry.as_deref().map(|td| (*label, td)))
+        .collect();
+    if with_telem.is_empty() {
+        eprintln!("--trace: no telemetry collected (is DX100_TELEMETRY=0 forced?)");
+        std::process::exit(2);
+    }
+    let doc = engine::harness::chrome_trace(&with_telem);
+    match std::fs::write(path, doc.render()) {
+        Ok(()) => println!("trace: {path} (load in chrome://tracing or ui.perfetto.dev)"),
+        Err(e) => {
+            eprintln!("--trace: could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, kv) = parse_flags(&args);
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    // Observability knobs apply before any system is built; `--trace`
+    // implies telemetry (the timeline is built from it). Both compose
+    // with `--profile` — simulated-time series and wall-clock regions
+    // are independent facilities.
+    if kv.contains_key("telemetry") || kv.contains_key("trace") {
+        dx100::util::telemetry::set_enabled(true);
+    }
+    if kv.contains_key("profile") {
+        dx100::util::regions::set_enabled(true);
+    }
     let cfg = cfg_of(&kv);
     match cmd {
         "run" if kv.contains_key("mix") => {
@@ -156,6 +220,10 @@ fn main() {
                 "fairness {:.3} | solo cache: {} hits / {} misses",
                 r.fairness, r.solo_cache_hits, r.solo_cache_misses
             );
+            print_telemetry("mix", &r.combined);
+            if let Some(path) = kv.get("trace") {
+                write_trace(path, &[("mix", &r.combined)]);
+            }
         }
         "run" => {
             let name = kv.get("workload").map(String::as_str).unwrap_or("CG");
@@ -175,6 +243,18 @@ fn main() {
             println!("{}", report::speedup_table(std::slice::from_ref(&c)));
             println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
             println!("{}", report::instr_mpki_table(std::slice::from_ref(&c)));
+            let mut runs: Vec<(&str, &dx100::coordinator::RunStats)> =
+                vec![("baseline", &c.baseline)];
+            if let Some(d) = &c.dmp {
+                runs.push(("dmp", d));
+            }
+            runs.push(("dx100", &c.dx100));
+            for (label, rs) in &runs {
+                print_telemetry(label, rs);
+            }
+            if let Some(path) = kv.get("trace") {
+                write_trace(path, &runs);
+            }
         }
         "fuzz" => {
             let opts = engine::ExecOptions::new();
@@ -399,8 +479,19 @@ fn main() {
                 "usage: dx100 <run|fuzz|list-workloads|suite|micro|allmiss|tilesweep|scaling|\
                  area|isa|runtime> [--workload NAME] [--mix name:cores[@offset],..] \
                  [--policy fifo|rr|cap] [--scale N] [--set key=value] \
-                 [--cases N] [--seed S] [--replay S] [--mix 1]"
+                 [--cases N] [--seed S] [--replay S] [--mix 1] \
+                 [--telemetry] [--trace OUT.json] [--profile]"
             );
+            println!("observability (run / run --mix):");
+            println!(
+                "  --telemetry         collect simulated-time series and print a summary \
+                 (deterministic across threads/shards)"
+            );
+            println!(
+                "  --trace OUT.json    write a Chrome-trace/Perfetto timeline \
+                 (implies --telemetry)"
+            );
+            println!("  --profile           region wall-clock profile (same as DX100_PROFILE=1)");
             println!("env:");
             println!("  DX100_SCALE=N       dataset scale for suite/bench runs (default 2)");
             println!(
@@ -417,6 +508,11 @@ fn main() {
             );
             println!("  DX100_CACHE_DIR=D   cache directory (default target/dx100-cache)");
             println!("  DX100_BENCH_DIR=D   where bench binaries write BENCH_*.json (default .)");
+            println!(
+                "  DX100_TELEMETRY=0|1 simulated-time telemetry (default 0; never enters \
+                 cache keys, enabled runs bypass cache reads)"
+            );
+            println!("  DX100_PROFILE=0|1   region wall-clock profiler (default 0)");
         }
     }
 }

@@ -45,6 +45,7 @@
 use super::addr::{AddrMap, DramCoord};
 use crate::config::DramConfig;
 use crate::sim::{Cycle, TimeWeighted};
+use crate::util::telemetry::{self, ChannelSeries, ChannelWindow};
 use std::collections::VecDeque;
 
 /// Who issued a memory request (for attribution in stats and callbacks).
@@ -173,6 +174,36 @@ impl DramStats {
     }
 }
 
+/// Per-channel telemetry collection state. Boxed behind an `Option` that
+/// is resolved once at construction: when telemetry is off the channel
+/// carries a `None` and the hot path never allocates or branches further.
+struct ChanTelem {
+    /// The series under construction (windows + latency histogram).
+    series: ChannelSeries,
+    /// Stats snapshot at the last recorded window boundary (windows are
+    /// deltas against this).
+    prev: DramStats,
+    /// End time of the last recorded window; idle quanta leave it alone
+    /// so they merge into the next active window.
+    last_t: Cycle,
+    /// Occupancies at the last recorded window (a pure occupancy change
+    /// is still worth a window).
+    last_buffer: u64,
+    last_overflow: u64,
+}
+
+impl ChanTelem {
+    fn new() -> Self {
+        ChanTelem {
+            series: ChannelSeries::default(),
+            prev: DramStats::default(),
+            last_t: 0,
+            last_buffer: 0,
+            last_overflow: 0,
+        }
+    }
+}
+
 /// One channel's timing engine: request buffer, bank/bus state, scheduler,
 /// and per-channel stats. Owns no cross-channel state, so engines advance
 /// independently (the sharding invariant).
@@ -187,6 +218,10 @@ struct Channel {
     /// Carried self-wake: earliest time a buffered request's bank frees.
     wake: Option<Cycle>,
     stats: DramStats,
+    /// Telemetry collector, present iff the knob was on at construction.
+    /// Travels with the engine through detach/attach, so sharded runs
+    /// collect the identical series.
+    telem: Option<Box<ChanTelem>>,
 }
 
 impl Channel {
@@ -202,6 +237,7 @@ impl Channel {
             occupancy: TimeWeighted::new(0, 0.0),
             wake: None,
             stats: DramStats::default(),
+            telem: telemetry::enabled().then(|| Box::new(ChanTelem::new())),
         }
     }
 
@@ -275,7 +311,11 @@ impl Channel {
                 self.buffer.push(next);
             }
             let completion = self.commit(cfg, &req, t);
-            self.stats.total_queue_latency += completion.time.saturating_sub(req.arrival);
+            let latency = completion.time.saturating_sub(req.arrival);
+            self.stats.total_queue_latency += latency;
+            if let Some(tm) = self.telem.as_deref_mut() {
+                tm.series.dram_latency.record(latency);
+            }
             out.push(completion);
             self.update_occupancy(t);
         }
@@ -443,6 +483,9 @@ impl Channel {
             completions.iter().all(|c| c.time >= t_end),
             "channel {index}: completion inside its own quantum"
         );
+        if self.telem.is_some() {
+            self.record_window(t_end);
+        }
         ChannelAdvance {
             index,
             completions,
@@ -450,6 +493,42 @@ impl Channel {
             buffer_len: self.buffer.len(),
             overflow_len: self.overflow.len(),
             next_time: self.wake,
+        }
+    }
+
+    /// Close the telemetry window ending at `t_end`: record the stat
+    /// deltas since the last recorded boundary. Quanta with no channel
+    /// activity (and no occupancy change) are not recorded — their time
+    /// merges into the next active window, keeping long idle stretches
+    /// from flooding the series.
+    fn record_window(&mut self, t_end: Cycle) {
+        let Some(tm) = self.telem.as_deref_mut() else {
+            return;
+        };
+        let s = &self.stats;
+        let buffer_len = self.buffer.len() as u64;
+        let overflow_len = self.overflow.len() as u64;
+        let w = ChannelWindow {
+            t0: tm.last_t,
+            t1: t_end,
+            reads: s.reads - tm.prev.reads,
+            writes: s.writes - tm.prev.writes,
+            row_hits: s.row_hits - tm.prev.row_hits,
+            row_misses: s.row_misses - tm.prev.row_misses,
+            row_empty: s.row_empty - tm.prev.row_empty,
+            bytes: s.bytes - tm.prev.bytes,
+            buffer_len,
+            overflow_len,
+        };
+        let active = (w.reads | w.writes | w.row_hits | w.row_misses | w.row_empty | w.bytes) != 0
+            || buffer_len != tm.last_buffer
+            || overflow_len != tm.last_overflow;
+        if active {
+            tm.series.push(w);
+            tm.prev = s.clone();
+            tm.last_buffer = buffer_len;
+            tm.last_overflow = overflow_len;
+            tm.last_t = t_end;
         }
     }
 }
@@ -760,6 +839,24 @@ impl MemController {
             s.merge(&c.stats);
         }
         s
+    }
+
+    /// Per-channel telemetry series in channel-index order, when
+    /// collection was enabled at construction (`None` otherwise).
+    /// Deterministic at every shard count for the same reason
+    /// [`MemController::stats`] is: the collectors travel with the
+    /// engines and are read back in index order.
+    pub fn telemetry(&self) -> Option<Vec<ChannelSeries>> {
+        assert!(!self.detached, "telemetry while channels are detached");
+        if self.channels.iter().all(|c| c.telem.is_none()) {
+            return None;
+        }
+        Some(
+            self.channels
+                .iter()
+                .map(|c| c.telem.as_ref().map(|t| t.series.clone()).unwrap_or_default())
+                .collect(),
+        )
     }
 
     /// Time-weighted mean request-buffer occupancy across channels.

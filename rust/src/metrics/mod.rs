@@ -185,6 +185,7 @@ mod tests {
             front_events: 0,
             channel_events: 0,
             events: 0,
+            telemetry: None,
         }
     }
 

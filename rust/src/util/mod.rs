@@ -1,8 +1,10 @@
 //! Small shared utilities: deterministic PRNG, math helpers, formatting,
-//! and the region-level wall-clock profiler.
+//! the region-level wall-clock profiler, and the simulated-time
+//! telemetry collector.
 
 pub mod regions;
 pub mod rng;
+pub mod telemetry;
 
 pub use rng::Rng;
 

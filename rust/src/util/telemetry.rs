@@ -1,0 +1,541 @@
+//! Deterministic simulated-time telemetry for the quantum loop.
+//!
+//! The end-of-run aggregates (`RunStats`, `DramStats`, `Dx100Stats`) say
+//! *how much* happened; this module says *when*. With telemetry enabled
+//! (`DX100_TELEMETRY=1`, `ExecOptions::telemetry`, or `run --telemetry`)
+//! the simulator samples windowed counters at quantum boundaries —
+//! per-DRAM-channel row-hit rate and bandwidth, request-buffer and MSHR
+//! occupancy, DX100 queue depth, per-tenant progress — and folds request
+//! latencies into log2-bucket histograms. The collected
+//! [`TelemetryData`] rides on `RunStats::telemetry` and is exported
+//! three ways: a `telemetry` object in `BENCH_*.json` (harness), a CLI
+//! summary (`run --telemetry`), and a Chrome-trace/Perfetto timeline
+//! (`run --trace out.json`).
+//!
+//! House rules, shared with `util::regions`:
+//!
+//! * **Deterministic.** Every series is keyed on *simulated* cycles and
+//!   sampled at quantum boundaries of the serial coordinator loop, so
+//!   the data is bit-identical across the whole
+//!   `(DX100_THREADS, DX100_SHARDS)` matrix. No wall-clock values ever
+//!   enter [`TelemetryData`].
+//! * **Off means free.** The knob resolves through one tri-state atomic;
+//!   when off, every hook sees `None` state that was never allocated and
+//!   [`enabled`] is a single relaxed load
+//!   (`tests/telemetry_overhead.rs` pins the zero-allocation claim).
+//! * **Out of every fingerprint.** Telemetry never feeds a config or
+//!   workload fingerprint, and telemetry-enabled runs bypass result
+//!   cache *reads* so a replayed `RunStats` can never carry stale (or
+//!   missing) series. Cache encoding omits the field entirely.
+//!
+//! Memory is bounded: long runs decimate rather than grow — windows
+//! merge pairwise past [`MAX_WINDOWS`], samples drop every other entry
+//! past [`MAX_SAMPLES`] (they are cumulative or point-in-time values, so
+//! dropping interior points loses resolution, not correctness), and
+//! instruction spans stop recording past [`MAX_SPANS`].
+
+use super::WarnOnce;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNRESOLVED: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Tri-state so the `DX100_TELEMETRY` parse happens once, lazily, and
+/// [`set_enabled`] can override it for tests, the CLI, and `ExecOptions`.
+static STATE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+static WARN_TELEMETRY: WarnOnce = WarnOnce::new();
+
+/// Whether telemetry collection is on (`DX100_TELEMETRY=1`, or a prior
+/// [`set_enabled`] call). The environment is consulted once; a malformed
+/// value warns once and telemetry stays off.
+///
+/// Simulator components read this exactly once, at construction, and
+/// resolve it into `Option` state — so a mid-run toggle never produces a
+/// half-collected series.
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = match std::env::var("DX100_TELEMETRY") {
+                Err(_) => false,
+                Ok(raw) => match raw.trim() {
+                    "1" => true,
+                    "0" | "" => false,
+                    _ => {
+                        WARN_TELEMETRY.warn("DX100_TELEMETRY", &raw, "0 or 1");
+                        false
+                    }
+                },
+            };
+            set_enabled(on);
+            on
+        }
+    }
+}
+
+/// Force telemetry on or off, overriding the environment. The CLI,
+/// `ExecOptions`, and tests use this; simulation code should only ever
+/// read [`enabled`].
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Number of log2 buckets in a latency [`Hist`] (covers the full `u64`
+/// cycle range).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Per-channel window cap; past it, adjacent windows merge pairwise.
+pub const MAX_WINDOWS: usize = 256;
+
+/// System-sample cap; past it, every other sample is dropped.
+pub const MAX_SAMPLES: usize = 512;
+
+/// DX100 instruction-span cap; past it, later spans are not recorded.
+pub const MAX_SPANS: usize = 2048;
+
+/// Log2-bucket latency histogram over simulated cycles.
+///
+/// Bucket 0 counts latency 0; bucket `i >= 1` counts latencies in
+/// `[2^(i-1), 2^i)`. The top bucket absorbs everything beyond `2^30`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    /// Per-bucket counts (see type docs for the bucket boundaries).
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total number of recorded values.
+    pub count: u64,
+    /// Sum of all recorded values (for exact means).
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+impl Hist {
+    /// Fold one latency value into the histogram.
+    pub fn record(&mut self, v: u64) {
+        let b = if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Exact mean of the recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Whether anything has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the top
+    /// bucket), for summary display.
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+}
+
+/// One DRAM channel's activity over `[t0, t1)` simulated cycles.
+///
+/// Counter fields are deltas over the window; `buffer_len` /
+/// `overflow_len` are point-in-time occupancies at the window's end.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelWindow {
+    /// Window start (simulated cycle).
+    pub t0: u64,
+    /// Window end (simulated cycle, exclusive).
+    pub t1: u64,
+    /// Read requests completed in the window.
+    pub reads: u64,
+    /// Write requests completed in the window.
+    pub writes: u64,
+    /// Row-buffer hits in the window.
+    pub row_hits: u64,
+    /// Row-buffer misses (closed-row activations) in the window.
+    pub row_misses: u64,
+    /// Row-empty activations in the window.
+    pub row_empty: u64,
+    /// Data bytes transferred in the window.
+    pub bytes: u64,
+    /// Request-buffer occupancy at `t1`.
+    pub buffer_len: u64,
+    /// Overflow-queue occupancy at `t1`.
+    pub overflow_len: u64,
+}
+
+impl ChannelWindow {
+    /// Row-buffer hit rate over the window (0.0 when no row activity).
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses + self.row_empty;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    /// Achieved bytes per simulated cycle over the window.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        let span = self.t1.saturating_sub(self.t0);
+        if span == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / span as f64
+        }
+    }
+
+    /// Merge a *later* adjacent window into this one: counters add, the
+    /// span extends to `later.t1`, and point-in-time occupancies take
+    /// the later snapshot.
+    pub fn absorb(&mut self, later: &ChannelWindow) {
+        self.t1 = later.t1;
+        self.reads += later.reads;
+        self.writes += later.writes;
+        self.row_hits += later.row_hits;
+        self.row_misses += later.row_misses;
+        self.row_empty += later.row_empty;
+        self.bytes += later.bytes;
+        self.buffer_len = later.buffer_len;
+        self.overflow_len = later.overflow_len;
+    }
+}
+
+/// One DRAM channel's full telemetry: the windowed counter series plus
+/// the request-latency histogram. The channel index is the position in
+/// `TelemetryData::channels`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChannelSeries {
+    /// Activity windows in increasing-time order.
+    pub windows: Vec<ChannelWindow>,
+    /// Queue-to-completion latency of every DRAM request (cycles).
+    pub dram_latency: Hist,
+}
+
+impl ChannelSeries {
+    /// Append a window, merging pairwise once [`MAX_WINDOWS`] is hit so
+    /// the series stays bounded with uniform loss of resolution.
+    pub fn push(&mut self, w: ChannelWindow) {
+        if self.windows.len() >= MAX_WINDOWS {
+            decimate_windows(&mut self.windows);
+        }
+        self.windows.push(w);
+    }
+}
+
+/// Merge adjacent window pairs in place, halving the series length.
+pub fn decimate_windows(windows: &mut Vec<ChannelWindow>) {
+    let mut out = Vec::with_capacity(windows.len() / 2 + 1);
+    let mut it = windows.drain(..);
+    while let Some(mut a) = it.next() {
+        if let Some(b) = it.next() {
+            a.absorb(&b);
+        }
+        out.push(a);
+    }
+    drop(it);
+    *windows = out;
+}
+
+/// One system-level sample taken at a quantum boundary.
+///
+/// Every numeric field is either cumulative (monotone over the run) or a
+/// point-in-time occupancy, so dropping interior samples during
+/// decimation keeps the remaining points exact.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SysSample {
+    /// Simulated cycle the sample was taken at (a quantum boundary).
+    pub t: u64,
+    /// DX100 queue depth: dispatched-not-retired plus outstanding memory
+    /// tokens, summed over instances (point-in-time).
+    pub dx_queue: u64,
+    /// Shared-LLC MSHR occupancy (point-in-time).
+    pub llc_mshr: u64,
+    /// Total simulation events processed so far (cumulative).
+    pub front_events: u64,
+    /// DX100 words inserted into tiles so far (cumulative; the
+    /// coalescing-progress counter).
+    pub inserted_words: u64,
+    /// DX100 indirect element accesses so far (cumulative).
+    pub indirect_accesses: u64,
+    /// Per-tenant retired instructions so far (cumulative; one entry per
+    /// mix tenant, in tenant order — a solo run has one).
+    pub tenant_instrs: Vec<u64>,
+}
+
+impl SysSample {
+    /// Whether two samples carry the same values, ignoring the
+    /// timestamp — used to skip pushing redundant idle samples.
+    pub fn same_values(&self, other: &SysSample) -> bool {
+        self.dx_queue == other.dx_queue
+            && self.llc_mshr == other.llc_mshr
+            && self.front_events == other.front_events
+            && self.inserted_words == other.inserted_words
+            && self.indirect_accesses == other.indirect_accesses
+            && self.tenant_instrs == other.tenant_instrs
+    }
+}
+
+/// Append a system sample, skipping value-identical repeats and dropping
+/// every other entry once [`MAX_SAMPLES`] is hit.
+pub fn push_sample(samples: &mut Vec<SysSample>, s: SysSample) {
+    if samples.last().is_some_and(|prev| prev.same_values(&s)) {
+        return;
+    }
+    if samples.len() >= MAX_SAMPLES {
+        // Keep odd indices: the later of each adjacent pair, so the
+        // final sample (the run's end state) always survives.
+        let mut i = 0usize;
+        samples.retain(|_| {
+            let keep = i % 2 == 1;
+            i += 1;
+            keep
+        });
+    }
+    samples.push(s);
+}
+
+/// Lifetime of one DX100 instruction: dispatch to retire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DxInstrSpan {
+    /// DX100 instance the instruction ran on.
+    pub instance: u32,
+    /// Instruction sequence number within the instance's program.
+    pub seq: u32,
+    /// Dispatch cycle.
+    pub start: u64,
+    /// Retire cycle.
+    pub end: u64,
+}
+
+/// Everything telemetry collected over one run. Compared with `==` in
+/// the determinism matrix tests, so every field derives `PartialEq`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TelemetryData {
+    /// Per-DRAM-channel series, indexed by channel.
+    pub channels: Vec<ChannelSeries>,
+    /// System-level quantum-boundary samples.
+    pub samples: Vec<SysSample>,
+    /// DX100 indirect-access completion latency (issue to data-back).
+    pub dx_latency: Hist,
+    /// DX100 instruction lifetimes (first [`MAX_SPANS`]).
+    pub dx_spans: Vec<DxInstrSpan>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test here flips `set_enabled(true)` — lib unit tests run
+    // concurrently with System-building equality tests that resolve the
+    // knob at construction, and a transient ON could make the two sides
+    // of an equality pair disagree on telemetry presence. Enable-path
+    // coverage lives in the integration tests (separate processes).
+
+    #[test]
+    fn hist_buckets_and_mean() {
+        let mut h = Hist::default();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(4);
+        h.record(1024);
+        assert_eq!(h.buckets[0], 1); // 0
+        assert_eq!(h.buckets[1], 1); // 1
+        assert_eq!(h.buckets[2], 2); // 2..=3
+        assert_eq!(h.buckets[3], 1); // 4..=7
+        assert_eq!(h.buckets[11], 1); // 1024..=2047
+        assert_eq!(h.count, 6);
+        assert_eq!(h.sum, 1034);
+        assert!((h.mean() - 1034.0 / 6.0).abs() < 1e-12);
+        // Huge values land in the top bucket instead of overflowing.
+        h.record(u64::MAX);
+        assert_eq!(h.buckets[HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn hist_merge_adds_everything() {
+        let mut a = Hist::default();
+        a.record(5);
+        let mut b = Hist::default();
+        b.record(5);
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.sum, 110);
+        assert_eq!(a.buckets[3], 2); // two 5s
+    }
+
+    #[test]
+    fn bucket_hi_bounds() {
+        assert_eq!(Hist::bucket_hi(0), 0);
+        assert_eq!(Hist::bucket_hi(1), 1);
+        assert_eq!(Hist::bucket_hi(3), 7);
+        assert_eq!(Hist::bucket_hi(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn window_rates() {
+        let w = ChannelWindow {
+            t0: 100,
+            t1: 200,
+            reads: 10,
+            writes: 2,
+            row_hits: 9,
+            row_misses: 2,
+            row_empty: 1,
+            bytes: 768,
+            buffer_len: 4,
+            overflow_len: 0,
+        };
+        assert!((w.row_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((w.bytes_per_cycle() - 7.68).abs() < 1e-12);
+        assert_eq!(ChannelWindow::default().row_hit_rate(), 0.0);
+        assert_eq!(ChannelWindow::default().bytes_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn absorb_adds_counters_and_takes_later_occupancy() {
+        let mut a = ChannelWindow {
+            t0: 0,
+            t1: 100,
+            reads: 3,
+            bytes: 64,
+            buffer_len: 7,
+            ..Default::default()
+        };
+        let b = ChannelWindow {
+            t0: 100,
+            t1: 250,
+            reads: 5,
+            bytes: 128,
+            buffer_len: 2,
+            overflow_len: 1,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.t0, 0);
+        assert_eq!(a.t1, 250);
+        assert_eq!(a.reads, 8);
+        assert_eq!(a.bytes, 192);
+        assert_eq!(a.buffer_len, 2);
+        assert_eq!(a.overflow_len, 1);
+    }
+
+    #[test]
+    fn series_push_decimates_at_cap() {
+        let mut s = ChannelSeries::default();
+        for i in 0..MAX_WINDOWS as u64 {
+            s.push(ChannelWindow {
+                t0: i * 10,
+                t1: i * 10 + 10,
+                reads: 1,
+                ..Default::default()
+            });
+        }
+        assert_eq!(s.windows.len(), MAX_WINDOWS);
+        s.push(ChannelWindow {
+            t0: MAX_WINDOWS as u64 * 10,
+            t1: MAX_WINDOWS as u64 * 10 + 10,
+            reads: 1,
+            ..Default::default()
+        });
+        // Halved, then one appended.
+        assert_eq!(s.windows.len(), MAX_WINDOWS / 2 + 1);
+        // No reads lost to decimation.
+        let total: u64 = s.windows.iter().map(|w| w.reads).sum();
+        assert_eq!(total, MAX_WINDOWS as u64 + 1);
+        // Still time-ordered and contiguous at the seams.
+        for pair in s.windows.windows(2) {
+            assert!(pair[0].t1 <= pair[1].t0);
+        }
+    }
+
+    #[test]
+    fn decimate_windows_odd_len_keeps_tail() {
+        let mut ws: Vec<ChannelWindow> = (0..5)
+            .map(|i| ChannelWindow {
+                t0: i * 10,
+                t1: i * 10 + 10,
+                reads: 1,
+                ..Default::default()
+            })
+            .collect();
+        decimate_windows(&mut ws);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws.iter().map(|w| w.reads).sum::<u64>(), 5);
+        assert_eq!(ws.last().unwrap().t1, 50);
+    }
+
+    #[test]
+    fn push_sample_skips_repeats_and_decimates() {
+        let mut samples = Vec::new();
+        let mk = |t: u64, ev: u64| SysSample {
+            t,
+            front_events: ev,
+            ..Default::default()
+        };
+        push_sample(&mut samples, mk(10, 1));
+        push_sample(&mut samples, mk(20, 1)); // same values, later t: skipped
+        push_sample(&mut samples, mk(30, 2));
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[1].t, 30);
+
+        let mut samples = Vec::new();
+        for i in 0..MAX_SAMPLES as u64 {
+            push_sample(&mut samples, mk(i, i + 1));
+        }
+        assert_eq!(samples.len(), MAX_SAMPLES);
+        push_sample(&mut samples, mk(9999, 9999));
+        assert_eq!(samples.len(), MAX_SAMPLES / 2 + 1);
+        // The newest sample survives and order is preserved.
+        assert_eq!(samples.last().unwrap().t, 9999);
+        for pair in samples.windows(2) {
+            assert!(pair[0].t < pair[1].t);
+        }
+    }
+
+    #[test]
+    fn default_off_without_env_override() {
+        // In the test environment DX100_TELEMETRY is unset, so resolving
+        // the knob must land on "off" (and stay a cheap load after).
+        if std::env::var("DX100_TELEMETRY").is_err() {
+            assert!(!enabled());
+            assert!(!enabled());
+        }
+    }
+}

@@ -68,6 +68,45 @@ fn profiled_bench_json_carries_all_phase_regions() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The region profiler and simulated-time telemetry compose in one run:
+/// a bench with both knobs on emits BOTH objects in the same JSON, each
+/// with its full contract intact (the `--profile --telemetry --trace`
+/// CLI combination and the fig09 CI step rely on this).
+#[test]
+fn profile_and_telemetry_compose_in_one_run() {
+    let _g = PROFILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = bench_dir("both");
+    regions::set_enabled(true);
+    let mut h = Harness::new("profile_both", "profile + telemetry compose");
+    let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 31);
+    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3())
+        .run(&w, &ExecOptions::new().telemetry(true));
+    h.run("gather", &rs);
+    h.finish();
+    regions::set_enabled(false);
+    dx100::util::telemetry::set_enabled(false);
+
+    let path = std::env::var("DX100_BENCH_DIR").map(PathBuf::from).unwrap();
+    let text = std::fs::read_to_string(path.join("BENCH_profile_both.json")).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let profile = doc.get("profile").expect("profiled run must emit profile");
+    for region in PHASE_REGIONS {
+        assert!(
+            profile.get(region).is_some(),
+            "compose run dropped phase region {region:?}"
+        );
+    }
+    let telem = doc
+        .get("telemetry")
+        .and_then(|t| t.get("gather/dx100"))
+        .expect("compose run must also emit telemetry");
+    let channels = telem.get("channels").and_then(Json::as_array).unwrap();
+    assert!(channels
+        .iter()
+        .any(|c| !c.get("windows").and_then(Json::as_array).unwrap().is_empty()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn unprofiled_bench_json_omits_profile() {
     let _g = PROFILE_LOCK.lock().unwrap_or_else(|e| e.into_inner());

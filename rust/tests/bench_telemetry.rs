@@ -1,0 +1,136 @@
+//! End-to-end check of the harness's `telemetry` emission and the
+//! Chrome-trace exporter: a telemetry-enabled run must land a
+//! `telemetry` object in `BENCH_*.json` keyed `workload/system` with
+//! windowed channel series, a disabled run must omit the key entirely
+//! (the CI gate `bench_check --require-telemetry` builds on exactly this
+//! contract), and `chrome_trace` must lay the same data out as a
+//! Perfetto-loadable timeline with monotone per-track timestamps.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::harness::{chrome_trace, Harness, Json};
+use dx100::engine::ExecOptions;
+use dx100::util::telemetry;
+use dx100::workloads::micro;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Serializes the tests: they flip the process-global telemetry state
+/// and share the `DX100_BENCH_DIR` environment variable.
+static TELEMETRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dx100-btelem-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::env::set_var("DX100_BENCH_DIR", &dir);
+    dir
+}
+
+fn run_bench(name: &'static str, on: bool) -> (Json, dx100::coordinator::RunStats) {
+    let mut h = Harness::new(name, "telemetry emission smoke");
+    let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 31);
+    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3())
+        .run(&w, &ExecOptions::new().telemetry(on));
+    h.run("gather", &rs);
+    h.finish();
+    let path = std::env::var("DX100_BENCH_DIR").map(PathBuf::from).unwrap();
+    let text = std::fs::read_to_string(path.join(format!("BENCH_{name}.json"))).unwrap();
+    (Json::parse(&text).unwrap(), rs)
+}
+
+#[test]
+fn telemetry_bench_json_carries_windowed_series() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = bench_dir("on");
+    let (doc, _rs) = run_bench("telemetry_on", true);
+    telemetry::set_enabled(false);
+
+    let telem = doc
+        .get("telemetry")
+        .expect("telemetry-enabled run must emit the object");
+    let run = telem
+        .get("gather/dx100")
+        .expect("entries are keyed workload/system");
+    let channels = run.get("channels").and_then(Json::as_array).unwrap();
+    assert!(!channels.is_empty());
+    let mut windows = 0usize;
+    for ch in channels {
+        let ws = ch.get("windows").and_then(Json::as_array).unwrap();
+        windows += ws.len();
+        let mut last = 0u64;
+        for w in ws {
+            let t0 = w.get("t0").and_then(Json::as_u64).unwrap();
+            let t1 = w.get("t1").and_then(Json::as_u64).unwrap();
+            assert!(t0 >= last && t1 >= t0, "window series must be monotone");
+            last = t1;
+            let rhr = w.get("row_hit_rate").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0).contains(&rhr));
+        }
+        let lat = ch.get("dram_latency").unwrap();
+        let buckets = lat.get("buckets").and_then(Json::as_array).unwrap();
+        assert_eq!(buckets.len(), telemetry::HIST_BUCKETS);
+        let count = lat.get("count").and_then(Json::as_u64).unwrap();
+        let total: u64 = buckets.iter().filter_map(Json::as_u64).sum();
+        assert_eq!(total, count, "histogram buckets must sum to count");
+    }
+    assert!(windows > 0, "an active run must record channel windows");
+    assert!(!run
+        .get("samples")
+        .and_then(Json::as_array)
+        .unwrap()
+        .is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn untelemetered_bench_json_omits_the_key() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = bench_dir("off");
+    let (doc, rs) = run_bench("telemetry_off", false);
+    assert!(rs.telemetry.is_none());
+    assert!(
+        doc.get("telemetry").is_none(),
+        "disabled run must omit the telemetry key"
+    );
+    // The rest of the schema is unaffected either way.
+    assert_eq!(
+        doc.get("bench").and_then(Json::as_str),
+        Some("telemetry_off")
+    );
+    assert!(doc.get("rows").and_then(Json::as_array).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chrome_trace_of_a_real_run_is_well_formed() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w = micro::gather_full(4096, micro::IndexPattern::UniformRandom, 32);
+    let rs = Experiment::new(SystemKind::Dx100, SystemConfig::table3())
+        .run(&w, &ExecOptions::new().telemetry(true));
+    telemetry::set_enabled(false);
+    let td = rs.telemetry.as_deref().expect("run must collect");
+    let doc = Json::parse(&chrome_trace(&[("gather/dx100", td)]).render()).unwrap();
+    let evs = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+    assert!(evs.len() > 1, "timeline must carry events");
+    // Track timestamps must never go backwards (what Perfetto relies on
+    // per track, and what `bench_check --check-trace` verifies in CI).
+    let mut last: std::collections::HashMap<(u64, u64), u64> = std::collections::HashMap::new();
+    let mut slices = 0usize;
+    for e in evs {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        if ph == "M" {
+            continue;
+        }
+        if ph == "X" {
+            slices += 1;
+            assert!(e.get("dur").and_then(Json::as_u64).is_some());
+        }
+        let pid = e.get("pid").and_then(Json::as_u64).unwrap();
+        let tid = e.get("tid").and_then(Json::as_u64).unwrap_or(0);
+        let ts = e.get("ts").and_then(Json::as_u64).unwrap();
+        let prev = last.entry((pid, tid)).or_insert(0);
+        assert!(ts >= *prev, "track ({pid},{tid}) went backwards");
+        *prev = ts;
+    }
+    assert!(slices > 0, "busy windows / DX spans must emit slices");
+}

@@ -1,0 +1,240 @@
+//! Determinism and cache-hygiene guarantees of simulated-time telemetry.
+//!
+//! The contract (`util::telemetry`, `docs/OBSERVABILITY.md`): collected
+//! series are keyed on simulated cycles and bit-identical across the
+//! whole `(DX100_THREADS, DX100_SHARDS)` matrix; the knob changes no
+//! other statistic; it never enters a config or workload fingerprint;
+//! and a cached replay can never surface stale telemetry — enabled runs
+//! bypass cache reads and re-simulate.
+//!
+//! The tests flip the process-global telemetry state, so they serialize
+//! on a file-local lock and always restore "off" before releasing it.
+//! (Lib unit tests never enable telemetry for the same reason — this
+//! integration binary is its own process.)
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind};
+use dx100::engine::cache::{system_fingerprint, workload_fingerprint, ResultCache};
+use dx100::engine::{execute_sweep, ExecOptions, SweepPlan, SweepPoint};
+use dx100::util::telemetry;
+use dx100::workloads::mix::{ArbPolicy, MixSpec};
+use dx100::workloads::{micro, Registry, Scale};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static TELEMETRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn small_gather() -> dx100::workloads::WorkloadSpec {
+    micro::gather_full(1 << 12, micro::IndexPattern::UniformRandom, 0x7E)
+}
+
+fn temp_cache(tag: &str) -> (ResultCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("dx100-telem-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultCache::at(&dir), dir)
+}
+
+/// Telemetry series are bit-identical across the full `(threads, shards)`
+/// matrix on all three systems — the whole `RunStats` (telemetry
+/// included, via `PartialEq`) must match the serial reference.
+#[test]
+fn telemetry_is_bit_identical_across_threads_and_shards() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w = small_gather();
+    let cfg = SystemConfig::table3();
+    for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
+        let ex = Experiment::new(kind, cfg.clone());
+        let reference = ex.run(&w, &ExecOptions::new().threads(1).shards(1).telemetry(true));
+        let td = reference
+            .telemetry
+            .as_ref()
+            .expect("telemetry-enabled run must collect");
+        assert!(
+            td.channels.iter().any(|c| !c.windows.is_empty()),
+            "{kind:?}: no channel windows collected"
+        );
+        assert!(!td.samples.is_empty(), "{kind:?}: no system samples");
+        for ch in &td.channels {
+            let mut last = 0u64;
+            for win in &ch.windows {
+                assert!(win.t0 >= last && win.t1 >= win.t0, "{kind:?}: bad window");
+                last = win.t1;
+            }
+        }
+        if kind == SystemKind::Dx100 {
+            assert!(!td.dx_latency.is_empty(), "DX100 run must record latencies");
+            assert!(!td.dx_spans.is_empty(), "DX100 run must record spans");
+        }
+        for threads in [1usize, 2, 4] {
+            for shards in [1usize, 2, 4] {
+                let r = ex.run(
+                    &w,
+                    &ExecOptions::new()
+                        .threads(threads)
+                        .shards(shards)
+                        .telemetry(true),
+                );
+                assert_eq!(
+                    r, reference,
+                    "{kind:?} telemetry diverged at threads={threads} shards={shards}"
+                );
+            }
+        }
+    }
+    telemetry::set_enabled(false);
+}
+
+/// Multi-tenant mixes collect per-tenant progress series that are just as
+/// deterministic across the shard fan-out.
+#[test]
+fn mix_telemetry_is_deterministic_and_per_tenant() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = Registry::paper().with_synth();
+    let mix = MixSpec::new()
+        .tenant("uni-gather", 2)
+        .tenant("zipf-gather", 2);
+    let cfg = SystemConfig::table3();
+    let mut reference = None;
+    for shards in [1usize, 2, 4] {
+        let opts = ExecOptions::new()
+            .threads(1)
+            .shards(shards)
+            .no_cache()
+            .telemetry(true);
+        let r = dx100::engine::mix::run_mix(&mix, &reg, &cfg, Scale::test(), ArbPolicy::Fifo, &opts)
+            .unwrap();
+        let td = r
+            .combined
+            .telemetry
+            .as_ref()
+            .expect("mix run must collect telemetry");
+        assert!(
+            td.samples.iter().all(|s| s.tenant_instrs.len() == 2),
+            "every sample must carry one progress entry per tenant"
+        );
+        // Per-tenant progress is cumulative within each tenant's slot.
+        for t in 0..2 {
+            let mut last = 0u64;
+            for s in &td.samples {
+                assert!(s.tenant_instrs[t] >= last, "tenant {t} progress regressed");
+                last = s.tenant_instrs[t];
+            }
+        }
+        match &reference {
+            None => reference = Some(r.combined.clone()),
+            Some(want) => assert_eq!(&r.combined, want, "mix diverged at shards={shards}"),
+        }
+    }
+    telemetry::set_enabled(false);
+}
+
+/// The telemetry knob changes no statistic outside `RunStats::telemetry`:
+/// an enabled run with the telemetry field cleared equals a disabled run
+/// bit for bit.
+#[test]
+fn telemetry_knob_changes_no_other_field() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w = small_gather();
+    let cfg = SystemConfig::table3();
+    for kind in [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100] {
+        let ex = Experiment::new(kind, cfg.clone());
+        let off = ex.run(&w, &ExecOptions::new().telemetry(false));
+        assert!(off.telemetry.is_none(), "disabled run must not collect");
+        let mut on = ex.run(&w, &ExecOptions::new().telemetry(true));
+        assert!(on.telemetry.is_some());
+        on.telemetry = None;
+        assert_eq!(on, off, "{kind:?}: telemetry knob leaked into stats");
+    }
+    telemetry::set_enabled(false);
+}
+
+/// The knob stays out of every fingerprint: flipping it moves neither the
+/// per-system config fingerprints nor the workload fingerprint.
+#[test]
+fn telemetry_is_absent_from_every_fingerprint() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = SystemConfig::table3();
+    let w = small_gather();
+    telemetry::set_enabled(false);
+    let fps_off: Vec<u64> = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100]
+        .iter()
+        .map(|&k| system_fingerprint(&cfg, k))
+        .collect();
+    let wfp_off = workload_fingerprint(&w);
+    telemetry::set_enabled(true);
+    let fps_on: Vec<u64> = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100]
+        .iter()
+        .map(|&k| system_fingerprint(&cfg, k))
+        .collect();
+    assert_eq!(fps_off, fps_on, "config fingerprints must ignore the knob");
+    assert_eq!(
+        wfp_off,
+        workload_fingerprint(&w),
+        "workload fingerprint must ignore the knob"
+    );
+    telemetry::set_enabled(false);
+}
+
+/// Cached replays never surface stale telemetry: a telemetry-enabled
+/// sweep over a warm cache bypasses the probe (0 hits), re-simulates, and
+/// carries fresh series — while its non-telemetry stats still match the
+/// cached run bit for bit, and the entries it stores remain usable by a
+/// later telemetry-off sweep.
+#[test]
+fn warm_cache_is_bypassed_and_fresh_series_collected() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (cache, dir) = temp_cache("bypass");
+    let ws = vec![small_gather()];
+    let systems = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+    let points = vec![SweepPoint::new("p", SystemConfig::table3())];
+    let plan = SweepPlan::new(&points, &ws, &systems);
+
+    let cold = execute_sweep(
+        &plan,
+        &ExecOptions::new()
+            .threads(1)
+            .cache(cache.clone())
+            .telemetry(false),
+    );
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.cache_misses, 3);
+
+    // Telemetry on: the warm cache must NOT serve these cells.
+    let fresh = execute_sweep(
+        &plan,
+        &ExecOptions::new()
+            .threads(1)
+            .cache(cache.clone())
+            .telemetry(true),
+    );
+    assert_eq!(fresh.cache_hits, 0, "telemetry run must bypass cache reads");
+    for (got, want) in fresh.points[0].workloads[0]
+        .runs
+        .iter()
+        .zip(&cold.points[0].workloads[0].runs)
+    {
+        let td = got.telemetry.as_ref().expect("bypassed cell must collect");
+        assert!(td.channels.iter().any(|c| !c.windows.is_empty()));
+        let mut scrubbed = got.clone();
+        scrubbed.telemetry = None;
+        assert_eq!(&scrubbed, want, "bypassed re-simulation diverged");
+    }
+
+    // Telemetry off again: the same entries (written cold, and
+    // re-written by the bypass run under the same keys) replay as hits
+    // with no telemetry attached.
+    let warm = execute_sweep(
+        &plan,
+        &ExecOptions::new()
+            .threads(1)
+            .cache(cache.clone())
+            .telemetry(false),
+    );
+    assert_eq!(warm.cache_hits, 3, "knob must not split the cache key");
+    for rs in &warm.points[0].workloads[0].runs {
+        assert!(rs.telemetry.is_none(), "cached replay surfaced telemetry");
+    }
+
+    telemetry::set_enabled(false);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,93 @@
+//! Zero-overhead guard for simulated-time telemetry when it is off.
+//!
+//! `util::telemetry` gates hooks in the DRAM channels, the DX100 timing
+//! model, and the coordinator's quantum loop, so the `DX100_TELEMETRY=0`
+//! path must cost nothing measurable: components resolve the knob once
+//! at construction into `None` state, and the gate itself is a single
+//! relaxed atomic load. Like `tests/profiler_overhead.rs`, this pins the
+//! strongest cheap proxy — **zero heap allocations** across many gate
+//! checks while telemetry is disabled — with a per-thread counting
+//! global allocator (const-initialized TLS cell, so the counter itself
+//! never allocates; sibling test threads cannot bleed into the window).
+
+use dx100::util::telemetry;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper that counts this thread's allocations.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        LOCAL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LOCAL_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn this_thread_allocs() -> u64 {
+    LOCAL_ALLOCS.with(Cell::get)
+}
+
+/// Serializes the tests: they flip the process-global enable state.
+static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn disabled_telemetry_gate_allocates_nothing() {
+    let _g = ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Resolve the tri-state once (the first call may read the
+    // environment, which allocates).
+    telemetry::set_enabled(false);
+    assert!(!telemetry::enabled());
+
+    let before = this_thread_allocs();
+    for _ in 0..100_000 {
+        // The construction-time pattern every component uses: one gate
+        // check deciding whether any state exists at all.
+        if telemetry::enabled() {
+            unreachable!("telemetry is off");
+        }
+    }
+    let after = this_thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "disabled-telemetry gate must not allocate"
+    );
+}
+
+#[test]
+fn disabled_run_allocates_no_telemetry_state() {
+    let _g = ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    telemetry::set_enabled(false);
+    // A full disabled run carries no telemetry: the `Option` state stays
+    // `None` end to end. (Not a zero-allocation claim — the simulator
+    // itself allocates — but the contract the gate exists for.)
+    let w = dx100::workloads::micro::gather_full(
+        1 << 10,
+        dx100::workloads::micro::IndexPattern::Streaming,
+        3,
+    );
+    let rs = dx100::coordinator::Experiment::new(
+        dx100::coordinator::SystemKind::Dx100,
+        dx100::config::SystemConfig::table3(),
+    )
+    .run(&w, &dx100::engine::ExecOptions::new().telemetry(false));
+    assert!(rs.telemetry.is_none());
+}
