@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! bench_check [--require-profile] [--require-telemetry] \
-//!     [--check-trace TRACE.json] BENCH_fig09.json BENCH_fig13.json ...
+//!     [--check-trace TRACE.json] [--compare-rows A.json B.json] \
+//!     BENCH_fig09.json BENCH_fig13.json ...
 //! ```
 //!
 //! Exits non-zero (naming the file and field) when any document is
@@ -17,7 +18,11 @@
 //! (paired with `DX100_TELEMETRY=1`), a `telemetry` object with at least
 //! one windowed channel series. `--check-trace` validates an emitted
 //! Chrome-trace timeline (non-empty `traceEvents`, per-track monotone
-//! timestamps). Std-only, reusing the harness's JSON parser, so the
+//! timestamps). `--compare-rows A B` asserts the two documents carry
+//! **identical** `rows` arrays — the CI snapshot-smoke gate that a
+//! checkpointed-then-resumed bench run reproduced every simulated value
+//! bit-for-bit (wall-clock header fields legitimately differ and are
+//! ignored). Std-only, reusing the harness's JSON parser, so the
 //! bench-smoke CI job needs no extra tooling.
 
 use dx100::engine::harness::Json;
@@ -321,10 +326,44 @@ fn check_doc(
     Ok((rows.len(), n_metrics))
 }
 
+/// Load a bench document's `rows` array, rendered back to canonical
+/// compact JSON per row (the parser/renderer round trip is exact for the
+/// dialect the benches emit, so string equality is value equality).
+fn load_rows(path: &str) -> Result<Vec<String>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("unreadable: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_array)
+        .ok_or("missing or non-array \"rows\"")?;
+    if rows.is_empty() {
+        return Err("empty \"rows\"".to_string());
+    }
+    Ok(rows.iter().map(Json::render).collect())
+}
+
+/// The snapshot-smoke gate: both documents must carry bit-identical
+/// `rows` arrays (same length, same rows, same order). Header fields
+/// like `wall_seconds` are ignored — only simulated values are gated.
+fn compare_rows(a: &str, b: &str) -> Result<usize, String> {
+    let ra = load_rows(a).map_err(|e| format!("{a}: {e}"))?;
+    let rb = load_rows(b).map_err(|e| format!("{b}: {e}"))?;
+    if ra.len() != rb.len() {
+        return Err(format!("{}: {} rows vs {}: {} rows", a, ra.len(), b, rb.len()));
+    }
+    for (i, (x, y)) in ra.iter().zip(&rb).enumerate() {
+        if x != y {
+            return Err(format!("rows[{i}] differ:\n  {a}: {x}\n  {b}: {y}"));
+        }
+    }
+    Ok(ra.len())
+}
+
 fn main() -> ExitCode {
     let mut require_profile = false;
     let mut require_telemetry = false;
     let mut traces: Vec<String> = Vec::new();
+    let mut compares: Vec<(String, String)> = Vec::new();
     let mut paths: Vec<String> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
@@ -338,6 +377,13 @@ fn main() -> ExitCode {
                     return ExitCode::from(2);
                 }
             },
+            "--compare-rows" => match (args.next(), args.next()) {
+                (Some(a), Some(b)) => compares.push((a, b)),
+                _ => {
+                    eprintln!("--compare-rows: want two BENCH_*.json paths");
+                    return ExitCode::from(2);
+                }
+            },
             _ if arg.starts_with("--") => {
                 eprintln!("unknown flag {arg:?}");
                 return ExitCode::from(2);
@@ -345,10 +391,10 @@ fn main() -> ExitCode {
             _ => paths.push(arg),
         }
     }
-    if paths.is_empty() && traces.is_empty() {
+    if paths.is_empty() && traces.is_empty() && compares.is_empty() {
         eprintln!(
             "usage: bench_check [--require-profile] [--require-telemetry] \
-             [--check-trace TRACE.json] <BENCH_*.json> ..."
+             [--check-trace TRACE.json] [--compare-rows A.json B.json] <BENCH_*.json> ..."
         );
         return ExitCode::from(2);
     }
@@ -373,6 +419,15 @@ fn main() -> ExitCode {
             Ok(events) => println!("OK {path}: {events} trace events"),
             Err(e) => {
                 eprintln!("FAIL {path}: {e}");
+                failed = true;
+            }
+        }
+    }
+    for (a, b) in &compares {
+        match compare_rows(a, b) {
+            Ok(rows) => println!("OK {a} == {b}: {rows} identical rows"),
+            Err(e) => {
+                eprintln!("FAIL compare-rows: {e}");
                 failed = true;
             }
         }

@@ -190,6 +190,29 @@ impl PrivateLane {
     pub fn pending_shared(&self) -> u32 {
         self.pending_shared
     }
+
+    /// Serialize both private levels, their MSHR files, and the
+    /// shared-stage reservation count. Latencies come from config.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        self.l1.save(e);
+        self.l2.save(e);
+        self.l1_mshr.save(e);
+        self.l2_mshr.save(e);
+        e.u32(self.pending_shared);
+    }
+
+    /// Restore a lane built from the same config.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        self.l1.load(d)?;
+        self.l2.load(d)?;
+        self.l1_mshr.load(d)?;
+        self.l2_mshr.load(d)?;
+        self.pending_shared = d.u32("lane.pending_shared")?;
+        Ok(())
+    }
 }
 
 /// Three-level hierarchy: per-core L1D and L2 (detachable
@@ -502,6 +525,60 @@ impl Hierarchy {
     /// Shared-LLC MSHR capacity.
     pub fn llc_mshr_capacity(&self) -> usize {
         self.llc_mshr.capacity()
+    }
+
+    /// Serialize the shared tier (LLC + its MSHRs, dirty set in sorted
+    /// order, writeback queue in order) and every attached private lane.
+    /// Panics if any lane is detached — the coordinator only captures on
+    /// the serial shared stage, where all lanes are home.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.usize(self.lanes.len());
+        for l in &self.lanes {
+            l.as_ref().expect("snapshot with lane detached").save(e);
+        }
+        self.llc.save(e);
+        self.llc_mshr.save(e);
+        let mut dirty: Vec<u64> = self.dirty.iter().copied().collect();
+        dirty.sort_unstable();
+        e.usize(dirty.len());
+        for line in dirty {
+            e.u64(line);
+        }
+        e.usize(self.writebacks.len());
+        for &line in &self.writebacks {
+            e.u64(line);
+        }
+    }
+
+    /// Restore into a hierarchy built from the same config.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        use crate::engine::snapshot::SnapshotError;
+        let n = d.u64("hier.lanes")? as usize;
+        if n != self.lanes.len() {
+            return Err(SnapshotError::Corrupt {
+                field: "hier.lanes",
+                detail: format!("snapshot has {n} lanes, config wants {}", self.lanes.len()),
+            });
+        }
+        for l in &mut self.lanes {
+            l.as_mut().expect("snapshot with lane detached").load(d)?;
+        }
+        self.llc.load(d)?;
+        self.llc_mshr.load(d)?;
+        let n = d.seq_len("hier.dirty", 8)?;
+        self.dirty.clear();
+        for _ in 0..n {
+            self.dirty.insert(d.u64("hier.dirty_line")?);
+        }
+        let n = d.seq_len("hier.writebacks", 8)?;
+        self.writebacks.clear();
+        for _ in 0..n {
+            self.writebacks.push(d.u64("hier.writeback_line")?);
+        }
+        Ok(())
     }
 }
 

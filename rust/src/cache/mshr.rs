@@ -63,6 +63,54 @@ impl MshrFile {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Serialize entries in sorted line order (HashMap iteration order is
+    /// nondeterministic); capacity is validated at load, not stored blindly.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.usize(self.cap);
+        let mut entries: Vec<(u64, u64)> = self.entries.iter().map(|(&l, &c)| (l, c)).collect();
+        entries.sort_unstable();
+        e.usize(entries.len());
+        for (line, merged) in entries {
+            e.u64(line);
+            e.u64(merged);
+        }
+    }
+
+    /// Restore into a file with the *same* capacity; occupancy past the
+    /// capacity is typed corruption.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        use crate::engine::snapshot::SnapshotError;
+        let cap = d.u64("mshr.cap")? as usize;
+        if cap != self.cap {
+            return Err(SnapshotError::Corrupt {
+                field: "mshr.cap",
+                detail: format!("snapshot capacity {cap}, config wants {}", self.cap),
+            });
+        }
+        let n = d.seq_len("mshr.len", 16)?;
+        if n > cap {
+            return Err(SnapshotError::Corrupt {
+                field: "mshr.len",
+                detail: format!("{n} outstanding misses exceed capacity {cap}"),
+            });
+        }
+        self.entries.clear();
+        for _ in 0..n {
+            let line = d.u64("mshr.line")?;
+            let merged = d.u64("mshr.merged")?;
+            if self.entries.insert(line, merged).is_some() {
+                return Err(SnapshotError::Corrupt {
+                    field: "mshr.line",
+                    detail: format!("duplicate entry for line {line:#x}"),
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

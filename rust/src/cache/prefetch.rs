@@ -56,6 +56,41 @@ impl StridePrefetcher {
         e.last_line = line;
         out
     }
+
+    /// Serialize the stream table in sorted tag order plus the issue count.
+    /// `degree`/`threshold` come from config and are not stored.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        let mut rows: Vec<(u64, StreamEntry)> = self.table.iter().map(|(&k, &v)| (k, v)).collect();
+        rows.sort_unstable_by_key(|(k, _)| *k);
+        e.usize(rows.len());
+        for (tag, s) in rows {
+            e.u64(tag);
+            e.u64(s.last_line);
+            e.i64(s.stride);
+            e.u8(s.confidence);
+        }
+        e.u64(self.issued);
+    }
+
+    /// Restore the stream table from a snapshot record.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let n = d.seq_len("prefetch.len", 25)?;
+        self.table.clear();
+        for _ in 0..n {
+            let tag = d.u64("prefetch.tag")?;
+            let entry = StreamEntry {
+                last_line: d.u64("prefetch.last_line")?,
+                stride: d.i64("prefetch.stride")?,
+                confidence: d.u8("prefetch.confidence")?,
+            };
+            self.table.insert(tag, entry);
+        }
+        self.issued = d.u64("prefetch.issued")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

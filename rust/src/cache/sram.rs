@@ -141,6 +141,58 @@ impl Cache {
         }
     }
 
+    /// Serialize tag array + LRU timestamps + stats. Geometry (set count,
+    /// ways) is re-derived from config at load and validated, not stored.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.usize(self.sets.len());
+        e.usize(self.sets.first().map_or(0, |s| s.len()));
+        for set in &self.sets {
+            for l in set {
+                e.u64(l.tag);
+                e.u64(l.last_used);
+                e.bool(l.valid);
+            }
+        }
+        e.u64(self.stats.hits);
+        e.u64(self.stats.misses);
+        e.u64(self.stats.fills);
+        e.u64(self.stats.prefetch_fills);
+        e.u64(self.stats.evictions);
+        e.u64(self.stats.invalidations);
+    }
+
+    /// Restore into a cache built from the *same* config; mismatched
+    /// geometry is a typed error, not silent corruption.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        use crate::engine::snapshot::SnapshotError;
+        let nsets = d.u64("cache.sets")? as usize;
+        let ways = d.u64("cache.ways")? as usize;
+        let have = (self.sets.len(), self.sets.first().map_or(0, |s| s.len()));
+        if (nsets, ways) != have {
+            return Err(SnapshotError::Corrupt {
+                field: "cache.geometry",
+                detail: format!("snapshot {nsets}x{ways}, config wants {}x{}", have.0, have.1),
+            });
+        }
+        for set in &mut self.sets {
+            for l in set {
+                l.tag = d.u64("cache.tag")?;
+                l.last_used = d.u64("cache.last_used")?;
+                l.valid = d.bool("cache.valid")?;
+            }
+        }
+        self.stats.hits = d.u64("cache.hits")?;
+        self.stats.misses = d.u64("cache.misses")?;
+        self.stats.fills = d.u64("cache.fills")?;
+        self.stats.prefetch_fills = d.u64("cache.prefetch_fills")?;
+        self.stats.evictions = d.u64("cache.evictions")?;
+        self.stats.invalidations = d.u64("cache.invalidations")?;
+        Ok(())
+    }
+
     /// Fraction of lookups that hit.
     pub fn hit_rate(&self) -> f64 {
         let total = self.stats.hits + self.stats.misses;

@@ -112,6 +112,38 @@ impl FrontLane {
             self.core.wake(ev.time, ops, &mut env);
         }
     }
+
+    /// Serialize this lane's dynamic state. The private caches are *not*
+    /// here: capture runs on the serial shared stage, where the hierarchy
+    /// owns every lane's caches (and snapshots them itself).
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        assert!(
+            self.lane.is_none(),
+            "snapshot of a lane still holding its caches"
+        );
+        assert!(self.actions.is_empty(), "snapshot with undrained lane actions");
+        self.core.save(e);
+        self.prefetcher.save(e);
+        self.queue.save(e);
+        e.u64(self.last_time);
+        e.u64(self.events);
+    }
+
+    /// Restore the state captured by [`FrontLane::save`] into a freshly
+    /// constructed lane for the same workload.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        let cw = Arc::clone(&self.cw);
+        let ops = self.kind.variant().stream_of(&cw, self.stream);
+        self.core.load(d, ops)?;
+        self.prefetcher.load(d)?;
+        self.queue.load(d)?;
+        self.last_time = d.u64("lane.last_time")?;
+        self.events = d.u64("lane.events")?;
+        Ok(())
+    }
 }
 
 /// One DX100 instance's complete lane state, advanced independently
@@ -164,6 +196,29 @@ impl DxLane {
             };
             self.timing.wake(ev.time, &mut env);
         }
+    }
+
+    /// Serialize this instance lane's dynamic state. The `space` snapshot
+    /// is not stored — the coordinator refills it before every round.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        assert!(self.actions.is_empty(), "snapshot with undrained dx actions");
+        self.timing.save(e);
+        self.queue.save(e);
+        e.u64(self.last_time);
+        e.u64(self.events);
+    }
+
+    /// Restore the state captured by [`DxLane::save`] into a freshly
+    /// constructed lane for the same workload.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        self.timing.load(d)?;
+        self.queue.load(d)?;
+        self.last_time = d.u64("dxlane.last_time")?;
+        self.events = d.u64("dxlane.events")?;
+        Ok(())
     }
 }
 

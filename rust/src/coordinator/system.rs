@@ -58,6 +58,7 @@ use crate::core::{CoreModel, LaneActionKind, LineWaiters};
 use crate::dx100::timing::{Dx100Stats, DxActionKind};
 use crate::dx100::NO_TILE;
 use crate::engine::pool::{Crew, WorkerPool};
+use crate::engine::snapshot::{self, Dec, Enc, RunIdentity, SnapCtl, SnapshotError};
 use crate::engine::ExecOptions;
 use crate::mem::{dram::Completion, MemController, ReqSource, ShardChannel};
 use crate::sim::{Cycle, Event, EventQueue};
@@ -280,7 +281,7 @@ pub fn snapshot_outputs(p: &Program, mem: &MemImage) -> Vec<OutputSnapshot> {
 
 /// Results of a co-scheduled [`Experiment::run_mix`]: whole-system stats
 /// plus per-tenant slices, in tenant order.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MixRun {
     /// Whole-system stats (cycles span the longest tenant).
     pub stats: RunStats,
@@ -332,18 +333,34 @@ impl Experiment {
     /// crews), and the persisted result cache belongs to the sweep
     /// executor ([`crate::engine::execute_sweep`]).
     pub fn run<'a>(&self, input: impl Into<RunInput<'a>>, opts: &ExecOptions) -> RunStats {
+        self.try_run(input, opts)
+            .unwrap_or_else(|e| panic!("snapshot error: {e}"))
+    }
+
+    /// [`Experiment::run`] with snapshot failures surfaced as typed
+    /// [`SnapshotError`]s instead of panics. Runs whose `opts` carry no
+    /// checkpoint/resume knobs cannot fail.
+    pub fn try_run<'a>(
+        &self,
+        input: impl Into<RunInput<'a>>,
+        opts: &ExecOptions,
+    ) -> Result<RunStats, SnapshotError> {
         opts.apply_profile();
         opts.apply_telemetry();
         let shards = opts.resolved_shards();
         grow_pool_for_hint(shards, opts.resolved_threads());
-        match input.into() {
+        let (cw, warm) = match input.into() {
             RunInput::Spec(w) => {
                 let cw = compile(&w.program, &w.mem, &self.cfg)
                     .unwrap_or_else(|e| panic!("{} rejected by compiler: {e}", w.program.name));
-                self.exec(&Arc::new(cw), w.warm_caches, shards)
+                (Arc::new(cw), w.warm_caches)
             }
-            RunInput::Compiled { cw, warm } => self.exec(cw, warm, shards),
-        }
+            RunInput::Compiled { cw, warm } => (Arc::clone(cw), warm),
+        };
+        let tenants = [Tenant::new(&cw, warm)];
+        let mut sys = System::build(self.kind.variant(), &self.cfg, &tenants, ArbPolicy::Fifo);
+        self.drive(&mut sys, &tenants, ArbPolicy::Fifo, shards, opts)?;
+        Ok(sys.stats(self.kind, cw.name))
     }
 
     /// Co-schedule `tenants` on disjoint core groups sharing this
@@ -357,15 +374,88 @@ impl Experiment {
         policy: ArbPolicy,
         opts: &ExecOptions,
     ) -> MixRun {
+        self.try_run_mix(name, tenants, policy, opts)
+            .unwrap_or_else(|e| panic!("snapshot error: {e}"))
+    }
+
+    /// [`Experiment::run_mix`] with snapshot failures surfaced as typed
+    /// [`SnapshotError`]s instead of panics. Runs whose `opts` carry no
+    /// checkpoint/resume knobs cannot fail.
+    pub fn try_run_mix(
+        &self,
+        name: &'static str,
+        tenants: &[Tenant],
+        policy: ArbPolicy,
+        opts: &ExecOptions,
+    ) -> Result<MixRun, SnapshotError> {
         opts.apply_profile();
         opts.apply_telemetry();
         let shards = opts.resolved_shards();
         grow_pool_for_hint(shards, opts.resolved_threads());
         let mut sys = System::build(self.kind.variant(), &self.cfg, tenants, policy);
-        sys.run(shards);
-        MixRun {
+        self.drive(&mut sys, tenants, policy, shards, opts)?;
+        Ok(MixRun {
             stats: sys.stats(self.kind, name),
             tenants: sys.tenant_stats(),
+        })
+    }
+
+    /// The snapshot identity a run under this experiment is captured
+    /// under and validated against: system label, system-relevant config
+    /// fingerprint, arbitration label, the resolved telemetry knob, and
+    /// every tenant's workload identity.
+    fn identity(&self, tenants: &[Tenant], arb: ArbPolicy) -> RunIdentity {
+        RunIdentity {
+            system: self.kind.label(),
+            cfg_fingerprint: crate::engine::cache::system_fingerprint(&self.cfg, self.kind),
+            arb: arb.label(),
+            telemetry: telemetry::enabled(),
+            tenants: tenants.iter().map(snapshot::tenant_identity).collect(),
+        }
+    }
+
+    /// Run `sys` under `opts`' snapshot knobs: plain runs take the
+    /// zero-overhead path; otherwise the resume body is loaded and
+    /// header-validated up front, and each captured record is written
+    /// atomically under the resolved snapshot directory. The identity
+    /// (including the compiled-workload fingerprints) is only computed
+    /// when a knob is set.
+    fn drive(
+        &self,
+        sys: &mut System<'_>,
+        tenants: &[Tenant],
+        arb: ArbPolicy,
+        shards: usize,
+        opts: &ExecOptions,
+    ) -> Result<(), SnapshotError> {
+        if !opts.snapshots_active() {
+            sys.run(shards);
+            return Ok(());
+        }
+        let id = self.identity(tenants, arb);
+        let resume = match opts.resolved_resume_from() {
+            Some(p) => Some(snapshot::load_body(p, &id)?),
+            None => None,
+        };
+        let dir = opts.resolved_snapshot_dir();
+        let mut write_err: Option<SnapshotError> = None;
+        let mut sink = |quantum: u64, pending: bool, body: Vec<u8>| {
+            if write_err.is_none() {
+                if let Err(e) = snapshot::write_snapshot(&dir, &id, quantum, pending, &body) {
+                    write_err = Some(e);
+                }
+            }
+        };
+        let mut ctl = SnapCtl {
+            every: opts.resolved_checkpoint_every(),
+            resume,
+            sink: Some(&mut sink),
+        };
+        sys.run_snap(shards, &mut ctl)?;
+        drop(ctl);
+        match write_err {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 
@@ -1229,14 +1319,36 @@ impl<'a> System<'a> {
     }
 
     fn run(&mut self, shards: usize) {
-        // Each lane starts at its tenant's phase offset (0 for solo runs).
-        for c in 0..self.lanes.len() {
-            let at = self.tenants[self.core_tenant[c]].offset;
-            self.wake_lane(c, at);
-        }
-        for i in 0..self.dx_lanes.len() {
-            let at = self.tenants[self.dx_tenant[i]].offset;
-            self.wake_dx_lane(i, at);
+        let mut ctl = SnapCtl::none();
+        self.run_snap(shards, &mut ctl)
+            .expect("plain run performs no snapshot i/o");
+    }
+
+    /// [`System::run`] with checkpoint/resume control threaded in. A
+    /// `ctl` with a resume body installs it *instead of* the initial
+    /// wakes; a `ctl` with a capture interval hands `(quantum, pending,
+    /// body)` records to its sink at matching quantum boundaries, on the
+    /// serial shared stage only — lane stages and channel shards never
+    /// observe the knobs, so checkpointed runs stay bit-identical to
+    /// plain runs at every `(threads, shards)` pair.
+    fn run_snap(&mut self, shards: usize, ctl: &mut SnapCtl<'_>) -> Result<(), SnapshotError> {
+        match ctl.resume.take() {
+            // Resume: the serialized state carries every pending event,
+            // so the initial wakes (already consumed before the capture)
+            // must not be re-issued.
+            Some(body) => self.load_state(&body)?,
+            None => {
+                // Each lane starts at its tenant's phase offset (0 for
+                // solo runs).
+                for c in 0..self.lanes.len() {
+                    let at = self.tenants[self.core_tenant[c]].offset;
+                    self.wake_lane(c, at);
+                }
+                for i in 0..self.dx_lanes.len() {
+                    let at = self.tenants[self.dx_tenant[i]].offset;
+                    self.wake_dx_lane(i, at);
+                }
+            }
         }
         // Quantum bound: any channel activation at t >= quantum start
         // completes at or after the quantum end, so front-end and channel
@@ -1271,6 +1383,12 @@ impl<'a> System<'a> {
             if self.telem.is_some() {
                 self.sample(t_end);
             }
+            // Capture at matching boundaries — including the final,
+            // fully drained one, which records `pending = false` and is
+            // rejected at resume ([`SnapshotError::ResumePastEnd`]).
+            if ctl.every.is_some_and(|n| self.quanta % n == 0) {
+                self.capture(ctl, &mut detached);
+            }
         }
         if let Some(chans) = detached.take() {
             self.mem.attach_shards(chans);
@@ -1292,6 +1410,246 @@ impl<'a> System<'a> {
             eprintln!("mem pending: {}", self.mem.has_pending());
             panic!("cores not drained at t={}", self.end_time);
         }
+    }
+
+    /// Capture one snapshot record and hand it to the sink. Runs on the
+    /// coordinator thread between quanta, where lanes are home and no
+    /// shared-stage work is buffered; detached channel shards are
+    /// re-attached for the duration of the serialization and detached
+    /// again, which changes no channel state.
+    fn capture(&mut self, ctl: &mut SnapCtl<'_>, detached: &mut Option<Vec<ShardChannel>>) {
+        if ctl.sink.is_none() {
+            return;
+        }
+        // `pending = false` marks the final, fully drained boundary; the
+        // loader rejects resuming from it (`ResumePastEnd`).
+        let pending = self.next_quantum_start().is_some();
+        let was_detached = match detached.take() {
+            Some(chans) => {
+                self.mem.attach_shards(chans);
+                true
+            }
+            None => false,
+        };
+        let body = self.save_state();
+        if was_detached {
+            *detached = Some(self.mem.detach_shards());
+        }
+        let sink = ctl.sink.as_mut().expect("sink checked above");
+        sink(self.quanta, pending, body);
+    }
+
+    /// Serialize the complete dynamic state of the system at a quantum
+    /// boundary into a snapshot body. Every container with nondeterministic
+    /// iteration order (the waiter and routing maps) is emitted in sorted
+    /// key order, so the same simulator state always yields the same bytes
+    /// regardless of hash seeds — the bit-identity contract of the
+    /// checkpoint tests.
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        for lane in &self.lanes {
+            lane.as_ref().expect("front lane in flight").save(&mut e);
+        }
+        self.hier.save(&mut e);
+        self.mem.save(&mut e);
+        self.queue.save(&mut e);
+        // Line waiters, sorted by line address.
+        let mut waiters: Vec<(&u64, &Vec<(usize, usize)>)> = self.waiters.iter().collect();
+        waiters.sort_unstable_by_key(|(line, _)| **line);
+        e.usize(waiters.len());
+        for (line, ops) in waiters {
+            e.u64(*line);
+            e.usize(ops.len());
+            for &(core, op) in ops {
+                e.usize(core);
+                e.usize(op);
+            }
+        }
+        for dl in &self.dx_lanes {
+            dl.as_ref().expect("dx lane in flight").save(&mut e);
+        }
+        // Ready boards: geometry is program-derived, values are dynamic.
+        for board in &self.ready {
+            e.usize(board.len());
+            for &f in board {
+                e.bool(f);
+            }
+        }
+        // Completion routing, sorted by request id.
+        let mut routing: Vec<(&u64, &Completion)> = self.routing.iter().collect();
+        routing.sort_unstable_by_key(|(id, _)| **id);
+        e.usize(routing.len());
+        for (_, comp) in routing {
+            comp.save(&mut e);
+        }
+        e.usize(self.parked.len());
+        for p in &self.parked {
+            e.usize(p.core);
+            e.usize(p.stream_idx);
+            e.u64(p.addr);
+            e.bool(p.is_write);
+            e.u64(p.issue_at);
+        }
+        // Tenant layout is config-derived; only the DRAM attribution is
+        // dynamic.
+        for m in &self.tenants {
+            e.u64(m.dram.reads);
+            e.u64(m.dram.writes);
+            e.u64(m.dram.row_hits);
+            e.u64(m.dram.accesses);
+        }
+        e.u64(self.quanta);
+        e.u64(self.shared_events);
+        e.u64(self.channel_events);
+        e.u64(self.end_time);
+        match &self.telem {
+            Some(samples) => {
+                e.bool(true);
+                e.usize(samples.len());
+                for s in samples {
+                    s.save(&mut e);
+                }
+            }
+            None => {
+                e.bool(false);
+            }
+        }
+        e.into_bytes()
+    }
+
+    /// Restore the state captured by [`System::save_state`] into a system
+    /// freshly built from the same config, workloads, and arbitration
+    /// policy — the header validation in
+    /// [`snapshot::load_body`](crate::engine::snapshot) guarantees that
+    /// before this runs. Replaces the initial wakes: every pending event
+    /// the run needs is inside the serialized queues.
+    fn load_state(&mut self, body: &[u8]) -> Result<(), SnapshotError> {
+        let d = &mut Dec::new(body);
+        for c in 0..self.lanes.len() {
+            let mut lane = self.lanes[c].take().expect("front lane in flight");
+            let r = lane.load(d);
+            self.lanes[c] = Some(lane);
+            r?;
+        }
+        self.hier.load(d)?;
+        self.mem.load(d)?;
+        self.queue.load(d)?;
+        let n = d.seq_len("sys.waiters", 16)?;
+        self.waiters.clear();
+        for _ in 0..n {
+            let line = d.u64("sys.waiter_line")?;
+            let nops = d.seq_len("sys.waiter_ops", 16)?;
+            let mut ops = Vec::with_capacity(nops);
+            for _ in 0..nops {
+                let core = d.usize("sys.waiter_core")?;
+                let op = d.usize("sys.waiter_op")?;
+                if core >= self.lanes.len() {
+                    return Err(SnapshotError::Corrupt {
+                        field: "sys.waiter_core",
+                        detail: format!("core {core} >= {} lanes", self.lanes.len()),
+                    });
+                }
+                ops.push((core, op));
+            }
+            if self.waiters.insert(line, ops).is_some() {
+                return Err(SnapshotError::Corrupt {
+                    field: "sys.waiter_line",
+                    detail: format!("duplicate waiter line {line:#x}"),
+                });
+            }
+        }
+        for i in 0..self.dx_lanes.len() {
+            let mut lane = self.dx_lanes[i].take().expect("dx lane in flight");
+            let r = lane.load(d);
+            self.dx_lanes[i] = Some(lane);
+            r?;
+        }
+        for (i, board) in self.ready.iter_mut().enumerate() {
+            let n = d.usize("sys.ready_len")?;
+            if n != board.len() {
+                return Err(SnapshotError::Corrupt {
+                    field: "sys.ready_len",
+                    detail: format!("board {i} has {n} flags, program wants {}", board.len()),
+                });
+            }
+            for f in board.iter_mut() {
+                *f = d.bool("sys.ready_flag")?;
+            }
+        }
+        let n = d.seq_len("sys.routing", Completion::ELEM_MIN)?;
+        self.routing.clear();
+        for _ in 0..n {
+            let comp = Completion::load(d)?;
+            let id = comp.id;
+            if self.routing.insert(id, comp).is_some() {
+                return Err(SnapshotError::Corrupt {
+                    field: "sys.routing",
+                    detail: format!("duplicate completion id {id}"),
+                });
+            }
+        }
+        let n = d.seq_len("sys.parked", 33)?;
+        self.parked.clear();
+        for _ in 0..n {
+            let core = d.usize("sys.parked_core")?;
+            let stream_idx = d.usize("sys.parked_stream")?;
+            let addr = d.u64("sys.parked_addr")?;
+            let is_write = d.bool("sys.parked_is_write")?;
+            let issue_at = d.u64("sys.parked_issue_at")?;
+            if core >= self.lanes.len() {
+                return Err(SnapshotError::Corrupt {
+                    field: "sys.parked_core",
+                    detail: format!("core {core} >= {} lanes", self.lanes.len()),
+                });
+            }
+            self.parked.push_back(ParkedAccess {
+                core,
+                stream_idx,
+                addr,
+                is_write,
+                issue_at,
+            });
+        }
+        for m in &mut self.tenants {
+            m.dram.reads = d.u64("sys.tenant_reads")?;
+            m.dram.writes = d.u64("sys.tenant_writes")?;
+            m.dram.row_hits = d.u64("sys.tenant_row_hits")?;
+            m.dram.accesses = d.u64("sys.tenant_accesses")?;
+        }
+        self.quanta = d.u64("sys.quanta")?;
+        self.shared_events = d.u64("sys.shared_events")?;
+        self.channel_events = d.u64("sys.channel_events")?;
+        self.end_time = d.u64("sys.end_time")?;
+        let has_telem = d.bool("sys.telem_present")?;
+        if has_telem != self.telem.is_some() {
+            return Err(SnapshotError::Corrupt {
+                field: "sys.telem_present",
+                detail: format!(
+                    "snapshot telemetry {} but this run has it {}",
+                    if has_telem { "on" } else { "off" },
+                    if self.telem.is_some() { "on" } else { "off" }
+                ),
+            });
+        }
+        if let Some(samples) = self.telem.as_mut() {
+            let n = d.seq_len("sys.telem", 56)?;
+            samples.clear();
+            let ntenants = self.tenants.len();
+            for _ in 0..n {
+                let s = SysSample::load(d)?;
+                if s.tenant_instrs.len() != ntenants {
+                    return Err(SnapshotError::Corrupt {
+                        field: "sample.tenants",
+                        detail: format!(
+                            "sample has {} tenant counters, run has {ntenants} tenants",
+                            s.tenant_instrs.len()
+                        ),
+                    });
+                }
+                samples.push(s);
+            }
+        }
+        d.finish("body")
     }
 
     /// Record one [`SysSample`] at the quantum boundary `t_end`.

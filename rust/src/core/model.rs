@@ -575,6 +575,108 @@ impl CoreModel {
         }
     }
 
+    /// Serialize the full core micro-state. ROB entries store only their
+    /// stream index and execution state — the op itself is refetched from
+    /// the (immutable) compiled stream at load. `pending_done` is written
+    /// in sorted `(time, idx)` order; heap layout is not observable.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.usize(self.next_op);
+        e.usize(self.rob.len());
+        for r in &self.rob {
+            e.usize(r.stream_idx);
+            e.u8(match r.state {
+                EState::Waiting => 0,
+                EState::Issued => 1,
+                EState::Done => 2,
+            });
+        }
+        e.u32(self.rob_instrs);
+        e.u32(self.loads_inflight);
+        e.u32(self.stores_inflight);
+        e.bool(self.fence_active);
+        e.u64(self.issue_time);
+        e.u32(self.slots_left);
+        let mut done: Vec<(Cycle, usize)> = self.pending_done.iter().map(|r| r.0).collect();
+        done.sort_unstable();
+        e.usize(done.len());
+        for (when, idx) in done {
+            e.u64(when);
+            e.usize(idx);
+        }
+        e.u64(self.stats.retired_instrs);
+        e.u64(self.stats.loads);
+        e.u64(self.stats.stores);
+        e.u64(self.stats.rmws);
+        e.u64(self.stats.spin_instrs);
+        e.u64(self.stats.finish_time);
+        e.bool(self.done);
+        e.bool(self.blocked);
+        e.u64(self.next_wake_at);
+    }
+
+    /// Restore the core against the same compiled op stream it was
+    /// snapshotted with; out-of-range ROB indices are typed corruption.
+    pub(crate) fn load(
+        &mut self,
+        d: &mut crate::engine::snapshot::Dec,
+        ops: &[Op],
+    ) -> Result<(), crate::engine::snapshot::SnapshotError> {
+        use crate::engine::snapshot::SnapshotError;
+        let oob = |field, idx: usize| SnapshotError::Corrupt {
+            field,
+            detail: format!("stream index {idx} out of range ({} ops)", ops.len()),
+        };
+        self.next_op = d.u64("core.next_op")? as usize;
+        if self.next_op > ops.len() {
+            return Err(oob("core.next_op", self.next_op));
+        }
+        let n = d.seq_len("core.rob", 9)?;
+        self.rob.clear();
+        for _ in 0..n {
+            let stream_idx = d.u64("core.rob_idx")? as usize;
+            let op = *ops.get(stream_idx).ok_or_else(|| oob("core.rob_idx", stream_idx))?;
+            let state = match d.u8("core.rob_state")? {
+                0 => EState::Waiting,
+                1 => EState::Issued,
+                2 => EState::Done,
+                s => {
+                    return Err(SnapshotError::Corrupt {
+                        field: "core.rob_state",
+                        detail: format!("unknown execution state {s}"),
+                    })
+                }
+            };
+            self.rob.push_back(RobEntry {
+                stream_idx,
+                op,
+                state,
+            });
+        }
+        self.rob_instrs = d.u32("core.rob_instrs")?;
+        self.loads_inflight = d.u32("core.loads_inflight")?;
+        self.stores_inflight = d.u32("core.stores_inflight")?;
+        self.fence_active = d.bool("core.fence_active")?;
+        self.issue_time = d.u64("core.issue_time")?;
+        self.slots_left = d.u32("core.slots_left")?;
+        let n = d.seq_len("core.pending_done", 16)?;
+        self.pending_done.clear();
+        for _ in 0..n {
+            let when = d.u64("core.done_time")?;
+            let idx = d.u64("core.done_idx")? as usize;
+            self.pending_done.push(Reverse((when, idx)));
+        }
+        self.stats.retired_instrs = d.u64("core.retired_instrs")?;
+        self.stats.loads = d.u64("core.loads")?;
+        self.stats.stores = d.u64("core.stores")?;
+        self.stats.rmws = d.u64("core.rmws")?;
+        self.stats.spin_instrs = d.u64("core.spin_instrs")?;
+        self.stats.finish_time = d.u64("core.finish_time")?;
+        self.done = d.bool("core.done")?;
+        self.blocked = d.bool("core.blocked")?;
+        self.next_wake_at = d.u64("core.next_wake_at")?;
+        Ok(())
+    }
+
     /// Outstanding memory ops (diagnostics).
     pub fn inflight(&self) -> (u32, u32) {
         (self.loads_inflight, self.stores_inflight)

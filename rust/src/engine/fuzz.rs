@@ -33,6 +33,15 @@
 //! bit-for-bit under every policy — with one tenant, arbitration is the
 //! identity by contract.
 //!
+//! With `--snapshot-check` a fourth oracle layer runs per case: every
+//! system's run is repeated with quantum-boundary checkpointing enabled
+//! (which must not perturb the [`RunStats`] by a single bit), then
+//! resumed from a mid-run snapshot in a fresh system (which must
+//! reproduce the plain run bit-for-bit). Mix cases apply the same
+//! round trip to the co-scheduled two-tenant run. Snapshot files live
+//! under a per-case temp directory and are removed before the verdict,
+//! so verdicts stay a pure function of (seed, config).
+//!
 //! Violations never panic: they accumulate as strings in a
 //! [`FuzzReport`], and every failure carries the case seed plus a
 //! one-line `dx100 fuzz --replay <seed>` reproduction
@@ -76,6 +85,8 @@ pub struct FuzzFailure {
     pub scenario: String,
     /// Whether the case ran in mix mode.
     pub mix: bool,
+    /// Whether the case ran the checkpoint/resume oracle layer.
+    pub snap: bool,
     /// Every oracle violation, in check order.
     pub violations: Vec<String>,
 }
@@ -84,9 +95,10 @@ impl FuzzFailure {
     /// The one-line CLI reproduction for this failure.
     pub fn replay_line(&self) -> String {
         format!(
-            "dx100 fuzz --replay {:#x}{}",
+            "dx100 fuzz --replay {:#x}{}{}",
             self.seed,
-            if self.mix { " --mix 1" } else { "" }
+            if self.mix { " --mix 1" } else { "" },
+            if self.snap { " --snapshot-check" } else { "" }
         )
     }
 }
@@ -115,7 +127,7 @@ impl FuzzReport {
         let mut h = Fnv::with_seed(0xFD9);
         h.usize(self.cases).u64(self.checks);
         for f in &self.failures {
-            h.u64(f.seed).bool(f.mix).str(&f.scenario);
+            h.u64(f.seed).bool(f.mix).bool(f.snap).str(&f.scenario);
             for v in &f.violations {
                 h.str(v);
             }
@@ -133,13 +145,15 @@ pub fn case_seed(base: u64, case: usize) -> u64 {
 }
 
 /// Run a fuzz batch: `cases` seeded cases (solo differential cases, or
-/// two-tenant mix cases when `mix`) against `cfg`. The persisted result
-/// cache is bypassed regardless of `opts` — every verdict is an honest
-/// simulation of the current build.
+/// two-tenant mix cases when `mix`) against `cfg`, with the
+/// checkpoint/resume oracle layer added when `snap`. The persisted
+/// result cache is bypassed regardless of `opts` — every verdict is an
+/// honest simulation of the current build.
 pub fn fuzz(
     cases: usize,
     base_seed: u64,
     mix: bool,
+    snap: bool,
     cfg: &SystemConfig,
     opts: &ExecOptions,
 ) -> FuzzReport {
@@ -152,9 +166,9 @@ pub fn fuzz(
     for case in 0..cases {
         let seed = case_seed(base_seed, case);
         let (scenario, checks, violations) = if mix {
-            run_mix_case(seed, cfg, &opts)
+            run_mix_case(seed, cfg, &opts, snap)
         } else {
-            run_case(seed, cfg, &opts)
+            run_case(seed, cfg, &opts, snap)
         };
         report.checks += checks;
         if !violations.is_empty() {
@@ -163,6 +177,7 @@ pub fn fuzz(
                 seed,
                 scenario,
                 mix,
+                snap,
                 violations,
             });
         }
@@ -172,12 +187,18 @@ pub fn fuzz(
 
 /// Re-run one case from its printed seed. Verdicts are deterministic, so
 /// the replayed report matches the original case bit-for-bit.
-pub fn replay(seed: u64, mix: bool, cfg: &SystemConfig, opts: &ExecOptions) -> FuzzReport {
+pub fn replay(
+    seed: u64,
+    mix: bool,
+    snap: bool,
+    cfg: &SystemConfig,
+    opts: &ExecOptions,
+) -> FuzzReport {
     let opts = opts.clone().no_cache();
     let (scenario, checks, violations) = if mix {
-        run_mix_case(seed, cfg, &opts)
+        run_mix_case(seed, cfg, &opts, snap)
     } else {
-        run_case(seed, cfg, &opts)
+        run_case(seed, cfg, &opts, snap)
     };
     let failures = if violations.is_empty() {
         Vec::new()
@@ -187,6 +208,7 @@ pub fn replay(seed: u64, mix: bool, cfg: &SystemConfig, opts: &ExecOptions) -> F
             seed,
             scenario,
             mix,
+            snap,
             violations,
         }]
     };
@@ -389,9 +411,96 @@ fn check_stats(
     }
 }
 
+/// Temp directory for one case's snapshot files, unique per (seed, tag)
+/// so concurrent fuzz invocations cannot collide on live files.
+fn snap_dir(seed: u64, tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dx100-fuzz-snap-{seed:016x}-{tag}"))
+}
+
+/// Pick a mid-run snapshot out of `dir`: the median resumable capture
+/// (end-of-run records carry `pending = false` and are excluded). Returns
+/// `None` when the run finished inside one capture interval.
+fn mid_snapshot(dir: &std::path::Path) -> Option<std::path::PathBuf> {
+    let mut snaps: Vec<(u64, std::path::PathBuf)> = std::fs::read_dir(dir)
+        .ok()?
+        .flatten()
+        .filter_map(|ent| {
+            let path = ent.path();
+            let info = super::snapshot::read_info(&path).ok()?;
+            info.pending.then_some((info.quantum, path))
+        })
+        .collect();
+    snaps.sort_by_key(|(q, _)| *q);
+    let mid = snaps.len() / 2;
+    snaps.into_iter().nth(mid).map(|(_, p)| p)
+}
+
+/// A capture interval that yields a handful of snapshots for a run of
+/// `cycles` simulated cycles: enough boundaries to make the mid-run
+/// resume meaningful, few enough to keep the oracle affordable.
+fn snap_interval(cfg: &SystemConfig, cycles: u64) -> u64 {
+    let quantum = cfg.dram.min_completion_latency().max(1);
+    (cycles / quantum / 8).max(1)
+}
+
+/// Oracle layer (d): checkpoint/resume round trip for one run. `rerun`
+/// executes the same (system, workload) under the given options; the
+/// checkpointed rerun must equal `plain` bit-for-bit (capture is
+/// observation-only), and a rerun resumed from a mid-run snapshot must
+/// too (serialization is complete).
+#[allow(clippy::too_many_arguments)]
+fn check_snapshot_roundtrip<R: PartialEq>(
+    o: &mut Oracle,
+    tag: &dyn Fn() -> String,
+    dir: &std::path::Path,
+    every: u64,
+    plain: &R,
+    describe: &dyn Fn(&R) -> String,
+    rerun: &mut dyn FnMut(ExecOptions) -> Result<R, String>,
+    opts: &ExecOptions,
+) {
+    let _ = std::fs::remove_dir_all(dir);
+    let ck_opts = opts.clone().checkpoint_every(every).snapshot_dir(dir);
+    match rerun(ck_opts) {
+        Ok(ck) => o.check(&ck == plain, || {
+            format!(
+                "{}: checkpointing perturbed the run ({} vs {})",
+                tag(),
+                describe(&ck),
+                describe(plain)
+            )
+        }),
+        Err(e) => o.fail(format!("{}: checkpointed rerun failed: {e}", tag())),
+    }
+    // A run that finishes inside one capture interval leaves only the
+    // end-of-run record; nothing to resume, but the capture-equality
+    // check above still counted.
+    if let Some(path) = mid_snapshot(dir) {
+        let rs_opts = opts.clone().resume_from(&path);
+        match rerun(rs_opts) {
+            Ok(resumed) => o.check(&resumed == plain, || {
+                format!(
+                    "{}: resume from {} diverged ({} vs {})",
+                    tag(),
+                    path.display(),
+                    describe(&resumed),
+                    describe(plain)
+                )
+            }),
+            Err(e) => o.fail(format!("{}: resume from {} failed: {e}", tag(), path.display())),
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
 /// One solo differential case: sample, lower through the registry, run on
-/// all three systems, apply all three oracle layers.
-fn run_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, Vec<String>) {
+/// all three systems, apply all three oracle layers (four with `snap`).
+fn run_case(
+    seed: u64,
+    cfg: &SystemConfig,
+    opts: &ExecOptions,
+    snap: bool,
+) -> (String, u64, Vec<String>) {
     let mut rng = Rng::new(seed);
     let spec = scenario_spec(&mut rng, seed);
     let mut o = Oracle::default();
@@ -412,14 +521,30 @@ fn run_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, 
             }
         };
         let rs = ex.run(RunInput::Compiled { cw: &cw, warm: w.warm_caches }, opts);
-        let snap = ex.output_snapshot(&cw, &w.program);
+        let outputs = ex.output_snapshot(&cw, &w.program);
         // Baseline and DMP replay the sequential interpretation, so they
         // must match the reference bit-exactly; DX100 gets the
         // accumulation tolerance on reorderable float reductions.
         let tolerant = kind == SystemKind::Dx100 && fp_accumulating(&spec.shape);
-        check_outputs(&mut o, &spec, kind.label(), tolerant, &ref_snap, &snap);
+        check_outputs(&mut o, &spec, kind.label(), tolerant, &ref_snap, &outputs);
         check_stats(&mut o, &spec, &w, cfg, &rs);
-        runs.push((kind, rs, snap));
+        if snap {
+            let tag = || format!("{}/{}", spec.name, kind.label());
+            check_snapshot_roundtrip(
+                &mut o,
+                &tag,
+                &snap_dir(seed, kind.label()),
+                snap_interval(&ex.cfg, rs.cycles),
+                &rs,
+                &|r: &RunStats| format!("{} cycles", r.cycles),
+                &mut |run_opts| {
+                    ex.try_run(RunInput::Compiled { cw: &cw, warm: w.warm_caches }, &run_opts)
+                        .map_err(|e| e.to_string())
+                },
+                opts,
+            );
+        }
+        runs.push((kind, rs, outputs));
     }
     // Cross-system agreement: every pair of systems, same tolerance rule.
     for i in 0..runs.len() {
@@ -449,8 +574,15 @@ fn run_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, 
 }
 
 /// One mix case: two sampled tenants co-scheduled under every arbitration
-/// policy, plus the single-tenant-mix ≡ solo identity.
-fn run_mix_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u64, Vec<String>) {
+/// policy, plus the single-tenant-mix ≡ solo identity. With `snap`, the
+/// FIFO co-scheduled run additionally round-trips through
+/// checkpoint/resume.
+fn run_mix_case(
+    seed: u64,
+    cfg: &SystemConfig,
+    opts: &ExecOptions,
+    snap: bool,
+) -> (String, u64, Vec<String>) {
     let mut rng = Rng::new(seed);
     let a = scenario_spec(&mut rng, seed ^ 0x51);
     let b = scenario_spec(&mut rng, seed ^ 0x52);
@@ -516,6 +648,31 @@ fn run_mix_case(seed: u64, cfg: &SystemConfig, opts: &ExecOptions) -> (String, u
             o.check(t.mix.dram_reads > 0, || {
                 format!("{}/{}: tenant attributed no DRAM reads", tag(), t.workload)
             });
+        }
+        // Layer (d) on the co-scheduled run, once (FIFO): combined stats
+        // and every tenant's attributed slice must survive the
+        // checkpoint/resume round trip bit-for-bit.
+        if snap && policy == ArbPolicy::Fifo {
+            let plain = (
+                r.combined.clone(),
+                r.tenants.iter().map(|t| t.mix.clone()).collect::<Vec<_>>(),
+            );
+            let tag = || format!("{label}@fifo");
+            check_snapshot_roundtrip(
+                &mut o,
+                &tag,
+                &snap_dir(seed, "mix"),
+                snap_interval(cfg, r.combined.cycles),
+                &plain,
+                &|p: &(RunStats, Vec<crate::coordinator::TenantRunStats>)| {
+                    format!("{} cycles", p.0.cycles)
+                },
+                &mut |run_opts| {
+                    super::mix::run_mix(&mix, &reg, cfg, FUZZ_SCALE, policy, &run_opts)
+                        .map(|m| (m.combined, m.tenants.into_iter().map(|t| t.mix).collect()))
+                },
+                opts,
+            );
         }
     }
     // Single-tenant mix == solo, under every policy: with one tenant the
@@ -593,11 +750,16 @@ mod tests {
             seed: 0xAB,
             scenario: "fz-x".into(),
             mix: false,
+            snap: false,
             violations: vec!["boom".into()],
         });
         assert_ne!(clean.verdict_hash(), failed.verdict_hash());
         assert_eq!(clean.verdict_hash(), clean.verdict_hash());
         assert!(failed.failures[0].replay_line().contains("--replay 0xab"));
+        let mut snapped = failed.clone();
+        snapped.failures[0].snap = true;
+        assert!(snapped.failures[0].replay_line().ends_with("--snapshot-check"));
+        assert_ne!(failed.verdict_hash(), snapped.verdict_hash());
     }
 
     #[test]

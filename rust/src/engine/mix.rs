@@ -132,7 +132,9 @@ pub fn run_mix(
     let label = mix.label();
     let name = intern(&format!("mix:{label}@{}", policy.label()));
     let ex = Experiment::new(SystemKind::Dx100, tenant_cfg(base, mix.total_cores()));
-    let run = ex.run_mix(name, &tenants, policy, opts);
+    let run = ex
+        .try_run_mix(name, &tenants, policy, opts)
+        .map_err(|e| format!("snapshot: {e}"))?;
     // Derived metrics: slowdown vs the cached solo, Jain fairness over
     // per-tenant throughput ratios, row-hit interference.
     let tenants: Vec<MixTenantResult> = mix

@@ -66,6 +66,7 @@ pub mod fuzz;
 pub mod harness;
 pub mod mix;
 pub mod pool;
+pub mod snapshot;
 
 use crate::compiler::{frontend, specialize, CompiledWorkload, Frontend};
 use crate::config::SystemConfig;
@@ -187,6 +188,9 @@ pub struct ExecOptions {
     cache: CacheMode,
     profile: Option<bool>,
     telemetry: Option<bool>,
+    checkpoint_every: Option<u64>,
+    resume_from: Option<std::path::PathBuf>,
+    snapshot_dir: Option<std::path::PathBuf>,
 }
 
 impl ExecOptions {
@@ -238,6 +242,58 @@ impl ExecOptions {
     pub fn telemetry(mut self, on: bool) -> Self {
         self.telemetry = Some(on);
         self
+    }
+
+    /// Capture a state snapshot every `n` quanta (see
+    /// [`snapshot`]). Capture observes the simulation without perturbing
+    /// it — checkpointed, resumed, and plain runs produce bit-identical
+    /// [`RunStats`](crate::coordinator::RunStats) and share one
+    /// result-cache entry, so this knob (like [`ExecOptions::shards`])
+    /// enters no fingerprint. `0` disables capture.
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every = (n > 0).then_some(n);
+        self
+    }
+
+    /// Resume the run from the snapshot file at `path` instead of starting
+    /// cold. The snapshot's header is validated against the run being
+    /// constructed (system, config, workload, arbitration, telemetry);
+    /// any mismatch fails with a typed
+    /// [`snapshot::SnapshotError`] rather than a wrong-answer run.
+    pub fn resume_from(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Write snapshots under `dir` instead of the resolved cache
+    /// directory's `snapshots/` leaf.
+    pub fn snapshot_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.snapshot_dir = Some(dir.into());
+        self
+    }
+
+    /// The capture interval in quanta, if checkpointing is on.
+    pub(crate) fn resolved_checkpoint_every(&self) -> Option<u64> {
+        self.checkpoint_every
+    }
+
+    /// The snapshot file to resume from, if any.
+    pub(crate) fn resolved_resume_from(&self) -> Option<&std::path::Path> {
+        self.resume_from.as_deref()
+    }
+
+    /// The directory captured snapshots are written to: the explicit
+    /// [`ExecOptions::snapshot_dir`] override, else the resolved cache
+    /// directory's `snapshots/` leaf (`DX100_CACHE_DIR` or
+    /// `target/dx100-cache`, plus `snapshots/`). Public so callers can
+    /// tell users where their checkpoints landed.
+    pub fn resolved_snapshot_dir(&self) -> std::path::PathBuf {
+        snapshot::resolve_dir(self.snapshot_dir.as_deref())
+    }
+
+    /// Whether this execution checkpoints or resumes at all.
+    pub(crate) fn snapshots_active(&self) -> bool {
+        self.checkpoint_every.is_some() || self.resume_from.is_some()
     }
 
     /// The effective thread cap.

@@ -1,0 +1,867 @@
+//! Quantum-boundary state snapshots: checkpoint / resume for whole
+//! simulations.
+//!
+//! A snapshot serializes the **complete dynamic state** of a
+//! [`crate::coordinator`] run — core lanes, private caches, MSHRs, the
+//! LLC, DX100 row tables and queues, per-channel DRAM engines, event
+//! queues, stats, tenant attribution, telemetry — at a quantum boundary
+//! into a versioned, endian-stable binary file under
+//! `target/dx100-cache/snapshots/`. Because runs are bit-deterministic
+//! across the `(DX100_THREADS, DX100_SHARDS)` matrix, resuming a
+//! snapshot and running to completion yields `RunStats` **bit-identical**
+//! to the uninterrupted run (`tests/snapshot_resume.rs` proves it), which
+//! unlocks fast-forward sampling of long workloads, sweep resume after
+//! interruption, and bisect-by-snapshot debugging.
+//!
+//! # File format (version [`FORMAT_VERSION`])
+//!
+//! All integers are **little-endian**; floats are IEEE-754 bit patterns
+//! (`f64::to_bits`), so NaNs round-trip bit-exactly. Strings are
+//! length-prefixed UTF-8. The layout:
+//!
+//! ```text
+//! magic      8 bytes   b"DX100SNP"
+//! version    u32       FORMAT_VERSION
+//! system     str       SystemKind label ("baseline"/"dmp"/"dx100")
+//! cfg_fp     u64       system-relevant config fingerprint
+//! arb        str       ArbPolicy label
+//! telemetry  bool      telemetry knob at capture
+//! ntenants   u32
+//!   per tenant: name str, compiled fingerprint u64, warm bool, offset u64
+//! quantum    u64       quanta completed at capture
+//! pending    bool      whether any work remained after this quantum
+//! body_len   u64
+//! body       bytes     the coordinator's opaque state record
+//! ```
+//!
+//! The header carries everything needed to *validate* a resume against
+//! the run being constructed (config, workload, system, arbitration,
+//! telemetry knob); the body is decoded by the coordinator against the
+//! freshly built static state. Every decode error is a typed
+//! [`SnapshotError`] naming the offending field — corrupted or truncated
+//! files, schema or fingerprint mismatches, and resuming an already
+//! finished run all fail without panicking.
+//!
+//! The checkpoint knobs ([`crate::engine::ExecOptions::checkpoint_every`]
+//! / [`crate::engine::ExecOptions::resume_from`]) appear in **no** cache,
+//! dedup, or sweep fingerprint: capture happens on the serial shared
+//! stage only and observes state without perturbing it, so checkpointed,
+//! resumed, and plain runs share one result-cache entry.
+//! `docs/CHECKPOINT.md` is the full treatment.
+
+use crate::compiler::CompiledWorkload;
+use crate::coordinator::Tenant;
+use crate::sim::Cycle;
+use crate::util::Fnv;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Magic bytes opening every snapshot file.
+pub const MAGIC: [u8; 8] = *b"DX100SNP";
+
+/// Snapshot format version; bump whenever the header or any component's
+/// body encoding changes shape.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// A typed snapshot failure. Every variant names what went wrong (and
+/// where, for decode errors) — resume paths surface these instead of
+/// panicking.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Filesystem error reading or writing the snapshot file.
+    Io(String),
+    /// The file ended before `field` could be read.
+    Truncated {
+        /// The field whose bytes were missing.
+        field: &'static str,
+    },
+    /// `field` decoded to an impossible value.
+    Corrupt {
+        /// The field that failed validation.
+        field: &'static str,
+        /// What was wrong with it.
+        detail: String,
+    },
+    /// The file's format version is not [`FORMAT_VERSION`].
+    SchemaMismatch {
+        /// Version found in the file.
+        found: u32,
+        /// Version this build understands.
+        expected: u32,
+    },
+    /// A header identity field does not match the run being resumed.
+    FingerprintMismatch {
+        /// Which identity field mismatched (`system`, `config`,
+        /// `workload`, `arb`, `telemetry`, `tenants`, ...).
+        field: &'static str,
+        /// Value recorded in the snapshot.
+        found: String,
+        /// Value required by the resuming run.
+        expected: String,
+    },
+    /// The snapshot was captured after the run's last quantum — there is
+    /// nothing left to resume.
+    ResumePastEnd,
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            SnapshotError::Truncated { field } => {
+                write!(f, "snapshot truncated while reading field `{field}`")
+            }
+            SnapshotError::Corrupt { field, detail } => {
+                write!(f, "snapshot field `{field}` is corrupt: {detail}")
+            }
+            SnapshotError::SchemaMismatch { found, expected } => write!(
+                f,
+                "snapshot format version {found} does not match this build's {expected}"
+            ),
+            SnapshotError::FingerprintMismatch {
+                field,
+                found,
+                expected,
+            } => write!(
+                f,
+                "snapshot field `{field}` mismatch: snapshot has {found}, run needs {expected}"
+            ),
+            SnapshotError::ResumePastEnd => {
+                write!(f, "snapshot was captured at end of run; nothing to resume")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Little-endian byte writer for snapshot bodies and headers.
+///
+/// The encoding is deliberately primitive — fixed-width integers, bit-cast
+/// floats, length-prefixed byte strings — so files are stable across
+/// platforms and toolchains.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// An empty encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append a little-endian `i64`.
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append a `usize` as a `u64` (endian- and width-stable).
+    pub fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    /// Append a bool as one byte (0/1).
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.u8(v as u8)
+    }
+
+    /// Append an `f64` as its IEEE-754 bit pattern (NaN-exact).
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    /// Append raw bytes (no length prefix).
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.usize(v.len());
+        self.bytes(v.as_bytes())
+    }
+}
+
+/// Little-endian byte reader over a snapshot record. Every read names the
+/// field it is decoding so failures produce
+/// [`SnapshotError::Truncated`] / [`SnapshotError::Corrupt`] errors that
+/// point at the broken field instead of panicking.
+pub struct Dec<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// A reader over `data`, positioned at the start.
+    pub fn new(data: &'a [u8]) -> Self {
+        Dec { data, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated { field });
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self, field: &'static str) -> Result<u8, SnapshotError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self, field: &'static str) -> Result<u32, SnapshotError> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self, field: &'static str) -> Result<u64, SnapshotError> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    /// Read a little-endian `i64`.
+    pub fn i64(&mut self, field: &'static str) -> Result<i64, SnapshotError> {
+        let b = self.take(8, field)?;
+        Ok(i64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    /// Read a `u64`-encoded `usize`, rejecting values that overflow the
+    /// host width.
+    pub fn usize(&mut self, field: &'static str) -> Result<usize, SnapshotError> {
+        let v = self.u64(field)?;
+        usize::try_from(v).map_err(|_| SnapshotError::Corrupt {
+            field,
+            detail: format!("value {v} overflows usize"),
+        })
+    }
+
+    /// Read a one-byte bool, rejecting anything but 0/1.
+    pub fn bool(&mut self, field: &'static str) -> Result<bool, SnapshotError> {
+        match self.u8(field)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(SnapshotError::Corrupt {
+                field,
+                detail: format!("bool byte is {b}"),
+            }),
+        }
+    }
+
+    /// Read an `f64` from its bit pattern.
+    pub fn f64(&mut self, field: &'static str) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64(field)?))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self, field: &'static str) -> Result<String, SnapshotError> {
+        let n = self.usize(field)?;
+        if n > self.remaining() {
+            return Err(SnapshotError::Truncated { field });
+        }
+        let b = self.take(n, field)?;
+        String::from_utf8(b.to_vec()).map_err(|_| SnapshotError::Corrupt {
+            field,
+            detail: "string is not UTF-8".into(),
+        })
+    }
+
+    /// Read a length prefix for a sequence whose elements each occupy at
+    /// least `elem_min` bytes, rejecting lengths the remaining data
+    /// cannot possibly hold (so corrupted lengths fail fast instead of
+    /// looping or allocating).
+    pub fn seq_len(&mut self, field: &'static str, elem_min: usize) -> Result<usize, SnapshotError> {
+        let n = self.usize(field)?;
+        if n.saturating_mul(elem_min.max(1)) > self.remaining() {
+            return Err(SnapshotError::Truncated { field });
+        }
+        Ok(n)
+    }
+
+    /// Assert the record was consumed exactly.
+    pub fn finish(&self, field: &'static str) -> Result<(), SnapshotError> {
+        if self.remaining() != 0 {
+            return Err(SnapshotError::Corrupt {
+                field,
+                detail: format!("{} trailing bytes after record", self.remaining()),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One tenant's identity in a snapshot header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotTenant {
+    /// The tenant's workload name.
+    pub name: String,
+    /// Fingerprint of the tenant's compiled workload
+    /// ([`compiled_fingerprint`]).
+    pub fingerprint: u64,
+    /// Whether the tenant pre-warmed the caches.
+    pub warm: bool,
+    /// The tenant's start offset in cycles.
+    pub offset: Cycle,
+}
+
+/// Parsed snapshot header (what `dx100 snapshot-info` prints).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotInfo {
+    /// Format version found in the file.
+    pub version: u32,
+    /// System kind label the snapshot was captured on.
+    pub system: String,
+    /// System-relevant configuration fingerprint
+    /// ([`crate::engine::cache::system_fingerprint`]).
+    pub cfg_fingerprint: u64,
+    /// Arbitration-policy label of the run.
+    pub arb: String,
+    /// Whether telemetry was enabled at capture (the body contains the
+    /// telemetry series if so, and resume requires the same knob).
+    pub telemetry: bool,
+    /// Per-tenant identity, in tenant order (one entry for solo runs).
+    pub tenants: Vec<SnapshotTenant>,
+    /// Quanta completed when the snapshot was captured.
+    pub quantum: u64,
+    /// Whether any simulation work remained after the captured quantum.
+    /// `false` marks an end-of-run snapshot, which cannot be resumed
+    /// ([`SnapshotError::ResumePastEnd`]).
+    pub pending: bool,
+    /// Length of the opaque state body in bytes.
+    pub body_len: u64,
+}
+
+/// The run identity a snapshot is captured under and validated against at
+/// resume: everything that must match for the serialized dynamic state to
+/// be installable into a freshly built system.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct RunIdentity {
+    pub system: &'static str,
+    pub cfg_fingerprint: u64,
+    pub arb: &'static str,
+    pub telemetry: bool,
+    pub tenants: Vec<SnapshotTenant>,
+}
+
+impl RunIdentity {
+    /// 128-bit fingerprint naming this run's snapshot files.
+    fn file_fp(&self) -> (u64, u64) {
+        let mut parts = [0u64; 2];
+        for (slot, seed) in parts.iter_mut().zip([0x5a9d_0001u64, 0x5a9d_0002]) {
+            let mut h = Fnv::with_seed(seed);
+            h.u64(FORMAT_VERSION as u64)
+                .str(self.system)
+                .u64(self.cfg_fingerprint)
+                .str(self.arb)
+                .bool(self.telemetry)
+                .usize(self.tenants.len());
+            for t in &self.tenants {
+                h.str(&t.name).u64(t.fingerprint).bool(t.warm).u64(t.offset);
+            }
+            *slot = h.finish();
+        }
+        (parts[0], parts[1])
+    }
+
+    /// The file a capture at `quantum` writes under `dir`.
+    pub fn path_at(&self, dir: &Path, quantum: u64) -> PathBuf {
+        let (hi, lo) = self.file_fp();
+        dir.join(format!("snap_{hi:016x}{lo:016x}_q{quantum}.bin"))
+    }
+}
+
+/// Stable fingerprint of a compiled workload: name, behavioural flags,
+/// per-core op streams (baseline and DX100 sides), DX100 instruction
+/// programs, and both functional memory images. Two compilations that
+/// agree on this produce identical simulations, so it (plus the config
+/// fingerprint already in the header) keys snapshot compatibility.
+pub(crate) fn compiled_fingerprint(cw: &CompiledWorkload) -> u64 {
+    let mut h = Fnv::with_seed(0x5a9d);
+    h.str(cw.name)
+        .bool(cw.flags.atomic_rmw)
+        .bool(cw.flags.single_core_baseline);
+    let streams = |h: &mut Fnv, streams: &[crate::core::OpStream]| {
+        h.usize(streams.len());
+        for s in streams {
+            h.usize(s.ops.len());
+            for op in &s.ops {
+                // Debug rendering is stable within a build; cross-build
+                // drift is covered by FORMAT_VERSION bumps and the fact
+                // that snapshots live in a wipeable cache directory.
+                h.str(&format!("{op:?}"));
+            }
+        }
+    };
+    streams(&mut h, &cw.baseline.streams);
+    h.u64(cw.baseline.mem.stable_hash());
+    streams(&mut h, &cw.dx.core_streams);
+    h.u64(cw.dx.mem.stable_hash());
+    h.usize(cw.dx.phases);
+    h.usize(cw.dx.programs.len());
+    for p in &cw.dx.programs {
+        h.usize(p.instrs.len());
+        for ti in &p.instrs {
+            h.str(&format!("{:?}", ti.inst));
+        }
+        h.usize(p.phase_marks.len());
+        for &(seq, phase) in &p.phase_marks {
+            h.u64(seq as u64).u64(phase as u64);
+        }
+    }
+    h.finish()
+}
+
+/// The identity of one tenant, as captured into headers.
+pub(crate) fn tenant_identity(t: &Tenant) -> SnapshotTenant {
+    SnapshotTenant {
+        name: t.cw.name.to_string(),
+        fingerprint: compiled_fingerprint(&t.cw),
+        warm: t.warm,
+        offset: t.offset,
+    }
+}
+
+/// Resolve the snapshot directory: an explicit override, else
+/// `DX100_CACHE_DIR`, else `<CARGO_TARGET_DIR|target>/dx100-cache`, plus
+/// a `snapshots/` leaf. Independent of the `DX100_CACHE` on/off knob —
+/// snapshots are explicit artifacts, not a transparent accelerator.
+pub(crate) fn resolve_dir(explicit: Option<&Path>) -> PathBuf {
+    if let Some(d) = explicit {
+        return d.to_path_buf();
+    }
+    let base = match std::env::var("DX100_CACHE_DIR") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => {
+            let target = std::env::var("CARGO_TARGET_DIR").unwrap_or_else(|_| "target".to_string());
+            PathBuf::from(target).join("dx100-cache")
+        }
+    };
+    base.join("snapshots")
+}
+
+/// Serialize a complete snapshot file: header for `id` at `quantum`, then
+/// the opaque `body`.
+fn render(id: &RunIdentity, quantum: u64, pending: bool, body: &[u8]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.bytes(&MAGIC);
+    e.u32(FORMAT_VERSION);
+    e.str(id.system);
+    e.u64(id.cfg_fingerprint);
+    e.str(id.arb);
+    e.bool(id.telemetry);
+    e.u32(id.tenants.len() as u32);
+    for t in &id.tenants {
+        e.str(&t.name);
+        e.u64(t.fingerprint);
+        e.bool(t.warm);
+        e.u64(t.offset);
+    }
+    e.u64(quantum);
+    e.bool(pending);
+    e.u64(body.len() as u64);
+    e.bytes(body);
+    e.into_bytes()
+}
+
+/// Write one captured snapshot atomically (temp file + rename), so
+/// concurrent identical runs never leave a torn file. Returns the final
+/// path. I/O failures surface as [`SnapshotError::Io`].
+pub(crate) fn write_snapshot(
+    dir: &Path,
+    id: &RunIdentity,
+    quantum: u64,
+    pending: bool,
+    body: &[u8],
+) -> Result<PathBuf, SnapshotError> {
+    std::fs::create_dir_all(dir).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    let path = id.path_at(dir, quantum);
+    let tmp = dir.join(format!(
+        ".{}.{}.tmp",
+        path.file_name().expect("snapshot file name").to_string_lossy(),
+        std::process::id()
+    ));
+    let bytes = render(id, quantum, pending, body);
+    let ok = std::fs::write(&tmp, &bytes)
+        .and_then(|()| std::fs::rename(&tmp, &path))
+        .map_err(|e| SnapshotError::Io(e.to_string()));
+    if ok.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    ok.map(|()| path)
+}
+
+/// Parse a header out of raw snapshot bytes; `body_off` points past it.
+fn parse_header(data: &[u8]) -> Result<(SnapshotInfo, usize), SnapshotError> {
+    let mut d = Dec::new(data);
+    let magic = d.take(8, "magic")?;
+    if magic != MAGIC {
+        return Err(SnapshotError::Corrupt {
+            field: "magic",
+            detail: format!("expected {MAGIC:?}, found {magic:?}"),
+        });
+    }
+    let version = d.u32("version")?;
+    if version != FORMAT_VERSION {
+        return Err(SnapshotError::SchemaMismatch {
+            found: version,
+            expected: FORMAT_VERSION,
+        });
+    }
+    let system = d.str("system")?;
+    let cfg_fingerprint = d.u64("cfg_fingerprint")?;
+    let arb = d.str("arb")?;
+    let telemetry = d.bool("telemetry")?;
+    let ntenants = d.u32("ntenants")?;
+    let mut tenants = Vec::new();
+    for _ in 0..ntenants {
+        tenants.push(SnapshotTenant {
+            name: d.str("tenant.name")?,
+            fingerprint: d.u64("tenant.fingerprint")?,
+            warm: d.bool("tenant.warm")?,
+            offset: d.u64("tenant.offset")?,
+        });
+    }
+    let quantum = d.u64("quantum")?;
+    let pending = d.bool("pending")?;
+    let body_len = d.u64("body_len")?;
+    if body_len > d.remaining() as u64 {
+        return Err(SnapshotError::Truncated { field: "body" });
+    }
+    let info = SnapshotInfo {
+        version,
+        system,
+        cfg_fingerprint,
+        arb,
+        telemetry,
+        tenants,
+        quantum,
+        pending,
+        body_len,
+    };
+    Ok((info, data.len() - d.remaining()))
+}
+
+/// Read and parse the header of the snapshot at `path` (the
+/// `snapshot-info` CLI entry point). Validates magic, version, and that
+/// the body is fully present; does **not** decode the body.
+pub fn read_info(path: &Path) -> Result<SnapshotInfo, SnapshotError> {
+    let data = std::fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    let (info, off) = parse_header(&data)?;
+    if data.len() as u64 - off as u64 != info.body_len {
+        return Err(SnapshotError::Corrupt {
+            field: "body_len",
+            detail: format!(
+                "header claims {} body bytes, file holds {}",
+                info.body_len,
+                data.len() - off
+            ),
+        });
+    }
+    Ok(info)
+}
+
+/// Read the snapshot at `path`, validate its header against the resuming
+/// run's identity, and return the opaque body for the coordinator to
+/// install. End-of-run snapshots (no pending work) are rejected with
+/// [`SnapshotError::ResumePastEnd`].
+pub(crate) fn load_body(path: &Path, id: &RunIdentity) -> Result<Vec<u8>, SnapshotError> {
+    let data = std::fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    let (info, off) = parse_header(&data)?;
+    let mismatch = |field: &'static str, found: String, expected: String| {
+        Err(SnapshotError::FingerprintMismatch {
+            field,
+            found,
+            expected,
+        })
+    };
+    if info.system != id.system {
+        return mismatch("system", info.system, id.system.to_string());
+    }
+    if info.cfg_fingerprint != id.cfg_fingerprint {
+        return mismatch(
+            "config",
+            format!("{:016x}", info.cfg_fingerprint),
+            format!("{:016x}", id.cfg_fingerprint),
+        );
+    }
+    if info.arb != id.arb {
+        return mismatch("arb", info.arb, id.arb.to_string());
+    }
+    if info.telemetry != id.telemetry {
+        return mismatch(
+            "telemetry",
+            info.telemetry.to_string(),
+            id.telemetry.to_string(),
+        );
+    }
+    if info.tenants.len() != id.tenants.len() {
+        return mismatch(
+            "tenants",
+            info.tenants.len().to_string(),
+            id.tenants.len().to_string(),
+        );
+    }
+    for (have, need) in info.tenants.iter().zip(&id.tenants) {
+        if have.name != need.name || have.fingerprint != need.fingerprint {
+            return mismatch(
+                "workload",
+                format!("{} ({:016x})", have.name, have.fingerprint),
+                format!("{} ({:016x})", need.name, need.fingerprint),
+            );
+        }
+        if have.warm != need.warm {
+            return mismatch("warm", have.warm.to_string(), need.warm.to_string());
+        }
+        if have.offset != need.offset {
+            return mismatch("offset", have.offset.to_string(), need.offset.to_string());
+        }
+    }
+    if !info.pending {
+        return Err(SnapshotError::ResumePastEnd);
+    }
+    if data.len() as u64 - off as u64 != info.body_len {
+        return Err(SnapshotError::Corrupt {
+            field: "body_len",
+            detail: format!(
+                "header claims {} body bytes, file holds {}",
+                info.body_len,
+                data.len() - off
+            ),
+        });
+    }
+    Ok(data[off..].to_vec())
+}
+
+/// Checkpoint/resume control threaded into one coordinator run. The
+/// coordinator stays ignorant of files and fingerprints: it installs
+/// `resume` (an already header-validated body) before its first quantum
+/// and hands `(quantum, pending, body)` records to `sink` at matching
+/// quantum boundaries; the engine wrapper owns header assembly and file
+/// I/O. Capture runs on the serial shared stage only, so the knobs are
+/// invisible to the `(threads, shards)` matrix and to every fingerprint.
+pub(crate) struct SnapCtl<'a> {
+    /// Capture a snapshot every `n` quanta (`None` = never).
+    pub every: Option<u64>,
+    /// Body bytes to install before the first quantum (`None` = cold
+    /// start).
+    pub resume: Option<Vec<u8>>,
+    /// Receives each captured `(quantum, pending, body)` record.
+    pub sink: Option<&'a mut dyn FnMut(u64, bool, Vec<u8>)>,
+}
+
+impl SnapCtl<'_> {
+    /// No checkpointing, no resume — the plain-run control.
+    pub fn none() -> SnapCtl<'static> {
+        SnapCtl {
+            every: None,
+            resume: None,
+            sink: None,
+        }
+    }
+
+    /// Whether this control makes the run anything other than a plain
+    /// run.
+    pub fn is_active(&self) -> bool {
+        self.every.is_some() || self.resume.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity() -> RunIdentity {
+        RunIdentity {
+            system: "dx100",
+            cfg_fingerprint: 0xfeed_beef,
+            arb: "fifo",
+            telemetry: false,
+            tenants: vec![SnapshotTenant {
+                name: "CG".into(),
+                fingerprint: 0x1234,
+                warm: false,
+                offset: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn enc_dec_roundtrip_primitives() {
+        let mut e = Enc::new();
+        e.u8(7)
+            .u32(0xDEAD_BEEF)
+            .u64(u64::MAX)
+            .i64(-42)
+            .usize(123_456)
+            .bool(true)
+            .bool(false)
+            .f64(f64::NAN)
+            .str("hello κόσμε");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8("a").unwrap(), 7);
+        assert_eq!(d.u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64("c").unwrap(), u64::MAX);
+        assert_eq!(d.i64("d").unwrap(), -42);
+        assert_eq!(d.usize("e").unwrap(), 123_456);
+        assert!(d.bool("f").unwrap());
+        assert!(!d.bool("g").unwrap());
+        assert_eq!(d.f64("h").unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(d.str("i").unwrap(), "hello κόσμε");
+        d.finish("record").unwrap();
+    }
+
+    #[test]
+    fn dec_errors_name_the_field() {
+        let mut d = Dec::new(&[1, 2]);
+        let err = d.u64("quanta").unwrap_err();
+        assert_eq!(err, SnapshotError::Truncated { field: "quanta" });
+        assert!(err.to_string().contains("quanta"));
+
+        let mut d = Dec::new(&[9]);
+        let err = d.bool("warm").unwrap_err();
+        assert!(matches!(err, SnapshotError::Corrupt { field: "warm", .. }));
+        assert!(err.to_string().contains("warm"));
+    }
+
+    #[test]
+    fn seq_len_rejects_absurd_lengths() {
+        let mut e = Enc::new();
+        e.usize(usize::MAX / 2);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let err = d.seq_len("rob", 8).unwrap_err();
+        assert_eq!(err, SnapshotError::Truncated { field: "rob" });
+    }
+
+    #[test]
+    fn header_roundtrip_and_info() {
+        let id = identity();
+        let body = vec![1u8, 2, 3, 4];
+        let bytes = render(&id, 17, true, &body);
+        let (info, off) = parse_header(&bytes).unwrap();
+        assert_eq!(info.version, FORMAT_VERSION);
+        assert_eq!(info.system, "dx100");
+        assert_eq!(info.cfg_fingerprint, 0xfeed_beef);
+        assert_eq!(info.arb, "fifo");
+        assert_eq!(info.quantum, 17);
+        assert!(info.pending);
+        assert_eq!(info.body_len, 4);
+        assert_eq!(&bytes[off..], &body[..]);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_and_version() {
+        let id = identity();
+        let mut bytes = render(&id, 1, true, &[]);
+        bytes[0] = b'X';
+        assert!(matches!(
+            parse_header(&bytes).unwrap_err(),
+            SnapshotError::Corrupt { field: "magic", .. }
+        ));
+        let mut bytes = render(&id, 1, true, &[]);
+        bytes[8] = 99; // version low byte
+        assert_eq!(
+            parse_header(&bytes).unwrap_err(),
+            SnapshotError::SchemaMismatch {
+                found: 99,
+                expected: FORMAT_VERSION
+            }
+        );
+    }
+
+    #[test]
+    fn write_and_validate_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dx100-snap-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let id = identity();
+        let path = write_snapshot(&dir, &id, 5, true, &[9, 9, 9]).unwrap();
+        let info = read_info(&path).unwrap();
+        assert_eq!(info.quantum, 5);
+        assert_eq!(load_body(&path, &id).unwrap(), vec![9, 9, 9]);
+
+        // Fingerprint mismatches name the offending field.
+        let mut other = identity();
+        other.cfg_fingerprint = 1;
+        assert!(matches!(
+            load_body(&path, &other).unwrap_err(),
+            SnapshotError::FingerprintMismatch { field: "config", .. }
+        ));
+        let mut other = identity();
+        other.tenants[0].fingerprint = 2;
+        assert!(matches!(
+            load_body(&path, &other).unwrap_err(),
+            SnapshotError::FingerprintMismatch { field: "workload", .. }
+        ));
+        let mut other = identity();
+        other.telemetry = true;
+        assert!(matches!(
+            load_body(&path, &other).unwrap_err(),
+            SnapshotError::FingerprintMismatch {
+                field: "telemetry",
+                ..
+            }
+        ));
+
+        // End-of-run snapshots cannot be resumed.
+        let done = write_snapshot(&dir, &id, 9, false, &[]).unwrap();
+        assert_eq!(
+            load_body(&done, &id).unwrap_err(),
+            SnapshotError::ResumePastEnd
+        );
+
+        // Truncation is typed, not a panic.
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.bin");
+        std::fs::write(&cut, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(matches!(
+            read_info(&cut).unwrap_err(),
+            SnapshotError::Truncated { .. } | SnapshotError::Corrupt { .. }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -54,7 +54,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
             }
             // Bare boolean flags: they must not swallow the next argument
             // like the generic `--flag value` arm below would.
-            "--telemetry" | "--profile" => {
+            "--telemetry" | "--profile" | "--snapshot-check" | "--bench-json" => {
                 kv.insert(args[i].trim_start_matches("--").to_string(), "1".to_string());
                 i += 1;
             }
@@ -88,7 +88,8 @@ fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
         .filter(|(k, _)| {
             ![
                 "scale", "workload", "system", "mix", "policy", "cases", "seed", "replay",
-                "profile", "telemetry", "trace",
+                "profile", "telemetry", "trace", "checkpoint-every", "resume", "snapshot-dir",
+                "snapshot-check", "bench-json",
             ]
             .contains(&k.as_str())
         })
@@ -100,6 +101,49 @@ fn cfg_of(kv: &BTreeMap<String, String>) -> SystemConfig {
             eprintln!("config error: {e}");
             std::process::exit(2);
         })
+}
+
+/// Build [`engine::ExecOptions`] from the snapshot flags
+/// (`--checkpoint-every N`, `--resume PATH`, `--snapshot-dir DIR`).
+/// Neither knob enters any fingerprint or cache key.
+fn snap_opts(kv: &BTreeMap<String, String>) -> engine::ExecOptions {
+    let mut opts = engine::ExecOptions::new();
+    if let Some(raw) = kv.get("checkpoint-every") {
+        let n: u64 = raw.parse().unwrap_or_else(|_| {
+            eprintln!("bad --checkpoint-every {raw}: want a quantum count");
+            std::process::exit(2);
+        });
+        opts = opts.checkpoint_every(n);
+    }
+    if let Some(p) = kv.get("resume") {
+        opts = opts.resume_from(p);
+    }
+    if let Some(d) = kv.get("snapshot-dir") {
+        opts = opts.snapshot_dir(d);
+    }
+    opts
+}
+
+/// Whether any snapshot flag was given (selects the single-system `run`
+/// path — a checkpoint or resume targets one run identity, not the
+/// three-system comparison).
+fn snapshots_requested(kv: &BTreeMap<String, String>) -> bool {
+    kv.contains_key("checkpoint-every") || kv.contains_key("resume")
+}
+
+/// Parse `--system` (default dx100 — the system the snapshot workflows
+/// care about most).
+fn parse_system(kv: &BTreeMap<String, String>) -> dx100::coordinator::SystemKind {
+    use dx100::coordinator::SystemKind;
+    match kv.get("system").map(String::as_str).unwrap_or("dx100") {
+        "baseline" => SystemKind::Baseline,
+        "dmp" => SystemKind::Dmp,
+        "dx100" => SystemKind::Dx100,
+        other => {
+            eprintln!("bad --system {other}; options: baseline, dmp, dx100");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// Parse a fuzz seed: plain decimal or `0x`-prefixed hex (the form the
@@ -186,18 +230,11 @@ fn main() {
                 }),
             };
             let reg = workloads::Registry::paper().with_synth();
-            let r = engine::mix::run_mix(
-                &mix,
-                &reg,
-                &cfg,
-                scale_of(&kv),
-                policy,
-                &engine::ExecOptions::new(),
-            )
-            .unwrap_or_else(|e| {
-                eprintln!("mix error: {e}");
-                std::process::exit(2);
-            });
+            let r = engine::mix::run_mix(&mix, &reg, &cfg, scale_of(&kv), policy, &snap_opts(&kv))
+                .unwrap_or_else(|e| {
+                    eprintln!("mix error: {e}");
+                    std::process::exit(2);
+                });
             println!(
                 "== mix {} @ {} ({} cores, {} cycles) ==",
                 r.label,
@@ -239,6 +276,48 @@ fn main() {
                     eprintln!("unknown workload {name}; options: {names:?}");
                     std::process::exit(2);
                 });
+            // Snapshot flags select the single-system path: a checkpoint
+            // or resume targets one run identity (system × config ×
+            // workload), not the three-system comparison.
+            if snapshots_requested(&kv) {
+                let kind = parse_system(&kv);
+                let ex = dx100::coordinator::Experiment::new(kind, cfg.clone());
+                let opts = snap_opts(&kv);
+                let rs = ex.try_run(&w, &opts).unwrap_or_else(|e| {
+                    eprintln!("snapshot error: {e}");
+                    std::process::exit(2);
+                });
+                println!(
+                    "{} {} | {} cycles | {} instrs | bw {:.1}% | rbh {:.3} | mpki {:.2}",
+                    kind.label(),
+                    w.program.name,
+                    rs.cycles,
+                    rs.instrs,
+                    rs.bw_util * 100.0,
+                    rs.row_hit_rate,
+                    rs.mpki
+                );
+                if kv.contains_key("checkpoint-every") {
+                    println!("snapshots: {}", opts.resolved_snapshot_dir().display());
+                }
+                print_telemetry(kind.label(), &rs);
+                if let Some(path) = kv.get("trace") {
+                    write_trace(path, &[(kind.label(), &rs)]);
+                }
+                // `--bench-json`: land the run as a one-row BENCH_*.json
+                // so CI can gate checkpoint/resume bit-equality with
+                // `bench_check --compare-rows` (rows carry simulated
+                // stats only — wall-clock stays in the header).
+                if kv.contains_key("bench-json") {
+                    let mut h = engine::harness::Harness::new(
+                        "snaprun",
+                        "single-system checkpoint/resume run",
+                    );
+                    h.run(w.program.name, &rs);
+                    h.finish();
+                }
+                return;
+            }
             let c = compare_one(&w, &cfg, true);
             println!("{}", report::speedup_table(std::slice::from_ref(&c)));
             println!("{}", report::bandwidth_table(std::slice::from_ref(&c)));
@@ -262,13 +341,14 @@ fn main() {
                 .get("mix")
                 .map(|v| !matches!(v.as_str(), "0" | "false"))
                 .unwrap_or(false);
+            let snap = kv.contains_key("snapshot-check");
             let report = if let Some(raw) = kv.get("replay") {
                 let seed = parse_seed(raw).unwrap_or_else(|| {
                     eprintln!("bad --replay {raw}: want a decimal or 0x-hex seed");
                     std::process::exit(2);
                 });
-                eprintln!("replaying case {seed:#x} (mix={mix}) ...");
-                engine::fuzz::replay(seed, mix, &cfg, &opts)
+                eprintln!("replaying case {seed:#x} (mix={mix} snapshot-check={snap}) ...");
+                engine::fuzz::replay(seed, mix, snap, &cfg, &opts)
             } else {
                 let cases = kv
                     .get("cases")
@@ -287,10 +367,11 @@ fn main() {
                     }),
                 };
                 eprintln!(
-                    "fuzzing {cases} {} cases (base seed {seed:#x}) ...",
-                    if mix { "mix" } else { "differential" }
+                    "fuzzing {cases} {} cases (base seed {seed:#x}{}) ...",
+                    if mix { "mix" } else { "differential" },
+                    if snap { ", snapshot-check on" } else { "" }
                 );
-                engine::fuzz::fuzz(cases, seed, mix, &cfg, &opts)
+                engine::fuzz::fuzz(cases, seed, mix, snap, &cfg, &opts)
             };
             for f in &report.failures {
                 println!("FAIL case {} seed {:#x} [{}]", f.case, f.seed, f.scenario);
@@ -307,6 +388,43 @@ fn main() {
             );
             if !report.passed() {
                 std::process::exit(1);
+            }
+        }
+        "snapshot-info" => {
+            let Some(path) = pos.get(1) else {
+                eprintln!("usage: dx100 snapshot-info <snapshot.bin>");
+                std::process::exit(2);
+            };
+            let info = engine::snapshot::read_info(std::path::Path::new(path))
+                .unwrap_or_else(|e| {
+                    eprintln!("snapshot-info: {e}");
+                    std::process::exit(2);
+                });
+            println!("snapshot:           {path}");
+            println!("format version:     {}", info.version);
+            println!("system:             {}", info.system);
+            println!("config fingerprint: {:#018x}", info.cfg_fingerprint);
+            println!("arbitration:        {}", info.arb);
+            println!(
+                "telemetry:          {}",
+                if info.telemetry { "on" } else { "off" }
+            );
+            println!(
+                "quantum:            {} ({})",
+                info.quantum,
+                if info.pending {
+                    "resumable"
+                } else {
+                    "end of run; not resumable"
+                }
+            );
+            println!("body:               {} bytes", info.body_len);
+            println!("tenants:            {}", info.tenants.len());
+            for t in &info.tenants {
+                println!(
+                    "  {} fingerprint={:#018x} warm={} offset={}",
+                    t.name, t.fingerprint, t.warm, t.offset
+                );
             }
         }
         "list-workloads" => {
@@ -476,11 +594,38 @@ fn main() {
         },
         _ => {
             println!(
-                "usage: dx100 <run|fuzz|list-workloads|suite|micro|allmiss|tilesweep|scaling|\
-                 area|isa|runtime> [--workload NAME] [--mix name:cores[@offset],..] \
-                 [--policy fifo|rr|cap] [--scale N] [--set key=value] \
-                 [--cases N] [--seed S] [--replay S] [--mix 1] \
-                 [--telemetry] [--trace OUT.json] [--profile]"
+                "usage: dx100 <run|fuzz|snapshot-info|list-workloads|suite|micro|allmiss|\
+                 tilesweep|scaling|area|isa|runtime> [--workload NAME] \
+                 [--mix name:cores[@offset],..] [--policy fifo|rr|cap] [--scale N] \
+                 [--set key=value] [--cases N] [--seed S] [--replay S] [--mix 1] \
+                 [--snapshot-check] [--telemetry] [--trace OUT.json] [--profile] \
+                 [--checkpoint-every N] [--resume SNAP] [--snapshot-dir D] [--system K]"
+            );
+            println!("checkpoint/resume (run / run --mix; docs/CHECKPOINT.md):");
+            println!(
+                "  --checkpoint-every N  capture a state snapshot every N quanta \
+                 (bit-identical to an uncheckpointed run)"
+            );
+            println!(
+                "  --resume SNAP         resume from a snapshot file instead of starting \
+                 cold (header-validated; exit 2 on mismatch)"
+            );
+            println!("  --snapshot-dir D      where snapshots go (default <cache-dir>/snapshots)");
+            println!(
+                "  --bench-json          also write the run as a one-row BENCH_snaprun.json \
+                 (to DX100_BENCH_DIR) for bench_check --compare-rows"
+            );
+            println!(
+                "  --system K            system for a snapshot run: baseline|dmp|dx100 \
+                 (default dx100)"
+            );
+            println!(
+                "  dx100 snapshot-info <snap>   print a snapshot's header \
+                 (version, identity, quantum, resumability)"
+            );
+            println!(
+                "  dx100 fuzz --snapshot-check  add the checkpoint/resume oracle layer \
+                 to every fuzz case"
             );
             println!("observability (run / run --mix):");
             println!(

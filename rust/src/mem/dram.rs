@@ -44,6 +44,7 @@
 
 use super::addr::{AddrMap, DramCoord};
 use crate::config::DramConfig;
+use crate::engine::snapshot::{Dec, Enc, SnapshotError};
 use crate::sim::{Cycle, TimeWeighted};
 use crate::util::telemetry::{self, ChannelSeries, ChannelWindow};
 use std::collections::VecDeque;
@@ -869,6 +870,365 @@ impl MemController {
     /// Number of channels (valid even while detached).
     pub fn num_channels(&self) -> usize {
         self.front.len()
+    }
+
+    /// Serialize the full controller state: every channel engine (request
+    /// buffer, bank/bus timing, stats, telemetry collectors) plus the
+    /// front-end mirrors and the id allocator. Requires the engines to be
+    /// attached — capture happens on the serial shared stage.
+    pub(crate) fn save(&self, e: &mut Enc) {
+        assert!(!self.detached, "snapshot while channels are detached");
+        e.u64(self.next_id);
+        for c in &self.channels {
+            c.save(e);
+        }
+        for f in &self.front {
+            f.save(e);
+        }
+    }
+
+    /// Restore controller state captured by [`MemController::save`] into a
+    /// freshly constructed controller for the same config. Channel and
+    /// front counts are fixed by the config, so only per-channel payloads
+    /// are read; request coordinates are re-derived from the address map.
+    pub(crate) fn load(&mut self, d: &mut Dec) -> Result<(), SnapshotError> {
+        assert!(!self.detached, "snapshot restore while channels are detached");
+        self.next_id = d.u64("mem.next_id")?;
+        for ch in 0..self.channels.len() {
+            self.channels[ch].load(&self.cfg, &self.map, d)?;
+        }
+        for f in &mut self.front {
+            f.load(&self.map, d)?;
+        }
+        let ids = self
+            .channels
+            .iter()
+            .flat_map(|c| c.buffer.iter().chain(c.overflow.iter()))
+            .chain(self.front.iter().flat_map(|f| f.inbox.iter()))
+            .map(|r| r.id);
+        for id in ids {
+            if id >= self.next_id {
+                return Err(SnapshotError::Corrupt {
+                    field: "mem.next_id",
+                    detail: format!("in-flight request id {id} >= allocator {}", self.next_id),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ReqSource {
+    fn save(&self, e: &mut Enc) {
+        match *self {
+            ReqSource::Core { core, op } => {
+                e.u8(0);
+                e.usize(core);
+                e.u64(op);
+            }
+            ReqSource::Dx100 { instance, token } => {
+                e.u8(1);
+                e.usize(instance);
+                e.u64(token);
+            }
+            ReqSource::Prefetch { core } => {
+                e.u8(2);
+                e.usize(core);
+                e.u64(0);
+            }
+        }
+    }
+
+    fn load(d: &mut Dec) -> Result<Self, SnapshotError> {
+        let tag = d.u8("req.source_tag")?;
+        let a = d.usize("req.source_a")?;
+        let b = d.u64("req.source_b")?;
+        Ok(match tag {
+            0 => ReqSource::Core { core: a, op: b },
+            1 => ReqSource::Dx100 {
+                instance: a,
+                token: b,
+            },
+            2 => ReqSource::Prefetch { core: a },
+            t => {
+                return Err(SnapshotError::Corrupt {
+                    field: "req.source_tag",
+                    detail: format!("unknown request source tag {t}"),
+                })
+            }
+        })
+    }
+}
+
+impl Completion {
+    /// Serialized size floor of one completion record (seq_len guard).
+    pub(crate) const ELEM_MIN: usize = 43;
+
+    pub(crate) fn save(&self, e: &mut Enc) {
+        e.u64(self.id);
+        e.u64(self.addr);
+        e.u64(self.time);
+        e.bool(self.is_write);
+        self.source.save(e);
+        e.bool(self.row_hit);
+    }
+
+    pub(crate) fn load(d: &mut Dec) -> Result<Self, SnapshotError> {
+        Ok(Completion {
+            id: d.u64("comp.id")?,
+            addr: d.u64("comp.addr")?,
+            time: d.u64("comp.time")?,
+            is_write: d.bool("comp.is_write")?,
+            source: ReqSource::load(d)?,
+            row_hit: d.bool("comp.row_hit")?,
+        })
+    }
+}
+
+/// Serialized size floor of one [`MemRequest`] record (seq_len guard).
+const REQ_ELEM_MIN: usize = 42;
+
+impl MemRequest {
+    fn save(&self, e: &mut Enc) {
+        e.u64(self.id);
+        e.u64(self.addr);
+        e.bool(self.is_write);
+        e.u64(self.arrival);
+        self.source.save(e);
+    }
+
+    /// Decode one request; `coord` is rebuilt from the address map rather
+    /// than stored, so it can never disagree with the geometry.
+    fn load(d: &mut Dec, map: &AddrMap) -> Result<Self, SnapshotError> {
+        let id = d.u64("req.id")?;
+        let addr = d.u64("req.addr")?;
+        let is_write = d.bool("req.is_write")?;
+        let arrival = d.u64("req.arrival")?;
+        let source = ReqSource::load(d)?;
+        Ok(MemRequest {
+            id,
+            addr,
+            coord: map.decode(addr),
+            is_write,
+            arrival,
+            source,
+        })
+    }
+}
+
+impl BankState {
+    fn save(&self, e: &mut Enc) {
+        match self.open_row {
+            Some(r) => {
+                e.bool(true);
+                e.u32(r);
+            }
+            None => e.bool(false),
+        }
+        e.u64(self.busy_until);
+        e.bool(self.activated);
+        e.u64(self.last_act);
+        e.u64(self.ready_pre);
+        e.u64(self.ready_cas);
+    }
+
+    fn load(d: &mut Dec) -> Result<Self, SnapshotError> {
+        let open_row = if d.bool("bank.open_row")? {
+            Some(d.u32("bank.open_row")?)
+        } else {
+            None
+        };
+        Ok(BankState {
+            open_row,
+            busy_until: d.u64("bank.busy_until")?,
+            activated: d.bool("bank.activated")?,
+            last_act: d.u64("bank.last_act")?,
+            ready_pre: d.u64("bank.ready_pre")?,
+            ready_cas: d.u64("bank.ready_cas")?,
+        })
+    }
+}
+
+impl DramStats {
+    pub(crate) fn save(&self, e: &mut Enc) {
+        e.u64(self.reads);
+        e.u64(self.writes);
+        e.u64(self.row_hits);
+        e.u64(self.row_misses);
+        e.u64(self.row_empty);
+        e.u64(self.bytes);
+        e.u64(self.total_queue_latency);
+        e.usize(self.max_overflow);
+    }
+
+    pub(crate) fn load(d: &mut Dec) -> Result<Self, SnapshotError> {
+        Ok(DramStats {
+            reads: d.u64("dram.reads")?,
+            writes: d.u64("dram.writes")?,
+            row_hits: d.u64("dram.row_hits")?,
+            row_misses: d.u64("dram.row_misses")?,
+            row_empty: d.u64("dram.row_empty")?,
+            bytes: d.u64("dram.bytes")?,
+            total_queue_latency: d.u64("dram.total_queue_latency")?,
+            max_overflow: d.usize("dram.max_overflow")?,
+        })
+    }
+}
+
+impl ChanTelem {
+    fn save(&self, e: &mut Enc) {
+        self.series.save(e);
+        self.prev.save(e);
+        e.u64(self.last_t);
+        e.u64(self.last_buffer);
+        e.u64(self.last_overflow);
+    }
+
+    fn load(d: &mut Dec) -> Result<Self, SnapshotError> {
+        Ok(ChanTelem {
+            series: ChannelSeries::load(d)?,
+            prev: DramStats::load(d)?,
+            last_t: d.u64("chan.telem_last_t")?,
+            last_buffer: d.u64("chan.telem_last_buffer")?,
+            last_overflow: d.u64("chan.telem_last_overflow")?,
+        })
+    }
+}
+
+impl Channel {
+    /// Serialize one channel engine. The request-buffer `Vec` and overflow
+    /// `VecDeque` orders are preserved exactly: FR-FCFS breaks arrival ties
+    /// by buffer index and the overflow refills FIFO, so reordering either
+    /// would change scheduling.
+    fn save(&self, e: &mut Enc) {
+        e.usize(self.buffer.len());
+        for r in &self.buffer {
+            r.save(e);
+        }
+        e.usize(self.overflow.len());
+        for r in &self.overflow {
+            r.save(e);
+        }
+        for b in &self.banks {
+            b.save(e);
+        }
+        e.u64(self.bus_free);
+        for &t in &self.bg_last_cas {
+            e.u64(t);
+        }
+        e.u64(self.last_cas);
+        self.occupancy.save(e);
+        match self.wake {
+            Some(w) => {
+                e.bool(true);
+                e.u64(w);
+            }
+            None => e.bool(false),
+        }
+        self.stats.save(e);
+        match self.telem.as_deref() {
+            Some(tm) => {
+                e.bool(true);
+                tm.save(e);
+            }
+            None => e.bool(false),
+        }
+    }
+
+    /// Restore one channel engine. Bank and bank-group array lengths are
+    /// fixed by the config geometry (not stored); the buffer length is
+    /// checked against the configured FR-FCFS window.
+    fn load(&mut self, cfg: &DramConfig, map: &AddrMap, d: &mut Dec) -> Result<(), SnapshotError> {
+        let nbuf = d.seq_len("chan.buffer", REQ_ELEM_MIN)?;
+        if nbuf > cfg.request_buffer {
+            return Err(SnapshotError::Corrupt {
+                field: "chan.buffer",
+                detail: format!(
+                    "snapshot holds {nbuf} buffered requests, window is {}",
+                    cfg.request_buffer
+                ),
+            });
+        }
+        self.buffer = (0..nbuf)
+            .map(|_| MemRequest::load(d, map))
+            .collect::<Result<_, _>>()?;
+        let nover = d.seq_len("chan.overflow", REQ_ELEM_MIN)?;
+        self.overflow = (0..nover)
+            .map(|_| MemRequest::load(d, map))
+            .collect::<Result<_, _>>()?;
+        for b in &mut self.banks {
+            *b = BankState::load(d)?;
+        }
+        self.bus_free = d.u64("chan.bus_free")?;
+        for t in &mut self.bg_last_cas {
+            *t = d.u64("chan.bg_last_cas")?;
+        }
+        self.last_cas = d.u64("chan.last_cas")?;
+        self.occupancy = TimeWeighted::load(d)?;
+        self.wake = if d.bool("chan.wake")? {
+            Some(d.u64("chan.wake")?)
+        } else {
+            None
+        };
+        self.stats = DramStats::load(d)?;
+        let telem_present = d.bool("chan.telem_present")?;
+        if telem_present != self.telem.is_some() {
+            return Err(SnapshotError::Corrupt {
+                field: "chan.telem_present",
+                detail: format!(
+                    "snapshot telemetry={telem_present}, run telemetry={}",
+                    self.telem.is_some()
+                ),
+            });
+        }
+        if telem_present {
+            self.telem = Some(Box::new(ChanTelem::load(d)?));
+        }
+        Ok(())
+    }
+}
+
+impl FrontChannel {
+    fn save(&self, e: &mut Enc) {
+        e.usize(self.inbox.len());
+        for r in &self.inbox {
+            r.save(e);
+        }
+        e.usize(self.scheds.len());
+        for &t in &self.scheds {
+            e.u64(t);
+        }
+        e.usize(self.buffer_len);
+        e.usize(self.overflow_len);
+        // `Cycle::MAX` is the "no pending event" sentinel; stored raw.
+        e.u64(self.next_event);
+        match self.next_time {
+            Some(t) => {
+                e.bool(true);
+                e.u64(t);
+            }
+            None => e.bool(false),
+        }
+    }
+
+    fn load(&mut self, map: &AddrMap, d: &mut Dec) -> Result<(), SnapshotError> {
+        let ninbox = d.seq_len("front.inbox", REQ_ELEM_MIN)?;
+        self.inbox = (0..ninbox)
+            .map(|_| MemRequest::load(d, map))
+            .collect::<Result<_, _>>()?;
+        let nscheds = d.seq_len("front.scheds", 8)?;
+        self.scheds = (0..nscheds)
+            .map(|_| d.u64("front.sched"))
+            .collect::<Result<_, _>>()?;
+        self.buffer_len = d.usize("front.buffer_len")?;
+        self.overflow_len = d.usize("front.overflow_len")?;
+        self.next_event = d.u64("front.next_event")?;
+        self.next_time = if d.bool("front.next_time")? {
+            Some(d.u64("front.next_time")?)
+        } else {
+            None
+        };
+        Ok(())
     }
 }
 

@@ -1,6 +1,7 @@
 //! Binary-heap event queue with FIFO tie-breaking at equal timestamps.
 
 use super::{Cycle, Event};
+use crate::engine::snapshot::{Dec, Enc, SnapshotError};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -75,6 +76,80 @@ impl EventQueue {
     pub fn len(&self) -> usize {
         self.heap.len()
     }
+
+    /// Serialize the queue: entries in deterministic `(time, seq)` order
+    /// (heap layout is an implementation detail) plus the FIFO counter.
+    pub(crate) fn save(&self, e: &mut Enc) {
+        let mut entries: Vec<&Scheduled> = self.heap.iter().collect();
+        entries.sort_unstable_by_key(|s| (s.time, s.seq));
+        e.usize(entries.len());
+        for s in entries {
+            e.u64(s.time);
+            e.u64(s.seq);
+            save_event(e, s.event);
+        }
+        e.u64(self.seq);
+    }
+
+    /// Restore the queue from a snapshot record, replacing any contents.
+    pub(crate) fn load(&mut self, d: &mut Dec) -> Result<(), SnapshotError> {
+        let n = d.seq_len("queue.len", 25)?;
+        let mut heap = BinaryHeap::with_capacity(n);
+        for _ in 0..n {
+            let time = d.u64("queue.time")?;
+            let seq = d.u64("queue.seq")?;
+            let event = load_event(d)?;
+            heap.push(Scheduled { time, seq, event });
+        }
+        let counter = d.u64("queue.counter")?;
+        if heap.iter().any(|s| s.seq >= counter) {
+            return Err(SnapshotError::Corrupt {
+                field: "queue.counter",
+                detail: "an entry's seq is at or past the FIFO counter".into(),
+            });
+        }
+        self.heap = heap;
+        self.seq = counter;
+        Ok(())
+    }
+}
+
+/// Encode one [`Event`] as a tag byte plus its `u64`-widened payload.
+fn save_event(e: &mut Enc, ev: Event) {
+    let (tag, payload) = match ev {
+        Event::CoreWake(c) => (0u8, c as u64),
+        Event::ChannelSched(ch) => (1, ch as u64),
+        Event::DramDone(id) => (2, id),
+        Event::Dx100Wake(i) => (3, i as u64),
+        Event::Timer(p) => (4, p),
+    };
+    e.u8(tag);
+    e.u64(payload);
+}
+
+/// Decode one [`Event`]; unknown tags are typed corruption, not a panic.
+fn load_event(d: &mut Dec) -> Result<Event, SnapshotError> {
+    let tag = d.u8("event.tag")?;
+    let payload = d.u64("event.payload")?;
+    let as_usize = |field| {
+        usize::try_from(payload).map_err(|_| SnapshotError::Corrupt {
+            field,
+            detail: format!("payload {payload} overflows usize"),
+        })
+    };
+    Ok(match tag {
+        0 => Event::CoreWake(as_usize("event.core")?),
+        1 => Event::ChannelSched(as_usize("event.channel")?),
+        2 => Event::DramDone(payload),
+        3 => Event::Dx100Wake(as_usize("event.instance")?),
+        4 => Event::Timer(payload),
+        t => {
+            return Err(SnapshotError::Corrupt {
+                field: "event.tag",
+                detail: format!("unknown event tag {t}"),
+            })
+        }
+    })
 }
 
 #[cfg(test)]
@@ -101,6 +176,64 @@ mod tests {
         q.pop();
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn save_load_preserves_order_and_fifo_counter() {
+        let mut q = EventQueue::new();
+        for i in (0..100u64).rev() {
+            q.push(i * 7 % 31, Event::DramDone(i));
+        }
+        q.push(3, Event::CoreWake(2));
+        q.push(3, Event::Dx100Wake(1));
+        let mut e = Enc::new();
+        q.save(&mut e);
+        let bytes = e.into_bytes();
+        let mut back = EventQueue::new();
+        back.load(&mut Dec::new(&bytes)).unwrap();
+        // Popping both queues yields identical (time, seq, event) runs,
+        // and pushes after restore continue the FIFO sequence.
+        loop {
+            match (q.pop(), back.pop()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => {
+                    assert_eq!((a.time, a.seq, a.event), (b.time, b.seq, b.event));
+                }
+                (a, b) => panic!("length mismatch: {a:?} vs {b:?}"),
+            }
+        }
+        back.push(9, Event::Timer(1));
+        assert_eq!(back.pop().unwrap().seq, 102);
+    }
+
+    #[test]
+    fn load_rejects_bad_counter_and_tag() {
+        let mut q = EventQueue::new();
+        q.push(1, Event::Timer(0));
+        let mut e = Enc::new();
+        q.save(&mut e);
+        let mut bytes = e.into_bytes();
+        // Zero the trailing FIFO counter: the entry's seq now exceeds it.
+        let n = bytes.len();
+        bytes[n - 8..].fill(0);
+        assert!(matches!(
+            EventQueue::new().load(&mut Dec::new(&bytes)),
+            Err(SnapshotError::Corrupt {
+                field: "queue.counter",
+                ..
+            })
+        ));
+        let mut e = Enc::new();
+        q.save(&mut e);
+        let mut bytes = e.into_bytes();
+        bytes[24] = 250; // event tag byte of the single entry
+        assert!(matches!(
+            EventQueue::new().load(&mut Dec::new(&bytes)),
+            Err(SnapshotError::Corrupt {
+                field: "event.tag",
+                ..
+            })
+        ));
     }
 
     #[test]

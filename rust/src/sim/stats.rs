@@ -100,6 +100,26 @@ impl TimeWeighted {
         self.value
     }
 
+    /// Serialize the full accumulator state (floats bit-exact).
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.f64(self.value);
+        e.u64(self.last_change);
+        e.f64(self.weighted_sum);
+        e.u64(self.start);
+    }
+
+    /// Restore the accumulator from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(TimeWeighted {
+            value: d.f64("tw.value")?,
+            last_change: d.u64("tw.last_change")?,
+            weighted_sum: d.f64("tw.weighted_sum")?,
+            start: d.u64("tw.start")?,
+        })
+    }
+
     /// Time-weighted mean over `[start, end]`.
     pub fn mean(&self, end: Cycle) -> f64 {
         let total = (end.saturating_sub(self.start)) as f64;

@@ -167,6 +167,28 @@ impl Hist {
             (1u64 << i) - 1
         }
     }
+
+    /// Serialize all buckets plus the count/sum accumulators.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        for &b in &self.buckets {
+            e.u64(b);
+        }
+        e.u64(self.count);
+        e.u64(self.sum);
+    }
+
+    /// Restore a histogram from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        let mut h = Hist::default();
+        for b in h.buckets.iter_mut() {
+            *b = d.u64("hist.bucket")?;
+        }
+        h.count = d.u64("hist.count")?;
+        h.sum = d.u64("hist.sum")?;
+        Ok(h)
+    }
 }
 
 /// One DRAM channel's activity over `[t0, t1)` simulated cycles.
@@ -218,6 +240,42 @@ impl ChannelWindow {
         }
     }
 
+    /// Serialize every field in declaration order.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        for v in [
+            self.t0,
+            self.t1,
+            self.reads,
+            self.writes,
+            self.row_hits,
+            self.row_misses,
+            self.row_empty,
+            self.bytes,
+            self.buffer_len,
+            self.overflow_len,
+        ] {
+            e.u64(v);
+        }
+    }
+
+    /// Restore a window from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(ChannelWindow {
+            t0: d.u64("window.t0")?,
+            t1: d.u64("window.t1")?,
+            reads: d.u64("window.reads")?,
+            writes: d.u64("window.writes")?,
+            row_hits: d.u64("window.row_hits")?,
+            row_misses: d.u64("window.row_misses")?,
+            row_empty: d.u64("window.row_empty")?,
+            bytes: d.u64("window.bytes")?,
+            buffer_len: d.u64("window.buffer_len")?,
+            overflow_len: d.u64("window.overflow_len")?,
+        })
+    }
+
     /// Merge a *later* adjacent window into this one: counters add, the
     /// span extends to `later.t1`, and point-in-time occupancies take
     /// the later snapshot.
@@ -253,6 +311,30 @@ impl ChannelSeries {
             decimate_windows(&mut self.windows);
         }
         self.windows.push(w);
+    }
+
+    /// Serialize the window series in order plus the latency histogram.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.usize(self.windows.len());
+        for w in &self.windows {
+            w.save(e);
+        }
+        self.dram_latency.save(e);
+    }
+
+    /// Restore a series from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        let n = d.seq_len("series.windows", 80)?;
+        let mut windows = Vec::with_capacity(n);
+        for _ in 0..n {
+            windows.push(ChannelWindow::load(d)?);
+        }
+        Ok(ChannelSeries {
+            windows,
+            dram_latency: Hist::load(d)?,
+        })
     }
 }
 
@@ -297,6 +379,46 @@ pub struct SysSample {
 }
 
 impl SysSample {
+    /// Serialize every field in declaration order.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.u64(self.t);
+        e.u64(self.dx_queue);
+        e.u64(self.llc_mshr);
+        e.u64(self.front_events);
+        e.u64(self.inserted_words);
+        e.u64(self.indirect_accesses);
+        e.usize(self.tenant_instrs.len());
+        for &v in &self.tenant_instrs {
+            e.u64(v);
+        }
+    }
+
+    /// Restore a sample from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        let t = d.u64("sample.t")?;
+        let dx_queue = d.u64("sample.dx_queue")?;
+        let llc_mshr = d.u64("sample.llc_mshr")?;
+        let front_events = d.u64("sample.front_events")?;
+        let inserted_words = d.u64("sample.inserted_words")?;
+        let indirect_accesses = d.u64("sample.indirect_accesses")?;
+        let n = d.seq_len("sample.tenants", 8)?;
+        let mut tenant_instrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            tenant_instrs.push(d.u64("sample.tenant_instrs")?);
+        }
+        Ok(SysSample {
+            t,
+            dx_queue,
+            llc_mshr,
+            front_events,
+            inserted_words,
+            indirect_accesses,
+            tenant_instrs,
+        })
+    }
+
     /// Whether two samples carry the same values, ignoring the
     /// timestamp — used to skip pushing redundant idle samples.
     pub fn same_values(&self, other: &SysSample) -> bool {
@@ -339,6 +461,28 @@ pub struct DxInstrSpan {
     pub start: u64,
     /// Retire cycle.
     pub end: u64,
+}
+
+impl DxInstrSpan {
+    /// Serialize every field in declaration order.
+    pub(crate) fn save(&self, e: &mut crate::engine::snapshot::Enc) {
+        e.u32(self.instance);
+        e.u32(self.seq);
+        e.u64(self.start);
+        e.u64(self.end);
+    }
+
+    /// Restore a span from a snapshot record.
+    pub(crate) fn load(
+        d: &mut crate::engine::snapshot::Dec,
+    ) -> Result<Self, crate::engine::snapshot::SnapshotError> {
+        Ok(DxInstrSpan {
+            instance: d.u32("span.instance")?,
+            seq: d.u32("span.seq")?,
+            start: d.u64("span.start")?,
+            end: d.u64("span.end")?,
+        })
+    }
 }
 
 /// Everything telemetry collected over one run. Compared with `==` in

@@ -24,7 +24,7 @@ fn opts() -> ExecOptions {
 /// regression names its seed directly.
 #[test]
 fn fuzz_smoke_batch_passes_all_oracles() {
-    let r = fuzz(12, DEFAULT_SEED, false, &cfg(), &opts());
+    let r = fuzz(12, DEFAULT_SEED, false, false, &cfg(), &opts());
     assert_eq!(r.cases, 12);
     assert!(r.checks > 100, "oracles barely ran ({} checks)", r.checks);
     assert!(
@@ -42,7 +42,7 @@ fn fuzz_smoke_batch_passes_all_oracles() {
 /// single-tenant-mix ≡ solo identity, for a few seeds.
 #[test]
 fn fuzz_mix_batch_passes_all_oracles() {
-    let r = fuzz(3, DEFAULT_SEED, true, &cfg(), &opts());
+    let r = fuzz(3, DEFAULT_SEED, true, false, &cfg(), &opts());
     assert_eq!(r.cases, 3);
     assert!(
         r.passed(),
@@ -62,8 +62,8 @@ fn fuzz_mix_batch_passes_all_oracles() {
 fn replay_reproduces_verdicts_bit_for_bit() {
     for case in [0usize, 3, 7] {
         let seed = case_seed(DEFAULT_SEED, case);
-        let a = replay(seed, false, &cfg(), &opts());
-        let b = replay(seed, false, &cfg(), &opts());
+        let a = replay(seed, false, false, &cfg(), &opts());
+        let b = replay(seed, false, false, &cfg(), &opts());
         assert_eq!(a.verdict_hash(), b.verdict_hash(), "seed {seed:#x}");
         assert_eq!(a.checks, b.checks, "seed {seed:#x}");
         assert!(a.passed(), "seed {seed:#x}: {:?}", a.failures);
@@ -73,9 +73,49 @@ fn replay_reproduces_verdicts_bit_for_bit() {
     let seed = case_seed(DEFAULT_SEED, 1);
     let narrow = ExecOptions::new().no_cache().threads(1).shards(1);
     let wide = ExecOptions::new().no_cache().threads(2).shards(4);
-    let serial = replay(seed, false, &cfg(), &narrow);
-    let fanned = replay(seed, false, &cfg(), &wide);
+    let serial = replay(seed, false, false, &cfg(), &narrow);
+    let fanned = replay(seed, false, false, &cfg(), &wide);
     assert_eq!(serial.verdict_hash(), fanned.verdict_hash());
+}
+
+/// The checkpoint/resume oracle layer (`--snapshot-check`): a pinned
+/// batch of solo cases plus one mix case, every round trip bit-exact.
+/// The layer adds checks on top of the plain batch, and its replay lines
+/// carry the flag so CI failures reproduce with the same oracles.
+#[test]
+fn fuzz_snapshot_check_batch_passes() {
+    let r = fuzz(3, DEFAULT_SEED, false, true, &cfg(), &opts());
+    let plain = fuzz(3, DEFAULT_SEED, false, false, &cfg(), &opts());
+    assert_eq!(r.cases, 3);
+    assert!(
+        r.checks > plain.checks,
+        "snapshot layer added no checks ({} vs {})",
+        r.checks,
+        plain.checks
+    );
+    assert!(
+        r.passed(),
+        "snapshot-check failures:\n{}",
+        r.failures
+            .iter()
+            .map(|f| format!("{} -> {:?} ({})", f.seed, f.violations, f.replay_line()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    let m = fuzz(1, DEFAULT_SEED, true, true, &cfg(), &opts());
+    assert!(
+        m.passed(),
+        "mix snapshot-check failures:\n{}",
+        m.failures
+            .iter()
+            .map(|f| format!("{} -> {:?} ({})", f.seed, f.violations, f.replay_line()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        m.failures.iter().all(|f| f.replay_line().contains("--snapshot-check")),
+        "replay lines must carry the snapshot flag"
+    );
 }
 
 /// Case seeds are a stable pure function of (base, index): distinct per

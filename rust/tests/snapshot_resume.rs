@@ -1,0 +1,512 @@
+//! Checkpoint/resume bit-identity across the whole matrix.
+//!
+//! The contract (`engine::snapshot`, `docs/CHECKPOINT.md`): capturing
+//! snapshots changes no statistic; a run resumed from any mid-run
+//! snapshot reproduces the cold run's `RunStats` bit-for-bit at every
+//! `(DX100_THREADS, DX100_SHARDS)` setting, on all three systems, for
+//! solo runs and co-scheduled mixes, with telemetry and the profiler on
+//! or off; and every malformed-snapshot path fails with a typed
+//! [`SnapshotError`] naming the offending field — never a panic.
+//!
+//! Some tests flip the process-global telemetry/profiler state and all
+//! of them compute snapshot identities from it, so every test serializes
+//! on a file-local lock and the flipping tests restore "off" before
+//! releasing it.
+
+use dx100::config::SystemConfig;
+use dx100::coordinator::{Experiment, SystemKind, Tenant};
+use dx100::engine::snapshot::{read_info, SnapshotError, SnapshotInfo, FORMAT_VERSION};
+use dx100::engine::ExecOptions;
+use dx100::util::{regions, telemetry};
+use dx100::workloads::mix::{ArbPolicy, MixSpec};
+use dx100::workloads::{micro, Registry, Scale, WorkloadSpec};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+static SNAPSHOT_LOCK: Mutex<()> = Mutex::new(());
+
+const SYSTEMS: [SystemKind; 3] = [SystemKind::Baseline, SystemKind::Dmp, SystemKind::Dx100];
+const MATRIX: [usize; 3] = [1, 2, 4];
+
+fn cfg() -> SystemConfig {
+    SystemConfig::table3()
+}
+
+fn base_opts() -> ExecOptions {
+    ExecOptions::new().no_cache()
+}
+
+fn workloads() -> [WorkloadSpec; 2] {
+    [
+        micro::gather_full(1 << 10, micro::IndexPattern::UniformRandom, 0xA1),
+        micro::scatter(1 << 9, micro::IndexPattern::Streaming, 0xB2),
+    ]
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dx100-snapres-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every snapshot in `dir`, sorted by capture quantum.
+fn snapshots_in(dir: &Path) -> Vec<(PathBuf, SnapshotInfo)> {
+    let mut snaps: Vec<(PathBuf, SnapshotInfo)> = std::fs::read_dir(dir)
+        .expect("snapshot dir exists")
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            let info = read_info(&p).ok()?;
+            Some((p, info))
+        })
+        .collect();
+    snaps.sort_by_key(|(_, i)| i.quantum);
+    snaps
+}
+
+fn resumable(snaps: &[(PathBuf, SnapshotInfo)]) -> Vec<(PathBuf, SnapshotInfo)> {
+    snaps.iter().filter(|(_, i)| i.pending).cloned().collect()
+}
+
+/// A checkpoint interval yielding roughly a dozen snapshots for a run of
+/// `cycles` simulated cycles (the quantum is the DRAM min completion
+/// latency, as in the coordinator loop).
+fn interval_for(cfg: &SystemConfig, cycles: u64) -> u64 {
+    let quantum = cfg.dram.min_completion_latency().max(1);
+    (cycles / quantum / 12).max(1)
+}
+
+/// Checkpointing perturbs nothing and resume reproduces the cold run
+/// bit-for-bit: all three systems, two workloads, resume from the first,
+/// middle, and last resumable snapshot, with the middle one re-driven at
+/// every `(threads, shards)` point of the matrix.
+#[test]
+fn resume_is_bit_identical_across_systems_and_matrix() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let c = cfg();
+    for kind in SYSTEMS {
+        let ex = Experiment::new(kind, c.clone());
+        for w in &workloads() {
+            let tag = format!("{}-{}", kind.label(), w.program.name);
+            let plain = ex.try_run(w, &base_opts()).expect("plain run never fails");
+
+            let dir = temp_dir(&tag);
+            let every = interval_for(&c, plain.cycles);
+            let ticked = ex
+                .try_run(w, &base_opts().checkpoint_every(every).snapshot_dir(&dir))
+                .expect("checkpointed run");
+            assert_eq!(ticked, plain, "{tag}: checkpointing perturbed the run");
+
+            let snaps = snapshots_in(&dir);
+            assert!(snaps.len() >= 3, "{tag}: only {} snapshots captured", snaps.len());
+            for (path, info) in &snaps {
+                assert_eq!(info.version, FORMAT_VERSION, "{}", path.display());
+                assert_eq!(info.system, kind.label(), "{}", path.display());
+                assert!(!info.telemetry, "{}", path.display());
+                assert_eq!(info.tenants.len(), 1, "{}", path.display());
+                assert_eq!(info.tenants[0].name, w.program.name, "{}", path.display());
+                assert!(info.body_len > 0, "{}", path.display());
+            }
+            for pair in snaps.windows(2) {
+                assert!(
+                    pair[0].1.quantum < pair[1].1.quantum,
+                    "{tag}: quanta not strictly increasing"
+                );
+            }
+            let res = resumable(&snaps);
+            assert!(res.len() >= 2, "{tag}: only {} resumable snapshots", res.len());
+
+            let (mid_path, _) = &res[res.len() / 2];
+            for threads in MATRIX {
+                for shards in MATRIX {
+                    let r = ex
+                        .try_run(
+                            w,
+                            &base_opts().threads(threads).shards(shards).resume_from(mid_path),
+                        )
+                        .expect("resume");
+                    assert_eq!(
+                        r, plain,
+                        "{tag}: resume diverged at threads={threads} shards={shards}"
+                    );
+                }
+            }
+            for (path, info) in [&res[0], &res[res.len() - 1]] {
+                let r = ex.try_run(w, &base_opts().resume_from(path)).expect("resume");
+                assert_eq!(r, plain, "{tag}: resume from quantum {} diverged", info.quantum);
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Snapshot-at-every-quantum == snapshot-once == no-snapshot, on one
+/// small workload per system: the capture hook runs at every boundary
+/// (including the final, non-resumable one) without touching a single
+/// statistic, and a sparse schedule captures a strict subset.
+#[test]
+fn every_quantum_capture_equals_once_equals_none() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let c = cfg();
+    let w = micro::gather_full(1 << 8, micro::IndexPattern::Streaming, 0xC3);
+    for kind in SYSTEMS {
+        let ex = Experiment::new(kind, c.clone());
+        let tag = format!("dense-{}", kind.label());
+        let plain = ex.try_run(&w, &base_opts()).expect("plain run");
+
+        let dense_dir = temp_dir(&tag);
+        let dense = ex
+            .try_run(&w, &base_opts().checkpoint_every(1).snapshot_dir(&dense_dir))
+            .expect("dense checkpointing");
+        assert_eq!(dense, plain, "{tag}: every-quantum capture perturbed the run");
+        let snaps = snapshots_in(&dense_dir);
+        assert!(snaps.len() >= 2, "{tag}: dense capture produced {} files", snaps.len());
+        // One snapshot per quantum: the last one marks end-of-run.
+        let (_, last) = snaps.last().expect("non-empty");
+        assert!(!last.pending, "{tag}: final snapshot still claims pending work");
+        let res = resumable(&snaps);
+        assert_eq!(
+            res.len(),
+            snaps.len() - 1,
+            "{tag}: exactly the final snapshot is non-resumable"
+        );
+
+        let once_dir = temp_dir(&format!("{tag}-once"));
+        let (_, mid) = &res[res.len() / 2];
+        let once = ex
+            .try_run(
+                &w,
+                &base_opts().checkpoint_every(mid.quantum).snapshot_dir(&once_dir),
+            )
+            .expect("sparse checkpointing");
+        assert_eq!(once, plain, "{tag}: sparse capture perturbed the run");
+        let sparse = snapshots_in(&once_dir);
+        assert!(
+            !sparse.is_empty() && sparse.len() < snaps.len(),
+            "{tag}: sparse schedule wrote {} of {} dense files",
+            sparse.len(),
+            snaps.len()
+        );
+        let _ = std::fs::remove_dir_all(&dense_dir);
+        let _ = std::fs::remove_dir_all(&once_dir);
+    }
+}
+
+/// The per-tenant config mixes compile against (`engine::mix` does the
+/// same): the base restricted to the tenant's core group, one DX100.
+fn tenant_cfg(base: &SystemConfig, cores: usize) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.core.num_cores = cores;
+    cfg.dx100.instances = 1;
+    cfg
+}
+
+/// Assemble the relocated co-scheduled tenants of `mix` exactly as
+/// `engine::mix::run_mix` does, so snapshot tests can drive
+/// `try_run_mix` directly without re-running solo baselines.
+fn build_tenants(mix: &MixSpec, reg: &Registry) -> (Experiment, Vec<Tenant>) {
+    let base = cfg();
+    let relocated = mix.build_relocated(reg, Scale::test()).expect("mix builds");
+    let tenants: Vec<Tenant> = mix
+        .tenants
+        .iter()
+        .zip(&relocated)
+        .map(|(t, w)| {
+            let tcfg = tenant_cfg(&base, t.cores);
+            let cw = dx100::compiler::compile(&w.program, &w.mem, &tcfg).expect("tenant compiles");
+            Tenant::at(&Arc::new(cw), w.warm_caches, t.offset)
+        })
+        .collect();
+    let ex = Experiment::new(SystemKind::Dx100, tenant_cfg(&base, mix.total_cores()));
+    (ex, tenants)
+}
+
+/// Co-scheduled mixes checkpoint and resume bit-identically too: the
+/// combined stats and every per-tenant slice match the cold run across
+/// the `(threads, shards)` matrix.
+#[test]
+fn mix_resume_is_bit_identical_across_matrix() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = Registry::paper().with_synth();
+    let mix = MixSpec::new().tenant("uni-gather", 2).tenant("zipf-gather", 2);
+    let (ex, tenants) = build_tenants(&mix, &reg);
+    let plain = ex
+        .try_run_mix("mix:snapres", &tenants, ArbPolicy::Fifo, &base_opts())
+        .expect("plain mix run");
+
+    let dir = temp_dir("mix");
+    let every = interval_for(&ex.cfg, plain.stats.cycles);
+    let ticked = ex
+        .try_run_mix(
+            "mix:snapres",
+            &tenants,
+            ArbPolicy::Fifo,
+            &base_opts().checkpoint_every(every).snapshot_dir(&dir),
+        )
+        .expect("checkpointed mix run");
+    assert_eq!(ticked, plain, "mix: checkpointing perturbed the run");
+
+    let snaps = snapshots_in(&dir);
+    let res = resumable(&snaps);
+    assert!(res.len() >= 2, "mix: only {} resumable snapshots", res.len());
+    for (_, info) in &snaps {
+        assert_eq!(info.arb, ArbPolicy::Fifo.label());
+        assert_eq!(info.tenants.len(), 2, "mix headers carry both tenants");
+    }
+    let (mid_path, _) = &res[res.len() / 2];
+    for threads in MATRIX {
+        for shards in MATRIX {
+            let r = ex
+                .try_run_mix(
+                    "mix:snapres",
+                    &tenants,
+                    ArbPolicy::Fifo,
+                    &base_opts().threads(threads).shards(shards).resume_from(mid_path),
+                )
+                .expect("mix resume");
+            assert_eq!(r, plain, "mix resume diverged at threads={threads} shards={shards}");
+        }
+    }
+
+    // A solo run cannot adopt a mix snapshot: tenant count mismatch.
+    let solo = Experiment::new(SystemKind::Dx100, ex.cfg.clone());
+    let w = workloads();
+    let err = solo
+        .try_run(&w[0], &base_opts().resume_from(mid_path))
+        .expect_err("solo resume of a mix snapshot must fail");
+    assert!(
+        matches!(err, SnapshotError::FingerprintMismatch { field, .. }
+            if field == "tenants" || field == "config"),
+        "unexpected error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Telemetry and the profiler ride through checkpoint/resume: the
+/// resumed run reproduces the full `RunStats` — collected telemetry
+/// series included, via `PartialEq` — and the telemetry knob is part of
+/// the snapshot identity, so a mismatched resume is a typed error.
+#[test]
+fn telemetry_and_profile_survive_resume() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let c = cfg();
+    let w = micro::gather_full(1 << 10, micro::IndexPattern::UniformRandom, 0xD4);
+    let ex = Experiment::new(SystemKind::Dx100, c.clone());
+    let on = || base_opts().telemetry(true).profile(true);
+
+    let plain = ex.try_run(&w, &on()).expect("telemetry run");
+    assert!(plain.telemetry.is_some(), "telemetry-enabled run must collect");
+
+    let dir = temp_dir("telem");
+    let every = interval_for(&c, plain.cycles);
+    let ticked = ex
+        .try_run(&w, &on().checkpoint_every(every).snapshot_dir(&dir))
+        .expect("checkpointed telemetry run");
+    assert_eq!(ticked, plain, "telemetry: checkpointing perturbed the run");
+
+    let snaps = snapshots_in(&dir);
+    let res = resumable(&snaps);
+    assert!(!res.is_empty(), "no resumable telemetry snapshots");
+    for (_, info) in &snaps {
+        assert!(info.telemetry, "headers must record the telemetry knob");
+    }
+    let (mid_path, _) = &res[res.len() / 2];
+    for (threads, shards) in [(1, 1), (2, 4), (4, 2)] {
+        let r = ex
+            .try_run(
+                &w,
+                &on().threads(threads).shards(shards).resume_from(mid_path),
+            )
+            .expect("telemetry resume");
+        assert_eq!(
+            r, plain,
+            "telemetry resume diverged at threads={threads} shards={shards}"
+        );
+    }
+
+    // Resuming with telemetry off is an identity mismatch, not a panic.
+    let err = ex
+        .try_run(&w, &base_opts().telemetry(false).resume_from(mid_path))
+        .expect_err("telemetry mismatch must fail");
+    assert!(
+        matches!(err, SnapshotError::FingerprintMismatch { field: "telemetry", .. }),
+        "unexpected error: {err}"
+    );
+    assert!(err.to_string().contains("telemetry"), "error names the field: {err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    telemetry::set_enabled(false);
+    regions::set_enabled(false);
+}
+
+/// Capture one small run's snapshots and hand back the bytes of a
+/// resumable one plus its path and the experiment that wrote it.
+fn captured_snapshot(tag: &str) -> (Experiment, WorkloadSpec, PathBuf, Vec<u8>, PathBuf) {
+    let w = micro::gather_full(1 << 8, micro::IndexPattern::Streaming, 0xE5);
+    let ex = Experiment::new(SystemKind::Dx100, cfg());
+    let dir = temp_dir(tag);
+    ex.try_run(&w, &base_opts().checkpoint_every(1).snapshot_dir(&dir))
+        .expect("capture run");
+    let snaps = snapshots_in(&dir);
+    let res = resumable(&snaps);
+    let (path, _) = &res[res.len() / 2];
+    let bytes = std::fs::read(path).expect("snapshot readable");
+    (ex, w, path.clone(), bytes, dir)
+}
+
+/// Every malformed-snapshot path is a typed [`SnapshotError`] naming the
+/// offending field: bad magic, unknown schema version, truncation,
+/// corrupt body, identity mismatches, and resuming past the end of the
+/// run. None of them panic.
+#[test]
+fn malformed_snapshots_fail_with_typed_errors() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (ex, w, path, bytes, dir) = captured_snapshot("neg");
+    let mangled = dir.join("mangled.bin");
+    let run_from = |data: &[u8]| {
+        std::fs::write(&mangled, data).expect("write mangled snapshot");
+        ex.try_run(&w, &base_opts().resume_from(&mangled))
+            .expect_err("mangled snapshot must be rejected")
+    };
+
+    // Bad magic.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let err = run_from(&bad);
+    assert!(
+        matches!(err, SnapshotError::Corrupt { field: "magic", .. }),
+        "unexpected error: {err}"
+    );
+    assert!(err.to_string().contains("magic"), "error names the field: {err}");
+
+    // Unknown schema version (bytes 8..12, little-endian u32).
+    let mut bad = bytes.clone();
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let err = run_from(&bad);
+    assert_eq!(
+        err,
+        SnapshotError::SchemaMismatch { found: 99, expected: FORMAT_VERSION }
+    );
+    assert!(err.to_string().contains("99"), "error names the version: {err}");
+
+    // Truncated mid-header.
+    let err = run_from(&bytes[..16]);
+    assert!(matches!(err, SnapshotError::Truncated { .. }), "unexpected error: {err}");
+
+    // Body shorter than the header claims.
+    let err = run_from(&bytes[..bytes.len() - 7]);
+    assert!(
+        matches!(err, SnapshotError::Truncated { field: "body" }),
+        "unexpected error: {err}"
+    );
+
+    // A corrupted body fails decode with a named field (clobber a run of
+    // body bytes so some length prefix or tag goes out of range).
+    let mut bad = bytes.clone();
+    let n = bad.len();
+    for b in &mut bad[n - 64..n - 32] {
+        *b = 0xFF;
+    }
+    let err = run_from(&bad);
+    assert!(
+        matches!(
+            err,
+            SnapshotError::Corrupt { .. } | SnapshotError::Truncated { .. }
+        ),
+        "unexpected error: {err}"
+    );
+
+    // `read_info` rejects the same files without panicking.
+    std::fs::write(&mangled, &bytes[..16]).expect("write truncated snapshot");
+    assert!(matches!(
+        read_info(&mangled),
+        Err(SnapshotError::Truncated { .. })
+    ));
+
+    // Identity mismatches: wrong workload, wrong system, wrong config.
+    let other = micro::scatter(1 << 8, micro::IndexPattern::Streaming, 0xE5);
+    let err = ex
+        .try_run(&other, &base_opts().resume_from(&path))
+        .expect_err("workload mismatch must fail");
+    assert!(
+        matches!(err, SnapshotError::FingerprintMismatch { field: "workload", .. }),
+        "unexpected error: {err}"
+    );
+    assert!(err.to_string().contains("workload"), "error names the field: {err}");
+
+    let err = Experiment::new(SystemKind::Baseline, cfg())
+        .try_run(&w, &base_opts().resume_from(&path))
+        .expect_err("system mismatch must fail");
+    assert!(
+        matches!(err, SnapshotError::FingerprintMismatch { field: "system", .. }),
+        "unexpected error: {err}"
+    );
+
+    let mut changed = cfg();
+    changed.dx100.tiles *= 2;
+    let err = Experiment::new(SystemKind::Dx100, changed)
+        .try_run(&w, &base_opts().resume_from(&path))
+        .expect_err("config mismatch must fail");
+    assert!(
+        matches!(err, SnapshotError::FingerprintMismatch { field: "config", .. }),
+        "unexpected error: {err}"
+    );
+
+    // A nonexistent path is an I/O error, not a panic.
+    let err = ex
+        .try_run(&w, &base_opts().resume_from(dir.join("missing.bin")))
+        .expect_err("missing snapshot must fail");
+    assert!(matches!(err, SnapshotError::Io(_)), "unexpected error: {err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resuming the end-of-run snapshot is [`SnapshotError::ResumePastEnd`]:
+/// the final capture records that no work remains.
+#[test]
+fn resume_past_end_is_rejected() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w = micro::gather_full(1 << 8, micro::IndexPattern::Streaming, 0xF6);
+    let ex = Experiment::new(SystemKind::Dx100, cfg());
+    let dir = temp_dir("pastend");
+    ex.try_run(&w, &base_opts().checkpoint_every(1).snapshot_dir(&dir))
+        .expect("capture run");
+    let snaps = snapshots_in(&dir);
+    let (last_path, last) = snaps.last().expect("snapshots captured");
+    assert!(!last.pending, "final snapshot must be end-of-run");
+    let err = ex
+        .try_run(&w, &base_opts().resume_from(last_path))
+        .expect_err("resume past end must fail");
+    assert_eq!(err, SnapshotError::ResumePastEnd);
+    assert!(
+        err.to_string().contains("nothing to resume"),
+        "error explains itself: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `RunStats` equality is the whole-struct bit-level contract the tests
+/// above lean on — spot-check that a resumed run really exercises it by
+/// comparing a few load-bearing fields explicitly too.
+#[test]
+fn resumed_stats_fields_match_cold_run() {
+    let _g = SNAPSHOT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w = micro::rmw(1 << 9, false, micro::IndexPattern::UniformRandom, 0x17);
+    let ex = Experiment::new(SystemKind::Dx100, cfg());
+    let plain = ex.try_run(&w, &base_opts()).expect("plain run");
+    let dir = temp_dir("fields");
+    let every = interval_for(&ex.cfg, plain.cycles);
+    ex.try_run(&w, &base_opts().checkpoint_every(every).snapshot_dir(&dir))
+        .expect("capture run");
+    let res = resumable(&snapshots_in(&dir));
+    assert!(!res.is_empty());
+    let r = ex
+        .try_run(&w, &base_opts().resume_from(&res[res.len() / 2].0))
+        .expect("resume");
+    assert_eq!(r.cycles, plain.cycles);
+    assert_eq!(r.instrs, plain.instrs);
+    assert_eq!(r.dram_reads, plain.dram_reads);
+    assert_eq!(r.dram_writes, plain.dram_writes);
+    assert_eq!(r.row_hit_rate.to_bits(), plain.row_hit_rate.to_bits());
+    assert_eq!(r, plain);
+    let _ = std::fs::remove_dir_all(&dir);
+}
